@@ -1,0 +1,80 @@
+//! Fig. 14 demo: watch the two learned components improve online.
+//!
+//! Starts Magnus with a deliberately tiny predictor training set and an
+//! untrained serving-time estimator, serves a long workload, and prints
+//! the windowed RMSE of both predictors over time — the §III-B/§III-D
+//! continuous-learning loops should drive both curves down.
+//!
+//! Run: cargo run --release --example continuous_learning
+
+use magnus::config::ServingConfig;
+use magnus::sim::{run_policy, Policy};
+use magnus::workload::{generate_trace, TraceSpec};
+
+fn windowed_rmse(errors: &[(f64, f64)], window: f64) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    if errors.is_empty() {
+        return out;
+    }
+    let t_end = errors.iter().map(|e| e.0).fold(0.0, f64::max);
+    let mut t = window;
+    while t <= t_end + window {
+        let sq: Vec<f64> = errors
+            .iter()
+            .filter(|(at, _)| *at > t - window && *at <= t)
+            .map(|(_, e)| e * e)
+            .collect();
+        if sq.len() >= 5 {
+            out.push((t, (sq.iter().sum::<f64>() / sq.len() as f64).sqrt()));
+        }
+        t += window;
+    }
+    out
+}
+
+fn bar(x: f64, max: f64) -> String {
+    let n = ((x / max) * 50.0).round() as usize;
+    "#".repeat(n.min(50))
+}
+
+fn main() {
+    let mut cfg = ServingConfig::default();
+    cfg.learning.predictor_period_s = 60.0;
+    cfg.learning.estimator_period_s = 40.0;
+    let trace = generate_trace(&TraceSpec {
+        rate: 8.0,
+        n_requests: 2500,
+        seed: 7,
+        ..Default::default()
+    });
+    println!(
+        "serving {} requests at λ=8/s with a 40-request/task initial train set …",
+        trace.len()
+    );
+    let out = run_policy(&cfg, Policy::Magnus, &trace, 40);
+
+    println!("\nFig 14a — generation-length predictor RMSE (tokens), 60 s windows:");
+    let pred = windowed_rmse(&out.pred_errors, 60.0);
+    let max = pred.iter().map(|p| p.1).fold(0.0, f64::max);
+    for (t, e) in &pred {
+        println!("  t={t:5.0}s  {e:7.2}  {}", bar(*e, max));
+    }
+
+    println!("\nFig 14b — serving-time estimator RMSE (seconds), 60 s windows:");
+    let est = windowed_rmse(&out.est_errors, 60.0);
+    let max = est.iter().map(|p| p.1).fold(0.0, f64::max);
+    for (t, e) in &est {
+        println!("  t={t:5.0}s  {e:7.2}  {}", bar(*e, max));
+    }
+
+    let (first, last) = (pred.first().unwrap().1, pred.last().unwrap().1);
+    println!(
+        "\npredictor RMSE: {first:.1} → {last:.1} tokens ({:+.0}%)",
+        100.0 * (last / first - 1.0)
+    );
+    let (first, last) = (est.first().unwrap().1, est.last().unwrap().1);
+    println!(
+        "estimator RMSE: {first:.1} → {last:.1} s ({:+.0}%)",
+        100.0 * (last / first - 1.0)
+    );
+}

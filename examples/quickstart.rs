@@ -1,0 +1,112 @@
+//! Quickstart: the Magnus pipeline on one page.
+//!
+//! Trains the generation-length predictor, batches a handful of requests
+//! with the WMA-directed adaptive batcher, schedules them with HRRN, and
+//! serves them on the calibrated cost-model engine — printing each
+//! decision the coordinator makes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use magnus::batch::{AdaptiveBatcher, BatcherConfig};
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::engine::{BatchOutcome, InferenceEngine};
+use magnus::estimator::{BatchShape, ServingTimeEstimator};
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::scheduler::{select, view_of};
+use magnus::workload::dataset::build_predictor_split;
+use magnus::workload::{generate_trace, LlmProfile, PredictedRequest, TraceSpec};
+
+fn main() {
+    let cfg = ServingConfig::default();
+
+    // 1. Train the generation-length predictor (paper §III-B) on the
+    //    held-out split, as the paper does before serving.
+    println!("training USIN predictor …");
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 300, 10, cfg.gpu.g_max, 1);
+    let mut predictor = GenLenPredictor::new(Variant::Usin, &cfg);
+    predictor.train(&split.train);
+
+    // 2. A burst of 12 mixed requests.
+    let trace = generate_trace(&TraceSpec {
+        rate: 50.0,
+        n_requests: 12,
+        seed: 3,
+        ..Default::default()
+    });
+
+    // 3. Predict + batch (Algorithm 1).
+    let mut batcher = AdaptiveBatcher::new(BatcherConfig {
+        wma_threshold: cfg.wma_threshold,
+        theta: cfg.gpu.theta(),
+        delta: cfg.gpu.delta_bytes_per_token,
+        max_batch_size: 0,
+    });
+    for req in &trace {
+        let predicted = predictor.predict(req);
+        println!(
+            "request {:2} [{:9}] L={:4} G'={:4} (true G={:4})",
+            req.id,
+            req.task.name(),
+            req.request_len,
+            predicted,
+            req.gen_len
+        );
+        batcher.insert(
+            PredictedRequest {
+                request: req.clone(),
+                predicted_gen_len: predicted,
+            },
+            req.arrival,
+        );
+    }
+    println!("\nbatcher formed {} batches:", batcher.queue_len());
+    for b in batcher.queue() {
+        println!(
+            "  batch {}: β={} L(B)={} G'(B)={}",
+            b.id,
+            b.size(),
+            b.len(),
+            b.predicted_gen_len()
+        );
+    }
+
+    // 4. Schedule with HRRN and serve on the cost-model engine.
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let estimator = ServingTimeEstimator::new(cfg.knn_k);
+    let now = trace.last().unwrap().arrival + 1.0;
+    println!("\nserving in HRRN order:");
+    while !batcher.is_empty() {
+        let views: Vec<_> = batcher
+            .queue()
+            .iter()
+            .map(|b| {
+                let est = estimator.estimate(&BatchShape {
+                    batch_size: b.size(),
+                    batch_len: b.len(),
+                    batch_gen_len: b.predicted_gen_len(),
+                });
+                view_of(b, now, est)
+            })
+            .collect();
+        let pick = select(cfg.sched, &views).unwrap();
+        let batch = batcher.take(pick);
+        match engine.serve_batch(&batch) {
+            BatchOutcome::Completed {
+                serving_time,
+                per_request,
+            } => {
+                let invalid: u32 = per_request.iter().map(|r| r.invalid_tokens).sum();
+                println!(
+                    "  served batch {} (β={}) in {:6.1}s — {} invalid tokens",
+                    batch.id,
+                    batch.size(),
+                    serving_time,
+                    invalid
+                );
+            }
+            BatchOutcome::Oom { .. } => println!("  batch {} OOMed", batch.id),
+        }
+    }
+    println!("\ndone — see examples/lmaas_cluster.rs for the live PJRT path.");
+}

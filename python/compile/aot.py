@@ -1,0 +1,158 @@
+"""AOT compile path: lower the Layer-2 model to HLO text artifacts.
+
+Runs ONCE at build time (``make artifacts``); Python never appears on the
+request path.  For every (batch-size, prompt-length) bucket this script
+lowers ``prefill`` and for every batch-size bucket ``decode`` to **HLO
+text** and writes:
+
+    artifacts/
+      manifest.json            model config + param table + bucket list
+      weights.bin              f32 little-endian params, param_specs() order
+      prefill_b{B}_l{L}.hlo.txt
+      decode_b{B}.hlo.txt
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+
+``--quick`` lowers a minimal bucket set for CI-speed test runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import ModelConfig, decode, init_params, prefill
+
+# Tokenizer special ids shared with the Rust side (tokenizer/ module).
+PAD_ID, BOS_ID, EOS_ID = 0, 1, 2
+
+FULL_BATCH_BUCKETS = [1, 2, 4, 8, 16, 32]
+FULL_PREFILL_LEN_BUCKETS = [16, 64, 128, 192]
+QUICK_BATCH_BUCKETS = [1, 4]
+QUICK_PREFILL_LEN_BUCKETS = [16, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: ModelConfig, b: int, l: int) -> str:
+    i32, f32 = jnp.int32, jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((b, l), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+    ) + tuple(jax.ShapeDtypeStruct(s, f32) for _, s in cfg.param_specs())
+
+    def fn(tokens, lens, *params):
+        return prefill(cfg, tokens, lens, *params)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_decode(cfg: ModelConfig, b: int) -> str:
+    i32, f32 = jnp.int32, jnp.float32
+    nl, h, dh, lmax = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.l_max
+    specs = (
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((), i32),
+        jax.ShapeDtypeStruct((), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((nl, b, h, lmax, dh), f32),
+        jax.ShapeDtypeStruct((nl, b, h, lmax, dh), f32),
+    ) + tuple(jax.ShapeDtypeStruct(s, f32) for _, s in cfg.param_specs())
+
+    def fn(token, pos, l0, lens, k, v, *params):
+        return decode(cfg, token, pos, l0, lens, k, v, *params)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_weights(cfg: ModelConfig, out_dir: str, seed: int) -> list:
+    params = init_params(cfg, seed)
+    table, offset = [], 0
+    blobs = []
+    for (name, shape), arr in zip(cfg.param_specs(), params):
+        raw = np.asarray(arr, dtype="<f4").tobytes()
+        table.append({"name": name, "shape": list(shape),
+                      "offset": offset, "bytes": len(raw)})
+        blobs.append(raw)
+        offset += len(raw)
+    blob = b"".join(blobs)
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(blob)
+    digest = hashlib.sha256(blob).hexdigest()
+    return table, digest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal bucket set for fast test builds")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ModelConfig()
+    os.makedirs(args.out_dir, exist_ok=True)
+    batches = QUICK_BATCH_BUCKETS if args.quick else FULL_BATCH_BUCKETS
+    plens = (QUICK_PREFILL_LEN_BUCKETS if args.quick
+             else FULL_PREFILL_LEN_BUCKETS)
+
+    weight_table, weights_sha = write_weights(cfg, args.out_dir, args.seed)
+
+    prefill_buckets, decode_buckets = [], []
+    for b in batches:
+        for l in plens:
+            name = f"prefill_b{b}_l{l}.hlo.txt"
+            text = lower_prefill(cfg, b, l)
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(text)
+            prefill_buckets.append({"batch": b, "len": l, "file": name})
+            print(f"lowered {name}: {len(text)} chars", file=sys.stderr)
+        name = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, b)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        decode_buckets.append({"batch": b, "file": name})
+        print(f"lowered {name}: {len(text)} chars", file=sys.stderr)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "d_ff": cfg.d_ff, "l_max": cfg.l_max,
+            "kv_bytes_per_token": cfg.kv_bytes_per_token(),
+        },
+        "specials": {"pad": PAD_ID, "bos": BOS_ID, "eos": EOS_ID},
+        "weights": {"file": "weights.bin", "sha256": weights_sha,
+                    "params": weight_table},
+        "prefill": prefill_buckets,
+        "decode": decode_buckets,
+        "seed": args.seed,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(prefill_buckets)} prefill + "
+          f"{len(decode_buckets)} decode buckets", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Layer-1 Pallas attention kernels for the Magnus serving stack.
+
+Two kernels cover the two phases of LLM batch serving (paper §II-C):
+
+* ``decode_attention`` — the serving hot spot.  One query token per request
+  attends to the whole KV cache.  Implemented flash-style: the KV cache is
+  streamed along the sequence axis in ``LBLK``-sized blocks with an online
+  softmax (running max / running sum / accumulator in VMEM scratch), so the
+  kernel never materialises a ``[B, Lmax]`` score row per head in more than
+  one block at a time.  On a real TPU this is exactly the HBM->VMEM schedule
+  that the paper's WMA metric counts: each (head, kv-block) grid cell streams
+  its KV block from HBM once per decode iteration, and blocks belonging to
+  pad/invalid tokens are the "wasted" accesses Magnus minimises.
+
+* ``prefill_attention`` — causal + padding masked attention over the full
+  prompt, used once per request in the initialisation phase.
+
+Both kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime executes.  Correctness is pinned against the pure-jnp oracle in
+``ref.py`` by ``python/tests/test_kernel.py`` (hypothesis sweeps shapes).
+
+Masks are *inputs* (float 0/1 per KV position): the Layer-2 model derives
+them from request lengths and the current decode position, which keeps the
+kernels oblivious to serving-side padding policy and directly testable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+# KV-block size for the streamed decode kernel.  128 keeps blocks aligned to
+# the TPU lane width (the (8, 128) native tile) and bounds the VMEM working
+# set; see DESIGN.md §Hardware-Adaptation.
+LBLK = 128
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, acc_ref, mx_ref, sm_ref,
+                   *, scale: float):
+    """Grid cell (head h, kv-block j): fold KV block j into the online softmax.
+
+    Scratch refs persist across the (sequentially executed) kv-block axis:
+      acc_ref [B, Dh] — un-normalised weighted value accumulator
+      mx_ref  [B, 1]  — running row max of the attention scores
+      sm_ref  [B, 1]  — running softmax denominator
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mx_ref[...] = jnp.full_like(mx_ref, _NEG_INF)
+        sm_ref[...] = jnp.zeros_like(sm_ref)
+
+    q = q_ref[...]  # [B, Dh]      (head dim squeezed by BlockSpec)
+    k = k_ref[...]  # [B, LBLK, Dh]
+    v = v_ref[...]  # [B, LBLK, Dh]
+    m = m_ref[...]  # [B, LBLK]    1.0 = attend, 0.0 = masked (pad / future)
+
+    s = jnp.einsum("bd,bld->bl", q, k) * scale
+    s = jnp.where(m > 0.0, s, _NEG_INF)
+
+    mx_new = jnp.maximum(mx_ref[...], s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(mx_ref[...] - mx_new)
+    # Multiply by m so fully-masked rows contribute exactly zero (otherwise
+    # exp(-inf - (-inf)) == 1 would leak junk into the accumulator).
+    p = jnp.exp(s - mx_new) * m
+    sm_ref[...] = sm_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.einsum("bl,bld->bd", p, v)
+    mx_ref[...] = mx_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        # Fully-masked rows (a request whose mask is all zero) keep sm == 0;
+        # guard the division so they emit zeros instead of NaN.
+        denom = jnp.where(sm_ref[...] > 0.0, sm_ref[...], 1.0)
+        o_ref[...] = acc_ref[...] / denom
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """Single-token attention against the KV cache.
+
+    Args:
+      q:    [B, H, Dh]      query for the current decode position.
+      k, v: [B, H, Lmax, Dh] KV cache (positions >= valid length are junk).
+      mask: [B, Lmax]       1.0 where the KV position is attendable.
+
+    Returns:
+      [B, H, Dh] attention output.
+    """
+    b, h, dh = q.shape
+    lmax = k.shape[2]
+    if lmax % LBLK == 0:
+        lblk = LBLK
+    else:  # small test shapes: single block
+        lblk = lmax
+    grid = (h, lmax // lblk)
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, None, dh), lambda hh, jj: (0, hh, 0)),
+            pl.BlockSpec((b, None, lblk, dh), lambda hh, jj: (0, hh, jj, 0)),
+            pl.BlockSpec((b, None, lblk, dh), lambda hh, jj: (0, hh, jj, 0)),
+            pl.BlockSpec((b, lblk), lambda hh, jj: (0, jj)),
+        ],
+        out_specs=pl.BlockSpec((b, None, dh), lambda hh, jj: (0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((b, dh), jnp.float32),
+            pltpu.VMEM((b, 1), jnp.float32),
+            pltpu.VMEM((b, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    """Grid cell (head h): full causal+pad masked attention for one head."""
+    q = q_ref[...]  # [B, L, Dh]
+    k = k_ref[...]  # [B, L, Dh]
+    v = v_ref[...]  # [B, L, Dh]
+    m = m_ref[...]  # [B, L, L]
+
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    s = jnp.where(m > 0.0, s, _NEG_INF)
+    s = s - s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom > 0.0, denom, 1.0)
+    o_ref[...] = jnp.einsum("bqk,bkd->bqd", p / denom, v)
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask: jax.Array) -> jax.Array:
+    """Causal + padding masked attention over the whole prompt.
+
+    Args:
+      q, k, v: [B, H, L, Dh]
+      mask:    [B, L, L]  1.0 where query position may attend key position
+               (the Layer-2 model bakes causality AND pad masking into it).
+
+    Returns:
+      [B, H, L, Dh]
+    """
+    b, h, l, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_prefill_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((b, None, l, dh), lambda hh: (0, hh, 0, 0)),
+            pl.BlockSpec((b, None, l, dh), lambda hh: (0, hh, 0, 0)),
+            pl.BlockSpec((b, None, l, dh), lambda hh: (0, hh, 0, 0)),
+            pl.BlockSpec((b, l, l), lambda hh: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, None, l, dh), lambda hh: (0, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, l, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the Layer-1 attention kernels.
+
+Deliberately written in the most obvious way possible (materialise the full
+score matrix, plain softmax) so that any disagreement with the Pallas
+kernels points at the kernels, not at the reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array) -> jax.Array:
+    """Reference for kernels.attention.decode_attention.
+
+    q: [B, H, Dh]; k, v: [B, H, Lmax, Dh]; mask: [B, Lmax] (1.0 = attend).
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("bhd,bhld->bhl", q, k) / jnp.sqrt(jnp.float32(dh))
+    s = jnp.where(mask[:, None, :] > 0.0, s, _NEG_INF)
+    s = s - s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom > 0.0, denom, 1.0)
+    return jnp.einsum("bhl,bhld->bhd", p / denom, v)
+
+
+def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                          mask: jax.Array) -> jax.Array:
+    """Reference for kernels.attention.prefill_attention.
+
+    q, k, v: [B, H, L, Dh]; mask: [B, L, L] (1.0 = attend).
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    s = jnp.where(mask[:, None, :, :] > 0.0, s, _NEG_INF)
+    s = s - s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom > 0.0, denom, 1.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p / denom, v)

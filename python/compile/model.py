@@ -1,0 +1,217 @@
+"""Layer-2: decoder-only transformer LM with an explicit KV cache.
+
+This is the compute graph the Rust coordinator serves.  It mirrors the
+two-phase inference procedure of the paper (§II-C):
+
+* ``prefill``  — the *initialisation phase*: embed the whole (padded) prompt
+  batch, run every layer once, fill the KV cache, return the logits of each
+  request's last valid token.
+* ``decode``   — one *decoding phase* iteration: embed the latest token of
+  every request, attend to the KV cache (via the Layer-1 Pallas kernel),
+  append the new KV entries at the shared batch position, return next-token
+  logits plus the updated cache.
+
+Padding semantics follow §II-D exactly: requests are right-padded to the
+batch length ``l0``; pad positions are masked out of attention; generated
+tokens (positions >= ``l0``) are always attendable.  Early-finished requests
+keep generating (invalid) tokens — the waste Magnus exists to minimise —
+because termination is the Rust coordinator's decision, not the model's.
+
+Weights are *runtime inputs* in the deterministic order of
+``param_specs()``: ``aot.py`` serialises them to ``weights.bin`` and the
+Rust runtime feeds them back as literals, so the HLO artifacts stay small
+and the server genuinely "loads a model".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention, prefill_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the served LM (a miniature ChatGLM-shaped decoder)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    l_max: int = 256  # KV-cache capacity = max request length + generation
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Deterministic (name, shape) list — the weights.bin layout."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (v, d))]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            specs += [
+                (p + "ln1_scale", (d,)), (p + "ln1_bias", (d,)),
+                (p + "wq", (d, d)), (p + "wk", (d, d)),
+                (p + "wv", (d, d)), (p + "wo", (d, d)),
+                (p + "ln2_scale", (d,)), (p + "ln2_bias", (d,)),
+                (p + "w1", (d, f)), (p + "w2", (f, d)),
+            ]
+        specs += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+    def kv_bytes_per_token(self) -> int:
+        """Δ of Eq. (5): bytes of K+V cache per token (f32 here)."""
+        return 2 * self.n_layers * self.n_heads * self.d_head * 4
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic parameter init (the 'small real model' we serve)."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jax.Array] = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_bias",)):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in))
+    return params
+
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _unpack(cfg: ModelConfig, params: Tuple[jax.Array, ...]):
+    names = [n for n, _ in cfg.param_specs()]
+    return dict(zip(names, params))
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[B, ..., D] -> [B, H, ..., Dh]"""
+    b = x.shape[0]
+    mid = x.shape[1:-1]
+    x = x.reshape((b,) + mid + (cfg.n_heads, cfg.d_head))
+    return jnp.moveaxis(x, -2, 1)
+
+
+def _merge_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[B, H, ..., Dh] -> [B, ..., D]"""
+    x = jnp.moveaxis(x, 1, -2)
+    return x.reshape(x.shape[:-2] + (cfg.d_model,))
+
+
+def prefill(cfg: ModelConfig, tokens: jax.Array, lens: jax.Array,
+            *params: jax.Array):
+    """Initialisation phase over a right-padded prompt batch.
+
+    Args:
+      tokens: [B, L] int32, right-padded with the PAD token.
+      lens:   [B]    int32, valid prompt length per request (1..L).
+      params: flat weights in ``param_specs()`` order.
+
+    Returns:
+      (logits[B, V] of each request's last valid token,
+       k[NL, B, H, Lmax, Dh], v[NL, B, H, Lmax, Dh])
+    """
+    p = _unpack(cfg, params)
+    b, l = tokens.shape
+    x = p["embed"][tokens]  # [B, L, D]
+
+    # mask[b, q, kpos]: causal AND key is a real prompt token.
+    pos = jnp.arange(l)
+    causal = pos[None, :, None] >= pos[None, None, :]           # [1, L, L]
+    key_valid = (pos[None, None, :] < lens[:, None, None])      # [B, 1, L]
+    mask = (causal & key_valid).astype(jnp.float32)             # [B, L, L]
+
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        lp = f"layer{i}."
+        h = _layer_norm(x, p[lp + "ln1_scale"], p[lp + "ln1_bias"])
+        q = _split_heads(h @ p[lp + "wq"], cfg)  # [B, H, L, Dh]
+        k = _split_heads(h @ p[lp + "wk"], cfg)
+        v = _split_heads(h @ p[lp + "wv"], cfg)
+        attn = prefill_attention(q, k, v, mask)  # Layer-1 kernel
+        x = x + _merge_heads(attn, cfg) @ p[lp + "wo"]
+        h = _layer_norm(x, p[lp + "ln2_scale"], p[lp + "ln2_bias"])
+        x = x + jax.nn.gelu(h @ p[lp + "w1"]) @ p[lp + "w2"]
+        ks.append(k)
+        vs.append(v)
+
+    # Cache: [NL, B, H, Lmax, Dh], prompt KV in [0, L), rest zeros.
+    pad = cfg.l_max - l
+    k_cache = jnp.pad(jnp.stack(ks), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v_cache = jnp.pad(jnp.stack(vs), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]  # [B, D]
+    logits = last @ p["embed"].T  # tied lm-head
+    return logits, k_cache, v_cache
+
+
+def decode(cfg: ModelConfig, token: jax.Array, pos: jax.Array, l0: jax.Array,
+           lens: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+           *params: jax.Array):
+    """One decoding-phase iteration for the whole batch.
+
+    Args:
+      token:   [B] int32 — token produced by the previous iteration.
+      pos:     scalar int32 — cache slot the new KV entries go to.  All
+               requests share it (uniform right-padding, §II-D).
+      l0:      scalar int32 — padded batch (prompt) length L(B).
+      lens:    [B] int32 — per-request valid prompt lengths (pad masking).
+      k_cache, v_cache: [NL, B, H, Lmax, Dh].
+      params:  flat weights in ``param_specs()`` order.
+
+    Returns:
+      (logits[B, V], k_cache', v_cache')
+    """
+    p = _unpack(cfg, params)
+    b = token.shape[0]
+    lmax = k_cache.shape[3]
+    x = p["embed"][token]  # [B, D]
+
+    # Attendable KV positions j for every request i:
+    #   j <= pos                      (nothing from the future), AND
+    #   j < lens[i]  (real prompt) OR j >= l0 (generated tokens incl. self).
+    j = jnp.arange(lmax)
+    attendable = (j[None, :] <= pos) & (
+        (j[None, :] < lens[:, None]) | (j[None, :] >= l0))
+    mask = attendable.astype(jnp.float32)  # [B, Lmax]
+
+    for i in range(cfg.n_layers):
+        lp = f"layer{i}."
+        h = _layer_norm(x, p[lp + "ln1_scale"], p[lp + "ln1_bias"])
+        q = _split_heads(h @ p[lp + "wq"], cfg)   # [B, H, Dh]
+        kc = _split_heads(h @ p[lp + "wk"], cfg)  # [B, H, Dh]
+        vc = _split_heads(h @ p[lp + "wv"], cfg)
+        upd_k = kc[None, :, :, None, :]  # [1, B, H, 1, Dh]
+        upd_v = vc[None, :, :, None, :]
+        zero = jnp.int32(0)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, upd_k, (jnp.int32(i), zero, zero, pos, zero))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, upd_v, (jnp.int32(i), zero, zero, pos, zero))
+        attn = decode_attention(q, k_cache[i], v_cache[i], mask)  # L1 kernel
+        x = x + _merge_heads(attn, cfg) @ p[lp + "wo"]
+        h = _layer_norm(x, p[lp + "ln2_scale"], p[lp + "ln2_bias"])
+        x = x + jax.nn.gelu(h @ p[lp + "w1"]) @ p[lp + "w2"]
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["embed"].T
+    return logits, k_cache, v_cache

@@ -1,0 +1,148 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute stack: hypothesis
+sweeps shapes/lengths/dtypes and every case must match ref.py to float32
+tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import LBLK, decode_attention, prefill_attention
+from compile.kernels.ref import decode_attention_ref, prefill_attention_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- decode ---
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 32]),
+    nblk=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_decode_matches_ref_swept(b, h, dh, nblk, seed):
+    lmax = LBLK * nblk
+    q = _rand(seed, (b, h, dh))
+    k = _rand(seed + 1, (b, h, lmax, dh))
+    v = _rand(seed + 2, (b, h, lmax, dh))
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, lmax + 1, size=b)
+    mask = (np.arange(lmax)[None, :] < lens[:, None]).astype(np.float32)
+    mask = jnp.asarray(mask)
+    out = decode_attention(q, k, v, mask)
+    ref = decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, ref, **TOL)
+
+
+def test_decode_single_block_small_shape():
+    # lmax not a multiple of LBLK -> single-block fallback path.
+    b, h, lmax, dh = 3, 2, 24, 16
+    q, k, v = _rand(0, (b, h, dh)), _rand(1, (b, h, lmax, dh)), _rand(2, (b, h, lmax, dh))
+    mask = jnp.ones((b, lmax))
+    np.testing.assert_allclose(
+        decode_attention(q, k, v, mask),
+        decode_attention_ref(q, k, v, mask), **TOL)
+
+
+def test_decode_noncontiguous_mask():
+    """Serving mask shape: prompt valid + generated region, pad hole between."""
+    b, h, lmax, dh = 4, 2, 2 * LBLK, 16
+    q, k, v = _rand(3, (b, h, dh)), _rand(4, (b, h, lmax, dh)), _rand(5, (b, h, lmax, dh))
+    lens = np.array([10, 40, 25, 3])
+    l0, pos = 40, 50  # batch prompt length 40, 10 tokens generated
+    j = np.arange(lmax)
+    mask = ((j[None, :] <= pos) &
+            ((j[None, :] < lens[:, None]) | (j[None, :] >= l0)))
+    mask = jnp.asarray(mask.astype(np.float32))
+    np.testing.assert_allclose(
+        decode_attention(q, k, v, mask),
+        decode_attention_ref(q, k, v, mask), **TOL)
+
+
+def test_decode_fully_masked_row_is_finite():
+    b, h, lmax, dh = 2, 2, LBLK, 8
+    q, k, v = _rand(6, (b, h, dh)), _rand(7, (b, h, lmax, dh)), _rand(8, (b, h, lmax, dh))
+    mask = jnp.zeros((b, lmax)).at[1].set(1.0)
+    out = decode_attention(q, k, v, mask)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(out[0], np.zeros((h, dh)), atol=1e-6)
+
+
+def test_decode_mask_zero_tail_ignores_cache_garbage():
+    """Junk beyond the valid length must not affect the output."""
+    b, h, lmax, dh = 2, 2, LBLK, 16
+    q = _rand(9, (b, h, dh))
+    k = _rand(10, (b, h, lmax, dh))
+    v = _rand(11, (b, h, lmax, dh))
+    valid = 17
+    mask = (jnp.arange(lmax) < valid).astype(jnp.float32)[None, :].repeat(b, 0)
+    out1 = decode_attention(q, k, v, mask)
+    k2 = k.at[:, :, valid:, :].set(1e6)
+    v2 = v.at[:, :, valid:, :].set(-1e6)
+    out2 = decode_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(out1, out2, **TOL)
+
+
+# --------------------------------------------------------------- prefill ---
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    h=st.integers(1, 4),
+    l=st.sampled_from([4, 16, 33, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_prefill_matches_ref_swept(b, h, l, dh, seed):
+    q = _rand(seed, (b, h, l, dh))
+    k = _rand(seed + 1, (b, h, l, dh))
+    v = _rand(seed + 2, (b, h, l, dh))
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, l + 1, size=b)
+    pos = np.arange(l)
+    causal = pos[None, :, None] >= pos[None, None, :]
+    key_valid = pos[None, None, :] < lens[:, None, None]
+    mask = jnp.asarray((causal & key_valid).astype(np.float32))
+    np.testing.assert_allclose(
+        prefill_attention(q, k, v, mask),
+        prefill_attention_ref(q, k, v, mask), **TOL)
+
+
+def test_prefill_causality():
+    """Perturbing a future token must not change earlier outputs."""
+    b, h, l, dh = 2, 2, 16, 8
+    q, k, v = _rand(20, (b, h, l, dh)), _rand(21, (b, h, l, dh)), _rand(22, (b, h, l, dh))
+    pos = np.arange(l)
+    mask = jnp.asarray((pos[:, None] >= pos[None, :]).astype(np.float32))
+    mask = mask[None].repeat(b, 0)
+    out1 = prefill_attention(q, k, v, mask)
+    k2 = k.at[:, :, l - 1, :].add(100.0)
+    v2 = v.at[:, :, l - 1, :].add(-50.0)
+    out2 = prefill_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(out1[:, :, : l - 1], out2[:, :, : l - 1], **TOL)
+
+
+def test_prefill_pad_key_excluded():
+    b, h, l, dh = 2, 2, 12, 8
+    q, k, v = _rand(23, (b, h, l, dh)), _rand(24, (b, h, l, dh)), _rand(25, (b, h, l, dh))
+    lens = np.array([5, 12])
+    pos = np.arange(l)
+    causal = pos[None, :, None] >= pos[None, None, :]
+    key_valid = pos[None, None, :] < lens[:, None, None]
+    mask = jnp.asarray((causal & key_valid).astype(np.float32))
+    out1 = prefill_attention(q, k, v, mask)
+    k2 = k.at[0, :, 5:, :].set(999.0)
+    v2 = v.at[0, :, 5:, :].set(-999.0)
+    out2 = prefill_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(out1[0, :, :5], out2[0, :, :5], **TOL)

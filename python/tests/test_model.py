@@ -1,0 +1,126 @@
+"""Layer-2 model invariants: shapes, cache round-trip, padding semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, decode, init_params, prefill
+
+CFG = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+                  l_max=32)
+PARAMS = init_params(CFG, seed=0)
+
+
+def _prefill(tokens, lens):
+    return prefill(CFG, jnp.asarray(tokens, jnp.int32),
+                   jnp.asarray(lens, jnp.int32), *PARAMS)
+
+
+def test_prefill_shapes():
+    b, l = 3, 8
+    logits, k, v = _prefill(np.ones((b, l)), [8, 3, 5])
+    assert logits.shape == (b, CFG.vocab)
+    assert k.shape == (CFG.n_layers, b, CFG.n_heads, CFG.l_max, CFG.d_head)
+    assert v.shape == k.shape
+
+
+def test_prefill_pad_invariance():
+    """Extending the pad tail must not change a request's logits."""
+    rng = np.random.default_rng(0)
+    raw = rng.integers(3, CFG.vocab, size=5)
+    t1 = np.zeros((1, 8), np.int64); t1[0, :5] = raw
+    t2 = np.zeros((1, 16), np.int64); t2[0, :5] = raw
+    l1, _, _ = _prefill(t1, [5])
+    l2, _, _ = _prefill(t2, [5])
+    np.testing.assert_allclose(l1, l2, rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_batch_independence():
+    """A request's logits must not depend on its batch-mates."""
+    rng = np.random.default_rng(1)
+    a = rng.integers(3, CFG.vocab, size=6)
+    b_ = rng.integers(3, CFG.vocab, size=4)
+    ta = np.zeros((1, 8), np.int64); ta[0, :6] = a
+    tb = np.zeros((2, 8), np.int64); tb[0, :6] = a; tb[1, :4] = b_
+    la, _, _ = _prefill(ta, [6])
+    lab, _, _ = _prefill(tb, [6, 4])
+    np.testing.assert_allclose(la[0], lab[0], rtol=2e-4, atol=2e-4)
+
+
+def test_decode_cache_roundtrip_matches_long_prefill():
+    """prefill(x[:n]) + decode steps == prefill(x[:n+k]) for the last token.
+
+    This is the KV-cache correctness invariant the whole serving path
+    relies on.
+    """
+    rng = np.random.default_rng(2)
+    full = rng.integers(3, CFG.vocab, size=7)
+    n = 4
+    t = np.zeros((1, 8), np.int64)
+    t[0, :n] = full[:n]
+    logits, k, v = _prefill(t, [n])
+    l0 = jnp.int32(8)
+    lens = jnp.asarray([n], jnp.int32)
+    # feed full[n:] one token at a time at positions l0, l0+1, ...
+    for step, tok in enumerate(full[n:]):
+        pos = jnp.int32(8 + step)
+        logits, k, v = decode(CFG, jnp.asarray([tok], jnp.int32), pos, l0,
+                              lens, k, v, *PARAMS)
+
+    # Oracle: one prefill over the full 7-token sequence.
+    t_full = np.zeros((1, 8), np.int64)
+    t_full[0, :7] = full
+    ref_logits, _, _ = _prefill(t_full, [7])
+    # The decode path keeps the pad hole [n, l0) masked, the oracle has the
+    # tokens contiguous — so compare the argmax distributions via a direct
+    # contiguous decode instead: re-run decode with lens equal to prompt.
+    # Contiguous variant: prompt occupies [0, n), generated at [n, ...).
+    logits2, k2, v2 = _prefill(t, [n])
+    l0c = jnp.int32(n)
+    for step, tok in enumerate(full[n:]):
+        pos = jnp.int32(n + step)
+        logits2, k2, v2 = decode(CFG, jnp.asarray([tok], jnp.int32), pos,
+                                 l0c, lens, k2, v2, *PARAMS)
+    np.testing.assert_allclose(logits2, ref_logits, rtol=5e-4, atol=5e-4)
+
+
+def test_decode_shapes_and_finiteness():
+    b = 2
+    t = np.zeros((b, 8), np.int64); t[:, :3] = 5
+    logits, k, v = _prefill(t, [3, 3])
+    out, k2, v2 = decode(CFG, jnp.asarray([7, 9], jnp.int32), jnp.int32(8),
+                         jnp.int32(8), jnp.asarray([3, 3], jnp.int32),
+                         k, v, *PARAMS)
+    assert out.shape == (b, CFG.vocab)
+    assert bool(jnp.isfinite(out).all())
+    # cache updated exactly at position 8
+    assert not np.allclose(np.asarray(k2[:, :, :, 8]), 0.0)
+    np.testing.assert_allclose(np.asarray(k2[:, :, :, 9:]), 0.0)
+
+
+def test_decode_batch_independence():
+    rng = np.random.default_rng(3)
+    t = np.zeros((2, 8), np.int64)
+    t[0, :5] = rng.integers(3, CFG.vocab, size=5)
+    t[1, :2] = rng.integers(3, CFG.vocab, size=2)
+    _, k, v = _prefill(t, [5, 2])
+    out, _, _ = decode(CFG, jnp.asarray([4, 6], jnp.int32), jnp.int32(8),
+                       jnp.int32(8), jnp.asarray([5, 2], jnp.int32),
+                       k, v, *PARAMS)
+    t_solo = t[:1]
+    _, ks, vs = _prefill(t_solo, [5])
+    out_solo, _, _ = decode(CFG, jnp.asarray([4], jnp.int32), jnp.int32(8),
+                            jnp.int32(8), jnp.asarray([5], jnp.int32),
+                            ks, vs, *PARAMS)
+    np.testing.assert_allclose(out[0], out_solo[0], rtol=2e-4, atol=2e-4)
+
+
+def test_param_specs_deterministic_and_complete():
+    cfg = ModelConfig()
+    specs = cfg.param_specs()
+    assert specs == cfg.param_specs()
+    names = [n for n, _ in specs]
+    assert len(names) == len(set(names))
+    assert names[0] == "embed" and names[-1] == "lnf_bias"
+    assert cfg.kv_bytes_per_token() == 2 * cfg.n_layers * cfg.d_model * 4

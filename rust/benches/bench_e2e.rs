@@ -1,0 +1,91 @@
+//! End-to-end policy sweep — the bench-harness twin of Figs. 10–13.
+//!
+//! Runs every policy over the same saturated trace on the cost-model
+//! engine and reports request/token throughput and response times, then
+//! asserts the paper's headline orderings (who wins).  This is the
+//! regression gate for the whole coordinator.
+
+use magnus::config::ServingConfig;
+use magnus::metrics::Summary;
+use magnus::sim::{run_policy, Policy};
+use magnus::util::bench::BenchSuite;
+use magnus::workload::{generate_trace, TraceSpec};
+
+fn main() {
+    let mut suite = BenchSuite::new("end-to-end policy sweep (Figs. 10–13 shape)");
+    suite.header();
+    let cfg = ServingConfig::default();
+    let quick = std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+    let n = if quick { 300 } else { 1000 };
+    let trace = generate_trace(&TraceSpec {
+        rate: 20.0,
+        n_requests: n,
+        seed: 99,
+        ..Default::default()
+    });
+
+    let mut results: Vec<(Policy, Summary, f64)> = Vec::new();
+    for p in Policy::ALL {
+        let t0 = std::time::Instant::now();
+        let s = run_policy(&cfg, p, &trace, 300).metrics.summarise();
+        let wall = t0.elapsed().as_secs_f64();
+        results.push((p, s, wall));
+    }
+
+    println!(
+        "\n{:8} | {:>9} | {:>8} | {:>8} | {:>8} | {:>8} | {:>9}",
+        "policy", "thr req/s", "mean RT", "p95 RT", "tok/s", "valid/s", "sim wall"
+    );
+    for (p, s, wall) in &results {
+        println!(
+            "{:8} | {:9.3} | {:7.1}s | {:7.1}s | {:8.1} | {:8.1} | {:8.2}s",
+            p.name(),
+            s.request_throughput,
+            s.mean_response_time,
+            s.p95_response_time,
+            s.token_throughput,
+            s.valid_token_throughput,
+            wall
+        );
+    }
+
+    let get = |p: Policy| &results.iter().find(|(q, _, _)| *q == p).unwrap().1;
+    let (vs, vsq, ccb, glp, abp, magnus) = (
+        get(Policy::Vs),
+        get(Policy::Vsq),
+        get(Policy::Ccb),
+        get(Policy::Glp),
+        get(Policy::Abp),
+        get(Policy::Magnus),
+    );
+
+    // Fig. 11a ordering
+    assert!(magnus.request_throughput > ccb.request_throughput);
+    assert!(ccb.request_throughput > vs.request_throughput);
+    assert!(vs.request_throughput > vsq.request_throughput);
+    // Fig. 11b ordering
+    assert!(magnus.mean_response_time < ccb.mean_response_time);
+    assert!(vs.mean_response_time < vsq.mean_response_time);
+    // Fig. 13 ablation ordering
+    assert!(glp.request_throughput > vs.request_throughput);
+    assert!(abp.request_throughput > glp.request_throughput);
+    println!(
+        "\nPASS orderings: Magnus>CCB>VS>VSQ (thr), Magnus<CCB (RT), VS<GLP<ABP (thr)"
+    );
+    println!(
+        "Magnus vs VS: thr ×{:.2}, mean RT −{:.0}%  (paper: ×1.66–3.34, −60–90%)",
+        magnus.request_throughput / vs.request_throughput,
+        100.0 * (1.0 - magnus.mean_response_time / vs.mean_response_time)
+    );
+
+    // Also time the whole-sweep cost so sim perf regressions surface.
+    suite.bench("sim/magnus 300req@rate20", || {
+        let t = generate_trace(&TraceSpec {
+            rate: 20.0,
+            n_requests: 300,
+            seed: 5,
+            ..Default::default()
+        });
+        std::hint::black_box(run_policy(&cfg, Policy::Magnus, &t, 50));
+    });
+}

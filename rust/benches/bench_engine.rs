@@ -1,0 +1,89 @@
+//! Engine benchmarks: (a) the real PJRT decode iteration — the serving
+//! hot path of the three-layer stack — across batch buckets; (b) the
+//! analytic cost-model engine, which must be fast enough for the
+//! discrete-event simulator to sweep thousands of batches per second.
+//!
+//! Requires artifacts for the PJRT half (skipped with a notice if absent).
+
+use magnus::batch::Batch;
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::engine::InferenceEngine;
+use magnus::runtime::ModelRuntime;
+use magnus::util::bench::BenchSuite;
+use magnus::workload::{PredictedRequest, Request, TaskId};
+
+fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
+    PredictedRequest {
+        request: Request {
+            id,
+            task: TaskId::Gc,
+            instruction: String::new(),
+            user_input: String::new(),
+            user_input_len: len,
+            request_len: len,
+            gen_len: gen,
+            arrival: 0.0,
+        },
+        predicted_gen_len: gen,
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("inference engines");
+    suite.header();
+
+    // ── analytic engine: closed-form batch time (simulator inner loop) ──
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let mut big = Batch::new(0, req(0, 500, 400), 0.0);
+    for i in 1..32 {
+        big.requests.push(req(i, 100 + i as u32 * 20, 50 + i as u32 * 25));
+    }
+    suite.bench_val("cost-model/serve_batch β=32", || engine.serve_batch(&big));
+    suite.bench_val("cost-model/batch_time closed form", || {
+        engine.batch_time(32, 500, 800)
+    });
+
+    // ── real PJRT decode iteration per batch bucket ──
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("(PJRT half skipped: run `make artifacts`)");
+        return;
+    }
+    let mut rt = ModelRuntime::load("artifacts").expect("load artifacts");
+    let buckets: Vec<usize> = rt.manifest.decode.iter().map(|d| d.batch).collect();
+    for &b in buckets.iter().filter(|&&b| b <= 16) {
+        // Prefill once to get a cache of the right bucket.
+        let prompts: Vec<Vec<u32>> = (0..b).map(|i| vec![1, 60 + i as u32, 70]).collect();
+        let out = rt.prefill(&prompts).expect("prefill");
+        let bl = rt.manifest.prefill_bucket(b, 3).unwrap().len as u32;
+        let lens: Vec<u32> = vec![3; b];
+        let tokens: Vec<u32> = vec![5; b];
+        // Reuse one cache: decode at a fixed position each iteration
+        // (numerically nonsense, representative cost-wise).
+        let mut cache = Some(out.cache);
+        suite.bench(&format!("pjrt/decode_step β={b}"), || {
+            let c = cache.take().unwrap();
+            let step = rt
+                .decode_step(&tokens, bl, bl, &lens, c)
+                .expect("decode");
+            cache = Some(step.cache);
+        });
+    }
+
+    // prefill cost per bucket length (β=1)
+    for &(bb, bl) in rt
+        .manifest
+        .prefill
+        .iter()
+        .filter(|p| p.batch == 1)
+        .map(|p| (p.batch, p.len))
+        .collect::<Vec<_>>()
+        .iter()
+    {
+        let prompt = vec![vec![1u32; bl.min(bl)]];
+        suite.bench(&format!("pjrt/prefill β={bb} L={bl}"), || {
+            std::hint::black_box(rt.prefill(&prompt).expect("prefill"));
+        });
+    }
+}

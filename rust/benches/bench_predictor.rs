@@ -1,0 +1,41 @@
+//! §IV-D overhead: generation-length prediction latency (paper bound:
+//! < 0.03 s per request), plus training-time scaling.
+
+use std::time::Duration;
+
+use magnus::config::ServingConfig;
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::util::bench::BenchSuite;
+use magnus::workload::dataset::build_predictor_split;
+use magnus::workload::LlmProfile;
+
+fn main() {
+    let mut suite = BenchSuite::new("generation-length predictor (§IV-D)");
+    suite.header();
+    let cfg = ServingConfig::default();
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 400, 100, 1024, 3);
+
+    for v in [Variant::Raft, Variant::Inst, Variant::Usin] {
+        let mut p = GenLenPredictor::new(v, &cfg);
+        p.train(&split.train);
+        let mut i = 0;
+        suite.bench_val(&format!("predict/{}", v.name()), || {
+            i = (i + 1) % split.test.len();
+            p.predict(&split.test[i])
+        });
+    }
+
+    // training cost at increasing train-set sizes (continuous-learning
+    // refits run every 3 minutes and must stay cheap)
+    for n in [100usize, 400] {
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, n, 1, 1024, 4);
+        suite.bench(&format!("train/USIN/{}req", n * 8), || {
+            let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+            p.train(&split.train);
+        });
+    }
+
+    // paper §IV-D: prediction takes < 0.03 s
+    suite.assert_mean_below("predict/USIN", Duration::from_millis(30));
+    println!("\nPASS: USIN predict below the paper's 30 ms bound");
+}

@@ -1,0 +1,39 @@
+//! §IV-D overhead: HRRN batch selection (paper bound: < 0.002 s) across
+//! queue depths, vs FCFS and SJF.
+
+use std::time::Duration;
+
+use magnus::config::SchedPolicy;
+use magnus::scheduler::{select, BatchView};
+use magnus::util::bench::BenchSuite;
+use magnus::util::Rng;
+
+fn views(n: usize, seed: u64) -> Vec<BatchView> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| BatchView {
+            queuing_time: rng.range_f64(0.0, 500.0),
+            est_serving_time: rng.range_f64(0.1, 400.0),
+            created_at: rng.range_f64(0.0, 500.0),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("batch scheduler (§IV-D)");
+    suite.header();
+
+    for depth in [10usize, 100, 1000] {
+        let vs = views(depth, depth as u64);
+        for policy in [SchedPolicy::Hrrn, SchedPolicy::Fcfs, SchedPolicy::Sjf] {
+            suite.bench_val(
+                &format!("{}/queue={depth}", policy.name()),
+                || select(policy, &vs),
+            );
+        }
+    }
+
+    // paper §IV-D: batch scheduling takes < 0.002 s
+    suite.assert_mean_below("hrrn/queue=1000", Duration::from_millis(2));
+    println!("\nPASS: HRRN select below the paper's 2 ms bound at queue=1000");
+}

@@ -1,0 +1,55 @@
+//! The paper's baselines (§IV-A), collected in one place.
+//!
+//! The actual serving loops live next to the simulator (`sim::vanilla`,
+//! `sim::ccb`) because they share its event machinery; this module owns
+//! the baseline *definitions* — batch sizes, engine wrappers — and
+//! re-exports the runners so callers can write `baselines::vs(...)`.
+
+use crate::config::ServingConfig;
+use crate::engine::cost::CostModelEngine;
+use crate::engine::quantized::QuantizedEngine;
+use crate::metrics::RunMetrics;
+use crate::sim::{ccb::run_ccb, vanilla::run_vanilla};
+use crate::workload::Request;
+
+/// Vanilla Scheduling: FCFS, fixed β from Eq. (1) (paper: 7).
+pub fn vs(cfg: &ServingConfig, trace: &[Request]) -> RunMetrics {
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    run_vanilla(cfg, cfg.gpu.vanilla_batch_size(), &engine, trace)
+}
+
+/// Vanilla Scheduling with 4-bit Quantization: fixed β = 10, slower
+/// iterations, inflated generation lengths.
+pub fn vsq(cfg: &ServingConfig, trace: &[Request]) -> RunMetrics {
+    let engine = QuantizedEngine::new(
+        CostModelEngine::new(cfg.cost.clone(), &cfg.gpu),
+        cfg.quant.clone(),
+    );
+    run_vanilla(cfg, cfg.quant.batch_size, &engine, trace)
+}
+
+/// Conservative Continuous Batching: iteration-level scheduling with the
+/// parallel-processing limit of Eq. (1)'s β (paper: 7).
+pub fn ccb(cfg: &ServingConfig, trace: &[Request]) -> RunMetrics {
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    run_ccb(cfg, cfg.gpu.vanilla_batch_size(), &engine, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_trace, TraceSpec};
+
+    #[test]
+    fn all_baselines_complete_the_trace() {
+        let cfg = ServingConfig::default();
+        let trace = generate_trace(&TraceSpec {
+            rate: 2.0,
+            n_requests: 60,
+            ..Default::default()
+        });
+        assert_eq!(vs(&cfg, &trace).records.len(), 60);
+        assert_eq!(vsq(&cfg, &trace).records.len(), 60);
+        assert_eq!(ccb(&cfg, &trace).records.len(), 60);
+    }
+}

@@ -1,0 +1,9 @@
+//! Batching: the WMA metric (Eq. 2–5), the batch type, and the
+//! WMA-directed adaptive batcher (Algorithm 1).
+
+pub mod batcher;
+pub mod types;
+pub mod wma;
+
+pub use batcher::{AdaptiveBatcher, BatcherConfig};
+pub use types::Batch;

@@ -1,0 +1,145 @@
+//! The batch type that flows through the batcher → queue → scheduler →
+//! engine pipeline.
+
+use crate::workload::PredictedRequest;
+
+/// A batch of requests awaiting (or under) execution.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Unique batch id.
+    pub id: u64,
+    pub requests: Vec<PredictedRequest>,
+    /// Wall/sim time the batch was created (first request inserted).
+    pub created_at: f64,
+    /// False after an OOM split (§III-C: split batches are re-queued
+    /// uninsertable so they cannot grow past the memory bound again).
+    pub insertable: bool,
+}
+
+impl Batch {
+    pub fn new(id: u64, first: PredictedRequest, now: f64) -> Batch {
+        Batch {
+            id,
+            requests: vec![first],
+            created_at: now,
+            insertable: true,
+        }
+    }
+
+    /// β — number of requests.
+    #[inline]
+    pub fn size(&self) -> u32 {
+        self.requests.len() as u32
+    }
+
+    /// L(B) = max_p L(p) — the padded batch length.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.requests.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Predicted G(B) = max_p G'(p) — what the scheduler reasons with.
+    #[inline]
+    pub fn predicted_gen_len(&self) -> u32 {
+        self.requests
+            .iter()
+            .map(|r| r.predicted_gen_len)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Ground-truth G(B) — engine-only (EOS timing).
+    #[inline]
+    pub fn true_gen_len(&self) -> u32 {
+        self.requests
+            .iter()
+            .map(|r| r.request.gen_len)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Earliest arrival among batched requests; T_q(B) = now − this
+    /// (§III-E: the longest queuing time of requests in B).
+    #[inline]
+    pub fn earliest_arrival(&self) -> f64 {
+        self.requests
+            .iter()
+            .map(|r| r.request.arrival)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Split evenly in two (OOM recovery, §III-C).  Both halves are marked
+    /// uninsertable.  Requests are ordered by length so the halves stay
+    /// length-homogeneous.
+    pub fn split(mut self, next_id: u64) -> (Batch, Batch) {
+        self.requests.sort_by_key(|r| r.len());
+        let half = self.requests.len() / 2;
+        let right = self.requests.split_off(half);
+        let left = Batch {
+            id: self.id,
+            requests: self.requests,
+            created_at: self.created_at,
+            insertable: false,
+        };
+        let right = Batch {
+            id: next_id,
+            requests: right,
+            created_at: self.created_at,
+            insertable: false,
+        };
+        (left, right)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Request, TaskId};
+
+    pub(crate) fn req(id: u64, len: u32, gen: u32, pred: u32, arrival: f64) -> PredictedRequest {
+        PredictedRequest {
+            request: Request {
+                id,
+                task: TaskId::Gc,
+                instruction: String::new(),
+                user_input: String::new(),
+                user_input_len: len.saturating_sub(1),
+                request_len: len,
+                gen_len: gen,
+                arrival,
+            },
+            predicted_gen_len: pred,
+        }
+    }
+
+    #[test]
+    fn aggregates_are_maxima() {
+        let mut b = Batch::new(0, req(0, 10, 5, 6, 1.0), 1.0);
+        b.requests.push(req(1, 30, 50, 40, 0.5));
+        b.requests.push(req(2, 20, 8, 8, 2.0));
+        assert_eq!(b.size(), 3);
+        assert_eq!(b.len(), 30);
+        assert_eq!(b.predicted_gen_len(), 40);
+        assert_eq!(b.true_gen_len(), 50);
+        assert_eq!(b.earliest_arrival(), 0.5);
+    }
+
+    #[test]
+    fn split_halves_and_marks_uninsertable() {
+        let mut b = Batch::new(7, req(0, 10, 5, 5, 0.0), 0.0);
+        for i in 1..6 {
+            b.requests.push(req(i, 10 * (i as u32 + 1), 5, 5, 0.0));
+        }
+        let (l, r) = b.split(8);
+        assert_eq!(l.size() + r.size(), 6);
+        assert!((l.size() as i32 - r.size() as i32).abs() <= 1);
+        assert!(!l.insertable && !r.insertable);
+        assert_eq!(r.id, 8);
+        // length-sorted halves: every left length <= every right length
+        assert!(l.len() <= r.requests.iter().map(|x| x.len()).min().unwrap());
+    }
+}

@@ -1,0 +1,209 @@
+//! The wasted-memory-access (WMA) metric — Eq. (2), (3), (4) — and the
+//! memory model MEM(B) — Eq. (5) — of paper §III-C.
+//!
+//! WMA counts the number of times a token's key/value tensors are read
+//! from the KV cache without contributing to the final response:
+//!
+//! * `WMA_gen(p)`  = G(p) · (L(B) − L(p)) — pad-token reads while p is
+//!   still generating (Eq. 2);
+//! * `WMA_wait(p)` = Σ_{g=G(p)}^{G(B)} (g + L(B)) — reads of the whole
+//!   (padded request + generated) context during p's waiting phase
+//!   (Eq. 3, inclusive bounds as printed);
+//! * `WMA(B)`      = max_p (WMA_gen(p) + WMA_wait(p)) (Eq. 4).
+//!
+//! The batcher evaluates these with *predicted* generation lengths.
+
+use crate::batch::types::Batch;
+use crate::workload::PredictedRequest;
+
+/// Eq. (2): pad-token waste of a request inside a batch of length
+/// `batch_len`, using generation length `g` for the request.
+#[inline]
+pub fn wma_gen(req_len: u32, g: u32, batch_len: u32) -> u64 {
+    g as u64 * (batch_len - req_len) as u64
+}
+
+/// Eq. (3): waiting-phase waste with inclusive bounds g = G(p) ..= G(B).
+#[inline]
+pub fn wma_wait(g_p: u32, g_batch: u32, batch_len: u32) -> u64 {
+    if g_p > g_batch {
+        return 0;
+    }
+    let a = g_p as u64;
+    let b = g_batch as u64;
+    let n = b - a + 1;
+    // Σ_{g=a}^{b} (g + L) = n·L + (a+b)·n/2
+    n * batch_len as u64 + (a + b) * n / 2
+}
+
+/// Eq. (4) over a hypothetical request set, with a closed form that avoids
+/// materialising the batch: the max over requests of
+/// `wma_gen + wma_wait`.
+pub fn wma_of<'a, I>(requests: I, batch_len: u32, batch_gen: u32) -> u64
+where
+    I: IntoIterator<Item = &'a PredictedRequest>,
+{
+    requests
+        .into_iter()
+        .map(|p| {
+            wma_gen(p.len(), p.predicted_gen_len, batch_len)
+                + wma_wait(p.predicted_gen_len, batch_gen, batch_len)
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Eq. (4) for a queued batch (predicted lengths).
+pub fn wma_batch(b: &Batch) -> u64 {
+    wma_of(&b.requests, b.len(), b.predicted_gen_len())
+}
+
+/// WMA of `batch ∪ {candidate}` WITHOUT copying the batch — the batcher's
+/// inner loop (Algorithm 1 line 4-5).
+pub fn wma_with(b: &Batch, candidate: &PredictedRequest) -> u64 {
+    let new_len = b.len().max(candidate.len());
+    let new_gen = b.predicted_gen_len().max(candidate.predicted_gen_len);
+    let existing = wma_of(&b.requests, new_len, new_gen);
+    let cand = wma_gen(candidate.len(), candidate.predicted_gen_len, new_len)
+        + wma_wait(candidate.predicted_gen_len, new_gen, new_len);
+    existing.max(cand)
+}
+
+/// Eq. (5): KV-cache bytes of a batch with `beta` requests, padded length
+/// `batch_len`, generation length `batch_gen`, and per-token KV size
+/// `delta` bytes.
+#[inline]
+pub fn mem_bytes(beta: u32, batch_len: u32, batch_gen: u32, delta: u64) -> u64 {
+    beta as u64 * (batch_len as u64 + batch_gen as u64) * delta
+}
+
+/// MEM(B ∪ {candidate}) with predicted lengths.
+pub fn mem_with(b: &Batch, candidate: &PredictedRequest, delta: u64) -> u64 {
+    let new_len = b.len().max(candidate.len());
+    let new_gen = b.predicted_gen_len().max(candidate.predicted_gen_len);
+    mem_bytes(b.size() + 1, new_len, new_gen, delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::types::Batch;
+    use crate::util::prop::prop_check;
+    use crate::workload::{PredictedRequest, Request, TaskId};
+
+    fn req(len: u32, pred: u32) -> PredictedRequest {
+        PredictedRequest {
+            request: Request {
+                id: 0,
+                task: TaskId::Gc,
+                instruction: String::new(),
+                user_input: String::new(),
+                user_input_len: len,
+                request_len: len,
+                gen_len: pred,
+                arrival: 0.0,
+            },
+            predicted_gen_len: pred,
+        }
+    }
+
+    #[test]
+    fn wma_gen_eq2() {
+        // G(p)=10, L(B)=50, L(p)=30 → 10·20 = 200
+        assert_eq!(wma_gen(30, 10, 50), 200);
+        // no padding → zero
+        assert_eq!(wma_gen(50, 10, 50), 0);
+    }
+
+    #[test]
+    fn wma_wait_eq3_closed_form_matches_loop() {
+        for (gp, gb, l) in [(3u32, 10u32, 7u32), (1, 1, 5), (10, 10, 0), (0, 4, 2)] {
+            let loop_sum: u64 =
+                (gp..=gb).map(|g| g as u64 + l as u64).sum();
+            assert_eq!(wma_wait(gp, gb, l), loop_sum, "gp={gp} gb={gb} l={l}");
+        }
+    }
+
+    #[test]
+    fn homogeneous_batch_has_minimal_wma() {
+        // Identical requests: no padding; only the Eq.3 self-term remains.
+        let b = {
+            let mut b = Batch::new(0, req(20, 10), 0.0);
+            b.requests.push(req(20, 10));
+            b
+        };
+        let homo = wma_batch(&b);
+        let hetero = {
+            let mut b2 = Batch::new(1, req(20, 10), 0.0);
+            b2.requests.push(req(5, 100));
+            wma_batch(&b2)
+        };
+        assert!(homo < hetero);
+    }
+
+    #[test]
+    fn wma_with_equals_materialised_union() {
+        prop_check(300, |rng| {
+            let mut b = Batch::new(0, req(
+                rng.range_u64(1, 200) as u32,
+                rng.range_u64(1, 200) as u32,
+            ), 0.0);
+            for _ in 0..rng.range_usize(0, 6) {
+                b.requests.push(req(
+                    rng.range_u64(1, 200) as u32,
+                    rng.range_u64(1, 200) as u32,
+                ));
+            }
+            let cand = req(
+                rng.range_u64(1, 200) as u32,
+                rng.range_u64(1, 200) as u32,
+            );
+            let fast = wma_with(&b, &cand);
+            let mut union = b.clone();
+            union.requests.push(cand);
+            assert_eq!(fast, wma_batch(&union));
+        });
+    }
+
+    #[test]
+    fn mem_eq5() {
+        // β=3, L=100, G=200, Δ=458752 → 3·300·458752
+        assert_eq!(mem_bytes(3, 100, 200, 458_752), 3 * 300 * 458_752);
+    }
+
+    #[test]
+    fn mem_with_matches_union() {
+        prop_check(200, |rng| {
+            let mut b = Batch::new(0, req(
+                rng.range_u64(1, 500) as u32,
+                rng.range_u64(1, 500) as u32,
+            ), 0.0);
+            for _ in 0..rng.range_usize(0, 5) {
+                b.requests.push(req(
+                    rng.range_u64(1, 500) as u32,
+                    rng.range_u64(1, 500) as u32,
+                ));
+            }
+            let cand = req(rng.range_u64(1, 500) as u32, rng.range_u64(1, 500) as u32);
+            let delta = 1000;
+            let fast = mem_with(&b, &cand, delta);
+            let mut union = b.clone();
+            union.requests.push(cand);
+            assert_eq!(
+                fast,
+                mem_bytes(union.size(), union.len(), union.predicted_gen_len(), delta)
+            );
+        });
+    }
+
+    #[test]
+    fn wma_monotone_in_batch_gen_spread() {
+        // Increasing the batch gen length (longer-running batch-mate)
+        // strictly increases a short request's waiting waste.
+        let short = req(10, 5);
+        let w1 = wma_gen(10, 5, 10) + wma_wait(5, 20, 10);
+        let w2 = wma_gen(10, 5, 10) + wma_wait(5, 200, 10);
+        assert!(w2 > w1);
+        let _ = short;
+    }
+}

@@ -1,0 +1,475 @@
+//! Figure/table harness: regenerates every table and figure of the
+//! paper's evaluation (§IV) into `results/` as CSV + markdown, printing
+//! the same rows/series the paper reports.
+//!
+//! Usage:
+//!   figures all                       # everything (several minutes)
+//!   figures table1|table2|fig2|fig6|fig10|fig11|fig12|fig13|fig14|overhead|eq1
+//!   figures fig10 --rates 1,2,4,8 --requests 600 --train 300
+
+use magnus::config::ServingConfig;
+use magnus::metrics::{to_csv, to_markdown, write_results_file, Summary};
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::sim::{run_policy, Policy};
+use magnus::util::cli::Args;
+use magnus::util::stats::{linear_fit, pearson, rmse};
+use magnus::workload::dataset::{build_predictor_split, build_task_dataset};
+use magnus::workload::{generate_trace, LlmProfile, TaskId, TraceSpec};
+
+fn main() {
+    let args = Args::parse_env(&["help"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all")
+        .to_string();
+    let t0 = std::time::Instant::now();
+    match what.as_str() {
+        "table1" => table1(&args),
+        "table2" => table2(&args),
+        "fig2" => fig2(&args),
+        "fig6" => fig6(&args),
+        "fig10" | "fig11" => fig10_11(&args),
+        "fig12" | "fig13" => fig12_13(&args),
+        "fig14" => fig14(&args),
+        "overhead" => overhead(&args),
+        "eq1" => eq1(&args),
+        "all" => {
+            table1(&args);
+            table2(&args);
+            fig2(&args);
+            fig6(&args);
+            eq1(&args);
+            fig10_11(&args);
+            fig12_13(&args);
+            fig14(&args);
+            overhead(&args);
+        }
+        other => {
+            eprintln!(
+                "unknown target '{other}'; expected one of: all table1 \
+                 table2 fig2 fig6 fig10 fig11 fig12 fig13 fig14 overhead eq1"
+            );
+            std::process::exit(2);
+        }
+    }
+    eprintln!("done in {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+/// Table I: Pearson coefficient between UIL and G per application per LLM.
+fn table1(args: &Args) {
+    let n = args.get_usize("requests", 2000);
+    println!("\n== Table I: Pearson(UIL, G) per application per LLM ==");
+    let apps: Vec<(&str, Vec<TaskId>)> = vec![
+        ("MT", vec![TaskId::MtEnDe, TaskId::MtDeEn]),
+        ("GC", vec![TaskId::Gc]),
+        ("TD", vec![TaskId::Td]),
+        ("CT", vec![TaskId::CtCppPy, TaskId::CtPyCpp]),
+        ("BF", vec![TaskId::Bf]),
+        ("CC", vec![TaskId::Cc]),
+    ];
+    let header: Vec<&str> = std::iter::once("LLM")
+        .chain(apps.iter().map(|(n, _)| *n))
+        .collect();
+    let mut rows = Vec::new();
+    for llm in LlmProfile::ALL {
+        let mut row = vec![llm.name().to_string()];
+        for (_, tasks) in &apps {
+            // Per-task correlation averaged over the app's tasks (the
+            // paper reports one number per app).
+            let mut rs = Vec::new();
+            for (i, t) in tasks.iter().enumerate() {
+                let data = build_task_dataset(*t, llm, n / tasks.len(), 1024,
+                                              42 + i as u64, 0);
+                let uil: Vec<f64> =
+                    data.iter().map(|r| r.user_input_len as f64).collect();
+                let g: Vec<f64> = data.iter().map(|r| r.gen_len as f64).collect();
+                rs.push(pearson(&uil, &g));
+            }
+            row.push(format!("{:.3}", rs.iter().sum::<f64>() / rs.len() as f64));
+        }
+        rows.push(row);
+    }
+    emit("table1", &header, &rows);
+}
+
+/// Table II: RMSE of UILO / RAFT / INST / USIN per LLM profile.
+fn table2(args: &Args) {
+    let n_train = args.get_usize("train", 600);
+    let n_test = args.get_usize("test", 200);
+    println!("\n== Table II: predictor RMSE (train {n_train}/task, test {n_test}/task) ==");
+    let cfg = ServingConfig::default();
+    let header = vec!["LLM", "UILO", "RAFT", "INST", "USIN"];
+    let mut rows = Vec::new();
+    for llm in LlmProfile::ALL {
+        let split = build_predictor_split(llm, n_train, n_test, 1024, 11);
+        let mut row = vec![llm.name().to_string()];
+        for v in Variant::ALL {
+            let mut p = GenLenPredictor::new(v, &cfg);
+            p.train(&split.train);
+            let pred: Vec<f64> =
+                split.test.iter().map(|r| p.predict(r) as f64).collect();
+            let act: Vec<f64> =
+                split.test.iter().map(|r| r.gen_len as f64).collect();
+            row.push(format!("{:.3}", rmse(&pred, &act)));
+        }
+        rows.push(row);
+    }
+    emit("table2", &header, &rows);
+}
+
+/// Fig. 2: UIL-vs-G scatter data + fitted line per application.
+fn fig2(args: &Args) {
+    let n = args.get_usize("requests", 2000);
+    println!("\n== Fig 2: UIL vs G per application (scatter + fit) ==");
+    let mut fit_rows = Vec::new();
+    for task in TaskId::ALL {
+        let data =
+            build_task_dataset(task, LlmProfile::ChatGlm6B, n, 1024, 7, 0);
+        let uil: Vec<f64> = data.iter().map(|r| r.user_input_len as f64).collect();
+        let g: Vec<f64> = data.iter().map(|r| r.gen_len as f64).collect();
+        let (a, b) = linear_fit(&uil, &g);
+        let r = pearson(&uil, &g);
+        fit_rows.push(vec![
+            task.name().to_string(),
+            format!("{a:.3}"),
+            format!("{b:.1}"),
+            format!("{r:.3}"),
+        ]);
+        let rows: Vec<Vec<String>> = data
+            .iter()
+            .map(|d| vec![d.user_input_len.to_string(), d.gen_len.to_string()])
+            .collect();
+        let csv = to_csv(&["uil", "gen_len"], &rows);
+        let path =
+            write_results_file(&format!("fig2_{}.csv", task.name()), &csv).unwrap();
+        eprintln!("wrote {path}");
+    }
+    emit("fig2_fits", &["task", "slope", "intercept", "pearson"], &fit_rows);
+}
+
+/// Fig. 6: the 21-request case study.
+fn fig6(_args: &Args) {
+    use magnus::batch::{AdaptiveBatcher, Batch, BatcherConfig};
+    use magnus::engine::cost::CostModelEngine;
+    use magnus::engine::InferenceEngine;
+    use magnus::workload::{PredictedRequest, Request};
+
+    println!("\n== Fig 6: case study — 18 small + 3 large requests ==");
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+
+    let mk = |id: u64, l: u32, g: u32| PredictedRequest {
+        request: Request {
+            id,
+            task: TaskId::Gc,
+            instruction: String::new(),
+            user_input: String::new(),
+            user_input_len: l,
+            request_len: l,
+            gen_len: g,
+            arrival: 0.0,
+        },
+        predicted_gen_len: g,
+    };
+    // Arrival order of Fig. 6a: 6 small, 1 large, repeated.
+    let mut arrivals = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..3 {
+        for _ in 0..6 {
+            arrivals.push(mk(id, 10, 10));
+            id += 1;
+        }
+        arrivals.push(mk(id, 1000, 1000));
+        id += 1;
+    }
+
+    // Vanilla: 3 FCFS batches of 7.
+    let mut vs_total = 0.0;
+    for chunk in arrivals.chunks(7) {
+        let mut it = chunk.iter().cloned();
+        let mut b = Batch::new(0, it.next().unwrap(), 0.0);
+        b.requests.extend(it);
+        vs_total += match engine.serve_batch(&b) {
+            magnus::engine::BatchOutcome::Completed { serving_time, .. } => serving_time,
+            _ => f64::NAN,
+        };
+    }
+
+    // Magnus: WMA-directed batching (Algorithm 1).
+    let mut batcher = AdaptiveBatcher::new(BatcherConfig {
+        wma_threshold: cfg.wma_threshold,
+        theta: cfg.gpu.theta(),
+        delta: cfg.gpu.delta_bytes_per_token,
+        max_batch_size: 0,
+    });
+    for r in arrivals {
+        batcher.insert(r, 0.0);
+    }
+    let mut magnus_total = 0.0;
+    let mut shapes = Vec::new();
+    while !batcher.is_empty() {
+        let b = batcher.take(0);
+        shapes.push(format!("β={} L={} G={}", b.size(), b.len(), b.true_gen_len()));
+        magnus_total += match engine.serve_batch(&b) {
+            magnus::engine::BatchOutcome::Completed { serving_time, .. } => serving_time,
+            _ => f64::NAN,
+        };
+    }
+
+    let reduction = 100.0 * (1.0 - magnus_total / vs_total);
+    let rows = vec![
+        vec!["VS (3 batches of 7)".into(), format!("{vs_total:.1}"), "242".into()],
+        vec![
+            format!("Magnus ({})", shapes.join(" + ")),
+            format!("{magnus_total:.1}"),
+            "60".into(),
+        ],
+        vec!["reduction %".into(), format!("{reduction:.1}"), "75.2".into()],
+    ];
+    emit("fig6", &["schedule", "total serving time (s)", "paper"], &rows);
+}
+
+/// Eq. 1 sanity table: vanilla β for the default profile.
+fn eq1(_args: &Args) {
+    println!("\n== Eq. (1): vanilla batch size ==");
+    let cfg = ServingConfig::default();
+    let rows = vec![vec![
+        "V100-32GB / ChatGLM-6B".into(),
+        format!("{}", cfg.gpu.theta()),
+        format!("{}", cfg.gpu.vanilla_batch_size()),
+        "7".into(),
+    ]];
+    emit("eq1", &["profile", "theta (bytes)", "beta", "paper beta"], &rows);
+}
+
+fn sweep(
+    args: &Args,
+    policies: &[Policy],
+    name: &str,
+) -> (Vec<&'static str>, Vec<(f64, Vec<Summary>)>) {
+    let rates = args.get_f64_list("rates", &[2.0, 5.0, 10.0, 20.0, 40.0]);
+    let n = args.get_usize("requests", 800);
+    let train = args.get_usize("train", 300);
+    let cfg = ServingConfig::default();
+    let mut out = Vec::new();
+    for &rate in &rates {
+        let trace = generate_trace(&TraceSpec {
+            rate,
+            n_requests: n,
+            seed: 99,
+            ..Default::default()
+        });
+        let summaries: Vec<Summary> = policies
+            .iter()
+            .map(|p| run_policy(&cfg, *p, &trace, train).metrics.summarise())
+            .collect();
+        eprintln!("{name}: rate {rate} done");
+        out.push((rate, summaries));
+    }
+    (policies.iter().map(|p| p.name()).collect(), out)
+}
+
+/// Figs. 10 & 11: token/request-level performance vs arrival rate,
+/// Magnus vs VS / VSQ / CCB.
+fn fig10_11(args: &Args) {
+    println!("\n== Fig 10 & 11: Magnus vs baselines across arrival rates ==");
+    let (names, data) = sweep(args, &Policy::BASELINES, "fig10_11");
+    emit_sweep("fig10a_token_tp", &names, &data, |s| s.token_throughput);
+    emit_sweep("fig10b_valid_token_tp", &names, &data, |s| {
+        s.valid_token_throughput
+    });
+    emit_sweep("fig11a_request_tp", &names, &data, |s| s.request_throughput);
+    emit_sweep("fig11b_mean_rt", &names, &data, |s| s.mean_response_time);
+    emit_sweep("fig11c_p95_rt", &names, &data, |s| s.p95_response_time);
+}
+
+/// Figs. 12 & 13: ablation — VS / GLP / ABP / Magnus.
+fn fig12_13(args: &Args) {
+    println!("\n== Fig 12 & 13: ablation (VS / GLP / ABP / Magnus) ==");
+    let (names, data) = sweep(args, &Policy::ABLATION, "fig12_13");
+    emit_sweep("fig12a_token_tp", &names, &data, |s| s.token_throughput);
+    emit_sweep("fig12b_valid_token_tp", &names, &data, |s| {
+        s.valid_token_throughput
+    });
+    emit_sweep("fig13a_request_tp", &names, &data, |s| s.request_throughput);
+    emit_sweep("fig13b_mean_rt", &names, &data, |s| s.mean_response_time);
+    emit_sweep("fig13c_p95_rt", &names, &data, |s| s.p95_response_time);
+}
+
+/// Fig. 14: time-varying RMSE of the two predictors under continuous
+/// learning.
+fn fig14(args: &Args) {
+    println!("\n== Fig 14: prediction error over time (continuous learning) ==");
+    let n = args.get_usize("requests", 6000);
+    let rate = args.get_f64("rate", 8.0);
+    // Deliberately small initial train set so learning has room to help.
+    let train = args.get_usize("train", 40);
+    let cfg = ServingConfig::default();
+    let trace = generate_trace(&TraceSpec {
+        rate,
+        n_requests: n,
+        seed: 7,
+        ..Default::default()
+    });
+    let out = run_policy(&cfg, Policy::Magnus, &trace, train);
+
+    let window = args.get_f64("window", 60.0);
+    let bucketise = |errors: &[(f64, f64)]| -> Vec<(f64, f64, usize)> {
+        let mut rows = Vec::new();
+        if errors.is_empty() {
+            return rows;
+        }
+        let t_end = errors.iter().map(|e| e.0).fold(0.0, f64::max);
+        let mut t = window;
+        while t <= t_end + window {
+            let in_win: Vec<f64> = errors
+                .iter()
+                .filter(|(at, _)| *at > t - window && *at <= t)
+                .map(|(_, e)| e * e)
+                .collect();
+            if !in_win.is_empty() {
+                let rmse_w =
+                    (in_win.iter().sum::<f64>() / in_win.len() as f64).sqrt();
+                rows.push((t, rmse_w, in_win.len()));
+            }
+            t += window;
+        }
+        rows
+    };
+
+    for (name, errors) in [
+        ("fig14a_genlen_rmse", &out.pred_errors),
+        ("fig14b_servtime_rmse", &out.est_errors),
+    ] {
+        let rows: Vec<Vec<String>> = bucketise(errors)
+            .iter()
+            .map(|(t, e, n)| {
+                vec![format!("{t:.0}"), format!("{e:.3}"), n.to_string()]
+            })
+            .collect();
+        emit(name, &["time_s", "rmse", "n"], &rows);
+    }
+}
+
+/// §IV-D: component overhead (latency per operation) — the bench harnesses
+/// measure these precisely; this target reruns a quick version inline.
+fn overhead(_args: &Args) {
+    use magnus::batch::{AdaptiveBatcher, BatcherConfig};
+    use magnus::estimator::{BatchShape, ServingTimeEstimator};
+    use magnus::scheduler::{select, BatchView};
+    use magnus::workload::PredictedRequest;
+    use std::time::Instant;
+
+    println!("\n== §IV-D: component overhead ==");
+    let cfg = ServingConfig::default();
+
+    // predictor
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 300, 50, 1024, 3);
+    let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+    p.train(&split.train);
+    let t = Instant::now();
+    let reps = 200;
+    for r in split.test.iter().cycle().take(reps) {
+        std::hint::black_box(p.predict(r));
+    }
+    let predict_s = t.elapsed().as_secs_f64() / reps as f64;
+
+    // batcher insert
+    let mut b = AdaptiveBatcher::new(BatcherConfig {
+        wma_threshold: cfg.wma_threshold,
+        theta: cfg.gpu.theta(),
+        delta: cfg.gpu.delta_bytes_per_token,
+        max_batch_size: 0,
+    });
+    let trace = generate_trace(&TraceSpec {
+        rate: 100.0,
+        n_requests: 2000,
+        ..Default::default()
+    });
+    let t = Instant::now();
+    for (i, r) in trace.iter().enumerate() {
+        b.insert(
+            PredictedRequest {
+                request: r.clone(),
+                predicted_gen_len: r.gen_len,
+            },
+            i as f64,
+        );
+    }
+    let batch_s = t.elapsed().as_secs_f64() / trace.len() as f64;
+
+    // estimator
+    let shapes: Vec<BatchShape> = (0..2000)
+        .map(|i| BatchShape {
+            batch_size: 1 + (i % 30) as u32,
+            batch_len: 16 + (i % 900) as u32,
+            batch_gen_len: 8 + (i % 800) as u32,
+        })
+        .collect();
+    let times: Vec<f64> =
+        shapes.iter().map(|s| s.batch_gen_len as f64 * 0.06).collect();
+    let mut est = ServingTimeEstimator::new(cfg.knn_k);
+    est.train(&shapes, &times);
+    let t = Instant::now();
+    for s in shapes.iter().take(500) {
+        std::hint::black_box(est.estimate(s));
+    }
+    let est_s = t.elapsed().as_secs_f64() / 500.0;
+
+    // scheduler select over a 100-batch queue
+    let views: Vec<BatchView> = (0..100)
+        .map(|i| BatchView {
+            queuing_time: i as f64,
+            est_serving_time: 1.0 + i as f64,
+            created_at: i as f64,
+        })
+        .collect();
+    let t = Instant::now();
+    for _ in 0..10_000 {
+        std::hint::black_box(select(cfg.sched, &views));
+    }
+    let sched_s = t.elapsed().as_secs_f64() / 10_000.0;
+
+    let rows = vec![
+        vec!["generation length prediction".into(), fmt_s(predict_s), "<0.03".into()],
+        vec!["batch packaging (insert)".into(), fmt_s(batch_s), "<0.001".into()],
+        vec!["serving time estimation".into(), fmt_s(est_s), "<0.001".into()],
+        vec!["batch scheduling (select)".into(), fmt_s(sched_s), "<0.002".into()],
+    ];
+    emit("overhead", &["component", "measured (s)", "paper bound (s)"], &rows);
+}
+
+fn fmt_s(s: f64) -> String {
+    format!("{s:.6}")
+}
+
+fn emit(name: &str, header: &[&str], rows: &[Vec<String>]) {
+    print!("{}", to_markdown(header, rows));
+    let path =
+        write_results_file(&format!("{name}.csv"), &to_csv(header, rows)).unwrap();
+    eprintln!("wrote {path}");
+}
+
+fn emit_sweep(
+    name: &str,
+    policies: &[&str],
+    data: &[(f64, Vec<Summary>)],
+    metric: impl Fn(&Summary) -> f64,
+) {
+    let mut header = vec!["rate"];
+    header.extend(policies);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|(rate, summaries)| {
+            let mut row = vec![format!("{rate}")];
+            row.extend(summaries.iter().map(|s| format!("{:.3}", metric(s))));
+            row
+        })
+        .collect();
+    emit(name, &header, &rows);
+}

@@ -1,0 +1,443 @@
+//! Configuration system: every knob of the serving stack in one place,
+//! loadable from JSON with CLI overrides, with the paper's §IV settings as
+//! defaults.
+//!
+//! Three layers of config compose a run:
+//! * [`GpuProfile`]   — the accelerator + LLM the cost model emulates
+//!   (defaults describe a 32 GB V100 running ChatGLM-6B, the paper's
+//!   testbed; calibration constants documented inline).
+//! * [`CostModelParams`] — the analytic batch-serving-time model used by
+//!   the simulator engine (calibrated against the paper's Fig. 6 case
+//!   study; see `engine::cost` tests).
+//! * [`ServingConfig`] — Magnus policy knobs (Φ, scheduler, predictor…)
+//!   plus cluster shape.
+
+use crate::util::Json;
+
+/// Scheduling policy for picking the next queued batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// First-come-first-served over batches (creation order).
+    Fcfs,
+    /// Highest response ratio next — the paper's §III-E policy.
+    Hrrn,
+    /// Shortest (estimated) job first — ablation extra.
+    Sjf,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Some(SchedPolicy::Fcfs),
+            "hrrn" => Some(SchedPolicy::Hrrn),
+            "sjf" => Some(SchedPolicy::Sjf),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fcfs => "fcfs",
+            SchedPolicy::Hrrn => "hrrn",
+            SchedPolicy::Sjf => "sjf",
+        }
+    }
+}
+
+/// The accelerator/LLM pair the memory model reasons about (Eq. 1 / Eq. 5).
+///
+/// Defaults describe the paper's testbed: NVIDIA V100 32 GB + ChatGLM-6B
+/// (28 layers, hidden 4096, fp16 KV). `model_resident_bytes` bundles the
+/// fp16 weights (~12.4 GB) with the inference-engine workspace so that
+/// Eq. (1) reproduces the paper's vanilla batch size β = 7 — the paper
+/// states β = 7 but not its workspace accounting, so that constant is the
+/// one calibrated value here.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    /// Total device memory in bytes (V100: 32 GB).
+    pub total_mem: u64,
+    /// Fraction of total memory usable after fragmentation (paper: 0.7).
+    pub mem_fraction: f64,
+    /// Bytes resident for model weights + engine workspace.
+    pub model_resident_bytes: u64,
+    /// Δ of Eq. (5): KV-cache bytes per token
+    /// (2 · n_layers · hidden · bytes_per_el = 2·28·4096·2 for ChatGLM-6B).
+    pub delta_bytes_per_token: u64,
+    /// Preset maximal request length L_max (paper: 1024).
+    pub l_max: u32,
+    /// Preset maximal generation length G_max (paper: 1024).
+    pub g_max: u32,
+}
+
+impl Default for GpuProfile {
+    fn default() -> Self {
+        GpuProfile {
+            total_mem: 32_000_000_000,
+            mem_fraction: 0.7,
+            model_resident_bytes: 15_500_000_000,
+            delta_bytes_per_token: 2 * 28 * 4096 * 2,
+            l_max: 1024,
+            g_max: 1024,
+        }
+    }
+}
+
+impl GpuProfile {
+    /// Θ: bytes available for the KV cache (text above Eq. 1).
+    pub fn theta(&self) -> u64 {
+        let avail = self.mem_fraction * self.total_mem as f64
+            - self.model_resident_bytes as f64;
+        avail.max(0.0) as u64
+    }
+
+    /// Eq. (1): the vanilla fixed batch size β.
+    pub fn vanilla_batch_size(&self) -> u32 {
+        let denom =
+            (self.l_max + self.g_max) as u64 * self.delta_bytes_per_token;
+        if denom == 0 {
+            0
+        } else {
+            (self.theta() / denom) as u32
+        }
+    }
+
+    fn from_json(j: &Json, base: GpuProfile) -> GpuProfile {
+        GpuProfile {
+            total_mem: j.get("total_mem").as_u64().unwrap_or(base.total_mem),
+            mem_fraction: j
+                .get("mem_fraction")
+                .as_f64()
+                .unwrap_or(base.mem_fraction),
+            model_resident_bytes: j
+                .get("model_resident_bytes")
+                .as_u64()
+                .unwrap_or(base.model_resident_bytes),
+            delta_bytes_per_token: j
+                .get("delta_bytes_per_token")
+                .as_u64()
+                .unwrap_or(base.delta_bytes_per_token),
+            l_max: j.get("l_max").as_u64().unwrap_or(base.l_max as u64) as u32,
+            g_max: j.get("g_max").as_u64().unwrap_or(base.g_max as u64) as u32,
+        }
+    }
+}
+
+/// Analytic batch-serving-time model (see `engine::cost`).
+///
+/// One decoding iteration of a batch with β requests and per-request
+/// context `ctx` (padded length + tokens generated so far) costs
+///
+///   t_iter = c0 + c1·β + c2·β·ctx        seconds,
+///
+/// where c0 captures the weight-streaming floor of a 6B model on a V100
+/// under huggingface-transformers (the paper's engine) — decode time is
+/// nearly flat in β until the KV term dominates, which is exactly the
+/// under-utilisation Magnus exploits — c1 a small per-request overhead, and c2 the KV-cache read bandwidth term.
+/// The prefill (initialisation phase) costs c0 + c3·β·L² + c4·β·L.
+/// Constants are calibrated so the Fig. 6 case study reproduces (VS ≈ 242 s,
+/// Magnus ≈ 60 s); see `engine::cost::tests::fig6_calibration`.
+#[derive(Debug, Clone)]
+pub struct CostModelParams {
+    pub c0: f64,
+    pub c1: f64,
+    pub c2: f64,
+    pub c3: f64,
+    pub c4: f64,
+}
+
+impl Default for CostModelParams {
+    fn default() -> Self {
+        CostModelParams {
+            c0: 0.045,
+            c1: 0.0002,
+            c2: 2.4e-6,
+            c3: 1.2e-6,
+            c4: 2.0e-5,
+        }
+    }
+}
+
+impl CostModelParams {
+    fn from_json(j: &Json, base: CostModelParams) -> CostModelParams {
+        CostModelParams {
+            c0: j.get("c0").as_f64().unwrap_or(base.c0),
+            c1: j.get("c1").as_f64().unwrap_or(base.c1),
+            c2: j.get("c2").as_f64().unwrap_or(base.c2),
+            c3: j.get("c3").as_f64().unwrap_or(base.c3),
+            c4: j.get("c4").as_f64().unwrap_or(base.c4),
+        }
+    }
+}
+
+/// VSQ (4-bit quantization) baseline knobs, §IV-A and §IV-B.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// Fixed batch size the paper reports for VSQ.
+    pub batch_size: u32,
+    /// Multiplicative slowdown of each iteration (dequant overhead).
+    pub iter_slowdown: f64,
+    /// Multiplicative inflation of generation lengths (quality degradation
+    /// producing redundant content, §IV-B).
+    pub genlen_inflation: f64,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            batch_size: 10,
+            iter_slowdown: 1.6,
+            genlen_inflation: 1.25,
+        }
+    }
+}
+
+/// Continuous-learning knobs (§III-B, §III-D).
+#[derive(Debug, Clone)]
+pub struct LearningConfig {
+    /// Predictor retrain period (paper: every 3 minutes).
+    pub predictor_period_s: f64,
+    /// Collect a request when |err| > this many tokens…
+    pub predictor_err_tokens: f64,
+    /// …AND > this fraction of the actual generation length.
+    pub predictor_err_frac: f64,
+    /// Estimator retrain period (paper: every 2 minutes).
+    pub estimator_period_s: f64,
+    /// Collect a batch when |err| > this many seconds…
+    pub estimator_err_s: f64,
+    /// …AND > this fraction of the actual serving time.
+    pub estimator_err_frac: f64,
+}
+
+impl Default for LearningConfig {
+    fn default() -> Self {
+        LearningConfig {
+            predictor_period_s: 180.0,
+            predictor_err_tokens: 10.0,
+            predictor_err_frac: 0.10,
+            estimator_period_s: 120.0,
+            estimator_err_s: 2.0,
+            estimator_err_frac: 0.20,
+        }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Number of LLM instances (paper: 7 V100s serving + 1 for LaBSE).
+    pub n_instances: usize,
+    /// WMA threshold Φ of Algorithm 1 (paper: 50 000).
+    pub wma_threshold: f64,
+    /// Batch-scheduling policy (paper: HRRN).
+    pub sched: SchedPolicy,
+    /// Number of parallel generation-length predictors (paper: 3).
+    pub n_predictors: usize,
+    /// Random-forest size for the generation-length predictor.
+    pub rf_trees: usize,
+    /// Max depth of each tree.
+    pub rf_max_depth: usize,
+    /// K for the serving-time KNN estimator.
+    pub knn_k: usize,
+    /// Cap on requests per batch (0 = unlimited / memory-bound only).
+    /// GLP ablation sets this to the vanilla batch size.
+    pub max_batch_size: u32,
+    /// Fraction of Θ the batcher may plan up to (engineering guard: the
+    /// planner works with *predicted* generation lengths, so filling to
+    /// exactly Θ makes every under-prediction an OOM; the engine still
+    /// enforces the full Θ at run time).
+    pub mem_margin: f64,
+    /// Device + model profile.
+    pub gpu: GpuProfile,
+    /// Analytic engine constants.
+    pub cost: CostModelParams,
+    /// VSQ baseline knobs.
+    pub quant: QuantConfig,
+    /// Continuous-learning knobs.
+    pub learning: LearningConfig,
+    /// CCB baseline: extra stall per admitted request on top of its
+    /// initialisation phase (calibrated so CCB's token throughput lands at
+    /// the paper's Fig. 10a ratio vs VS; their implementation pauses every
+    /// running request while a joiner prefills).
+    pub ccb_overhead_s: f64,
+    /// Master seed for all derived RNG streams.
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            n_instances: 7,
+            wma_threshold: 50_000.0,
+            sched: SchedPolicy::Hrrn,
+            n_predictors: 3,
+            rf_trees: 24,
+            rf_max_depth: 20,
+            knn_k: 5,
+            max_batch_size: 0,
+            mem_margin: 0.85,
+            gpu: GpuProfile::default(),
+            cost: CostModelParams::default(),
+            quant: QuantConfig::default(),
+            learning: LearningConfig::default(),
+            ccb_overhead_s: 0.70,
+            seed: 42,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Merge a JSON object over the defaults.
+    pub fn from_json(j: &Json) -> ServingConfig {
+        let base = ServingConfig::default();
+        ServingConfig {
+            n_instances: j
+                .get("n_instances")
+                .as_usize()
+                .unwrap_or(base.n_instances),
+            wma_threshold: j
+                .get("wma_threshold")
+                .as_f64()
+                .unwrap_or(base.wma_threshold),
+            sched: j
+                .get("sched")
+                .as_str()
+                .and_then(SchedPolicy::parse)
+                .unwrap_or(base.sched),
+            n_predictors: j
+                .get("n_predictors")
+                .as_usize()
+                .unwrap_or(base.n_predictors),
+            rf_trees: j.get("rf_trees").as_usize().unwrap_or(base.rf_trees),
+            rf_max_depth: j
+                .get("rf_max_depth")
+                .as_usize()
+                .unwrap_or(base.rf_max_depth),
+            knn_k: j.get("knn_k").as_usize().unwrap_or(base.knn_k),
+            max_batch_size: j
+                .get("max_batch_size")
+                .as_u64()
+                .unwrap_or(base.max_batch_size as u64) as u32,
+            mem_margin: j.get("mem_margin").as_f64().unwrap_or(base.mem_margin),
+            gpu: GpuProfile::from_json(j.get("gpu"), base.gpu),
+            cost: CostModelParams::from_json(j.get("cost"), base.cost),
+            quant: QuantConfig {
+                batch_size: j
+                    .path("quant.batch_size")
+                    .as_u64()
+                    .unwrap_or(base.quant.batch_size as u64)
+                    as u32,
+                iter_slowdown: j
+                    .path("quant.iter_slowdown")
+                    .as_f64()
+                    .unwrap_or(base.quant.iter_slowdown),
+                genlen_inflation: j
+                    .path("quant.genlen_inflation")
+                    .as_f64()
+                    .unwrap_or(base.quant.genlen_inflation),
+            },
+            learning: LearningConfig {
+                predictor_period_s: j
+                    .path("learning.predictor_period_s")
+                    .as_f64()
+                    .unwrap_or(base.learning.predictor_period_s),
+                predictor_err_tokens: j
+                    .path("learning.predictor_err_tokens")
+                    .as_f64()
+                    .unwrap_or(base.learning.predictor_err_tokens),
+                predictor_err_frac: j
+                    .path("learning.predictor_err_frac")
+                    .as_f64()
+                    .unwrap_or(base.learning.predictor_err_frac),
+                estimator_period_s: j
+                    .path("learning.estimator_period_s")
+                    .as_f64()
+                    .unwrap_or(base.learning.estimator_period_s),
+                estimator_err_s: j
+                    .path("learning.estimator_err_s")
+                    .as_f64()
+                    .unwrap_or(base.learning.estimator_err_s),
+                estimator_err_frac: j
+                    .path("learning.estimator_err_frac")
+                    .as_f64()
+                    .unwrap_or(base.learning.estimator_err_frac),
+            },
+            ccb_overhead_s: j
+                .get("ccb_overhead_s")
+                .as_f64()
+                .unwrap_or(base.ccb_overhead_s),
+            seed: j.get("seed").as_u64().unwrap_or(base.seed),
+        }
+    }
+
+    /// Load from a JSON file, or defaults when `path` is None.
+    pub fn load(path: Option<&str>) -> anyhow::Result<ServingConfig> {
+        match path {
+            None => Ok(ServingConfig::default()),
+            Some(p) => {
+                let text = std::fs::read_to_string(p)?;
+                let j = Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+                Ok(ServingConfig::from_json(&j))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_reproduces_paper_beta() {
+        // Eq. (1) with the default V100/ChatGLM-6B profile must yield the
+        // paper's vanilla batch size of 7.
+        let gpu = GpuProfile::default();
+        assert_eq!(gpu.vanilla_batch_size(), 7);
+    }
+
+    #[test]
+    fn theta_positive_and_sane() {
+        let gpu = GpuProfile::default();
+        let theta = gpu.theta();
+        assert!(theta > 5_000_000_000 && theta < 10_000_000_000);
+    }
+
+    #[test]
+    fn vanilla_beta_monotone_in_memory() {
+        let mut gpu = GpuProfile::default();
+        let b0 = gpu.vanilla_batch_size();
+        gpu.total_mem *= 2;
+        assert!(gpu.vanilla_batch_size() > b0);
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let j = Json::parse(
+            r#"{"n_instances": 3, "sched": "fcfs",
+                "gpu": {"l_max": 512}, "quant": {"batch_size": 12},
+                "learning": {"predictor_period_s": 60}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j);
+        assert_eq!(c.n_instances, 3);
+        assert_eq!(c.sched, SchedPolicy::Fcfs);
+        assert_eq!(c.gpu.l_max, 512);
+        assert_eq!(c.quant.batch_size, 12);
+        assert_eq!(c.learning.predictor_period_s, 60.0);
+        // untouched fields keep defaults
+        assert_eq!(c.wma_threshold, 50_000.0);
+    }
+
+    #[test]
+    fn sched_policy_parse() {
+        assert_eq!(SchedPolicy::parse("HRRN"), Some(SchedPolicy::Hrrn));
+        assert_eq!(SchedPolicy::parse("nope"), None);
+        assert_eq!(SchedPolicy::Hrrn.name(), "hrrn");
+    }
+
+    #[test]
+    fn default_wma_threshold_matches_paper() {
+        assert_eq!(ServingConfig::default().wma_threshold, 50_000.0);
+        assert_eq!(ServingConfig::default().n_instances, 7);
+    }
+}

@@ -1,0 +1,175 @@
+//! Sentence embedding + the paper's compression module (§III-B).
+//!
+//! **Substitution note.**  The paper uses LaBSE (a 471 M-parameter BERT) to
+//! embed the instruction (application-level semantics) and the user input
+//! (user-level semantics) into ℝ^768.  Shipping LaBSE is impossible here,
+//! and nothing downstream needs *linguistic* meaning — the random-forest
+//! regressor only needs embeddings that are (a) deterministic, (b)
+//! identical for identical instructions, and (c) close for texts that share
+//! vocabulary (GPTCache-style similarity, which the workload generator's
+//! topic markers realise).  A hashed character-n-gram embedder has exactly
+//! those properties, so it stands in for LaBSE with the same output
+//! dimension d = 768.
+//!
+//! The **compression module** is implemented exactly as the paper
+//! describes: the d-dimensional vector is split evenly into `groups`
+//! groups, each group is summed and divided by √(group size) for numerical
+//! stability — yielding d_app = 4 values for the instruction embedding and
+//! d_user = 16 for the user-input embedding.
+
+/// Embedding dimension (matches LaBSE's 768).
+pub const D: usize = 768;
+/// Paper §III-B: compressed instruction-embedding width.
+pub const D_APP: usize = 4;
+/// Paper §III-B: compressed user-embedding width.
+pub const D_USER: usize = 16;
+
+/// FNV-1a 64-bit — stable, fast string hashing for feature indices.
+#[inline]
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic hashed n-gram sentence embedder (LaBSE stand-in).
+///
+/// Tokenises on whitespace, hashes unigrams and bigrams of words plus
+/// character trigrams into `D` buckets with ±1 signs (feature hashing),
+/// then L2-normalises.  Similar texts share buckets ⇒ nearby vectors.
+#[derive(Debug, Clone, Default)]
+pub struct Embedder;
+
+impl Embedder {
+    pub fn new() -> Self {
+        Embedder
+    }
+
+    /// Embed a text into the unit sphere of ℝ^768.
+    pub fn embed(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0f32; D];
+        let mut add = |key: &[u8], weight: f32| {
+            let h = fnv1a(key);
+            let idx = (h % D as u64) as usize;
+            let sign = if (h >> 32) & 1 == 0 { 1.0 } else { -1.0 };
+            v[idx] += sign * weight;
+        };
+
+        let words: Vec<&str> = text.split_whitespace().collect();
+        for w in &words {
+            add(w.as_bytes(), 1.0);
+        }
+        for pair in words.windows(2) {
+            let key = [pair[0].as_bytes(), b"\x01", pair[1].as_bytes()].concat();
+            add(&key, 0.7);
+        }
+        let bytes = text.as_bytes();
+        for tri in bytes.windows(3) {
+            add(tri, 0.25);
+        }
+
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for x in &mut v {
+                *x /= norm;
+            }
+        }
+        v
+    }
+}
+
+/// The paper's compression module: split `v` evenly into `groups` groups,
+/// sum each group, divide by √(group size).
+pub fn compress(v: &[f32], groups: usize) -> Vec<f32> {
+    assert!(groups > 0 && v.len() % groups == 0, "d must divide evenly");
+    let gsize = v.len() / groups;
+    let scale = 1.0 / (gsize as f32).sqrt();
+    (0..groups)
+        .map(|g| v[g * gsize..(g + 1) * gsize].iter().sum::<f32>() * scale)
+        .collect()
+}
+
+/// Cosine similarity of two embeddings.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskId;
+
+    #[test]
+    fn deterministic_and_unit_norm() {
+        let e = Embedder::new();
+        let a = e.embed("Fix bugs in the following code");
+        let b = e.embed("Fix bugs in the following code");
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn distinct_instructions_are_separable() {
+        let e = Embedder::new();
+        for t1 in TaskId::ALL {
+            for t2 in TaskId::ALL {
+                let s = cosine(
+                    &e.embed(t1.instruction()),
+                    &e.embed(t2.instruction()),
+                );
+                if t1 == t2 {
+                    assert!(s > 0.999);
+                } else {
+                    // near-duplicate instructions (the two CT directions)
+                    // stay below 0.95; all others well below 0.9
+                    assert!(s < 0.95, "{} vs {}: {s}", t1.name(), t2.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn similar_texts_are_closer_than_dissimilar() {
+        let e = Embedder::new();
+        let a = e.embed("finance the market report finance evening news");
+        let b = e.embed("finance market news finance the report");
+        let c = e.embed("int vec push_back return for while auto");
+        assert!(cosine(&a, &b) > cosine(&a, &c));
+    }
+
+    #[test]
+    fn compress_shapes_and_scaling() {
+        let v = vec![1.0f32; D];
+        let c4 = compress(&v, D_APP);
+        let c16 = compress(&v, D_USER);
+        assert_eq!(c4.len(), 4);
+        assert_eq!(c16.len(), 16);
+        // group of 192 ones summed / sqrt(192) = sqrt(192)
+        assert!((c4[0] - (192f32).sqrt()).abs() < 1e-4);
+        assert!((c16[0] - (48f32).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn compress_rejects_uneven_split() {
+        compress(&[1.0; 10], 3);
+    }
+
+    #[test]
+    fn empty_text_embeds_to_zero() {
+        let e = Embedder::new();
+        let v = e.embed("");
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+}

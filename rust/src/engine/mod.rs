@@ -1,0 +1,70 @@
+//! Inference engines: the common interface between the coordinator and
+//! the compute substrate.
+//!
+//! Two implementations:
+//! * [`cost::CostModelEngine`] — analytic serving-time model calibrated to
+//!   the paper's testbed (V100 + ChatGLM-6B under huggingface-
+//!   transformers); drives the discrete-event simulator that regenerates
+//!   the paper's figures at full scale.
+//! * [`pjrt::PjrtEngine`] — real compute: executes the AOT-compiled JAX/
+//!   Pallas artifacts through the PJRT CPU client (prefill + per-iteration
+//!   decode with KV cache round-tripping), used by the end-to-end example.
+//!
+//! [`quantized::QuantizedEngine`] wraps either to model the VSQ baseline.
+
+pub mod cost;
+pub mod pjrt;
+pub mod quantized;
+
+use crate::batch::Batch;
+
+/// Per-request outcome of serving a batch.
+#[derive(Debug, Clone)]
+pub struct ServedRequest {
+    pub request_id: u64,
+    /// Tokens generated before (and incl.) EOS — returned to the user.
+    pub valid_tokens: u32,
+    /// Invalid tokens generated while waiting for batch-mates (§II-D).
+    pub invalid_tokens: u32,
+}
+
+/// Outcome of serving one batch to completion (or OOM).
+#[derive(Debug, Clone)]
+pub enum BatchOutcome {
+    Completed {
+        /// Wall-clock seconds of the batch serving procedure.
+        serving_time: f64,
+        per_request: Vec<ServedRequest>,
+    },
+    /// The KV cache exceeded Θ at `at_iteration`; `wasted_time` elapsed
+    /// before the error (the worker empties memory and reloads, §III-F).
+    Oom {
+        at_iteration: u32,
+        wasted_time: f64,
+    },
+}
+
+impl BatchOutcome {
+    pub fn is_oom(&self) -> bool {
+        matches!(self, BatchOutcome::Oom { .. })
+    }
+}
+
+/// A compute substrate that can serve padded static batches and expose
+/// iteration-level costs (the CCB baseline schedules at iteration
+/// granularity).
+pub trait InferenceEngine: Send + Sync {
+    /// Serve a batch to completion with the §II-D static-batch procedure.
+    fn serve_batch(&self, batch: &Batch) -> BatchOutcome;
+
+    /// Cost of one decoding iteration with `beta` parallel requests at
+    /// (mean) context length `ctx` tokens.
+    fn decode_iter_time(&self, beta: u32, ctx: u32) -> f64;
+
+    /// Cost of the initialisation phase for `beta` requests padded to
+    /// `len` tokens.
+    fn prefill_time(&self, beta: u32, len: u32) -> f64;
+
+    /// Human-readable engine name for logs/metrics.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,167 @@
+//! K-nearest-neighbour regressor (sklearn stand-in, from scratch).
+//!
+//! Distance-weighted KNN over z-score-normalised features.  The serving
+//! time estimator's feature space is tiny (3-d) and its train set is a few
+//! thousand logged batches, so brute-force scan is both simple and faster
+//! than tree indices at this scale (verified in benches/bench_estimator).
+
+/// KNN regression model.
+#[derive(Debug, Clone)]
+pub struct Knn {
+    k: usize,
+    /// Normalised rows.
+    x: Vec<Vec<f32>>,
+    y: Vec<f32>,
+    /// Per-feature (mean, std) used for normalisation.
+    norm: Vec<(f32, f32)>,
+}
+
+impl Knn {
+    /// Fit with `k` neighbours.
+    pub fn fit(x: &[Vec<f32>], y: &[f32], k: usize) -> Knn {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        assert!(k >= 1);
+        let d = x[0].len();
+        let n = x.len() as f32;
+        let mut norm = Vec::with_capacity(d);
+        for j in 0..d {
+            let mean = x.iter().map(|r| r[j]).sum::<f32>() / n;
+            let var = x.iter().map(|r| (r[j] - mean).powi(2)).sum::<f32>() / n;
+            let std = var.sqrt().max(1e-6);
+            norm.push((mean, std));
+        }
+        let xn: Vec<Vec<f32>> = x
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .zip(&norm)
+                    .map(|(v, (m, s))| (v - m) / s)
+                    .collect()
+            })
+            .collect();
+        Knn {
+            k,
+            x: xn,
+            y: y.to_vec(),
+            norm,
+        }
+    }
+
+    fn normalise(&self, row: &[f32]) -> Vec<f32> {
+        row.iter()
+            .zip(&self.norm)
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    /// Distance-weighted mean of the k nearest targets.
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let q = self.normalise(row);
+        // Partial selection of k smallest distances.
+        let mut best: Vec<(f32, usize)> = Vec::with_capacity(self.k + 1);
+        for (i, xr) in self.x.iter().enumerate() {
+            let d2: f32 = xr.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+            if best.len() < self.k {
+                best.push((d2, i));
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            } else if d2 < best[self.k - 1].0 {
+                best[self.k - 1] = (d2, i);
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        }
+        let mut wsum = 0f32;
+        let mut vsum = 0f32;
+        for (d2, i) in &best {
+            let w = 1.0 / (d2.sqrt() + 1e-6);
+            wsum += w;
+            vsum += w * self.y[*i];
+        }
+        vsum / wsum
+    }
+
+    /// Number of stored samples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Append new samples and renormalise (continuous learning refit).
+    pub fn refit_with(&self, extra_x: &[Vec<f32>], extra_y: &[f32]) -> Knn {
+        // Denormalise stored rows back to raw space, then refit fresh.
+        let raw: Vec<Vec<f32>> = self
+            .x
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .zip(&self.norm)
+                    .map(|(v, (m, s))| v * s + m)
+                    .collect()
+            })
+            .collect();
+        let mut all_x = raw;
+        all_x.extend_from_slice(extra_x);
+        let mut all_y = self.y.clone();
+        all_y.extend_from_slice(extra_y);
+        Knn::fit(&all_x, &all_y, self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_on_training_points() {
+        let x = vec![vec![0.0], vec![10.0], vec![20.0]];
+        let y = vec![1.0, 2.0, 3.0];
+        let m = Knn::fit(&x, &y, 1);
+        assert!((m.predict(&[10.0]) - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn interpolates_between_neighbours() {
+        let x = vec![vec![0.0], vec![10.0]];
+        let y = vec![0.0, 10.0];
+        let m = Knn::fit(&x, &y, 2);
+        let p = m.predict(&[5.0]);
+        assert!((p - 5.0).abs() < 0.5, "p={p}");
+    }
+
+    #[test]
+    fn scales_features() {
+        // feature 1 has huge scale but no signal; normalisation must keep
+        // feature 0 informative.
+        let mut rng = Rng::new(1);
+        let x: Vec<Vec<f32>> = (0..200)
+            .map(|i| vec![i as f32, rng.range_f64(0.0, 1e6) as f32])
+            .collect();
+        let y: Vec<f32> = (0..200).map(|i| i as f32).collect();
+        let m = Knn::fit(&x, &y, 3);
+        let p = m.predict(&[100.0, 5e5]);
+        assert!((p - 100.0).abs() < 20.0, "p={p}");
+    }
+
+    #[test]
+    fn refit_with_extends_model() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![0.0, 1.0];
+        let m = Knn::fit(&x, &y, 1);
+        let m2 = m.refit_with(&[vec![100.0]], &[50.0]);
+        assert_eq!(m2.len(), 3);
+        assert!((m2.predict(&[100.0]) - 50.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn k_larger_than_n_is_safe() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![2.0, 4.0];
+        let m = Knn::fit(&x, &y, 10);
+        let p = m.predict(&[0.5]);
+        assert!(p > 2.0 && p < 4.0);
+    }
+}

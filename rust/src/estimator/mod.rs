@@ -1,0 +1,9 @@
+//! Serving-time estimation (paper §III-D): KNN regression on
+//! (batch size, batch length, batch generation length) with continuous
+//! learning, plus the generic KNN regressor it is built on.
+
+pub mod knn;
+pub mod serving_time;
+
+pub use knn::Knn;
+pub use serving_time::{BatchShape, ServingTimeEstimator};

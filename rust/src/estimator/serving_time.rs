@@ -1,0 +1,188 @@
+//! The serving-time estimator (paper §III-D).
+//!
+//! KNN regression from (batch size, batch length, batch generation length)
+//! to batch serving time, trained on logged batch executions and refined by
+//! continuous learning.  At estimation time the *predicted* batch
+//! generation length (max of the batched requests' predicted G') is used —
+//! the ground truth is only available after serving.
+
+use crate::estimator::knn::Knn;
+
+/// The feature triple of §III-D.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchShape {
+    /// β — number of requests in the batch.
+    pub batch_size: u32,
+    /// L(B) — padded prompt length.
+    pub batch_len: u32,
+    /// G(B) — (predicted) batch generation length.
+    pub batch_gen_len: u32,
+}
+
+impl BatchShape {
+    fn row(&self) -> Vec<f32> {
+        vec![
+            self.batch_size as f32,
+            self.batch_len as f32,
+            self.batch_gen_len as f32,
+        ]
+    }
+}
+
+/// Serving-time estimator service.
+pub struct ServingTimeEstimator {
+    knn: Option<Knn>,
+    k: usize,
+    /// Raw training rows retained for full refits.
+    train_x: Vec<Vec<f32>>,
+    train_y: Vec<f32>,
+}
+
+impl ServingTimeEstimator {
+    pub fn new(k: usize) -> Self {
+        ServingTimeEstimator {
+            knn: None,
+            k,
+            train_x: Vec::new(),
+            train_y: Vec::new(),
+        }
+    }
+
+    /// Fit on logged (shape, serving time seconds) pairs.
+    pub fn train(&mut self, shapes: &[BatchShape], times_s: &[f64]) {
+        assert_eq!(shapes.len(), times_s.len());
+        self.train_x = shapes.iter().map(|s| s.row()).collect();
+        self.train_y = times_s.iter().map(|&t| t as f32).collect();
+        if !self.train_x.is_empty() {
+            self.knn = Some(Knn::fit(&self.train_x, &self.train_y, self.k));
+        }
+    }
+
+    /// Continuous learning (§III-D): extend with badly-estimated batches.
+    pub fn augment_and_refit(&mut self, shapes: &[BatchShape], times_s: &[f64]) {
+        assert_eq!(shapes.len(), times_s.len());
+        if shapes.is_empty() {
+            return;
+        }
+        self.train_x.extend(shapes.iter().map(|s| s.row()));
+        self.train_y.extend(times_s.iter().map(|&t| t as f32));
+        self.knn = Some(Knn::fit(&self.train_x, &self.train_y, self.k));
+    }
+
+    /// Estimate the serving time of a queued batch in seconds.
+    ///
+    /// Cold start (no logged batches yet) falls back to a coarse
+    /// G(B)-proportional guess — one decode iteration per generated token
+    /// at a conservative 60 ms — so HRRN degrades gracefully instead of
+    /// dividing by garbage.
+    pub fn estimate(&self, shape: &BatchShape) -> f64 {
+        match &self.knn {
+            Some(m) => m.predict(&shape.row()).max(1e-3) as f64,
+            None => 0.060 * shape.batch_gen_len.max(1) as f64,
+        }
+    }
+
+    pub fn train_size(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.knn.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Synthetic ground truth in the cost-model family:
+    /// t = G·(0.05 + 0.002·β + 2e-6·β·(L+G/2)).
+    fn synth_time(s: &BatchShape) -> f64 {
+        let ctx = s.batch_len as f64 + s.batch_gen_len as f64 / 2.0;
+        s.batch_gen_len as f64
+            * (0.05 + 0.002 * s.batch_size as f64 + 2e-6 * s.batch_size as f64 * ctx)
+    }
+
+    fn synth_data(n: usize, seed: u64) -> (Vec<BatchShape>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let shapes: Vec<BatchShape> = (0..n)
+            .map(|_| BatchShape {
+                batch_size: rng.range_u64(1, 33) as u32,
+                batch_len: rng.range_u64(8, 1025) as u32,
+                batch_gen_len: rng.range_u64(4, 1025) as u32,
+            })
+            .collect();
+        let times = shapes.iter().map(synth_time).collect();
+        (shapes, times)
+    }
+
+    #[test]
+    fn knn_estimates_within_20pct_on_dense_region() {
+        let (shapes, times) = synth_data(4000, 1);
+        let mut est = ServingTimeEstimator::new(5);
+        est.train(&shapes, &times);
+        let (probe, truth) = synth_data(200, 2);
+        let mut ok = 0;
+        for (s, t) in probe.iter().zip(&truth) {
+            let e = est.estimate(s);
+            if (e - t).abs() / t < 0.2 {
+                ok += 1;
+            }
+        }
+        // similar shapes → similar serving time (the paper's premise)
+        assert!(ok >= 160, "only {ok}/200 within 20%");
+    }
+
+    #[test]
+    fn cold_start_is_proportional_to_gen_len() {
+        let est = ServingTimeEstimator::new(5);
+        let a = est.estimate(&BatchShape {
+            batch_size: 4,
+            batch_len: 100,
+            batch_gen_len: 10,
+        });
+        let b = est.estimate(&BatchShape {
+            batch_size: 4,
+            batch_len: 100,
+            batch_gen_len: 100,
+        });
+        assert!(b > a * 5.0);
+    }
+
+    #[test]
+    fn augmentation_improves_new_region() {
+        // Train only on small batches, then augment with large ones.
+        let (shapes, times) = synth_data(500, 3);
+        let small: Vec<(BatchShape, f64)> = shapes
+            .iter()
+            .zip(&times)
+            .filter(|(s, _)| s.batch_size <= 8)
+            .map(|(s, t)| (*s, *t))
+            .collect();
+        let mut est = ServingTimeEstimator::new(5);
+        est.train(
+            &small.iter().map(|x| x.0).collect::<Vec<_>>(),
+            &small.iter().map(|x| x.1).collect::<Vec<_>>(),
+        );
+        let big = BatchShape {
+            batch_size: 30,
+            batch_len: 900,
+            batch_gen_len: 900,
+        };
+        let truth = synth_time(&big);
+        let err_before = (est.estimate(&big) - truth).abs() / truth;
+        let (ex, et) = synth_data(2000, 4);
+        est.augment_and_refit(&ex, &et);
+        let err_after = (est.estimate(&big) - truth).abs() / truth;
+        assert!(err_after < err_before, "{err_after} !< {err_before}");
+    }
+
+    #[test]
+    fn estimate_is_positive() {
+        let (shapes, times) = synth_data(100, 5);
+        let mut est = ServingTimeEstimator::new(3);
+        est.train(&shapes, &times);
+        assert!(est.estimate(&shapes[0]) > 0.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Continuous learning (paper §III-B, §III-D, Fig. 14).
+//!
+//! Periodically sweep the log database for badly-predicted requests /
+//! badly-estimated batches, augment the train sets, and refit.  In the
+//! simulator the sweeps run at sim-time boundaries; in the live server a
+//! background thread calls `tick` with wall time.  Retraining is
+//! asynchronous to prediction in the paper; here `tick` is synchronous but
+//! only runs every period, which preserves the accuracy dynamics Fig. 14
+//! measures (see DESIGN.md).
+
+use crate::config::LearningConfig;
+use crate::estimator::{BatchShape, ServingTimeEstimator};
+use crate::logdb::LogDb;
+use crate::predictor::GenLenPredictor;
+use crate::workload::Request;
+
+/// Sweeps the log DB and retrains the two learned components.
+pub struct ContinuousLearner {
+    cfg: LearningConfig,
+    last_pred_sweep: f64,
+    last_est_sweep: f64,
+    /// Telemetry: (time, #collected) per sweep.
+    pub predictor_sweeps: Vec<(f64, usize)>,
+    pub estimator_sweeps: Vec<(f64, usize)>,
+}
+
+impl ContinuousLearner {
+    pub fn new(cfg: LearningConfig) -> Self {
+        ContinuousLearner {
+            cfg,
+            last_pred_sweep: 0.0,
+            last_est_sweep: 0.0,
+            predictor_sweeps: Vec::new(),
+            estimator_sweeps: Vec::new(),
+        }
+    }
+
+    /// Run any due sweeps at time `now`.
+    pub fn tick(
+        &mut self,
+        now: f64,
+        db: &LogDb,
+        predictor: &mut GenLenPredictor,
+        estimator: &mut ServingTimeEstimator,
+    ) {
+        if now - self.last_pred_sweep >= self.cfg.predictor_period_s {
+            self.sweep_predictor(now, db, predictor);
+        }
+        if now - self.last_est_sweep >= self.cfg.estimator_period_s {
+            self.sweep_estimator(now, db, estimator);
+        }
+    }
+
+    /// §III-B: collect requests with |err| > 10 tokens AND > 10% of the
+    /// actual generation length; augment + refit.
+    fn sweep_predictor(&mut self, now: f64, db: &LogDb, predictor: &mut GenLenPredictor) {
+        let logs = db.requests_between(self.last_pred_sweep, now);
+        self.last_pred_sweep = now;
+        let bad: Vec<Request> = logs
+            .iter()
+            .filter(|l| {
+                let err = (l.predicted_gen_len as f64 - l.actual_gen_len as f64).abs();
+                err > self.cfg.predictor_err_tokens
+                    && err > self.cfg.predictor_err_frac * l.actual_gen_len as f64
+            })
+            .map(|l| l.request.clone())
+            .collect();
+        self.predictor_sweeps.push((now, bad.len()));
+        predictor.augment_and_refit(&bad);
+    }
+
+    /// §III-D: collect batches with |err| > 2 s AND > 20% of the actual
+    /// serving time; augment + refit.  Per the paper the batch is
+    /// "re-predicted with the actual generation length" before the error
+    /// test — the logged shape already carries the actual G(B).
+    fn sweep_estimator(&mut self, now: f64, db: &LogDb, estimator: &mut ServingTimeEstimator) {
+        let logs = db.batches_between(self.last_est_sweep, now);
+        self.last_est_sweep = now;
+        let bad: Vec<(BatchShape, f64)> = logs
+            .iter()
+            .filter(|l| {
+                let repredicted = estimator.estimate(&l.shape);
+                let err = (repredicted - l.actual_time).abs();
+                err > self.cfg.estimator_err_s
+                    && err > self.cfg.estimator_err_frac * l.actual_time
+            })
+            .map(|l| (l.shape, l.actual_time))
+            .collect();
+        self.estimator_sweeps.push((now, bad.len()));
+        if !bad.is_empty() {
+            let shapes: Vec<BatchShape> = bad.iter().map(|b| b.0).collect();
+            let times: Vec<f64> = bad.iter().map(|b| b.1).collect();
+            estimator.augment_and_refit(&shapes, &times);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::logdb::{BatchLog, RequestLog};
+    use crate::predictor::Variant;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::LlmProfile;
+
+    fn learner(pred_period: f64, est_period: f64) -> ContinuousLearner {
+        ContinuousLearner::new(LearningConfig {
+            predictor_period_s: pred_period,
+            estimator_period_s: est_period,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn predictor_sweep_collects_only_bad_predictions() {
+        let cfg = ServingConfig::default();
+        let db = LogDb::new();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 30, 10, 1024, 20);
+        // one bad (err 50 > 10 and > 10%), one good (err 0)
+        db.log_request(RequestLog {
+            request: split.train[0].clone(),
+            predicted_gen_len: split.train[0].gen_len + 50,
+            actual_gen_len: split.train[0].gen_len,
+            at: 100.0,
+        });
+        db.log_request(RequestLog {
+            request: split.train[1].clone(),
+            predicted_gen_len: split.train[1].gen_len,
+            actual_gen_len: split.train[1].gen_len,
+            at: 110.0,
+        });
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let n0 = p.train_size();
+        let mut est = ServingTimeEstimator::new(3);
+        let mut l = learner(180.0, 1e18);
+        l.tick(200.0, &db, &mut p, &mut est);
+        assert_eq!(l.predictor_sweeps.len(), 1);
+        assert_eq!(l.predictor_sweeps[0].1, 1);
+        assert_eq!(p.train_size(), n0 + 1);
+    }
+
+    #[test]
+    fn estimator_sweep_thresholds() {
+        let cfg = ServingConfig::default();
+        let db = LogDb::new();
+        let shape = BatchShape {
+            batch_size: 4,
+            batch_len: 100,
+            batch_gen_len: 100,
+        };
+        // actual 30s vs cold-start estimate 6s → err 24s > 2s and > 20%
+        db.log_batch(BatchLog {
+            shape,
+            estimated_time: 6.0,
+            actual_time: 30.0,
+            at: 50.0,
+        });
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 10, 2, 1024, 21);
+        let mut p = GenLenPredictor::new(Variant::Uilo, &cfg);
+        let mut est = ServingTimeEstimator::new(3);
+        let mut l = learner(1e18, 120.0);
+        l.tick(121.0, &db, &mut p, &mut est);
+        assert_eq!(l.estimator_sweeps.len(), 1);
+        assert_eq!(l.estimator_sweeps[0].1, 1);
+        assert!(est.is_trained());
+        // now the estimator knows this region
+        assert!((est.estimate(&shape) - 30.0).abs() < 1.0);
+        let _ = split;
+    }
+
+    #[test]
+    fn ticks_respect_periods() {
+        let cfg = ServingConfig::default();
+        let db = LogDb::new();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 10, 2, 1024, 22);
+        let mut p = GenLenPredictor::new(Variant::Uilo, &cfg);
+        let mut est = ServingTimeEstimator::new(3);
+        let mut l = learner(180.0, 120.0);
+        for t in [10.0, 50.0, 100.0] {
+            l.tick(t, &db, &mut p, &mut est);
+        }
+        assert_eq!(l.predictor_sweeps.len(), 0);
+        assert_eq!(l.estimator_sweeps.len(), 0);
+        l.tick(185.0, &db, &mut p, &mut est);
+        assert_eq!(l.predictor_sweeps.len(), 1);
+        assert_eq!(l.estimator_sweeps.len(), 1);
+        let _ = split;
+    }
+}

@@ -1,0 +1,42 @@
+//! # Magnus — efficient batch serving for LMaaS via generation length prediction
+//!
+//! Reproduction of Cheng et al., *"Enabling Efficient Batch Serving for
+//! LMaaS via Generation Length Prediction"* (CS.DC 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a generation-
+//!   length predictor (random forest over hashed semantic embeddings), the
+//!   WMA-directed adaptive batcher (Algorithm 1), a KNN serving-time
+//!   estimator, and the HRRN batch scheduler, wired into a multi-instance
+//!   serving cluster with the paper's baselines (VS, VSQ, CCB) and
+//!   ablations (GLP, ABP).
+//! * **Layer 2** — a JAX transformer LM with explicit KV cache
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! * **Layer 1** — Pallas attention kernels (`python/compile/kernels/`)
+//!   called by Layer 2; flash-style decode attention is the serving
+//!   hot spot.
+//!
+//! Python runs once at build time (`make artifacts`); the serving binary is
+//! pure Rust and loads the artifacts through the PJRT C API (`runtime`).
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod batch;
+pub mod config;
+pub mod embedding;
+pub mod engine;
+pub mod estimator;
+pub mod learning;
+pub mod logdb;
+pub mod memory;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,218 @@
+//! In-memory log database (the paper's Redis substitute, §III-F).
+//!
+//! Worker processes append execution logs here; the continuous-learning
+//! loops (§III-B predictor every 3 min, §III-D estimator every 2 min) read
+//! back entries newer than their last sweep.  Thread-safe so the live
+//! server's workers can log concurrently; `snapshot`/`restore` provide the
+//! "persist periodically" behaviour.
+
+use std::sync::Mutex;
+
+use crate::estimator::BatchShape;
+use crate::util::Json;
+use crate::workload::Request;
+
+/// A served request log entry (feeds predictor continuous learning).
+#[derive(Debug, Clone)]
+pub struct RequestLog {
+    pub request: Request,
+    pub predicted_gen_len: u32,
+    pub actual_gen_len: u32,
+    /// Completion (sim or wall) time.
+    pub at: f64,
+}
+
+/// A served batch log entry (feeds estimator continuous learning).
+#[derive(Debug, Clone)]
+pub struct BatchLog {
+    /// Shape with the ACTUAL batch generation length.
+    pub shape: BatchShape,
+    /// What the estimator had predicted before serving.
+    pub estimated_time: f64,
+    pub actual_time: f64,
+    pub at: f64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: Vec<RequestLog>,
+    batches: Vec<BatchLog>,
+}
+
+/// Thread-safe log store.
+#[derive(Debug, Default)]
+pub struct LogDb {
+    inner: Mutex<Inner>,
+}
+
+impl LogDb {
+    pub fn new() -> Self {
+        LogDb::default()
+    }
+
+    pub fn log_request(&self, entry: RequestLog) {
+        self.inner.lock().unwrap().requests.push(entry);
+    }
+
+    pub fn log_batch(&self, entry: BatchLog) {
+        self.inner.lock().unwrap().batches.push(entry);
+    }
+
+    /// Request logs with `at` in (since, until].
+    pub fn requests_between(&self, since: f64, until: f64) -> Vec<RequestLog> {
+        self.inner
+            .lock()
+            .unwrap()
+            .requests
+            .iter()
+            .filter(|r| r.at > since && r.at <= until)
+            .cloned()
+            .collect()
+    }
+
+    /// Batch logs with `at` in (since, until].
+    pub fn batches_between(&self, since: f64, until: f64) -> Vec<BatchLog> {
+        self.inner
+            .lock()
+            .unwrap()
+            .batches
+            .iter()
+            .filter(|b| b.at > since && b.at <= until)
+            .cloned()
+            .collect()
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.inner.lock().unwrap().requests.len()
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.inner.lock().unwrap().batches.len()
+    }
+
+    /// Periodic persistence: serialise batch logs (request text omitted —
+    /// shapes and errors are what retraining needs at restore time).
+    pub fn snapshot(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        Json::obj(vec![(
+            "batches",
+            Json::Arr(
+                inner
+                    .batches
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("beta", Json::num(b.shape.batch_size as f64)),
+                            ("len", Json::num(b.shape.batch_len as f64)),
+                            ("gen", Json::num(b.shape.batch_gen_len as f64)),
+                            ("est", Json::num(b.estimated_time)),
+                            ("act", Json::num(b.actual_time)),
+                            ("at", Json::num(b.at)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn restore(&self, j: &Json) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(arr) = j.get("batches").as_arr() {
+            for item in arr {
+                inner.batches.push(BatchLog {
+                    shape: BatchShape {
+                        batch_size: item.get("beta").as_u64().unwrap_or(1) as u32,
+                        batch_len: item.get("len").as_u64().unwrap_or(1) as u32,
+                        batch_gen_len: item.get("gen").as_u64().unwrap_or(1) as u32,
+                    },
+                    estimated_time: item.get("est").as_f64().unwrap_or(0.0),
+                    actual_time: item.get("act").as_f64().unwrap_or(0.0),
+                    at: item.get("at").as_f64().unwrap_or(0.0),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskId;
+
+    fn rlog(at: f64) -> RequestLog {
+        RequestLog {
+            request: Request {
+                id: 0,
+                task: TaskId::Gc,
+                instruction: String::new(),
+                user_input: String::new(),
+                user_input_len: 5,
+                request_len: 6,
+                gen_len: 7,
+                arrival: 0.0,
+            },
+            predicted_gen_len: 9,
+            actual_gen_len: 7,
+            at,
+        }
+    }
+
+    fn blog(at: f64) -> BatchLog {
+        BatchLog {
+            shape: BatchShape {
+                batch_size: 4,
+                batch_len: 100,
+                batch_gen_len: 50,
+            },
+            estimated_time: 2.0,
+            actual_time: 3.0,
+            at,
+        }
+    }
+
+    #[test]
+    fn window_queries() {
+        let db = LogDb::new();
+        for t in [1.0, 2.0, 3.0, 4.0] {
+            db.log_request(rlog(t));
+            db.log_batch(blog(t));
+        }
+        assert_eq!(db.requests_between(1.0, 3.0).len(), 2); // (1,3] → 2,3
+        assert_eq!(db.batches_between(0.0, 10.0).len(), 4);
+        assert_eq!(db.requests_between(4.0, 9.0).len(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let db = LogDb::new();
+        db.log_batch(blog(1.5));
+        db.log_batch(blog(2.5));
+        let snap = db.snapshot();
+        let db2 = LogDb::new();
+        db2.restore(&Json::parse(&snap.to_string()).unwrap());
+        assert_eq!(db2.n_batches(), 2);
+        let got = db2.batches_between(0.0, 10.0);
+        assert_eq!(got[0].shape.batch_size, 4);
+        assert_eq!(got[1].actual_time, 3.0);
+    }
+
+    #[test]
+    fn concurrent_logging() {
+        use std::sync::Arc;
+        let db = Arc::new(LogDb::new());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let db = db.clone();
+                std::thread::spawn(move || {
+                    for j in 0..100 {
+                        db.log_request(rlog(i as f64 + j as f64));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(db.n_requests(), 800);
+    }
+}

@@ -1,0 +1,169 @@
+//! `magnus` — the serving-system CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   serve      replay a workload through the LIVE cluster (real PJRT
+//!              compute via the AOT artifacts) under a chosen policy
+//!   sim        run a policy over a synthetic workload on the calibrated
+//!              cost-model engine (V100-scale, fast)
+//!   gen-trace  write a workload trace as JSON
+//!   eval-pred  train + evaluate the four predictor variants
+//!
+//! Examples:
+//!   magnus sim --policy magnus --rate 10 --requests 800
+//!   magnus serve --workers 2 --requests 20 --time-scale 20
+//!   magnus gen-trace --rate 5 --requests 1000 --out trace.json
+//!   magnus eval-pred --train 600 --test 200
+
+use magnus::config::ServingConfig;
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::server::{serve_trace, LivePolicy, ServeOptions};
+use magnus::sim::{run_policy, MagnusPolicy, Policy};
+use magnus::util::cli::Args;
+use magnus::util::stats::rmse;
+use magnus::workload::dataset::build_predictor_split;
+use magnus::workload::{generate_trace, trace_from_json, trace_to_json, LlmProfile, TraceSpec};
+
+const USAGE: &str = "magnus <serve|sim|gen-trace|eval-pred> [options]
+  common:    --config <file.json>  --seed N
+  sim:       --policy VS|VSQ|CCB|GLP|ABP|Magnus  --rate R --requests N --train N
+  serve:     --policy magnus|vanilla --workers N --rate R --requests N
+             --time-scale S --g-max N --l-cap N [--trace file.json]
+  gen-trace: --rate R --requests N --out file.json
+  eval-pred: --train N --test N";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["help", "warm-up"]).map_err(anyhow::Error::msg)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let mut cfg = ServingConfig::load(args.get("config"))?;
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed.parse().unwrap_or(cfg.seed);
+    }
+
+    match cmd {
+        "sim" => {
+            let policy = Policy::parse(args.get_or("policy", "Magnus"))
+                .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+            let trace = generate_trace(&TraceSpec {
+                rate: args.get_f64("rate", 10.0),
+                n_requests: args.get_usize("requests", 800),
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            let out = run_policy(&cfg, policy, &trace, args.get_usize("train", 300));
+            let s = out.metrics.summarise();
+            println!(
+                "{}: {} requests | thr {:.3} req/s | mean RT {:.1}s | p95 RT {:.1}s | \
+                 tokens {:.1}/s (valid {:.1}/s) | OOM {}",
+                policy.name(),
+                s.n_requests,
+                s.request_throughput,
+                s.mean_response_time,
+                s.p95_response_time,
+                s.token_throughput,
+                s.valid_token_throughput,
+                s.oom_events
+            );
+        }
+        "serve" => {
+            let g_max = args.get_u64("g-max", 24) as u32;
+            let l_cap = args.get_u64("l-cap", 40) as u32;
+            cfg.gpu.g_max = g_max;
+            let trace = match args.get("trace") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)?;
+                    let j = magnus::util::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    trace_from_json(&j)?
+                }
+                None => generate_trace(&TraceSpec {
+                    rate: args.get_f64("rate", 2.0),
+                    n_requests: args.get_usize("requests", 20),
+                    g_max,
+                    l_cap,
+                    seed: cfg.seed,
+                    ..Default::default()
+                }),
+            };
+            let policy_name = args.get_or("policy", "magnus").to_ascii_lowercase();
+            let (policy, predictor) = match policy_name.as_str() {
+                "vanilla" | "vs" => (
+                    LivePolicy::Vanilla {
+                        fixed_batch: args.get_u64("fixed-batch", 4) as u32,
+                    },
+                    None,
+                ),
+                _ => {
+                    let split =
+                        build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
+                    let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+                    p.train(&split.train);
+                    (LivePolicy::Magnus(MagnusPolicy::magnus()), Some(p))
+                }
+            };
+            let metrics = serve_trace(
+                &cfg,
+                &ServeOptions {
+                    artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+                    n_workers: args.get_usize("workers", 2),
+                    time_scale: args.get_f64("time-scale", 10.0),
+                    warm_up: args.flag("warm-up"),
+                },
+                policy,
+                predictor,
+                &trace,
+            )?;
+            let s = metrics.summarise();
+            println!(
+                "live {}: {} requests | thr {:.3} req/s | mean RT {:.2}s | p95 RT {:.2}s \
+                 (replayed seconds)",
+                policy_name, s.n_requests, s.request_throughput,
+                s.mean_response_time, s.p95_response_time
+            );
+        }
+        "gen-trace" => {
+            let trace = generate_trace(&TraceSpec {
+                rate: args.get_f64("rate", 5.0),
+                n_requests: args.get_usize("requests", 1000),
+                g_max: args.get_u64("g-max", 1024) as u32,
+                l_cap: args.get_u64("l-cap", 0) as u32,
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            let json = trace_to_json(&trace).to_string_pretty();
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, json)?;
+                    println!("wrote {} requests to {path}", trace.len());
+                }
+                None => println!("{json}"),
+            }
+        }
+        "eval-pred" => {
+            let split = build_predictor_split(
+                LlmProfile::ChatGlm6B,
+                args.get_usize("train", 600),
+                args.get_usize("test", 200),
+                cfg.gpu.g_max,
+                cfg.seed,
+            );
+            for v in Variant::ALL {
+                let mut p = GenLenPredictor::new(v, &cfg);
+                p.train(&split.train);
+                let pred: Vec<f64> =
+                    split.test.iter().map(|r| p.predict(r) as f64).collect();
+                let act: Vec<f64> =
+                    split.test.iter().map(|r| r.gen_len as f64).collect();
+                println!("{:5}  RMSE {:.2}", v.name(), rmse(&pred, &act));
+            }
+        }
+        _ => println!("{USAGE}"),
+    }
+    Ok(())
+}

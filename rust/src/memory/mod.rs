@@ -1,0 +1,165 @@
+//! GPU memory model: Θ budgeting, OOM detection with *actual* generation
+//! lengths, and the split-in-two OOM recovery of §III-C.
+//!
+//! The batcher bounds batches with predicted lengths (Eq. 5); predictions
+//! err, so the engine re-checks with ground truth while serving.  An OOM
+//! batch is split evenly into two uninsertable halves that re-enter the
+//! waiting queue — halving β halves the cache bound.
+
+use crate::batch::wma::mem_bytes;
+use crate::batch::Batch;
+use crate::config::GpuProfile;
+
+/// Memory accountant for one LLM instance.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Θ — bytes available for KV cache.
+    pub theta: u64,
+    /// Δ — KV bytes per token.
+    pub delta: u64,
+}
+
+impl MemoryModel {
+    pub fn from_profile(gpu: &GpuProfile) -> Self {
+        MemoryModel {
+            theta: gpu.theta(),
+            delta: gpu.delta_bytes_per_token,
+        }
+    }
+
+    /// Eq. (5) with predicted lengths — what the batcher enforces.
+    pub fn predicted_usage(&self, b: &Batch) -> u64 {
+        mem_bytes(b.size(), b.len(), b.predicted_gen_len(), self.delta)
+    }
+
+    /// Eq. (5) with TRUE generation lengths — what the device experiences.
+    pub fn actual_usage(&self, b: &Batch) -> u64 {
+        mem_bytes(b.size(), b.len(), b.true_gen_len(), self.delta)
+    }
+
+    /// Would serving this batch to completion exceed Θ?
+    pub fn would_oom(&self, b: &Batch) -> bool {
+        self.actual_usage(b) > self.theta
+    }
+
+    /// Peak cache utilisation of a batch in [0, ∞) (×Θ).
+    pub fn utilisation(&self, b: &Batch) -> f64 {
+        self.actual_usage(b) as f64 / self.theta.max(1) as f64
+    }
+
+    /// OOM recovery (§III-C): split into two uninsertable halves.
+    /// Returns the halves; the caller re-queues them.  A singleton batch
+    /// cannot be split — it is returned as-is (and must be served with
+    /// truncation; with G ≤ G_max and β = 1 the default profile can always
+    /// hold one request).
+    pub fn split_on_oom(&self, b: Batch, next_id: u64) -> (Batch, Option<Batch>) {
+        if b.size() <= 1 {
+            return (b, None);
+        }
+        let (l, r) = b.split(next_id);
+        (l, Some(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::workload::{PredictedRequest, Request, TaskId};
+
+    fn req(len: u32, gen: u32, pred: u32) -> PredictedRequest {
+        PredictedRequest {
+            request: Request {
+                id: 0,
+                task: TaskId::Gc,
+                instruction: String::new(),
+                user_input: String::new(),
+                user_input_len: len,
+                request_len: len,
+                gen_len: gen,
+                arrival: 0.0,
+            },
+            predicted_gen_len: pred,
+        }
+    }
+
+    fn mm() -> MemoryModel {
+        MemoryModel {
+            theta: 1_000_000,
+            delta: 100,
+        }
+    }
+
+    #[test]
+    fn usage_uses_right_lengths() {
+        let mut b = Batch::new(0, req(100, 500, 50), 0.0);
+        b.requests.push(req(50, 100, 600));
+        let m = mm();
+        // predicted: β=2, L=100, G'=600 → 2·700·100
+        assert_eq!(m.predicted_usage(&b), 2 * 700 * 100);
+        // actual: G=500 → 2·600·100
+        assert_eq!(m.actual_usage(&b), 2 * 600 * 100);
+    }
+
+    #[test]
+    fn oom_detection_threshold() {
+        let m = mm();
+        let b = Batch::new(0, req(4000, 6001, 1), 0.0); // 1·10001·100 > 1e6
+        assert!(m.would_oom(&b));
+        let ok = Batch::new(0, req(4000, 5999, 1), 0.0);
+        assert!(!m.would_oom(&ok));
+    }
+
+    #[test]
+    fn split_halves_memory_bound() {
+        let m = mm();
+        let mut b = Batch::new(0, req(100, 4951, 1), 0.0);
+        for _ in 0..1 {
+            b.requests.push(req(100, 4951, 1));
+        }
+        assert!(m.would_oom(&b)); // 2·5051·100 > 1e6
+        let (l, r) = m.split_on_oom(b, 1);
+        let r = r.unwrap();
+        assert!(!m.would_oom(&l) && !m.would_oom(&r));
+        assert!(!l.insertable && !r.insertable);
+    }
+
+    #[test]
+    fn singleton_not_split() {
+        let m = mm();
+        let b = Batch::new(0, req(9000, 9000, 1), 0.0);
+        let (same, none) = m.split_on_oom(b, 1);
+        assert!(none.is_none());
+        assert_eq!(same.size(), 1);
+    }
+
+    #[test]
+    fn split_preserves_requests_and_reduces_usage() {
+        prop_check(100, |rng| {
+            let m = MemoryModel {
+                theta: 1_000_000,
+                delta: 100,
+            };
+            let n = rng.range_usize(2, 20);
+            let mut b = Batch::new(
+                0,
+                req(rng.range_u64(1, 1000) as u32, rng.range_u64(1, 1000) as u32, 1),
+                0.0,
+            );
+            for _ in 1..n {
+                b.requests.push(req(
+                    rng.range_u64(1, 1000) as u32,
+                    rng.range_u64(1, 1000) as u32,
+                    1,
+                ));
+            }
+            let before = m.actual_usage(&b);
+            let total = b.size();
+            let (l, r) = m.split_on_oom(b, 1);
+            let r = r.unwrap();
+            assert_eq!(l.size() + r.size(), total);
+            assert!(m.actual_usage(&l) <= before);
+            assert!(m.actual_usage(&r) <= before);
+        });
+    }
+}

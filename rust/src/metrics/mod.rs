@@ -1,0 +1,182 @@
+//! Evaluation metrics (paper §IV-A): request throughput, average and tail
+//! (95%) response time, token throughput and valid-token throughput, plus
+//! CSV/markdown emitters for the figure harness.
+
+use crate::util::stats::{mean, percentile};
+
+/// One completed request's record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub request_id: u64,
+    pub arrival: f64,
+    pub finish: f64,
+    pub valid_tokens: u32,
+    pub invalid_tokens: u32,
+}
+
+impl RequestRecord {
+    pub fn response_time(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// Collector for one serving run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub records: Vec<RequestRecord>,
+    /// Number of OOM events observed.
+    pub oom_events: u32,
+    /// Time of the last completion (run makespan endpoint).
+    pub last_finish: f64,
+    /// Earliest arrival (run start).
+    pub first_arrival: f64,
+}
+
+/// Summary row for one (policy, arrival-rate) cell of the figures.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n_requests: usize,
+    /// Requests per second over the active span.
+    pub request_throughput: f64,
+    /// Mean response time (s) — Fig. 11b.
+    pub mean_response_time: f64,
+    /// 95th-percentile response time (s) — Fig. 11c.
+    pub p95_response_time: f64,
+    /// All generated tokens per second (valid + invalid) — Fig. 10a.
+    pub token_throughput: f64,
+    /// Valid tokens per second — Fig. 10b.
+    pub valid_token_throughput: f64,
+    pub oom_events: u32,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        RunMetrics {
+            records: Vec::new(),
+            oom_events: 0,
+            last_finish: 0.0,
+            first_arrival: f64::INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, r: RequestRecord) {
+        self.first_arrival = self.first_arrival.min(r.arrival);
+        self.last_finish = self.last_finish.max(r.finish);
+        self.records.push(r);
+    }
+
+    pub fn record_oom(&mut self) {
+        self.oom_events += 1;
+    }
+
+    /// Aggregate over the run.  The throughput denominator is the span
+    /// from first arrival to last completion (the paper's request
+    /// throughput under a finite workload).
+    pub fn summarise(&self) -> Summary {
+        let span = (self.last_finish - self.first_arrival).max(1e-9);
+        let rts: Vec<f64> = self.records.iter().map(|r| r.response_time()).collect();
+        let valid: u64 = self.records.iter().map(|r| r.valid_tokens as u64).sum();
+        let total: u64 = self
+            .records
+            .iter()
+            .map(|r| (r.valid_tokens + r.invalid_tokens) as u64)
+            .sum();
+        Summary {
+            n_requests: self.records.len(),
+            request_throughput: self.records.len() as f64 / span,
+            mean_response_time: mean(&rts),
+            p95_response_time: percentile(&rts, 95.0),
+            token_throughput: total as f64 / span,
+            valid_token_throughput: valid as f64 / span,
+            oom_events: self.oom_events,
+        }
+    }
+}
+
+/// Emit rows as CSV with a header.
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = header.join(",");
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    s
+}
+
+/// Emit rows as a GitHub-flavoured markdown table.
+pub fn to_markdown(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = format!("| {} |\n", header.join(" | "));
+    s.push_str(&format!(
+        "|{}\n",
+        header.iter().map(|_| "---|").collect::<String>()
+    ));
+    for row in rows {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+/// Write a result file under `results/` (created if needed).
+pub fn write_results_file(name: &str, contents: &str) -> anyhow::Result<String> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    Ok(path.to_string_lossy().into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, arrival: f64, finish: f64, valid: u32, invalid: u32) -> RequestRecord {
+        RequestRecord {
+            request_id: id,
+            arrival,
+            finish,
+            valid_tokens: valid,
+            invalid_tokens: invalid,
+        }
+    }
+
+    #[test]
+    fn summary_computes_throughputs() {
+        let mut m = RunMetrics::new();
+        m.record(rec(0, 0.0, 5.0, 50, 10));
+        m.record(rec(1, 1.0, 10.0, 30, 0));
+        let s = m.summarise();
+        assert_eq!(s.n_requests, 2);
+        assert!((s.request_throughput - 0.2).abs() < 1e-9);
+        assert!((s.token_throughput - 9.0).abs() < 1e-9);
+        assert!((s.valid_token_throughput - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_times() {
+        let mut m = RunMetrics::new();
+        for i in 0..100 {
+            m.record(rec(i, 0.0, 1.0 + i as f64 * 0.01, 1, 0));
+        }
+        let s = m.summarise();
+        assert!((s.mean_response_time - 1.495).abs() < 1e-6);
+        assert!(s.p95_response_time > 1.9 && s.p95_response_time < 2.0);
+    }
+
+    #[test]
+    fn csv_and_markdown_shapes() {
+        let rows = vec![vec!["1".into(), "2".into()]];
+        let csv = to_csv(&["a", "b"], &rows);
+        assert_eq!(csv, "a,b\n1,2\n");
+        let md = to_markdown(&["a", "b"], &rows);
+        assert!(md.contains("| a | b |") && md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn oom_counted() {
+        let mut m = RunMetrics::new();
+        m.record_oom();
+        m.record_oom();
+        assert_eq!(m.summarise().oom_events, 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Feature pipelines for the four predictor variants of Table II.
+//!
+//! * **UILO** — no features: the user-input length *is* the prediction.
+//! * **RAFT** — one forest per task, feature = [UIL].
+//! * **INST** — single forest, features = [UIL] ++ compress(E(instruction), 4).
+//! * **USIN** — INST features ++ compress(E(user input), 16) — the full
+//!   Magnus predictor (Fig. 8).
+
+use std::collections::HashMap;
+
+use crate::embedding::{compress, Embedder, D_APP, D_USER};
+use crate::workload::Request;
+
+/// Which predictor variant (Table II row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Uilo,
+    Raft,
+    Inst,
+    Usin,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] =
+        [Variant::Uilo, Variant::Raft, Variant::Inst, Variant::Usin];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Uilo => "UILO",
+            Variant::Raft => "RAFT",
+            Variant::Inst => "INST",
+            Variant::Usin => "USIN",
+        }
+    }
+
+    /// Feature dimensionality (0 for UILO which has no regressor).
+    pub fn dim(&self) -> usize {
+        match self {
+            Variant::Uilo => 0,
+            Variant::Raft => 1,
+            Variant::Inst => 1 + D_APP,
+            Variant::Usin => 1 + D_APP + D_USER,
+        }
+    }
+}
+
+/// Feature extractor with an instruction-embedding cache (there are only a
+/// handful of distinct instructions — embedding them once mirrors how the
+/// paper batches LaBSE calls).
+pub struct FeatureExtractor {
+    embedder: Embedder,
+    instr_cache: HashMap<String, Vec<f32>>,
+}
+
+impl Default for FeatureExtractor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FeatureExtractor {
+    pub fn new() -> Self {
+        FeatureExtractor {
+            embedder: Embedder::new(),
+            instr_cache: HashMap::new(),
+        }
+    }
+
+    fn instr_features(&mut self, instruction: &str) -> Vec<f32> {
+        if let Some(v) = self.instr_cache.get(instruction) {
+            return v.clone();
+        }
+        let emb = self.embedder.embed(instruction);
+        let c = compress(&emb, D_APP);
+        self.instr_cache.insert(instruction.to_string(), c.clone());
+        c
+    }
+
+    /// Build the feature row for `variant` (panics for UILO, which has no
+    /// regressor input).
+    pub fn features(&mut self, variant: Variant, req: &Request) -> Vec<f32> {
+        match variant {
+            Variant::Uilo => panic!("UILO has no feature pipeline"),
+            Variant::Raft => vec![req.user_input_len as f32],
+            Variant::Inst => {
+                let mut row = Vec::with_capacity(1 + D_APP);
+                row.push(req.user_input_len as f32);
+                row.extend(self.instr_features(&req.instruction));
+                row
+            }
+            Variant::Usin => {
+                let mut row = Vec::with_capacity(1 + D_APP + D_USER);
+                row.push(req.user_input_len as f32);
+                row.extend(self.instr_features(&req.instruction));
+                let ue = self.embedder.embed(&req.user_input);
+                row.extend(compress(&ue, D_USER));
+                row
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::dataset::build_task_dataset;
+    use crate::workload::{LlmProfile, TaskId};
+
+    fn sample() -> Request {
+        build_task_dataset(TaskId::Bf, LlmProfile::ChatGlm6B, 1, 1024, 1, 0)
+            .pop()
+            .unwrap()
+    }
+
+    #[test]
+    fn dims_match_variant() {
+        let mut fx = FeatureExtractor::new();
+        let r = sample();
+        for v in [Variant::Raft, Variant::Inst, Variant::Usin] {
+            assert_eq!(fx.features(v, &r).len(), v.dim());
+        }
+    }
+
+    #[test]
+    fn first_feature_is_uil() {
+        let mut fx = FeatureExtractor::new();
+        let r = sample();
+        for v in [Variant::Raft, Variant::Inst, Variant::Usin] {
+            assert_eq!(fx.features(v, &r)[0], r.user_input_len as f32);
+        }
+    }
+
+    #[test]
+    fn same_task_shares_instruction_features() {
+        let mut fx = FeatureExtractor::new();
+        let rs = build_task_dataset(TaskId::Gc, LlmProfile::ChatGlm6B, 2, 1024, 2, 0);
+        let a = fx.features(Variant::Inst, &rs[0]);
+        let b = fx.features(Variant::Inst, &rs[1]);
+        assert_eq!(a[1..], b[1..]);
+    }
+
+    #[test]
+    fn different_tasks_differ_in_instruction_features() {
+        let mut fx = FeatureExtractor::new();
+        let a_req = build_task_dataset(TaskId::Gc, LlmProfile::ChatGlm6B, 1, 1024, 3, 0)
+            .pop()
+            .unwrap();
+        let b_req = build_task_dataset(TaskId::Cc, LlmProfile::ChatGlm6B, 1, 1024, 3, 0)
+            .pop()
+            .unwrap();
+        let a = fx.features(Variant::Inst, &a_req);
+        let b = fx.features(Variant::Inst, &b_req);
+        assert_ne!(a[1..], b[1..]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn uilo_has_no_features() {
+        let mut fx = FeatureExtractor::new();
+        fx.features(Variant::Uilo, &sample());
+    }
+}

@@ -1,0 +1,147 @@
+//! Bagged random-forest regressor over [`Tree`] (sklearn stand-in).
+
+use crate::predictor::tree::{Tree, TreeParams};
+use crate::util::Rng;
+
+/// Random-forest hyperparameters.
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Bootstrap sample fraction (1.0 = n samples with replacement).
+    pub bootstrap_frac: f64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 20,
+            tree: TreeParams::default(),
+            bootstrap_frac: 1.0,
+        }
+    }
+}
+
+/// A fitted random forest.
+#[derive(Debug, Clone)]
+pub struct Forest {
+    trees: Vec<Tree>,
+}
+
+impl Forest {
+    /// Fit on rows `x` (n × d), targets `y`.  `mtry = 0` considers ALL
+    /// features at every split — the sklearn convention for regression
+    /// forests (`max_features=1.0`), which matters here because the UIL
+    /// feature dominates and must be splittable at every depth.
+    pub fn fit(x: &[Vec<f32>], y: &[f32], params: &ForestParams, rng: &mut Rng) -> Forest {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let tree_params = params.tree.clone();
+        let n_boot = ((x.len() as f64) * params.bootstrap_frac).round() as usize;
+        let n_boot = n_boot.max(1);
+
+        let trees = (0..params.n_trees)
+            .map(|t| {
+                let mut trng = rng.fork(t as u64);
+                let bx: Vec<Vec<f32>>;
+                let by: Vec<f32>;
+                if params.n_trees == 1 {
+                    // Single tree = plain CART on the full data.
+                    bx = x.to_vec();
+                    by = y.to_vec();
+                } else {
+                    let picks: Vec<usize> = (0..n_boot)
+                        .map(|_| trng.range_usize(0, x.len()))
+                        .collect();
+                    bx = picks.iter().map(|&i| x[i].clone()).collect();
+                    by = picks.iter().map(|&i| y[i]).collect();
+                }
+                Tree::fit(&bx, &by, &tree_params, &mut trng)
+            })
+            .collect();
+        Forest { trees }
+    }
+
+    /// Mean prediction across trees.
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let s: f32 = self.trees.iter().map(|t| t.predict(row)).sum();
+        s / self.trees.len() as f32
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rmse;
+
+    fn noisy_linear(n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f32>> = (0..n)
+            .map(|_| vec![rng.range_f64(0.0, 100.0) as f32])
+            .collect();
+        let y: Vec<f32> = x
+            .iter()
+            .map(|r| 3.0 * r[0] + 10.0 + rng.normal_ms(0.0, 5.0) as f32)
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn forest_beats_or_matches_noise_floor() {
+        let (x, y) = noisy_linear(1000, 1);
+        let (tx, ty) = noisy_linear(200, 2);
+        let mut rng = Rng::new(3);
+        let f = Forest::fit(&x, &y, &ForestParams::default(), &mut rng);
+        let pred: Vec<f64> = tx.iter().map(|r| f.predict(r) as f64).collect();
+        let actual: Vec<f64> = ty.iter().map(|&v| v as f64).collect();
+        let e = rmse(&pred, &actual);
+        // noise sigma is 5; a good fit should be within ~2x of it
+        assert!(e < 12.0, "rmse={e}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = noisy_linear(200, 4);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let f1 = Forest::fit(&x, &y, &ForestParams::default(), &mut r1);
+        let f2 = Forest::fit(&x, &y, &ForestParams::default(), &mut r2);
+        for probe in [0.0f32, 33.3, 99.0] {
+            assert_eq!(f1.predict(&[probe]), f2.predict(&[probe]));
+        }
+    }
+
+    #[test]
+    fn single_tree_mode_uses_full_data() {
+        let (x, y) = noisy_linear(100, 5);
+        let mut rng = Rng::new(6);
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestParams {
+                n_trees: 1,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        assert_eq!(f.n_trees(), 1);
+    }
+
+    #[test]
+    fn multifeature_input_works() {
+        let mut rng = Rng::new(7);
+        let n = 400;
+        let x: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..21).map(|_| rng.f64() as f32).collect())
+            .collect();
+        let y: Vec<f32> = x.iter().map(|r| r[0] * 50.0 + r[20] * 10.0).collect();
+        let f = Forest::fit(&x, &y, &ForestParams::default(), &mut rng);
+        let lo = f.predict(&vec![0.1; 21]);
+        let hi = f.predict(&vec![0.9; 21]);
+        assert!(hi > lo, "hi={hi} lo={lo}");
+    }
+}

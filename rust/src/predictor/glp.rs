@@ -1,0 +1,213 @@
+//! The generation-length predictor service (paper §III-B, Fig. 8).
+//!
+//! Wraps a feature pipeline + random forest(s) behind a simple
+//! `predict(&Request) -> u32` interface, supports the four Table-II
+//! variants, and implements the continuous-learning augmentation loop
+//! (collect badly-predicted requests, extend the train set, refit).
+
+use crate::config::ServingConfig;
+use crate::predictor::features::{FeatureExtractor, Variant};
+use crate::predictor::forest::{Forest, ForestParams};
+use crate::predictor::tree::TreeParams;
+use crate::util::Rng;
+use crate::workload::{Request, TaskId};
+
+/// A trained generation-length predictor.
+pub struct GenLenPredictor {
+    variant: Variant,
+    fx: FeatureExtractor,
+    /// INST/USIN: single forest. RAFT: indexed by task.
+    global: Option<Forest>,
+    per_task: Vec<Option<Forest>>,
+    params: ForestParams,
+    g_max: u32,
+    /// Retained training data for continuous learning.
+    train_x: Vec<Vec<f32>>,
+    train_y: Vec<f32>,
+    train_task: Vec<TaskId>,
+    seed: u64,
+}
+
+impl GenLenPredictor {
+    /// Build (untrained) with hyperparameters from the serving config.
+    pub fn new(variant: Variant, cfg: &ServingConfig) -> Self {
+        GenLenPredictor {
+            variant,
+            fx: FeatureExtractor::new(),
+            global: None,
+            per_task: (0..TaskId::ALL.len()).map(|_| None).collect(),
+            params: ForestParams {
+                n_trees: cfg.rf_trees,
+                tree: TreeParams {
+                    max_depth: cfg.rf_max_depth,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            g_max: cfg.gpu.g_max,
+            train_x: Vec::new(),
+            train_y: Vec::new(),
+            train_task: Vec::new(),
+            seed: cfg.seed,
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Fit on labelled requests (UILO needs no fit and ignores the data).
+    pub fn train(&mut self, data: &[Request]) {
+        if self.variant == Variant::Uilo {
+            return;
+        }
+        self.train_x.clear();
+        self.train_y.clear();
+        self.train_task.clear();
+        for r in data {
+            self.train_x.push(self.fx.features(self.variant, r));
+            self.train_y.push(r.gen_len as f32);
+            self.train_task.push(r.task);
+        }
+        self.refit();
+    }
+
+    /// Continuous learning (§III-B): augment the train set with logged
+    /// requests whose prediction error exceeded the thresholds, refit.
+    pub fn augment_and_refit(&mut self, extra: &[Request]) {
+        if self.variant == Variant::Uilo || extra.is_empty() {
+            return;
+        }
+        for r in extra {
+            self.train_x.push(self.fx.features(self.variant, r));
+            self.train_y.push(r.gen_len as f32);
+            self.train_task.push(r.task);
+        }
+        self.refit();
+    }
+
+    fn refit(&mut self) {
+        let mut rng = Rng::new(self.seed ^ 0x474c_50);
+        match self.variant {
+            Variant::Uilo => {}
+            Variant::Raft => {
+                for (ti, task) in TaskId::ALL.iter().enumerate() {
+                    let idx: Vec<usize> = (0..self.train_x.len())
+                        .filter(|&i| self.train_task[i] == *task)
+                        .collect();
+                    if idx.is_empty() {
+                        self.per_task[ti] = None;
+                        continue;
+                    }
+                    let x: Vec<Vec<f32>> =
+                        idx.iter().map(|&i| self.train_x[i].clone()).collect();
+                    let y: Vec<f32> = idx.iter().map(|&i| self.train_y[i]).collect();
+                    self.per_task[ti] =
+                        Some(Forest::fit(&x, &y, &self.params, &mut rng));
+                }
+            }
+            Variant::Inst | Variant::Usin => {
+                self.global = Some(Forest::fit(
+                    &self.train_x,
+                    &self.train_y,
+                    &self.params,
+                    &mut rng,
+                ));
+            }
+        }
+    }
+
+    /// Predict G'(p), clamped to [1, G_max].
+    pub fn predict(&mut self, req: &Request) -> u32 {
+        let raw = match self.variant {
+            Variant::Uilo => req.user_input_len as f32,
+            Variant::Raft => {
+                let row = self.fx.features(self.variant, req);
+                match &self.per_task[req.task.index()] {
+                    Some(f) => f.predict(&row),
+                    None => req.user_input_len as f32, // cold start
+                }
+            }
+            Variant::Inst | Variant::Usin => {
+                let row = self.fx.features(self.variant, req);
+                match &self.global {
+                    Some(f) => f.predict(&row),
+                    None => req.user_input_len as f32,
+                }
+            }
+        };
+        (raw.round().max(1.0) as u32).min(self.g_max)
+    }
+
+    /// Current training-set size (for continuous-learning telemetry).
+    pub fn train_size(&self) -> usize {
+        self.train_y.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rmse;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::LlmProfile;
+
+    fn eval_rmse(variant: Variant, n_train: usize, n_test: usize) -> f64 {
+        let cfg = ServingConfig::default();
+        let split =
+            build_predictor_split(LlmProfile::ChatGlm6B, n_train, n_test, 1024, 11);
+        let mut p = GenLenPredictor::new(variant, &cfg);
+        p.train(&split.train);
+        let pred: Vec<f64> = split
+            .test
+            .iter()
+            .map(|r| p.predict(r) as f64)
+            .collect();
+        let actual: Vec<f64> =
+            split.test.iter().map(|r| r.gen_len as f64).collect();
+        rmse(&pred, &actual)
+    }
+
+    #[test]
+    fn table2_ordering_uilo_worst_usin_best() {
+        // Table II: UILO >> RAFT ≈ INST > USIN.
+        let uilo = eval_rmse(Variant::Uilo, 300, 80);
+        let raft = eval_rmse(Variant::Raft, 300, 80);
+        let usin = eval_rmse(Variant::Usin, 300, 80);
+        assert!(uilo > raft * 1.2, "uilo={uilo} raft={raft}");
+        assert!(usin <= raft * 1.05, "usin={usin} raft={raft}");
+    }
+
+    #[test]
+    fn predictions_clamped() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 50, 10, 1024, 12);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        for r in &split.test {
+            let g = p.predict(r);
+            assert!(g >= 1 && g <= cfg.gpu.g_max);
+        }
+    }
+
+    #[test]
+    fn cold_start_falls_back_to_uil() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 10, 5, 1024, 13);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        let r = &split.test[0];
+        assert_eq!(p.predict(r), r.user_input_len.clamp(1, cfg.gpu.g_max));
+    }
+
+    #[test]
+    fn augmentation_grows_train_set_and_helps() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 40, 100, 1024, 14);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let before_n = p.train_size();
+        let extra = build_predictor_split(LlmProfile::ChatGlm6B, 150, 1, 1024, 15).train;
+        p.augment_and_refit(&extra);
+        assert!(p.train_size() > before_n);
+    }
+}

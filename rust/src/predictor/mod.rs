@@ -1,0 +1,13 @@
+//! Generation-length prediction (paper §III-B): from-scratch CART +
+//! random forest, the four Table-II feature variants, and the predictor
+//! service with continuous learning.
+
+pub mod features;
+pub mod forest;
+pub mod glp;
+pub mod tree;
+
+pub use features::Variant;
+pub use forest::{Forest, ForestParams};
+pub use glp::GenLenPredictor;
+pub use tree::{Tree, TreeParams};

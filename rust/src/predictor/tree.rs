@@ -1,0 +1,268 @@
+//! CART regression tree — the building block of the random-forest
+//! generation-length predictor (sklearn stand-in, from scratch).
+//!
+//! Standard variance-reduction splitting: at each node, a random subset of
+//! features is scanned; for each candidate feature the samples are sorted
+//! by value and the split that minimises the weighted sum of child
+//! variances is found with prefix sums in O(n log n).
+
+use crate::util::Rng;
+
+/// A fitted regression tree (flattened node array).
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        value: f32,
+    },
+    Split {
+        feature: usize,
+        threshold: f32,
+        /// child indices in `nodes`
+        left: usize,
+        right: usize,
+    },
+}
+
+/// Tree-growing hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Number of features considered per split (0 = all).
+    pub mtry: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 12,
+            min_samples_leaf: 3,
+            mtry: 0,
+        }
+    }
+}
+
+struct Builder<'a> {
+    x: &'a [Vec<f32>],
+    y: &'a [f32],
+    params: &'a TreeParams,
+    nodes: Vec<Node>,
+    rng: Rng,
+}
+
+impl<'a> Builder<'a> {
+    fn leaf(&mut self, idx: &[usize]) -> usize {
+        let mean = idx.iter().map(|&i| self.y[i]).sum::<f32>() / idx.len().max(1) as f32;
+        self.nodes.push(Node::Leaf { value: mean });
+        self.nodes.len() - 1
+    }
+
+    fn grow(&mut self, idx: &mut Vec<usize>, depth: usize) -> usize {
+        let n = idx.len();
+        if depth >= self.params.max_depth || n < 2 * self.params.min_samples_leaf {
+            return self.leaf(idx);
+        }
+        // Early exit on pure nodes.
+        let first = self.y[idx[0]];
+        if idx.iter().all(|&i| (self.y[i] - first).abs() < 1e-9) {
+            return self.leaf(idx);
+        }
+
+        let d = self.x[0].len();
+        let mtry = if self.params.mtry == 0 || self.params.mtry > d {
+            d
+        } else {
+            self.params.mtry
+        };
+        // Sample candidate features without replacement.
+        let mut feats: Vec<usize> = (0..d).collect();
+        self.rng.shuffle(&mut feats);
+        feats.truncate(mtry);
+
+        let total_sum: f64 = idx.iter().map(|&i| self.y[i] as f64).sum();
+        let total_sq: f64 = idx.iter().map(|&i| (self.y[i] as f64).powi(2)).sum();
+        let parent_score = total_sq - total_sum * total_sum / n as f64;
+
+        let mut best: Option<(f64, usize, f32)> = None; // (score, feature, thr)
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        for &f in &feats {
+            order.clear();
+            order.extend_from_slice(idx);
+            order.sort_by(|&a, &b| {
+                self.x[a][f].partial_cmp(&self.x[b][f]).unwrap()
+            });
+            let mut lsum = 0f64;
+            let mut lsq = 0f64;
+            for split_at in 1..n {
+                let yi = self.y[order[split_at - 1]] as f64;
+                lsum += yi;
+                lsq += yi * yi;
+                let xv = self.x[order[split_at - 1]][f];
+                let xn = self.x[order[split_at]][f];
+                if xv == xn {
+                    continue; // can't split between equal values
+                }
+                if split_at < self.params.min_samples_leaf
+                    || n - split_at < self.params.min_samples_leaf
+                {
+                    continue;
+                }
+                let rsum = total_sum - lsum;
+                let rsq = total_sq - lsq;
+                let lscore = lsq - lsum * lsum / split_at as f64;
+                let rscore = rsq - rsum * rsum / (n - split_at) as f64;
+                let score = lscore + rscore;
+                if best.map(|(s, _, _)| score < s).unwrap_or(true) {
+                    best = Some((score, f, (xv + xn) * 0.5));
+                }
+            }
+        }
+
+        match best {
+            Some((score, feature, threshold)) if score < parent_score - 1e-12 => {
+                let (mut left_idx, mut right_idx): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| self.x[i][feature] <= threshold);
+                if left_idx.is_empty() || right_idx.is_empty() {
+                    return self.leaf(idx);
+                }
+                let me = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+                let left = self.grow(&mut left_idx, depth + 1);
+                let right = self.grow(&mut right_idx, depth + 1);
+                self.nodes[me] = Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                };
+                me
+            }
+            _ => self.leaf(idx),
+        }
+    }
+}
+
+impl Tree {
+    /// Fit a tree on rows `x` (n × d) with targets `y` (n).
+    pub fn fit(x: &[Vec<f32>], y: &[f32], params: &TreeParams, rng: &mut Rng) -> Tree {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "cannot fit an empty tree");
+        let mut b = Builder {
+            x,
+            y,
+            params,
+            nodes: Vec::new(),
+            rng: rng.fork(0x7265_6772),
+        };
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        let root = b.grow(&mut idx, 0);
+        debug_assert_eq!(root, 0);
+        Tree { nodes: b.nodes }
+    }
+
+    /// Predict one row.
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    i = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_xy(f: impl Fn(f32) -> f32, n: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let x: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32]).collect();
+        let y: Vec<f32> = (0..n).map(|i| f(i as f32)).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let (x, y) = grid_xy(|v| if v < 50.0 { 1.0 } else { 9.0 }, 100);
+        let mut rng = Rng::new(1);
+        let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
+        assert_eq!(t.predict(&[10.0]), 1.0);
+        assert_eq!(t.predict(&[80.0]), 9.0);
+    }
+
+    #[test]
+    fn approximates_linear_function() {
+        let (x, y) = grid_xy(|v| 2.0 * v + 5.0, 200);
+        let mut rng = Rng::new(2);
+        let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
+        for &probe in &[10.0f32, 100.0, 190.0] {
+            let got = t.predict(&[probe]);
+            let want = 2.0 * probe + 5.0;
+            assert!((got - want).abs() < 20.0, "probe={probe} got={got}");
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (x, y) = grid_xy(|v| v, 512);
+        let mut rng = Rng::new(3);
+        let t = Tree::fit(
+            &x,
+            &y,
+            &TreeParams {
+                max_depth: 3,
+                min_samples_leaf: 1,
+                mtry: 0,
+            },
+            &mut rng,
+        );
+        // depth-3 binary tree has at most 15 nodes
+        assert!(t.n_nodes() <= 15, "n_nodes={}", t.n_nodes());
+    }
+
+    #[test]
+    fn constant_target_yields_single_leaf() {
+        let (x, y) = grid_xy(|_| 4.25, 64);
+        let mut rng = Rng::new(4);
+        let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[7.0]), 4.25);
+    }
+
+    #[test]
+    fn uses_informative_feature_among_noise() {
+        // feature 1 is informative, features 0 and 2 are constant/noise
+        let mut rng = Rng::new(5);
+        let n = 300;
+        let x: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                vec![
+                    0.5,
+                    i as f32,
+                    (rng.f64() as f32) * 0.001,
+                ]
+            })
+            .collect();
+        let y: Vec<f32> = (0..n).map(|i| if i < 150 { 0.0 } else { 10.0 }).collect();
+        let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
+        assert!((t.predict(&[0.5, 10.0, 0.0]) - 0.0).abs() < 1.0);
+        assert!((t.predict(&[0.5, 290.0, 0.0]) - 10.0).abs() < 1.0);
+    }
+}

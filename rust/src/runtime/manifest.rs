@@ -1,0 +1,231 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the Rust runtime (which loads it).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Model architecture as recorded at AOT time.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub l_max: usize,
+    pub kv_bytes_per_token: u64,
+}
+
+/// One serialized parameter tensor in weights.bin.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// A compiled prefill bucket (batch, padded length).
+#[derive(Debug, Clone)]
+pub struct PrefillBucket {
+    pub batch: usize,
+    pub len: usize,
+    pub file: String,
+}
+
+/// A compiled decode bucket (batch).
+#[derive(Debug, Clone)]
+pub struct DecodeBucket {
+    pub batch: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+    pub weights_file: String,
+    pub params: Vec<ParamSpec>,
+    pub prefill: Vec<PrefillBucket>,
+    pub decode: Vec<DecodeBucket>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let m = j.get("model");
+        let need = |k: &str| -> Result<usize> {
+            m.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest: missing model.{k}"))
+        };
+        let model = ModelInfo {
+            vocab: need("vocab")?,
+            d_model: need("d_model")?,
+            n_layers: need("n_layers")?,
+            n_heads: need("n_heads")?,
+            d_head: need("d_head")?,
+            d_ff: need("d_ff")?,
+            l_max: need("l_max")?,
+            kv_bytes_per_token: m
+                .get("kv_bytes_per_token")
+                .as_u64()
+                .ok_or_else(|| anyhow!("manifest: missing kv_bytes_per_token"))?,
+        };
+
+        let params = j
+            .path("weights.params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing weights.params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.get("offset").as_usize().unwrap_or(0),
+                    bytes: p.get("bytes").as_usize().unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let prefill = j
+            .get("prefill")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|b| PrefillBucket {
+                batch: b.get("batch").as_usize().unwrap_or(1),
+                len: b.get("len").as_usize().unwrap_or(16),
+                file: b.get("file").as_str().unwrap_or("").to_string(),
+            })
+            .collect();
+        let decode = j
+            .get("decode")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|b| DecodeBucket {
+                batch: b.get("batch").as_usize().unwrap_or(1),
+                file: b.get("file").as_str().unwrap_or("").to_string(),
+            })
+            .collect();
+
+        Ok(Manifest {
+            model,
+            pad: j.path("specials.pad").as_u64().unwrap_or(0) as u32,
+            bos: j.path("specials.bos").as_u64().unwrap_or(1) as u32,
+            eos: j.path("specials.eos").as_u64().unwrap_or(2) as u32,
+            weights_file: j
+                .path("weights.file")
+                .as_str()
+                .unwrap_or("weights.bin")
+                .to_string(),
+            params,
+            prefill,
+            decode,
+            dir,
+        })
+    }
+
+    /// Read weights.bin as host f32 data.
+    pub fn read_weights(&self) -> Result<Vec<f32>> {
+        let raw = std::fs::read(self.dir.join(&self.weights_file))
+            .with_context(|| format!("reading {}", self.weights_file))?;
+        anyhow::ensure!(raw.len() % 4 == 0, "weights.bin not f32-aligned");
+        let mut out = Vec::with_capacity(raw.len() / 4);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Smallest prefill bucket with batch ≥ `n` and len ≥ `l`, if any.
+    pub fn prefill_bucket(&self, n: usize, l: usize) -> Option<&PrefillBucket> {
+        self.prefill
+            .iter()
+            .filter(|b| b.batch >= n && b.len >= l)
+            .min_by_key(|b| (b.batch, b.len))
+    }
+
+    /// Smallest decode bucket with batch ≥ `n`, if any.
+    pub fn decode_bucket(&self, n: usize) -> Option<&DecodeBucket> {
+        self.decode
+            .iter()
+            .filter(|b| b.batch >= n)
+            .min_by_key(|b| b.batch)
+    }
+
+    /// Max batch any bucket supports.
+    pub fn max_batch(&self) -> usize {
+        self.decode.iter().map(|b| b.batch).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.vocab >= 256 + 3);
+        assert_eq!(m.model.d_head * m.model.n_heads, m.model.d_model);
+        assert!(!m.params.is_empty());
+        assert_eq!(m.params[0].name, "embed");
+        assert!(!m.prefill.is_empty() && !m.decode.is_empty());
+        // weights file matches the param table extent
+        let total: usize = m.params.iter().map(|p| p.bytes).sum();
+        let w = m.read_weights().unwrap();
+        assert_eq!(w.len() * 4, total);
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let b = m.decode_bucket(1).unwrap();
+        assert_eq!(b.batch, m.decode.iter().map(|d| d.batch).min().unwrap());
+        assert!(m.decode_bucket(m.max_batch() + 1).is_none());
+        if let Some(pb) = m.prefill_bucket(1, 1) {
+            assert!(pb.batch >= 1 && pb.len >= 1);
+        }
+    }
+}

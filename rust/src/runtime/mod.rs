@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the build-time
+//! JAX/Pallas compile path and executes them on the PJRT CPU client.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids — see /opt/xla-example/README.md.
+
+pub mod manifest;
+pub mod model;
+
+pub use manifest::Manifest;
+pub use model::{KvCache, ModelRuntime, StepOutput};

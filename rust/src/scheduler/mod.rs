@@ -1,0 +1,126 @@
+//! Batch scheduling policies (paper §III-E).
+//!
+//! When an LLM instance becomes idle the scheduler picks which queued
+//! batch it serves next.  Magnus uses HRRN — highest response ratio
+//! next, ratio = T_q(B) / T_s(B) with T_s estimated by the serving-time
+//! estimator — which trades off queueing time against serving time.
+//! FCFS and SJF are provided for baselines/ablations.
+
+use crate::batch::Batch;
+use crate::config::SchedPolicy;
+
+/// Context the policy needs about one queued batch.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView {
+    /// T_q(B): longest queuing time among the batch's requests (seconds).
+    pub queuing_time: f64,
+    /// T_s(B): estimated serving time (seconds).
+    pub est_serving_time: f64,
+    /// Batch creation order (FCFS key).
+    pub created_at: f64,
+}
+
+/// Pick the index of the batch to serve next; None if `views` is empty.
+pub fn select(policy: SchedPolicy, views: &[BatchView]) -> Option<usize> {
+    if views.is_empty() {
+        return None;
+    }
+    let idx = match policy {
+        SchedPolicy::Fcfs => {
+            // earliest created batch
+            (0..views.len())
+                .min_by(|&a, &b| {
+                    views[a]
+                        .created_at
+                        .partial_cmp(&views[b].created_at)
+                        .unwrap()
+                })
+                .unwrap()
+        }
+        SchedPolicy::Hrrn => {
+            // max T_q / T_s  (§III-E)
+            (0..views.len())
+                .max_by(|&a, &b| {
+                    let ra = views[a].queuing_time / views[a].est_serving_time.max(1e-9);
+                    let rb = views[b].queuing_time / views[b].est_serving_time.max(1e-9);
+                    ra.partial_cmp(&rb).unwrap()
+                })
+                .unwrap()
+        }
+        SchedPolicy::Sjf => (0..views.len())
+            .min_by(|&a, &b| {
+                views[a]
+                    .est_serving_time
+                    .partial_cmp(&views[b].est_serving_time)
+                    .unwrap()
+            })
+            .unwrap(),
+    };
+    Some(idx)
+}
+
+/// Build a `BatchView` for a queued batch at time `now` given an estimate.
+pub fn view_of(batch: &Batch, now: f64, est_serving_time: f64) -> BatchView {
+    BatchView {
+        queuing_time: (now - batch.earliest_arrival()).max(0.0),
+        est_serving_time,
+        created_at: batch.created_at,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(q: f64, s: f64, c: f64) -> BatchView {
+        BatchView {
+            queuing_time: q,
+            est_serving_time: s,
+            created_at: c,
+        }
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        assert_eq!(select(SchedPolicy::Hrrn, &[]), None);
+    }
+
+    #[test]
+    fn fcfs_picks_earliest_created() {
+        let views = [v(5.0, 1.0, 3.0), v(1.0, 1.0, 1.0), v(9.0, 1.0, 2.0)];
+        assert_eq!(select(SchedPolicy::Fcfs, &views), Some(1));
+    }
+
+    #[test]
+    fn hrrn_picks_highest_ratio() {
+        // ratios: 5/10=0.5, 4/1=4, 100/1000=0.1
+        let views = [v(5.0, 10.0, 0.0), v(4.0, 1.0, 0.0), v(100.0, 1000.0, 0.0)];
+        assert_eq!(select(SchedPolicy::Hrrn, &views), Some(1));
+    }
+
+    #[test]
+    fn hrrn_prefers_short_jobs_at_equal_wait() {
+        let views = [v(10.0, 100.0, 0.0), v(10.0, 1.0, 0.0)];
+        assert_eq!(select(SchedPolicy::Hrrn, &views), Some(1));
+    }
+
+    #[test]
+    fn hrrn_eventually_favours_long_waiters() {
+        // long job has waited 1000x longer → ratio wins despite long Ts
+        let views = [v(2.0, 1.0, 0.0), v(5000.0, 1000.0, 0.0)];
+        assert_eq!(select(SchedPolicy::Hrrn, &views), Some(1));
+    }
+
+    #[test]
+    fn sjf_picks_min_serving_time() {
+        let views = [v(1.0, 5.0, 0.0), v(1.0, 2.0, 0.0), v(1.0, 9.0, 0.0)];
+        assert_eq!(select(SchedPolicy::Sjf, &views), Some(1));
+    }
+
+    #[test]
+    fn hrrn_handles_zero_estimate() {
+        let views = [v(1.0, 0.0, 0.0), v(1.0, 1.0, 0.0)];
+        // no panic; zero estimate treated as epsilon → huge ratio
+        assert_eq!(select(SchedPolicy::Hrrn, &views), Some(0));
+    }
+}

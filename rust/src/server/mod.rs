@@ -1,0 +1,429 @@
+//! Live serving cluster: the Fig. 7 workflow over REAL compute.
+//!
+//! A leader thread owns the coordinator state (predictor → WMA batcher →
+//! estimator → scheduler, §III-A) and replays a trace in (scaled) wall
+//! time; N worker threads each own a [`PjrtBatchServer`] (one "LLM
+//! instance" per §III-F worker process — PJRT clients are `!Send`, so each
+//! worker constructs its engine on its own thread) and serve dispatched
+//! batches, reporting completions back over channels.  This mirrors the
+//! discrete-event simulator exactly — same policy objects, different clock
+//! and engine — which is what makes the simulator's figures trustworthy.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
+use crate::config::ServingConfig;
+use crate::engine::pjrt::PjrtBatchServer;
+use crate::engine::BatchOutcome;
+use crate::estimator::{BatchShape, ServingTimeEstimator};
+use crate::logdb::{BatchLog, LogDb, RequestLog};
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::predictor::GenLenPredictor;
+use crate::scheduler::{select, view_of};
+use crate::sim::MagnusPolicy;
+use crate::workload::{PredictedRequest, Request};
+
+/// Live-serving policy.
+pub enum LivePolicy {
+    /// The full pipeline (or a GLP/ABP ablation via `MagnusPolicy`).
+    Magnus(MagnusPolicy),
+    /// Vanilla scheduling with a fixed batch size.
+    Vanilla { fixed_batch: u32 },
+}
+
+/// Options for a live run.
+pub struct ServeOptions {
+    pub artifacts_dir: String,
+    pub n_workers: usize,
+    /// Trace arrival times are divided by this (replay speed-up).
+    pub time_scale: f64,
+    /// Compile all buckets before accepting traffic.
+    pub warm_up: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            artifacts_dir: "artifacts".to_string(),
+            n_workers: 2,
+            time_scale: 10.0,
+            warm_up: false,
+        }
+    }
+}
+
+enum WorkerMsg {
+    Done {
+        worker: usize,
+        batch: Batch,
+        outcome: BatchOutcome,
+    },
+    Failed {
+        worker: usize,
+        error: String,
+    },
+    Ready {
+        #[allow(dead_code)] // diagnostic payload, read in error paths only
+        worker: usize,
+    },
+}
+
+/// Replay `trace` through the live cluster; returns run metrics (times are
+/// in replayed seconds, i.e. wall seconds × time_scale, so they are
+/// comparable with trace arrival timestamps).
+pub fn serve_trace(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    mut predictor: Option<GenLenPredictor>,
+    trace: &[Request],
+) -> Result<RunMetrics> {
+    let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
+    let mut batch_txs: Vec<mpsc::Sender<Batch>> = Vec::new();
+    let mut handles = Vec::new();
+
+    for w in 0..opts.n_workers {
+        let (tx, rx) = mpsc::channel::<Batch>();
+        batch_txs.push(tx);
+        let done = done_tx.clone();
+        let dir = opts.artifacts_dir.clone();
+        let warm = opts.warm_up;
+        handles.push(std::thread::spawn(move || {
+            // Engine constructed on the worker thread (PJRT is !Send).
+            let mut srv = match PjrtBatchServer::load(&dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = done.send(WorkerMsg::Failed {
+                        worker: w,
+                        error: format!("{e:#}"),
+                    });
+                    return;
+                }
+            };
+            if warm {
+                if let Err(e) = srv.warm_up() {
+                    let _ = done.send(WorkerMsg::Failed {
+                        worker: w,
+                        error: format!("{e:#}"),
+                    });
+                    return;
+                }
+            }
+            let _ = done.send(WorkerMsg::Ready { worker: w });
+            while let Ok(batch) = rx.recv() {
+                match srv.serve(&batch) {
+                    Ok(out) => {
+                        let _ = done.send(WorkerMsg::Done {
+                            worker: w,
+                            batch,
+                            outcome: out.outcome,
+                        });
+                    }
+                    Err(e) => {
+                        let _ = done.send(WorkerMsg::Failed {
+                            worker: w,
+                            error: format!("{e:#}"),
+                        });
+                        return;
+                    }
+                }
+            }
+        }));
+    }
+    drop(done_tx);
+
+    // Wait for all workers to come up (artifact load + optional warm-up).
+    let mut ready = 0;
+    while ready < opts.n_workers {
+        match done_rx.recv()? {
+            WorkerMsg::Ready { .. } => ready += 1,
+            WorkerMsg::Failed { worker, error } => {
+                anyhow::bail!("worker {worker} failed to start: {error}")
+            }
+            _ => {}
+        }
+    }
+
+    // Coordinator state.  Artifacts bound the real memory: Θ is the max
+    // bucket's KV bytes, so the planner can never exceed a compiled shape.
+    let probe = PjrtBatchServerProbe::load(&opts.artifacts_dir)?;
+    let (magnus_policy, fixed_batch) = match &policy {
+        LivePolicy::Magnus(p) => (Some(p.clone()), 0),
+        LivePolicy::Vanilla { fixed_batch } => (None, *fixed_batch),
+    };
+    let max_batch = probe.max_batch.min(if let Some(p) = &magnus_policy {
+        if p.max_batch_size > 0 {
+            p.max_batch_size as usize
+        } else {
+            usize::MAX
+        }
+    } else {
+        fixed_batch as usize
+    });
+    let mut batcher = AdaptiveBatcher::new(BatcherConfig {
+        wma_threshold: cfg.wma_threshold,
+        theta: (probe.max_batch as u64) * (probe.l_max as u64) * probe.delta,
+        delta: probe.delta,
+        max_batch_size: max_batch as u32,
+    });
+    let mut fifo: std::collections::VecDeque<usize> = Default::default();
+    let mut estimator = ServingTimeEstimator::new(cfg.knn_k);
+    let db = LogDb::new();
+    let mut metrics = RunMetrics::new();
+    let mut idle: Vec<usize> = (0..opts.n_workers).collect();
+    let mut next_batch_id_vanilla = 1_000_000u64;
+    let mut dispatch_est: std::collections::HashMap<u64, f64> = Default::default();
+
+    let start = Instant::now();
+    let scale = opts.time_scale.max(1e-9);
+    let now_replayed = |start: Instant| start.elapsed().as_secs_f64() * scale;
+
+    let mut next_arrival = 0usize;
+    let mut completed = 0usize;
+
+    while completed < trace.len() {
+        // 1. Admit every request whose (scaled) arrival time has passed.
+        let now = now_replayed(start);
+        while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
+            let req = trace[next_arrival].clone();
+            next_arrival += 1;
+            match (&policy, &mut predictor) {
+                (LivePolicy::Magnus(_), Some(p)) => {
+                    let predicted = p.predict(&req);
+                    batcher.insert(
+                        PredictedRequest {
+                            request: req,
+                            predicted_gen_len: predicted,
+                        },
+                        now,
+                    );
+                }
+                _ => fifo.push_back(next_arrival - 1),
+            }
+        }
+
+        // 2. Dispatch to idle workers.
+        while !idle.is_empty() {
+            let now = now_replayed(start);
+            let batch = match &policy {
+                LivePolicy::Magnus(p) => {
+                    if batcher.is_empty() {
+                        break;
+                    }
+                    let views: Vec<_> = batcher
+                        .queue()
+                        .iter()
+                        .map(|b| {
+                            let est = estimator.estimate(&BatchShape {
+                                batch_size: b.size(),
+                                batch_len: b.len(),
+                                batch_gen_len: b.predicted_gen_len(),
+                            });
+                            view_of(b, now, est)
+                        })
+                        .collect();
+                    let pick = select(p.sched, &views).unwrap();
+                    dispatch_est
+                        .insert(batcher.queue()[pick].id, views[pick].est_serving_time);
+                    batcher.take(pick)
+                }
+                LivePolicy::Vanilla { fixed_batch } => {
+                    if fifo.is_empty() {
+                        break;
+                    }
+                    let take = (*fixed_batch as usize).min(fifo.len());
+                    let mut reqs = Vec::with_capacity(take);
+                    for _ in 0..take {
+                        let i = fifo.pop_front().unwrap();
+                        reqs.push(PredictedRequest {
+                            request: trace[i].clone(),
+                            predicted_gen_len: 0,
+                        });
+                    }
+                    let mut it = reqs.into_iter();
+                    let mut b =
+                        Batch::new(next_batch_id_vanilla, it.next().unwrap(), now);
+                    next_batch_id_vanilla += 1;
+                    b.requests.extend(it);
+                    b
+                }
+            };
+            let w = idle.pop().unwrap();
+            batch_txs[w].send(batch).expect("worker channel closed");
+        }
+
+        // 3. Wait for the next completion or the next arrival deadline.
+        let timeout = if next_arrival < trace.len() {
+            let due = trace[next_arrival].arrival / scale;
+            let elapsed = start.elapsed().as_secs_f64();
+            Duration::from_secs_f64((due - elapsed).max(0.0).min(0.050))
+        } else {
+            Duration::from_millis(50)
+        };
+        match done_rx.recv_timeout(timeout) {
+            Ok(WorkerMsg::Done {
+                worker,
+                batch,
+                outcome,
+            }) => {
+                let now = now_replayed(start);
+                if let BatchOutcome::Completed {
+                    serving_time,
+                    per_request,
+                } = outcome
+                {
+                    completed += per_request.len();
+                    for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                        metrics.record(RequestRecord {
+                            request_id: sr.request_id,
+                            arrival: pr.request.arrival,
+                            finish: now,
+                            valid_tokens: sr.valid_tokens,
+                            invalid_tokens: sr.invalid_tokens,
+                        });
+                        db.log_request(RequestLog {
+                            request: pr.request.clone(),
+                            predicted_gen_len: pr.predicted_gen_len,
+                            actual_gen_len: pr.request.gen_len,
+                            at: now,
+                        });
+                    }
+                    db.log_batch(BatchLog {
+                        shape: BatchShape {
+                            batch_size: batch.size(),
+                            batch_len: batch.len(),
+                            batch_gen_len: batch.true_gen_len(),
+                        },
+                        estimated_time: dispatch_est.remove(&batch.id).unwrap_or(0.0),
+                        // serving_time is wall seconds; scale into replayed
+                        // seconds so HRRN compares like with like.
+                        actual_time: serving_time * scale,
+                        at: now,
+                    });
+                    // Online estimator refresh from real executions.
+                    let logs = db.batches_between(0.0, now);
+                    if logs.len() >= 3 {
+                        let shapes: Vec<BatchShape> =
+                            logs.iter().map(|l| l.shape).collect();
+                        let times: Vec<f64> =
+                            logs.iter().map(|l| l.actual_time).collect();
+                        estimator.train(&shapes, &times);
+                    }
+                }
+                idle.push(worker);
+            }
+            Ok(WorkerMsg::Failed { worker, error }) => {
+                anyhow::bail!("worker {worker} failed: {error}");
+            }
+            Ok(WorkerMsg::Ready { .. }) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("all workers exited early");
+            }
+        }
+    }
+
+    drop(batch_txs);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(metrics)
+}
+
+/// Lightweight manifest probe (avoids holding a PJRT client on the leader).
+struct PjrtBatchServerProbe {
+    max_batch: usize,
+    l_max: usize,
+    delta: u64,
+}
+
+impl PjrtBatchServerProbe {
+    fn load(dir: &str) -> Result<Self> {
+        let m = crate::runtime::Manifest::load(dir)?;
+        Ok(PjrtBatchServerProbe {
+            max_batch: m.max_batch(),
+            l_max: m.model.l_max,
+            delta: m.model.kv_bytes_per_token,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::Variant;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::{generate_trace, LlmProfile, TraceSpec};
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    /// End-to-end: real PJRT compute under the full Magnus pipeline.
+    #[test]
+    fn live_magnus_serves_small_trace() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let mut cfg = ServingConfig::default();
+        cfg.gpu.g_max = 24;
+        let trace = generate_trace(&TraceSpec {
+            rate: 2.0,
+            n_requests: 10,
+            g_max: 24,
+            l_cap: 40,
+            seed: 5,
+            ..Default::default()
+        });
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 40, 5, 24, 6);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let metrics = serve_trace(
+            &cfg,
+            &ServeOptions {
+                n_workers: 1,
+                time_scale: 20.0,
+                ..Default::default()
+            },
+            LivePolicy::Magnus(MagnusPolicy::magnus()),
+            Some(p),
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(metrics.records.len(), 10);
+        assert!(metrics.records.iter().all(|r| r.finish >= r.arrival));
+    }
+
+    #[test]
+    fn live_vanilla_serves_small_trace() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = ServingConfig::default();
+        let trace = generate_trace(&TraceSpec {
+            rate: 3.0,
+            n_requests: 8,
+            g_max: 16,
+            l_cap: 30,
+            seed: 7,
+            ..Default::default()
+        });
+        let metrics = serve_trace(
+            &cfg,
+            &ServeOptions {
+                n_workers: 1,
+                time_scale: 20.0,
+                ..Default::default()
+            },
+            LivePolicy::Vanilla { fixed_batch: 4 },
+            None,
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(metrics.records.len(), 8);
+    }
+}

@@ -1,0 +1,198 @@
+//! Discrete-event simulation of Conservative Continuous Batching (CCB,
+//! paper §IV-A): Orca-style iteration-level scheduling with the number of
+//! parallel-processing requests capped (paper: 7) to avoid OOM.
+//!
+//! Semantics per the paper's implementation notes:
+//! * finished requests leave the running set immediately (no invalid
+//!   tokens are ever generated);
+//! * a newly admitted request stalls the running set while it completes
+//!   its initialisation phase (only that request's first token is
+//!   produced during the stall);
+//! * requests are admitted FCFS whenever a slot is free.
+
+use std::collections::VecDeque;
+
+use crate::config::ServingConfig;
+use crate::engine::InferenceEngine;
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::sim::events::EventQueue;
+use crate::workload::Request;
+
+#[derive(Debug, Clone)]
+struct Running {
+    idx: usize,
+    /// Tokens generated so far.
+    generated: u32,
+    /// Context length = request length + generated.
+    ctx: u32,
+}
+
+enum Event {
+    Arrival(usize),
+    /// One decode iteration of instance `i` completes.
+    Iter(usize),
+}
+
+/// Run CCB with `parallel_limit` concurrent requests per instance.
+pub fn run_ccb(
+    cfg: &ServingConfig,
+    parallel_limit: u32,
+    engine: &dyn InferenceEngine,
+    trace: &[Request],
+) -> RunMetrics {
+    let mut metrics = RunMetrics::new();
+    let mut events: EventQueue<Event> = EventQueue::new();
+    for (i, r) in trace.iter().enumerate() {
+        events.push(r.arrival, Event::Arrival(i));
+    }
+
+    let n_inst = cfg.n_instances;
+    let mut running: Vec<Vec<Running>> = vec![Vec::new(); n_inst];
+    // Instances with an Iter event in flight.
+    let mut busy = vec![false; n_inst];
+    let mut fifo: VecDeque<usize> = VecDeque::new();
+
+    // Admit from the FIFO into instance `inst`; returns the admission
+    // stall time (sum of initialisation phases, run serially).
+    let admit_overhead = cfg.ccb_overhead_s;
+    let admit = |running: &mut Vec<Running>,
+                 fifo: &mut VecDeque<usize>,
+                 engine: &dyn InferenceEngine,
+                 trace: &[Request]|
+     -> f64 {
+        let mut stall = 0.0;
+        while running.len() < parallel_limit as usize && !fifo.is_empty() {
+            let idx = fifo.pop_front().unwrap();
+            let len = trace[idx].request_len;
+            stall += admit_overhead + engine.prefill_time(1, len);
+            running.push(Running {
+                idx,
+                generated: 1, // prefill produces the first token
+                ctx: len + 1,
+            });
+        }
+        stall
+    };
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Arrival(i) => {
+                fifo.push_back(i);
+                // Wake any idle instance.
+                for inst in 0..n_inst {
+                    if !busy[inst] && running[inst].len() < parallel_limit as usize {
+                        let stall = admit(&mut running[inst], &mut fifo, engine, trace);
+                        if !running[inst].is_empty() {
+                            busy[inst] = true;
+                            let beta = running[inst].len() as u32;
+                            let ctx = (running[inst].iter().map(|r| r.ctx as u64).sum::<u64>()
+                                / beta as u64) as u32;
+                            events.push(
+                                now + stall + engine.decode_iter_time(beta, ctx),
+                                Event::Iter(inst),
+                            );
+                        }
+                        break;
+                    }
+                }
+            }
+            Event::Iter(inst) => {
+                // Advance every running request by one token; retire
+                // the finished ones immediately (continuous batching).
+                let mut finished = Vec::new();
+                for r in &mut running[inst] {
+                    r.generated += 1;
+                    r.ctx += 1;
+                    if r.generated >= trace[r.idx].gen_len {
+                        finished.push(r.idx);
+                    }
+                }
+                running[inst].retain(|r| r.generated < trace[r.idx].gen_len);
+                for idx in finished {
+                    metrics.record(RequestRecord {
+                        request_id: trace[idx].id,
+                        arrival: trace[idx].arrival,
+                        finish: now,
+                        valid_tokens: trace[idx].gen_len,
+                        invalid_tokens: 0,
+                    });
+                }
+
+                // Admit newcomers, then run the next iteration.
+                let stall = admit(&mut running[inst], &mut fifo, engine, trace);
+                if running[inst].is_empty() {
+                    busy[inst] = false;
+                } else {
+                    let beta = running[inst].len() as u32;
+                    let ctx = (running[inst].iter().map(|r| r.ctx as u64).sum::<u64>()
+                        / beta as u64) as u32;
+                    events.push(
+                        now + stall + engine.decode_iter_time(beta, ctx),
+                        Event::Iter(inst),
+                    );
+                }
+            }
+        }
+    }
+
+    // Handle single-token requests admitted but finished at admission:
+    // (gen_len == 1 means the prefill token completes them; they are
+    // retired on the first Iter event, so nothing is lost.)
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::CostModelEngine;
+    use crate::workload::{generate_trace, TraceSpec};
+
+    fn setup(n: usize, rate: f64) -> (ServingConfig, CostModelEngine, Vec<Request>) {
+        let cfg = ServingConfig::default();
+        let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+        let trace = generate_trace(&TraceSpec {
+            rate,
+            n_requests: n,
+            ..Default::default()
+        });
+        (cfg, engine, trace)
+    }
+
+    #[test]
+    fn completes_all_requests_with_zero_invalid_tokens() {
+        let (cfg, engine, trace) = setup(150, 2.0);
+        let m = run_ccb(&cfg, 7, &engine, &trace);
+        assert_eq!(m.records.len(), 150);
+        assert!(m.records.iter().all(|r| r.invalid_tokens == 0));
+    }
+
+    #[test]
+    fn valid_token_counts_match_trace() {
+        let (cfg, engine, trace) = setup(80, 2.0);
+        let m = run_ccb(&cfg, 7, &engine, &trace);
+        let total: u64 = m.records.iter().map(|r| r.valid_tokens as u64).sum();
+        let expect: u64 = trace.iter().map(|r| r.gen_len as u64).sum();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn ccb_beats_vs_on_response_time() {
+        // §IV-B: CCB returns finished requests immediately → shorter RT.
+        let (cfg, engine, trace) = setup(250, 3.0);
+        let ccb = run_ccb(&cfg, 7, &engine, &trace).summarise();
+        let vs = crate::sim::vanilla::run_vanilla(&cfg, 7, &engine, &trace).summarise();
+        assert!(
+            ccb.mean_response_time < vs.mean_response_time,
+            "ccb {:.1}s vs vs {:.1}s",
+            ccb.mean_response_time,
+            vs.mean_response_time
+        );
+    }
+
+    #[test]
+    fn respects_parallel_limit_one() {
+        let (cfg, engine, trace) = setup(30, 5.0);
+        let m = run_ccb(&cfg, 1, &engine, &trace);
+        assert_eq!(m.records.len(), 30);
+    }
+}

@@ -1,0 +1,160 @@
+//! Event queue for the discrete-event simulator: a binary min-heap keyed
+//! on (time, sequence) — the sequence number breaks ties deterministically
+//! so runs replay bit-for-bit.
+
+/// Min-heap of timed events.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: Vec<(f64, u64, E)>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, time: f64, event: E) {
+        debug_assert!(time.is_finite(), "event time must be finite");
+        self.heap.push((time, self.seq, event));
+        self.seq += 1;
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let (t, _, e) = self.heap.pop().unwrap();
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        Some((t, e))
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.first().map(|(t, _, _)| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (ta, sa, _) = &self.heap[a];
+        let (tb, sb, _) = &self.heap[b];
+        match ta.partial_cmp(tb).unwrap() {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => sa < sb,
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.less(i, parent) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut smallest = i;
+            if l < self.heap.len() && self.less(l, smallest) {
+                smallest = l;
+            }
+            if r < self.heap.len() && self.less(r, smallest) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        for &t in &[5.0, 1.0, 3.0, 2.0, 4.0] {
+            q.push(t, t as u32);
+        }
+        let mut got = Vec::new();
+        while let Some((t, _)) = q.pop() {
+            got.push(t);
+        }
+        assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "a");
+        q.push(1.0, "b");
+        q.push(1.0, "c");
+        assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.pop().unwrap().1, "b");
+        assert_eq!(q.pop().unwrap().1, "c");
+    }
+
+    #[test]
+    fn heap_property_random() {
+        prop_check(100, |rng| {
+            let mut q = EventQueue::new();
+            let n = rng.range_usize(1, 200);
+            for i in 0..n {
+                q.push(rng.f64() * 100.0, i);
+            }
+            let mut last = f64::NEG_INFINITY;
+            let mut count = 0;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= last);
+                last = t;
+                count += 1;
+            }
+            assert_eq!(count, n);
+        });
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 1);
+        q.push(5.0, 2);
+        assert_eq!(q.pop().unwrap().0, 5.0);
+        q.push(1.0, 3);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 10.0);
+        assert!(q.pop().is_none());
+    }
+}

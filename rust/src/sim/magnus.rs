@@ -1,0 +1,303 @@
+//! Discrete-event simulation of the Magnus pipeline (and its GLP/ABP
+//! ablations): predictor → WMA batcher → serving-time estimator → batch
+//! scheduler → N instances, with OOM-split recovery and continuous
+//! learning — the full Fig. 7 workflow over the cost-model engine.
+
+use std::collections::VecDeque;
+
+use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
+use crate::config::{SchedPolicy, ServingConfig};
+use crate::engine::{BatchOutcome, InferenceEngine};
+use crate::estimator::{BatchShape, ServingTimeEstimator};
+use crate::learning::ContinuousLearner;
+use crate::logdb::{BatchLog, LogDb, RequestLog};
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::predictor::GenLenPredictor;
+use crate::scheduler::{select, view_of};
+use crate::sim::events::EventQueue;
+use crate::workload::{PredictedRequest, Request};
+
+/// Magnus-family policy configuration (full Magnus and its ablations).
+#[derive(Debug, Clone)]
+pub struct MagnusPolicy {
+    /// Cap on batch size (GLP ablation: vanilla β; 0 = adaptive).
+    pub max_batch_size: u32,
+    /// Batch scheduling policy (Magnus: HRRN; GLP/ABP ablations: FCFS).
+    pub sched: SchedPolicy,
+    /// Enable the serving-time estimator + continuous learning.
+    pub use_estimator: bool,
+}
+
+impl MagnusPolicy {
+    pub fn magnus() -> Self {
+        MagnusPolicy {
+            max_batch_size: 0,
+            sched: SchedPolicy::Hrrn,
+            use_estimator: true,
+        }
+    }
+
+    /// GLP = VS + generation-length prediction + WMA batching, fixed β.
+    pub fn glp(vanilla_beta: u32) -> Self {
+        MagnusPolicy {
+            max_batch_size: vanilla_beta,
+            sched: SchedPolicy::Fcfs,
+            use_estimator: false,
+        }
+    }
+
+    /// ABP = GLP without the batch-size cap (adaptive batching).
+    pub fn abp() -> Self {
+        MagnusPolicy {
+            max_batch_size: 0,
+            sched: SchedPolicy::Fcfs,
+            use_estimator: false,
+        }
+    }
+}
+
+enum Event {
+    Arrival(usize),
+    /// Instance finished serving a batch.
+    BatchDone(usize, Batch, BatchOutcome),
+    /// Instance recovered from an OOM reload.
+    InstanceReady(usize),
+}
+
+/// Post-OOM reload penalty (empty GPU memory + reload LLM, §III-F).
+const OOM_RELOAD_S: f64 = 20.0;
+
+/// Result of a simulated run.
+pub struct SimOutput {
+    pub metrics: RunMetrics,
+    pub db: LogDb,
+    /// (time, |predicted − actual|) per served request — Fig. 14a input.
+    pub pred_errors: Vec<(f64, f64)>,
+    /// (time, |estimated − actual|) per served batch — Fig. 14b input.
+    pub est_errors: Vec<(f64, f64)>,
+}
+
+/// Run the Magnus-family pipeline over `trace` on `engine`.
+///
+/// The predictor must already be trained (the paper trains on a held-out
+/// 2 500-request split before serving, §IV-A).
+pub fn run_magnus(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
+    mut predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    trace: &[Request],
+) -> SimOutput {
+    let mut batcher = AdaptiveBatcher::new(BatcherConfig {
+        wma_threshold: cfg.wma_threshold,
+        theta: (cfg.gpu.theta() as f64 * cfg.mem_margin) as u64,
+        delta: cfg.gpu.delta_bytes_per_token,
+        max_batch_size: policy.max_batch_size,
+    });
+    let mut estimator = ServingTimeEstimator::new(cfg.knn_k);
+    let mut learner = ContinuousLearner::new(cfg.learning.clone());
+    let db = LogDb::new();
+    let mut metrics = RunMetrics::new();
+    let mut pred_errors = Vec::new();
+    let mut est_errors = Vec::new();
+
+    let mut events: EventQueue<Event> = EventQueue::new();
+    for (i, r) in trace.iter().enumerate() {
+        events.push(r.arrival, Event::Arrival(i));
+    }
+
+    let mut idle: VecDeque<usize> = (0..cfg.n_instances).collect();
+    // Estimates captured at dispatch time, keyed by batch id (for logging).
+    let mut dispatch_est: std::collections::HashMap<u64, f64> =
+        std::collections::HashMap::new();
+
+    let mut served = 0usize;
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Arrival(i) => {
+                let req = trace[i].clone();
+                let predicted = predictor.predict(&req);
+                // Fig. 14a telemetry: error of the prediction *as made*,
+                // binned by prediction time (completion-time binning would
+                // confound scheduler ordering with predictor quality).
+                pred_errors
+                    .push((now, (predicted as f64 - req.gen_len as f64).abs()));
+                batcher.insert(
+                    PredictedRequest {
+                        request: req,
+                        predicted_gen_len: predicted,
+                    },
+                    now,
+                );
+            }
+            Event::BatchDone(inst, batch, outcome) => {
+                match outcome {
+                    BatchOutcome::Completed {
+                        serving_time,
+                        per_request,
+                    } => {
+                        served += per_request.len();
+                        for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                            metrics.record(RequestRecord {
+                                request_id: sr.request_id,
+                                arrival: pr.request.arrival,
+                                finish: now,
+                                valid_tokens: sr.valid_tokens,
+                                invalid_tokens: sr.invalid_tokens,
+                            });
+                            db.log_request(RequestLog {
+                                request: pr.request.clone(),
+                                predicted_gen_len: pr.predicted_gen_len,
+                                actual_gen_len: pr.request.gen_len,
+                                at: now,
+                            });
+                        }
+                        let est = dispatch_est.remove(&batch.id).unwrap_or(0.0);
+                        est_errors.push((now, (est - serving_time).abs()));
+                        db.log_batch(BatchLog {
+                            shape: BatchShape {
+                                batch_size: batch.size(),
+                                batch_len: batch.len(),
+                                batch_gen_len: batch.true_gen_len(),
+                            },
+                            estimated_time: est,
+                            actual_time: serving_time,
+                            at: now,
+                        });
+                    }
+                    BatchOutcome::Oom { .. } => {
+                        // handled at dispatch; unreachable here
+                        unreachable!("OOM resolved at dispatch")
+                    }
+                }
+                if policy.use_estimator {
+                    learner.tick(now, &db, &mut predictor, &mut estimator);
+                }
+                idle.push_back(inst);
+            }
+            Event::InstanceReady(inst) => {
+                idle.push_back(inst);
+            }
+        }
+
+        // Dispatch while instances are idle and batches are queued.
+        while !idle.is_empty() && !batcher.is_empty() {
+            let views: Vec<_> = batcher
+                .queue()
+                .iter()
+                .map(|b| {
+                    let est = estimator.estimate(&BatchShape {
+                        batch_size: b.size(),
+                        batch_len: b.len(),
+                        batch_gen_len: b.predicted_gen_len(),
+                    });
+                    view_of(b, now, est)
+                })
+                .collect();
+            let pick = select(policy.sched, &views).unwrap();
+            let est = views[pick].est_serving_time;
+            let batch = batcher.take(pick);
+            let inst = idle.pop_front().unwrap();
+
+            match engine.serve_batch(&batch) {
+                BatchOutcome::Oom {
+                    at_iteration: _,
+                    wasted_time,
+                } => {
+                    // §III-C: split evenly, mark uninsertable, re-queue.
+                    metrics.record_oom();
+                    let nid = batcher.alloc_id();
+                    let (l, r) = batch.split(nid);
+                    batcher.requeue(l);
+                    batcher.requeue(r);
+                    events.push(
+                        now + wasted_time + OOM_RELOAD_S,
+                        Event::InstanceReady(inst),
+                    );
+                }
+                done @ BatchOutcome::Completed { .. } => {
+                    let serving_time = match &done {
+                        BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                        _ => unreachable!(),
+                    };
+                    dispatch_est.insert(batch.id, est);
+                    events.push(now + serving_time, Event::BatchDone(inst, batch, done));
+                }
+            }
+        }
+    }
+
+    debug_assert_eq!(served, trace.len(), "all requests must complete");
+    SimOutput {
+        metrics,
+        db,
+        pred_errors,
+        est_errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::CostModelEngine;
+    use crate::predictor::Variant;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::{generate_trace, LlmProfile, TraceSpec};
+
+    fn setup(n: usize, rate: f64) -> (ServingConfig, GenLenPredictor, CostModelEngine, Vec<Request>) {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 150, 10, 1024, 30);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+        let trace = generate_trace(&TraceSpec {
+            rate,
+            n_requests: n,
+            ..Default::default()
+        });
+        (cfg, p, engine, trace)
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let (cfg, p, engine, trace) = setup(300, 2.0);
+        let out = run_magnus(&cfg, &MagnusPolicy::magnus(), p, &engine, &trace);
+        assert_eq!(out.metrics.records.len(), 300);
+        // every record finishes after it arrives
+        assert!(out
+            .metrics
+            .records
+            .iter()
+            .all(|r| r.finish >= r.arrival));
+    }
+
+    #[test]
+    fn magnus_beats_glp_beats_nothing_on_throughput() {
+        let (cfg, p, engine, trace) = setup(400, 8.0);
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 150, 10, 1024, 30);
+        let mut p2 = GenLenPredictor::new(Variant::Usin, &cfg);
+        p2.train(&split.train);
+
+        let magnus = run_magnus(&cfg, &MagnusPolicy::magnus(), p, &engine, &trace)
+            .metrics
+            .summarise();
+        let glp = run_magnus(&cfg, &MagnusPolicy::glp(7), p2, &engine, &trace)
+            .metrics
+            .summarise();
+        assert!(
+            magnus.request_throughput >= glp.request_throughput * 0.95,
+            "magnus {:.3} vs glp {:.3}",
+            magnus.request_throughput,
+            glp.request_throughput
+        );
+    }
+
+    #[test]
+    fn logdb_populated() {
+        let (cfg, p, engine, trace) = setup(100, 2.0);
+        let out = run_magnus(&cfg, &MagnusPolicy::magnus(), p, &engine, &trace);
+        assert_eq!(out.db.n_requests(), 100);
+        assert!(out.db.n_batches() > 0);
+        assert_eq!(out.pred_errors.len(), 100);
+    }
+}

@@ -1,0 +1,167 @@
+//! Discrete-event simulation of the VS / VSQ baselines (paper §IV-A):
+//! FCFS request queue, fixed batch size, no prediction.  VSQ is VS over
+//! the quantized engine with its larger fixed batch size.
+
+use std::collections::VecDeque;
+
+use crate::batch::Batch;
+use crate::config::ServingConfig;
+use crate::engine::{BatchOutcome, InferenceEngine};
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::sim::events::EventQueue;
+use crate::workload::{PredictedRequest, Request};
+
+enum Event {
+    Arrival(usize),
+    BatchDone(usize, Batch, f64, Vec<crate::engine::ServedRequest>),
+    InstanceReady(usize),
+}
+
+const OOM_RELOAD_S: f64 = 20.0;
+
+/// Run vanilla scheduling with `fixed_batch` requests per batch.
+///
+/// When an instance is idle and the queue is non-empty, the earliest
+/// min(queue, fixed_batch) requests form a batch (production servers
+/// flush partial batches on a timeout; an idle instance here flushes
+/// immediately, which is the zero-timeout limit).
+pub fn run_vanilla(
+    cfg: &ServingConfig,
+    fixed_batch: u32,
+    engine: &dyn InferenceEngine,
+    trace: &[Request],
+) -> RunMetrics {
+    let mut metrics = RunMetrics::new();
+    let mut events: EventQueue<Event> = EventQueue::new();
+    for (i, r) in trace.iter().enumerate() {
+        events.push(r.arrival, Event::Arrival(i));
+    }
+
+    let mut fifo: VecDeque<usize> = VecDeque::new();
+    let mut idle: VecDeque<usize> = (0..cfg.n_instances).collect();
+    let mut next_batch_id = 0u64;
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Arrival(i) => fifo.push_back(i),
+            Event::BatchDone(inst, batch, _t, per_request) => {
+                for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                    metrics.record(RequestRecord {
+                        request_id: sr.request_id,
+                        arrival: pr.request.arrival,
+                        finish: now,
+                        valid_tokens: sr.valid_tokens,
+                        invalid_tokens: sr.invalid_tokens,
+                    });
+                }
+                idle.push_back(inst);
+            }
+            Event::InstanceReady(inst) => idle.push_back(inst),
+        }
+
+        while !idle.is_empty() && !fifo.is_empty() {
+            let take = (fixed_batch as usize).min(fifo.len());
+            let mut reqs = Vec::with_capacity(take);
+            for _ in 0..take {
+                let i = fifo.pop_front().unwrap();
+                reqs.push(PredictedRequest {
+                    request: trace[i].clone(),
+                    // vanilla scheduling has no prediction; the field is
+                    // unused on this path.
+                    predicted_gen_len: 0,
+                });
+            }
+            let mut it = reqs.into_iter();
+            let mut batch = Batch::new(next_batch_id, it.next().unwrap(), now);
+            next_batch_id += 1;
+            batch.requests.extend(it);
+
+            let inst = idle.pop_front().unwrap();
+            match engine.serve_batch(&batch) {
+                BatchOutcome::Completed {
+                    serving_time,
+                    per_request,
+                } => {
+                    events.push(
+                        now + serving_time,
+                        Event::BatchDone(inst, batch, serving_time, per_request),
+                    );
+                }
+                BatchOutcome::Oom { wasted_time, .. } => {
+                    // Eq. (1) guarantees the fixed batch fits under L_max /
+                    // G_max, so this only fires with mis-configured β.
+                    // Halve and push the requests back to the queue head.
+                    metrics.record_oom();
+                    let n = batch.requests.len();
+                    for pr in batch.requests.into_iter().rev().take(n / 2) {
+                        fifo.push_front(pr.request.id as usize);
+                    }
+                    events.push(now + wasted_time + OOM_RELOAD_S, Event::InstanceReady(inst));
+                }
+            }
+        }
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::CostModelEngine;
+    use crate::engine::quantized::QuantizedEngine;
+    use crate::workload::{generate_trace, TraceSpec};
+
+    fn setup(n: usize, rate: f64) -> (ServingConfig, CostModelEngine, Vec<Request>) {
+        let cfg = ServingConfig::default();
+        let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+        let trace = generate_trace(&TraceSpec {
+            rate,
+            n_requests: n,
+            ..Default::default()
+        });
+        (cfg, engine, trace)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let (cfg, engine, trace) = setup(200, 2.0);
+        let m = run_vanilla(&cfg, 7, &engine, &trace);
+        assert_eq!(m.records.len(), 200);
+        assert_eq!(m.oom_events, 0, "Eq.1 batch must not OOM");
+    }
+
+    #[test]
+    fn batch_sizes_respect_fixed_limit() {
+        // With a huge batch size limit everything still completes.
+        let (cfg, engine, trace) = setup(50, 5.0);
+        let m = run_vanilla(&cfg, 1, &engine, &trace);
+        assert_eq!(m.records.len(), 50);
+    }
+
+    #[test]
+    fn vsq_slower_than_vs() {
+        let (cfg, engine, trace) = setup(200, 3.0);
+        let vs = run_vanilla(&cfg, 7, &engine, &trace).summarise();
+        let qengine = QuantizedEngine::new(
+            CostModelEngine::new(cfg.cost.clone(), &cfg.gpu),
+            cfg.quant.clone(),
+        );
+        let vsq = run_vanilla(&cfg, cfg.quant.batch_size, &qengine, &trace).summarise();
+        // §IV-B: VSQ has larger batches but lower request throughput and
+        // longer response times.
+        assert!(
+            vsq.mean_response_time > vs.mean_response_time,
+            "vsq {:.1}s vs vs {:.1}s",
+            vsq.mean_response_time,
+            vs.mean_response_time
+        );
+    }
+
+    #[test]
+    fn invalid_tokens_exist_under_mixed_lengths() {
+        let (cfg, engine, trace) = setup(100, 3.0);
+        let m = run_vanilla(&cfg, 7, &engine, &trace);
+        let invalid: u64 = m.records.iter().map(|r| r.invalid_tokens as u64).sum();
+        assert!(invalid > 0, "FCFS mixing must produce request waiting");
+    }
+}

@@ -1,0 +1,125 @@
+//! Byte-level tokenizer shared with the AOT compile path.
+//!
+//! The served LM has a 512-entry vocabulary: ids 0..NUM_SPECIALS are the
+//! specials (PAD, BOS, EOS — the same ids `python/compile/aot.py` writes to
+//! the manifest), 3..259 are raw bytes, and the rest are reserved (they give
+//! the model a little headroom and keep the vocab a power of two).
+//!
+//! This is deliberately NOT a learned BPE: the reproduction's serving
+//! results depend on *token counts*, not linguistic segmentation, and a
+//! byte tokenizer makes request length == byte length + specials, which the
+//! synthetic workload generators control exactly.
+
+/// Padding token id (masked out of attention).
+pub const PAD: u32 = 0;
+/// Beginning-of-sequence token id.
+pub const BOS: u32 = 1;
+/// End-of-sequence token id — generation stops when the model emits it.
+pub const EOS: u32 = 2;
+/// First byte token id.
+pub const BYTE_BASE: u32 = 3;
+/// Vocabulary size (kept in sync with `ModelConfig.vocab` on the JAX side).
+pub const VOCAB: u32 = 512;
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    /// Encode text to token ids, prefixed with BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| BYTE_BASE + b as u32));
+        out
+    }
+
+    /// Encode without the BOS prefix (for concatenating segments).
+    pub fn encode_raw(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| BYTE_BASE + b as u32).collect()
+    }
+
+    /// Decode ids back to text.  Specials and reserved ids are skipped;
+    /// invalid UTF-8 is replaced (the tiny random-weight model emits
+    /// arbitrary bytes).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter_map(|&id| {
+                if (BYTE_BASE..BYTE_BASE + 256).contains(&id) {
+                    Some((id - BYTE_BASE) as u8)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Token count of a text including the BOS prefix.
+    pub fn token_len(&self, text: &str) -> usize {
+        text.len() + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn encode_prefixes_bos() {
+        let t = Tokenizer::new();
+        let ids = t.encode("ab");
+        assert_eq!(ids, vec![BOS, BYTE_BASE + 97, BYTE_BASE + 98]);
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new();
+        let s = "Fix bugs in the following code:";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::new();
+        let s = "héllo 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn decode_skips_specials_and_reserved() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("x");
+        ids.push(EOS);
+        ids.push(PAD);
+        ids.push(VOCAB - 1); // reserved
+        assert_eq!(t.decode(&ids), "x");
+    }
+
+    #[test]
+    fn token_len_matches_encode() {
+        let t = Tokenizer::new();
+        prop_check(100, |rng| {
+            let n = rng.range_usize(0, 200);
+            let s: String = (0..n)
+                .map(|_| (rng.range_u64(32, 127) as u8) as char)
+                .collect();
+            let t2 = Tokenizer::new();
+            assert_eq!(t2.encode(&s).len(), t2.token_len(&s));
+        });
+        let _ = t;
+    }
+
+    #[test]
+    fn all_ids_below_vocab() {
+        let t = Tokenizer::new();
+        let ids = t.encode("\u{ff}\u{0}");
+        assert!(ids.iter().all(|&id| id < VOCAB));
+    }
+}

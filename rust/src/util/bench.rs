@@ -1,0 +1,172 @@
+//! Micro-benchmark harness (criterion is not vendored in this environment).
+//!
+//! `cargo bench` runs the `[[bench]]` targets with `harness = false`; each
+//! target builds a [`BenchSuite`], registers closures, and gets warmup,
+//! calibrated iteration counts, and mean / p50 / p95 / stddev reporting.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:8.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:8.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:8.3} s ", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark registry with a shared time budget per case.
+pub struct BenchSuite {
+    title: String,
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // Honor a quick mode for CI-ish runs: MAGNUS_BENCH_QUICK=1.
+        let quick = std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+        BenchSuite {
+            title: title.to_string(),
+            warmup: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(200)
+            },
+            measure: if quick {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_millis(800)
+            },
+            samples: if quick { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical operation per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: how many calls fit in ~1/samples budget?
+        let w0 = Instant::now();
+        let mut calls: u64 = 0;
+        while w0.elapsed() < self.warmup {
+            f();
+            calls += 1;
+        }
+        let per_call = self.warmup.as_nanos() as f64 / calls.max(1) as f64;
+        let budget_ns = self.measure.as_nanos() as f64 / self.samples as f64;
+        let batch = ((budget_ns / per_call).ceil() as u64).max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let var = samples_ns
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / samples_ns.len() as f64;
+        let p = |q: f64| {
+            let idx = (q * (samples_ns.len() - 1) as f64).round() as usize;
+            samples_ns[idx]
+        };
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: batch * self.samples as u64,
+            mean_ns: mean,
+            p50_ns: p(0.50),
+            p95_ns: p(0.95),
+            stddev_ns: var.sqrt(),
+        };
+        println!(
+            "  {:44} mean {}  p50 {}  p95 {}  (n={})",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p95_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Measure with a value-producing closure (prevents dead-code elision).
+    pub fn bench_val<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench(name, move || {
+            black_box(f());
+        })
+    }
+
+    pub fn header(&self) {
+        println!("\n== {} ==", self.title);
+    }
+
+    /// Assert an upper bound on a named result's mean (used to check the
+    /// paper's §IV-D overhead numbers).
+    pub fn assert_mean_below(&self, name: &str, limit: Duration) {
+        let r = self
+            .results
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("no bench named {name}"));
+        assert!(
+            r.mean_ns <= limit.as_nanos() as f64,
+            "{name}: mean {} exceeds limit {:?}",
+            fmt_ns(r.mean_ns),
+            limit
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("MAGNUS_BENCH_QUICK", "1");
+        let mut s = BenchSuite::new("t");
+        let r = s.bench_val("noop-ish", || 1u64 + black_box(2u64));
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_mean_below_fires() {
+        std::env::set_var("MAGNUS_BENCH_QUICK", "1");
+        let mut s = BenchSuite::new("t");
+        s.bench("sleepy", || std::thread::sleep(Duration::from_micros(200)));
+        s.assert_mean_below("sleepy", Duration::from_nanos(1));
+    }
+}

@@ -1,0 +1,160 @@
+//! Tiny CLI argument parser (clap is not vendored in this environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for usage output.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        iter: I,
+        flag_names: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{body} expects a value"));
+                    }
+                    let v = it.next().unwrap();
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    return Err(format!("option --{body} expects a value"));
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from `std::env::args()` (skipping the program name).
+    pub fn parse_env(flag_names: &[&str]) -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list ("1,2.5,4").
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{program} — {about}\n\nOptions:\n");
+    for spec in specs {
+        let d = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        let kind = if spec.is_flag { "" } else { " <value>" };
+        s.push_str(&format!("  --{}{kind}\n      {}{d}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--rate", "3.5", "--mode=sim"], &[]);
+        assert_eq!(a.get_f64("rate", 0.0), 3.5);
+        assert_eq!(a.get("mode"), Some("sim"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["run", "--verbose", "--n", "7", "trace.json"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("n", 0), 7);
+        assert_eq!(a.positional, vec!["run", "trace.json"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--rates", "1,2,4.5"], &[]);
+        assert_eq!(a.get_f64_list("rates", &[]), vec![1.0, 2.0, 4.5]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse_from(
+            ["--n".to_string()].into_iter(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.get_f64("rate", 2.5), 2.5);
+    }
+}

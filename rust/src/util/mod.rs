@@ -1,0 +1,17 @@
+//! Substrate utilities: deterministic RNG + samplers, JSON, statistics,
+//! CLI parsing, micro-bench harness and property-testing harness.
+//!
+//! These exist because the build environment vendors only the `xla` crate's
+//! dependency closure — `rand`, `serde`, `clap`, `criterion` and `proptest`
+//! are unavailable, and the reproduction needs deterministic equivalents
+//! anyway (every figure must regenerate bit-for-bit from a seed).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

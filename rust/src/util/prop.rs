@@ -1,0 +1,103 @@
+//! Minimal property-based testing harness (proptest is not vendored).
+//!
+//! A [`Prop`] runs a closure over many seeded random cases; on failure it
+//! re-runs with a simple shrinking strategy (halving integer parameters via
+//! the [`Shrinkable`] trait is left to call sites — the harness reports the
+//! failing seed so every failure is reproducible deterministically).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(200, |rng| {
+//!     let n = rng.range_usize(1, 50);
+//!     ...
+//!     assert!(invariant_holds);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Number of cases scaled down when MAGNUS_PROP_QUICK is set.
+fn scaled(cases: usize) -> usize {
+    if std::env::var("MAGNUS_PROP_QUICK").is_ok() {
+        (cases / 10).max(5)
+    } else {
+        cases
+    }
+}
+
+/// Run `f` over `cases` deterministic random cases.  Panics (propagating the
+/// inner assertion) with the failing seed in the message.
+pub fn prop_check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, f: F) {
+    let base = 0xC0FFEE_u64;
+    for case in 0..scaled(cases) {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like `prop_check` but the closure receives the case index too (useful
+/// for size-graduated generation: small cases first).
+pub fn prop_check_sized<F>(cases: usize, f: F)
+where
+    F: Fn(&mut Rng, usize) + std::panic::RefUnwindSafe,
+{
+    let total = scaled(cases);
+    let base = 0xBADC0DE_u64;
+    for case in 0..total {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng, case);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        prop_check(50, |rng| {
+            let a = rng.range_u64(0, 100);
+            let b = rng.range_u64(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_seed() {
+        prop_check(50, |rng| {
+            let x = rng.range_u64(0, 10);
+            assert!(x < 9, "x={x}");
+        });
+    }
+
+    #[test]
+    fn sized_cases_grow() {
+        prop_check_sized(20, |rng, case| {
+            let n = rng.range_usize(0, case + 2);
+            assert!(n <= case + 1);
+        });
+    }
+}

@@ -1,0 +1,466 @@
+//! The six LMaaS applications / eight tasks of the paper's evaluation and
+//! their synthetic request generators.
+//!
+//! **Substitution note (DESIGN.md §2).**  The paper builds requests from
+//! WMT18 (MT), a GEC corpus (GC), ParaDetox (TD), CodeXGLUE (CT, CC) and
+//! Break-It-Fix-It (BF) and measures generation lengths by running
+//! ChatGLM-6B / Qwen-7B / Baichuan2-7B.  None of those corpora or models
+//! are available here, so each task is modelled by
+//!
+//!   * an input-length distribution (log-normal, clipped), and
+//!   * a generation-length model  G = a·UIL + b + topic_bias + ε,
+//!     ε ~ N(0, σ(UIL)),
+//!
+//! with (a, b, σ) calibrated per task so the per-task Pearson coefficients
+//! match Table I (0.77–0.996) and the qualitative relations of §III-B hold
+//! (BF: G ≈ UIL; CC: G > UIL; CT c++→py: G < UIL; CT py→c++: G > UIL).
+//! "Topics" give each request latent semantic structure that is visible in
+//! the generated user-input *text* (topic-indicative vocabulary) and shifts
+//! G — this is exactly the residual signal that lets the USIN predictor
+//! beat INST in Table II, as in the paper.
+//!
+//! Three [`LlmProfile`]s perturb the task parameters the way switching the
+//! backing LLM does in Table I.
+
+use crate::util::Rng;
+
+/// The six applications of Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum App {
+    /// Multilingual machine translation.
+    MT,
+    /// Grammar correction.
+    GC,
+    /// Text detoxification.
+    TD,
+    /// Code translation.
+    CT,
+    /// Bug fixing.
+    BF,
+    /// Code comment.
+    CC,
+}
+
+impl App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::MT => "MT",
+            App::GC => "GC",
+            App::TD => "TD",
+            App::CT => "CT",
+            App::BF => "BF",
+            App::CC => "CC",
+        }
+    }
+
+    pub const ALL: [App; 6] = [App::MT, App::GC, App::TD, App::CT, App::BF, App::CC];
+}
+
+/// The eight tasks (MT and CT have two directions each, §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskId {
+    MtEnDe,
+    MtDeEn,
+    Gc,
+    Td,
+    CtCppPy,
+    CtPyCpp,
+    Bf,
+    Cc,
+}
+
+impl TaskId {
+    pub const ALL: [TaskId; 8] = [
+        TaskId::MtEnDe,
+        TaskId::MtDeEn,
+        TaskId::Gc,
+        TaskId::Td,
+        TaskId::CtCppPy,
+        TaskId::CtPyCpp,
+        TaskId::Bf,
+        TaskId::Cc,
+    ];
+
+    pub fn app(&self) -> App {
+        match self {
+            TaskId::MtEnDe | TaskId::MtDeEn => App::MT,
+            TaskId::Gc => App::GC,
+            TaskId::Td => App::TD,
+            TaskId::CtCppPy | TaskId::CtPyCpp => App::CT,
+            TaskId::Bf => App::BF,
+            TaskId::Cc => App::CC,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskId::MtEnDe => "MT-en-de",
+            TaskId::MtDeEn => "MT-de-en",
+            TaskId::Gc => "GC",
+            TaskId::Td => "TD",
+            TaskId::CtCppPy => "CT-cpp-py",
+            TaskId::CtPyCpp => "CT-py-cpp",
+            TaskId::Bf => "BF",
+            TaskId::Cc => "CC",
+        }
+    }
+
+    /// The application instruction prefixed to every request of this task —
+    /// the application-level semantic signal the INST predictor embeds.
+    pub fn instruction(&self) -> &'static str {
+        match self {
+            TaskId::MtEnDe => "Translate the following English text to German:",
+            TaskId::MtDeEn => "Translate the following German text to English:",
+            TaskId::Gc => "Correct the grammatical errors in the following text and output the corrected text:",
+            TaskId::Td => "Rewrite the following text to remove toxic language while keeping its meaning:",
+            TaskId::CtCppPy => "Translate the following C++ code to Python and output only the code:",
+            TaskId::CtPyCpp => "Translate the following Python code to C++ and output only the code:",
+            TaskId::Bf => "Fix bugs in the following code and output the fixed code:",
+            TaskId::Cc => "Write a documentation comment for the following code:",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        TaskId::ALL.iter().position(|t| t == self).unwrap()
+    }
+}
+
+/// The three LLMs of Table I, as perturbations of the task parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LlmProfile {
+    ChatGlm6B,
+    Qwen7BChat,
+    Baichuan27BChat,
+}
+
+impl LlmProfile {
+    pub const ALL: [LlmProfile; 3] = [
+        LlmProfile::ChatGlm6B,
+        LlmProfile::Qwen7BChat,
+        LlmProfile::Baichuan27BChat,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LlmProfile::ChatGlm6B => "ChatGLM-6B",
+            LlmProfile::Qwen7BChat => "Qwen-7B-Chat",
+            LlmProfile::Baichuan27BChat => "Baichuan2-7B-Chat",
+        }
+    }
+
+    /// (slope multiplier, extra noise multiplier) — different LLMs phrase
+    /// answers differently; the perturbation keeps Table I's per-model
+    /// spread without changing orderings.
+    fn perturb(&self) -> (f64, f64) {
+        match self {
+            LlmProfile::ChatGlm6B => (1.00, 1.00),
+            LlmProfile::Qwen7BChat => (1.06, 0.95),
+            LlmProfile::Baichuan27BChat => (0.94, 1.05),
+        }
+    }
+}
+
+/// Generation-length model parameters for one task.
+#[derive(Debug, Clone)]
+pub struct TaskParams {
+    /// Slope a of G = a·UIL + b.
+    pub slope: f64,
+    /// Intercept b.
+    pub intercept: f64,
+    /// Noise scale: σ(UIL) = noise_frac · UIL + noise_base.
+    pub noise_frac: f64,
+    pub noise_base: f64,
+    /// Input-length log-normal (mu, sigma) of the underlying normal.
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    /// Input-length clip range (tokens).
+    pub len_min: u32,
+    pub len_max: u32,
+    /// Number of latent topics and the ± fraction they shift G by.
+    pub n_topics: usize,
+    pub topic_shift: f64,
+}
+
+/// Per-task calibrated parameters.
+///
+/// Targets (Table I, ChatGLM column): MT 0.967, GC 0.981, TD 0.778,
+/// CT 0.996, BF 0.992, CC 0.771.  σ grows with UIL so that Pearson is
+/// roughly scale-free; noise_frac is the knob that sets the coefficient.
+pub fn task_params(task: TaskId) -> TaskParams {
+    let base = TaskParams {
+        slope: 1.0,
+        intercept: 2.0,
+        noise_frac: 0.05,
+        noise_base: 2.0,
+        len_mu: 4.8,
+        len_sigma: 0.7,
+        len_min: 6,
+        len_max: 600,
+        n_topics: 4,
+        topic_shift: 0.06,
+    };
+    match task {
+        TaskId::MtEnDe => TaskParams {
+            slope: 1.08,
+            intercept: 3.0,
+            noise_frac: 0.075,
+            ..base
+        },
+        TaskId::MtDeEn => TaskParams {
+            slope: 0.93,
+            intercept: 2.0,
+            noise_frac: 0.075,
+            ..base
+        },
+        TaskId::Gc => TaskParams {
+            slope: 1.0,
+            intercept: 1.0,
+            noise_frac: 0.055,
+            noise_base: 1.0,
+            ..base
+        },
+        TaskId::Td => TaskParams {
+            slope: 0.88,
+            intercept: 2.0,
+            noise_frac: 0.18,
+            noise_base: 4.0,
+            n_topics: 6,
+            topic_shift: 0.55,
+            ..base
+        },
+        TaskId::CtCppPy => TaskParams {
+            slope: 0.62,
+            intercept: 4.0,
+            noise_frac: 0.025,
+            len_mu: 4.9,
+            len_sigma: 0.6,
+            ..base
+        },
+        TaskId::CtPyCpp => TaskParams {
+            slope: 1.45,
+            intercept: 8.0,
+            noise_frac: 0.025,
+            len_mu: 4.7,
+            len_sigma: 0.6,
+            ..base
+        },
+        TaskId::Bf => TaskParams {
+            slope: 1.02,
+            intercept: 2.0,
+            noise_frac: 0.035,
+            len_mu: 4.8,
+            len_sigma: 0.6,
+            ..base
+        },
+        TaskId::Cc => TaskParams {
+            slope: 1.6,
+            intercept: 10.0,
+            noise_frac: 0.26,
+            noise_base: 6.0,
+            len_mu: 4.7,
+            len_sigma: 0.6,
+            n_topics: 8,
+            topic_shift: 0.62,
+            ..base
+        },
+    }
+}
+
+/// Vocabulary used to synthesise user-input text per task topic.  Natural
+/// tasks draw common words; code tasks draw identifier-ish tokens.  The
+/// first word of a cluster acts as the topic marker that repeatedly shows
+/// up, giving the hashed embedder a learnable signal.
+const NATURAL_WORDS: [&str; 24] = [
+    "the", "quick", "report", "market", "weather", "family", "music", "train",
+    "garden", "coffee", "window", "letter", "bridge", "doctor", "evening",
+    "history", "island", "journey", "kitchen", "library", "mountain", "news",
+    "ocean", "painting",
+];
+
+const CODE_WORDS: [&str; 24] = [
+    "int", "vec", "push_back", "return", "for", "while", "if", "else",
+    "size", "begin", "end", "auto", "def", "self", "print", "range", "len",
+    "append", "class", "void", "const", "static", "index", "buffer",
+];
+
+const TOPIC_MARKERS: [&str; 8] = [
+    "finance", "sports", "travel", "health", "science", "politics", "art",
+    "games",
+];
+
+/// Synthesise a user-input text of roughly `target_tokens` tokens
+/// (byte-level tokenizer: 1 token per byte + BOS) for the given task/topic.
+pub fn synth_input(task: TaskId, topic: usize, target_tokens: u32, rng: &mut Rng) -> String {
+    let words: &[&str] = match task.app() {
+        App::CT | App::BF | App::CC => &CODE_WORDS,
+        _ => &NATURAL_WORDS,
+    };
+    let marker = TOPIC_MARKERS[topic % TOPIC_MARKERS.len()];
+    let mut s = String::with_capacity(target_tokens as usize + 16);
+    s.push_str(marker);
+    while s.len() + 1 < target_tokens as usize {
+        s.push(' ');
+        // Re-mention the topic marker ~1/6 of the time so user-level
+        // semantics are recoverable from hashed n-grams.
+        if rng.f64() < 1.0 / 6.0 {
+            s.push_str(marker);
+        } else {
+            s.push_str(words[rng.range_usize(0, words.len())]);
+        }
+    }
+    s.truncate((target_tokens as usize).saturating_sub(1).max(1));
+    s
+}
+
+/// One sampled request body (before arrival-time assignment).
+#[derive(Debug, Clone)]
+pub struct SampledRequest {
+    pub task: TaskId,
+    pub topic: usize,
+    pub user_input: String,
+    pub user_input_len: u32,
+    pub gen_len: u32,
+}
+
+/// Sample a request for `task` under `llm`, honoring the generation-length
+/// cap `g_max` and input cap `l_cap` (0 = use task default).
+pub fn sample_request(
+    task: TaskId,
+    llm: LlmProfile,
+    g_max: u32,
+    l_cap: u32,
+    rng: &mut Rng,
+) -> SampledRequest {
+    let p = task_params(task);
+    let (slope_mul, noise_mul) = llm.perturb();
+    let len_max = if l_cap > 0 { l_cap.min(p.len_max) } else { p.len_max };
+
+    let raw = rng.lognormal(p.len_mu, p.len_sigma);
+    let uil = (raw.round() as u32).clamp(p.len_min, len_max);
+
+    let topic = rng.range_usize(0, p.n_topics);
+    // Topics alternate sign so the task-level mean stays put.
+    let tshift = p.topic_shift * (topic as f64 - (p.n_topics - 1) as f64 / 2.0)
+        / ((p.n_topics - 1).max(1) as f64 / 2.0);
+
+    let sigma = (p.noise_frac * uil as f64 + p.noise_base) * noise_mul;
+    let mean = p.slope * slope_mul * uil as f64 * (1.0 + tshift) + p.intercept;
+    let g = rng.normal_ms(mean, sigma).round();
+    let gen_len = (g.max(1.0) as u32).min(g_max);
+
+    let user_input = synth_input(task, topic, uil, rng);
+    SampledRequest {
+        task,
+        topic,
+        user_input,
+        user_input_len: uil,
+        gen_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::pearson;
+
+    #[test]
+    fn eight_tasks_six_apps() {
+        assert_eq!(TaskId::ALL.len(), 8);
+        let mut apps: Vec<App> = TaskId::ALL.iter().map(|t| t.app()).collect();
+        apps.dedup();
+        assert_eq!(
+            TaskId::ALL.iter().map(|t| t.app()).collect::<std::collections::HashSet<_>>().len(),
+            6
+        );
+        let _ = apps;
+    }
+
+    #[test]
+    fn instructions_are_distinct() {
+        let set: std::collections::HashSet<&str> =
+            TaskId::ALL.iter().map(|t| t.instruction()).collect();
+        assert_eq!(set.len(), 8);
+    }
+
+    #[test]
+    fn synth_input_hits_target_length() {
+        let mut rng = Rng::new(1);
+        for &target in &[8u32, 50, 200, 600] {
+            let s = synth_input(TaskId::Gc, 1, target, &mut rng);
+            // token_len = bytes + BOS
+            let tokens = s.len() as u32 + 1;
+            assert!(
+                tokens <= target + 1 && tokens + 12 >= target,
+                "target={target} got={tokens}"
+            );
+        }
+    }
+
+    #[test]
+    fn gen_len_capped_and_positive() {
+        let mut rng = Rng::new(2);
+        for _ in 0..2000 {
+            let s = sample_request(TaskId::Cc, LlmProfile::ChatGlm6B, 128, 100, &mut rng);
+            assert!(s.gen_len >= 1 && s.gen_len <= 128);
+            assert!(s.user_input_len <= 100);
+        }
+    }
+
+    #[test]
+    fn pearson_matches_table1_band_per_task() {
+        // Table I (ChatGLM-6B): MT .967 GC .981 TD .778 CT .996 BF .992 CC .771
+        // Accept each task within ±0.08 of its target.
+        let targets = [
+            (TaskId::MtEnDe, 0.967),
+            (TaskId::Gc, 0.981),
+            (TaskId::Td, 0.778),
+            (TaskId::CtCppPy, 0.996),
+            (TaskId::Bf, 0.992),
+            (TaskId::Cc, 0.771),
+        ];
+        let mut rng = Rng::new(3);
+        for (task, want) in targets {
+            let mut uil = Vec::new();
+            let mut g = Vec::new();
+            for _ in 0..2000 {
+                let s = sample_request(task, LlmProfile::ChatGlm6B, 1024, 0, &mut rng);
+                uil.push(s.user_input_len as f64);
+                g.push(s.gen_len as f64);
+            }
+            let r = pearson(&uil, &g);
+            assert!(
+                (r - want).abs() < 0.08,
+                "{}: pearson {r:.3}, want ~{want}",
+                task.name()
+            );
+        }
+    }
+
+    #[test]
+    fn qualitative_relations_hold() {
+        // §III-B: BF G≈UIL, CC G>UIL, CT c++→py G<UIL, CT py→c++ G>UIL.
+        let mut rng = Rng::new(4);
+        let mut mean_ratio = |task| {
+            let mut rsum = 0.0;
+            let n = 1500;
+            for _ in 0..n {
+                let s = sample_request(task, LlmProfile::ChatGlm6B, 4096, 0, &mut rng);
+                rsum += s.gen_len as f64 / s.user_input_len as f64;
+            }
+            rsum / n as f64
+        };
+        assert!((mean_ratio(TaskId::Bf) - 1.0).abs() < 0.15);
+        assert!(mean_ratio(TaskId::Cc) > 1.3);
+        assert!(mean_ratio(TaskId::CtCppPy) < 0.85);
+        assert!(mean_ratio(TaskId::CtPyCpp) > 1.25);
+    }
+
+    #[test]
+    fn llm_profiles_shift_but_preserve_order() {
+        let mut rng = Rng::new(5);
+        for llm in LlmProfile::ALL {
+            let s = sample_request(TaskId::MtEnDe, llm, 1024, 0, &mut rng);
+            assert!(s.gen_len >= 1);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Train/test dataset builders for the two learned components (paper
+//! §III-B, §IV-A: per task 2 000 training + 500 test requests for the
+//! generation-length predictor; the serving-time estimator trains on
+//! logged batch executions).
+
+use crate::tokenizer::Tokenizer;
+use crate::util::Rng;
+use crate::workload::apps::{sample_request, LlmProfile, TaskId};
+use crate::workload::request::Request;
+
+/// A labelled predictor example (the request carries the label in
+/// `gen_len`).
+pub type Labelled = Request;
+
+/// Build `n` labelled requests for one task (arrival = 0; ids sequential
+/// from `id_base`).
+pub fn build_task_dataset(
+    task: TaskId,
+    llm: LlmProfile,
+    n: usize,
+    g_max: u32,
+    seed: u64,
+    id_base: u64,
+) -> Vec<Labelled> {
+    let mut rng = Rng::new(seed ^ (task.index() as u64) << 32);
+    let tok = Tokenizer::new();
+    (0..n)
+        .map(|i| {
+            let s = sample_request(task, llm, g_max, 0, &mut rng);
+            let instruction = task.instruction().to_string();
+            let request_len =
+                (tok.token_len(&instruction) + s.user_input.len()) as u32;
+            Request {
+                id: id_base + i as u64,
+                task,
+                instruction,
+                user_input: s.user_input,
+                user_input_len: s.user_input_len,
+                request_len,
+                gen_len: s.gen_len,
+                arrival: 0.0,
+            }
+        })
+        .collect()
+}
+
+/// The paper's predictor evaluation split: per task `n_train` + `n_test`.
+pub struct PredictorSplit {
+    pub train: Vec<Labelled>,
+    pub test: Vec<Labelled>,
+}
+
+/// Build the 8-task split (paper: 2 000 train + 500 test per task).
+pub fn build_predictor_split(
+    llm: LlmProfile,
+    n_train: usize,
+    n_test: usize,
+    g_max: u32,
+    seed: u64,
+) -> PredictorSplit {
+    let mut train = Vec::with_capacity(n_train * TaskId::ALL.len());
+    let mut test = Vec::with_capacity(n_test * TaskId::ALL.len());
+    for (ti, task) in TaskId::ALL.iter().enumerate() {
+        let all = build_task_dataset(
+            *task,
+            llm,
+            n_train + n_test,
+            g_max,
+            seed.wrapping_add(1000 + ti as u64),
+            (ti * (n_train + n_test)) as u64,
+        );
+        train.extend_from_slice(&all[..n_train]);
+        test.extend_from_slice(&all[n_train..]);
+    }
+    train.shuffle_with(seed);
+    PredictorSplit { train, test }
+}
+
+trait ShuffleWith {
+    fn shuffle_with(&mut self, seed: u64);
+}
+
+impl ShuffleWith for Vec<Labelled> {
+    fn shuffle_with(&mut self, seed: u64) {
+        let mut rng = Rng::new(seed ^ 0x5475_4c45);
+        rng.shuffle(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes() {
+        let s = build_predictor_split(LlmProfile::ChatGlm6B, 100, 25, 1024, 1);
+        assert_eq!(s.train.len(), 800);
+        assert_eq!(s.test.len(), 200);
+    }
+
+    #[test]
+    fn split_covers_all_tasks() {
+        let s = build_predictor_split(LlmProfile::ChatGlm6B, 50, 10, 1024, 2);
+        for task in TaskId::ALL {
+            assert!(s.train.iter().any(|r| r.task == task));
+            assert!(s.test.iter().any(|r| r.task == task));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = build_task_dataset(TaskId::Bf, LlmProfile::ChatGlm6B, 20, 1024, 3, 0);
+        let b = build_task_dataset(TaskId::Bf, LlmProfile::ChatGlm6B, 20, 1024, 3, 0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.user_input, y.user_input);
+            assert_eq!(x.gen_len, y.gen_len);
+        }
+    }
+
+    #[test]
+    fn train_and_test_disjoint_inputs() {
+        let s = build_predictor_split(LlmProfile::ChatGlm6B, 50, 10, 1024, 4);
+        // ids are disjoint by construction
+        let train_ids: std::collections::HashSet<u64> =
+            s.train.iter().map(|r| r.id).collect();
+        assert!(s.test.iter().all(|r| !train_ids.contains(&r.id)));
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload synthesis for the LMaaS scenario: the six applications / eight
+//! tasks of the paper's evaluation (§IV-A), request sampling with
+//! Table-I-calibrated input-length↔generation-length correlation, Poisson
+//! arrival traces, and the predictor train/test splits.
+
+pub mod apps;
+pub mod dataset;
+pub mod request;
+pub mod trace;
+
+pub use apps::{App, LlmProfile, TaskId};
+pub use request::{PredictedRequest, Request};
+pub use trace::{generate_trace, trace_from_json, trace_to_json, TraceSpec};

@@ -1,0 +1,66 @@
+//! Request model for the LMaaS scenario (paper §II-A).
+//!
+//! A request = instruction (identifies the application/task) + user input.
+//! Lengths are in tokens of the byte-level tokenizer.  `gen_len` is the
+//! ground-truth generation length: the coordinator must never read it for
+//! scheduling decisions (only the engine, which "samples EOS" with it, and
+//! the log database after serving may).
+
+use crate::workload::apps::TaskId;
+
+/// A single LMaaS request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Unique, monotonically increasing id.
+    pub id: u64,
+    /// Which application task produced it.
+    pub task: TaskId,
+    /// The application instruction text (prefix).
+    pub instruction: String,
+    /// The raw user input text.
+    pub user_input: String,
+    /// User input length in tokens (paper: "user input length", UIL).
+    pub user_input_len: u32,
+    /// Whole request length in tokens (instruction + user input + BOS).
+    pub request_len: u32,
+    /// Ground-truth generation length (tokens up to and incl. EOS).
+    pub gen_len: u32,
+    /// Arrival time in seconds since workload start.
+    pub arrival: f64,
+}
+
+impl Request {
+    /// L(p) in the paper's notation.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.request_len
+    }
+
+    /// G(p) in the paper's notation — ground truth, engine-only.
+    #[inline]
+    pub fn true_gen_len(&self) -> u32 {
+        self.gen_len
+    }
+}
+
+/// A request annotated with the predictor's output, as it flows through the
+/// batcher/scheduler (the serving path sees `predicted_gen_len`, never
+/// `request.gen_len`).
+#[derive(Debug, Clone)]
+pub struct PredictedRequest {
+    pub request: Request,
+    /// G'(p): predicted generation length, clamped to [1, G_max].
+    pub predicted_gen_len: u32,
+}
+
+impl PredictedRequest {
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.request.request_len
+    }
+
+    #[inline]
+    pub fn predicted(&self) -> u32 {
+        self.predicted_gen_len
+    }
+}

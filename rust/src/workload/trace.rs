@@ -1,0 +1,213 @@
+//! Workload traces: Poisson arrivals over a task mix (paper §IV-A
+//! "Workloads") plus JSON (de)serialisation so every figure regenerates
+//! from the exact same trace.
+
+use crate::tokenizer::Tokenizer;
+use crate::util::{Json, Rng};
+use crate::workload::apps::{sample_request, LlmProfile, TaskId};
+use crate::workload::request::Request;
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Mean request arrival rate (requests/second).
+    pub rate: f64,
+    /// Number of requests.
+    pub n_requests: usize,
+    /// LLM profile the generation lengths emulate.
+    pub llm: LlmProfile,
+    /// Max generation length cap (paper: 1024).
+    pub g_max: u32,
+    /// Cap on user-input token length (0 = task default; the real-engine
+    /// e2e path uses a small cap to fit the tiny model's 256-token cache).
+    pub l_cap: u32,
+    /// Per-task arrival weights; uniform if empty.
+    pub task_weights: Vec<f64>,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            rate: 1.0,
+            n_requests: 500,
+            llm: LlmProfile::ChatGlm6B,
+            g_max: 1024,
+            l_cap: 0,
+            task_weights: Vec::new(),
+            seed: 7,
+        }
+    }
+}
+
+/// Generate a trace: exponential inter-arrivals at `spec.rate`, tasks drawn
+/// from the weighted mix, request bodies from the per-task models.
+pub fn generate_trace(spec: &TraceSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed);
+    let tok = Tokenizer::new();
+    let weights = if spec.task_weights.len() == TaskId::ALL.len() {
+        spec.task_weights.clone()
+    } else {
+        vec![1.0; TaskId::ALL.len()]
+    };
+
+    let mut t = 0.0_f64;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for id in 0..spec.n_requests {
+        t += rng.exponential(spec.rate);
+        let task = TaskId::ALL[rng.weighted_index(&weights)];
+        let s = sample_request(task, spec.llm, spec.g_max, spec.l_cap, &mut rng);
+        let instruction = task.instruction().to_string();
+        let request_len =
+            (tok.token_len(&instruction) + s.user_input.len()) as u32;
+        out.push(Request {
+            id: id as u64,
+            task,
+            instruction,
+            user_input: s.user_input,
+            user_input_len: s.user_input_len,
+            request_len,
+            gen_len: s.gen_len,
+            arrival: t,
+        });
+    }
+    out
+}
+
+/// Serialise a trace to JSON (text payloads included: traces are replayable
+/// through the real predictor which embeds the text).
+pub fn trace_to_json(reqs: &[Request]) -> Json {
+    Json::Arr(
+        reqs.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("task", Json::num(r.task.index() as f64)),
+                    ("user_input", Json::str(r.user_input.clone())),
+                    ("uil", Json::num(r.user_input_len as f64)),
+                    ("len", Json::num(r.request_len as f64)),
+                    ("gen", Json::num(r.gen_len as f64)),
+                    ("arrival", Json::num(r.arrival)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a trace back from JSON.
+pub fn trace_from_json(j: &Json) -> anyhow::Result<Vec<Request>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("trace: expected array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let task_idx = item
+            .get("task")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("trace: missing task"))?;
+        let task = *TaskId::ALL
+            .get(task_idx)
+            .ok_or_else(|| anyhow::anyhow!("trace: bad task index"))?;
+        out.push(Request {
+            id: item.get("id").as_u64().unwrap_or(0),
+            task,
+            instruction: task.instruction().to_string(),
+            user_input: item.get("user_input").as_str().unwrap_or("").to_string(),
+            user_input_len: item.get("uil").as_u64().unwrap_or(0) as u32,
+            request_len: item.get("len").as_u64().unwrap_or(0) as u32,
+            gen_len: item.get("gen").as_u64().unwrap_or(1) as u32,
+            arrival: item.get("arrival").as_f64().unwrap_or(0.0),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_sorted_and_rate_is_right() {
+        let spec = TraceSpec {
+            rate: 4.0,
+            n_requests: 4000,
+            ..Default::default()
+        };
+        let trace = generate_trace(&spec);
+        assert_eq!(trace.len(), 4000);
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let span = trace.last().unwrap().arrival;
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 4.0).abs() < 0.3, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let spec = TraceSpec {
+            n_requests: 50,
+            ..Default::default()
+        };
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.user_input, y.user_input);
+            assert_eq!(x.gen_len, y.gen_len);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = TraceSpec {
+            n_requests: 30,
+            ..Default::default()
+        };
+        let trace = generate_trace(&spec);
+        let j = trace_to_json(&trace);
+        let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(trace.len(), back.len());
+        for (x, y) in trace.iter().zip(&back) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.user_input, y.user_input);
+            assert_eq!(x.request_len, y.request_len);
+            assert_eq!(x.gen_len, y.gen_len);
+        }
+    }
+
+    #[test]
+    fn task_weights_respected() {
+        let mut w = vec![0.0; 8];
+        w[2] = 1.0; // only GC
+        let spec = TraceSpec {
+            n_requests: 100,
+            task_weights: w,
+            ..Default::default()
+        };
+        let trace = generate_trace(&spec);
+        assert!(trace.iter().all(|r| r.task == TaskId::Gc));
+    }
+
+    #[test]
+    fn l_cap_respected() {
+        let spec = TraceSpec {
+            n_requests: 300,
+            l_cap: 64,
+            ..Default::default()
+        };
+        let trace = generate_trace(&spec);
+        assert!(trace.iter().all(|r| r.user_input_len <= 64));
+    }
+
+    #[test]
+    fn request_len_covers_instruction_plus_input() {
+        let spec = TraceSpec {
+            n_requests: 20,
+            ..Default::default()
+        };
+        for r in generate_trace(&spec) {
+            assert!(r.request_len > r.user_input_len);
+        }
+    }
+}

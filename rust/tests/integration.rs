@@ -1,0 +1,206 @@
+//! Cross-module integration tests: the full coordinator pipeline over the
+//! cost-model engine, conservation invariants, and paper-shape checks that
+//! span multiple subsystems.
+
+use magnus::config::ServingConfig;
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::sim::{run_policy, Policy};
+use magnus::util::prop::prop_check_sized;
+use magnus::util::stats::rmse;
+use magnus::workload::dataset::build_predictor_split;
+use magnus::workload::{generate_trace, LlmProfile, TraceSpec};
+
+/// Every policy must conserve requests and tokens for arbitrary traces.
+#[test]
+fn conservation_across_policies() {
+    let cfg = ServingConfig::default();
+    prop_check_sized(6, |rng, case| {
+        let rate = rng.range_f64(1.0, 30.0);
+        let n = 50 + case * 30;
+        let trace = generate_trace(&TraceSpec {
+            rate,
+            n_requests: n,
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let total_valid: u64 = trace.iter().map(|r| r.gen_len as u64).sum();
+        for policy in [Policy::Vs, Policy::Ccb, Policy::Magnus] {
+            let out = run_policy(&cfg, policy, &trace, 30);
+            assert_eq!(out.metrics.records.len(), n, "{}", policy.name());
+            let valid: u64 = out
+                .metrics
+                .records
+                .iter()
+                .map(|r| r.valid_tokens as u64)
+                .sum();
+            assert_eq!(valid, total_valid, "{} token conservation", policy.name());
+            // Response times positive, finishes ordered after arrivals.
+            for r in &out.metrics.records {
+                assert!(r.finish >= r.arrival);
+            }
+        }
+    });
+}
+
+/// Magnus ends the run with every request served exactly once (no
+/// duplication through OOM splits).
+#[test]
+fn oom_splits_do_not_duplicate_requests() {
+    let mut cfg = ServingConfig::default();
+    // Shrink memory so OOM splits actually happen.
+    cfg.gpu.model_resident_bytes = 20_000_000_000;
+    cfg.mem_margin = 1.0; // no planner guard: force engine OOMs
+    let trace = generate_trace(&TraceSpec {
+        rate: 20.0,
+        n_requests: 300,
+        seed: 17,
+        ..Default::default()
+    });
+    let out = run_policy(&cfg, Policy::Magnus, &trace, 50);
+    assert_eq!(out.metrics.records.len(), 300);
+    let mut ids: Vec<u64> = out.metrics.records.iter().map(|r| r.request_id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 300, "every request served exactly once");
+    assert!(out.metrics.oom_events > 0, "test should exercise OOM path");
+}
+
+/// The predictor-estimator-scheduler loop: continuous learning data from a
+/// real run retrains a fresh predictor to better accuracy.
+#[test]
+fn served_logs_improve_a_cold_predictor() {
+    let cfg = ServingConfig::default();
+    let trace = generate_trace(&TraceSpec {
+        rate: 10.0,
+        n_requests: 600,
+        seed: 23,
+        ..Default::default()
+    });
+    let out = run_policy(&cfg, Policy::Magnus, &trace, 40);
+    let logs = out.db.requests_between(0.0, f64::INFINITY);
+    assert_eq!(logs.len(), 600);
+
+    // Fresh predictor trained only on logged requests from the run.
+    let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+    let reqs: Vec<_> = logs.iter().map(|l| l.request.clone()).collect();
+    p.train(&reqs);
+
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 1, 150, 1024, 29);
+    let pred: Vec<f64> = split.test.iter().map(|r| p.predict(r) as f64).collect();
+    let act: Vec<f64> = split.test.iter().map(|r| r.gen_len as f64).collect();
+    let trained_rmse = rmse(&pred, &act);
+    let uilo: Vec<f64> = split
+        .test
+        .iter()
+        .map(|r| r.user_input_len as f64)
+        .collect();
+    let uilo_rmse = rmse(&uilo, &act);
+    assert!(
+        trained_rmse < uilo_rmse,
+        "log-trained {trained_rmse:.1} !< UILO {uilo_rmse:.1}"
+    );
+}
+
+/// Fig. 14 shape: windowed prediction RMSE decreases from the first to
+/// the last third of a run that starts nearly untrained.
+#[test]
+fn continuous_learning_reduces_error_over_time() {
+    let mut cfg = ServingConfig::default();
+    // Shorter sweep periods so several retrains fit in the test's span
+    // (the paper's 3 min / 2 min periods over a ~30 min run scale to this).
+    cfg.learning.predictor_period_s = 30.0;
+    cfg.learning.estimator_period_s = 20.0;
+    let trace = generate_trace(&TraceSpec {
+        rate: 8.0,
+        n_requests: 1500,
+        seed: 31,
+        ..Default::default()
+    });
+    let out = run_policy(&cfg, Policy::Magnus, &trace, 30);
+    let errs = &out.pred_errors;
+    assert!(errs.len() == 1500);
+    let t_end = errs.iter().map(|e| e.0).fold(0.0, f64::max);
+    let third = t_end / 3.0;
+    let rmse_of = |lo: f64, hi: f64| {
+        let sq: Vec<f64> = errs
+            .iter()
+            .filter(|(t, _)| *t >= lo && *t < hi)
+            .map(|(_, e)| e * e)
+            .collect();
+        (sq.iter().sum::<f64>() / sq.len().max(1) as f64).sqrt()
+    };
+    let first = rmse_of(0.0, third);
+    let last = rmse_of(2.0 * third, t_end + 1.0);
+    assert!(
+        last < first * 0.9,
+        "continuous learning: first-third RMSE {first:.1}, last-third {last:.1}"
+    );
+}
+
+/// Headline claim at heavy load: Magnus beats VS on request throughput by
+/// a healthy factor and cuts response time.
+#[test]
+fn headline_magnus_vs_vanilla() {
+    let cfg = ServingConfig::default();
+    let trace = generate_trace(&TraceSpec {
+        rate: 20.0,
+        n_requests: 600,
+        seed: 37,
+        ..Default::default()
+    });
+    let magnus = run_policy(&cfg, Policy::Magnus, &trace, 200)
+        .metrics
+        .summarise();
+    let vs = run_policy(&cfg, Policy::Vs, &trace, 0).metrics.summarise();
+    let speedup = magnus.request_throughput / vs.request_throughput;
+    let rt_cut = 1.0 - magnus.mean_response_time / vs.mean_response_time;
+    // Paper: +66%..+234% throughput, −60.3%..−89.7% mean RT.
+    assert!(speedup > 1.4, "thr speedup {speedup:.2}");
+    assert!(rt_cut > 0.35, "RT reduction {:.0}%", rt_cut * 100.0);
+}
+
+/// Deterministic replays: the same seed gives identical metrics.
+#[test]
+fn end_to_end_determinism() {
+    let cfg = ServingConfig::default();
+    let trace = generate_trace(&TraceSpec {
+        rate: 6.0,
+        n_requests: 200,
+        seed: 41,
+        ..Default::default()
+    });
+    let a = run_policy(&cfg, Policy::Magnus, &trace, 60).metrics.summarise();
+    let b = run_policy(&cfg, Policy::Magnus, &trace, 60).metrics.summarise();
+    assert_eq!(a.n_requests, b.n_requests);
+    assert_eq!(a.request_throughput, b.request_throughput);
+    assert_eq!(a.mean_response_time, b.mean_response_time);
+    assert_eq!(a.token_throughput, b.token_throughput);
+}
+
+/// Config knobs actually steer the system: a tighter WMA threshold makes
+/// more, smaller batches (more homogeneous grouping).
+#[test]
+fn wma_threshold_controls_grouping() {
+    let mut tight = ServingConfig::default();
+    tight.wma_threshold = 2_000.0;
+    let mut loose = ServingConfig::default();
+    loose.wma_threshold = 5_000_000.0;
+    let trace = generate_trace(&TraceSpec {
+        rate: 20.0,
+        n_requests: 400,
+        seed: 43,
+        ..Default::default()
+    });
+    let bt = run_policy(&tight, Policy::Magnus, &trace, 60);
+    let bl = run_policy(&loose, Policy::Magnus, &trace, 60);
+    let mean_beta = |out: &magnus::sim::SimOutput| {
+        let logs = out.db.batches_between(0.0, f64::INFINITY);
+        logs.iter().map(|b| b.shape.batch_size as f64).sum::<f64>() / logs.len() as f64
+    };
+    assert!(
+        mean_beta(&bt) < mean_beta(&bl),
+        "tight Φ should mean smaller batches: {:.1} vs {:.1}",
+        mean_beta(&bt),
+        mean_beta(&bl)
+    );
+}
