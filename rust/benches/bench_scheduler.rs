@@ -11,10 +11,11 @@ use magnus::util::Rng;
 fn views(n: usize, seed: u64) -> Vec<BatchView> {
     let mut rng = Rng::new(seed);
     (0..n)
-        .map(|_| BatchView {
+        .map(|i| BatchView {
             queuing_time: rng.range_f64(0.0, 500.0),
             est_serving_time: rng.range_f64(0.1, 400.0),
             created_at: rng.range_f64(0.0, 500.0),
+            batch_id: i as u64,
         })
         .collect()
 }

@@ -1,0 +1,108 @@
+//! End-to-end simulator speedup: the cached dispatch loop vs the
+//! fresh-view (pre-refactor) reference, on the acceptance workload
+//! (rate = 10 req/s, 600 requests, full Magnus policy).
+//!
+//! Both paths produce bit-for-bit identical `Summary` metrics (asserted
+//! here and property-tested in tests/dispatch_equivalence.rs); this
+//! harness measures what the equivalence buys and records it as
+//! machine-readable `BENCH_sim.json` at the repo root, starting the perf
+//! trajectory EXPERIMENTS.md §Perf tracks.
+
+use std::time::Instant;
+
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::sim::{run_magnus_with, trained_predictor, DispatchMode, MagnusPolicy};
+use magnus::util::bench::record_sim_bench;
+use magnus::util::Json;
+use magnus::workload::{generate_trace, TraceSpec};
+
+const RATE: f64 = 10.0;
+const N_REQUESTS: usize = 600;
+const PREDICTOR_TRAIN: usize = 200;
+
+fn main() {
+    let quick = std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+    let samples = if quick { 2 } else { 5 };
+
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let trace = generate_trace(&TraceSpec {
+        rate: RATE,
+        n_requests: N_REQUESTS,
+        seed: 99,
+        ..Default::default()
+    });
+
+    println!(
+        "== sim dispatch: cached vs fresh (rate {RATE}, n {N_REQUESTS}, {samples} samples) =="
+    );
+    let mut time_mode = |mode: DispatchMode| -> (f64, magnus::metrics::Summary) {
+        let mut total = 0.0;
+        let mut summary = None;
+        for _ in 0..samples {
+            let predictor = trained_predictor(&cfg, PREDICTOR_TRAIN);
+            let t0 = Instant::now();
+            let out = run_magnus_with(
+                &cfg,
+                &MagnusPolicy::magnus(),
+                predictor,
+                &engine,
+                &trace,
+                mode,
+            );
+            total += t0.elapsed().as_secs_f64();
+            summary = Some(out.metrics.summarise());
+        }
+        (total / samples as f64, summary.unwrap())
+    };
+
+    let (fresh_s, fresh_sum) = time_mode(DispatchMode::Fresh);
+    let (cached_s, cached_sum) = time_mode(DispatchMode::Cached);
+
+    // The speedup only counts if behaviour is untouched.
+    assert_eq!(
+        fresh_sum.request_throughput.to_bits(),
+        cached_sum.request_throughput.to_bits(),
+        "golden equivalence violated: fresh {} vs cached {}",
+        fresh_sum.request_throughput,
+        cached_sum.request_throughput
+    );
+    assert_eq!(
+        fresh_sum.mean_response_time.to_bits(),
+        cached_sum.mean_response_time.to_bits()
+    );
+
+    let speedup = fresh_s / cached_s.max(1e-12);
+    println!("  fresh  dispatch: {fresh_s:8.3} s / run");
+    println!("  cached dispatch: {cached_s:8.3} s / run");
+    println!("  speedup:         {speedup:8.2}x  (acceptance floor: 2.00x)");
+
+    let path = format!("{}/../BENCH_sim.json", env!("CARGO_MANIFEST_DIR"));
+    record_sim_bench(
+        &path,
+        RATE,
+        N_REQUESTS,
+        samples,
+        fresh_s,
+        cached_s,
+        vec![
+            ("policy", Json::str("Magnus")),
+            ("predictor_train", Json::num(PREDICTOR_TRAIN as f64)),
+            ("source", Json::str("benches/bench_sim.rs")),
+            (
+                "request_throughput",
+                Json::num(cached_sum.request_throughput),
+            ),
+            ("mean_response_time", Json::num(cached_sum.mean_response_time)),
+        ],
+    )
+    .expect("write BENCH_sim.json");
+    println!("wrote {path}");
+
+    // No wall-clock assertion: shared runners are noisy and a spurious
+    // red would gate merges on scheduler jitter.  The hard gate is the
+    // bitwise equivalence asserted above; the speedup is reported and
+    // recorded for the perf trajectory.
+    println!("\nPASS: modes bit-for-bit equivalent; speedup {speedup:.2}x recorded");
+}

@@ -10,6 +10,7 @@
 
 use crate::batch::types::Batch;
 use crate::batch::wma::{mem_bytes, wma_gen, wma_wait};
+use crate::estimator::BatchShape;
 use crate::workload::PredictedRequest;
 
 /// O(1) WMA/memory aggregate for one queued batch.
@@ -34,6 +35,29 @@ struct BatchAgg {
     gen: u32,
     size: u32,
     max_s: i64,
+    /// Earliest request arrival — T_q(B) = now − this, maintained so the
+    /// dispatch loop never rescans batch members (monotone min under
+    /// insertion).
+    min_arrival: f64,
+}
+
+/// Cached serving-time estimate for one queued batch.
+///
+/// The estimate is a pure function of (batch shape, estimator state), so
+/// it stays valid until the batch mutates (an insert joins it — the cache
+/// entry is reset) or the estimator refits (detected by comparing the
+/// estimator's generation counter).  `gen == u64::MAX` marks "no value".
+#[derive(Debug, Clone, Copy)]
+struct EstCache {
+    gen: u64,
+    value: f64,
+}
+
+impl EstCache {
+    const EMPTY: EstCache = EstCache {
+        gen: u64::MAX,
+        value: 0.0,
+    };
 }
 
 /// s_p of the decomposition above.
@@ -74,6 +98,8 @@ pub struct AdaptiveBatcher {
     /// O(1) per-batch aggregates, index-parallel to `queue` (a HashMap
     /// here costs a lookup per scanned batch — measured 3× slower).
     aggs: Vec<BatchAgg>,
+    /// Serving-time estimate cache, index-parallel to `queue`.
+    ests: Vec<EstCache>,
 }
 
 impl AdaptiveBatcher {
@@ -83,6 +109,7 @@ impl AdaptiveBatcher {
             queue: Vec::new(),
             next_batch_id: 0,
             aggs: Vec::new(),
+            ests: Vec::new(),
         }
     }
 
@@ -95,6 +122,7 @@ impl AdaptiveBatcher {
     pub fn insert(&mut self, p: PredictedRequest, now: f64) -> u64 {
         let mut phi = i64::MAX;
         let mut best: Option<usize> = None;
+        let mut best_id = u64::MAX;
         let cand_s = s_term(p.len(), p.predicted_gen_len);
 
         for (i, b) in self.queue.iter().enumerate() {
@@ -113,10 +141,13 @@ impl AdaptiveBatcher {
             {
                 continue;
             }
+            // Equal-WMA ties break by batch id so the choice does not
+            // depend on queue order (`take` swap-removes).
             let w = shape_term(new_len, new_gen) + agg.max_s.max(cand_s);
-            if w < phi {
+            if w < phi || (w == phi && b.id < best_id) {
                 phi = w;
                 best = Some(i);
+                best_id = b.id;
             }
         }
 
@@ -127,6 +158,8 @@ impl AdaptiveBatcher {
                 agg.gen = agg.gen.max(p.predicted_gen_len);
                 agg.size += 1;
                 agg.max_s = agg.max_s.max(cand_s);
+                agg.min_arrival = agg.min_arrival.min(p.request.arrival);
+                self.ests[i] = EstCache::EMPTY; // shape changed
                 self.queue[i].requests.push(p);
                 self.queue[i].id
             }
@@ -138,7 +171,9 @@ impl AdaptiveBatcher {
                     gen: p.predicted_gen_len,
                     size: 1,
                     max_s: cand_s,
+                    min_arrival: p.request.arrival,
                 });
+                self.ests.push(EstCache::EMPTY);
                 self.queue.push(Batch::new(id, p, now));
                 id
             }
@@ -146,9 +181,15 @@ impl AdaptiveBatcher {
     }
 
     /// Remove and return the batch at `index` (scheduler hand-off).
+    ///
+    /// O(1) swap-removal: the last queued batch moves into `index`, and
+    /// the index-parallel aggregate/cache vectors move with it.  Queue
+    /// order is therefore NOT stable — all selection logic tie-breaks on
+    /// batch id, never on position.
     pub fn take(&mut self, index: usize) -> Batch {
-        self.aggs.remove(index);
-        self.queue.remove(index)
+        self.aggs.swap_remove(index);
+        self.ests.swap_remove(index);
+        self.queue.swap_remove(index)
     }
 
     /// Re-queue a batch (OOM-split halves — uninsertable, so no agg is
@@ -164,9 +205,53 @@ impl AdaptiveBatcher {
                 .map(|r| s_term(r.len(), r.predicted_gen_len))
                 .max()
                 .unwrap_or(0),
+            min_arrival: batch.earliest_arrival(),
         };
         self.aggs.push(agg);
+        self.ests.push(EstCache::EMPTY);
         self.queue.push(batch);
+    }
+
+    /// Batch shape from the O(1) aggregates (identical to scanning the
+    /// batch members: every field is a maintained maximum).
+    pub fn shape_of(&self, index: usize) -> BatchShape {
+        let agg = &self.aggs[index];
+        BatchShape {
+            batch_size: agg.size,
+            batch_len: agg.len,
+            batch_gen_len: agg.gen,
+        }
+    }
+
+    /// (earliest arrival, created_at, id) for the batch at `index` — the
+    /// scheduler-view fields that do not need an estimator.
+    pub fn view_meta(&self, index: usize) -> (f64, f64, u64) {
+        (
+            self.aggs[index].min_arrival,
+            self.queue[index].created_at,
+            self.queue[index].id,
+        )
+    }
+
+    /// Serving-time estimate for the batch at `index`, cached across
+    /// dispatch rounds.  `estimator_gen` is the estimator's generation
+    /// counter; `compute` runs only when the cache is cold (first query,
+    /// batch mutated, or estimator refit since).
+    pub fn cached_estimate(
+        &mut self,
+        index: usize,
+        estimator_gen: u64,
+        compute: impl FnOnce(&BatchShape) -> f64,
+    ) -> f64 {
+        debug_assert!(estimator_gen != u64::MAX);
+        if self.ests[index].gen != estimator_gen {
+            let shape = self.shape_of(index);
+            self.ests[index] = EstCache {
+                gen: estimator_gen,
+                value: compute(&shape),
+            };
+        }
+        self.ests[index].value
     }
 
     /// Allocate a fresh batch id (for OOM splits).
@@ -334,6 +419,94 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn aggregates_match_member_scan_under_churn() {
+        // After arbitrary insert/take/requeue churn, the O(1) aggregates
+        // must equal a fresh scan of each batch's members (the cached
+        // dispatch path depends on this).
+        prop_check(60, |rng| {
+            let mut b = AdaptiveBatcher::new(cfg());
+            let n = rng.range_usize(1, 80);
+            for i in 0..n {
+                let len = rng.range_u64(1, 1024) as u32;
+                let pred = rng.range_u64(1, 1024) as u32;
+                let mut r = req(i as u64, len, pred);
+                r.request.arrival = rng.f64() * 50.0;
+                b.insert(r, i as f64);
+                // occasionally dispatch / OOM-split-requeue a random batch
+                if b.queue_len() > 1 && rng.range_u64(0, 4) == 0 {
+                    let idx = rng.range_usize(0, b.queue_len());
+                    let taken = b.take(idx);
+                    if taken.size() >= 2 && rng.range_u64(0, 2) == 0 {
+                        let nid = b.alloc_id();
+                        let (l, r2) = taken.split(nid);
+                        b.requeue(l);
+                        b.requeue(r2);
+                    }
+                }
+            }
+            for i in 0..b.queue_len() {
+                let shape = b.shape_of(i);
+                let batch = &b.queue()[i];
+                assert_eq!(shape.batch_size, batch.size());
+                assert_eq!(shape.batch_len, batch.len());
+                assert_eq!(shape.batch_gen_len, batch.predicted_gen_len());
+                let (min_arrival, created_at, id) = b.view_meta(i);
+                assert_eq!(min_arrival, batch.earliest_arrival());
+                assert_eq!(created_at, batch.created_at);
+                assert_eq!(id, batch.id);
+            }
+        });
+    }
+
+    #[test]
+    fn cached_estimate_invalidates_on_mutation_and_generation() {
+        let mut b = AdaptiveBatcher::new(cfg());
+        b.insert(req(0, 20, 15), 0.0);
+        let mut calls = 0;
+        let v1 = b.cached_estimate(0, 1, |_| {
+            calls += 1;
+            7.0
+        });
+        assert_eq!((v1, calls), (7.0, 1));
+        // warm hit: same generation, untouched batch → no recompute
+        let v2 = b.cached_estimate(0, 1, |_| {
+            calls += 1;
+            99.0
+        });
+        assert_eq!((v2, calls), (7.0, 1));
+        // estimator refit → recompute
+        let v3 = b.cached_estimate(0, 2, |_| {
+            calls += 1;
+            8.0
+        });
+        assert_eq!((v3, calls), (8.0, 2));
+        // batch mutation (insert joins it) → recompute even at same gen
+        b.insert(req(1, 21, 16), 0.1);
+        let v4 = b.cached_estimate(0, 2, |s| {
+            calls += 1;
+            assert_eq!(s.batch_size, 2);
+            9.0
+        });
+        assert_eq!((v4, calls), (9.0, 3));
+    }
+
+    #[test]
+    fn take_swap_removal_keeps_vectors_parallel() {
+        let mut b = AdaptiveBatcher::new(cfg());
+        b.insert(req(0, 10, 10), 0.0);
+        b.insert(req(1, 500, 500), 0.1);
+        b.insert(req(2, 1000, 1000), 0.2);
+        assert_eq!(b.queue_len(), 3);
+        let taken = b.take(0);
+        // the last batch swapped into slot 0; aggregates must follow
+        assert_eq!(b.queue_len(), 2);
+        for i in 0..b.queue_len() {
+            assert_eq!(b.shape_of(i).batch_len, b.queue()[i].len());
+        }
+        assert!(taken.size() >= 1);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use magnus::metrics::{to_csv, to_markdown, write_results_file, Summary};
 use magnus::predictor::{GenLenPredictor, Variant};
 use magnus::sim::{run_policy, Policy};
 use magnus::util::cli::Args;
+use magnus::util::par::par_map;
 use magnus::util::stats::{linear_fit, pearson, rmse};
 use magnus::workload::dataset::{build_predictor_split, build_task_dataset};
 use magnus::workload::{generate_trace, LlmProfile, TaskId, TraceSpec};
@@ -256,21 +257,32 @@ fn sweep(
     let n = args.get_usize("requests", 800);
     let train = args.get_usize("train", 300);
     let cfg = ServingConfig::default();
-    let mut out = Vec::new();
-    for &rate in &rates {
+    // Every (policy × load-point) cell is an independent simulator run
+    // (its own trace copy, predictor, engine, logs), so the whole sweep
+    // is embarrassingly parallel; par_map returns cells in index order,
+    // so the emitted tables are bit-for-bit those of the serial sweep.
+    let n_cells = rates.len() * policies.len();
+    let cells: Vec<Summary> = par_map(n_cells, |cell| {
+        let rate = rates[cell / policies.len()];
+        let policy = policies[cell % policies.len()];
         let trace = generate_trace(&TraceSpec {
             rate,
             n_requests: n,
             seed: 99,
             ..Default::default()
         });
-        let summaries: Vec<Summary> = policies
-            .iter()
-            .map(|p| run_policy(&cfg, *p, &trace, train).metrics.summarise())
-            .collect();
-        eprintln!("{name}: rate {rate} done");
-        out.push((rate, summaries));
-    }
+        let s = run_policy(&cfg, policy, &trace, train).metrics.summarise();
+        eprintln!("{name}: rate {rate} {} done", policy.name());
+        s
+    });
+    let out: Vec<(f64, Vec<Summary>)> = rates
+        .iter()
+        .enumerate()
+        .map(|(ri, &rate)| {
+            let row = cells[ri * policies.len()..(ri + 1) * policies.len()].to_vec();
+            (rate, row)
+        })
+        .collect();
     (policies.iter().map(|p| p.name()).collect(), out)
 }
 
@@ -427,6 +439,7 @@ fn overhead(_args: &Args) {
             queuing_time: i as f64,
             est_serving_time: 1.0 + i as f64,
             created_at: i as f64,
+            batch_id: i as u64,
         })
         .collect();
     let t = Instant::now();

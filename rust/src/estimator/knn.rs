@@ -1,19 +1,159 @@
 //! K-nearest-neighbour regressor (sklearn stand-in, from scratch).
 //!
-//! Distance-weighted KNN over z-score-normalised features.  The serving
-//! time estimator's feature space is tiny (3-d) and its train set is a few
-//! thousand logged batches, so brute-force scan is both simple and faster
-//! than tree indices at this scale (verified in benches/bench_estimator).
+//! Distance-weighted KNN over z-score-normalised features, engineered for
+//! the serving-time estimator's hot path:
+//!
+//! * rows live in one contiguous row-major buffer (no per-row `Vec`, no
+//!   pointer chasing during scans);
+//! * k-selection uses a bounded max-heap — O(n log k) worst case instead
+//!   of a `sort_by` per candidate;
+//! * normalisation is *virtual*: raw rows are stored once and distances
+//!   are scaled by `1/σ` at query time, so refits never rewrite the
+//!   buffer (the mean cancels inside the distance);
+//! * continuous learning appends rows and updates running moments in
+//!   O(d) — no denormalise-and-refit-from-scratch;
+//! * a 3-d grid (bucket) index over raw space answers most queries by
+//!   expanding Chebyshev rings of cells, with an exact stopping bound, and
+//!   falls back to the brute-force scan for other dimensionalities or tiny
+//!   train sets.  Grid answers are *identical* to brute force (property-
+//!   tested): ties at the k boundary break by (distance, index) in both.
+
+use std::collections::BinaryHeap;
+
+/// Grid index kicks in at this many stored rows (below it, the flat scan
+/// wins on constant factors — see benches/bench_estimator).
+const GRID_MIN_POINTS: usize = 256;
+
+/// A candidate neighbour; the heap keeps the k lexicographically smallest
+/// (d2, idx) pairs with the largest on top.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    d2: f32,
+    idx: u32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.d2.total_cmp(&other.d2).then(self.idx.cmp(&other.idx))
+    }
+}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Uniform 3-d bucket index over *raw* feature space.
+///
+/// Cell geometry is fixed at build time; the query-time metric (the
+/// current `1/σ` scaling) only enters through the ring lower bound, so
+/// the index survives normalisation drift from continuous learning.
+/// Points outside the original bounding box clamp to edge cells, which
+/// can only move them to *earlier* rings — the stopping bound stays a
+/// true lower bound (see `ring_query`).
+#[derive(Debug, Clone)]
+struct Grid {
+    dims: [usize; 3],
+    lo: [f32; 3],
+    /// Raw-space cell widths (sentinel 1.0 on degenerate dims).
+    w: [f32; 3],
+    cells: Vec<Vec<u32>>,
+    /// Row count when the grid was (re)built; doubling triggers a rebuild
+    /// so occupancy stays balanced (amortised O(log n) rebuilds).
+    built_at_n: usize,
+}
+
+impl Grid {
+    fn build(xs: &[f32], n: usize) -> Grid {
+        let mut lo = [f32::INFINITY; 3];
+        let mut hi = [f32::NEG_INFINITY; 3];
+        for i in 0..n {
+            for j in 0..3 {
+                let v = xs[i * 3 + j];
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        // ~8 points per cell on average, capped so the cell table stays
+        // small even at large n.
+        let r = (((n as f64) / 8.0).cbrt().ceil() as usize).clamp(1, 32);
+        let mut dims = [1usize; 3];
+        let mut w = [1.0f32; 3];
+        for j in 0..3 {
+            let extent = hi[j] - lo[j];
+            if extent.is_finite() && extent > 0.0 {
+                let wj = extent / r as f32;
+                if wj > 0.0 && wj.is_finite() {
+                    dims[j] = r;
+                    w[j] = wj;
+                }
+            }
+        }
+        let mut grid = Grid {
+            dims,
+            lo,
+            w,
+            cells: vec![Vec::new(); dims[0] * dims[1] * dims[2]],
+            built_at_n: n,
+        };
+        for i in 0..n {
+            let p = [xs[i * 3], xs[i * 3 + 1], xs[i * 3 + 2]];
+            grid.insert(p, i as u32);
+        }
+        grid
+    }
+
+    #[inline]
+    fn coords(&self, p: [f32; 3]) -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for j in 0..3 {
+            let raw = ((p[j] - self.lo[j]) / self.w[j]).floor();
+            // clamp handles out-of-box points AND the hi[j] boundary
+            c[j] = if raw.is_finite() && raw > 0.0 {
+                (raw as usize).min(self.dims[j] - 1)
+            } else {
+                0
+            };
+        }
+        c
+    }
+
+    #[inline]
+    fn cell_index(&self, c: [usize; 3]) -> usize {
+        (c[0] * self.dims[1] + c[1]) * self.dims[2] + c[2]
+    }
+
+    fn insert(&mut self, p: [f32; 3], idx: u32) {
+        let c = self.coords(p);
+        let ci = self.cell_index(c);
+        self.cells[ci].push(idx);
+    }
+}
 
 /// KNN regression model.
 #[derive(Debug, Clone)]
 pub struct Knn {
     k: usize,
-    /// Normalised rows.
-    x: Vec<Vec<f32>>,
+    d: usize,
+    /// RAW rows, row-major, n × d.
+    xs: Vec<f32>,
     y: Vec<f32>,
-    /// Per-feature (mean, std) used for normalisation.
-    norm: Vec<(f32, f32)>,
+    /// Running per-feature moments (f64: no drift over many appends).
+    sum: Vec<f64>,
+    sumsq: Vec<f64>,
+    /// Derived normalisation: per-feature mean and 1/std.
+    mean: Vec<f32>,
+    inv_std: Vec<f32>,
+    grid: Option<Grid>,
 }
 
 impl Knn {
@@ -23,61 +163,224 @@ impl Knn {
         assert!(!x.is_empty());
         assert!(k >= 1);
         let d = x[0].len();
-        let n = x.len() as f32;
-        let mut norm = Vec::with_capacity(d);
-        for j in 0..d {
-            let mean = x.iter().map(|r| r[j]).sum::<f32>() / n;
-            let var = x.iter().map(|r| (r[j] - mean).powi(2)).sum::<f32>() / n;
-            let std = var.sqrt().max(1e-6);
-            norm.push((mean, std));
-        }
-        let xn: Vec<Vec<f32>> = x
-            .iter()
-            .map(|r| {
-                r.iter()
-                    .zip(&norm)
-                    .map(|(v, (m, s))| (v - m) / s)
-                    .collect()
-            })
-            .collect();
-        Knn {
+        let mut m = Knn {
             k,
-            x: xn,
-            y: y.to_vec(),
-            norm,
+            d,
+            xs: Vec::with_capacity(x.len() * d),
+            y: Vec::new(),
+            sum: vec![0.0; d],
+            sumsq: vec![0.0; d],
+            mean: vec![0.0; d],
+            inv_std: vec![0.0; d],
+            grid: None,
+        };
+        m.append(x, y);
+        m
+    }
+
+    /// Append new samples and refresh normalisation in O(extra·d + d):
+    /// running moments give the new (mean, std) directly, and since rows
+    /// are stored raw nothing is rewritten.  The grid index absorbs the
+    /// new points incrementally and rebuilds only when the model has
+    /// doubled since the last build.
+    pub fn append(&mut self, extra_x: &[Vec<f32>], extra_y: &[f32]) {
+        assert_eq!(extra_x.len(), extra_y.len());
+        if extra_x.is_empty() {
+            return;
+        }
+        let start = self.len();
+        for row in extra_x {
+            assert_eq!(row.len(), self.d);
+            for (j, v) in row.iter().enumerate() {
+                self.sum[j] += *v as f64;
+                self.sumsq[j] += (*v as f64) * (*v as f64);
+            }
+            self.xs.extend_from_slice(row);
+        }
+        self.y.extend_from_slice(extra_y);
+        let n = self.len() as f64;
+        for j in 0..self.d {
+            let mean = self.sum[j] / n;
+            let var = (self.sumsq[j] / n - mean * mean).max(0.0);
+            let std = (var.sqrt() as f32).max(1e-6);
+            self.mean[j] = mean as f32;
+            self.inv_std[j] = 1.0 / std;
+        }
+        if self.d == 3 {
+            let n = self.len();
+            let rebuild = match &self.grid {
+                None => n >= GRID_MIN_POINTS,
+                Some(g) => n >= 2 * g.built_at_n,
+            };
+            if rebuild {
+                self.grid = Some(Grid::build(&self.xs, n));
+            } else if let Some(mut grid) = self.grid.take() {
+                for i in start..n {
+                    let p = [self.xs[i * 3], self.xs[i * 3 + 1], self.xs[i * 3 + 2]];
+                    grid.insert(p, i as u32);
+                }
+                self.grid = Some(grid);
+            }
         }
     }
 
-    fn normalise(&self, row: &[f32]) -> Vec<f32> {
-        row.iter()
-            .zip(&self.norm)
-            .map(|(v, (m, s))| (v - m) / s)
-            .collect()
+    /// Append new samples into a copy (continuous-learning refit).  Kept
+    /// for API compatibility; [`Knn::append`] is the in-place fast path.
+    pub fn refit_with(&self, extra_x: &[Vec<f32>], extra_y: &[f32]) -> Knn {
+        let mut m = self.clone();
+        m.append(extra_x, extra_y);
+        m
+    }
+
+    /// Squared z-scored distance between stored row `i` and query `row`
+    /// (the mean cancels, so only the 1/σ scaling is applied).
+    #[inline]
+    fn d2(&self, i: usize, row: &[f32]) -> f32 {
+        let base = i * self.d;
+        let mut s = 0f32;
+        for j in 0..self.d {
+            let t = (self.xs[base + j] - row[j]) * self.inv_std[j];
+            s += t * t;
+        }
+        s
+    }
+
+    /// Offer candidate `i` to a heap holding the k smallest (d2, idx).
+    #[inline]
+    fn consider(heap: &mut BinaryHeap<Cand>, k: usize, cand: Cand) {
+        if heap.len() < k {
+            heap.push(cand);
+        } else if let Some(&top) = heap.peek() {
+            if cand < top {
+                heap.pop();
+                heap.push(cand);
+            }
+        }
+    }
+
+    /// The k nearest stored rows, sorted ascending by (d2, idx).
+    fn nearest(&self, row: &[f32]) -> Vec<Cand> {
+        let k = self.k.min(self.len());
+        let mut heap: BinaryHeap<Cand> = BinaryHeap::with_capacity(k + 1);
+        match &self.grid {
+            Some(grid) => self.ring_query(grid, row, k, &mut heap),
+            None => {
+                for i in 0..self.len() {
+                    Self::consider(
+                        &mut heap,
+                        k,
+                        Cand {
+                            d2: self.d2(i, row),
+                            idx: i as u32,
+                        },
+                    );
+                }
+            }
+        }
+        let mut out: Vec<Cand> = heap.into_vec();
+        out.sort_unstable();
+        out
+    }
+
+    /// Exact grid-accelerated k-selection: expand Chebyshev rings of
+    /// cells around the query's (clamped) cell; points in any ring ≥ m
+    /// are at least (m−1)·min_j(w_j/σ_j) away, so once the heap is full
+    /// and its worst distance is under that bound the remaining rings
+    /// cannot improve the answer.
+    fn ring_query(&self, grid: &Grid, row: &[f32], k: usize, heap: &mut BinaryHeap<Cand>) {
+        let q = [row[0], row[1], row[2]];
+        let c = grid.coords(q);
+        let mut max_r = 0usize;
+        for j in 0..3 {
+            max_r = max_r.max(c[j]).max(grid.dims[j] - 1 - c[j]);
+        }
+        // Lower-bound cell width in scaled space over the non-degenerate
+        // dims (size-1 dims never separate rings, so they are excluded).
+        let mut min_w_scaled = f32::INFINITY;
+        for j in 0..3 {
+            if grid.dims[j] > 1 {
+                min_w_scaled = min_w_scaled.min(grid.w[j] * self.inv_std[j]);
+            }
+        }
+        for r in 0..=max_r as isize {
+            for dx in -r..=r {
+                let x = c[0] as isize + dx;
+                if x < 0 || x >= grid.dims[0] as isize {
+                    continue;
+                }
+                for dy in -r..=r {
+                    let y = c[1] as isize + dy;
+                    if y < 0 || y >= grid.dims[1] as isize {
+                        continue;
+                    }
+                    let on_shell = dx.abs() == r || dy.abs() == r;
+                    let mut visit = |dz: isize| {
+                        let z = c[2] as isize + dz;
+                        if z < 0 || z >= grid.dims[2] as isize {
+                            return;
+                        }
+                        let ci =
+                            grid.cell_index([x as usize, y as usize, z as usize]);
+                        for &idx in &grid.cells[ci] {
+                            Self::consider(
+                                heap,
+                                k,
+                                Cand {
+                                    d2: self.d2(idx as usize, row),
+                                    idx,
+                                },
+                            );
+                        }
+                    };
+                    if on_shell {
+                        for dz in -r..=r {
+                            visit(dz);
+                        }
+                    } else if r > 0 {
+                        visit(-r);
+                        visit(r);
+                    }
+                }
+            }
+            if heap.len() == k && min_w_scaled.is_finite() {
+                // Strict: an unvisited point at exactly the bound could
+                // still tie-break its way into the k set.
+                let bound = r as f32 * min_w_scaled;
+                if let Some(top) = heap.peek() {
+                    if top.d2 < bound * bound {
+                        return;
+                    }
+                }
+            }
+        }
     }
 
     /// Distance-weighted mean of the k nearest targets.
+    ///
+    /// When every neighbour is so far that the inverse-distance weights
+    /// underflow (or the distances overflow to ∞ — e.g. all-identical
+    /// training points queried from far away), the weighted mean is
+    /// 0/0 = NaN; this falls back to the unweighted neighbour mean.
     pub fn predict(&self, row: &[f32]) -> f32 {
-        let q = self.normalise(row);
-        // Partial selection of k smallest distances.
-        let mut best: Vec<(f32, usize)> = Vec::with_capacity(self.k + 1);
-        for (i, xr) in self.x.iter().enumerate() {
-            let d2: f32 = xr.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
-            if best.len() < self.k {
-                best.push((d2, i));
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            } else if d2 < best[self.k - 1].0 {
-                best[self.k - 1] = (d2, i);
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            }
-        }
+        assert_eq!(row.len(), self.d);
+        let best = self.nearest(row);
+        self.weighted_mean(&best)
+    }
+
+    fn weighted_mean(&self, best: &[Cand]) -> f32 {
         let mut wsum = 0f32;
         let mut vsum = 0f32;
-        for (d2, i) in &best {
-            let w = 1.0 / (d2.sqrt() + 1e-6);
+        for c in best {
+            let w = 1.0 / (c.d2.sqrt() + 1e-6);
             wsum += w;
-            vsum += w * self.y[*i];
+            vsum += w * self.y[c.idx as usize];
         }
-        vsum / wsum
+        if wsum.is_finite() && wsum > f32::MIN_POSITIVE && vsum.is_finite() {
+            vsum / wsum
+        } else {
+            let s: f32 = best.iter().map(|c| self.y[c.idx as usize]).sum();
+            s / best.len() as f32
+        }
     }
 
     /// Number of stored samples.
@@ -89,30 +392,37 @@ impl Knn {
         self.y.is_empty()
     }
 
-    /// Append new samples and renormalise (continuous learning refit).
-    pub fn refit_with(&self, extra_x: &[Vec<f32>], extra_y: &[f32]) -> Knn {
-        // Denormalise stored rows back to raw space, then refit fresh.
-        let raw: Vec<Vec<f32>> = self
-            .x
-            .iter()
-            .map(|r| {
-                r.iter()
-                    .zip(&self.norm)
-                    .map(|(v, (m, s))| v * s + m)
-                    .collect()
-            })
-            .collect();
-        let mut all_x = raw;
-        all_x.extend_from_slice(extra_x);
-        let mut all_y = self.y.clone();
-        all_y.extend_from_slice(extra_y);
-        Knn::fit(&all_x, &all_y, self.k)
+    /// Whether the bucket index is active (diagnostics/benches).
+    pub fn has_index(&self) -> bool {
+        self.grid.is_some()
+    }
+
+    /// Brute-force reference prediction (ignores the grid index); used by
+    /// the equivalence property tests and benches.
+    pub fn predict_bruteforce(&self, row: &[f32]) -> f32 {
+        assert_eq!(row.len(), self.d);
+        let k = self.k.min(self.len());
+        let mut heap: BinaryHeap<Cand> = BinaryHeap::with_capacity(k + 1);
+        for i in 0..self.len() {
+            Self::consider(
+                &mut heap,
+                k,
+                Cand {
+                    d2: self.d2(i, row),
+                    idx: i as u32,
+                },
+            );
+        }
+        let mut best = heap.into_vec();
+        best.sort_unstable();
+        self.weighted_mean(&best)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop_check;
     use crate::util::Rng;
 
     #[test]
@@ -163,5 +473,117 @@ mod tests {
         let m = Knn::fit(&x, &y, 10);
         let p = m.predict(&[0.5]);
         assert!(p > 2.0 && p < 4.0);
+    }
+
+    /// Regression (wsum underflow): all-identical training points have
+    /// σ = ε, so a far query's scaled distances overflow to ∞, every
+    /// weight collapses to 0 and the weighted mean used to be 0/0 = NaN.
+    /// The guard must return the unweighted neighbour mean instead.
+    #[test]
+    fn far_query_on_identical_points_falls_back_to_mean() {
+        let x = vec![vec![5.0], vec![5.0], vec![5.0]];
+        let y = vec![1.0, 2.0, 3.0];
+        let m = Knn::fit(&x, &y, 3);
+        let p = m.predict(&[1e20]);
+        assert!(p.is_finite(), "p={p}");
+        assert!((p - 2.0).abs() < 1e-5, "p={p}");
+    }
+
+    #[test]
+    fn incremental_append_matches_fresh_fit() {
+        // Appending must yield the same predictions as one fresh fit on
+        // the union (running moments ≡ full-pass moments).
+        let mut rng = Rng::new(9);
+        let gen_rows = |rng: &mut Rng, n: usize| -> (Vec<Vec<f32>>, Vec<f32>) {
+            let x: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    vec![
+                        rng.range_f64(1.0, 33.0) as f32,
+                        rng.range_f64(8.0, 1025.0) as f32,
+                        rng.range_f64(4.0, 1025.0) as f32,
+                    ]
+                })
+                .collect();
+            let y: Vec<f32> = x.iter().map(|r| r[0] + 0.01 * r[1] * r[2]).collect();
+            (x, y)
+        };
+        let (x1, y1) = gen_rows(&mut rng, 400);
+        let (x2, y2) = gen_rows(&mut rng, 150);
+        let mut incremental = Knn::fit(&x1, &y1, 5);
+        incremental.append(&x2, &y2);
+        let union_x: Vec<Vec<f32>> = x1.iter().chain(&x2).cloned().collect();
+        let union_y: Vec<f32> = y1.iter().chain(&y2).copied().collect();
+        let fresh = Knn::fit(&union_x, &union_y, 5);
+        let (probes, _) = gen_rows(&mut rng, 50);
+        for p in &probes {
+            let a = incremental.predict(p);
+            let b = fresh.predict(p);
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                "incremental {a} vs fresh {b}"
+            );
+        }
+    }
+
+    /// The grid index must be invisible: identical predictions to the
+    /// brute-force scan on random 3-d data, including duplicated rows
+    /// (distance ties) and out-of-box queries.
+    #[test]
+    fn grid_index_matches_bruteforce() {
+        prop_check(20, |rng| {
+            let n = rng.range_usize(GRID_MIN_POINTS, 1200);
+            let x: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    // coarse rounding → plenty of exact duplicates
+                    vec![
+                        rng.range_u64(1, 33) as f32,
+                        (rng.range_u64(1, 65) * 16) as f32,
+                        (rng.range_u64(1, 65) * 16) as f32,
+                    ]
+                })
+                .collect();
+            let y: Vec<f32> = (0..n).map(|i| (i % 97) as f32).collect();
+            let m = Knn::fit(&x, &y, 5);
+            assert!(m.has_index(), "grid must be active at n={n}");
+            for _ in 0..30 {
+                let probe = vec![
+                    rng.range_f64(-10.0, 50.0) as f32,
+                    rng.range_f64(-100.0, 1500.0) as f32,
+                    rng.range_f64(-100.0, 1500.0) as f32,
+                ];
+                let a = m.predict(&probe);
+                let b = m.predict_bruteforce(&probe);
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "grid {a} != brute {b} at {probe:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn grid_survives_incremental_appends() {
+        let mut rng = Rng::new(17);
+        let row = |rng: &mut Rng| {
+            vec![
+                rng.range_u64(1, 33) as f32,
+                rng.range_u64(8, 1025) as f32,
+                rng.range_u64(4, 1025) as f32,
+            ]
+        };
+        let x: Vec<Vec<f32>> = (0..GRID_MIN_POINTS).map(|_| row(&mut rng)).collect();
+        let y: Vec<f32> = (0..GRID_MIN_POINTS).map(|i| i as f32).collect();
+        let mut m = Knn::fit(&x, &y, 5);
+        // many small appends: insertions + at least one doubling rebuild
+        for round in 0..20 {
+            let ex: Vec<Vec<f32>> = (0..40).map(|_| row(&mut rng)).collect();
+            let ey: Vec<f32> = (0..40).map(|i| (round * 40 + i) as f32).collect();
+            m.append(&ex, &ey);
+            let probe = row(&mut rng);
+            let a = m.predict(&probe);
+            let b = m.predict_bruteforce(&probe);
+            assert!(a.to_bits() == b.to_bits(), "round {round}: {a} != {b}");
+        }
+        assert_eq!(m.len(), GRID_MIN_POINTS + 20 * 40);
     }
 }

@@ -30,12 +30,16 @@ impl BatchShape {
 }
 
 /// Serving-time estimator service.
+///
+/// The model is a single incrementally-extended [`Knn`]: continuous
+/// learning appends rows and renormalises via running moments instead of
+/// refitting from scratch (which was O(n) per sweep, O(n²) cumulative
+/// over a run).  Every model change bumps `generation`, which the
+/// batcher's per-batch estimate cache uses as its invalidation key.
 pub struct ServingTimeEstimator {
     knn: Option<Knn>,
     k: usize,
-    /// Raw training rows retained for full refits.
-    train_x: Vec<Vec<f32>>,
-    train_y: Vec<f32>,
+    generation: u64,
 }
 
 impl ServingTimeEstimator {
@@ -43,30 +47,43 @@ impl ServingTimeEstimator {
         ServingTimeEstimator {
             knn: None,
             k,
-            train_x: Vec::new(),
-            train_y: Vec::new(),
+            generation: 0,
         }
     }
 
     /// Fit on logged (shape, serving time seconds) pairs.
     pub fn train(&mut self, shapes: &[BatchShape], times_s: &[f64]) {
         assert_eq!(shapes.len(), times_s.len());
-        self.train_x = shapes.iter().map(|s| s.row()).collect();
-        self.train_y = times_s.iter().map(|&t| t as f32).collect();
-        if !self.train_x.is_empty() {
-            self.knn = Some(Knn::fit(&self.train_x, &self.train_y, self.k));
+        self.generation += 1;
+        if shapes.is_empty() {
+            self.knn = None;
+            return;
         }
+        let x: Vec<Vec<f32>> = shapes.iter().map(|s| s.row()).collect();
+        let y: Vec<f32> = times_s.iter().map(|&t| t as f32).collect();
+        self.knn = Some(Knn::fit(&x, &y, self.k));
     }
 
     /// Continuous learning (§III-D): extend with badly-estimated batches.
+    /// Incremental — O(new rows), not O(history).
     pub fn augment_and_refit(&mut self, shapes: &[BatchShape], times_s: &[f64]) {
         assert_eq!(shapes.len(), times_s.len());
         if shapes.is_empty() {
             return;
         }
-        self.train_x.extend(shapes.iter().map(|s| s.row()));
-        self.train_y.extend(times_s.iter().map(|&t| t as f32));
-        self.knn = Some(Knn::fit(&self.train_x, &self.train_y, self.k));
+        self.generation += 1;
+        let x: Vec<Vec<f32>> = shapes.iter().map(|s| s.row()).collect();
+        let y: Vec<f32> = times_s.iter().map(|&t| t as f32).collect();
+        match &mut self.knn {
+            Some(m) => m.append(&x, &y),
+            None => self.knn = Some(Knn::fit(&x, &y, self.k)),
+        }
+    }
+
+    /// Model-change counter: bumped by every train/augment.  Cached
+    /// estimates tagged with an older generation are stale.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Estimate the serving time of a queued batch in seconds.
@@ -83,7 +100,7 @@ impl ServingTimeEstimator {
     }
 
     pub fn train_size(&self) -> usize {
-        self.train_y.len()
+        self.knn.as_ref().map_or(0, |m| m.len())
     }
 
     pub fn is_trained(&self) -> bool {
@@ -176,6 +193,21 @@ mod tests {
         est.augment_and_refit(&ex, &et);
         let err_after = (est.estimate(&big) - truth).abs() / truth;
         assert!(err_after < err_before, "{err_after} !< {err_before}");
+    }
+
+    #[test]
+    fn generation_tracks_model_changes() {
+        let (shapes, times) = synth_data(50, 6);
+        let mut est = ServingTimeEstimator::new(3);
+        assert_eq!(est.generation(), 0);
+        est.train(&shapes, &times);
+        assert_eq!(est.generation(), 1);
+        // empty augment is a no-op: cached estimates stay valid
+        est.augment_and_refit(&[], &[]);
+        assert_eq!(est.generation(), 1);
+        est.augment_and_refit(&shapes[..5], &times[..5]);
+        assert_eq!(est.generation(), 2);
+        assert_eq!(est.train_size(), 55);
     }
 
     #[test]

@@ -15,10 +15,18 @@ use crate::predictor::GenLenPredictor;
 use crate::workload::Request;
 
 /// Sweeps the log DB and retrains the two learned components.
+///
+/// Sweeps are incremental: each keeps an append-index cursor into the
+/// log DB (entries arrive in completion-time order), so a sweep touches
+/// only the entries logged since the previous one — O(new) per sweep
+/// instead of rescanning the whole log, and the refits they trigger are
+/// themselves incremental appends.
 pub struct ContinuousLearner {
     cfg: LearningConfig,
     last_pred_sweep: f64,
     last_est_sweep: f64,
+    pred_cursor: usize,
+    est_cursor: usize,
     /// Telemetry: (time, #collected) per sweep.
     pub predictor_sweeps: Vec<(f64, usize)>,
     pub estimator_sweeps: Vec<(f64, usize)>,
@@ -30,6 +38,8 @@ impl ContinuousLearner {
             cfg,
             last_pred_sweep: 0.0,
             last_est_sweep: 0.0,
+            pred_cursor: 0,
+            est_cursor: 0,
             predictor_sweeps: Vec::new(),
             estimator_sweeps: Vec::new(),
         }
@@ -52,19 +62,20 @@ impl ContinuousLearner {
     }
 
     /// §III-B: collect requests with |err| > 10 tokens AND > 10% of the
-    /// actual generation length; augment + refit.
+    /// actual generation length; augment + refit.  Only the log tail
+    /// since the previous sweep is visited (cursor-indexed).
     fn sweep_predictor(&mut self, now: f64, db: &LogDb, predictor: &mut GenLenPredictor) {
-        let logs = db.requests_between(self.last_pred_sweep, now);
         self.last_pred_sweep = now;
-        let bad: Vec<Request> = logs
-            .iter()
-            .filter(|l| {
-                let err = (l.predicted_gen_len as f64 - l.actual_gen_len as f64).abs();
-                err > self.cfg.predictor_err_tokens
-                    && err > self.cfg.predictor_err_frac * l.actual_gen_len as f64
-            })
-            .map(|l| l.request.clone())
-            .collect();
+        let (err_tokens, err_frac) =
+            (self.cfg.predictor_err_tokens, self.cfg.predictor_err_frac);
+        let mut bad: Vec<Request> = Vec::new();
+        let visited = db.visit_requests_from(self.pred_cursor, |l| {
+            let err = (l.predicted_gen_len as f64 - l.actual_gen_len as f64).abs();
+            if err > err_tokens && err > err_frac * l.actual_gen_len as f64 {
+                bad.push(l.request.clone());
+            }
+        });
+        self.pred_cursor += visited;
         self.predictor_sweeps.push((now, bad.len()));
         predictor.augment_and_refit(&bad);
     }
@@ -74,18 +85,17 @@ impl ContinuousLearner {
     /// "re-predicted with the actual generation length" before the error
     /// test — the logged shape already carries the actual G(B).
     fn sweep_estimator(&mut self, now: f64, db: &LogDb, estimator: &mut ServingTimeEstimator) {
-        let logs = db.batches_between(self.last_est_sweep, now);
         self.last_est_sweep = now;
-        let bad: Vec<(BatchShape, f64)> = logs
-            .iter()
-            .filter(|l| {
-                let repredicted = estimator.estimate(&l.shape);
-                let err = (repredicted - l.actual_time).abs();
-                err > self.cfg.estimator_err_s
-                    && err > self.cfg.estimator_err_frac * l.actual_time
-            })
-            .map(|l| (l.shape, l.actual_time))
-            .collect();
+        let (err_s, err_frac) = (self.cfg.estimator_err_s, self.cfg.estimator_err_frac);
+        let mut bad: Vec<(BatchShape, f64)> = Vec::new();
+        let visited = db.visit_batches_from(self.est_cursor, |l| {
+            let repredicted = estimator.estimate(&l.shape);
+            let err = (repredicted - l.actual_time).abs();
+            if err > err_s && err > err_frac * l.actual_time {
+                bad.push((l.shape, l.actual_time));
+            }
+        });
+        self.est_cursor += visited;
         self.estimator_sweeps.push((now, bad.len()));
         if !bad.is_empty() {
             let shapes: Vec<BatchShape> = bad.iter().map(|b| b.0).collect();
@@ -168,6 +178,32 @@ mod tests {
         // now the estimator knows this region
         assert!((est.estimate(&shape) - 30.0).abs() < 1.0);
         let _ = split;
+    }
+
+    #[test]
+    fn sweeps_never_revisit_old_entries() {
+        // The same bad log entry must be collected exactly once across
+        // sweeps (cursor-indexed tails, not time-window rescans).
+        let cfg = ServingConfig::default();
+        let db = LogDb::new();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 30, 10, 1024, 23);
+        db.log_request(RequestLog {
+            request: split.train[0].clone(),
+            predicted_gen_len: split.train[0].gen_len + 50,
+            actual_gen_len: split.train[0].gen_len,
+            at: 100.0,
+        });
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let mut est = ServingTimeEstimator::new(3);
+        let mut l = learner(100.0, 1e18);
+        l.tick(150.0, &db, &mut p, &mut est);
+        assert_eq!(l.predictor_sweeps[0].1, 1);
+        let n1 = p.train_size();
+        // second sweep: no new logs → nothing collected, no refit growth
+        l.tick(300.0, &db, &mut p, &mut est);
+        assert_eq!(l.predictor_sweeps[1].1, 0);
+        assert_eq!(p.train_size(), n1);
     }
 
     #[test]

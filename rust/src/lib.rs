@@ -33,8 +33,10 @@ pub mod logdb;
 pub mod memory;
 pub mod metrics;
 pub mod predictor;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod tokenizer;

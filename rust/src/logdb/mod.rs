@@ -82,6 +82,33 @@ impl LogDb {
             .collect()
     }
 
+    /// Visit request logs from append index `from` onward; returns how
+    /// many were visited so the caller can advance a cursor.
+    ///
+    /// Entries are appended in completion order (nondecreasing `at`), so
+    /// an index cursor replaces the O(total-log) time-window scans the
+    /// continuous-learning sweeps used to do — each sweep now costs
+    /// O(new entries), O(n) cumulative over a run instead of O(n²).
+    pub fn visit_requests_from<F: FnMut(&RequestLog)>(&self, from: usize, mut f: F) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let tail = &inner.requests[from.min(inner.requests.len())..];
+        for entry in tail {
+            f(entry);
+        }
+        tail.len()
+    }
+
+    /// Visit batch logs from append index `from` onward; returns how many
+    /// were visited (see [`LogDb::visit_requests_from`]).
+    pub fn visit_batches_from<F: FnMut(&BatchLog)>(&self, from: usize, mut f: F) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let tail = &inner.batches[from.min(inner.batches.len())..];
+        for entry in tail {
+            f(entry);
+        }
+        tail.len()
+    }
+
     pub fn n_requests(&self) -> usize {
         self.inner.lock().unwrap().requests.len()
     }
@@ -180,6 +207,27 @@ mod tests {
         assert_eq!(db.requests_between(1.0, 3.0).len(), 2); // (1,3] → 2,3
         assert_eq!(db.batches_between(0.0, 10.0).len(), 4);
         assert_eq!(db.requests_between(4.0, 9.0).len(), 0);
+    }
+
+    #[test]
+    fn cursor_visits_only_the_tail() {
+        let db = LogDb::new();
+        for t in [1.0, 2.0, 3.0] {
+            db.log_request(rlog(t));
+            db.log_batch(blog(t));
+        }
+        let mut cursor = 0usize;
+        let mut seen = Vec::new();
+        cursor += db.visit_requests_from(cursor, |r| seen.push(r.at));
+        assert_eq!((cursor, seen.as_slice()), (3, &[1.0, 2.0, 3.0][..]));
+        // nothing new → no visits
+        assert_eq!(db.visit_requests_from(cursor, |_| panic!("no tail")), 0);
+        db.log_request(rlog(4.0));
+        let mut tail = Vec::new();
+        cursor += db.visit_requests_from(cursor, |r| tail.push(r.at));
+        assert_eq!((cursor, tail.as_slice()), (4, &[4.0][..]));
+        // past-the-end cursor is safe
+        assert_eq!(db.visit_batches_from(99, |_| panic!("no tail")), 0);
     }
 
     #[test]

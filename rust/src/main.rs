@@ -16,12 +16,11 @@
 
 use magnus::config::ServingConfig;
 use magnus::predictor::{GenLenPredictor, Variant};
-use magnus::server::{serve_trace, LivePolicy, ServeOptions};
-use magnus::sim::{run_policy, MagnusPolicy, Policy};
+use magnus::sim::{run_policy, Policy};
 use magnus::util::cli::Args;
 use magnus::util::stats::rmse;
 use magnus::workload::dataset::build_predictor_split;
-use magnus::workload::{generate_trace, trace_from_json, trace_to_json, LlmProfile, TraceSpec};
+use magnus::workload::{generate_trace, trace_to_json, LlmProfile, TraceSpec};
 
 const USAGE: &str = "magnus <serve|sim|gen-trace|eval-pred> [options]
   common:    --config <file.json>  --seed N
@@ -71,62 +70,7 @@ fn run() -> anyhow::Result<()> {
                 s.oom_events
             );
         }
-        "serve" => {
-            let g_max = args.get_u64("g-max", 24) as u32;
-            let l_cap = args.get_u64("l-cap", 40) as u32;
-            cfg.gpu.g_max = g_max;
-            let trace = match args.get("trace") {
-                Some(path) => {
-                    let text = std::fs::read_to_string(path)?;
-                    let j = magnus::util::Json::parse(&text)
-                        .map_err(|e| anyhow::anyhow!("{e}"))?;
-                    trace_from_json(&j)?
-                }
-                None => generate_trace(&TraceSpec {
-                    rate: args.get_f64("rate", 2.0),
-                    n_requests: args.get_usize("requests", 20),
-                    g_max,
-                    l_cap,
-                    seed: cfg.seed,
-                    ..Default::default()
-                }),
-            };
-            let policy_name = args.get_or("policy", "magnus").to_ascii_lowercase();
-            let (policy, predictor) = match policy_name.as_str() {
-                "vanilla" | "vs" => (
-                    LivePolicy::Vanilla {
-                        fixed_batch: args.get_u64("fixed-batch", 4) as u32,
-                    },
-                    None,
-                ),
-                _ => {
-                    let split =
-                        build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
-                    let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
-                    p.train(&split.train);
-                    (LivePolicy::Magnus(MagnusPolicy::magnus()), Some(p))
-                }
-            };
-            let metrics = serve_trace(
-                &cfg,
-                &ServeOptions {
-                    artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
-                    n_workers: args.get_usize("workers", 2),
-                    time_scale: args.get_f64("time-scale", 10.0),
-                    warm_up: args.flag("warm-up"),
-                },
-                policy,
-                predictor,
-                &trace,
-            )?;
-            let s = metrics.summarise();
-            println!(
-                "live {}: {} requests | thr {:.3} req/s | mean RT {:.2}s | p95 RT {:.2}s \
-                 (replayed seconds)",
-                policy_name, s.n_requests, s.request_throughput,
-                s.mean_response_time, s.p95_response_time
-            );
-        }
+        "serve" => cmd_serve(&args, &mut cfg)?,
         "gen-trace" => {
             let trace = generate_trace(&TraceSpec {
                 rate: args.get_f64("rate", 5.0),
@@ -166,4 +110,77 @@ fn run() -> anyhow::Result<()> {
         _ => println!("{USAGE}"),
     }
     Ok(())
+}
+
+/// Replay a workload through the LIVE cluster (real PJRT compute).
+#[cfg(feature = "pjrt")]
+fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
+    use magnus::server::{serve_trace, LivePolicy, ServeOptions};
+    use magnus::sim::MagnusPolicy;
+    use magnus::workload::trace_from_json;
+
+    let g_max = args.get_u64("g-max", 24) as u32;
+    let l_cap = args.get_u64("l-cap", 40) as u32;
+    cfg.gpu.g_max = g_max;
+    let trace = match args.get("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let j = magnus::util::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            trace_from_json(&j)?
+        }
+        None => generate_trace(&TraceSpec {
+            rate: args.get_f64("rate", 2.0),
+            n_requests: args.get_usize("requests", 20),
+            g_max,
+            l_cap,
+            seed: cfg.seed,
+            ..Default::default()
+        }),
+    };
+    let policy_name = args.get_or("policy", "magnus").to_ascii_lowercase();
+    let (policy, predictor) = match policy_name.as_str() {
+        "vanilla" | "vs" => (
+            LivePolicy::Vanilla {
+                fixed_batch: args.get_u64("fixed-batch", 4) as u32,
+            },
+            None,
+        ),
+        _ => {
+            let split =
+                build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
+            let mut p = GenLenPredictor::new(Variant::Usin, cfg);
+            p.train(&split.train);
+            (LivePolicy::Magnus(MagnusPolicy::magnus()), Some(p))
+        }
+    };
+    let metrics = serve_trace(
+        cfg,
+        &ServeOptions {
+            artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+            n_workers: args.get_usize("workers", 2),
+            time_scale: args.get_f64("time-scale", 10.0),
+            warm_up: args.flag("warm-up"),
+        },
+        policy,
+        predictor,
+        &trace,
+    )?;
+    let s = metrics.summarise();
+    println!(
+        "live {}: {} requests | thr {:.3} req/s | mean RT {:.2}s | p95 RT {:.2}s \
+         (replayed seconds)",
+        policy_name, s.n_requests, s.request_throughput,
+        s.mean_response_time, s.p95_response_time
+    );
+    Ok(())
+}
+
+/// Without the `pjrt` feature the live path is compiled out entirely.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args, _cfg: &mut ServingConfig) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`serve` needs the live PJRT stack; rebuild with `--features pjrt` \
+         (requires the vendored xla crate, see rust/Cargo.toml)"
+    )
 }

@@ -5,6 +5,12 @@
 //! next, ratio = T_q(B) / T_s(B) with T_s estimated by the serving-time
 //! estimator — which trades off queueing time against serving time.
 //! FCFS and SJF are provided for baselines/ablations.
+//!
+//! Ties are broken by batch id, NOT by queue position: the batcher
+//! swap-removes dispatched batches (O(1) `take`), so queue order is not
+//! stable across a run, and a position-dependent tie-break would make
+//! the cached and fresh dispatch paths diverge.  With the id tie-break,
+//! `select` is a pure function of the view *set*.
 
 use crate::batch::Batch;
 use crate::config::SchedPolicy;
@@ -18,6 +24,16 @@ pub struct BatchView {
     pub est_serving_time: f64,
     /// Batch creation order (FCFS key).
     pub created_at: f64,
+    /// Stable identity used to break ties order-independently.
+    pub batch_id: u64,
+}
+
+impl BatchView {
+    /// HRRN response ratio with a zero-estimate guard.
+    #[inline]
+    fn ratio(&self) -> f64 {
+        self.queuing_time / self.est_serving_time.max(1e-9)
+    }
 }
 
 /// Pick the index of the batch to serve next; None if `views` is empty.
@@ -25,38 +41,37 @@ pub fn select(policy: SchedPolicy, views: &[BatchView]) -> Option<usize> {
     if views.is_empty() {
         return None;
     }
-    let idx = match policy {
-        SchedPolicy::Fcfs => {
-            // earliest created batch
-            (0..views.len())
-                .min_by(|&a, &b| {
-                    views[a]
-                        .created_at
-                        .partial_cmp(&views[b].created_at)
-                        .unwrap()
-                })
-                .unwrap()
+    // `beats(a, b)` — strict "a should be served before b"; equal keys
+    // fall through to the smaller batch id, so the winner is unique and
+    // independent of the order batches appear in `views`.
+    let beats = |a: &BatchView, b: &BatchView| -> bool {
+        match policy {
+            SchedPolicy::Fcfs => match a.created_at.partial_cmp(&b.created_at).unwrap() {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
+            },
+            SchedPolicy::Hrrn => match a.ratio().partial_cmp(&b.ratio()).unwrap() {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
+            },
+            SchedPolicy::Sjf => {
+                match a.est_serving_time.partial_cmp(&b.est_serving_time).unwrap() {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
+                }
+            }
         }
-        SchedPolicy::Hrrn => {
-            // max T_q / T_s  (§III-E)
-            (0..views.len())
-                .max_by(|&a, &b| {
-                    let ra = views[a].queuing_time / views[a].est_serving_time.max(1e-9);
-                    let rb = views[b].queuing_time / views[b].est_serving_time.max(1e-9);
-                    ra.partial_cmp(&rb).unwrap()
-                })
-                .unwrap()
-        }
-        SchedPolicy::Sjf => (0..views.len())
-            .min_by(|&a, &b| {
-                views[a]
-                    .est_serving_time
-                    .partial_cmp(&views[b].est_serving_time)
-                    .unwrap()
-            })
-            .unwrap(),
     };
-    Some(idx)
+    let mut best = 0;
+    for i in 1..views.len() {
+        if beats(&views[i], &views[best]) {
+            best = i;
+        }
+    }
+    Some(best)
 }
 
 /// Build a `BatchView` for a queued batch at time `now` given an estimate.
@@ -65,6 +80,7 @@ pub fn view_of(batch: &Batch, now: f64, est_serving_time: f64) -> BatchView {
         queuing_time: (now - batch.earliest_arrival()).max(0.0),
         est_serving_time,
         created_at: batch.created_at,
+        batch_id: batch.id,
     }
 }
 
@@ -72,11 +88,12 @@ pub fn view_of(batch: &Batch, now: f64, est_serving_time: f64) -> BatchView {
 mod tests {
     use super::*;
 
-    fn v(q: f64, s: f64, c: f64) -> BatchView {
+    fn v(q: f64, s: f64, c: f64, id: u64) -> BatchView {
         BatchView {
             queuing_time: q,
             est_serving_time: s,
             created_at: c,
+            batch_id: id,
         }
     }
 
@@ -87,40 +104,60 @@ mod tests {
 
     #[test]
     fn fcfs_picks_earliest_created() {
-        let views = [v(5.0, 1.0, 3.0), v(1.0, 1.0, 1.0), v(9.0, 1.0, 2.0)];
+        let views = [v(5.0, 1.0, 3.0, 0), v(1.0, 1.0, 1.0, 1), v(9.0, 1.0, 2.0, 2)];
         assert_eq!(select(SchedPolicy::Fcfs, &views), Some(1));
     }
 
     #[test]
     fn hrrn_picks_highest_ratio() {
         // ratios: 5/10=0.5, 4/1=4, 100/1000=0.1
-        let views = [v(5.0, 10.0, 0.0), v(4.0, 1.0, 0.0), v(100.0, 1000.0, 0.0)];
+        let views = [
+            v(5.0, 10.0, 0.0, 0),
+            v(4.0, 1.0, 0.0, 1),
+            v(100.0, 1000.0, 0.0, 2),
+        ];
         assert_eq!(select(SchedPolicy::Hrrn, &views), Some(1));
     }
 
     #[test]
     fn hrrn_prefers_short_jobs_at_equal_wait() {
-        let views = [v(10.0, 100.0, 0.0), v(10.0, 1.0, 0.0)];
+        let views = [v(10.0, 100.0, 0.0, 0), v(10.0, 1.0, 0.0, 1)];
         assert_eq!(select(SchedPolicy::Hrrn, &views), Some(1));
     }
 
     #[test]
     fn hrrn_eventually_favours_long_waiters() {
         // long job has waited 1000x longer → ratio wins despite long Ts
-        let views = [v(2.0, 1.0, 0.0), v(5000.0, 1000.0, 0.0)];
+        let views = [v(2.0, 1.0, 0.0, 0), v(5000.0, 1000.0, 0.0, 1)];
         assert_eq!(select(SchedPolicy::Hrrn, &views), Some(1));
     }
 
     #[test]
     fn sjf_picks_min_serving_time() {
-        let views = [v(1.0, 5.0, 0.0), v(1.0, 2.0, 0.0), v(1.0, 9.0, 0.0)];
+        let views = [
+            v(1.0, 5.0, 0.0, 0),
+            v(1.0, 2.0, 0.0, 1),
+            v(1.0, 9.0, 0.0, 2),
+        ];
         assert_eq!(select(SchedPolicy::Sjf, &views), Some(1));
     }
 
     #[test]
     fn hrrn_handles_zero_estimate() {
-        let views = [v(1.0, 0.0, 0.0), v(1.0, 1.0, 0.0)];
+        let views = [v(1.0, 0.0, 0.0, 0), v(1.0, 1.0, 0.0, 1)];
         // no panic; zero estimate treated as epsilon → huge ratio
         assert_eq!(select(SchedPolicy::Hrrn, &views), Some(0));
+    }
+
+    #[test]
+    fn ties_break_by_batch_id_not_position() {
+        // identical keys in every policy: the smaller id must win from
+        // either ordering.
+        for policy in [SchedPolicy::Fcfs, SchedPolicy::Hrrn, SchedPolicy::Sjf] {
+            let a = v(3.0, 2.0, 1.0, 4);
+            let b = v(3.0, 2.0, 1.0, 9);
+            assert_eq!(select(policy, &[a, b]), Some(0), "{policy:?}");
+            assert_eq!(select(policy, &[b, a]), Some(1), "{policy:?}");
+        }
     }
 }

@@ -13,9 +13,25 @@ use crate::learning::ContinuousLearner;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::predictor::GenLenPredictor;
-use crate::scheduler::{select, view_of};
+use crate::scheduler::{select, view_of, BatchView};
 use crate::sim::events::EventQueue;
 use crate::workload::{PredictedRequest, Request};
+
+/// How the dispatch loop builds its scheduler views.
+///
+/// Both modes pick bit-for-bit identical batches (the golden-equivalence
+/// tests assert it); `Fresh` exists as the reference implementation and
+/// as the pre-refactor baseline for `benches/bench_sim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// O(1) per queued batch: shapes come from the batcher's maintained
+    /// aggregates and serving-time estimates from its cache, recomputed
+    /// only when a batch mutates or the estimator refits.
+    Cached,
+    /// Rebuild every view from scratch each dispatch round: O(Σβ) member
+    /// scans plus one estimator query per queued batch per round.
+    Fresh,
+}
 
 /// Magnus-family policy configuration (full Magnus and its ablations).
 #[derive(Debug, Clone)]
@@ -84,9 +100,21 @@ pub struct SimOutput {
 pub fn run_magnus(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
+    predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    trace: &[Request],
+) -> SimOutput {
+    run_magnus_with(cfg, policy, predictor, engine, trace, DispatchMode::Cached)
+}
+
+/// [`run_magnus`] with an explicit [`DispatchMode`] (testing/benching).
+pub fn run_magnus_with(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
     mut predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
     trace: &[Request],
+    mode: DispatchMode,
 ) -> SimOutput {
     let mut batcher = AdaptiveBatcher::new(BatcherConfig {
         wma_threshold: cfg.wma_threshold,
@@ -112,6 +140,9 @@ pub fn run_magnus(
         std::collections::HashMap::new();
 
     let mut served = 0usize;
+    // Scratch view buffer reused across dispatch rounds (no per-round
+    // allocation in the hot path).
+    let mut views: Vec<BatchView> = Vec::new();
     while let Some((now, ev)) = events.pop() {
         match ev {
             Event::Arrival(i) => {
@@ -182,18 +213,33 @@ pub fn run_magnus(
 
         // Dispatch while instances are idle and batches are queued.
         while !idle.is_empty() && !batcher.is_empty() {
-            let views: Vec<_> = batcher
-                .queue()
-                .iter()
-                .map(|b| {
-                    let est = estimator.estimate(&BatchShape {
-                        batch_size: b.size(),
-                        batch_len: b.len(),
-                        batch_gen_len: b.predicted_gen_len(),
-                    });
-                    view_of(b, now, est)
-                })
-                .collect();
+            views.clear();
+            match mode {
+                DispatchMode::Fresh => {
+                    for b in batcher.queue() {
+                        let est = estimator.estimate(&BatchShape {
+                            batch_size: b.size(),
+                            batch_len: b.len(),
+                            batch_gen_len: b.predicted_gen_len(),
+                        });
+                        views.push(view_of(b, now, est));
+                    }
+                }
+                DispatchMode::Cached => {
+                    let gen = estimator.generation();
+                    for i in 0..batcher.queue_len() {
+                        let est = batcher
+                            .cached_estimate(i, gen, |shape| estimator.estimate(shape));
+                        let (min_arrival, created_at, batch_id) = batcher.view_meta(i);
+                        views.push(BatchView {
+                            queuing_time: (now - min_arrival).max(0.0),
+                            est_serving_time: est,
+                            created_at,
+                            batch_id,
+                        });
+                    }
+                }
+            }
             let pick = select(policy.sched, &views).unwrap();
             let est = views[pick].est_serving_time;
             let batch = batcher.take(pick);
@@ -290,6 +336,37 @@ mod tests {
             magnus.request_throughput,
             glp.request_throughput
         );
+    }
+
+    /// Golden equivalence: the cached dispatch path must replay the
+    /// fresh-view reference bit-for-bit (same batches, same times, same
+    /// telemetry) — the whole point of the cache is to change cost, not
+    /// behaviour.
+    #[test]
+    fn cached_dispatch_replays_fresh_dispatch() {
+        for policy in [MagnusPolicy::magnus(), MagnusPolicy::glp(7), MagnusPolicy::abp()] {
+            let (cfg, p, engine, trace) = setup(350, 9.0);
+            let (_, p2, _, _) = setup(350, 9.0); // identically-trained twin
+            let a = run_magnus_with(&cfg, &policy, p, &engine, &trace, DispatchMode::Cached);
+            let b = run_magnus_with(&cfg, &policy, p2, &engine, &trace, DispatchMode::Fresh);
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+            for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(x.request_id, y.request_id);
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+                assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+                assert_eq!(x.valid_tokens, y.valid_tokens);
+                assert_eq!(x.invalid_tokens, y.invalid_tokens);
+            }
+            assert_eq!(a.metrics.oom_events, b.metrics.oom_events);
+            assert_eq!(a.est_errors.len(), b.est_errors.len());
+            for (x, y) in a.est_errors.iter().zip(&b.est_errors) {
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+            let (sa, sb) = (a.metrics.summarise(), b.metrics.summarise());
+            assert_eq!(sa.request_throughput.to_bits(), sb.request_throughput.to_bits());
+            assert_eq!(sa.mean_response_time.to_bits(), sb.mean_response_time.to_bits());
+            assert_eq!(sa.token_throughput.to_bits(), sb.token_throughput.to_bits());
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::workload::dataset::build_predictor_split;
 use crate::workload::{LlmProfile, Request};
 
 pub use events::EventQueue;
-pub use magnus::{run_magnus, MagnusPolicy, SimOutput};
+pub use magnus::{run_magnus, run_magnus_with, DispatchMode, MagnusPolicy, SimOutput};
 
 /// Every serving policy of the evaluation (§IV-B baselines + §IV-C
 /// ablations).

@@ -7,6 +7,8 @@
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use crate::util::Json;
+
 pub use std::hint::black_box as bb;
 
 /// One measured benchmark result.
@@ -131,6 +133,36 @@ impl BenchSuite {
         println!("\n== {} ==", self.title);
     }
 
+    /// Machine-readable export of every measured result.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("iters", Json::num(r.iters as f64)),
+                                ("mean_ns", Json::num(r.mean_ns)),
+                                ("p50_ns", Json::num(r.p50_ns)),
+                                ("p95_ns", Json::num(r.p95_ns)),
+                                ("stddev_ns", Json::num(r.stddev_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write [`BenchSuite::to_json`] to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
     /// Assert an upper bound on a named result's mean (used to check the
     /// paper's §IV-D overhead numbers).
     pub fn assert_mean_below(&self, name: &str, limit: Duration) {
@@ -148,6 +180,43 @@ impl BenchSuite {
     }
 }
 
+/// Record the end-to-end simulator speedup measurement as
+/// `BENCH_sim.json` at the repo root — the machine-readable start of the
+/// perf trajectory (EXPERIMENTS.md §Perf reads these fields).
+///
+/// `naive_s` / `cached_s` are wall-clock seconds for one full
+/// `run_magnus_with` pass in `DispatchMode::Fresh` / `DispatchMode::Cached`
+/// over the same trace and predictor.  Written by the `bench_sim`
+/// harness (multi-sample, authoritative — always overwrites) and by the
+/// `dispatch_equivalence` tier-1 test (single sample, only when no
+/// record exists yet, so it never clobbers a bench-quality one).
+pub fn record_sim_bench(
+    path: &str,
+    rate: f64,
+    n_requests: usize,
+    samples: usize,
+    naive_s: f64,
+    cached_s: f64,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut fields = vec![
+        ("bench", Json::str("sim_e2e_dispatch")),
+        ("rate", Json::num(rate)),
+        ("requests", Json::num(n_requests as f64)),
+        ("samples", Json::num(samples as f64)),
+        ("naive_s", Json::num(naive_s)),
+        ("cached_s", Json::num(cached_s)),
+        ("speedup", Json::num(naive_s / cached_s.max(1e-12))),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +228,32 @@ mod tests {
         let r = s.bench_val("noop-ish", || 1u64 + black_box(2u64));
         assert!(r.mean_ns > 0.0);
         assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        std::env::set_var("MAGNUS_BENCH_QUICK", "1");
+        let mut s = BenchSuite::new("t");
+        s.bench_val("case", || black_box(1u64) + 1);
+        let j = s.to_json();
+        let results = j.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").as_str(), Some("case"));
+        assert!(results[0].get("mean_ns").as_f64().unwrap() > 0.0);
+        // parse back through the JSON layer
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("title").as_str(), Some("t"));
+    }
+
+    #[test]
+    fn record_sim_bench_writes_speedup() {
+        let path = std::env::temp_dir().join("magnus_bench_sim_test.json");
+        let path = path.to_string_lossy().into_owned();
+        record_sim_bench(&path, 10.0, 600, 3, 4.0, 1.0, vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("speedup").as_f64(), Some(4.0));
+        assert_eq!(j.get("requests").as_u64(), Some(600));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

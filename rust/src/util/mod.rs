@@ -1,5 +1,6 @@
 //! Substrate utilities: deterministic RNG + samplers, JSON, statistics,
-//! CLI parsing, micro-bench harness and property-testing harness.
+//! CLI parsing, micro-bench harness, property-testing harness and a
+//! scoped-thread parallel map.
 //!
 //! These exist because the build environment vendors only the `xla` crate's
 //! dependency closure — `rand`, `serde`, `clap`, `criterion` and `proptest`
@@ -9,6 +10,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,96 @@
+//! Minimal data parallelism over `std::thread::scope` (rayon is not
+//! vendored in this environment).
+//!
+//! [`par_map`] fans a pure index-to-value function out over the available
+//! cores with work stealing via a shared atomic counter, then reassembles
+//! results in index order — so output is deterministic regardless of
+//! thread scheduling.  Used by the figure driver to run independent
+//! (policy × load-point) simulator cells concurrently.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Evaluate `f(0..n)` on up to `available_parallelism` worker threads and
+/// return results in index order.  `f` must be pure per index (cells must
+/// not share mutable state); panics in workers propagate.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let fref = &f;
+    let nref = &next;
+    let mut pairs: Vec<(usize, T)> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = nref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, fref(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            pairs.extend(h.join().expect("par_map worker panicked"));
+        }
+    });
+    pairs.sort_by_key(|p| p.0);
+    pairs.into_iter().map(|p| p.1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_index_order() {
+        let out = par_map(64, |i| i * i);
+        assert_eq!(out.len(), 64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn captures_shared_read_only_state() {
+        let table: Vec<u64> = (0..100).map(|i| i * 3).collect();
+        let out = par_map(table.len(), |i| table[i] + 1);
+        assert_eq!(out[99], 298);
+    }
+
+    #[test]
+    fn heavy_cells_all_complete() {
+        // more cells than cores; each does real work
+        let out = par_map(37, |i| {
+            let mut acc = 0u64;
+            for j in 0..10_000u64 {
+                acc = acc.wrapping_add(j ^ i as u64);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 37);
+    }
+}
