@@ -76,25 +76,34 @@ fn table1(args: &Args) {
     let header: Vec<&str> = std::iter::once("LLM")
         .chain(apps.iter().map(|(n, _)| *n))
         .collect();
-    let mut rows = Vec::new();
-    for llm in LlmProfile::ALL {
-        let mut row = vec![llm.name().to_string()];
-        for (_, tasks) in &apps {
-            // Per-task correlation averaged over the app's tasks (the
-            // paper reports one number per app).
-            let mut rs = Vec::new();
-            for (i, t) in tasks.iter().enumerate() {
-                let data = build_task_dataset(*t, llm, n / tasks.len(), 1024,
-                                              42 + i as u64, 0);
-                let uil: Vec<f64> =
-                    data.iter().map(|r| r.user_input_len as f64).collect();
-                let g: Vec<f64> = data.iter().map(|r| r.gen_len as f64).collect();
-                rs.push(pearson(&uil, &g));
-            }
-            row.push(format!("{:.3}", rs.iter().sum::<f64>() / rs.len() as f64));
+    // Every (LLM × app) cell is independent — same par_map shape as the
+    // fig10–13 sweeps; cells come back in index order, so the table is
+    // bit-for-bit the serial one's.
+    let cells: Vec<String> = par_map(LlmProfile::ALL.len() * apps.len(), |cell| {
+        let llm = LlmProfile::ALL[cell / apps.len()];
+        let (_, tasks) = &apps[cell % apps.len()];
+        // Per-task correlation averaged over the app's tasks (the
+        // paper reports one number per app).
+        let mut rs = Vec::new();
+        for (i, t) in tasks.iter().enumerate() {
+            let data = build_task_dataset(*t, llm, n / tasks.len(), 1024,
+                                          42 + i as u64, 0);
+            let uil: Vec<f64> =
+                data.iter().map(|r| r.user_input_len as f64).collect();
+            let g: Vec<f64> = data.iter().map(|r| r.gen_len as f64).collect();
+            rs.push(pearson(&uil, &g));
         }
-        rows.push(row);
-    }
+        format!("{:.3}", rs.iter().sum::<f64>() / rs.len() as f64)
+    });
+    let rows: Vec<Vec<String>> = LlmProfile::ALL
+        .iter()
+        .enumerate()
+        .map(|(li, llm)| {
+            let mut row = vec![llm.name().to_string()];
+            row.extend(cells[li * apps.len()..(li + 1) * apps.len()].iter().cloned());
+            row
+        })
+        .collect();
     emit("table1", &header, &rows);
 }
 
@@ -105,21 +114,31 @@ fn table2(args: &Args) {
     println!("\n== Table II: predictor RMSE (train {n_train}/task, test {n_test}/task) ==");
     let cfg = ServingConfig::default();
     let header = vec!["LLM", "UILO", "RAFT", "INST", "USIN"];
-    let mut rows = Vec::new();
-    for llm in LlmProfile::ALL {
+    // (LLM × variant) cells are independent — each rebuilds its LLM's
+    // deterministic split, so the parallel sweep emits exactly the
+    // serial loop's numbers.
+    let nv = Variant::ALL.len();
+    let cells: Vec<String> = par_map(LlmProfile::ALL.len() * nv, |cell| {
+        let llm = LlmProfile::ALL[cell / nv];
+        let v = Variant::ALL[cell % nv];
         let split = build_predictor_split(llm, n_train, n_test, 1024, 11);
-        let mut row = vec![llm.name().to_string()];
-        for v in Variant::ALL {
-            let mut p = GenLenPredictor::new(v, &cfg);
-            p.train(&split.train);
-            let pred: Vec<f64> =
-                split.test.iter().map(|r| p.predict(r) as f64).collect();
-            let act: Vec<f64> =
-                split.test.iter().map(|r| r.gen_len as f64).collect();
-            row.push(format!("{:.3}", rmse(&pred, &act)));
-        }
-        rows.push(row);
-    }
+        let mut p = GenLenPredictor::new(v, &cfg);
+        p.train(&split.train);
+        let pred: Vec<f64> =
+            split.test.iter().map(|r| p.predict(r) as f64).collect();
+        let act: Vec<f64> =
+            split.test.iter().map(|r| r.gen_len as f64).collect();
+        format!("{:.3}", rmse(&pred, &act))
+    });
+    let rows: Vec<Vec<String>> = LlmProfile::ALL
+        .iter()
+        .enumerate()
+        .map(|(li, llm)| {
+            let mut row = vec![llm.name().to_string()];
+            row.extend(cells[li * nv..(li + 1) * nv].iter().cloned());
+            row
+        })
+        .collect();
     emit("table2", &header, &rows);
 }
 
@@ -127,27 +146,35 @@ fn table2(args: &Args) {
 fn fig2(args: &Args) {
     let n = args.get_usize("requests", 2000);
     println!("\n== Fig 2: UIL vs G per application (scatter + fit) ==");
+    // Per-task cells (dataset + fit + CSV body) run in parallel; the
+    // files are written serially afterwards in task order.
+    let cells: Vec<(Vec<String>, String, String)> =
+        par_map(TaskId::ALL.len(), |ti| {
+            let task = TaskId::ALL[ti];
+            let data =
+                build_task_dataset(task, LlmProfile::ChatGlm6B, n, 1024, 7, 0);
+            let uil: Vec<f64> =
+                data.iter().map(|r| r.user_input_len as f64).collect();
+            let g: Vec<f64> = data.iter().map(|r| r.gen_len as f64).collect();
+            let (a, b) = linear_fit(&uil, &g);
+            let r = pearson(&uil, &g);
+            let fit_row = vec![
+                task.name().to_string(),
+                format!("{a:.3}"),
+                format!("{b:.1}"),
+                format!("{r:.3}"),
+            ];
+            let rows: Vec<Vec<String>> = data
+                .iter()
+                .map(|d| vec![d.user_input_len.to_string(), d.gen_len.to_string()])
+                .collect();
+            let csv = to_csv(&["uil", "gen_len"], &rows);
+            (fit_row, csv, format!("fig2_{}.csv", task.name()))
+        });
     let mut fit_rows = Vec::new();
-    for task in TaskId::ALL {
-        let data =
-            build_task_dataset(task, LlmProfile::ChatGlm6B, n, 1024, 7, 0);
-        let uil: Vec<f64> = data.iter().map(|r| r.user_input_len as f64).collect();
-        let g: Vec<f64> = data.iter().map(|r| r.gen_len as f64).collect();
-        let (a, b) = linear_fit(&uil, &g);
-        let r = pearson(&uil, &g);
-        fit_rows.push(vec![
-            task.name().to_string(),
-            format!("{a:.3}"),
-            format!("{b:.1}"),
-            format!("{r:.3}"),
-        ]);
-        let rows: Vec<Vec<String>> = data
-            .iter()
-            .map(|d| vec![d.user_input_len.to_string(), d.gen_len.to_string()])
-            .collect();
-        let csv = to_csv(&["uil", "gen_len"], &rows);
-        let path =
-            write_results_file(&format!("fig2_{}.csv", task.name()), &csv).unwrap();
+    for (fit_row, csv, name) in cells {
+        fit_rows.push(fit_row);
+        let path = write_results_file(&name, &csv).unwrap();
         eprintln!("wrote {path}");
     }
     emit("fig2_fits", &["task", "slope", "intercept", "pearson"], &fit_rows);

@@ -16,6 +16,21 @@
 //! groups, each group is summed and divided by √(group size) for numerical
 //! stability — yielding d_app = 4 values for the instruction embedding and
 //! d_user = 16 for the user-input embedding.
+//!
+//! **Hot-path note.**  The predictor embeds every request's user input,
+//! so this module exposes zero-alloc entry points: [`Embedder::embed_into`]
+//! writes into a caller scratch buffer, and [`Embedder::embed_compress_into`]
+//! fuses normalisation into the compression pass (skipping exact-zero
+//! buckets, which is bit-identical because `0.0 / norm == +0.0` and
+//! `x + 0.0 == x` for every non-`-0.0` f32 this pipeline can produce —
+//! bucket sums are never `-0.0`: IEEE addition only returns `-0.0` from
+//! all-`-0.0` inputs, and weights are non-zero).  Bigram keys hash through
+//! the streaming FNV state instead of materialising the concatenated key —
+//! bit-identical to hashing the concatenation because FNV-1a is a
+//! byte-sequential fold.  The original allocating implementation is kept
+//! verbatim as [`Embedder::embed_baseline`]: it is the measured baseline
+//! for `benches/bench_predictor.rs` and the golden reference
+//! `tests/predictor_equivalence.rs` checks bit-for-bit.
 
 /// Embedding dimension (matches LaBSE's 768).
 pub const D: usize = 768;
@@ -24,15 +39,31 @@ pub const D_APP: usize = 4;
 /// Paper §III-B: compressed user-embedding width.
 pub const D_USER: usize = 16;
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Fold more bytes into an FNV-1a state.
+#[inline]
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
 /// FNV-1a 64-bit — stable, fast string hashing for feature indices.
 #[inline]
 fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    h
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// Signed bucket update shared by every n-gram class.
+#[inline]
+fn bucket_add(v: &mut [f32], h: u64, weight: f32) {
+    let idx = (h % D as u64) as usize;
+    let sign = if (h >> 32) & 1 == 0 { 1.0 } else { -1.0 };
+    v[idx] += sign * weight;
 }
 
 /// Deterministic hashed n-gram sentence embedder (LaBSE stand-in).
@@ -48,8 +79,101 @@ impl Embedder {
         Embedder
     }
 
-    /// Embed a text into the unit sphere of ℝ^768.
+    /// Accumulate the raw (unnormalised) hashed n-gram buckets into
+    /// `buf`, resized/zeroed to `D`.  Accumulation order — all unigrams,
+    /// then all bigrams, then character trigrams — matches the baseline
+    /// exactly (f32 addition order is part of the bit-for-bit contract).
+    fn accumulate(&self, text: &str, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.resize(D, 0.0);
+        for w in text.split_whitespace() {
+            bucket_add(buf, fnv1a(w.as_bytes()), 1.0);
+        }
+        // Bigrams: continue the FNV fold from the previous word's
+        // unigram state (== hashing "prev \x01 word" concatenated,
+        // without building the key).
+        let mut prev_h: Option<u64> = None;
+        for w in text.split_whitespace() {
+            let hw = fnv1a(w.as_bytes());
+            if let Some(ph) = prev_h {
+                let h = fnv1a_update(fnv1a_update(ph, b"\x01"), w.as_bytes());
+                bucket_add(buf, h, 0.7);
+            }
+            prev_h = Some(hw);
+        }
+        for tri in text.as_bytes().windows(3) {
+            // manual 3-step unroll of fnv1a(tri)
+            let h = ((((FNV_OFFSET ^ tri[0] as u64).wrapping_mul(FNV_PRIME)
+                ^ tri[1] as u64)
+                .wrapping_mul(FNV_PRIME)
+                ^ tri[2] as u64)
+                .wrapping_mul(FNV_PRIME)) as u64;
+            bucket_add(buf, h, 0.25);
+        }
+    }
+
+    /// Embed into a caller-provided buffer (resized to `D`) — the
+    /// zero-alloc path.  Bit-identical to [`Embedder::embed_baseline`].
+    pub fn embed_into(&self, text: &str, out: &mut Vec<f32>) {
+        self.accumulate(text, out);
+        let norm: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for x in out.iter_mut() {
+                *x /= norm;
+            }
+        }
+    }
+
+    /// Embed a text into the unit sphere of ℝ^768 (allocating wrapper
+    /// over [`Embedder::embed_into`]).
     pub fn embed(&self, text: &str) -> Vec<f32> {
+        let mut v = Vec::with_capacity(D);
+        self.embed_into(text, &mut v);
+        v
+    }
+
+    /// Fused embed + compress: appends the `groups` compressed values of
+    /// the normalised embedding to `out`, using `buf` as the raw-bucket
+    /// scratch.  Bit-identical to `compress(&embed(text), groups)` — the
+    /// per-element division by the norm happens inside the group fold in
+    /// the same index order, and exact-zero buckets are skipped (an
+    /// exact no-op, see the module note) so untouched buckets cost no
+    /// divisions.
+    pub fn embed_compress_into(
+        &self,
+        text: &str,
+        groups: usize,
+        buf: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        assert!(groups > 0 && D % groups == 0, "d must divide evenly");
+        self.accumulate(text, buf);
+        let gsize = D / groups;
+        let scale = 1.0 / (gsize as f32).sqrt();
+        let norm: f32 = buf.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for g in 0..groups {
+                let mut acc = 0f32;
+                for &x in &buf[g * gsize..(g + 1) * gsize] {
+                    if x != 0.0 {
+                        acc += x / norm;
+                    }
+                }
+                out.push(acc * scale);
+            }
+        } else {
+            // all-zero embedding (empty text): compress of zeros
+            for _ in 0..groups {
+                out.push(0.0);
+            }
+        }
+    }
+
+    /// The pre-overhaul implementation (per-call word `Vec`, per-bigram
+    /// key concatenation, fresh output buffer), kept verbatim: the
+    /// measured baseline for `benches/bench_predictor.rs` and the golden
+    /// reference for the zero-alloc path's bit-for-bit tests.
+    pub fn embed_baseline(&self, text: &str) -> Vec<f32> {
         let mut v = vec![0f32; D];
         let mut add = |key: &[u8], weight: f32| {
             let h = fnv1a(key);
@@ -81,15 +205,23 @@ impl Embedder {
     }
 }
 
-/// The paper's compression module: split `v` evenly into `groups` groups,
-/// sum each group, divide by √(group size).
-pub fn compress(v: &[f32], groups: usize) -> Vec<f32> {
+/// The paper's compression module, appending into a caller buffer: split
+/// `v` evenly into `groups` groups, sum each group, divide by
+/// √(group size).
+pub fn compress_into(v: &[f32], groups: usize, out: &mut Vec<f32>) {
     assert!(groups > 0 && v.len() % groups == 0, "d must divide evenly");
     let gsize = v.len() / groups;
     let scale = 1.0 / (gsize as f32).sqrt();
-    (0..groups)
-        .map(|g| v[g * gsize..(g + 1) * gsize].iter().sum::<f32>() * scale)
-        .collect()
+    out.extend(
+        (0..groups).map(|g| v[g * gsize..(g + 1) * gsize].iter().sum::<f32>() * scale),
+    );
+}
+
+/// Allocating wrapper over [`compress_into`].
+pub fn compress(v: &[f32], groups: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(groups);
+    compress_into(v, groups, &mut out);
+    out
 }
 
 /// Cosine similarity of two embeddings.
@@ -171,5 +303,47 @@ mod tests {
         let e = Embedder::new();
         let v = e.embed("");
         assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn zero_alloc_paths_match_baseline_bitwise() {
+        let e = Embedder::new();
+        let mut buf = Vec::new();
+        let texts = [
+            "",
+            "xy",
+            "finance",
+            "finance the market report finance evening news",
+            "int vec push_back return for while auto",
+            "a b a b a b a",
+            "the the the the",
+        ];
+        for text in texts {
+            let base = e.embed_baseline(text);
+            e.embed_into(text, &mut buf);
+            assert_eq!(base.len(), buf.len());
+            for (a, b) in base.iter().zip(&buf) {
+                assert_eq!(a.to_bits(), b.to_bits(), "text={text:?}");
+            }
+            for groups in [D_APP, D_USER] {
+                let reference = compress(&base, groups);
+                let mut scratch = Vec::new();
+                let mut fused = Vec::new();
+                e.embed_compress_into(text, groups, &mut scratch, &mut fused);
+                assert_eq!(reference.len(), fused.len());
+                for (a, b) in reference.iter().zip(&fused) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "text={text:?} g={groups}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compress_into_appends() {
+        let v = vec![2.0f32; D];
+        let mut out = vec![9.0f32];
+        compress_into(&v, D_APP, &mut out);
+        assert_eq!(out.len(), 1 + D_APP);
+        assert_eq!(out[0], 9.0);
     }
 }

@@ -12,7 +12,6 @@ use crate::config::LearningConfig;
 use crate::estimator::{BatchShape, ServingTimeEstimator};
 use crate::logdb::LogDb;
 use crate::predictor::GenLenPredictor;
-use crate::workload::Request;
 
 /// Sweeps the log DB and retrains the two learned components.
 ///
@@ -63,21 +62,27 @@ impl ContinuousLearner {
 
     /// §III-B: collect requests with |err| > 10 tokens AND > 10% of the
     /// actual generation length; augment + refit.  Only the log tail
-    /// since the previous sweep is visited (cursor-indexed).
+    /// since the previous sweep is visited (cursor-indexed), and bad
+    /// rows are absorbed straight into the predictor's column-major
+    /// train set during the visit — no request is cloned — followed by
+    /// one refit.
     fn sweep_predictor(&mut self, now: f64, db: &LogDb, predictor: &mut GenLenPredictor) {
         self.last_pred_sweep = now;
         let (err_tokens, err_frac) =
             (self.cfg.predictor_err_tokens, self.cfg.predictor_err_frac);
-        let mut bad: Vec<Request> = Vec::new();
+        let mut n_bad = 0usize;
         let visited = db.visit_requests_from(self.pred_cursor, |l| {
             let err = (l.predicted_gen_len as f64 - l.actual_gen_len as f64).abs();
             if err > err_tokens && err > err_frac * l.actual_gen_len as f64 {
-                bad.push(l.request.clone());
+                n_bad += 1;
+                predictor.absorb(&l.request);
             }
         });
         self.pred_cursor += visited;
-        self.predictor_sweeps.push((now, bad.len()));
-        predictor.augment_and_refit(&bad);
+        self.predictor_sweeps.push((now, n_bad));
+        if n_bad > 0 {
+            predictor.refit();
+        }
     }
 
     /// §III-D: collect batches with |err| > 2 s AND > 20% of the actual

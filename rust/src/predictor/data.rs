@@ -1,0 +1,123 @@
+//! Column-major (struct-of-arrays) training dataset for the forest.
+//!
+//! Tree growing sorts a node's rows per candidate feature, so the hot
+//! read pattern is "all values of one feature" — column-major storage
+//! makes that a contiguous scan instead of a strided walk over per-row
+//! `Vec`s.  Appending a row (continuous learning) is one push per
+//! column, so the retained train set is never re-laid-out or cloned
+//! across refits.
+
+/// Column-major f32 matrix: `col(f)[i]` is feature `f` of row `i`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ColMatrix {
+    n_rows: usize,
+    cols: Vec<Vec<f32>>,
+}
+
+impl ColMatrix {
+    /// Empty matrix with `n_cols` feature columns.
+    pub fn new(n_cols: usize) -> Self {
+        ColMatrix {
+            n_rows: 0,
+            cols: vec![Vec::new(); n_cols],
+        }
+    }
+
+    /// Transpose row-major rows (n × d) into a column-major matrix.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let d = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut m = ColMatrix {
+            n_rows: 0,
+            cols: vec![Vec::with_capacity(rows.len()); d],
+        };
+        for r in rows {
+            m.push_row(r);
+        }
+        m
+    }
+
+    /// Append one row (one push per column).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols.len(), "row width mismatch");
+        for (c, &v) in self.cols.iter_mut().zip(row) {
+            c.push(v);
+        }
+        self.n_rows += 1;
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// All values of feature `f`, contiguous.
+    #[inline]
+    pub fn col(&self, f: usize) -> &[f32] {
+        &self.cols[f]
+    }
+
+    #[inline]
+    pub fn at(&self, row: usize, col: usize) -> f32 {
+        self.cols[col][row]
+    }
+
+    /// Drop all rows, keeping the column layout (and capacity).
+    pub fn clear(&mut self) {
+        for c in &mut self.cols {
+            c.clear();
+        }
+        self.n_rows = 0;
+    }
+
+    /// Copy row `i` into `out` (cleared first).
+    pub fn row_into(&self, i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.cols.iter().map(|c| c[i]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_rows() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let m = ColMatrix::from_rows(&rows);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.n_cols(), 3);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+        assert_eq!(m.at(1, 2), 6.0);
+        let mut r = Vec::new();
+        m.row_into(0, &mut r);
+        assert_eq!(r, rows[0]);
+    }
+
+    #[test]
+    fn push_and_clear() {
+        let mut m = ColMatrix::new(2);
+        assert!(m.is_empty());
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[3.0, 4.0]);
+        assert_eq!(m.col(0), &[1.0, 3.0]);
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.n_cols(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_width_mismatch() {
+        let mut m = ColMatrix::new(2);
+        m.push_row(&[1.0]);
+    }
+}

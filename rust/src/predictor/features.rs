@@ -5,8 +5,14 @@
 //! * **INST** — single forest, features = [UIL] ++ compress(E(instruction), 4).
 //! * **USIN** — INST features ++ compress(E(user input), 16) — the full
 //!   Magnus predictor (Fig. 8).
-
-use std::collections::HashMap;
+//!
+//! The hot path is [`FeatureExtractor::features_into`]: it writes into a
+//! caller-provided row, copies the cached instruction features from a
+//! borrowed row (no clone), and runs the user-input embedding through
+//! the fused zero-alloc [`Embedder::embed_compress_into`] with a reused
+//! scratch buffer.  The pre-overhaul allocating pipeline is kept as
+//! [`FeatureExtractor::features_baseline`] — the measured baseline for
+//! `benches/bench_predictor.rs`, bit-identical by construction (tested).
 
 use crate::embedding::{compress, Embedder, D_APP, D_USER};
 use crate::workload::Request;
@@ -44,12 +50,15 @@ impl Variant {
     }
 }
 
-/// Feature extractor with an instruction-embedding cache (there are only a
-/// handful of distinct instructions — embedding them once mirrors how the
-/// paper batches LaBSE calls).
+/// Feature extractor with an instruction-embedding cache (there are only
+/// a handful of distinct instructions — embedding them once mirrors how
+/// the paper batches LaBSE calls; a short linear-probed list beats
+/// hashing the whole instruction string per lookup).
 pub struct FeatureExtractor {
     embedder: Embedder,
-    instr_cache: HashMap<String, Vec<f32>>,
+    instr_cache: Vec<(String, Vec<f32>)>,
+    /// Scratch: raw 768-bucket buffer reused across embeds.
+    embed_buf: Vec<f32>,
 }
 
 impl Default for FeatureExtractor {
@@ -62,41 +71,87 @@ impl FeatureExtractor {
     pub fn new() -> Self {
         FeatureExtractor {
             embedder: Embedder::new(),
-            instr_cache: HashMap::new(),
+            instr_cache: Vec::new(),
+            embed_buf: Vec::new(),
         }
     }
 
-    fn instr_features(&mut self, instruction: &str) -> Vec<f32> {
-        if let Some(v) = self.instr_cache.get(instruction) {
-            return v.clone();
+    /// Cache `instruction`'s compressed embedding if new; returns its
+    /// index in the cache (one scan per call).
+    fn ensure_instr(&mut self, instruction: &str) -> usize {
+        if let Some(i) = self.instr_cache.iter().position(|(k, _)| k == instruction) {
+            return i;
         }
-        let emb = self.embedder.embed(instruction);
-        let c = compress(&emb, D_APP);
-        self.instr_cache.insert(instruction.to_string(), c.clone());
-        c
+        let mut c = Vec::with_capacity(D_APP);
+        self.embedder
+            .embed_compress_into(instruction, D_APP, &mut self.embed_buf, &mut c);
+        self.instr_cache.push((instruction.to_string(), c));
+        self.instr_cache.len() - 1
     }
 
-    /// Build the feature row for `variant` (panics for UILO, which has no
-    /// regressor input).
+    /// Build the feature row for `variant` into `row` (cleared first) —
+    /// the zero-alloc hot path.  Panics for UILO, which has no regressor
+    /// input.
+    pub fn features_into(&mut self, variant: Variant, req: &Request, row: &mut Vec<f32>) {
+        row.clear();
+        match variant {
+            Variant::Uilo => panic!("UILO has no feature pipeline"),
+            Variant::Raft => row.push(req.user_input_len as f32),
+            Variant::Inst => {
+                row.push(req.user_input_len as f32);
+                let ci = self.ensure_instr(&req.instruction);
+                row.extend_from_slice(&self.instr_cache[ci].1);
+            }
+            Variant::Usin => {
+                row.push(req.user_input_len as f32);
+                let ci = self.ensure_instr(&req.instruction);
+                row.extend_from_slice(&self.instr_cache[ci].1);
+                self.embedder.embed_compress_into(
+                    &req.user_input,
+                    D_USER,
+                    &mut self.embed_buf,
+                    row,
+                );
+            }
+        }
+    }
+
+    /// Allocating wrapper over [`FeatureExtractor::features_into`].
     pub fn features(&mut self, variant: Variant, req: &Request) -> Vec<f32> {
+        let mut row = Vec::with_capacity(variant.dim());
+        self.features_into(variant, req, &mut row);
+        row
+    }
+
+    /// The pre-overhaul pipeline (fresh `Vec` per call, cached-row clone,
+    /// baseline embedder with per-bigram key concatenation), kept as the
+    /// measured baseline for `benches/bench_predictor.rs`.  Bit-identical
+    /// to [`FeatureExtractor::features_into`] — asserted by the golden
+    /// tests.
+    pub fn features_baseline(&mut self, variant: Variant, req: &Request) -> Vec<f32> {
         match variant {
             Variant::Uilo => panic!("UILO has no feature pipeline"),
             Variant::Raft => vec![req.user_input_len as f32],
             Variant::Inst => {
                 let mut row = Vec::with_capacity(1 + D_APP);
                 row.push(req.user_input_len as f32);
-                row.extend(self.instr_features(&req.instruction));
+                row.extend(self.instr_features_cloned(&req.instruction));
                 row
             }
             Variant::Usin => {
                 let mut row = Vec::with_capacity(1 + D_APP + D_USER);
                 row.push(req.user_input_len as f32);
-                row.extend(self.instr_features(&req.instruction));
-                let ue = self.embedder.embed(&req.user_input);
+                row.extend(self.instr_features_cloned(&req.instruction));
+                let ue = self.embedder.embed_baseline(&req.user_input);
                 row.extend(compress(&ue, D_USER));
                 row
             }
         }
+    }
+
+    fn instr_features_cloned(&mut self, instruction: &str) -> Vec<f32> {
+        let ci = self.ensure_instr(instruction);
+        self.instr_cache[ci].1.clone()
     }
 }
 
@@ -158,5 +213,33 @@ mod tests {
     fn uilo_has_no_features() {
         let mut fx = FeatureExtractor::new();
         fx.features(Variant::Uilo, &sample());
+    }
+
+    #[test]
+    fn features_into_matches_baseline_bitwise() {
+        let mut fx = FeatureExtractor::new();
+        let rs = build_task_dataset(TaskId::Gc, LlmProfile::ChatGlm6B, 6, 1024, 5, 0);
+        let mut row = Vec::new();
+        for v in [Variant::Raft, Variant::Inst, Variant::Usin] {
+            for r in &rs {
+                let base = fx.features_baseline(v, r);
+                fx.features_into(v, r, &mut row);
+                assert_eq!(base.len(), row.len());
+                for (a, b) in base.iter().zip(&row) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", v.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn features_into_reuses_buffer_cleanly() {
+        let mut fx = FeatureExtractor::new();
+        let r = sample();
+        let mut row = vec![1.0; 64]; // stale content must be discarded
+        fx.features_into(Variant::Usin, &r, &mut row);
+        assert_eq!(row.len(), Variant::Usin.dim());
+        let fresh = fx.features(Variant::Usin, &r);
+        assert_eq!(row, fresh);
     }
 }

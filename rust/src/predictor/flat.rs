@@ -1,0 +1,172 @@
+//! Flattened struct-of-arrays forest layout for the predict hot path.
+//!
+//! A fitted [`Tree`] stores a `Vec` of enum nodes — every traversal
+//! step branches on the discriminant and chases a ~24-byte variant.
+//! [`FlatForest`] compiles all trees of a forest into four contiguous
+//! arrays over *internal* nodes only (`feature` / `threshold` / `left` /
+//! `right`), with leaves encoded directly in the child index: the high
+//! bit marks a leaf, the low bits index a separate `leaf_value` array.
+//! Traversal is a tight loop over the arrays, and
+//! [`FlatForest::predict_many`] iterates trees-outer / rows-inner so one
+//! tree's arrays stay cache-hot across a whole batch of rows.
+//!
+//! Predictions are bit-for-bit those of the node-enum reference
+//! ([`crate::predictor::Forest::predict_reference`]): same traversal
+//! comparisons, same tree-order summation, same final division —
+//! `tests/predictor_equivalence.rs` proves it on random datasets.
+
+use crate::predictor::tree::{Node, Tree};
+
+/// Child code: high bit set ⇒ leaf (low bits index `leaf_value`);
+/// otherwise an internal-node index.
+const LEAF_BIT: u32 = 1 << 31;
+
+/// A forest compiled into the flattened SoA layout.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlatForest {
+    /// Per-tree root code (a single-leaf tree's root is a leaf code).
+    roots: Vec<u32>,
+    feature: Vec<u32>,
+    threshold: Vec<f32>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    leaf_value: Vec<f32>,
+}
+
+impl FlatForest {
+    /// Compile fitted trees into the flattened layout.
+    pub fn compile(trees: &[Tree]) -> FlatForest {
+        let mut f = FlatForest::default();
+        for t in trees {
+            let root = f.compile_node(t.nodes(), 0);
+            f.roots.push(root);
+        }
+        f
+    }
+
+    fn compile_node(&mut self, nodes: &[Node], i: usize) -> u32 {
+        match &nodes[i] {
+            Node::Leaf { value } => {
+                self.leaf_value.push(*value);
+                LEAF_BIT | (self.leaf_value.len() - 1) as u32
+            }
+            Node::Split {
+                feature,
+                threshold,
+                left,
+                right,
+            } => {
+                let me = self.feature.len();
+                self.feature.push(*feature as u32);
+                self.threshold.push(*threshold);
+                self.left.push(0);
+                self.right.push(0);
+                let l = self.compile_node(nodes, *left);
+                let r = self.compile_node(nodes, *right);
+                self.left[me] = l;
+                self.right[me] = r;
+                me as u32
+            }
+        }
+    }
+
+    #[inline]
+    fn descend(&self, mut code: u32, row: &[f32]) -> f32 {
+        while code & LEAF_BIT == 0 {
+            let i = code as usize;
+            code = if row[self.feature[i] as usize] <= self.threshold[i] {
+                self.left[i]
+            } else {
+                self.right[i]
+            };
+        }
+        self.leaf_value[(code & !LEAF_BIT) as usize]
+    }
+
+    /// Mean prediction across trees (summed in tree order — bit-identical
+    /// to the node-enum reference).
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let s: f32 = self.roots.iter().map(|&r| self.descend(r, row)).sum();
+        s / self.roots.len() as f32
+    }
+
+    /// Batch predict: `rows` is row-major n × `d`; `out` is overwritten
+    /// with one prediction per row.  Trees-outer iteration keeps each
+    /// tree's arrays cache-resident across the batch while per-row
+    /// accumulation stays in tree order, so every output is bit-identical
+    /// to [`FlatForest::predict`] on that row.
+    pub fn predict_many(&self, rows: &[f32], d: usize, out: &mut Vec<f32>) {
+        assert!(d > 0 && rows.len() % d == 0, "rows must be row-major n × d");
+        let n = rows.len() / d;
+        out.clear();
+        out.resize(n, 0.0);
+        for &root in &self.roots {
+            for (r, acc) in out.iter_mut().enumerate() {
+                *acc += self.descend(root, &rows[r * d..(r + 1) * d]);
+            }
+        }
+        let k = self.roots.len() as f32;
+        for acc in out.iter_mut() {
+            *acc /= k;
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Total compiled nodes (internal + leaves) across all trees.
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len() + self.leaf_value.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::tree::TreeParams;
+    use crate::util::Rng;
+
+    fn step_tree() -> Tree {
+        let x: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32]).collect();
+        let y: Vec<f32> = (0..100)
+            .map(|i| if i < 50 { 1.0 } else { 9.0 })
+            .collect();
+        let mut rng = Rng::new(1);
+        Tree::fit(&x, &y, &TreeParams::default(), &mut rng)
+    }
+
+    #[test]
+    fn single_leaf_tree_compiles_to_leaf_root() {
+        let x = vec![vec![0.0f32]; 8];
+        let y = vec![3.5f32; 8];
+        let mut rng = Rng::new(2);
+        let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
+        let f = FlatForest::compile(&[t]);
+        assert_eq!(f.n_trees(), 1);
+        assert_eq!(f.predict(&[123.0]), 3.5);
+    }
+
+    #[test]
+    fn matches_enum_traversal_on_probes() {
+        let t = step_tree();
+        let f = FlatForest::compile(&[t.clone()]);
+        for probe in 0..100 {
+            let row = [probe as f32];
+            assert_eq!(f.predict(&row).to_bits(), t.predict(&row).to_bits());
+        }
+    }
+
+    #[test]
+    fn predict_many_matches_predict() {
+        let t = step_tree();
+        let f = FlatForest::compile(&[t.clone(), t]);
+        let rows: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        f.predict_many(&rows, 1, &mut out);
+        assert_eq!(out.len(), 100);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v.to_bits(), f.predict(&[i as f32]).to_bits());
+        }
+    }
+}

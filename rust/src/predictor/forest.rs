@@ -1,7 +1,24 @@
 //! Bagged random-forest regressor over [`Tree`] (sklearn stand-in).
+//!
+//! Fitting runs over a column-major [`ColMatrix`] view with index-based
+//! bootstrap (no sample row is ever cloned) and fits trees in parallel
+//! via [`par_map`] when the job is big enough.  Determinism is preserved
+//! by pre-forking one RNG per tree in tree order — exactly the stream
+//! the serial loop draws — so parallel and serial fits produce identical
+//! trees (property-tested in `tests/predictor_equivalence.rs`).  Fitted
+//! trees are compiled once into a [`FlatForest`] for the predict hot
+//! path; the node-enum trees are retained as the golden reference.
 
+use crate::predictor::data::ColMatrix;
+use crate::predictor::flat::FlatForest;
 use crate::predictor::tree::{Tree, TreeParams};
+use crate::util::par::par_map;
 use crate::util::Rng;
+
+/// Below this much work (selected rows × trees), thread-spawn overhead
+/// beats the parallel win and the fit stays serial.  Results are
+/// bit-identical either way; this only picks the cheaper schedule.
+const PAR_FIT_MIN_WORK: usize = 20_000;
 
 /// Random-forest hyperparameters.
 #[derive(Debug, Clone)]
@@ -22,54 +39,120 @@ impl Default for ForestParams {
     }
 }
 
-/// A fitted random forest.
-#[derive(Debug, Clone)]
+/// A fitted random forest: node-enum trees (reference) plus their
+/// compiled flattened layout (hot path).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Forest {
     trees: Vec<Tree>,
+    flat: FlatForest,
 }
 
 impl Forest {
-    /// Fit on rows `x` (n × d), targets `y`.  `mtry = 0` considers ALL
+    /// Fit on row-major rows `x` (n × d), targets `y` — convenience
+    /// wrapper over [`Forest::fit_view`].  `mtry = 0` considers ALL
     /// features at every split — the sklearn convention for regression
     /// forests (`max_features=1.0`), which matters here because the UIL
     /// feature dominates and must be splittable at every depth.
     pub fn fit(x: &[Vec<f32>], y: &[f32], params: &ForestParams, rng: &mut Rng) -> Forest {
         assert_eq!(x.len(), y.len());
         assert!(!x.is_empty());
-        let tree_params = params.tree.clone();
-        let n_boot = ((x.len() as f64) * params.bootstrap_frac).round() as usize;
-        let n_boot = n_boot.max(1);
-
-        let trees = (0..params.n_trees)
-            .map(|t| {
-                let mut trng = rng.fork(t as u64);
-                let bx: Vec<Vec<f32>>;
-                let by: Vec<f32>;
-                if params.n_trees == 1 {
-                    // Single tree = plain CART on the full data.
-                    bx = x.to_vec();
-                    by = y.to_vec();
-                } else {
-                    let picks: Vec<usize> = (0..n_boot)
-                        .map(|_| trng.range_usize(0, x.len()))
-                        .collect();
-                    bx = picks.iter().map(|&i| x[i].clone()).collect();
-                    by = picks.iter().map(|&i| y[i]).collect();
-                }
-                Tree::fit(&bx, &by, &tree_params, &mut trng)
-            })
-            .collect();
-        Forest { trees }
+        let data = ColMatrix::from_rows(x);
+        let idx: Vec<u32> = (0..x.len() as u32).collect();
+        Forest::fit_view(&data, y, &idx, params, rng)
     }
 
-    /// Mean prediction across trees.
+    /// Fit on the rows of `data` selected by `idx`; `y` is indexed by
+    /// dataset row id.  Bootstrap samples are index lists into `data` —
+    /// no row is cloned — and trees fit in parallel when the job is big
+    /// enough.
+    pub fn fit_view(
+        data: &ColMatrix,
+        y: &[f32],
+        idx: &[u32],
+        params: &ForestParams,
+        rng: &mut Rng,
+    ) -> Forest {
+        let parallel = idx.len().saturating_mul(params.n_trees) >= PAR_FIT_MIN_WORK;
+        Forest::fit_view_mode(data, y, idx, params, rng, parallel)
+    }
+
+    /// [`Forest::fit_view`] with the serial/parallel choice made
+    /// explicit (the equivalence property test runs both and asserts
+    /// identical trees).
+    pub fn fit_view_mode(
+        data: &ColMatrix,
+        y: &[f32],
+        idx: &[u32],
+        params: &ForestParams,
+        rng: &mut Rng,
+        parallel: bool,
+    ) -> Forest {
+        assert_eq!(data.n_rows(), y.len());
+        assert!(!idx.is_empty());
+        let tree_params = params.tree.clone();
+        let n_boot = ((idx.len() as f64) * params.bootstrap_frac).round() as usize;
+        let n_boot = n_boot.max(1);
+
+        // One forked RNG per tree, in tree order — the same stream the
+        // serial loop would draw, so scheduling cannot change the fit.
+        let mut tree_rngs: Vec<Rng> =
+            (0..params.n_trees).map(|t| rng.fork(t as u64)).collect();
+
+        let fit_one = |trng: &mut Rng| -> Tree {
+            let mut picks: Vec<u32>;
+            if params.n_trees == 1 {
+                // Single tree = plain CART on the full selection.
+                picks = idx.to_vec();
+            } else {
+                picks = (0..n_boot)
+                    .map(|_| idx[trng.range_usize(0, idx.len())])
+                    .collect();
+            }
+            Tree::fit_view(data, y, &mut picks, &tree_params, trng)
+        };
+
+        let trees: Vec<Tree> = if parallel && params.n_trees > 1 {
+            par_map(params.n_trees, |t| {
+                let mut trng = tree_rngs[t].clone();
+                fit_one(&mut trng)
+            })
+        } else {
+            tree_rngs.iter_mut().map(fit_one).collect()
+        };
+        let flat = FlatForest::compile(&trees);
+        Forest { trees, flat }
+    }
+
+    /// Mean prediction across trees (flattened SoA hot path).
     pub fn predict(&self, row: &[f32]) -> f32 {
+        self.flat.predict(row)
+    }
+
+    /// Node-enum reference traversal — the golden baseline the flat
+    /// layout is tested (and benched) against.
+    pub fn predict_reference(&self, row: &[f32]) -> f32 {
         let s: f32 = self.trees.iter().map(|t| t.predict(row)).sum();
         s / self.trees.len() as f32
     }
 
+    /// Batch predict over row-major `rows` (n × d) into `out` — see
+    /// [`FlatForest::predict_many`].
+    pub fn predict_many(&self, rows: &[f32], d: usize, out: &mut Vec<f32>) {
+        self.flat.predict_many(rows, d, out)
+    }
+
     pub fn n_trees(&self) -> usize {
         self.trees.len()
+    }
+
+    /// The fitted node-enum trees (reference layout).
+    pub fn trees(&self) -> &[Tree] {
+        &self.trees
+    }
+
+    /// The compiled hot-path layout.
+    pub fn flat(&self) -> &FlatForest {
+        &self.flat
     }
 }
 
@@ -143,5 +226,33 @@ mod tests {
         let lo = f.predict(&vec![0.1; 21]);
         let hi = f.predict(&vec![0.9; 21]);
         assert!(hi > lo, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn flat_predictions_match_reference_bitwise() {
+        let (x, y) = noisy_linear(600, 8);
+        let mut rng = Rng::new(10);
+        let f = Forest::fit(&x, &y, &ForestParams::default(), &mut rng);
+        let rows_flat: Vec<f32> = x.iter().flat_map(|r| r.iter().copied()).collect();
+        let mut out = Vec::new();
+        f.predict_many(&rows_flat, 1, &mut out);
+        for (i, r) in x.iter().enumerate() {
+            let reference = f.predict_reference(r);
+            assert_eq!(f.predict(r).to_bits(), reference.to_bits());
+            assert_eq!(out[i].to_bits(), reference.to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_fit_identical() {
+        let (x, y) = noisy_linear(400, 9);
+        let data = ColMatrix::from_rows(&x);
+        let idx: Vec<u32> = (0..x.len() as u32).collect();
+        let p = ForestParams::default();
+        let mut r1 = Rng::new(12);
+        let mut r2 = Rng::new(12);
+        let a = Forest::fit_view_mode(&data, &y, &idx, &p, &mut r1, false);
+        let b = Forest::fit_view_mode(&data, &y, &idx, &p, &mut r2, true);
+        assert_eq!(a, b);
     }
 }

@@ -4,8 +4,15 @@
 //! `predict(&Request) -> u32` interface, supports the four Table-II
 //! variants, and implements the continuous-learning augmentation loop
 //! (collect badly-predicted requests, extend the train set, refit).
+//!
+//! Hot-path layout: the retained train set is a column-major
+//! [`ColMatrix`] (continuous learning appends rows, refits pass index
+//! views — no row is ever cloned), prediction reuses one feature-row
+//! scratch buffer, and [`GenLenPredictor::predict_many`] batches
+//! same-tick arrivals through the flattened forest trees-outer.
 
 use crate::config::ServingConfig;
+use crate::predictor::data::ColMatrix;
 use crate::predictor::features::{FeatureExtractor, Variant};
 use crate::predictor::forest::{Forest, ForestParams};
 use crate::predictor::tree::TreeParams;
@@ -21,11 +28,16 @@ pub struct GenLenPredictor {
     per_task: Vec<Option<Forest>>,
     params: ForestParams,
     g_max: u32,
-    /// Retained training data for continuous learning.
-    train_x: Vec<Vec<f32>>,
+    /// Retained training data (column-major; continuous learning appends).
+    train_data: ColMatrix,
     train_y: Vec<f32>,
     train_task: Vec<TaskId>,
     seed: u64,
+    /// Scratch: one feature row, reused across predicts/absorbs.
+    row_buf: Vec<f32>,
+    /// Scratch: row-major batch rows + raw outputs for `predict_many`.
+    batch_rows: Vec<f32>,
+    batch_out: Vec<f32>,
 }
 
 impl GenLenPredictor {
@@ -45,10 +57,13 @@ impl GenLenPredictor {
                 ..Default::default()
             },
             g_max: cfg.gpu.g_max,
-            train_x: Vec::new(),
+            train_data: ColMatrix::new(variant.dim()),
             train_y: Vec::new(),
             train_task: Vec::new(),
             seed: cfg.seed,
+            row_buf: Vec::new(),
+            batch_rows: Vec::new(),
+            batch_out: Vec::new(),
         }
     }
 
@@ -61,15 +76,26 @@ impl GenLenPredictor {
         if self.variant == Variant::Uilo {
             return;
         }
-        self.train_x.clear();
+        self.train_data.clear();
         self.train_y.clear();
         self.train_task.clear();
         for r in data {
-            self.train_x.push(self.fx.features(self.variant, r));
-            self.train_y.push(r.gen_len as f32);
-            self.train_task.push(r.task);
+            self.absorb(r);
         }
         self.refit();
+    }
+
+    /// Append one labelled request to the retained train set WITHOUT
+    /// refitting — continuous-learning sweeps absorb a batch of rows,
+    /// then call [`GenLenPredictor::refit`] once.  No-op for UILO.
+    pub fn absorb(&mut self, r: &Request) {
+        if self.variant == Variant::Uilo {
+            return;
+        }
+        self.fx.features_into(self.variant, r, &mut self.row_buf);
+        self.train_data.push_row(&self.row_buf);
+        self.train_y.push(r.gen_len as f32);
+        self.train_task.push(r.task);
     }
 
     /// Continuous learning (§III-B): augment the train set with logged
@@ -79,37 +105,41 @@ impl GenLenPredictor {
             return;
         }
         for r in extra {
-            self.train_x.push(self.fx.features(self.variant, r));
-            self.train_y.push(r.gen_len as f32);
-            self.train_task.push(r.task);
+            self.absorb(r);
         }
         self.refit();
     }
 
-    fn refit(&mut self) {
+    /// Refit every forest from the retained train set (index views into
+    /// the column-major matrix — no rows are copied out).
+    pub fn refit(&mut self) {
         let mut rng = Rng::new(self.seed ^ 0x474c_50);
         match self.variant {
             Variant::Uilo => {}
             Variant::Raft => {
                 for (ti, task) in TaskId::ALL.iter().enumerate() {
-                    let idx: Vec<usize> = (0..self.train_x.len())
-                        .filter(|&i| self.train_task[i] == *task)
+                    let idx: Vec<u32> = (0..self.train_task.len() as u32)
+                        .filter(|&i| self.train_task[i as usize] == *task)
                         .collect();
                     if idx.is_empty() {
                         self.per_task[ti] = None;
                         continue;
                     }
-                    let x: Vec<Vec<f32>> =
-                        idx.iter().map(|&i| self.train_x[i].clone()).collect();
-                    let y: Vec<f32> = idx.iter().map(|&i| self.train_y[i]).collect();
-                    self.per_task[ti] =
-                        Some(Forest::fit(&x, &y, &self.params, &mut rng));
+                    self.per_task[ti] = Some(Forest::fit_view(
+                        &self.train_data,
+                        &self.train_y,
+                        &idx,
+                        &self.params,
+                        &mut rng,
+                    ));
                 }
             }
             Variant::Inst | Variant::Usin => {
-                self.global = Some(Forest::fit(
-                    &self.train_x,
+                let idx: Vec<u32> = (0..self.train_y.len() as u32).collect();
+                self.global = Some(Forest::fit_view(
+                    &self.train_data,
                     &self.train_y,
+                    &idx,
                     &self.params,
                     &mut rng,
                 ));
@@ -117,26 +147,71 @@ impl GenLenPredictor {
         }
     }
 
+    #[inline]
+    fn clamp_raw(raw: f32, g_max: u32) -> u32 {
+        (raw.round().max(1.0) as u32).min(g_max)
+    }
+
     /// Predict G'(p), clamped to [1, G_max].
     pub fn predict(&mut self, req: &Request) -> u32 {
         let raw = match self.variant {
             Variant::Uilo => req.user_input_len as f32,
             Variant::Raft => {
-                let row = self.fx.features(self.variant, req);
-                match &self.per_task[req.task.index()] {
-                    Some(f) => f.predict(&row),
-                    None => req.user_input_len as f32, // cold start
+                if self.per_task[req.task.index()].is_some() {
+                    self.fx.features_into(self.variant, req, &mut self.row_buf);
+                    self.per_task[req.task.index()]
+                        .as_ref()
+                        .unwrap()
+                        .predict(&self.row_buf)
+                } else {
+                    req.user_input_len as f32 // cold start
                 }
             }
             Variant::Inst | Variant::Usin => {
-                let row = self.fx.features(self.variant, req);
-                match &self.global {
-                    Some(f) => f.predict(&row),
-                    None => req.user_input_len as f32,
+                if self.global.is_some() {
+                    self.fx.features_into(self.variant, req, &mut self.row_buf);
+                    self.global.as_ref().unwrap().predict(&self.row_buf)
+                } else {
+                    req.user_input_len as f32
                 }
             }
         };
-        (raw.round().max(1.0) as u32).min(self.g_max)
+        Self::clamp_raw(raw, self.g_max)
+    }
+
+    /// Batch predict: same values, in order, as calling
+    /// [`GenLenPredictor::predict`] per request.  INST/USIN rows go
+    /// through the flattened forest trees-outer (one pass over the batch
+    /// per tree, arrays cache-hot); other variants fall back per row.
+    pub fn predict_many(&mut self, reqs: &[&Request], out: &mut Vec<u32>) {
+        out.clear();
+        let batched = matches!(self.variant, Variant::Inst | Variant::Usin)
+            && self.global.is_some()
+            && reqs.len() > 1;
+        if !batched {
+            for r in reqs {
+                out.push(self.predict(r));
+            }
+            return;
+        }
+        self.batch_rows.clear();
+        for r in reqs {
+            self.fx.features_into(self.variant, r, &mut self.row_buf);
+            self.batch_rows.extend_from_slice(&self.row_buf);
+        }
+        let forest = self.global.as_ref().unwrap();
+        forest.predict_many(&self.batch_rows, self.variant.dim(), &mut self.batch_out);
+        out.extend(
+            self.batch_out
+                .iter()
+                .map(|&raw| Self::clamp_raw(raw, self.g_max)),
+        );
+    }
+
+    /// The trained INST/USIN forest, if any (benches and golden tests
+    /// drive the reference traversal through it).
+    pub fn global_forest(&self) -> Option<&Forest> {
+        self.global.as_ref()
     }
 
     /// Current training-set size (for continuous-learning telemetry).
@@ -209,5 +284,35 @@ mod tests {
         let extra = build_predictor_split(LlmProfile::ChatGlm6B, 150, 1, 1024, 15).train;
         p.augment_and_refit(&extra);
         assert!(p.train_size() > before_n);
+    }
+
+    #[test]
+    fn predict_many_matches_predict() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 60, 30, 1024, 16);
+        for v in [Variant::Uilo, Variant::Raft, Variant::Inst, Variant::Usin] {
+            let mut p = GenLenPredictor::new(v, &cfg);
+            p.train(&split.train);
+            let refs: Vec<&Request> = split.test.iter().collect();
+            let mut out = Vec::new();
+            p.predict_many(&refs, &mut out);
+            assert_eq!(out.len(), split.test.len());
+            for (r, &got) in split.test.iter().zip(&out) {
+                assert_eq!(got, p.predict(r), "{}", v.name());
+            }
+        }
+    }
+
+    #[test]
+    fn predict_many_cold_start_falls_back() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 10, 6, 1024, 17);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        let refs: Vec<&Request> = split.test.iter().collect();
+        let mut out = Vec::new();
+        p.predict_many(&refs, &mut out);
+        for (r, &got) in split.test.iter().zip(&out) {
+            assert_eq!(got, r.user_input_len.clamp(1, cfg.gpu.g_max));
+        }
     }
 }

@@ -1,13 +1,18 @@
 //! Generation-length prediction (paper §III-B): from-scratch CART +
-//! random forest, the four Table-II feature variants, and the predictor
-//! service with continuous learning.
+//! random forest over a column-major dataset view, a flattened SoA
+//! inference layout, the four Table-II feature variants, and the
+//! predictor service with continuous learning.
 
+pub mod data;
 pub mod features;
+pub mod flat;
 pub mod forest;
 pub mod glp;
 pub mod tree;
 
-pub use features::Variant;
+pub use data::ColMatrix;
+pub use features::{FeatureExtractor, Variant};
+pub use flat::FlatForest;
 pub use forest::{Forest, ForestParams};
 pub use glp::GenLenPredictor;
 pub use tree::{Tree, TreeParams};

@@ -1,21 +1,28 @@
 //! CART regression tree — the building block of the random-forest
 //! generation-length predictor (sklearn stand-in, from scratch).
 //!
-//! Standard variance-reduction splitting: at each node, a random subset of
-//! features is scanned; for each candidate feature the samples are sorted
-//! by value and the split that minimises the weighted sum of child
-//! variances is found with prefix sums in O(n log n).
+//! Standard variance-reduction splitting over a column-major
+//! [`ColMatrix`] view: at each node, a random subset of features is
+//! scanned; for each candidate feature the node's rows are sorted by
+//! value and the split that minimises the weighted sum of child
+//! variances is found with prefix sums in O(n log n).  A node's sample
+//! set is an index list partitioned in place over shared scratch
+//! buffers — growing a tree never clones a sample row, and bootstrap
+//! samples are index lists with repetition rather than copied rows.
 
+use crate::predictor::data::ColMatrix;
 use crate::util::Rng;
 
-/// A fitted regression tree (flattened node array).
-#[derive(Debug, Clone)]
+/// A fitted regression tree (node-enum array — the reference layout;
+/// [`crate::predictor::FlatForest`] compiles it for the predict hot
+/// path).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Tree {
     nodes: Vec<Node>,
 }
 
-#[derive(Debug, Clone)]
-enum Node {
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Node {
     Leaf {
         value: f32,
     },
@@ -48,62 +55,77 @@ impl Default for TreeParams {
 }
 
 struct Builder<'a> {
-    x: &'a [Vec<f32>],
+    data: &'a ColMatrix,
     y: &'a [f32],
     params: &'a TreeParams,
     nodes: Vec<Node>,
     rng: Rng,
+    /// Scratch: candidate features per node (shuffled, truncated to mtry).
+    feats: Vec<usize>,
+    /// Scratch: per-feature sort buffer.
+    order: Vec<u32>,
+    /// Scratch: spill side of the stable in-place index partition.
+    spill: Vec<u32>,
 }
 
 impl<'a> Builder<'a> {
-    fn leaf(&mut self, idx: &[usize]) -> usize {
-        let mean = idx.iter().map(|&i| self.y[i]).sum::<f32>() / idx.len().max(1) as f32;
+    fn leaf(&mut self, idx: &[u32]) -> usize {
+        let mean = idx.iter().map(|&i| self.y[i as usize]).sum::<f32>()
+            / idx.len().max(1) as f32;
         self.nodes.push(Node::Leaf { value: mean });
         self.nodes.len() - 1
     }
 
-    fn grow(&mut self, idx: &mut Vec<usize>, depth: usize) -> usize {
+    fn grow(&mut self, idx: &mut [u32], depth: usize) -> usize {
         let n = idx.len();
         if depth >= self.params.max_depth || n < 2 * self.params.min_samples_leaf {
             return self.leaf(idx);
         }
         // Early exit on pure nodes.
-        let first = self.y[idx[0]];
-        if idx.iter().all(|&i| (self.y[i] - first).abs() < 1e-9) {
+        let first = self.y[idx[0] as usize];
+        if idx.iter().all(|&i| (self.y[i as usize] - first).abs() < 1e-9) {
             return self.leaf(idx);
         }
 
-        let d = self.x[0].len();
+        let d = self.data.n_cols();
         let mtry = if self.params.mtry == 0 || self.params.mtry > d {
             d
         } else {
             self.params.mtry
         };
         // Sample candidate features without replacement.
-        let mut feats: Vec<usize> = (0..d).collect();
-        self.rng.shuffle(&mut feats);
-        feats.truncate(mtry);
+        self.feats.clear();
+        self.feats.extend(0..d);
+        self.rng.shuffle(&mut self.feats);
+        self.feats.truncate(mtry);
 
-        let total_sum: f64 = idx.iter().map(|&i| self.y[i] as f64).sum();
-        let total_sq: f64 = idx.iter().map(|&i| (self.y[i] as f64).powi(2)).sum();
+        let total_sum: f64 = idx.iter().map(|&i| self.y[i as usize] as f64).sum();
+        let total_sq: f64 = idx
+            .iter()
+            .map(|&i| (self.y[i as usize] as f64).powi(2))
+            .sum();
         let parent_score = total_sq - total_sum * total_sum / n as f64;
 
+        let data = self.data;
         let mut best: Option<(f64, usize, f32)> = None; // (score, feature, thr)
-        let mut order: Vec<usize> = Vec::with_capacity(n);
-        for &f in &feats {
-            order.clear();
-            order.extend_from_slice(idx);
-            order.sort_by(|&a, &b| {
-                self.x[a][f].partial_cmp(&self.x[b][f]).unwrap()
-            });
+        for fi in 0..self.feats.len() {
+            let f = self.feats[fi];
+            let col = data.col(f);
+            self.order.clear();
+            self.order.extend_from_slice(idx);
+            // total_cmp: a NaN feature value must sort (to the end)
+            // rather than panic mid-fit.
+            self.order
+                .sort_by(|&a, &b| col[a as usize].total_cmp(&col[b as usize]));
+            let order = &self.order;
             let mut lsum = 0f64;
             let mut lsq = 0f64;
             for split_at in 1..n {
-                let yi = self.y[order[split_at - 1]] as f64;
+                let yi = self.y[order[split_at - 1] as usize] as f64;
                 lsum += yi;
                 lsq += yi * yi;
-                let xv = self.x[order[split_at - 1]][f];
-                let xn = self.x[order[split_at]][f];
+                let xv = col[order[split_at - 1] as usize];
+                let xn = col[order[split_at] as usize];
                 if xv == xn {
                     continue; // can't split between equal values
                 }
@@ -125,15 +147,30 @@ impl<'a> Builder<'a> {
 
         match best {
             Some((score, feature, threshold)) if score < parent_score - 1e-12 => {
-                let (mut left_idx, mut right_idx): (Vec<usize>, Vec<usize>) =
-                    idx.iter().partition(|&&i| self.x[i][feature] <= threshold);
-                if left_idx.is_empty() || right_idx.is_empty() {
+                // Stable in-place partition: keeps the appearance order
+                // on both sides (the order the old Vec partition
+                // produced), spilling the right side through scratch.
+                let col = data.col(feature);
+                self.spill.clear();
+                let mut n_left = 0usize;
+                for k in 0..n {
+                    let i = idx[k];
+                    if col[i as usize] <= threshold {
+                        idx[n_left] = i;
+                        n_left += 1;
+                    } else {
+                        self.spill.push(i);
+                    }
+                }
+                idx[n_left..].copy_from_slice(&self.spill);
+                if n_left == 0 || n_left == n {
                     return self.leaf(idx);
                 }
                 let me = self.nodes.len();
                 self.nodes.push(Node::Leaf { value: 0.0 }); // placeholder
-                let left = self.grow(&mut left_idx, depth + 1);
-                let right = self.grow(&mut right_idx, depth + 1);
+                let (li, ri) = idx.split_at_mut(n_left);
+                let left = self.grow(li, depth + 1);
+                let right = self.grow(ri, depth + 1);
                 self.nodes[me] = Node::Split {
                     feature,
                     threshold,
@@ -148,24 +185,45 @@ impl<'a> Builder<'a> {
 }
 
 impl Tree {
-    /// Fit a tree on rows `x` (n × d) with targets `y` (n).
+    /// Fit on row-major rows `x` (n × d) with targets `y` (n) —
+    /// convenience wrapper that builds a column-major view first.
     pub fn fit(x: &[Vec<f32>], y: &[f32], params: &TreeParams, rng: &mut Rng) -> Tree {
         assert_eq!(x.len(), y.len());
         assert!(!x.is_empty(), "cannot fit an empty tree");
+        let data = ColMatrix::from_rows(x);
+        let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+        Tree::fit_view(&data, y, &mut idx, params, rng)
+    }
+
+    /// Fit on the rows of `data` selected by `idx` (dataset row ids,
+    /// with repetition for bootstrap samples; permuted in place while
+    /// growing).  `y` is indexed by dataset row.  No row is ever cloned.
+    pub fn fit_view(
+        data: &ColMatrix,
+        y: &[f32],
+        idx: &mut [u32],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert_eq!(data.n_rows(), y.len());
+        assert!(!idx.is_empty(), "cannot fit an empty tree");
         let mut b = Builder {
-            x,
+            data,
             y,
             params,
             nodes: Vec::new(),
             rng: rng.fork(0x7265_6772),
+            feats: Vec::with_capacity(data.n_cols()),
+            order: Vec::with_capacity(idx.len()),
+            spill: Vec::with_capacity(idx.len()),
         };
-        let mut idx: Vec<usize> = (0..x.len()).collect();
-        let root = b.grow(&mut idx, 0);
+        let root = b.grow(idx, 0);
         debug_assert_eq!(root, 0);
         Tree { nodes: b.nodes }
     }
 
-    /// Predict one row.
+    /// Predict one row — the node-enum reference traversal (the hot path
+    /// runs over [`crate::predictor::FlatForest`]'s compiled layout).
     pub fn predict(&self, row: &[f32]) -> f32 {
         let mut i = 0;
         loop {
@@ -185,6 +243,10 @@ impl Tree {
 
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
+    }
+
+    pub(crate) fn nodes(&self) -> &[Node] {
+        &self.nodes
     }
 }
 
@@ -264,5 +326,31 @@ mod tests {
         let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
         assert!((t.predict(&[0.5, 10.0, 0.0]) - 0.0).abs() < 1.0);
         assert!((t.predict(&[0.5, 290.0, 0.0]) - 10.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn bootstrap_view_uses_only_selected_rows() {
+        // rows 0..50 map to 1.0, rows 50..100 to 9.0; fit on the low
+        // half only — the tree must never see the high half.
+        let (x, y) = grid_xy(|v| if v < 50.0 { 1.0 } else { 9.0 }, 100);
+        let data = ColMatrix::from_rows(&x);
+        let mut idx: Vec<u32> = (0..50).collect();
+        let mut rng = Rng::new(6);
+        let t = Tree::fit_view(&data, &y, &mut idx, &TreeParams::default(), &mut rng);
+        assert_eq!(t.predict(&[80.0]), 1.0);
+    }
+
+    #[test]
+    fn nan_feature_values_do_not_panic() {
+        // total_cmp sort: a NaN feature value sorts instead of panicking
+        // mid-fit, and the grown tree stays finite.
+        let mut x: Vec<Vec<f32>> = (0..64).map(|i| vec![i as f32]).collect();
+        x[10][0] = f32::NAN;
+        x[40][0] = f32::NAN;
+        let y: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut rng = Rng::new(11);
+        let t = Tree::fit(&x, &y, &TreeParams::default(), &mut rng);
+        assert!(t.n_nodes() >= 1);
+        assert!(t.predict(&[5.0]).is_finite());
     }
 }

@@ -47,6 +47,11 @@ impl<E> EventQueue<E> {
         self.heap.first().map(|(t, _, _)| *t)
     }
 
+    /// Next event (time + payload ref) without removing it.
+    pub fn peek(&self) -> Option<(f64, &E)> {
+        self.heap.first().map(|(t, _, e)| (*t, e))
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -144,6 +149,17 @@ mod tests {
             }
             assert_eq!(count, n);
         });
+    }
+
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "b");
+        q.push(1.0, "a");
+        let (t, e) = q.peek().unwrap();
+        assert_eq!((t, *e), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.peek().unwrap().0, 3.0);
     }
 
     #[test]

@@ -140,26 +140,66 @@ pub fn run_magnus_with(
         std::collections::HashMap::new();
 
     let mut served = 0usize;
-    // Scratch view buffer reused across dispatch rounds (no per-round
-    // allocation in the hot path).
+    // Scratch buffers reused across events (no per-event allocation in
+    // the hot path).
     let mut views: Vec<BatchView> = Vec::new();
+    let mut arrivals: Vec<usize> = Vec::new();
+    let mut arrival_reqs: Vec<&Request> = Vec::new();
+    let mut preds: Vec<u32> = Vec::new();
     while let Some((now, ev)) = events.pop() {
         match ev {
             Event::Arrival(i) => {
-                let req = trace[i].clone();
-                let predicted = predictor.predict(&req);
-                // Fig. 14a telemetry: error of the prediction *as made*,
-                // binned by prediction time (completion-time binning would
-                // confound scheduler ordering with predictor quality).
-                pred_errors
-                    .push((now, (predicted as f64 - req.gen_len as f64).abs()));
-                batcher.insert(
-                    PredictedRequest {
-                        request: req,
-                        predicted_gen_len: predicted,
-                    },
-                    now,
-                );
+                // Drain the run of consecutive same-timestamp arrivals
+                // (stopping at any other event type, so event-processing
+                // order is untouched) and predict them as one batch over
+                // the flattened forest.  Each request is then inserted —
+                // and the dispatch loop run — in exactly the order the
+                // one-event-at-a-time reference used, so behaviour is
+                // bit-for-bit identical; only the predictor cost changes.
+                arrivals.clear();
+                arrivals.push(i);
+                loop {
+                    match events.peek() {
+                        Some((t, Event::Arrival(j))) if t == now => {
+                            arrivals.push(*j);
+                            events.pop();
+                        }
+                        _ => break,
+                    }
+                }
+                arrival_reqs.clear();
+                arrival_reqs.extend(arrivals.iter().map(|&k| &trace[k]));
+                predictor.predict_many(&arrival_reqs, &mut preds);
+                for (k, &ti) in arrivals.iter().enumerate() {
+                    let req = trace[ti].clone();
+                    let predicted = preds[k];
+                    // Fig. 14a telemetry: error of the prediction *as
+                    // made*, binned by prediction time (completion-time
+                    // binning would confound scheduler ordering with
+                    // predictor quality).
+                    pred_errors
+                        .push((now, (predicted as f64 - req.gen_len as f64).abs()));
+                    batcher.insert(
+                        PredictedRequest {
+                            request: req,
+                            predicted_gen_len: predicted,
+                        },
+                        now,
+                    );
+                    dispatch_idle(
+                        now,
+                        mode,
+                        policy,
+                        engine,
+                        &mut batcher,
+                        &estimator,
+                        &mut idle,
+                        &mut views,
+                        &mut events,
+                        &mut dispatch_est,
+                        &mut metrics,
+                    );
+                }
             }
             Event::BatchDone(inst, batch, outcome) => {
                 match outcome {
@@ -212,65 +252,19 @@ pub fn run_magnus_with(
         }
 
         // Dispatch while instances are idle and batches are queued.
-        while !idle.is_empty() && !batcher.is_empty() {
-            views.clear();
-            match mode {
-                DispatchMode::Fresh => {
-                    for b in batcher.queue() {
-                        let est = estimator.estimate(&BatchShape {
-                            batch_size: b.size(),
-                            batch_len: b.len(),
-                            batch_gen_len: b.predicted_gen_len(),
-                        });
-                        views.push(view_of(b, now, est));
-                    }
-                }
-                DispatchMode::Cached => {
-                    let gen = estimator.generation();
-                    for i in 0..batcher.queue_len() {
-                        let est = batcher
-                            .cached_estimate(i, gen, |shape| estimator.estimate(shape));
-                        let (min_arrival, created_at, batch_id) = batcher.view_meta(i);
-                        views.push(BatchView {
-                            queuing_time: (now - min_arrival).max(0.0),
-                            est_serving_time: est,
-                            created_at,
-                            batch_id,
-                        });
-                    }
-                }
-            }
-            let pick = select(policy.sched, &views).unwrap();
-            let est = views[pick].est_serving_time;
-            let batch = batcher.take(pick);
-            let inst = idle.pop_front().unwrap();
-
-            match engine.serve_batch(&batch) {
-                BatchOutcome::Oom {
-                    at_iteration: _,
-                    wasted_time,
-                } => {
-                    // §III-C: split evenly, mark uninsertable, re-queue.
-                    metrics.record_oom();
-                    let nid = batcher.alloc_id();
-                    let (l, r) = batch.split(nid);
-                    batcher.requeue(l);
-                    batcher.requeue(r);
-                    events.push(
-                        now + wasted_time + OOM_RELOAD_S,
-                        Event::InstanceReady(inst),
-                    );
-                }
-                done @ BatchOutcome::Completed { .. } => {
-                    let serving_time = match &done {
-                        BatchOutcome::Completed { serving_time, .. } => *serving_time,
-                        _ => unreachable!(),
-                    };
-                    dispatch_est.insert(batch.id, est);
-                    events.push(now + serving_time, Event::BatchDone(inst, batch, done));
-                }
-            }
-        }
+        dispatch_idle(
+            now,
+            mode,
+            policy,
+            engine,
+            &mut batcher,
+            &estimator,
+            &mut idle,
+            &mut views,
+            &mut events,
+            &mut dispatch_est,
+            &mut metrics,
+        );
     }
 
     debug_assert_eq!(served, trace.len(), "all requests must complete");
@@ -279,6 +273,86 @@ pub fn run_magnus_with(
         db,
         pred_errors,
         est_errors,
+    }
+}
+
+/// Drain the dispatch loop: while instances are idle and batches are
+/// queued, build scheduler views (per [`DispatchMode`]), select, and hand
+/// the picked batch to an engine instance.  Factored out of the event
+/// loop so same-timestamp arrival draining can interleave inserts with
+/// dispatch exactly like the one-event-at-a-time reference did.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_idle(
+    now: f64,
+    mode: DispatchMode,
+    policy: &MagnusPolicy,
+    engine: &dyn InferenceEngine,
+    batcher: &mut AdaptiveBatcher,
+    estimator: &ServingTimeEstimator,
+    idle: &mut VecDeque<usize>,
+    views: &mut Vec<BatchView>,
+    events: &mut EventQueue<Event>,
+    dispatch_est: &mut std::collections::HashMap<u64, f64>,
+    metrics: &mut RunMetrics,
+) {
+    while !idle.is_empty() && !batcher.is_empty() {
+        views.clear();
+        match mode {
+            DispatchMode::Fresh => {
+                for b in batcher.queue() {
+                    let est = estimator.estimate(&BatchShape {
+                        batch_size: b.size(),
+                        batch_len: b.len(),
+                        batch_gen_len: b.predicted_gen_len(),
+                    });
+                    views.push(view_of(b, now, est));
+                }
+            }
+            DispatchMode::Cached => {
+                let gen = estimator.generation();
+                for i in 0..batcher.queue_len() {
+                    let est = batcher
+                        .cached_estimate(i, gen, |shape| estimator.estimate(shape));
+                    let (min_arrival, created_at, batch_id) = batcher.view_meta(i);
+                    views.push(BatchView {
+                        queuing_time: (now - min_arrival).max(0.0),
+                        est_serving_time: est,
+                        created_at,
+                        batch_id,
+                    });
+                }
+            }
+        }
+        let pick = select(policy.sched, views).unwrap();
+        let est = views[pick].est_serving_time;
+        let batch = batcher.take(pick);
+        let inst = idle.pop_front().unwrap();
+
+        match engine.serve_batch(&batch) {
+            BatchOutcome::Oom {
+                at_iteration: _,
+                wasted_time,
+            } => {
+                // §III-C: split evenly, mark uninsertable, re-queue.
+                metrics.record_oom();
+                let nid = batcher.alloc_id();
+                let (l, r) = batch.split(nid);
+                batcher.requeue(l);
+                batcher.requeue(r);
+                events.push(
+                    now + wasted_time + OOM_RELOAD_S,
+                    Event::InstanceReady(inst),
+                );
+            }
+            done @ BatchOutcome::Completed { .. } => {
+                let serving_time = match &done {
+                    BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                    _ => unreachable!(),
+                };
+                dispatch_est.insert(batch.id, est);
+                events.push(now + serving_time, Event::BatchDone(inst, batch, done));
+            }
+        }
     }
 }
 

@@ -133,6 +133,11 @@ impl BenchSuite {
         println!("\n== {} ==", self.title);
     }
 
+    /// Timing samples taken per case (smaller under MAGNUS_BENCH_QUICK).
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
     /// Machine-readable export of every measured result.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -217,6 +222,55 @@ pub fn record_sim_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// Record the predictor hot-path comparison as `BENCH_predictor.json` at
+/// the repo root (same shape as [`record_sim_bench`]'s `BENCH_sim.json`).
+/// `naive_predict_ns` is the node-enum / per-call-allocation baseline,
+/// `flat_predict_ns` the flattened SoA + zero-alloc pipeline (per-row,
+/// batched); the refit pair compares the pre-overhaul row-cloned serial
+/// forest fit against the index-based parallel one at a
+/// continuous-learning train-set size.  Written by
+/// `benches/bench_predictor.rs` (multi-sample, authoritative — always
+/// overwrites) and by the tier-1 `predictor_equivalence` test (single
+/// sample, only when no record exists yet).
+#[allow(clippy::too_many_arguments)]
+pub fn record_predictor_bench(
+    path: &str,
+    train_rows: usize,
+    test_rows: usize,
+    samples: usize,
+    naive_predict_ns: f64,
+    flat_predict_ns: f64,
+    refit_naive_s: f64,
+    refit_flat_s: f64,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut fields = vec![
+        ("bench", Json::str("predictor_hot_path")),
+        ("train_rows", Json::num(train_rows as f64)),
+        ("test_rows", Json::num(test_rows as f64)),
+        ("samples", Json::num(samples as f64)),
+        ("naive_predict_ns", Json::num(naive_predict_ns)),
+        ("flat_predict_ns", Json::num(flat_predict_ns)),
+        (
+            "speedup",
+            Json::num(naive_predict_ns / flat_predict_ns.max(1e-9)),
+        ),
+        ("refit_naive_s", Json::num(refit_naive_s)),
+        ("refit_flat_s", Json::num(refit_flat_s)),
+        (
+            "refit_speedup",
+            Json::num(refit_naive_s / refit_flat_s.max(1e-12)),
+        ),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +307,19 @@ mod tests {
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("speedup").as_f64(), Some(4.0));
         assert_eq!(j.get("requests").as_u64(), Some(600));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_predictor_bench_writes_speedups() {
+        let path = std::env::temp_dir().join("magnus_bench_predictor_test.json");
+        let path = path.to_string_lossy().into_owned();
+        record_predictor_bench(&path, 3200, 800, 1, 6000.0, 1000.0, 0.4, 0.1, vec![])
+            .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("speedup").as_f64(), Some(6.0));
+        assert_eq!(j.get("refit_speedup").as_f64(), Some(4.0));
+        assert_eq!(j.get("train_rows").as_u64(), Some(3200));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,283 @@
+//! Golden equivalence of the predictor hot-path overhaul.
+//!
+//! The flattened SoA forest must reproduce the node-enum reference
+//! bit-for-bit on random datasets, parallel and serial `Forest::fit`
+//! must produce identical trees from the same seed, and the zero-alloc
+//! feature pipeline must emit exactly the rows the pre-overhaul
+//! allocating pipeline did.  The acceptance-scale run doubles as the
+//! tier-1 perf recording: naive-vs-flat predict and refit wall clocks
+//! land in `BENCH_predictor.json` at the repo root (single sample,
+//! written only when no bench-quality record exists).
+
+use std::time::Instant;
+
+use magnus::config::ServingConfig;
+use magnus::predictor::{
+    ColMatrix, FeatureExtractor, Forest, ForestParams, GenLenPredictor, Tree,
+    TreeParams, Variant,
+};
+use magnus::util::bench::{bb, record_predictor_bench};
+use magnus::util::prop::prop_check;
+use magnus::util::{Json, Rng};
+use magnus::workload::dataset::build_predictor_split;
+use magnus::workload::{LlmProfile, Request};
+
+/// Random row-major dataset with deliberate duplicate feature values
+/// (ties exercise the stable-sort / equal-value split paths).
+fn random_dataset(rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let n = rng.range_usize(20, 200);
+    let d = rng.range_usize(1, 7);
+    let x: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            (0..d)
+                .map(|_| {
+                    if rng.f64() < 0.4 {
+                        // quantised → many exact duplicates
+                        rng.range_u64(0, 12) as f32 * 0.5
+                    } else {
+                        rng.range_f64(-50.0, 50.0) as f32
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let y: Vec<f32> = x
+        .iter()
+        .map(|r| r.iter().sum::<f32>() * 2.0 + rng.normal_ms(0.0, 3.0) as f32)
+        .collect();
+    (x, y)
+}
+
+fn random_params(rng: &mut Rng, d: usize) -> ForestParams {
+    ForestParams {
+        n_trees: rng.range_usize(1, 12),
+        tree: TreeParams {
+            max_depth: rng.range_usize(2, 14),
+            min_samples_leaf: rng.range_usize(1, 5),
+            mtry: if rng.f64() < 0.5 {
+                0
+            } else {
+                rng.range_usize(1, d + 1)
+            },
+        },
+        bootstrap_frac: if rng.f64() < 0.3 { 0.6 } else { 1.0 },
+    }
+}
+
+/// The flattened SoA layout replays the node-enum reference bit-for-bit:
+/// single-row predict, batched predict_many, training rows and unseen
+/// probes alike.
+#[test]
+fn flat_forest_matches_node_enum_reference() {
+    prop_check(25, |rng| {
+        let (x, y) = random_dataset(rng);
+        let d = x[0].len();
+        let params = random_params(rng, d);
+        let mut frng = rng.fork(1);
+        let f = Forest::fit(&x, &y, &params, &mut frng);
+
+        let mut probes = x.clone();
+        for _ in 0..16 {
+            probes.push((0..d).map(|_| rng.range_f64(-80.0, 80.0) as f32).collect());
+        }
+        let rows_flat: Vec<f32> =
+            probes.iter().flat_map(|r| r.iter().copied()).collect();
+        let mut batched = Vec::new();
+        f.predict_many(&rows_flat, d, &mut batched);
+        for (i, row) in probes.iter().enumerate() {
+            let reference = f.predict_reference(row);
+            assert_eq!(
+                f.predict(row).to_bits(),
+                reference.to_bits(),
+                "row {i}: flat vs enum"
+            );
+            assert_eq!(
+                batched[i].to_bits(),
+                reference.to_bits(),
+                "row {i}: batched vs enum"
+            );
+        }
+    });
+}
+
+/// Parallel and serial `Forest::fit` produce identical trees (and hence
+/// identical flat layouts) given the same seed.
+#[test]
+fn parallel_and_serial_fit_produce_identical_forests() {
+    prop_check(15, |rng| {
+        let (x, y) = random_dataset(rng);
+        let d = x[0].len();
+        let params = random_params(rng, d);
+        let data = ColMatrix::from_rows(&x);
+        let idx: Vec<u32> = (0..x.len() as u32).collect();
+        let seed = rng.next_u64();
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        let serial = Forest::fit_view_mode(&data, &y, &idx, &params, &mut r1, false);
+        let parallel = Forest::fit_view_mode(&data, &y, &idx, &params, &mut r2, true);
+        assert_eq!(serial, parallel, "seed {seed:#x}");
+    });
+}
+
+/// A NaN feature value must not panic mid-fit (total_cmp sort), for
+/// single trees and whole forests.
+#[test]
+fn nan_features_never_panic_fit() {
+    prop_check(15, |rng| {
+        let (mut x, y) = random_dataset(rng);
+        let d = x[0].len();
+        for _ in 0..rng.range_usize(1, 6) {
+            let i = rng.range_usize(0, x.len());
+            let f = rng.range_usize(0, d);
+            x[i][f] = f32::NAN;
+        }
+        let params = random_params(rng, d);
+        let mut frng = rng.fork(2);
+        let f = Forest::fit(&x, &y, &params, &mut frng);
+        let probe: Vec<f32> = (0..d).map(|_| 1.0).collect();
+        assert!(f.predict(&probe).is_finite());
+        let mut trng = rng.fork(3);
+        let t = Tree::fit(&x, &y, &params.tree, &mut trng);
+        assert!(t.predict(&probe).is_finite());
+    });
+}
+
+/// The zero-alloc feature pipeline emits exactly the rows of the
+/// pre-overhaul allocating pipeline, across variants and tasks.
+#[test]
+fn zero_alloc_features_match_baseline_on_real_requests() {
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 8, 4, 1024, 21);
+    let mut fx = FeatureExtractor::new();
+    let mut row = Vec::new();
+    for v in [Variant::Raft, Variant::Inst, Variant::Usin] {
+        for r in split.train.iter().chain(&split.test) {
+            let base = fx.features_baseline(v, r);
+            fx.features_into(v, r, &mut row);
+            assert_eq!(base.len(), row.len());
+            for (a, b) in base.iter().zip(&row) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} req {}", v.name(), r.id);
+            }
+        }
+    }
+}
+
+/// The pre-overhaul predict path (baseline features + node-enum
+/// traversal), reproduced from the retained reference APIs.
+fn predict_naive(
+    fx: &mut FeatureExtractor,
+    forest: &Forest,
+    req: &Request,
+    g_max: u32,
+) -> u32 {
+    let row = fx.features_baseline(Variant::Usin, req);
+    let raw = forest.predict_reference(&row);
+    (raw.round().max(1.0) as u32).min(g_max)
+}
+
+/// Acceptance-scale golden run (USIN, 400 train/task): the full service
+/// path — batched flat predict — matches the naive reference on every
+/// test request, and the measured wall clocks are recorded to
+/// `BENCH_predictor.json` when no record exists yet.
+#[test]
+fn golden_equivalence_and_bench_at_acceptance_scale() {
+    let cfg = ServingConfig::default();
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 400, 100, 1024, 3);
+    let n_test = split.test.len();
+    let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+    p.train(&split.train);
+    let forest = p.global_forest().expect("trained USIN forest").clone();
+    let mut fx = FeatureExtractor::new();
+    let g_max = cfg.gpu.g_max;
+
+    let refs: Vec<&Request> = split.test.iter().collect();
+    let mut batch = Vec::new();
+    p.predict_many(&refs, &mut batch);
+    for (i, r) in split.test.iter().enumerate() {
+        let naive = predict_naive(&mut fx, &forest, r, g_max);
+        assert_eq!(naive, p.predict(r), "req {i}: naive vs flat");
+        assert_eq!(naive, batch[i], "req {i}: naive vs batched");
+    }
+
+    // Single-sample perf point (tier-1 is built with opt-level 3, so the
+    // ratio is representative; benches/bench_predictor.rs overwrites
+    // with careful multi-sample numbers).
+    let reps = 10;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for r in &split.test {
+            bb(predict_naive(&mut fx, &forest, r, g_max));
+        }
+    }
+    let naive_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        p.predict_many(&refs, &mut batch);
+        bb(&batch);
+    }
+    let flat_s = t0.elapsed().as_secs_f64();
+    let calls = (reps * n_test) as f64;
+    let naive_ns = naive_s * 1e9 / calls;
+    let flat_ns = flat_s * 1e9 / calls;
+
+    // refit at a continuous-learning train-set size, one sample each way
+    let rows: Vec<Vec<f32>> = split
+        .train
+        .iter()
+        .map(|r| fx.features(Variant::Usin, r))
+        .collect();
+    let y: Vec<f32> = split.train.iter().map(|r| r.gen_len as f32).collect();
+    let data = ColMatrix::from_rows(&rows);
+    let idx: Vec<u32> = (0..rows.len() as u32).collect();
+    let params = ForestParams {
+        n_trees: cfg.rf_trees,
+        tree: TreeParams {
+            max_depth: cfg.rf_max_depth,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let nreq = rows.len();
+    let t0 = Instant::now();
+    {
+        let mut rng = Rng::new(7);
+        let mut trees = Vec::with_capacity(params.n_trees);
+        for t in 0..params.n_trees {
+            let mut trng = rng.fork(t as u64);
+            let picks: Vec<usize> =
+                (0..nreq).map(|_| trng.range_usize(0, nreq)).collect();
+            let bx: Vec<Vec<f32>> = picks.iter().map(|&i| rows[i].clone()).collect();
+            let by: Vec<f32> = picks.iter().map(|&i| y[i]).collect();
+            trees.push(Tree::fit(&bx, &by, &params.tree, &mut trng));
+        }
+        bb(&trees);
+    }
+    let refit_naive_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    {
+        let mut rng = Rng::new(7);
+        bb(Forest::fit_view_mode(&data, &y, &idx, &params, &mut rng, true));
+    }
+    let refit_flat_s = t0.elapsed().as_secs_f64();
+
+    // Only record when nothing is there yet: this runs under parallel
+    // test load with one sample and must not clobber a bench-quality
+    // measurement.
+    let path = format!("{}/../BENCH_predictor.json", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&path).exists() {
+        let _ = record_predictor_bench(
+            &path,
+            split.train.len(),
+            n_test,
+            1,
+            naive_ns,
+            flat_ns,
+            refit_naive_s,
+            refit_flat_s,
+            vec![
+                ("refit_rows", Json::num(nreq as f64)),
+                ("source", Json::str("tests/predictor_equivalence.rs")),
+            ],
+        );
+    }
+    assert!(naive_s > 0.0 && flat_s > 0.0);
+}
