@@ -59,6 +59,7 @@ fn main() {
 
     let (fresh_s, fresh_sum) = time_mode(DispatchMode::Fresh);
     let (cached_s, cached_sum) = time_mode(DispatchMode::Cached);
+    let (indexed_s, indexed_sum) = time_mode(DispatchMode::Indexed);
 
     // The speedup only counts if behaviour is untouched.
     assert_eq!(
@@ -72,11 +73,23 @@ fn main() {
         fresh_sum.mean_response_time.to_bits(),
         cached_sum.mean_response_time.to_bits()
     );
+    assert_eq!(
+        fresh_sum.request_throughput.to_bits(),
+        indexed_sum.request_throughput.to_bits(),
+        "golden equivalence violated: fresh {} vs indexed {}",
+        fresh_sum.request_throughput,
+        indexed_sum.request_throughput
+    );
+    assert_eq!(
+        fresh_sum.mean_response_time.to_bits(),
+        indexed_sum.mean_response_time.to_bits()
+    );
 
     let speedup = fresh_s / cached_s.max(1e-12);
-    println!("  fresh  dispatch: {fresh_s:8.3} s / run");
-    println!("  cached dispatch: {cached_s:8.3} s / run");
-    println!("  speedup:         {speedup:8.2}x  (acceptance floor: 2.00x)");
+    println!("  fresh   dispatch: {fresh_s:8.3} s / run");
+    println!("  cached  dispatch: {cached_s:8.3} s / run");
+    println!("  indexed dispatch: {indexed_s:8.3} s / run");
+    println!("  speedup:          {speedup:8.2}x  (acceptance floor: 2.00x)");
 
     let path = format!("{}/../BENCH_sim.json", env!("CARGO_MANIFEST_DIR"));
     record_sim_bench(
@@ -88,6 +101,7 @@ fn main() {
         cached_s,
         vec![
             ("policy", Json::str("Magnus")),
+            ("indexed_s", Json::num(indexed_s)),
             ("predictor_train", Json::num(PREDICTOR_TRAIN as f64)),
             ("source", Json::str("benches/bench_sim.rs")),
             (

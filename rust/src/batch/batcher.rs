@@ -8,9 +8,13 @@
 //! therefore coalesce, and batch sizes adapt to the memory budget —
 //! small/short batches grow large, long batches stay small.
 
+use std::collections::HashMap;
+
 use crate::batch::types::Batch;
 use crate::batch::wma::{mem_bytes, wma_gen, wma_wait};
+use crate::config::SchedPolicy;
 use crate::estimator::BatchShape;
+use crate::scheduler::index::{Entry, LazyHeap};
 use crate::workload::PredictedRequest;
 
 /// O(1) WMA/memory aggregate for one queued batch.
@@ -90,7 +94,8 @@ pub struct BatcherConfig {
     pub max_batch_size: u32,
 }
 
-/// The adaptive batcher: owns the waiting queue of open batches.
+/// The adaptive batcher: owns the waiting queue of open batches and the
+/// incremental per-policy selection index over them.
 pub struct AdaptiveBatcher {
     cfg: BatcherConfig,
     queue: Vec<Batch>,
@@ -100,6 +105,49 @@ pub struct AdaptiveBatcher {
     aggs: Vec<BatchAgg>,
     /// Serving-time estimate cache, index-parallel to `queue`.
     ests: Vec<EstCache>,
+    // --- indexed-select state -------------------------------------------
+    // The dispatch loop used to rank every queued batch per round; these
+    // lazy heaps keep the per-policy order incrementally so steady-state
+    // selection is O(log Q) (see `select_indexed`).  The heaps are only
+    // consulted there — `insert`'s Algorithm-1 scan is untouched.
+    /// id → queue index, for the heaps' validity checks (only popped
+    /// entries pay the lookup, never the Algorithm-1 scan).
+    pos: HashMap<u64, usize>,
+    /// Mutation stamps, index-parallel to `queue`, drawn from a global
+    /// monotone counter so a re-queued id can never revive entries from
+    /// its earlier life.
+    stamps: Vec<u64>,
+    next_stamp: u64,
+    /// (created_at, id) min-heap — the FCFS winner; keys are immutable,
+    /// so entries stay valid while their batch is queued.  Built lazily
+    /// on the first FCFS select (`fcfs_active`), so runs under other
+    /// policies never pay its maintenance or memory.
+    fcfs_heap: LazyHeap,
+    fcfs_active: bool,
+    /// (min_arrival, id) min-heap — HRRN's queuing-time upper bound.
+    /// Built lazily on the first HRRN select (`arrival_active`).
+    arrival_heap: LazyHeap,
+    arrival_active: bool,
+    /// (estimate, id) min-heap — the SJF winner and HRRN's pruning
+    /// order; keyed against `est_gen`.
+    est_heap: LazyHeap,
+    /// Estimator generation the est-heap keys were computed at
+    /// (`u64::MAX` = never keyed; the first estimator select rebuilds).
+    est_gen: u64,
+    /// Batches whose est-heap entry is missing or stale (newly opened,
+    /// joined, re-queued) — re-keyed lazily at the next estimator select.
+    /// Tracked only once the est heap is live (`est_gen != u64::MAX`);
+    /// before that, the first SJF/HRRN select rebuilds from the queue,
+    /// so pure-FCFS runs accumulate nothing here.
+    est_dirty: Vec<u64>,
+    /// A NaN estimate was pushed this generation.  NaN sorts *last* in
+    /// the heap but clamps to the *smallest* HRRN denominator, so the
+    /// ascending-estimate pruning bound would skip it; the flag falls
+    /// back to a full (still exact) scan.  Never set on product paths —
+    /// the estimator clamps its output.
+    est_heap_has_nan: bool,
+    /// Scratch for the HRRN pruning scan (reused across selects).
+    hrrn_scratch: Vec<Entry>,
 }
 
 impl AdaptiveBatcher {
@@ -110,6 +158,18 @@ impl AdaptiveBatcher {
             next_batch_id: 0,
             aggs: Vec::new(),
             ests: Vec::new(),
+            pos: HashMap::new(),
+            stamps: Vec::new(),
+            next_stamp: 0,
+            fcfs_heap: LazyHeap::new(),
+            fcfs_active: false,
+            arrival_heap: LazyHeap::new(),
+            arrival_active: false,
+            est_heap: LazyHeap::new(),
+            est_gen: u64::MAX,
+            est_dirty: Vec::new(),
+            est_heap_has_nan: false,
+            hrrn_scratch: Vec::new(),
         }
     }
 
@@ -161,22 +221,65 @@ impl AdaptiveBatcher {
                 agg.min_arrival = agg.min_arrival.min(p.request.arrival);
                 self.ests[i] = EstCache::EMPTY; // shape changed
                 self.queue[i].requests.push(p);
+                self.touch(i); // shape changed: re-key the index entries
                 self.queue[i].id
             }
             _ => {
                 let id = self.next_batch_id;
                 self.next_batch_id += 1;
+                let arrival = p.request.arrival;
                 self.aggs.push(BatchAgg {
                     len: p.len(),
                     gen: p.predicted_gen_len,
                     size: 1,
                     max_s: cand_s,
-                    min_arrival: p.request.arrival,
+                    min_arrival: arrival,
                 });
                 self.ests.push(EstCache::EMPTY);
                 self.queue.push(Batch::new(id, p, now));
+                self.index_new_slot(self.queue.len() - 1, now, arrival);
                 id
             }
+        }
+    }
+
+    /// Register the freshly-pushed queue slot `i` with the selection
+    /// index: position map, mutation stamp, and — for each structure a
+    /// select has activated — a heap entry / pending est re-key.
+    fn index_new_slot(&mut self, i: usize, created_at: f64, min_arrival: f64) {
+        let id = self.queue[i].id;
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.pos.insert(id, i);
+        self.stamps.push(stamp);
+        debug_assert_eq!(self.stamps.len(), self.queue.len());
+        if self.fcfs_active {
+            self.fcfs_heap.push(created_at, id, stamp);
+        }
+        if self.arrival_active {
+            self.arrival_heap.push(min_arrival, id, stamp);
+        }
+        if self.est_gen != u64::MAX {
+            self.est_dirty.push(id);
+        }
+    }
+
+    /// Re-key the index after slot `i` mutated: bump the stamp (staling
+    /// every existing arrival/est entry for the batch) and, where
+    /// active, push a fresh arrival entry and queue an est re-key for
+    /// the next estimator select.  FCFS entries survive untouched —
+    /// their (created_at, id) key is immutable, so they validate on
+    /// liveness alone.
+    fn touch(&mut self, i: usize) {
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.stamps[i] = stamp;
+        let id = self.queue[i].id;
+        if self.arrival_active {
+            self.arrival_heap.push(self.aggs[i].min_arrival, id, stamp);
+        }
+        if self.est_gen != u64::MAX {
+            self.est_dirty.push(id);
         }
     }
 
@@ -189,7 +292,15 @@ impl AdaptiveBatcher {
     pub fn take(&mut self, index: usize) -> Batch {
         self.aggs.swap_remove(index);
         self.ests.swap_remove(index);
-        self.queue.swap_remove(index)
+        self.stamps.swap_remove(index);
+        let batch = self.queue.swap_remove(index);
+        // Index bookkeeping: the departed id's heap entries go stale (no
+        // `pos` hit) and are discarded lazily as they surface.
+        self.pos.remove(&batch.id);
+        if index < self.queue.len() {
+            self.pos.insert(self.queue[index].id, index);
+        }
+        batch
     }
 
     /// Re-queue a batch (OOM-split halves — uninsertable, so no agg is
@@ -207,9 +318,11 @@ impl AdaptiveBatcher {
                 .unwrap_or(0),
             min_arrival: batch.earliest_arrival(),
         };
+        let created_at = batch.created_at;
         self.aggs.push(agg);
         self.ests.push(EstCache::EMPTY);
         self.queue.push(batch);
+        self.index_new_slot(self.queue.len() - 1, created_at, agg.min_arrival);
     }
 
     /// Batch shape from the O(1) aggregates (identical to scanning the
@@ -252,6 +365,231 @@ impl AdaptiveBatcher {
             };
         }
         self.ests[index].value
+    }
+
+    /// Indexed batch selection: the incremental replacement for building
+    /// a view per queued batch and linear-scanning `scheduler::select`.
+    ///
+    /// Returns the queue index of the batch to serve next and its cached
+    /// serving-time estimate (the value the dispatch loop logs), or
+    /// `None` if the queue is empty.  The winner — and the estimate — are
+    /// **bit-identical** to the linear-scan reference for every policy:
+    ///
+    /// * **FCFS** peeks the (created_at, id) heap; keys are immutable, so
+    ///   validity is just liveness.
+    /// * **SJF** peeks the (estimate, id) heap after syncing it: a new
+    ///   estimator generation rebuilds every key (each refit moves every
+    ///   estimate, amortised over a generation's many selects), otherwise
+    ///   only batches on the dirty list are re-keyed.
+    /// * **HRRN** cannot be a static heap — its response ratio
+    ///   `T_q(now)/T_s` moves with the clock — but it admits an exact
+    ///   pruned scan: pop candidates in ascending-estimate order, and
+    ///   stop once `(now − min live arrival) / next estimate`, an upper
+    ///   bound on every unseen ratio (waits are ≤ the oldest wait,
+    ///   estimates are ≥ the next key, and f64 division is monotone in
+    ///   both arguments), falls strictly below the best ratio seen.
+    ///   Popped candidates are pushed back afterwards.
+    ///
+    /// In debug builds every call cross-checks itself against the
+    /// scan reference, which turns each sim test into a
+    /// golden-equivalence test of the index.
+    pub fn select_indexed(
+        &mut self,
+        policy: SchedPolicy,
+        now: f64,
+        estimator_gen: u64,
+        est: impl Fn(&BatchShape) -> f64,
+    ) -> Option<(usize, f64)> {
+        debug_assert!(estimator_gen != u64::MAX);
+        if self.queue.is_empty() {
+            return None;
+        }
+        let picked = match policy {
+            SchedPolicy::Fcfs => self.pick_fcfs(estimator_gen, &est),
+            SchedPolicy::Sjf => {
+                self.sync_est_heap(estimator_gen, &est);
+                self.pick_sjf()
+            }
+            SchedPolicy::Hrrn => {
+                self.sync_est_heap(estimator_gen, &est);
+                self.pick_hrrn(now)
+            }
+        };
+        #[cfg(debug_assertions)]
+        self.assert_matches_scan(policy, now, estimator_gen, &est, picked);
+        picked
+    }
+
+    /// FCFS: surface the live minimum of the (created_at, id) heap,
+    /// building the heap from the queue on first use.
+    fn pick_fcfs(
+        &mut self,
+        estimator_gen: u64,
+        est: &impl Fn(&BatchShape) -> f64,
+    ) -> Option<(usize, f64)> {
+        if !self.fcfs_active {
+            self.fcfs_active = true;
+            self.fcfs_heap.clear();
+            for i in 0..self.queue.len() {
+                self.fcfs_heap
+                    .push(self.queue[i].created_at, self.queue[i].id, self.stamps[i]);
+            }
+        }
+        let pos = &self.pos;
+        let (_, id) = self.fcfs_heap.peek_valid(|id, _| pos.contains_key(&id))?;
+        let i = self.pos[&id];
+        let e = self.cached_estimate(i, estimator_gen, |s| est(s));
+        Some((i, e))
+    }
+
+    /// SJF: surface the live, current-stamp minimum of the est heap.
+    fn pick_sjf(&mut self) -> Option<(usize, f64)> {
+        let (pos, stamps) = (&self.pos, &self.stamps);
+        let (key, id) = self
+            .est_heap
+            .peek_valid(|id, stamp| pos.get(&id).map_or(false, |&i| stamps[i] == stamp))?;
+        Some((self.pos[&id], key))
+    }
+
+    /// HRRN: exact pruned scan in ascending-estimate order (see
+    /// [`AdaptiveBatcher::select_indexed`] for the bound argument).
+    fn pick_hrrn(&mut self, now: f64) -> Option<(usize, f64)> {
+        if !self.arrival_active {
+            self.arrival_active = true;
+            self.arrival_heap.clear();
+            for i in 0..self.queue.len() {
+                self.arrival_heap
+                    .push(self.aggs[i].min_arrival, self.queue[i].id, self.stamps[i]);
+            }
+        }
+        // T_q upper bound from the earliest live arrival.
+        let qmax = {
+            let (pos, stamps) = (&self.pos, &self.stamps);
+            let (a_min, _) = self
+                .arrival_heap
+                .peek_valid(|id, stamp| pos.get(&id).map_or(false, |&i| stamps[i] == stamp))?;
+            (now - a_min).max(0.0)
+        };
+        let mut best: Option<(f64, u64, usize, f64)> = None; // (ratio, id, index, est)
+        let mut scratch = std::mem::take(&mut self.hrrn_scratch);
+        loop {
+            let entry = {
+                let (pos, stamps) = (&self.pos, &self.stamps);
+                self.est_heap
+                    .pop_valid(|id, stamp| pos.get(&id).map_or(false, |&i| stamps[i] == stamp))
+            };
+            let entry = match entry {
+                Some(e) => e,
+                None => break,
+            };
+            let i = self.pos[&entry.id];
+            let q = (now - self.aggs[i].min_arrival).max(0.0);
+            // Same formula as `BatchView::ratio`, so values match the
+            // scan bit-for-bit.
+            let ratio = q / entry.key.max(1e-9);
+            let better = match &best {
+                None => true,
+                Some((br, bid, _, _)) => match ratio.total_cmp(br) {
+                    std::cmp::Ordering::Greater => true,
+                    std::cmp::Ordering::Less => false,
+                    std::cmp::Ordering::Equal => entry.id < *bid,
+                },
+            };
+            if better {
+                best = Some((ratio, entry.id, i, entry.key));
+            }
+            scratch.push(entry);
+            let next = {
+                let (pos, stamps) = (&self.pos, &self.stamps);
+                self.est_heap
+                    .peek_valid(|id, stamp| pos.get(&id).map_or(false, |&i| stamps[i] == stamp))
+            };
+            match (next, &best) {
+                (Some((next_key, _)), Some((br, _, _, _))) if !self.est_heap_has_nan => {
+                    // Unseen ratios are ≤ qmax / next_key; stop only on a
+                    // strict deficit (a tie could still lose on batch id).
+                    let bound = qmax / next_key.max(1e-9);
+                    if bound.total_cmp(br) == std::cmp::Ordering::Less {
+                        break;
+                    }
+                }
+                (None, _) => break,
+                _ => {}
+            }
+        }
+        self.est_heap.reinsert(&mut scratch);
+        self.hrrn_scratch = scratch;
+        best.map(|(_, _, i, e)| (i, e))
+    }
+
+    /// Bring the est heap up to date with `estimator_gen`: full rebuild
+    /// on a generation change, dirty-list re-keys otherwise.  Keys come
+    /// through `cached_estimate`, so they are the exact values the scan
+    /// paths would see.
+    fn sync_est_heap(&mut self, estimator_gen: u64, est: &impl Fn(&BatchShape) -> f64) {
+        if self.est_gen != estimator_gen {
+            self.est_heap.clear();
+            self.est_dirty.clear();
+            self.est_heap_has_nan = false;
+            for i in 0..self.queue.len() {
+                let e = self.cached_estimate(i, estimator_gen, |s| est(s));
+                self.est_heap_has_nan |= e.is_nan();
+                self.est_heap.push(e, self.queue[i].id, self.stamps[i]);
+            }
+            self.est_gen = estimator_gen;
+            return;
+        }
+        if self.est_dirty.is_empty() {
+            return;
+        }
+        let dirty = std::mem::take(&mut self.est_dirty);
+        for id in &dirty {
+            if let Some(&i) = self.pos.get(id) {
+                let e = self.cached_estimate(i, estimator_gen, |s| est(s));
+                self.est_heap_has_nan |= e.is_nan();
+                self.est_heap.push(e, *id, self.stamps[i]);
+            }
+        }
+        self.est_dirty = dirty;
+        self.est_dirty.clear();
+    }
+
+    /// Debug-build safety net: the indexed pick must equal the linear
+    /// scan over freshly-built views, estimate included.
+    #[cfg(debug_assertions)]
+    fn assert_matches_scan(
+        &mut self,
+        policy: SchedPolicy,
+        now: f64,
+        estimator_gen: u64,
+        est: &impl Fn(&BatchShape) -> f64,
+        picked: Option<(usize, f64)>,
+    ) {
+        use crate::scheduler::{select, BatchView};
+        let mut views: Vec<BatchView> = Vec::with_capacity(self.queue.len());
+        for i in 0..self.queue.len() {
+            let e = self.cached_estimate(i, estimator_gen, |s| est(s));
+            let (min_arrival, created_at, batch_id) = self.view_meta(i);
+            views.push(BatchView {
+                queuing_time: (now - min_arrival).max(0.0),
+                est_serving_time: e,
+                created_at,
+                batch_id,
+            });
+        }
+        let reference = select(policy, &views);
+        assert_eq!(
+            picked.map(|(i, _)| i),
+            reference,
+            "indexed {policy:?} select diverged from the scan reference"
+        );
+        if let (Some((_, e)), Some(r)) = (picked, reference) {
+            assert_eq!(
+                e.to_bits(),
+                views[r].est_serving_time.to_bits(),
+                "indexed {policy:?} estimate diverged from the scan reference"
+            );
+        }
     }
 
     /// Allocate a fresh batch id (for OOM splits).
@@ -507,6 +845,123 @@ mod tests {
             assert_eq!(b.shape_of(i).batch_len, b.queue()[i].len());
         }
         assert!(taken.size() >= 1);
+    }
+
+    /// Reference: build views the Cached way and linear-scan them.
+    fn scan_select(
+        b: &mut AdaptiveBatcher,
+        policy: SchedPolicy,
+        now: f64,
+        gen: u64,
+        est: &impl Fn(&BatchShape) -> f64,
+    ) -> Option<(usize, f64)> {
+        use crate::scheduler::{select, BatchView};
+        let mut views = Vec::with_capacity(b.queue_len());
+        for i in 0..b.queue_len() {
+            let e = b.cached_estimate(i, gen, |s| est(s));
+            let (min_arrival, created_at, batch_id) = b.view_meta(i);
+            views.push(BatchView {
+                queuing_time: (now - min_arrival).max(0.0),
+                est_serving_time: e,
+                created_at,
+                batch_id,
+            });
+        }
+        select(policy, &views).map(|i| (i, views[i].est_serving_time))
+    }
+
+    #[test]
+    fn indexed_select_matches_scan_under_churn() {
+        // Random insert/take/requeue churn with mid-stream estimator
+        // generation bumps: the indexed pick (index AND estimate) must
+        // equal the linear-scan reference for all three policies.
+        for policy in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Hrrn] {
+            prop_check(40, |rng| {
+                let mut b = AdaptiveBatcher::new(cfg());
+                let mut gen = 1u64;
+                let mut now = 0.0f64;
+                // estimate = pure function of (shape, generation)
+                let est_of = |gen: u64| {
+                    move |s: &BatchShape| {
+                        s.batch_gen_len as f64 * 0.05
+                            + s.batch_len as f64 * 1e-4
+                            + s.batch_size as f64 * 0.01
+                            + gen as f64 * 0.13
+                    }
+                };
+                let n = rng.range_usize(2, 60);
+                for i in 0..n {
+                    now += rng.f64() * 0.5;
+                    let len = rng.range_u64(1, 1024) as u32;
+                    let pred = rng.range_u64(1, 1024) as u32;
+                    let mut r = req(i as u64, len, pred);
+                    r.request.arrival = now - rng.f64();
+                    b.insert(r, now);
+                    if rng.range_u64(0, 5) == 0 {
+                        gen += 1; // estimator refit between selects
+                    }
+                    let est = est_of(gen);
+                    let got = b.select_indexed(policy, now, gen, &est);
+                    let want = scan_select(&mut b, policy, now, gen, &est);
+                    assert_eq!(got.map(|x| x.0), want.map(|x| x.0), "{policy:?}");
+                    let (g, w) = (got.unwrap(), want.unwrap());
+                    assert_eq!(g.1.to_bits(), w.1.to_bits(), "{policy:?} estimate");
+                    // occasionally dispatch the winner, sometimes with an
+                    // OOM split + requeue
+                    if rng.range_u64(0, 3) == 0 {
+                        let taken = b.take(g.0);
+                        if taken.size() >= 2 && rng.range_u64(0, 2) == 0 {
+                            let nid = b.alloc_id();
+                            let (l, r2) = taken.split(nid);
+                            b.requeue(l);
+                            b.requeue(r2);
+                        }
+                    }
+                    if !b.is_empty() {
+                        let got = b.select_indexed(policy, now, gen, &est);
+                        let want = scan_select(&mut b, policy, now, gen, &est);
+                        assert_eq!(got.map(|x| x.0), want.map(|x| x.0), "{policy:?} post-churn");
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn indexed_select_handles_exact_ties() {
+        // Identical created_at / shapes everywhere: every key ties and
+        // the smaller batch id must win, from heaps as from the scan.
+        let mut b = AdaptiveBatcher::new(BatcherConfig {
+            wma_threshold: 0.0, // never coalesce
+            ..cfg()
+        });
+        for i in 0..10 {
+            b.insert(req(i, 50, 50), 0.0);
+        }
+        let est = |_: &BatchShape| 2.0;
+        for policy in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Hrrn] {
+            let (i, _) = b.select_indexed(policy, 1.0, 1, est).unwrap();
+            assert_eq!(b.queue()[i].id, 0, "{policy:?}");
+        }
+        // dispatch the winner; next tie goes to the next id
+        let (i, _) = b.select_indexed(SchedPolicy::Fcfs, 1.0, 1, est).unwrap();
+        b.take(i);
+        let (i, _) = b.select_indexed(SchedPolicy::Fcfs, 1.0, 1, est).unwrap();
+        assert_eq!(b.queue()[i].id, 1);
+    }
+
+    #[test]
+    fn indexed_select_empty_queue_is_none() {
+        let mut b = AdaptiveBatcher::new(cfg());
+        assert!(b
+            .select_indexed(SchedPolicy::Hrrn, 0.0, 1, |_| 1.0)
+            .is_none());
+        b.insert(req(0, 10, 10), 0.0);
+        let (i, _) = b.select_indexed(SchedPolicy::Hrrn, 1.0, 1, |_| 1.0).unwrap();
+        b.take(i);
+        assert!(b
+            .select_indexed(SchedPolicy::Hrrn, 2.0, 1, |_| 1.0)
+            .is_none());
     }
 
     #[test]

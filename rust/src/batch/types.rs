@@ -1,6 +1,7 @@
 //! The batch type that flows through the batcher → queue → scheduler →
 //! engine pipeline.
 
+use crate::estimator::BatchShape;
 use crate::workload::PredictedRequest;
 
 /// A batch of requests awaiting (or under) execution.
@@ -60,6 +61,28 @@ impl Batch {
             .map(|r| r.request.gen_len)
             .max()
             .unwrap_or(0)
+    }
+
+    /// Scheduler-facing shape: (β, L(B), **predicted** G(B)) — what the
+    /// serving-time estimator is queried with before dispatch.
+    #[inline]
+    pub fn predicted_shape(&self) -> BatchShape {
+        BatchShape {
+            batch_size: self.size(),
+            batch_len: self.len(),
+            batch_gen_len: self.predicted_gen_len(),
+        }
+    }
+
+    /// Ground-truth shape: (β, L(B), **actual** G(B)) — what batch logs
+    /// record after serving (§III-D re-prediction uses the actual G).
+    #[inline]
+    pub fn true_shape(&self) -> BatchShape {
+        BatchShape {
+            batch_size: self.size(),
+            batch_len: self.len(),
+            batch_gen_len: self.true_gen_len(),
+        }
     }
 
     /// Earliest arrival among batched requests; T_q(B) = now − this

@@ -20,8 +20,10 @@ pub struct BatchShape {
 }
 
 impl BatchShape {
-    fn row(&self) -> Vec<f32> {
-        vec![
+    /// Stack feature row — `estimate` sits on the dispatch hot path, so
+    /// no per-call heap allocation.
+    fn row(&self) -> [f32; 3] {
+        [
             self.batch_size as f32,
             self.batch_len as f32,
             self.batch_gen_len as f32,
@@ -59,7 +61,7 @@ impl ServingTimeEstimator {
             self.knn = None;
             return;
         }
-        let x: Vec<Vec<f32>> = shapes.iter().map(|s| s.row()).collect();
+        let x: Vec<Vec<f32>> = shapes.iter().map(|s| s.row().to_vec()).collect();
         let y: Vec<f32> = times_s.iter().map(|&t| t as f32).collect();
         self.knn = Some(Knn::fit(&x, &y, self.k));
     }
@@ -72,7 +74,7 @@ impl ServingTimeEstimator {
             return;
         }
         self.generation += 1;
-        let x: Vec<Vec<f32>> = shapes.iter().map(|s| s.row()).collect();
+        let x: Vec<Vec<f32>> = shapes.iter().map(|s| s.row().to_vec()).collect();
         let y: Vec<f32> = times_s.iter().map(|&t| t as f32).collect();
         match &mut self.knn {
             Some(m) => m.append(&x, &y),

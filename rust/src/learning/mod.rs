@@ -19,7 +19,12 @@ use crate::predictor::GenLenPredictor;
 /// log DB (entries arrive in completion-time order), so a sweep touches
 /// only the entries logged since the previous one — O(new) per sweep
 /// instead of rescanning the whole log, and the refits they trigger are
-/// themselves incremental appends.
+/// themselves incremental appends.  The log DB is segmented, so the
+/// sealed history a sweep consumes is read without holding any lock —
+/// in the live server a learner pass no longer stalls worker logging
+/// (only the final ≤ one-segment tail is visited under the append lock),
+/// and the predictor sweep (requests table) and estimator sweep (batches
+/// table) never contend with each other.
 pub struct ContinuousLearner {
     cfg: LearningConfig,
     last_pred_sweep: f64,

@@ -1,0 +1,187 @@
+//! Lazily-invalidated priority heaps for indexed batch selection.
+//!
+//! The dispatch loop used to pick the next batch with an O(Q) scan over
+//! every queued batch (`scheduler::select`).  The batcher now maintains
+//! per-policy [`LazyHeap`]s over `(key, batch id, stamp)` entries so a
+//! steady-state select touches O(log Q) entries instead:
+//!
+//! * entries are never removed eagerly — a batch leaving the queue
+//!   (dispatch) or mutating (a request joins it, an OOM half re-queues)
+//!   simply makes its old entries *stale*;
+//! * staleness is detected at pop time by a caller-supplied validity
+//!   check (is the id still queued, does the stamp still match?), and
+//!   stale entries are discarded as they surface — the "popped and
+//!   revalidated" discipline;
+//! * keys are compared with `total_cmp` and ties break on the smaller
+//!   batch id, exactly like the linear-scan reference, so the surfaced
+//!   winner is bit-identical to the scan's.
+//!
+//! The heap itself is policy-agnostic: the batcher keys one instance on
+//! `created_at` (FCFS), one on the cached serving-time estimate
+//! (SJF, and the HRRN pruning order), and one on the earliest arrival
+//! (the HRRN queuing-time bound).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One heap entry: a selection key for batch `id`, valid while the
+/// batch's mutation stamp still equals `stamp` (stamps are globally
+/// monotone, so entries from a batch's earlier life — before a dispatch
+/// and re-queue, say — can never be mistaken for fresh ones).
+#[derive(Debug, Clone, Copy)]
+pub struct Entry {
+    pub key: f64,
+    pub id: u64,
+    pub stamp: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key
+            .total_cmp(&other.key)
+            .then(self.id.cmp(&other.id))
+            .then(self.stamp.cmp(&other.stamp))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap over [`Entry`] with lazy deletion.
+///
+/// Duplicate entries per batch are allowed (each mutation pushes a fresh
+/// entry); only the one carrying the batch's current stamp validates, and
+/// duplicates with identical `(key, id, stamp)` are harmless because
+/// selection is a pure function of the surfaced minimum.
+#[derive(Debug, Default)]
+pub struct LazyHeap {
+    heap: BinaryHeap<Reverse<Entry>>,
+}
+
+impl LazyHeap {
+    pub fn new() -> Self {
+        LazyHeap::default()
+    }
+
+    pub fn push(&mut self, key: f64, id: u64, stamp: u64) {
+        self.heap.push(Reverse(Entry { key, id, stamp }));
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Discard stale tops until the minimum valid entry surfaces; return
+    /// its `(key, id)` without removing it.
+    pub fn peek_valid<F: Fn(u64, u64) -> bool>(&mut self, valid: F) -> Option<(f64, u64)> {
+        while let Some(Reverse(e)) = self.heap.peek() {
+            if valid(e.id, e.stamp) {
+                return Some((e.key, e.id));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Discard stale tops, then remove and return the minimum valid entry.
+    pub fn pop_valid<F: Fn(u64, u64) -> bool>(&mut self, valid: F) -> Option<Entry> {
+        while let Some(Reverse(e)) = self.heap.pop() {
+            if valid(e.id, e.stamp) {
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    /// Push back entries temporarily popped by a pruning scan (HRRN pops
+    /// candidates in ascending-estimate order, then restores them).
+    pub fn reinsert(&mut self, entries: &mut Vec<Entry>) {
+        for e in entries.drain(..) {
+            self.heap.push(Reverse(e));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_order_with_id_tie_break() {
+        let mut h = LazyHeap::new();
+        h.push(2.0, 7, 0);
+        h.push(1.0, 9, 0);
+        h.push(1.0, 3, 0);
+        assert_eq!(h.peek_valid(|_, _| true), Some((1.0, 3)));
+        let e = h.pop_valid(|_, _| true).unwrap();
+        assert_eq!((e.key, e.id), (1.0, 3));
+        assert_eq!(h.peek_valid(|_, _| true), Some((1.0, 9)));
+    }
+
+    #[test]
+    fn stale_entries_are_discarded_lazily() {
+        let mut h = LazyHeap::new();
+        h.push(1.0, 1, 0); // stale: stamp advanced to 1
+        h.push(2.0, 1, 1); // fresh replacement, worse key
+        h.push(3.0, 2, 0);
+        let valid = |id: u64, stamp: u64| match id {
+            1 => stamp == 1,
+            _ => true,
+        };
+        assert_eq!(h.peek_valid(valid), Some((2.0, 1)));
+        assert_eq!(h.len(), 2, "stale top physically removed");
+    }
+
+    #[test]
+    fn dead_ids_never_surface() {
+        let mut h = LazyHeap::new();
+        h.push(1.0, 1, 0);
+        h.push(2.0, 2, 0);
+        assert_eq!(h.peek_valid(|id, _| id != 1), Some((2.0, 2)));
+        assert_eq!(h.pop_valid(|id, _| id != 1).map(|e| e.id), Some(2));
+        assert_eq!(h.pop_valid(|_, _| true), None);
+    }
+
+    #[test]
+    fn reinsert_restores_pruned_entries() {
+        let mut h = LazyHeap::new();
+        for id in 0..5u64 {
+            h.push(id as f64, id, 0);
+        }
+        let mut scratch = Vec::new();
+        for _ in 0..3 {
+            scratch.push(h.pop_valid(|_, _| true).unwrap());
+        }
+        h.reinsert(&mut scratch);
+        assert!(scratch.is_empty());
+        assert_eq!(h.peek_valid(|_, _| true), Some((0.0, 0)));
+        assert_eq!(h.len(), 5);
+    }
+
+    #[test]
+    fn nan_keys_sort_last_not_panic() {
+        let mut h = LazyHeap::new();
+        h.push(f64::NAN, 1, 0);
+        h.push(5.0, 2, 0);
+        assert_eq!(h.peek_valid(|_, _| true), Some((5.0, 2)));
+    }
+}

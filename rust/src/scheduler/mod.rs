@@ -12,8 +12,12 @@
 //! the cached and fresh dispatch paths diverge.  With the id tie-break,
 //! `select` is a pure function of the view *set*.
 
+pub mod index;
+
 use crate::batch::Batch;
 use crate::config::SchedPolicy;
+
+pub use index::{Entry, LazyHeap};
 
 /// Context the policy needs about one queued batch.
 #[derive(Debug, Clone, Copy)]
@@ -43,26 +47,27 @@ pub fn select(policy: SchedPolicy, views: &[BatchView]) -> Option<usize> {
     }
     // `beats(a, b)` — strict "a should be served before b"; equal keys
     // fall through to the smaller batch id, so the winner is unique and
-    // independent of the order batches appear in `views`.
+    // independent of the order batches appear in `views`.  Keys compare
+    // via `total_cmp`: a NaN key (a poisoned estimate, say) sorts after
+    // every real number instead of panicking mid-dispatch, matching the
+    // NaN handling the predictor's split sort adopted.
     let beats = |a: &BatchView, b: &BatchView| -> bool {
         match policy {
-            SchedPolicy::Fcfs => match a.created_at.partial_cmp(&b.created_at).unwrap() {
+            SchedPolicy::Fcfs => match a.created_at.total_cmp(&b.created_at) {
                 std::cmp::Ordering::Less => true,
                 std::cmp::Ordering::Greater => false,
                 std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
             },
-            SchedPolicy::Hrrn => match a.ratio().partial_cmp(&b.ratio()).unwrap() {
+            SchedPolicy::Hrrn => match a.ratio().total_cmp(&b.ratio()) {
                 std::cmp::Ordering::Greater => true,
                 std::cmp::Ordering::Less => false,
                 std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
             },
-            SchedPolicy::Sjf => {
-                match a.est_serving_time.partial_cmp(&b.est_serving_time).unwrap() {
-                    std::cmp::Ordering::Less => true,
-                    std::cmp::Ordering::Greater => false,
-                    std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
-                }
-            }
+            SchedPolicy::Sjf => match a.est_serving_time.total_cmp(&b.est_serving_time) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => a.batch_id < b.batch_id,
+            },
         }
     };
     let mut best = 0;
@@ -147,6 +152,30 @@ mod tests {
         let views = [v(1.0, 0.0, 0.0, 0), v(1.0, 1.0, 0.0, 1)];
         // no panic; zero estimate treated as epsilon → huge ratio
         assert_eq!(select(SchedPolicy::Hrrn, &views), Some(0));
+    }
+
+    #[test]
+    fn nan_keys_are_total_ordered_instead_of_panicking() {
+        // Pre-total_cmp these unwrap-panicked.  Now NaN sorts after every
+        // finite key: it loses under the min-policies (FCFS, SJF) and —
+        // as the greatest element of the total order — wins under the
+        // max-policy (HRRN).  Either way selection stays deterministic
+        // and order-independent.
+        let nan = f64::NAN;
+        let sane = v(1.0, 2.0, 1.0, 7);
+        for (policy, bad, nan_wins) in [
+            (SchedPolicy::Fcfs, v(1.0, 2.0, nan, 3), false),
+            (SchedPolicy::Sjf, v(1.0, nan, 1.0, 3), false),
+            (SchedPolicy::Hrrn, v(nan, 2.0, 1.0, 3), true),
+        ] {
+            let expect_bad_first = if nan_wins { Some(0) } else { Some(1) };
+            let expect_sane_first = if nan_wins { Some(1) } else { Some(0) };
+            assert_eq!(select(policy, &[bad, sane]), expect_bad_first, "{policy:?}");
+            assert_eq!(select(policy, &[sane, bad]), expect_sane_first, "{policy:?}");
+            // all-NaN queues still pick deterministically (smaller id)
+            let bad2 = BatchView { batch_id: 9, ..bad };
+            assert_eq!(select(policy, &[bad2, bad]), Some(1), "{policy:?}");
+        }
     }
 
     #[test]

@@ -22,7 +22,6 @@ use crate::estimator::{BatchShape, ServingTimeEstimator};
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::predictor::GenLenPredictor;
-use crate::scheduler::{select, view_of};
 use crate::sim::MagnusPolicy;
 use crate::workload::{PredictedRequest, Request};
 
@@ -171,6 +170,12 @@ pub fn serve_trace(
     });
     let mut fifo: std::collections::VecDeque<usize> = Default::default();
     let mut estimator = ServingTimeEstimator::new(cfg.knn_k);
+    // Estimator refresh state: a segment cursor into the log DB plus the
+    // rows already absorbed, so each completion trains on O(new) entries
+    // instead of re-cloning the whole batch log (O(n²) over a run).
+    let mut est_cursor = 0usize;
+    let mut est_new_shapes: Vec<BatchShape> = Vec::new();
+    let mut est_new_times: Vec<f64> = Vec::new();
     let db = LogDb::new();
     let mut metrics = RunMetrics::new();
     let mut idle: Vec<usize> = (0..opts.n_workers).collect();
@@ -213,21 +218,15 @@ pub fn serve_trace(
                     if batcher.is_empty() {
                         break;
                     }
-                    let views: Vec<_> = batcher
-                        .queue()
-                        .iter()
-                        .map(|b| {
-                            let est = estimator.estimate(&BatchShape {
-                                batch_size: b.size(),
-                                batch_len: b.len(),
-                                batch_gen_len: b.predicted_gen_len(),
-                            });
-                            view_of(b, now, est)
+                    // Indexed selection — same incremental structures as
+                    // the simulator's dispatch loop (O(log Q) steady
+                    // state instead of a per-round view rebuild).
+                    let (pick, est) = batcher
+                        .select_indexed(p.sched, now, estimator.generation(), |shape| {
+                            estimator.estimate(shape)
                         })
-                        .collect();
-                    let pick = select(p.sched, &views).unwrap();
-                    dispatch_est
-                        .insert(batcher.queue()[pick].id, views[pick].est_serving_time);
+                        .unwrap();
+                    dispatch_est.insert(batcher.queue()[pick].id, est);
                     batcher.take(pick)
                 }
                 LivePolicy::Vanilla { fixed_batch } => {
@@ -292,25 +291,26 @@ pub fn serve_trace(
                         });
                     }
                     db.log_batch(BatchLog {
-                        shape: BatchShape {
-                            batch_size: batch.size(),
-                            batch_len: batch.len(),
-                            batch_gen_len: batch.true_gen_len(),
-                        },
+                        shape: batch.true_shape(),
                         estimated_time: dispatch_est.remove(&batch.id).unwrap_or(0.0),
                         // serving_time is wall seconds; scale into replayed
                         // seconds so HRRN compares like with like.
                         actual_time: serving_time * scale,
                         at: now,
                     });
-                    // Online estimator refresh from real executions.
-                    let logs = db.batches_between(0.0, now);
-                    if logs.len() >= 3 {
-                        let shapes: Vec<BatchShape> =
-                            logs.iter().map(|l| l.shape).collect();
-                        let times: Vec<f64> =
-                            logs.iter().map(|l| l.actual_time).collect();
-                        estimator.train(&shapes, &times);
+                    // Online estimator refresh from real executions:
+                    // absorb only the log tail since the last refresh
+                    // (KNN appends are equivalent to a fresh fit on the
+                    // union — property-tested in estimator::knn).  Rows
+                    // accumulate until the 3-row cold-start threshold.
+                    est_cursor += db.visit_batches_from(est_cursor, |l| {
+                        est_new_shapes.push(l.shape);
+                        est_new_times.push(l.actual_time);
+                    });
+                    if estimator.is_trained() || est_new_shapes.len() >= 3 {
+                        estimator.augment_and_refit(&est_new_shapes, &est_new_times);
+                        est_new_shapes.clear();
+                        est_new_times.clear();
                     }
                 }
                 idle.push(worker);

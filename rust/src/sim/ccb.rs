@@ -48,6 +48,11 @@ pub fn run_ccb(
 
     let n_inst = cfg.n_instances;
     let mut running: Vec<Vec<Running>> = vec![Vec::new(); n_inst];
+    // Running Σ ctx per instance, maintained incrementally (admissions
+    // add len+1, retirements subtract, every decode iteration adds β) —
+    // the per-iteration mean context no longer rescans the running set.
+    // Integer arithmetic, so the maintained sum is exactly the rescan.
+    let mut ctx_sum: Vec<u64> = vec![0; n_inst];
     // Instances with an Iter event in flight.
     let mut busy = vec![false; n_inst];
     let mut fifo: VecDeque<usize> = VecDeque::new();
@@ -56,6 +61,7 @@ pub fn run_ccb(
     // stall time (sum of initialisation phases, run serially).
     let admit_overhead = cfg.ccb_overhead_s;
     let admit = |running: &mut Vec<Running>,
+                 ctx_sum: &mut u64,
                  fifo: &mut VecDeque<usize>,
                  engine: &dyn InferenceEngine,
                  trace: &[Request]|
@@ -70,6 +76,7 @@ pub fn run_ccb(
                 generated: 1, // prefill produces the first token
                 ctx: len + 1,
             });
+            *ctx_sum += (len + 1) as u64;
         }
         stall
     };
@@ -81,12 +88,16 @@ pub fn run_ccb(
                 // Wake any idle instance.
                 for inst in 0..n_inst {
                     if !busy[inst] && running[inst].len() < parallel_limit as usize {
-                        let stall = admit(&mut running[inst], &mut fifo, engine, trace);
+                        let stall =
+                            admit(&mut running[inst], &mut ctx_sum[inst], &mut fifo, engine, trace);
                         if !running[inst].is_empty() {
                             busy[inst] = true;
                             let beta = running[inst].len() as u32;
-                            let ctx = (running[inst].iter().map(|r| r.ctx as u64).sum::<u64>()
-                                / beta as u64) as u32;
+                            debug_assert_eq!(
+                                ctx_sum[inst],
+                                running[inst].iter().map(|r| r.ctx as u64).sum::<u64>()
+                            );
+                            let ctx = (ctx_sum[inst] / beta as u64) as u32;
                             events.push(
                                 now + stall + engine.decode_iter_time(beta, ctx),
                                 Event::Iter(inst),
@@ -97,8 +108,10 @@ pub fn run_ccb(
                 }
             }
             Event::Iter(inst) => {
-                // Advance every running request by one token; retire
-                // the finished ones immediately (continuous batching).
+                // Advance every running request by one token (Σ ctx grows
+                // by β); retire the finished ones immediately (continuous
+                // batching), subtracting their contexts from the sum.
+                ctx_sum[inst] += running[inst].len() as u64;
                 let mut finished = Vec::new();
                 for r in &mut running[inst] {
                     r.generated += 1;
@@ -107,7 +120,15 @@ pub fn run_ccb(
                         finished.push(r.idx);
                     }
                 }
-                running[inst].retain(|r| r.generated < trace[r.idx].gen_len);
+                let sum = &mut ctx_sum[inst];
+                running[inst].retain(|r| {
+                    if r.generated < trace[r.idx].gen_len {
+                        true
+                    } else {
+                        *sum -= r.ctx as u64;
+                        false
+                    }
+                });
                 for idx in finished {
                     metrics.record(RequestRecord {
                         request_id: trace[idx].id,
@@ -119,13 +140,17 @@ pub fn run_ccb(
                 }
 
                 // Admit newcomers, then run the next iteration.
-                let stall = admit(&mut running[inst], &mut fifo, engine, trace);
+                let stall =
+                    admit(&mut running[inst], &mut ctx_sum[inst], &mut fifo, engine, trace);
                 if running[inst].is_empty() {
                     busy[inst] = false;
                 } else {
                     let beta = running[inst].len() as u32;
-                    let ctx = (running[inst].iter().map(|r| r.ctx as u64).sum::<u64>()
-                        / beta as u64) as u32;
+                    debug_assert_eq!(
+                        ctx_sum[inst],
+                        running[inst].iter().map(|r| r.ctx as u64).sum::<u64>()
+                    );
+                    let ctx = (ctx_sum[inst] / beta as u64) as u32;
                     events.push(
                         now + stall + engine.decode_iter_time(beta, ctx),
                         Event::Iter(inst),

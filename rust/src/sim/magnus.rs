@@ -8,25 +8,32 @@ use std::collections::VecDeque;
 use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use crate::config::{SchedPolicy, ServingConfig};
 use crate::engine::{BatchOutcome, InferenceEngine};
-use crate::estimator::{BatchShape, ServingTimeEstimator};
+use crate::estimator::ServingTimeEstimator;
 use crate::learning::ContinuousLearner;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::predictor::GenLenPredictor;
 use crate::scheduler::{select, view_of, BatchView};
 use crate::sim::events::EventQueue;
+use crate::sim::OOM_RELOAD_S;
 use crate::workload::{PredictedRequest, Request};
 
-/// How the dispatch loop builds its scheduler views.
+/// How the dispatch loop picks the next batch.
 ///
-/// Both modes pick bit-for-bit identical batches (the golden-equivalence
-/// tests assert it); `Fresh` exists as the reference implementation and
-/// as the pre-refactor baseline for `benches/bench_sim`.
+/// All modes pick bit-for-bit identical batches (the golden-equivalence
+/// tests assert it); `Fresh` and `Cached` remain as reference
+/// implementations and as the pre-refactor baselines for
+/// `benches/bench_sim`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchMode {
+    /// Incremental per-policy priority structures owned by the batcher
+    /// (`AdaptiveBatcher::select_indexed`): steady-state selection is
+    /// O(log Q) instead of an O(Q) scan per dispatch round.
+    Indexed,
     /// O(1) per queued batch: shapes come from the batcher's maintained
     /// aggregates and serving-time estimates from its cache, recomputed
-    /// only when a batch mutates or the estimator refits.
+    /// only when a batch mutates or the estimator refits — but every
+    /// dispatch round still linear-scans the whole queue.
     Cached,
     /// Rebuild every view from scratch each dispatch round: O(Σβ) member
     /// scans plus one estimator query per queued batch per round.
@@ -80,9 +87,6 @@ enum Event {
     InstanceReady(usize),
 }
 
-/// Post-OOM reload penalty (empty GPU memory + reload LLM, §III-F).
-const OOM_RELOAD_S: f64 = 20.0;
-
 /// Result of a simulated run.
 pub struct SimOutput {
     pub metrics: RunMetrics,
@@ -104,7 +108,7 @@ pub fn run_magnus(
     engine: &dyn InferenceEngine,
     trace: &[Request],
 ) -> SimOutput {
-    run_magnus_with(cfg, policy, predictor, engine, trace, DispatchMode::Cached)
+    run_magnus_with(cfg, policy, predictor, engine, trace, DispatchMode::Indexed)
 }
 
 /// [`run_magnus`] with an explicit [`DispatchMode`] (testing/benching).
@@ -226,11 +230,7 @@ pub fn run_magnus_with(
                         let est = dispatch_est.remove(&batch.id).unwrap_or(0.0);
                         est_errors.push((now, (est - serving_time).abs()));
                         db.log_batch(BatchLog {
-                            shape: BatchShape {
-                                batch_size: batch.size(),
-                                batch_len: batch.len(),
-                                batch_gen_len: batch.true_gen_len(),
-                            },
+                            shape: batch.true_shape(),
                             estimated_time: est,
                             actual_time: serving_time,
                             at: now,
@@ -296,19 +296,23 @@ fn dispatch_idle(
     metrics: &mut RunMetrics,
 ) {
     while !idle.is_empty() && !batcher.is_empty() {
-        views.clear();
-        match mode {
+        let (pick, est) = match mode {
+            DispatchMode::Indexed => batcher
+                .select_indexed(policy.sched, now, estimator.generation(), |shape| {
+                    estimator.estimate(shape)
+                })
+                .unwrap(),
             DispatchMode::Fresh => {
+                views.clear();
                 for b in batcher.queue() {
-                    let est = estimator.estimate(&BatchShape {
-                        batch_size: b.size(),
-                        batch_len: b.len(),
-                        batch_gen_len: b.predicted_gen_len(),
-                    });
+                    let est = estimator.estimate(&b.predicted_shape());
                     views.push(view_of(b, now, est));
                 }
+                let pick = select(policy.sched, views).unwrap();
+                (pick, views[pick].est_serving_time)
             }
             DispatchMode::Cached => {
+                views.clear();
                 let gen = estimator.generation();
                 for i in 0..batcher.queue_len() {
                     let est = batcher
@@ -321,10 +325,10 @@ fn dispatch_idle(
                         batch_id,
                     });
                 }
+                let pick = select(policy.sched, views).unwrap();
+                (pick, views[pick].est_serving_time)
             }
-        }
-        let pick = select(policy.sched, views).unwrap();
-        let est = views[pick].est_serving_time;
+        };
         let batch = batcher.take(pick);
         let inst = idle.pop_front().unwrap();
 
@@ -412,16 +416,23 @@ mod tests {
         );
     }
 
-    /// Golden equivalence: the cached dispatch path must replay the
-    /// fresh-view reference bit-for-bit (same batches, same times, same
-    /// telemetry) — the whole point of the cache is to change cost, not
-    /// behaviour.
+    /// Golden equivalence: the indexed and cached dispatch paths must
+    /// replay the fresh-view reference bit-for-bit (same batches, same
+    /// times, same telemetry) — the whole point of the index and the
+    /// cache is to change cost, not behaviour.
     #[test]
-    fn cached_dispatch_replays_fresh_dispatch() {
-        for policy in [MagnusPolicy::magnus(), MagnusPolicy::glp(7), MagnusPolicy::abp()] {
+    fn optimized_dispatch_replays_fresh_dispatch() {
+        for (policy, mode) in [
+            (MagnusPolicy::magnus(), DispatchMode::Indexed),
+            (MagnusPolicy::glp(7), DispatchMode::Indexed),
+            (MagnusPolicy::abp(), DispatchMode::Indexed),
+            (MagnusPolicy::magnus(), DispatchMode::Cached),
+            (MagnusPolicy::glp(7), DispatchMode::Cached),
+            (MagnusPolicy::abp(), DispatchMode::Cached),
+        ] {
             let (cfg, p, engine, trace) = setup(350, 9.0);
             let (_, p2, _, _) = setup(350, 9.0); // identically-trained twin
-            let a = run_magnus_with(&cfg, &policy, p, &engine, &trace, DispatchMode::Cached);
+            let a = run_magnus_with(&cfg, &policy, p, &engine, &trace, mode);
             let b = run_magnus_with(&cfg, &policy, p2, &engine, &trace, DispatchMode::Fresh);
             assert_eq!(a.metrics.records.len(), b.metrics.records.len());
             for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {

@@ -20,6 +20,10 @@ use crate::workload::{LlmProfile, Request};
 pub use events::EventQueue;
 pub use magnus::{run_magnus, run_magnus_with, DispatchMode, MagnusPolicy, SimOutput};
 
+/// Post-OOM reload penalty (empty GPU memory + reload LLM, §III-F),
+/// shared by the simulator backends.
+pub(crate) const OOM_RELOAD_S: f64 = 20.0;
+
 /// Every serving policy of the evaluation (§IV-B baselines + §IV-C
 /// ablations).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

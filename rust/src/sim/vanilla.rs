@@ -9,6 +9,7 @@ use crate::config::ServingConfig;
 use crate::engine::{BatchOutcome, InferenceEngine};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::sim::events::EventQueue;
+use crate::sim::OOM_RELOAD_S;
 use crate::workload::{PredictedRequest, Request};
 
 enum Event {
@@ -16,8 +17,6 @@ enum Event {
     BatchDone(usize, Batch, f64, Vec<crate::engine::ServedRequest>),
     InstanceReady(usize),
 }
-
-const OOM_RELOAD_S: f64 = 20.0;
 
 /// Run vanilla scheduling with `fixed_batch` requests per batch.
 ///

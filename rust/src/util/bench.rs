@@ -271,6 +271,60 @@ pub fn record_predictor_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// Record the scheduler/log-path scale measurements as `BENCH_sched.json`
+/// at the repo root (same family as `BENCH_sim.json` /
+/// `BENCH_predictor.json`).  `depths` pairs with `scan_ns` /
+/// `indexed_ns`: mean HRRN select cost at each queue depth for the O(Q)
+/// linear scan vs the batcher's indexed heaps.  `append_ns` /
+/// `append_contended_ns` measure one LogDb append alone vs under a
+/// continuously-sweeping concurrent reader.  Written by
+/// `benches/bench_scheduler.rs`.
+pub fn record_sched_bench(
+    path: &str,
+    depths: &[usize],
+    scan_ns: &[f64],
+    indexed_ns: &[f64],
+    append_ns: f64,
+    append_contended_ns: f64,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    assert_eq!(depths.len(), scan_ns.len());
+    assert_eq!(depths.len(), indexed_ns.len());
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let deepest = depths.len() - 1;
+    let mut fields = vec![
+        ("bench", Json::str("sched_select_logdb")),
+        (
+            "depths",
+            Json::Arr(depths.iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        (
+            "scan_select_ns",
+            Json::Arr(scan_ns.iter().map(|&v| Json::num(v)).collect()),
+        ),
+        (
+            "indexed_select_ns",
+            Json::Arr(indexed_ns.iter().map(|&v| Json::num(v)).collect()),
+        ),
+        (
+            "speedup_deepest",
+            Json::num(scan_ns[deepest] / indexed_ns[deepest].max(1e-9)),
+        ),
+        ("logdb_append_ns", Json::num(append_ns)),
+        ("logdb_append_contended_ns", Json::num(append_contended_ns)),
+        (
+            "logdb_contention_overhead",
+            Json::num(append_contended_ns / append_ns.max(1e-9)),
+        ),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,6 +374,27 @@ mod tests {
         assert_eq!(j.get("speedup").as_f64(), Some(6.0));
         assert_eq!(j.get("refit_speedup").as_f64(), Some(4.0));
         assert_eq!(j.get("train_rows").as_u64(), Some(3200));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_sched_bench_writes_ratios() {
+        let path = std::env::temp_dir().join("magnus_bench_sched_test.json");
+        let path = path.to_string_lossy().into_owned();
+        record_sched_bench(
+            &path,
+            &[16, 256, 4096],
+            &[100.0, 1600.0, 25600.0],
+            &[50.0, 60.0, 80.0],
+            200.0,
+            260.0,
+            vec![],
+        )
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("speedup_deepest").as_f64(), Some(320.0));
+        assert_eq!(j.get("logdb_contention_overhead").as_f64(), Some(1.3));
+        assert_eq!(j.get("depths").as_arr().unwrap().len(), 3);
         let _ = std::fs::remove_file(&path);
     }
 

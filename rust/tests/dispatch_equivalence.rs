@@ -1,11 +1,12 @@
 //! Golden equivalence of the optimized dispatch loop.
 //!
-//! The cached-view dispatch path (batcher-maintained aggregates, cached
+//! The indexed dispatch path (per-policy lazy heaps owned by the batcher)
+//! and the cached-view path (batcher-maintained aggregates, cached
 //! serving-time estimates, swap-removal) must pick bit-for-bit the same
 //! batches at the same times as the fresh-view reference across policies,
 //! loads and random traces — and the event queue the loop runs on must
 //! replay deterministically.  The acceptance-scale run doubles as the
-//! tier-1 perf recording: wall clocks for both modes land in
+//! tier-1 perf recording: wall clocks for the modes land in
 //! `BENCH_sim.json` at the repo root.
 
 use std::time::Instant;
@@ -77,7 +78,7 @@ fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
 }
 
 /// Acceptance-scale golden run (rate 10, n 600, full Magnus) + perf
-/// recording: the wall clock of both modes goes to BENCH_sim.json.
+/// recording: the wall clock of the modes goes to BENCH_sim.json.
 #[test]
 fn golden_equivalence_and_bench_at_acceptance_scale() {
     let cfg = ServingConfig::default();
@@ -91,7 +92,10 @@ fn golden_equivalence_and_bench_at_acceptance_scale() {
     let cached = run_mode(&cfg, &policy, 10.0, 600, 99, 200, DispatchMode::Cached);
     let cached_s = t0.elapsed().as_secs_f64();
 
-    assert_identical(&fresh, &cached, "magnus@rate10/n600");
+    let indexed = run_mode(&cfg, &policy, 10.0, 600, 99, 200, DispatchMode::Indexed);
+
+    assert_identical(&fresh, &cached, "magnus@rate10/n600 cached");
+    assert_identical(&fresh, &indexed, "magnus@rate10/n600 indexed");
 
     // Record the perf point, but only if no record exists yet: this
     // test runs under parallel test load and takes one sample, so it
@@ -119,10 +123,14 @@ fn golden_equivalence_and_bench_at_acceptance_scale() {
     assert!(fresh_s > 0.0 && cached_s > 0.0);
 }
 
-/// Cached and fresh dispatch pick identical batches across random traces,
-/// loads and Magnus-family policies (satellite property test).
+/// Indexed and cached dispatch pick batches identical to the fresh-scan
+/// reference across random traces, loads and Magnus-family policies
+/// (satellite property test).  Runs cross estimator refits mid-trace, so
+/// the indexed paths also replay generation bumps bit-for-bit; in debug
+/// builds every indexed select additionally self-checks against the scan
+/// inside `AdaptiveBatcher::select_indexed`.
 #[test]
-fn cached_and_fresh_dispatch_agree_on_random_traces() {
+fn optimized_and_fresh_dispatch_agree_on_random_traces() {
     prop_check(10, |rng| {
         let cfg = ServingConfig::default();
         let rate = rng.range_f64(2.0, 25.0);
@@ -133,9 +141,18 @@ fn cached_and_fresh_dispatch_agree_on_random_traces() {
             1 => MagnusPolicy::glp(7),
             _ => MagnusPolicy::abp(),
         };
-        let a = run_mode(&cfg, &policy, rate, n, seed, 40, DispatchMode::Cached);
+        let mode = if rng.range_u64(0, 2) == 0 {
+            DispatchMode::Indexed
+        } else {
+            DispatchMode::Cached
+        };
+        let a = run_mode(&cfg, &policy, rate, n, seed, 40, mode);
         let b = run_mode(&cfg, &policy, rate, n, seed, 40, DispatchMode::Fresh);
-        assert_identical(&a, &b, &format!("rate={rate:.1} n={n} seed={seed:#x}"));
+        assert_identical(
+            &a,
+            &b,
+            &format!("{mode:?} rate={rate:.1} n={n} seed={seed:#x}"),
+        );
     });
 }
 

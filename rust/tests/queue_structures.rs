@@ -1,0 +1,239 @@
+//! Satellite coverage for the PR-3 scale structures: the batcher's
+//! indexed per-policy selection must equal the linear-scan reference
+//! under arbitrary churn (inserts, dispatches, OOM re-queues) and
+//! mid-stream estimator-generation bumps, and LogDb cursor readers must
+//! observe a consistent prefix while writers append concurrently.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use magnus::batch::{AdaptiveBatcher, BatcherConfig};
+use magnus::config::SchedPolicy;
+use magnus::estimator::BatchShape;
+use magnus::logdb::{BatchLog, LogDb};
+use magnus::scheduler::{select, BatchView};
+use magnus::util::prop::prop_check;
+use magnus::util::Rng;
+use magnus::workload::{PredictedRequest, Request, TaskId};
+
+fn request(id: u64, len: u32, pred: u32, arrival: f64) -> PredictedRequest {
+    PredictedRequest {
+        request: Request {
+            id,
+            task: TaskId::Gc,
+            instruction: String::new(),
+            user_input: String::new(),
+            user_input_len: len,
+            request_len: len,
+            gen_len: pred,
+            arrival,
+        },
+        predicted_gen_len: pred,
+    }
+}
+
+/// The linear-scan reference, built exactly like the Cached dispatch
+/// path: aggregates + cached estimates + `scheduler::select`.
+fn scan_reference(
+    b: &mut AdaptiveBatcher,
+    policy: SchedPolicy,
+    now: f64,
+    gen: u64,
+    est: &impl Fn(&BatchShape) -> f64,
+) -> Option<(usize, f64)> {
+    let mut views = Vec::with_capacity(b.queue_len());
+    for i in 0..b.queue_len() {
+        let e = b.cached_estimate(i, gen, |s| est(s));
+        let (min_arrival, created_at, batch_id) = b.view_meta(i);
+        views.push(BatchView {
+            queuing_time: (now - min_arrival).max(0.0),
+            est_serving_time: e,
+            created_at,
+            batch_id,
+        });
+    }
+    select(policy, &views).map(|i| (i, views[i].est_serving_time))
+}
+
+/// Heap-based select equals the linear scan for all three policies over
+/// random traces with mid-stream estimator-generation bumps — the
+/// satellite property test, exercising the public API end to end.
+#[test]
+fn indexed_select_equals_scan_across_policies_and_generations() {
+    for policy in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Hrrn] {
+        prop_check(30, |rng| {
+            // Random Φ: sometimes batches coalesce (joins mutate shapes
+            // and stale the heaps), sometimes every request is its own
+            // batch (deep queues).
+            let coalesce = rng.range_u64(0, 2) == 0;
+            let mut b = AdaptiveBatcher::new(BatcherConfig {
+                wma_threshold: if coalesce { 50_000.0 } else { 0.0 },
+                theta: 6_900_000_000,
+                delta: 458_752,
+                max_batch_size: 0,
+            });
+            let mut gen = 1u64;
+            let mut now = 0.0;
+            let est_of = |gen: u64| {
+                move |s: &BatchShape| {
+                    s.batch_gen_len as f64 * 0.05
+                        + s.batch_len as f64 * 1e-4
+                        + s.batch_size as f64 * 0.02
+                        + gen as f64 * 0.11
+                }
+            };
+            let n = rng.range_usize(3, 80);
+            for i in 0..n {
+                now += rng.f64();
+                let len = rng.range_u64(1, 1024) as u32;
+                let pred = rng.range_u64(1, 1024) as u32;
+                b.insert(request(i as u64, len, pred, now - rng.f64() * 2.0), now);
+                if rng.range_u64(0, 4) == 0 {
+                    gen += 1; // estimator refit mid-stream
+                }
+                let est = est_of(gen);
+                let got = b.select_indexed(policy, now, gen, &est);
+                let want = scan_reference(&mut b, policy, now, gen, &est);
+                assert_eq!(
+                    got.map(|x| x.0),
+                    want.map(|x| x.0),
+                    "{policy:?} case n={n} i={i} gen={gen}"
+                );
+                let (g, w) = (got.unwrap(), want.unwrap());
+                assert_eq!(
+                    g.1.to_bits(),
+                    w.1.to_bits(),
+                    "{policy:?} estimate mismatch at i={i}"
+                );
+                // Churn: dispatch the winner, occasionally OOM-split it
+                // back into the queue.
+                if rng.range_u64(0, 3) == 0 {
+                    let taken = b.take(g.0);
+                    if taken.size() >= 2 && rng.range_u64(0, 2) == 0 {
+                        let nid = b.alloc_id();
+                        let (l, r) = taken.split(nid);
+                        b.requeue(l);
+                        b.requeue(r);
+                        let est = est_of(gen);
+                        let got = b.select_indexed(policy, now, gen, &est);
+                        let want = scan_reference(&mut b, policy, now, gen, &est);
+                        assert_eq!(
+                            got.map(|x| x.0),
+                            want.map(|x| x.0),
+                            "{policy:?} post-requeue i={i}"
+                        );
+                    }
+                }
+            }
+            // Drain what remains: the index must stay exact to the end.
+            let est = est_of(gen);
+            while !b.is_empty() {
+                now += 0.25;
+                let got = b.select_indexed(policy, now, gen, &est);
+                let want = scan_reference(&mut b, policy, now, gen, &est);
+                assert_eq!(got.map(|x| x.0), want.map(|x| x.0), "{policy:?} drain");
+                b.take(got.unwrap().0);
+            }
+            assert!(b.select_indexed(policy, now, gen, &est).is_none());
+        });
+    }
+}
+
+/// Degenerate keys: identical creation times, identical shapes, zero
+/// waits — every comparison ties and the smaller batch id must win from
+/// the heaps exactly as from the scan.
+#[test]
+fn indexed_select_tie_storm_matches_scan() {
+    let mut rng = Rng::new(42);
+    for policy in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Hrrn] {
+        let mut b = AdaptiveBatcher::new(BatcherConfig {
+            wma_threshold: 0.0,
+            theta: 6_900_000_000,
+            delta: 458_752,
+            max_batch_size: 0,
+        });
+        for i in 0..32 {
+            b.insert(request(i, 64, 64, 0.0), 0.0);
+        }
+        let est = |_: &BatchShape| 3.0;
+        let mut picked = Vec::new();
+        while !b.is_empty() {
+            let now = 5.0;
+            let got = b.select_indexed(policy, now, 1, est).unwrap();
+            let want = scan_reference(&mut b, policy, now, 1, &est).unwrap();
+            assert_eq!(got.0, want.0, "{policy:?}");
+            picked.push(b.queue()[got.0].id);
+            b.take(got.0);
+            // interleave fresh ties to keep the heaps churning
+            if picked.len() % 5 == 0 {
+                let id = 1000 + picked.len() as u64 + rng.range_u64(0, 3);
+                b.insert(request(id, 64, 64, 0.0), 0.0);
+            }
+        }
+        // ids strictly increase within the original tie block
+        let original: Vec<u64> = picked.iter().copied().filter(|&id| id < 32).collect();
+        let mut sorted = original.clone();
+        sorted.sort_unstable();
+        assert_eq!(original, sorted, "{policy:?} tie order must be id order");
+    }
+}
+
+/// LogDb concurrency smoke (satellite): a cursor reader sweeping while
+/// writers append sees every batch entry exactly once and in order,
+/// while `n_batches` never runs ahead of what a subsequent sweep can
+/// observe (consistent prefix).
+#[test]
+fn logdb_readers_observe_consistent_prefix_under_writes() {
+    const WRITERS: usize = 3;
+    const PER_WRITER: usize = 700; // > 2 segments each
+    let db = Arc::new(LogDb::new());
+    let written = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let db = db.clone();
+            let written = written.clone();
+            std::thread::spawn(move || {
+                for seq in 0..PER_WRITER {
+                    db.log_batch(BatchLog {
+                        shape: BatchShape {
+                            batch_size: w as u32 + 1,
+                            batch_len: seq as u32 + 1,
+                            batch_gen_len: 1,
+                        },
+                        estimated_time: w as f64,
+                        actual_time: seq as f64,
+                        at: (w * 1_000_000 + seq) as f64,
+                    });
+                    written.fetch_add(1, Ordering::Release);
+                }
+            })
+        })
+        .collect();
+
+    let mut cursor = 0usize;
+    let mut per_writer_next = [0usize; WRITERS];
+    while cursor < WRITERS * PER_WRITER {
+        // Whatever the writers have acknowledged must be fully visible
+        // to a sweep that starts afterwards (prefix consistency).
+        let floor = written.load(Ordering::Acquire);
+        let mut seen_this_sweep = 0usize;
+        cursor += db.visit_batches_from(cursor, |l| {
+            let code = l.at as usize;
+            let (w, seq) = (code / 1_000_000, code % 1_000_000);
+            assert_eq!(seq, per_writer_next[w], "writer {w} out of order");
+            assert_eq!(l.shape.batch_size, w as u32 + 1, "torn entry");
+            per_writer_next[w] += 1;
+            seen_this_sweep += 1;
+        });
+        assert!(cursor >= floor, "sweep saw {cursor} < acknowledged {floor}");
+        if seen_this_sweep == 0 {
+            std::thread::yield_now();
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(cursor, WRITERS * PER_WRITER);
+    assert_eq!(db.n_batches(), WRITERS * PER_WRITER);
+    assert!(per_writer_next.iter().all(|&n| n == PER_WRITER));
+}
