@@ -17,28 +17,26 @@ use magnus::config::ServingConfig;
 use magnus::engine::cost::CostModelEngine;
 use magnus::engine::pjrt::PjrtBatchServer;
 use magnus::engine::{BatchOutcome, InferenceEngine};
-use magnus::workload::{PredictedRequest, Request, TaskId};
+use magnus::workload::{PredictedRequest, Request, TaskId, TraceStore};
 
-fn mk(id: u64, l: u32, g: u32) -> PredictedRequest {
+fn mk(id: u64, l: u32, g: u32) -> Request {
     // text sized so the byte tokenizer yields ≈ l tokens
     let input = "x".repeat(l.saturating_sub(1) as usize);
-    PredictedRequest {
-        request: Request {
-            id,
-            task: TaskId::Gc,
-            instruction: String::new(),
-            user_input: input,
-            user_input_len: l,
-            request_len: l,
-            gen_len: g,
-            arrival: 0.0,
-        },
-        predicted_gen_len: g,
+    Request {
+        id,
+        task: TaskId::Gc,
+        instruction: String::new(),
+        user_input: input,
+        user_input_len: l,
+        request_len: l,
+        gen_len: g,
+        arrival: 0.0,
     }
 }
 
 /// Fig. 6a arrival order: 6 small, 1 large, repeated three times.
-fn arrivals(small: (u32, u32), large: (u32, u32)) -> Vec<PredictedRequest> {
+/// Texts intern into a store; the pipeline records are compact metas.
+fn arrivals(small: (u32, u32), large: (u32, u32)) -> (TraceStore, Vec<PredictedRequest>) {
     let mut v = Vec::new();
     let mut id = 0;
     for _ in 0..3 {
@@ -49,7 +47,16 @@ fn arrivals(small: (u32, u32), large: (u32, u32)) -> Vec<PredictedRequest> {
         v.push(mk(id, large.0, large.1));
         id += 1;
     }
-    v
+    let store = TraceStore::from_requests(&v);
+    let preds = store
+        .metas()
+        .iter()
+        .map(|&meta| PredictedRequest {
+            meta,
+            predicted_gen_len: meta.gen_len,
+        })
+        .collect();
+    (store, preds)
 }
 
 fn vanilla_batches(reqs: &[PredictedRequest], beta: usize) -> Vec<Batch> {
@@ -87,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     // ── Engine 1: cost model at paper scale ────────────────────────────
     println!("── cost-model engine (V100 + ChatGLM-6B scale) ──");
     let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
-    let reqs = arrivals((10, 10), (1000, 1000));
+    let (_store, reqs) = arrivals((10, 10), (1000, 1000));
 
     let serve_all = |batches: &[Batch]| -> f64 {
         batches
@@ -122,11 +129,11 @@ fn main() -> anyhow::Result<()> {
     }
     println!("── real PJRT engine (tiny model, L=G≈4/160, wall clock) ──");
     let mut srv = PjrtBatchServer::load("artifacts")?;
-    let reqs = arrivals((4, 4), (160, 60)); // 160+60 fits the 256 cache
+    let (store, reqs) = arrivals((4, 4), (160, 60)); // 160+60 fits the 256 cache
     let mut serve_real = |batches: &[Batch]| -> anyhow::Result<f64> {
         let mut total = 0.0;
         for b in batches {
-            match srv.serve(b)?.outcome {
+            match srv.serve(b, &store)?.outcome {
                 BatchOutcome::Completed { serving_time, .. } => total += serving_time,
                 _ => {}
             }

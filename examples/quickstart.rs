@@ -15,7 +15,7 @@ use magnus::estimator::{BatchShape, ServingTimeEstimator};
 use magnus::predictor::{GenLenPredictor, Variant};
 use magnus::scheduler::{select, view_of};
 use magnus::workload::dataset::build_predictor_split;
-use magnus::workload::{generate_trace, LlmProfile, PredictedRequest, TraceSpec};
+use magnus::workload::{generate_trace, LlmProfile, PredictedRequest, RequestMeta, TraceSpec};
 
 fn main() {
     let cfg = ServingConfig::default();
@@ -54,7 +54,7 @@ fn main() {
         );
         batcher.insert(
             PredictedRequest {
-                request: req.clone(),
+                meta: RequestMeta::detached(req),
                 predicted_gen_len: predicted,
             },
             req.arrival,

@@ -8,21 +8,21 @@ use magnus::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use magnus::config::ServingConfig;
 use magnus::util::bench::BenchSuite;
 use magnus::util::Rng;
-use magnus::workload::{PredictedRequest, Request, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
 fn req(id: u64, rng: &mut Rng) -> PredictedRequest {
     let len = rng.range_u64(8, 1024) as u32;
     let gen = rng.range_u64(8, 1024) as u32;
     PredictedRequest {
-        request: Request {
+        meta: RequestMeta {
             id,
             task: TaskId::Gc,
-            instruction: String::new(),
-            user_input: String::new(),
+            instr: u32::MAX,
             user_input_len: len,
             request_len: len,
             gen_len: gen,
             arrival: 0.0,
+            span: Span::DETACHED,
         },
         predicted_gen_len: gen,
     }
@@ -61,7 +61,7 @@ fn main() {
         for i in 0..depth as u64 {
             let mut q = req(i, &mut r);
             q.predicted_gen_len = (i as u32 % 64) * 16 + 1;
-            q.request.request_len = ((i as u32 * 37) % 1000) + 8;
+            q.meta.request_len = ((i as u32 * 37) % 1000) + 8;
             b.insert(q, 0.0);
         }
         let mut i = 1000u64;

@@ -11,19 +11,19 @@ use magnus::engine::cost::CostModelEngine;
 use magnus::engine::InferenceEngine;
 use magnus::runtime::ModelRuntime;
 use magnus::util::bench::BenchSuite;
-use magnus::workload::{PredictedRequest, Request, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
 fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
     PredictedRequest {
-        request: Request {
+        meta: RequestMeta {
             id,
             task: TaskId::Gc,
-            instruction: String::new(),
-            user_input: String::new(),
+            instr: u32::MAX,
             user_input_len: len,
             request_len: len,
             gen_len: gen,
             arrival: 0.0,
+            span: Span::DETACHED,
         },
         predicted_gen_len: gen,
     }

@@ -16,7 +16,7 @@ use magnus::predictor::{
 use magnus::util::bench::{bb, record_predictor_bench, BenchSuite};
 use magnus::util::{Json, Rng};
 use magnus::workload::dataset::build_predictor_split;
-use magnus::workload::{LlmProfile, Request};
+use magnus::workload::{LlmProfile, Request, RequestView};
 
 /// The pre-overhaul predict path: fresh feature `Vec` per call (baseline
 /// embedder with per-bigram key concatenation, cached-row clone) into
@@ -81,9 +81,12 @@ fn main() {
         i = (i + 1) % n_test;
         predict_naive(&mut fx, &forest, &split.test[i], g_max)
     });
-    // one logical op = the whole test set through predict_many
+    // one logical op = the whole test set through the batched view path
+    // (prebuilt views, as the simulator's arrival drain holds them — the
+    // owned predict_many wrapper would add a per-call Vec<RequestView>)
+    let views: Vec<RequestView> = split.test.iter().map(|r| r.view()).collect();
     suite.bench(&format!("predict/USIN/flat(batch of {n_test})"), || {
-        p.predict_many(&refs, &mut batch);
+        p.predict_many_views(&views, &mut batch);
         bb(&batch);
     });
     let naive_ns = mean_ns(&suite, "predict/USIN/naive(enum+alloc)");

@@ -15,7 +15,7 @@ use magnus::logdb::{LogDb, RequestLog};
 use magnus::scheduler::{select, BatchView};
 use magnus::util::bench::{record_sched_bench, BenchSuite};
 use magnus::util::{Json, Rng};
-use magnus::workload::{PredictedRequest, Request, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
 const DEPTHS: [usize; 3] = [16, 256, 4096];
 const NOW: f64 = 1_000.0;
@@ -54,15 +54,15 @@ fn filled_batcher(n: usize, seed: u64) -> AdaptiveBatcher {
         let arrival = rng.range_f64(0.0, 500.0);
         b.insert(
             PredictedRequest {
-                request: Request {
+                meta: RequestMeta {
                     id: i as u64,
                     task: TaskId::Gc,
-                    instruction: String::new(),
-                    user_input: String::new(),
+                    instr: u32::MAX,
                     user_input_len: len,
                     request_len: len,
                     gen_len: pred,
                     arrival,
+                    span: Span::DETACHED,
                 },
                 predicted_gen_len: pred,
             },
@@ -74,15 +74,15 @@ fn filled_batcher(n: usize, seed: u64) -> AdaptiveBatcher {
 
 fn rlog(at: f64) -> RequestLog {
     RequestLog {
-        request: Request {
+        meta: RequestMeta {
             id: 0,
             task: TaskId::Gc,
-            instruction: String::new(),
-            user_input: String::new(),
+            instr: u32::MAX,
             user_input_len: 5,
             request_len: 6,
             gen_len: 7,
             arrival: 0.0,
+            span: Span::DETACHED,
         },
         predicted_gen_len: 9,
         actual_gen_len: 7,

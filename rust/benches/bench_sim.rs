@@ -1,25 +1,56 @@
-//! End-to-end simulator speedup: the cached dispatch loop vs the
-//! fresh-view (pre-refactor) reference, on the acceptance workload
-//! (rate = 10 req/s, 600 requests, full Magnus policy).
+//! End-to-end simulator speedups, two sections:
 //!
-//! Both paths produce bit-for-bit identical `Summary` metrics (asserted
-//! here and property-tested in tests/dispatch_equivalence.rs); this
-//! harness measures what the equivalence buys and records it as
-//! machine-readable `BENCH_sim.json` at the repo root, starting the perf
-//! trajectory EXPERIMENTS.md §Perf tracks.
+//! 1. **Dispatch** — the cached/indexed dispatch loops vs the fresh-view
+//!    (pre-refactor) reference on the acceptance workload (rate =
+//!    10 req/s, 600 requests, full Magnus) → `BENCH_sim.json`.
+//! 2. **Scale (zero-copy request plumbing)** — the interned `TraceStore`
+//!    path (streaming generation + compact `RequestMeta` pipeline) vs
+//!    the owned-`Request` reference (`sim::reference`: clone per
+//!    arrival, clone per log entry, member rescans) at N ∈ {10⁴, 10⁵,
+//!    10⁶} requests → `BENCH_scale.json`, with wall time AND peak heap
+//!    bytes from the counting global allocator.  The reference is the
+//!    owned representation in its pre-overhaul algorithmic shape, so the
+//!    wall-time ratio is the whole PR 1–4 trajectory gap (see
+//!    `sim::reference` docs); the peak-byte column and the 10⁶ row —
+//!    which the owned shape cannot reach — are the zero-copy-specific
+//!    evidence.  The owned reference is capped at 10⁵.
+//!
+//! Section 1 asserts bit-for-bit behavioural equivalence before timing
+//! anything; section 2 asserts it for every row the owned reference
+//! runs at (N ≤ 10⁵ — rows above the cap are completion-checked only;
+//! representation equivalence at those sizes rests on the golden suite
+//! in tests/store_equivalence.rs and tests/dispatch_equivalence.rs).
+//! `MAGNUS_BENCH_QUICK` or `MAGNUS_SCALE_SMOKE` limit the scale sweep
+//! to N = 10⁴ (CI smoke).
 
 use std::time::Instant;
 
 use magnus::config::ServingConfig;
 use magnus::engine::cost::CostModelEngine;
-use magnus::sim::{run_magnus_with, trained_predictor, DispatchMode, MagnusPolicy};
-use magnus::util::bench::record_sim_bench;
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::sim::{
+    run_magnus_owned, run_magnus_store, run_magnus_with, trained_predictor, DispatchMode,
+    MagnusPolicy,
+};
+use magnus::util::alloc::{peak_bytes, reset_peak, CountingAllocator};
+use magnus::util::bench::{record_scale_bench, record_sim_bench, ScalePoint};
 use magnus::util::Json;
-use magnus::workload::{generate_trace, TraceSpec};
+use magnus::workload::{generate_trace, TraceSpec, TraceStore};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 const RATE: f64 = 10.0;
 const N_REQUESTS: usize = 600;
 const PREDICTOR_TRAIN: usize = 200;
+
+/// Scale-sweep arrival rate: comfortably below the 7-instance capacity,
+/// so queues stay bounded and the sweep measures per-request plumbing
+/// rather than overload dynamics (the overload regime is section 1's and
+/// bench_scheduler's job).
+const SCALE_RATE: f64 = 4.0;
+/// Largest N the owned reference runs at (see module docs).
+const OWNED_CAP: usize = 100_000;
 
 fn main() {
     let quick = std::env::var("MAGNUS_BENCH_QUICK").is_ok();
@@ -114,9 +145,151 @@ fn main() {
     .expect("write BENCH_sim.json");
     println!("wrote {path}");
 
+    // ── section 2: zero-copy scale sweep ──────────────────────────────
+    let smoke = quick || std::env::var("MAGNUS_SCALE_SMOKE").is_ok();
+    let ns: &[usize] = if smoke {
+        &[10_000]
+    } else {
+        &[10_000, 100_000, 1_000_000]
+    };
+    println!(
+        "\n== scale: TraceStore (zero-copy) vs owned-Request reference \
+         (rate {SCALE_RATE}, N {ns:?}) =="
+    );
+
+    // Isolate the plumbing: UILO predictor (prediction cost ~0, so the
+    // per-request clone/alloc tax is what the clock sees) and learning
+    // sweeps disabled (periodic full refits would otherwise dominate a
+    // 10⁶-request run for BOTH paths identically; equivalence with
+    // learning ON is covered by tests/store_equivalence.rs).  The policy
+    // is still full Magnus: WMA batching, estimator estimates, HRRN.
+    let mut scfg = ServingConfig::default();
+    scfg.learning.predictor_period_s = f64::INFINITY;
+    scfg.learning.estimator_period_s = f64::INFINITY;
+    let sengine = CostModelEngine::new(scfg.cost.clone(), &scfg.gpu);
+
+    let mut points: Vec<ScalePoint> = Vec::new();
+    for &n in ns {
+        let spec = TraceSpec {
+            rate: SCALE_RATE,
+            n_requests: n,
+            seed: 7,
+            ..Default::default()
+        };
+
+        // Zero-copy path: stream the trace into the arena, run compact.
+        reset_peak();
+        let base = peak_bytes();
+        let t0 = Instant::now();
+        let store = TraceStore::generate(&spec);
+        let store_out = run_magnus_store(
+            &scfg,
+            &MagnusPolicy::magnus(),
+            GenLenPredictor::new(Variant::Uilo, &scfg),
+            &sengine,
+            &store,
+        );
+        let store_s = t0.elapsed().as_secs_f64();
+        let store_peak = peak_bytes() - base;
+        let arena = store.arena_bytes();
+        assert_eq!(store_out.metrics.records.len(), n, "scale run must complete");
+        // Keep only what the equivalence check needs, then free the
+        // store-phase state so the owned phase runs on a symmetric heap
+        // (and the process high-water mark is one run, not the sum).
+        let store_records: Vec<(u64, u64)> = store_out
+            .metrics
+            .records
+            .iter()
+            .map(|r| (r.request_id, r.finish.to_bits()))
+            .collect();
+        drop(store_out);
+        drop(store);
+
+        // Owned reference, up to the cap.
+        let (owned_s, owned_peak) = if n <= OWNED_CAP {
+            reset_peak();
+            let base = peak_bytes();
+            let t0 = Instant::now();
+            let owned_trace = generate_trace(&spec);
+            let owned_out = run_magnus_owned(
+                &scfg,
+                &MagnusPolicy::magnus(),
+                GenLenPredictor::new(Variant::Uilo, &scfg),
+                &sengine,
+                &owned_trace,
+            );
+            let owned_s = t0.elapsed().as_secs_f64();
+            let owned_peak = peak_bytes() - base;
+            // Equivalence before the numbers count.
+            assert_eq!(owned_out.metrics.records.len(), n);
+            for (x, &(id, finish_bits)) in
+                owned_out.metrics.records.iter().zip(&store_records)
+            {
+                assert_eq!(x.request_id, id, "owned vs store diverged");
+                assert_eq!(x.finish.to_bits(), finish_bits, "owned vs store diverged");
+            }
+            (Some(owned_s), Some(owned_peak))
+        } else {
+            (None, None)
+        };
+
+        let fmt_mb = |b: usize| b as f64 / 1e6;
+        match (owned_s, owned_peak) {
+            (Some(os), Some(op)) => println!(
+                "  n={n:>9}: store {store_s:8.3} s / {:8.1} MB peak (arena {:6.1} MB) | \
+                 owned {os:8.3} s / {:8.1} MB peak → {:.2}x time, {:.2}x peak",
+                fmt_mb(store_peak),
+                fmt_mb(arena),
+                fmt_mb(op),
+                os / store_s.max(1e-12),
+                op as f64 / store_peak.max(1) as f64,
+            ),
+            _ => println!(
+                "  n={n:>9}: store {store_s:8.3} s / {:8.1} MB peak (arena {:6.1} MB) | \
+                 owned — (above reference cap)",
+                fmt_mb(store_peak),
+                fmt_mb(arena),
+            ),
+        }
+        points.push(ScalePoint {
+            n,
+            store_s,
+            store_peak_bytes: store_peak,
+            arena_bytes: arena,
+            owned_s,
+            owned_peak_bytes: owned_peak,
+        });
+    }
+
+    let scale_path = format!("{}/../BENCH_scale.json", env!("CARGO_MANIFEST_DIR"));
+    record_scale_bench(
+        &scale_path,
+        SCALE_RATE,
+        &points,
+        vec![
+            ("policy", Json::str("Magnus")),
+            ("predictor", Json::str("UILO")),
+            ("learning", Json::str("disabled")),
+            (
+                "baseline",
+                Json::str("owned Requests, pre-overhaul shape (naive WMA rescans + fresh select)"),
+            ),
+            ("owned_cap", Json::num(OWNED_CAP as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("source", Json::str("benches/bench_sim.rs")),
+        ],
+    )
+    .expect("write BENCH_scale.json");
+    println!("wrote {scale_path}");
+
     // No wall-clock assertion: shared runners are noisy and a spurious
-    // red would gate merges on scheduler jitter.  The hard gate is the
-    // bitwise equivalence asserted above; the speedup is reported and
-    // recorded for the perf trajectory.
-    println!("\nPASS: modes bit-for-bit equivalent; speedup {speedup:.2}x recorded");
+    // red would gate merges on scheduler jitter.  The hard gates are the
+    // bitwise equivalences asserted above; speedups and peak bytes are
+    // reported and recorded for the perf trajectory.
+    println!(
+        "\nPASS: dispatch modes bit-for-bit equivalent; store ≡ owned \
+         asserted up to N = {OWNED_CAP} (larger rows completion-checked; \
+         equivalence there rests on the golden suite); dispatch speedup \
+         {speedup:.2}x recorded"
+    );
 }

@@ -218,7 +218,7 @@ impl AdaptiveBatcher {
                 agg.gen = agg.gen.max(p.predicted_gen_len);
                 agg.size += 1;
                 agg.max_s = agg.max_s.max(cand_s);
-                agg.min_arrival = agg.min_arrival.min(p.request.arrival);
+                agg.min_arrival = agg.min_arrival.min(p.meta.arrival);
                 self.ests[i] = EstCache::EMPTY; // shape changed
                 self.queue[i].requests.push(p);
                 self.touch(i); // shape changed: re-key the index entries
@@ -227,7 +227,7 @@ impl AdaptiveBatcher {
             _ => {
                 let id = self.next_batch_id;
                 self.next_batch_id += 1;
-                let arrival = p.request.arrival;
+                let arrival = p.meta.arrival;
                 self.aggs.push(BatchAgg {
                     len: p.len(),
                     gen: p.predicted_gen_len,
@@ -622,19 +622,19 @@ mod tests {
     use super::*;
     use crate::batch::wma::mem_bytes;
     use crate::util::prop::prop_check;
-    use crate::workload::{PredictedRequest, Request, TaskId};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
     fn req(id: u64, len: u32, pred: u32) -> PredictedRequest {
         PredictedRequest {
-            request: Request {
+            meta: RequestMeta {
                 id,
                 task: TaskId::Gc,
-                instruction: String::new(),
-                user_input: String::new(),
+                instr: u32::MAX,
                 user_input_len: len,
                 request_len: len,
                 gen_len: pred,
                 arrival: 0.0,
+                span: Span::DETACHED,
             },
             predicted_gen_len: pred,
         }
@@ -771,7 +771,7 @@ mod tests {
                 let len = rng.range_u64(1, 1024) as u32;
                 let pred = rng.range_u64(1, 1024) as u32;
                 let mut r = req(i as u64, len, pred);
-                r.request.arrival = rng.f64() * 50.0;
+                r.meta.arrival = rng.f64() * 50.0;
                 b.insert(r, i as f64);
                 // occasionally dispatch / OOM-split-requeue a random batch
                 if b.queue_len() > 1 && rng.range_u64(0, 4) == 0 {
@@ -895,7 +895,7 @@ mod tests {
                     let len = rng.range_u64(1, 1024) as u32;
                     let pred = rng.range_u64(1, 1024) as u32;
                     let mut r = req(i as u64, len, pred);
-                    r.request.arrival = now - rng.f64();
+                    r.meta.arrival = now - rng.f64();
                     b.insert(r, now);
                     if rng.range_u64(0, 5) == 0 {
                         gen += 1; // estimator refit between selects

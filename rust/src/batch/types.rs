@@ -2,7 +2,7 @@
 //! engine pipeline.
 
 use crate::estimator::BatchShape;
-use crate::workload::PredictedRequest;
+use crate::workload::{PredictedRequest, TraceStore};
 
 /// A batch of requests awaiting (or under) execution.
 #[derive(Debug, Clone)]
@@ -23,6 +23,27 @@ impl Batch {
             id,
             requests: vec![first],
             created_at: now,
+            insertable: true,
+        }
+    }
+
+    /// One batch over every request of `store`, in trace order, with
+    /// predictions set to the true generation lengths — the
+    /// perfect-prediction shape real-compute tests and demos batch with.
+    /// Panics on an empty store.
+    pub fn of_store(id: u64, store: &TraceStore) -> Batch {
+        assert!(!store.is_empty(), "cannot batch an empty store");
+        Batch {
+            id,
+            requests: store
+                .metas()
+                .iter()
+                .map(|&meta| PredictedRequest {
+                    meta,
+                    predicted_gen_len: meta.gen_len,
+                })
+                .collect(),
+            created_at: 0.0,
             insertable: true,
         }
     }
@@ -58,7 +79,7 @@ impl Batch {
     pub fn true_gen_len(&self) -> u32 {
         self.requests
             .iter()
-            .map(|r| r.request.gen_len)
+            .map(|r| r.meta.gen_len)
             .max()
             .unwrap_or(0)
     }
@@ -91,7 +112,7 @@ impl Batch {
     pub fn earliest_arrival(&self) -> f64 {
         self.requests
             .iter()
-            .map(|r| r.request.arrival)
+            .map(|r| r.meta.arrival)
             .fold(f64::INFINITY, f64::min)
     }
 
@@ -121,19 +142,19 @@ impl Batch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::{Request, TaskId};
+    use crate::workload::{RequestMeta, Span, TaskId};
 
     pub(crate) fn req(id: u64, len: u32, gen: u32, pred: u32, arrival: f64) -> PredictedRequest {
         PredictedRequest {
-            request: Request {
+            meta: RequestMeta {
                 id,
                 task: TaskId::Gc,
-                instruction: String::new(),
-                user_input: String::new(),
+                instr: u32::MAX,
                 user_input_len: len.saturating_sub(1),
                 request_len: len,
                 gen_len: gen,
                 arrival,
+                span: Span::DETACHED,
             },
             predicted_gen_len: pred,
         }

@@ -89,19 +89,19 @@ mod tests {
     use super::*;
     use crate::batch::types::Batch;
     use crate::util::prop::prop_check;
-    use crate::workload::{PredictedRequest, Request, TaskId};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
     fn req(len: u32, pred: u32) -> PredictedRequest {
         PredictedRequest {
-            request: Request {
+            meta: RequestMeta {
                 id: 0,
                 task: TaskId::Gc,
-                instruction: String::new(),
-                user_input: String::new(),
+                instr: u32::MAX,
                 user_input_len: len,
                 request_len: len,
                 gen_len: pred,
                 arrival: 0.0,
+                span: Span::DETACHED,
             },
             predicted_gen_len: pred,
         }

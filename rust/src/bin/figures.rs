@@ -185,22 +185,22 @@ fn fig6(_args: &Args) {
     use magnus::batch::{AdaptiveBatcher, Batch, BatcherConfig};
     use magnus::engine::cost::CostModelEngine;
     use magnus::engine::InferenceEngine;
-    use magnus::workload::{PredictedRequest, Request};
+    use magnus::workload::{PredictedRequest, RequestMeta, Span};
 
     println!("\n== Fig 6: case study — 18 small + 3 large requests ==");
     let cfg = ServingConfig::default();
     let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
 
     let mk = |id: u64, l: u32, g: u32| PredictedRequest {
-        request: Request {
+        meta: RequestMeta {
             id,
             task: TaskId::Gc,
-            instruction: String::new(),
-            user_input: String::new(),
+            instr: u32::MAX,
             user_input_len: l,
             request_len: l,
             gen_len: g,
             arrival: 0.0,
+            span: Span::DETACHED,
         },
         predicted_gen_len: g,
     };
@@ -401,7 +401,7 @@ fn overhead(_args: &Args) {
     use magnus::batch::{AdaptiveBatcher, BatcherConfig};
     use magnus::estimator::{BatchShape, ServingTimeEstimator};
     use magnus::scheduler::{select, BatchView};
-    use magnus::workload::PredictedRequest;
+    use magnus::workload::{PredictedRequest, RequestMeta};
     use std::time::Instant;
 
     println!("\n== §IV-D: component overhead ==");
@@ -434,7 +434,7 @@ fn overhead(_args: &Args) {
     for (i, r) in trace.iter().enumerate() {
         b.insert(
             PredictedRequest {
-                request: r.clone(),
+                meta: RequestMeta::detached(r),
                 predicted_gen_len: r.gen_len,
             },
             i as f64,

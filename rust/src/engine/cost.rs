@@ -91,9 +91,9 @@ impl InferenceEngine for CostModelEngine {
             .requests
             .iter()
             .map(|r| ServedRequest {
-                request_id: r.request.id,
-                valid_tokens: r.request.gen_len,
-                invalid_tokens: gen - r.request.gen_len,
+                request_id: r.meta.id,
+                valid_tokens: r.meta.gen_len,
+                invalid_tokens: gen - r.meta.gen_len,
             })
             .collect();
         BatchOutcome::Completed {
@@ -123,19 +123,19 @@ mod tests {
     use super::*;
     use crate::batch::Batch;
     use crate::config::ServingConfig;
-    use crate::workload::{PredictedRequest, Request, TaskId};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
     fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
         PredictedRequest {
-            request: Request {
+            meta: RequestMeta {
                 id,
                 task: TaskId::Gc,
-                instruction: String::new(),
-                user_input: String::new(),
+                instr: u32::MAX,
                 user_input_len: len,
                 request_len: len,
                 gen_len: gen,
                 arrival: 0.0,
+                span: Span::DETACHED,
             },
             predicted_gen_len: gen,
         }

@@ -26,6 +26,7 @@ use crate::batch::Batch;
 use crate::engine::{BatchOutcome, ServedRequest};
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::Tokenizer;
+use crate::workload::TraceStore;
 
 /// One worker's real inference engine.
 pub struct PjrtBatchServer {
@@ -63,7 +64,11 @@ impl PjrtBatchServer {
     }
 
     /// Serve a batch to completion; serving time is wall clock.
-    pub fn serve(&mut self, batch: &Batch) -> Result<RealOutcome> {
+    ///
+    /// The batch carries compact metas; `store` resolves each request's
+    /// instruction/user-input text as borrowed arena slices — the only
+    /// copies made here are the token-id buffers the runtime needs.
+    pub fn serve(&mut self, batch: &Batch, store: &TraceStore) -> Result<RealOutcome> {
         let t0 = Instant::now();
         let n = batch.requests.len();
         let vocab = self.rt.vocab();
@@ -71,8 +76,8 @@ impl PjrtBatchServer {
         // Tokenize: instruction ++ user input (BOS from encode()).
         let mut prompts: Vec<Vec<u32>> = Vec::with_capacity(n);
         for r in &batch.requests {
-            let mut ids = self.tok.encode(&r.request.instruction);
-            ids.extend(self.tok.encode_raw(&r.request.user_input));
+            let mut ids = self.tok.encode(store.instruction(&r.meta));
+            ids.extend(self.tok.encode_raw(store.user_input(&r.meta)));
             prompts.push(ids);
         }
         let max_len = prompts.iter().map(|p| p.len()).max().unwrap();
@@ -88,7 +93,7 @@ impl PjrtBatchServer {
         let targets: Vec<u32> = batch
             .requests
             .iter()
-            .map(|r| r.request.gen_len.min(capacity).max(1))
+            .map(|r| r.meta.gen_len.min(capacity).max(1))
             .collect();
         let batch_gen = *targets.iter().max().unwrap();
 
@@ -124,7 +129,7 @@ impl PjrtBatchServer {
             .iter()
             .zip(&targets)
             .map(|(r, &t)| ServedRequest {
-                request_id: r.request.id,
+                request_id: r.meta.id,
                 valid_tokens: t,
                 invalid_tokens: batch_gen - t,
             })
@@ -152,26 +157,30 @@ impl PjrtBatchServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::{PredictedRequest, Request, TaskId};
+    use crate::workload::{Request, TaskId};
 
     fn have_artifacts() -> bool {
         std::path::Path::new("artifacts/manifest.json").exists()
     }
 
-    fn req(id: u64, input: &str, gen: u32) -> PredictedRequest {
-        PredictedRequest {
-            request: Request {
-                id,
-                task: TaskId::Gc,
-                instruction: "Fix:".to_string(),
-                user_input: input.to_string(),
-                user_input_len: input.len() as u32,
-                request_len: (input.len() + 6) as u32,
-                gen_len: gen,
-                arrival: 0.0,
-            },
-            predicted_gen_len: gen,
+    fn req(id: u64, input: &str, gen: u32) -> Request {
+        Request {
+            id,
+            task: TaskId::Gc,
+            instruction: "Fix:".to_string(),
+            user_input: input.to_string(),
+            user_input_len: input.len() as u32,
+            request_len: (input.len() + 6) as u32,
+            gen_len: gen,
+            arrival: 0.0,
         }
+    }
+
+    /// Intern `reqs` and form one batch over the whole store.
+    fn batch_of(reqs: &[Request]) -> (TraceStore, Batch) {
+        let store = TraceStore::from_requests(reqs);
+        let b = Batch::of_store(0, &store);
+        (store, b)
     }
 
     #[test]
@@ -181,9 +190,8 @@ mod tests {
             return;
         }
         let mut srv = PjrtBatchServer::load("artifacts").unwrap();
-        let mut b = Batch::new(0, req(0, "abc", 4), 0.0);
-        b.requests.push(req(1, "defgh", 9));
-        let out = srv.serve(&b).unwrap();
+        let (store, b) = batch_of(&[req(0, "abc", 4), req(1, "defgh", 9)]);
+        let out = srv.serve(&b, &store).unwrap();
         match out.outcome {
             BatchOutcome::Completed {
                 serving_time,
@@ -207,9 +215,9 @@ mod tests {
             return;
         }
         let mut srv = PjrtBatchServer::load("artifacts").unwrap();
-        let b = Batch::new(0, req(0, "hello", 6), 0.0);
-        let a = srv.serve(&b).unwrap();
-        let c = srv.serve(&b).unwrap();
+        let (store, b) = batch_of(&[req(0, "hello", 6)]);
+        let a = srv.serve(&b, &store).unwrap();
+        let c = srv.serve(&b, &store).unwrap();
         assert_eq!(a.generated, c.generated);
     }
 }

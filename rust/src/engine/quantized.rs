@@ -36,7 +36,7 @@ impl<E: InferenceEngine> QuantizedEngine<E> {
     fn inflated_batch(&self, batch: &Batch) -> Batch {
         let mut b = batch.clone();
         for r in &mut b.requests {
-            r.request.gen_len = self.inflate(r.request.gen_len);
+            r.meta.gen_len = self.inflate(r.meta.gen_len);
         }
         b
     }
@@ -89,19 +89,19 @@ mod tests {
     use super::*;
     use crate::config::ServingConfig;
     use crate::engine::cost::CostModelEngine;
-    use crate::workload::{PredictedRequest, Request, TaskId};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
     fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
         PredictedRequest {
-            request: Request {
+            meta: RequestMeta {
                 id,
                 task: TaskId::Gc,
-                instruction: String::new(),
-                user_input: String::new(),
+                instr: u32::MAX,
                 user_input_len: len,
                 request_len: len,
                 gen_len: gen,
                 arrival: 0.0,
+                span: Span::DETACHED,
             },
             predicted_gen_len: gen,
         }

@@ -12,6 +12,7 @@ use crate::config::LearningConfig;
 use crate::estimator::{BatchShape, ServingTimeEstimator};
 use crate::logdb::LogDb;
 use crate::predictor::GenLenPredictor;
+use crate::workload::TraceStore;
 
 /// Sweeps the log DB and retrains the two learned components.
 ///
@@ -49,16 +50,20 @@ impl ContinuousLearner {
         }
     }
 
-    /// Run any due sweeps at time `now`.
+    /// Run any due sweeps at time `now`.  `store` is the run's shared
+    /// trace store: log entries carry compact metas, and the predictor
+    /// sweep borrows each bad request's text from the arena (zero-copy)
+    /// to rebuild its features.
     pub fn tick(
         &mut self,
         now: f64,
         db: &LogDb,
         predictor: &mut GenLenPredictor,
         estimator: &mut ServingTimeEstimator,
+        store: &TraceStore,
     ) {
         if now - self.last_pred_sweep >= self.cfg.predictor_period_s {
-            self.sweep_predictor(now, db, predictor);
+            self.sweep_predictor(now, db, predictor, store);
         }
         if now - self.last_est_sweep >= self.cfg.estimator_period_s {
             self.sweep_estimator(now, db, estimator);
@@ -69,9 +74,15 @@ impl ContinuousLearner {
     /// actual generation length; augment + refit.  Only the log tail
     /// since the previous sweep is visited (cursor-indexed), and bad
     /// rows are absorbed straight into the predictor's column-major
-    /// train set during the visit — no request is cloned — followed by
-    /// one refit.
-    fn sweep_predictor(&mut self, now: f64, db: &LogDb, predictor: &mut GenLenPredictor) {
+    /// train set during the visit — the text is borrowed from the trace
+    /// arena, no request is cloned — followed by one refit.
+    fn sweep_predictor(
+        &mut self,
+        now: f64,
+        db: &LogDb,
+        predictor: &mut GenLenPredictor,
+        store: &TraceStore,
+    ) {
         self.last_pred_sweep = now;
         let (err_tokens, err_frac) =
             (self.cfg.predictor_err_tokens, self.cfg.predictor_err_frac);
@@ -80,7 +91,7 @@ impl ContinuousLearner {
             let err = (l.predicted_gen_len as f64 - l.actual_gen_len as f64).abs();
             if err > err_tokens && err > err_frac * l.actual_gen_len as f64 {
                 n_bad += 1;
-                predictor.absorb(&l.request);
+                predictor.absorb(store.view_of(&l.meta));
             }
         });
         self.pred_cursor += visited;
@@ -137,15 +148,16 @@ mod tests {
         let cfg = ServingConfig::default();
         let db = LogDb::new();
         let split = build_predictor_split(LlmProfile::ChatGlm6B, 30, 10, 1024, 20);
+        let store = TraceStore::from_requests(&split.train);
         // one bad (err 50 > 10 and > 10%), one good (err 0)
         db.log_request(RequestLog {
-            request: split.train[0].clone(),
+            meta: store.meta(0),
             predicted_gen_len: split.train[0].gen_len + 50,
             actual_gen_len: split.train[0].gen_len,
             at: 100.0,
         });
         db.log_request(RequestLog {
-            request: split.train[1].clone(),
+            meta: store.meta(1),
             predicted_gen_len: split.train[1].gen_len,
             actual_gen_len: split.train[1].gen_len,
             at: 110.0,
@@ -155,7 +167,7 @@ mod tests {
         let n0 = p.train_size();
         let mut est = ServingTimeEstimator::new(3);
         let mut l = learner(180.0, 1e18);
-        l.tick(200.0, &db, &mut p, &mut est);
+        l.tick(200.0, &db, &mut p, &mut est, &store);
         assert_eq!(l.predictor_sweeps.len(), 1);
         assert_eq!(l.predictor_sweeps[0].1, 1);
         assert_eq!(p.train_size(), n0 + 1);
@@ -181,7 +193,7 @@ mod tests {
         let mut p = GenLenPredictor::new(Variant::Uilo, &cfg);
         let mut est = ServingTimeEstimator::new(3);
         let mut l = learner(1e18, 120.0);
-        l.tick(121.0, &db, &mut p, &mut est);
+        l.tick(121.0, &db, &mut p, &mut est, &TraceStore::new());
         assert_eq!(l.estimator_sweeps.len(), 1);
         assert_eq!(l.estimator_sweeps[0].1, 1);
         assert!(est.is_trained());
@@ -197,8 +209,9 @@ mod tests {
         let cfg = ServingConfig::default();
         let db = LogDb::new();
         let split = build_predictor_split(LlmProfile::ChatGlm6B, 30, 10, 1024, 23);
+        let store = TraceStore::from_requests(&split.train);
         db.log_request(RequestLog {
-            request: split.train[0].clone(),
+            meta: store.meta(0),
             predicted_gen_len: split.train[0].gen_len + 50,
             actual_gen_len: split.train[0].gen_len,
             at: 100.0,
@@ -207,11 +220,11 @@ mod tests {
         p.train(&split.train);
         let mut est = ServingTimeEstimator::new(3);
         let mut l = learner(100.0, 1e18);
-        l.tick(150.0, &db, &mut p, &mut est);
+        l.tick(150.0, &db, &mut p, &mut est, &store);
         assert_eq!(l.predictor_sweeps[0].1, 1);
         let n1 = p.train_size();
         // second sweep: no new logs → nothing collected, no refit growth
-        l.tick(300.0, &db, &mut p, &mut est);
+        l.tick(300.0, &db, &mut p, &mut est, &store);
         assert_eq!(l.predictor_sweeps[1].1, 0);
         assert_eq!(p.train_size(), n1);
     }
@@ -224,12 +237,13 @@ mod tests {
         let mut p = GenLenPredictor::new(Variant::Uilo, &cfg);
         let mut est = ServingTimeEstimator::new(3);
         let mut l = learner(180.0, 120.0);
+        let store = TraceStore::new();
         for t in [10.0, 50.0, 100.0] {
-            l.tick(t, &db, &mut p, &mut est);
+            l.tick(t, &db, &mut p, &mut est, &store);
         }
         assert_eq!(l.predictor_sweeps.len(), 0);
         assert_eq!(l.estimator_sweeps.len(), 0);
-        l.tick(185.0, &db, &mut p, &mut est);
+        l.tick(185.0, &db, &mut p, &mut est, &store);
         assert_eq!(l.predictor_sweeps.len(), 1);
         assert_eq!(l.estimator_sweeps.len(), 1);
         let _ = split;

@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::estimator::BatchShape;
 use crate::util::Json;
-use crate::workload::Request;
+use crate::workload::RequestMeta;
 
 /// Entries per sealed segment.  Small enough that the tail visit (the
 /// only part of a sweep that blocks writers) stays bounded and short;
@@ -36,9 +36,14 @@ use crate::workload::Request;
 const SEG_CAP: usize = 256;
 
 /// A served request log entry (feeds predictor continuous learning).
-#[derive(Debug, Clone)]
+///
+/// Carries the compact [`RequestMeta`] — `Copy`, so logging a completion
+/// costs a few machine words and no heap traffic.  Consumers that need
+/// the request text (the predictor sweep's feature absorption) resolve it
+/// through the run's shared `TraceStore`.
+#[derive(Debug, Clone, Copy)]
 pub struct RequestLog {
-    pub request: Request,
+    pub meta: RequestMeta,
     pub predicted_gen_len: u32,
     pub actual_gen_len: u32,
     /// Completion (sim or wall) time.
@@ -256,19 +261,19 @@ impl LogDb {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::TaskId;
+    use crate::workload::{Span, TaskId};
 
     fn rlog(at: f64) -> RequestLog {
         RequestLog {
-            request: Request {
+            meta: RequestMeta {
                 id: 0,
                 task: TaskId::Gc,
-                instruction: String::new(),
-                user_input: String::new(),
+                instr: u32::MAX,
                 user_input_len: 5,
                 request_len: 6,
                 gen_len: 7,
                 arrival: 0.0,
+                span: Span::DETACHED,
             },
             predicted_gen_len: 9,
             actual_gen_len: 7,

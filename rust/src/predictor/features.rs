@@ -10,12 +10,16 @@
 //! caller-provided row, copies the cached instruction features from a
 //! borrowed row (no clone), and runs the user-input embedding through
 //! the fused zero-alloc [`Embedder::embed_compress_into`] with a reused
-//! scratch buffer.  The pre-overhaul allocating pipeline is kept as
+//! scratch buffer.  Inputs arrive as [`RequestView`]s — borrowed `&str`
+//! slices, on the serving path straight out of the `TraceStore` arena —
+//! so the whole pipeline touches no owned request text; `&Request`
+//! converts implicitly for dataset/golden callers.  The pre-overhaul
+//! allocating pipeline is kept as
 //! [`FeatureExtractor::features_baseline`] — the measured baseline for
 //! `benches/bench_predictor.rs`, bit-identical by construction (tested).
 
 use crate::embedding::{compress, Embedder, D_APP, D_USER};
-use crate::workload::Request;
+use crate::workload::RequestView;
 
 /// Which predictor variant (Table II row).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,24 +94,31 @@ impl FeatureExtractor {
     }
 
     /// Build the feature row for `variant` into `row` (cleared first) —
-    /// the zero-alloc hot path.  Panics for UILO, which has no regressor
-    /// input.
-    pub fn features_into(&mut self, variant: Variant, req: &Request, row: &mut Vec<f32>) {
+    /// the zero-alloc hot path.  Accepts anything that converts to a
+    /// [`RequestView`] (`&Request`, or a store view borrowing the arena).
+    /// Panics for UILO, which has no regressor input.
+    pub fn features_into<'a>(
+        &mut self,
+        variant: Variant,
+        req: impl Into<RequestView<'a>>,
+        row: &mut Vec<f32>,
+    ) {
+        let req: RequestView<'a> = req.into();
         row.clear();
         match variant {
             Variant::Uilo => panic!("UILO has no feature pipeline"),
             Variant::Raft => row.push(req.user_input_len as f32),
             Variant::Inst => {
                 row.push(req.user_input_len as f32);
-                let ci = self.ensure_instr(&req.instruction);
+                let ci = self.ensure_instr(req.instruction);
                 row.extend_from_slice(&self.instr_cache[ci].1);
             }
             Variant::Usin => {
                 row.push(req.user_input_len as f32);
-                let ci = self.ensure_instr(&req.instruction);
+                let ci = self.ensure_instr(req.instruction);
                 row.extend_from_slice(&self.instr_cache[ci].1);
                 self.embedder.embed_compress_into(
-                    &req.user_input,
+                    req.user_input,
                     D_USER,
                     &mut self.embed_buf,
                     row,
@@ -117,7 +128,11 @@ impl FeatureExtractor {
     }
 
     /// Allocating wrapper over [`FeatureExtractor::features_into`].
-    pub fn features(&mut self, variant: Variant, req: &Request) -> Vec<f32> {
+    pub fn features<'a>(
+        &mut self,
+        variant: Variant,
+        req: impl Into<RequestView<'a>>,
+    ) -> Vec<f32> {
         let mut row = Vec::with_capacity(variant.dim());
         self.features_into(variant, req, &mut row);
         row
@@ -128,21 +143,26 @@ impl FeatureExtractor {
     /// measured baseline for `benches/bench_predictor.rs`.  Bit-identical
     /// to [`FeatureExtractor::features_into`] — asserted by the golden
     /// tests.
-    pub fn features_baseline(&mut self, variant: Variant, req: &Request) -> Vec<f32> {
+    pub fn features_baseline<'a>(
+        &mut self,
+        variant: Variant,
+        req: impl Into<RequestView<'a>>,
+    ) -> Vec<f32> {
+        let req: RequestView<'a> = req.into();
         match variant {
             Variant::Uilo => panic!("UILO has no feature pipeline"),
             Variant::Raft => vec![req.user_input_len as f32],
             Variant::Inst => {
                 let mut row = Vec::with_capacity(1 + D_APP);
                 row.push(req.user_input_len as f32);
-                row.extend(self.instr_features_cloned(&req.instruction));
+                row.extend(self.instr_features_cloned(req.instruction));
                 row
             }
             Variant::Usin => {
                 let mut row = Vec::with_capacity(1 + D_APP + D_USER);
                 row.push(req.user_input_len as f32);
-                row.extend(self.instr_features_cloned(&req.instruction));
-                let ue = self.embedder.embed_baseline(&req.user_input);
+                row.extend(self.instr_features_cloned(req.instruction));
+                let ue = self.embedder.embed_baseline(req.user_input);
                 row.extend(compress(&ue, D_USER));
                 row
             }

@@ -1,15 +1,18 @@
 //! The generation-length predictor service (paper §III-B, Fig. 8).
 //!
 //! Wraps a feature pipeline + random forest(s) behind a simple
-//! `predict(&Request) -> u32` interface, supports the four Table-II
+//! `predict(view) -> u32` interface, supports the four Table-II
 //! variants, and implements the continuous-learning augmentation loop
 //! (collect badly-predicted requests, extend the train set, refit).
 //!
 //! Hot-path layout: the retained train set is a column-major
 //! [`ColMatrix`] (continuous learning appends rows, refits pass index
 //! views — no row is ever cloned), prediction reuses one feature-row
-//! scratch buffer, and [`GenLenPredictor::predict_many`] batches
-//! same-tick arrivals through the flattened forest trees-outer.
+//! scratch buffer, and [`GenLenPredictor::predict_many_views`] batches
+//! same-tick arrivals through the flattened forest trees-outer.  Every
+//! entry point takes a [`RequestView`] (or anything converting to one,
+//! e.g. `&Request`), so the serving path feeds the predictor borrowed
+//! arena slices and never clones request text.
 
 use crate::config::ServingConfig;
 use crate::predictor::data::ColMatrix;
@@ -17,7 +20,7 @@ use crate::predictor::features::{FeatureExtractor, Variant};
 use crate::predictor::forest::{Forest, ForestParams};
 use crate::predictor::tree::TreeParams;
 use crate::util::Rng;
-use crate::workload::{Request, TaskId};
+use crate::workload::{Request, RequestView, TaskId};
 
 /// A trained generation-length predictor.
 pub struct GenLenPredictor {
@@ -88,10 +91,11 @@ impl GenLenPredictor {
     /// Append one labelled request to the retained train set WITHOUT
     /// refitting — continuous-learning sweeps absorb a batch of rows,
     /// then call [`GenLenPredictor::refit`] once.  No-op for UILO.
-    pub fn absorb(&mut self, r: &Request) {
+    pub fn absorb<'a>(&mut self, r: impl Into<RequestView<'a>>) {
         if self.variant == Variant::Uilo {
             return;
         }
+        let r: RequestView<'a> = r.into();
         self.fx.features_into(self.variant, r, &mut self.row_buf);
         self.train_data.push_row(&self.row_buf);
         self.train_y.push(r.gen_len as f32);
@@ -152,8 +156,10 @@ impl GenLenPredictor {
         (raw.round().max(1.0) as u32).min(g_max)
     }
 
-    /// Predict G'(p), clamped to [1, G_max].
-    pub fn predict(&mut self, req: &Request) -> u32 {
+    /// Predict G'(p), clamped to [1, G_max].  Takes any request view
+    /// (`&Request`, or a zero-copy `TraceStore` view on the serving path).
+    pub fn predict<'a>(&mut self, req: impl Into<RequestView<'a>>) -> u32 {
+        let req: RequestView<'a> = req.into();
         let raw = match self.variant {
             Variant::Uilo => req.user_input_len as f32,
             Variant::Raft => {
@@ -179,24 +185,26 @@ impl GenLenPredictor {
         Self::clamp_raw(raw, self.g_max)
     }
 
-    /// Batch predict: same values, in order, as calling
-    /// [`GenLenPredictor::predict`] per request.  INST/USIN rows go
-    /// through the flattened forest trees-outer (one pass over the batch
-    /// per tree, arrays cache-hot); other variants fall back per row.
-    pub fn predict_many(&mut self, reqs: &[&Request], out: &mut Vec<u32>) {
+    /// Batch predict over borrowed views: same values, in order, as
+    /// calling [`GenLenPredictor::predict`] per request.  INST/USIN rows
+    /// go through the flattened forest trees-outer (one pass over the
+    /// batch per tree, arrays cache-hot); other variants fall back per
+    /// row.  This is the simulator's arrival path — the views borrow the
+    /// trace arena, so nothing is cloned.
+    pub fn predict_many_views(&mut self, views: &[RequestView<'_>], out: &mut Vec<u32>) {
         out.clear();
         let batched = matches!(self.variant, Variant::Inst | Variant::Usin)
             && self.global.is_some()
-            && reqs.len() > 1;
+            && views.len() > 1;
         if !batched {
-            for r in reqs {
-                out.push(self.predict(r));
+            for v in views {
+                out.push(self.predict(*v));
             }
             return;
         }
         self.batch_rows.clear();
-        for r in reqs {
-            self.fx.features_into(self.variant, r, &mut self.row_buf);
+        for v in views {
+            self.fx.features_into(self.variant, *v, &mut self.row_buf);
             self.batch_rows.extend_from_slice(&self.row_buf);
         }
         let forest = self.global.as_ref().unwrap();
@@ -206,6 +214,13 @@ impl GenLenPredictor {
                 .iter()
                 .map(|&raw| Self::clamp_raw(raw, self.g_max)),
         );
+    }
+
+    /// [`GenLenPredictor::predict_many_views`] over owned requests
+    /// (goldens/benches).
+    pub fn predict_many(&mut self, reqs: &[&Request], out: &mut Vec<u32>) {
+        let views: Vec<RequestView> = reqs.iter().map(|r| r.view()).collect();
+        self.predict_many_views(&views, out);
     }
 
     /// The trained INST/USIN forest, if any (benches and golden tests

@@ -10,6 +10,7 @@
 //! and engine — which is what makes the simulator's figures trustworthy.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -23,7 +24,7 @@ use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::predictor::GenLenPredictor;
 use crate::sim::MagnusPolicy;
-use crate::workload::{PredictedRequest, Request};
+use crate::workload::{PredictedRequest, Request, TraceStore};
 
 /// Live-serving policy.
 pub enum LivePolicy {
@@ -58,6 +59,10 @@ enum WorkerMsg {
     Done {
         worker: usize,
         batch: Batch,
+        /// Serving-time estimate captured at dispatch; riding the
+        /// round-trip kills the leader-side batch-id → estimate map (as
+        /// the simulator's in-flight events do).
+        est: f64,
         outcome: BatchOutcome,
     },
     Failed {
@@ -70,26 +75,53 @@ enum WorkerMsg {
     },
 }
 
-/// Replay `trace` through the live cluster; returns run metrics (times are
-/// in replayed seconds, i.e. wall seconds × time_scale, so they are
-/// comparable with trace arrival timestamps).
+/// Replay an owned `trace` through the live cluster; interns it once and
+/// delegates to [`serve_trace_store`].  Callers that can produce a
+/// [`TraceStore`] directly (JSON load via `TraceStore::from_json`,
+/// streaming generation) should use the store entry point and skip the
+/// owned `Vec<Request>` entirely — this wrapper holds both copies of the
+/// text alive for the run.
 pub fn serve_trace(
     cfg: &ServingConfig,
     opts: &ServeOptions,
     policy: LivePolicy,
-    mut predictor: Option<GenLenPredictor>,
+    predictor: Option<GenLenPredictor>,
     trace: &[Request],
 ) -> Result<RunMetrics> {
+    serve_trace_store(
+        cfg,
+        opts,
+        policy,
+        predictor,
+        Arc::new(TraceStore::from_requests(trace)),
+    )
+}
+
+/// Replay an interned trace through the live cluster; returns run
+/// metrics (times are in replayed seconds, i.e. wall seconds ×
+/// time_scale, so they are comparable with trace arrival timestamps).
+///
+/// Zero-copy: the leader admits compact metas, the workers resolve
+/// prompt text from the shared read-only arena, and the dispatch
+/// channels carry `Copy` records instead of cloned strings.
+pub fn serve_trace_store(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    mut predictor: Option<GenLenPredictor>,
+    store: Arc<TraceStore>,
+) -> Result<RunMetrics> {
     let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
-    let mut batch_txs: Vec<mpsc::Sender<Batch>> = Vec::new();
+    let mut batch_txs: Vec<mpsc::Sender<(Batch, f64)>> = Vec::new();
     let mut handles = Vec::new();
 
     for w in 0..opts.n_workers {
-        let (tx, rx) = mpsc::channel::<Batch>();
+        let (tx, rx) = mpsc::channel::<(Batch, f64)>();
         batch_txs.push(tx);
         let done = done_tx.clone();
         let dir = opts.artifacts_dir.clone();
         let warm = opts.warm_up;
+        let store = Arc::clone(&store);
         handles.push(std::thread::spawn(move || {
             // Engine constructed on the worker thread (PJRT is !Send).
             let mut srv = match PjrtBatchServer::load(&dir) {
@@ -112,12 +144,13 @@ pub fn serve_trace(
                 }
             }
             let _ = done.send(WorkerMsg::Ready { worker: w });
-            while let Ok(batch) = rx.recv() {
-                match srv.serve(&batch) {
+            while let Ok((batch, est)) = rx.recv() {
+                match srv.serve(&batch, &store) {
                     Ok(out) => {
                         let _ = done.send(WorkerMsg::Done {
                             worker: w,
                             batch,
+                            est,
                             outcome: out.outcome,
                         });
                     }
@@ -180,7 +213,6 @@ pub fn serve_trace(
     let mut metrics = RunMetrics::new();
     let mut idle: Vec<usize> = (0..opts.n_workers).collect();
     let mut next_batch_id_vanilla = 1_000_000u64;
-    let mut dispatch_est: std::collections::HashMap<u64, f64> = Default::default();
 
     let start = Instant::now();
     let scale = opts.time_scale.max(1e-9);
@@ -189,18 +221,20 @@ pub fn serve_trace(
     let mut next_arrival = 0usize;
     let mut completed = 0usize;
 
-    while completed < trace.len() {
+    while completed < store.len() {
         // 1. Admit every request whose (scaled) arrival time has passed.
+        //    Zero-copy: the meta is a few machine words and the predictor
+        //    borrows the prompt text straight from the shared arena.
         let now = now_replayed(start);
-        while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
-            let req = trace[next_arrival].clone();
+        while next_arrival < store.len() && store.meta(next_arrival).arrival <= now {
+            let meta = store.meta(next_arrival);
             next_arrival += 1;
             match (&policy, &mut predictor) {
                 (LivePolicy::Magnus(_), Some(p)) => {
-                    let predicted = p.predict(&req);
+                    let predicted = p.predict(store.view_of(&meta));
                     batcher.insert(
                         PredictedRequest {
-                            request: req,
+                            meta,
                             predicted_gen_len: predicted,
                         },
                         now,
@@ -210,10 +244,11 @@ pub fn serve_trace(
             }
         }
 
-        // 2. Dispatch to idle workers.
+        // 2. Dispatch to idle workers (the captured estimate rides the
+        //    worker round-trip; no leader-side map).
         while !idle.is_empty() {
             let now = now_replayed(start);
-            let batch = match &policy {
+            let (batch, est) = match &policy {
                 LivePolicy::Magnus(p) => {
                     if batcher.is_empty() {
                         break;
@@ -226,8 +261,7 @@ pub fn serve_trace(
                             estimator.estimate(shape)
                         })
                         .unwrap();
-                    dispatch_est.insert(batcher.queue()[pick].id, est);
-                    batcher.take(pick)
+                    (batcher.take(pick), est)
                 }
                 LivePolicy::Vanilla { fixed_batch } => {
                     if fifo.is_empty() {
@@ -238,7 +272,7 @@ pub fn serve_trace(
                     for _ in 0..take {
                         let i = fifo.pop_front().unwrap();
                         reqs.push(PredictedRequest {
-                            request: trace[i].clone(),
+                            meta: store.meta(i),
                             predicted_gen_len: 0,
                         });
                     }
@@ -247,16 +281,16 @@ pub fn serve_trace(
                         Batch::new(next_batch_id_vanilla, it.next().unwrap(), now);
                     next_batch_id_vanilla += 1;
                     b.requests.extend(it);
-                    b
+                    (b, 0.0)
                 }
             };
             let w = idle.pop().unwrap();
-            batch_txs[w].send(batch).expect("worker channel closed");
+            batch_txs[w].send((batch, est)).expect("worker channel closed");
         }
 
         // 3. Wait for the next completion or the next arrival deadline.
-        let timeout = if next_arrival < trace.len() {
-            let due = trace[next_arrival].arrival / scale;
+        let timeout = if next_arrival < store.len() {
+            let due = store.meta(next_arrival).arrival / scale;
             let elapsed = start.elapsed().as_secs_f64();
             Duration::from_secs_f64((due - elapsed).max(0.0).min(0.050))
         } else {
@@ -266,6 +300,7 @@ pub fn serve_trace(
             Ok(WorkerMsg::Done {
                 worker,
                 batch,
+                est,
                 outcome,
             }) => {
                 let now = now_replayed(start);
@@ -278,21 +313,21 @@ pub fn serve_trace(
                     for (pr, sr) in batch.requests.iter().zip(&per_request) {
                         metrics.record(RequestRecord {
                             request_id: sr.request_id,
-                            arrival: pr.request.arrival,
+                            arrival: pr.meta.arrival,
                             finish: now,
                             valid_tokens: sr.valid_tokens,
                             invalid_tokens: sr.invalid_tokens,
                         });
                         db.log_request(RequestLog {
-                            request: pr.request.clone(),
+                            meta: pr.meta,
                             predicted_gen_len: pr.predicted_gen_len,
-                            actual_gen_len: pr.request.gen_len,
+                            actual_gen_len: pr.meta.gen_len,
                             at: now,
                         });
                     }
                     db.log_batch(BatchLog {
                         shape: batch.true_shape(),
-                        estimated_time: dispatch_est.remove(&batch.id).unwrap_or(0.0),
+                        estimated_time: est,
                         // serving_time is wall seconds; scale into replayed
                         // seconds so HRRN compares like with like.
                         actual_time: serving_time * scale,

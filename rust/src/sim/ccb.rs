@@ -16,7 +16,7 @@ use crate::config::ServingConfig;
 use crate::engine::InferenceEngine;
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::sim::events::EventQueue;
-use crate::workload::Request;
+use crate::workload::{Request, RequestMeta, TraceStore};
 
 #[derive(Debug, Clone)]
 struct Running {
@@ -33,12 +33,34 @@ enum Event {
     Iter(usize),
 }
 
-/// Run CCB with `parallel_limit` concurrent requests per instance.
+/// Run CCB over an owned trace (metas are extracted once; CCB reads only
+/// lengths/ids, never text).
 pub fn run_ccb(
     cfg: &ServingConfig,
     parallel_limit: u32,
     engine: &dyn InferenceEngine,
     trace: &[Request],
+) -> RunMetrics {
+    let metas: Vec<RequestMeta> = trace.iter().map(RequestMeta::detached).collect();
+    run_ccb_metas(cfg, parallel_limit, engine, &metas)
+}
+
+/// Run CCB over an interned [`TraceStore`] (zero-copy).
+pub fn run_ccb_store(
+    cfg: &ServingConfig,
+    parallel_limit: u32,
+    engine: &dyn InferenceEngine,
+    store: &TraceStore,
+) -> RunMetrics {
+    run_ccb_metas(cfg, parallel_limit, engine, store.metas())
+}
+
+/// Run CCB with `parallel_limit` concurrent requests per instance.
+fn run_ccb_metas(
+    cfg: &ServingConfig,
+    parallel_limit: u32,
+    engine: &dyn InferenceEngine,
+    trace: &[RequestMeta],
 ) -> RunMetrics {
     let mut metrics = RunMetrics::new();
     let mut events: EventQueue<Event> = EventQueue::new();
@@ -64,7 +86,7 @@ pub fn run_ccb(
                  ctx_sum: &mut u64,
                  fifo: &mut VecDeque<usize>,
                  engine: &dyn InferenceEngine,
-                 trace: &[Request]|
+                 trace: &[RequestMeta]|
      -> f64 {
         let mut stall = 0.0;
         while running.len() < parallel_limit as usize && !fifo.is_empty() {
@@ -219,5 +241,18 @@ mod tests {
         let (cfg, engine, trace) = setup(30, 5.0);
         let m = run_ccb(&cfg, 1, &engine, &trace);
         assert_eq!(m.records.len(), 30);
+    }
+
+    #[test]
+    fn store_path_replays_owned_path() {
+        let (cfg, engine, trace) = setup(120, 3.0);
+        let store = TraceStore::from_requests(&trace);
+        let a = run_ccb(&cfg, 7, &engine, &trace);
+        let b = run_ccb_store(&cfg, 7, &engine, &store);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.request_id, y.request_id);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
     }
 }

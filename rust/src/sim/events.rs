@@ -60,11 +60,21 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
+    /// Heap order: (time, seq) ascending.  `total_cmp` keeps the
+    /// comparison a total order even on a NaN time (consistent with the
+    /// PR-3 NaN-safe sweep of the scheduler/predictor sorts) — the
+    /// finite-time `debug_assert` in [`EventQueue::push`] still flags the
+    /// bug in debug builds, but release builds order deterministically
+    /// instead of panicking mid-run.  Behaviour-preserving for every
+    /// time the sim produces: `total_cmp` and `partial_cmp` agree on all
+    /// non-NaN, non-signed-zero floats, and sim times are sums of
+    /// non-negative terms (never `-0.0`; if one ever appeared it would
+    /// deterministically sort before `+0.0` — see the signed-zero test).
     #[inline]
     fn less(&self, a: usize, b: usize) -> bool {
         let (ta, sa, _) = &self.heap[a];
         let (tb, sb, _) = &self.heap[b];
-        match ta.partial_cmp(tb).unwrap() {
+        match ta.total_cmp(tb) {
             std::cmp::Ordering::Less => true,
             std::cmp::Ordering::Greater => false,
             std::cmp::Ordering::Equal => sa < sb,
@@ -149,6 +159,25 @@ mod tests {
             }
             assert_eq!(count, n);
         });
+    }
+
+    #[test]
+    fn signed_zero_orders_deterministically() {
+        // total_cmp puts -0.0 before +0.0 from either insertion order —
+        // the point of the NaN-safe sweep is that ordering never depends
+        // on push sequence for distinct bit patterns.
+        for flip in [false, true] {
+            let mut q = EventQueue::new();
+            if flip {
+                q.push(0.0, "pos");
+                q.push(-0.0, "neg");
+            } else {
+                q.push(-0.0, "neg");
+                q.push(0.0, "pos");
+            }
+            assert_eq!(q.pop().unwrap().1, "neg");
+            assert_eq!(q.pop().unwrap().1, "pos");
+        }
     }
 
     #[test]

@@ -2,6 +2,15 @@
 //! ablations): predictor → WMA batcher → serving-time estimator → batch
 //! scheduler → N instances, with OOM-split recovery and continuous
 //! learning — the full Fig. 7 workflow over the cost-model engine.
+//!
+//! The pipeline is **zero-copy**: requests arrive from a
+//! [`TraceStore`] as `Copy` [`RequestMeta`]s, the predictor borrows text
+//! straight from the store's arena, and completions log metas — no
+//! per-request `String` is cloned anywhere on the arrival → dispatch →
+//! logging path.  The owned-`Request` entry points
+//! ([`run_magnus`]/[`run_magnus_with`]) intern their trace once and run
+//! the same compact core; `sim::reference` keeps the owned-`Request`
+//! pipeline alive as the golden/scale baseline.
 
 use std::collections::VecDeque;
 
@@ -16,7 +25,7 @@ use crate::predictor::GenLenPredictor;
 use crate::scheduler::{select, view_of, BatchView};
 use crate::sim::events::EventQueue;
 use crate::sim::OOM_RELOAD_S;
-use crate::workload::{PredictedRequest, Request};
+use crate::workload::{PredictedRequest, Request, RequestView, TraceStore};
 
 /// How the dispatch loop picks the next batch.
 ///
@@ -81,8 +90,11 @@ impl MagnusPolicy {
 
 enum Event {
     Arrival(usize),
-    /// Instance finished serving a batch.
-    BatchDone(usize, Batch, BatchOutcome),
+    /// Instance finished serving a batch.  Carries the serving-time
+    /// estimate captured at dispatch, so completion logging needs no
+    /// side map (the seed kept a per-run `HashMap<batch id, f64>` that
+    /// churned under OOM re-dispatches).
+    BatchDone(usize, Batch, f64, BatchOutcome),
     /// Instance recovered from an OOM reload.
     InstanceReady(usize),
 }
@@ -97,10 +109,11 @@ pub struct SimOutput {
     pub est_errors: Vec<(f64, f64)>,
 }
 
-/// Run the Magnus-family pipeline over `trace` on `engine`.
+/// Run the Magnus-family pipeline over an owned `trace` on `engine`.
 ///
 /// The predictor must already be trained (the paper trains on a held-out
-/// 2 500-request split before serving, §IV-A).
+/// 2 500-request split before serving, §IV-A).  Interns the trace into a
+/// [`TraceStore`] (one pass) and runs the zero-copy core.
 pub fn run_magnus(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
@@ -115,9 +128,35 @@ pub fn run_magnus(
 pub fn run_magnus_with(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
-    mut predictor: GenLenPredictor,
+    predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
     trace: &[Request],
+    mode: DispatchMode,
+) -> SimOutput {
+    let store = TraceStore::from_requests(trace);
+    run_magnus_store_with(cfg, policy, predictor, engine, &store, mode)
+}
+
+/// Run the Magnus-family pipeline over an interned [`TraceStore`] — the
+/// zero-copy scale path (a million-request store flows through without a
+/// single per-request text clone).
+pub fn run_magnus_store(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
+    predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    store: &TraceStore,
+) -> SimOutput {
+    run_magnus_store_with(cfg, policy, predictor, engine, store, DispatchMode::Indexed)
+}
+
+/// [`run_magnus_store`] with an explicit [`DispatchMode`].
+pub fn run_magnus_store_with(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
+    mut predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    store: &TraceStore,
     mode: DispatchMode,
 ) -> SimOutput {
     let mut batcher = AdaptiveBatcher::new(BatcherConfig {
@@ -134,21 +173,18 @@ pub fn run_magnus_with(
     let mut est_errors = Vec::new();
 
     let mut events: EventQueue<Event> = EventQueue::new();
-    for (i, r) in trace.iter().enumerate() {
-        events.push(r.arrival, Event::Arrival(i));
+    for (i, m) in store.metas().iter().enumerate() {
+        events.push(m.arrival, Event::Arrival(i));
     }
 
     let mut idle: VecDeque<usize> = (0..cfg.n_instances).collect();
-    // Estimates captured at dispatch time, keyed by batch id (for logging).
-    let mut dispatch_est: std::collections::HashMap<u64, f64> =
-        std::collections::HashMap::new();
 
     let mut served = 0usize;
     // Scratch buffers reused across events (no per-event allocation in
     // the hot path).
     let mut views: Vec<BatchView> = Vec::new();
     let mut arrivals: Vec<usize> = Vec::new();
-    let mut arrival_reqs: Vec<&Request> = Vec::new();
+    let mut arrival_views: Vec<RequestView> = Vec::new();
     let mut preds: Vec<u32> = Vec::new();
     while let Some((now, ev)) = events.pop() {
         match ev {
@@ -171,21 +207,21 @@ pub fn run_magnus_with(
                         _ => break,
                     }
                 }
-                arrival_reqs.clear();
-                arrival_reqs.extend(arrivals.iter().map(|&k| &trace[k]));
-                predictor.predict_many(&arrival_reqs, &mut preds);
+                arrival_views.clear();
+                arrival_views.extend(arrivals.iter().map(|&k| store.view(k)));
+                predictor.predict_many_views(&arrival_views, &mut preds);
                 for (k, &ti) in arrivals.iter().enumerate() {
-                    let req = trace[ti].clone();
+                    let meta = store.meta(ti);
                     let predicted = preds[k];
                     // Fig. 14a telemetry: error of the prediction *as
                     // made*, binned by prediction time (completion-time
                     // binning would confound scheduler ordering with
                     // predictor quality).
                     pred_errors
-                        .push((now, (predicted as f64 - req.gen_len as f64).abs()));
+                        .push((now, (predicted as f64 - meta.gen_len as f64).abs()));
                     batcher.insert(
                         PredictedRequest {
-                            request: req,
+                            meta,
                             predicted_gen_len: predicted,
                         },
                         now,
@@ -200,12 +236,11 @@ pub fn run_magnus_with(
                         &mut idle,
                         &mut views,
                         &mut events,
-                        &mut dispatch_est,
                         &mut metrics,
                     );
                 }
             }
-            Event::BatchDone(inst, batch, outcome) => {
+            Event::BatchDone(inst, batch, est, outcome) => {
                 match outcome {
                     BatchOutcome::Completed {
                         serving_time,
@@ -215,19 +250,18 @@ pub fn run_magnus_with(
                         for (pr, sr) in batch.requests.iter().zip(&per_request) {
                             metrics.record(RequestRecord {
                                 request_id: sr.request_id,
-                                arrival: pr.request.arrival,
+                                arrival: pr.meta.arrival,
                                 finish: now,
                                 valid_tokens: sr.valid_tokens,
                                 invalid_tokens: sr.invalid_tokens,
                             });
                             db.log_request(RequestLog {
-                                request: pr.request.clone(),
+                                meta: pr.meta,
                                 predicted_gen_len: pr.predicted_gen_len,
-                                actual_gen_len: pr.request.gen_len,
+                                actual_gen_len: pr.meta.gen_len,
                                 at: now,
                             });
                         }
-                        let est = dispatch_est.remove(&batch.id).unwrap_or(0.0);
                         est_errors.push((now, (est - serving_time).abs()));
                         db.log_batch(BatchLog {
                             shape: batch.true_shape(),
@@ -242,7 +276,7 @@ pub fn run_magnus_with(
                     }
                 }
                 if policy.use_estimator {
-                    learner.tick(now, &db, &mut predictor, &mut estimator);
+                    learner.tick(now, &db, &mut predictor, &mut estimator, store);
                 }
                 idle.push_back(inst);
             }
@@ -262,12 +296,11 @@ pub fn run_magnus_with(
             &mut idle,
             &mut views,
             &mut events,
-            &mut dispatch_est,
             &mut metrics,
         );
     }
 
-    debug_assert_eq!(served, trace.len(), "all requests must complete");
+    debug_assert_eq!(served, store.len(), "all requests must complete");
     SimOutput {
         metrics,
         db,
@@ -292,7 +325,6 @@ fn dispatch_idle(
     idle: &mut VecDeque<usize>,
     views: &mut Vec<BatchView>,
     events: &mut EventQueue<Event>,
-    dispatch_est: &mut std::collections::HashMap<u64, f64>,
     metrics: &mut RunMetrics,
 ) {
     while !idle.is_empty() && !batcher.is_empty() {
@@ -353,8 +385,7 @@ fn dispatch_idle(
                     BatchOutcome::Completed { serving_time, .. } => *serving_time,
                     _ => unreachable!(),
                 };
-                dispatch_est.insert(batch.id, est);
-                events.push(now + serving_time, Event::BatchDone(inst, batch, done));
+                events.push(now + serving_time, Event::BatchDone(inst, batch, est, done));
             }
         }
     }
@@ -451,6 +482,22 @@ mod tests {
             assert_eq!(sa.request_throughput.to_bits(), sb.request_throughput.to_bits());
             assert_eq!(sa.mean_response_time.to_bits(), sb.mean_response_time.to_bits());
             assert_eq!(sa.token_throughput.to_bits(), sb.token_throughput.to_bits());
+        }
+    }
+
+    /// The store entry point is the same computation as the owned entry
+    /// point — interning changes representation, not behaviour.
+    #[test]
+    fn store_and_owned_entry_points_agree() {
+        let (cfg, p, engine, trace) = setup(250, 6.0);
+        let (_, p2, _, _) = setup(250, 6.0);
+        let store = TraceStore::from_requests(&trace);
+        let a = run_magnus_store(&cfg, &MagnusPolicy::magnus(), p, &engine, &store);
+        let b = run_magnus(&cfg, &MagnusPolicy::magnus(), p2, &engine, &trace);
+        assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+        for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+            assert_eq!(x.request_id, y.request_id);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
         }
     }
 

@@ -7,6 +7,7 @@
 pub mod ccb;
 pub mod events;
 pub mod magnus;
+pub mod reference;
 pub mod vanilla;
 
 use crate::config::ServingConfig;
@@ -15,10 +16,14 @@ use crate::engine::quantized::QuantizedEngine;
 use crate::metrics::Summary;
 use crate::predictor::{GenLenPredictor, Variant};
 use crate::workload::dataset::build_predictor_split;
-use crate::workload::{LlmProfile, Request};
+use crate::workload::{LlmProfile, Request, TraceStore};
 
 pub use events::EventQueue;
-pub use magnus::{run_magnus, run_magnus_with, DispatchMode, MagnusPolicy, SimOutput};
+pub use magnus::{
+    run_magnus, run_magnus_store, run_magnus_store_with, run_magnus_with, DispatchMode,
+    MagnusPolicy, SimOutput,
+};
+pub use reference::run_magnus_owned;
 
 /// Post-OOM reload penalty (empty GPU memory + reload LLM, §III-F),
 /// shared by the simulator backends.
@@ -99,47 +104,70 @@ pub fn run_policy(
     trace: &[Request],
     predictor_train: usize,
 ) -> SimOutput {
+    // One interning pass, then the zero-copy core — the policy arms live
+    // only in `run_policy_store`, so the two entry points cannot drift.
+    run_policy_store(
+        cfg,
+        policy,
+        &TraceStore::from_requests(trace),
+        predictor_train,
+    )
+}
+
+/// [`run_policy`] over an interned [`TraceStore`] — the zero-copy entry
+/// point for every policy (no owned `Vec<Request>` is ever materialised).
+pub fn run_policy_store(
+    cfg: &ServingConfig,
+    policy: Policy,
+    store: &TraceStore,
+    predictor_train: usize,
+) -> SimOutput {
     let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
     match policy {
-        Policy::Vs => wrap(vanilla::run_vanilla(
+        Policy::Vs => wrap(vanilla::run_vanilla_store(
             cfg,
             cfg.gpu.vanilla_batch_size(),
             &engine,
-            trace,
+            store,
         )),
         Policy::Vsq => {
             let q = QuantizedEngine::new(
                 CostModelEngine::new(cfg.cost.clone(), &cfg.gpu),
                 cfg.quant.clone(),
             );
-            wrap(vanilla::run_vanilla(cfg, cfg.quant.batch_size, &q, trace))
+            wrap(vanilla::run_vanilla_store(
+                cfg,
+                cfg.quant.batch_size,
+                &q,
+                store,
+            ))
         }
-        Policy::Ccb => wrap(ccb::run_ccb(
+        Policy::Ccb => wrap(ccb::run_ccb_store(
             cfg,
             cfg.gpu.vanilla_batch_size(),
             &engine,
-            trace,
+            store,
         )),
-        Policy::Glp => run_magnus(
+        Policy::Glp => run_magnus_store(
             cfg,
             &MagnusPolicy::glp(cfg.gpu.vanilla_batch_size()),
             trained_predictor(cfg, predictor_train),
             &engine,
-            trace,
+            store,
         ),
-        Policy::Abp => run_magnus(
+        Policy::Abp => run_magnus_store(
             cfg,
             &MagnusPolicy::abp(),
             trained_predictor(cfg, predictor_train),
             &engine,
-            trace,
+            store,
         ),
-        Policy::Magnus => run_magnus(
+        Policy::Magnus => run_magnus_store(
             cfg,
             &MagnusPolicy::magnus(),
             trained_predictor(cfg, predictor_train),
             &engine,
-            trace,
+            store,
         ),
     }
 }
@@ -230,6 +258,47 @@ mod tests {
         assert!(magnus.request_throughput > abp.request_throughput * 0.9);
         // HRRN reduces response time without hurting throughput.
         assert!(magnus.mean_response_time <= abp.mean_response_time * 1.05);
+    }
+
+    /// The store entry point wires every policy arm exactly like the
+    /// owned entry point (zero-copy changes representation, not
+    /// behaviour — bitwise on the summary metrics).
+    #[test]
+    fn run_policy_store_matches_run_policy_for_every_policy() {
+        let cfg = ServingConfig::default();
+        let spec = TraceSpec {
+            rate: 3.0,
+            n_requests: 80,
+            seed: 55,
+            ..Default::default()
+        };
+        let trace = generate_trace(&spec);
+        let store = TraceStore::generate(&spec);
+        for policy in Policy::ALL {
+            let a = run_policy(&cfg, policy, &trace, 20).metrics.summarise();
+            let b = run_policy_store(&cfg, policy, &store, 20)
+                .metrics
+                .summarise();
+            assert_eq!(a.n_requests, b.n_requests, "{}", policy.name());
+            assert_eq!(
+                a.request_throughput.to_bits(),
+                b.request_throughput.to_bits(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(
+                a.mean_response_time.to_bits(),
+                b.mean_response_time.to_bits(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(
+                a.token_throughput.to_bits(),
+                b.token_throughput.to_bits(),
+                "{}",
+                policy.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! The **owned-`Request` reference pipeline** — the pre-zero-copy shape
+//! of the Magnus simulator, kept alive for two jobs:
+//!
+//! 1. **Golden equivalence.**  This module carries owned `Request`
+//!    clones end to end (clone at arrival, clone into an owned log at
+//!    completion), evaluates Algorithm 1 by scanning batch members with
+//!    the raw Eq. 2–5 formulas (`batch::wma`), ranks batches with fresh
+//!    `scheduler::select` views, and replicates the continuous-learning
+//!    sweeps over its own owned logs.  It shares none of the compact
+//!    pipeline's incremental structures, so
+//!    `tests/store_equivalence.rs` comparing the two bit-for-bit is a
+//!    genuine cross-implementation golden, not a tautology.
+//! 2. **Scale baseline.**  `benches/bench_sim`'s scale mode times this
+//!    path against the `TraceStore` path (`BENCH_scale.json`).  Note
+//!    what the gap measures: this reference is the owned representation
+//!    in its **pre-overhaul algorithmic shape** (naive member rescans,
+//!    fresh linear-scan select), so the measured ratio bundles the
+//!    PR 1–3 scheduling wins with PR 4's clone/alloc-tax removal — it is
+//!    the whole-trajectory gap, not PR 4's share alone.  (An
+//!    owned-representation run over the indexed batcher no longer
+//!    exists: the batcher itself is meta-typed now.)  PR 4's own share
+//!    shows in the peak-byte column and in the 10⁶ row the compact path
+//!    completes.
+//!
+//! The only compact types it touches are at the engine boundary: the
+//! `InferenceEngine` trait takes a `Batch` of metas, so each dispatch
+//! materialises one from the owned members via [`RequestMeta::detached`]
+//! (numbers only; the engine never resolves text).
+
+use std::collections::VecDeque;
+
+use crate::batch::wma::{mem_bytes, wma_gen, wma_wait};
+use crate::batch::Batch;
+use crate::config::{LearningConfig, ServingConfig};
+use crate::engine::{BatchOutcome, InferenceEngine};
+use crate::estimator::{BatchShape, ServingTimeEstimator};
+use crate::logdb::{BatchLog, LogDb, RequestLog};
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::predictor::GenLenPredictor;
+use crate::scheduler::{select, BatchView};
+use crate::sim::events::EventQueue;
+use crate::sim::magnus::{MagnusPolicy, SimOutput};
+use crate::sim::OOM_RELOAD_S;
+use crate::workload::{PredictedRequest, Request, RequestMeta};
+
+/// A queued batch holding owned request clones.
+struct OwnedBatch {
+    id: u64,
+    created_at: f64,
+    insertable: bool,
+    /// (owned request, predicted G') in insertion order.
+    members: Vec<(Request, u32)>,
+}
+
+impl OwnedBatch {
+    fn len(&self) -> u32 {
+        self.members.iter().map(|m| m.0.request_len).max().unwrap_or(0)
+    }
+
+    fn predicted_gen(&self) -> u32 {
+        self.members.iter().map(|m| m.1).max().unwrap_or(0)
+    }
+
+    fn true_gen(&self) -> u32 {
+        self.members.iter().map(|m| m.0.gen_len).max().unwrap_or(0)
+    }
+
+    fn min_arrival(&self) -> f64 {
+        self.members
+            .iter()
+            .map(|m| m.0.arrival)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn predicted_shape(&self) -> BatchShape {
+        BatchShape {
+            batch_size: self.members.len() as u32,
+            batch_len: self.len(),
+            batch_gen_len: self.predicted_gen(),
+        }
+    }
+
+    fn true_shape(&self) -> BatchShape {
+        BatchShape {
+            batch_size: self.members.len() as u32,
+            batch_len: self.len(),
+            batch_gen_len: self.true_gen(),
+        }
+    }
+
+    /// The engine-boundary batch (numeric metas only).
+    fn to_engine_batch(&self) -> Batch {
+        Batch {
+            id: self.id,
+            requests: self
+                .members
+                .iter()
+                .map(|(r, p)| PredictedRequest {
+                    meta: RequestMeta::detached(r),
+                    predicted_gen_len: *p,
+                })
+                .collect(),
+            created_at: self.created_at,
+            insertable: self.insertable,
+        }
+    }
+
+    /// §III-C OOM split — same semantics as `Batch::split`: stable sort
+    /// by request length, halve, both halves uninsertable, left keeps
+    /// the id.
+    fn split(mut self, next_id: u64) -> (OwnedBatch, OwnedBatch) {
+        self.members.sort_by_key(|m| m.0.request_len);
+        let half = self.members.len() / 2;
+        let right = self.members.split_off(half);
+        (
+            OwnedBatch {
+                id: self.id,
+                created_at: self.created_at,
+                insertable: false,
+                members: self.members,
+            },
+            OwnedBatch {
+                id: next_id,
+                created_at: self.created_at,
+                insertable: false,
+                members: right,
+            },
+        )
+    }
+}
+
+/// Algorithm 1 over owned batches, evaluated naively: WMA(B ∪ {p}) from
+/// the raw Eq. 2–4 member scan (integer-exact, so decisions match the
+/// batcher's O(1) decomposition bit for bit), MEM from Eq. 5, min-WMA
+/// ties broken by batch id, threshold Φ compared in f64 exactly like
+/// `AdaptiveBatcher::insert`.
+#[allow(clippy::too_many_arguments)]
+fn insert_owned(
+    queue: &mut Vec<OwnedBatch>,
+    next_batch_id: &mut u64,
+    wma_threshold: f64,
+    theta: u64,
+    delta: u64,
+    max_batch_size: u32,
+    req: Request,
+    predicted: u32,
+    now: f64,
+) {
+    let mut best: Option<usize> = None;
+    let mut best_w = u64::MAX;
+    let mut best_id = u64::MAX;
+    for (i, b) in queue.iter().enumerate() {
+        if !b.insertable {
+            continue;
+        }
+        if max_batch_size > 0 && b.members.len() as u32 >= max_batch_size {
+            continue;
+        }
+        let new_len = b.len().max(req.request_len);
+        let new_gen = b.predicted_gen().max(predicted);
+        if mem_bytes(b.members.len() as u32 + 1, new_len, new_gen, delta) > theta {
+            continue;
+        }
+        let mut w = wma_gen(req.request_len, predicted, new_len)
+            + wma_wait(predicted, new_gen, new_len);
+        for (m, p) in &b.members {
+            w = w.max(
+                wma_gen(m.request_len, *p, new_len) + wma_wait(*p, new_gen, new_len),
+            );
+        }
+        if w < best_w || (w == best_w && b.id < best_id) {
+            best_w = w;
+            best = Some(i);
+            best_id = b.id;
+        }
+    }
+    match best {
+        Some(i) if (best_w as f64) < wma_threshold => {
+            queue[i].members.push((req, predicted));
+        }
+        _ => {
+            queue.push(OwnedBatch {
+                id: *next_batch_id,
+                created_at: now,
+                insertable: true,
+                members: vec![(req, predicted)],
+            });
+            *next_batch_id += 1;
+        }
+    }
+}
+
+/// The §III-B / §III-D continuous-learning sweeps replicated over owned
+/// logs (same periods, thresholds, cursors and call order as
+/// `learning::ContinuousLearner`).
+struct OwnedLearner {
+    cfg: LearningConfig,
+    last_pred_sweep: f64,
+    last_est_sweep: f64,
+    pred_cursor: usize,
+    est_cursor: usize,
+}
+
+impl OwnedLearner {
+    fn new(cfg: LearningConfig) -> OwnedLearner {
+        OwnedLearner {
+            cfg,
+            last_pred_sweep: 0.0,
+            last_est_sweep: 0.0,
+            pred_cursor: 0,
+            est_cursor: 0,
+        }
+    }
+
+    fn tick(
+        &mut self,
+        now: f64,
+        req_log: &[(Request, u32, f64)],
+        batch_log: &[(BatchShape, f64, f64, f64)],
+        predictor: &mut GenLenPredictor,
+        estimator: &mut ServingTimeEstimator,
+    ) {
+        if now - self.last_pred_sweep >= self.cfg.predictor_period_s {
+            self.last_pred_sweep = now;
+            let mut n_bad = 0usize;
+            for (req, predicted, _at) in &req_log[self.pred_cursor..] {
+                let err = (*predicted as f64 - req.gen_len as f64).abs();
+                if err > self.cfg.predictor_err_tokens
+                    && err > self.cfg.predictor_err_frac * req.gen_len as f64
+                {
+                    n_bad += 1;
+                    predictor.absorb(req);
+                }
+            }
+            self.pred_cursor = req_log.len();
+            if n_bad > 0 {
+                predictor.refit();
+            }
+        }
+        if now - self.last_est_sweep >= self.cfg.estimator_period_s {
+            self.last_est_sweep = now;
+            let mut shapes: Vec<BatchShape> = Vec::new();
+            let mut times: Vec<f64> = Vec::new();
+            for (shape, _est, actual, _at) in &batch_log[self.est_cursor..] {
+                let repredicted = estimator.estimate(shape);
+                let err = (repredicted - actual).abs();
+                if err > self.cfg.estimator_err_s
+                    && err > self.cfg.estimator_err_frac * actual
+                {
+                    shapes.push(*shape);
+                    times.push(*actual);
+                }
+            }
+            self.est_cursor = batch_log.len();
+            if !shapes.is_empty() {
+                estimator.augment_and_refit(&shapes, &times);
+            }
+        }
+    }
+}
+
+enum Event {
+    Arrival(usize),
+    BatchDone(usize, OwnedBatch, f64, BatchOutcome),
+    InstanceReady(usize),
+}
+
+/// Run the Magnus-family pipeline carrying owned `Request`s end to end —
+/// the pre-refactor allocation profile (clone per arrival, clone per log
+/// entry, member rescans per decision).  Behaviour is bit-identical to
+/// the compact path; cost is what `BENCH_scale.json` measures against.
+pub fn run_magnus_owned(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
+    mut predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    trace: &[Request],
+) -> SimOutput {
+    let wma_threshold = cfg.wma_threshold;
+    let theta = (cfg.gpu.theta() as f64 * cfg.mem_margin) as u64;
+    let delta = cfg.gpu.delta_bytes_per_token;
+
+    let mut estimator = ServingTimeEstimator::new(cfg.knn_k);
+    let mut learner = OwnedLearner::new(cfg.learning.clone());
+    let mut metrics = RunMetrics::new();
+    let mut pred_errors = Vec::new();
+    let mut est_errors = Vec::new();
+    // Owned logs: every completion clones its request back out — the
+    // second copy of the owned path's per-request tax.
+    let mut req_log: Vec<(Request, u32, f64)> = Vec::new();
+    let mut batch_log: Vec<(BatchShape, f64, f64, f64)> = Vec::new();
+
+    let mut events: EventQueue<Event> = EventQueue::new();
+    for (i, r) in trace.iter().enumerate() {
+        events.push(r.arrival, Event::Arrival(i));
+    }
+
+    let mut queue: Vec<OwnedBatch> = Vec::new();
+    let mut next_batch_id = 0u64;
+    let mut idle: VecDeque<usize> = (0..cfg.n_instances).collect();
+    let mut served = 0usize;
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Arrival(i) => {
+                // First copy of the owned tax: the arrival clone.
+                let req = trace[i].clone();
+                let predicted = predictor.predict(&req);
+                pred_errors.push((now, (predicted as f64 - req.gen_len as f64).abs()));
+                insert_owned(
+                    &mut queue,
+                    &mut next_batch_id,
+                    wma_threshold,
+                    theta,
+                    delta,
+                    policy.max_batch_size,
+                    req,
+                    predicted,
+                    now,
+                );
+            }
+            Event::BatchDone(inst, batch, est, outcome) => {
+                match outcome {
+                    BatchOutcome::Completed {
+                        serving_time,
+                        per_request,
+                    } => {
+                        served += per_request.len();
+                        for ((req, predicted), sr) in batch.members.iter().zip(&per_request) {
+                            metrics.record(RequestRecord {
+                                request_id: sr.request_id,
+                                arrival: req.arrival,
+                                finish: now,
+                                valid_tokens: sr.valid_tokens,
+                                invalid_tokens: sr.invalid_tokens,
+                            });
+                            req_log.push((req.clone(), *predicted, now));
+                        }
+                        est_errors.push((now, (est - serving_time).abs()));
+                        batch_log.push((batch.true_shape(), est, serving_time, now));
+                    }
+                    BatchOutcome::Oom { .. } => unreachable!("OOM resolved at dispatch"),
+                }
+                if policy.use_estimator {
+                    learner.tick(now, &req_log, &batch_log, &mut predictor, &mut estimator);
+                }
+                idle.push_back(inst);
+            }
+            Event::InstanceReady(inst) => idle.push_back(inst),
+        }
+
+        // Dispatch: fresh views + linear-scan select, every round.
+        while !idle.is_empty() && !queue.is_empty() {
+            let views: Vec<BatchView> = queue
+                .iter()
+                .map(|b| BatchView {
+                    queuing_time: (now - b.min_arrival()).max(0.0),
+                    est_serving_time: estimator.estimate(&b.predicted_shape()),
+                    created_at: b.created_at,
+                    batch_id: b.id,
+                })
+                .collect();
+            let pick = select(policy.sched, &views).unwrap();
+            let est = views[pick].est_serving_time;
+            let batch = queue.remove(pick);
+            let inst = idle.pop_front().unwrap();
+
+            match engine.serve_batch(&batch.to_engine_batch()) {
+                BatchOutcome::Oom {
+                    at_iteration: _,
+                    wasted_time,
+                } => {
+                    metrics.record_oom();
+                    let nid = next_batch_id;
+                    next_batch_id += 1;
+                    let (l, r) = batch.split(nid);
+                    queue.push(l);
+                    queue.push(r);
+                    events.push(
+                        now + wasted_time + OOM_RELOAD_S,
+                        Event::InstanceReady(inst),
+                    );
+                }
+                done @ BatchOutcome::Completed { .. } => {
+                    let serving_time = match &done {
+                        BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                        _ => unreachable!(),
+                    };
+                    events.push(now + serving_time, Event::BatchDone(inst, batch, est, done));
+                }
+            }
+        }
+    }
+
+    debug_assert_eq!(served, trace.len(), "all requests must complete");
+
+    // Materialise the logs in the shared output form (outside any timed
+    // path; counts/telemetry feed the golden comparison).
+    let db = LogDb::new();
+    for (req, predicted, at) in &req_log {
+        db.log_request(RequestLog {
+            meta: RequestMeta::detached(req),
+            predicted_gen_len: *predicted,
+            actual_gen_len: req.gen_len,
+            at: *at,
+        });
+    }
+    for (shape, est, actual, at) in &batch_log {
+        db.log_batch(BatchLog {
+            shape: *shape,
+            estimated_time: *est,
+            actual_time: *actual,
+            at: *at,
+        });
+    }
+    SimOutput {
+        metrics,
+        db,
+        pred_errors,
+        est_errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::CostModelEngine;
+    use crate::predictor::Variant;
+    use crate::sim::run_magnus;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::{generate_trace, LlmProfile, TraceSpec};
+
+    #[test]
+    fn owned_reference_completes_and_matches_compact_counts() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 80, 5, 1024, 30);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let mut p2 = GenLenPredictor::new(Variant::Usin, &cfg);
+        p2.train(&split.train);
+        let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+        let trace = generate_trace(&TraceSpec {
+            rate: 5.0,
+            n_requests: 180,
+            seed: 3,
+            ..Default::default()
+        });
+        let owned = run_magnus_owned(&cfg, &MagnusPolicy::magnus(), p, &engine, &trace);
+        let compact = run_magnus(&cfg, &MagnusPolicy::magnus(), p2, &engine, &trace);
+        assert_eq!(owned.metrics.records.len(), 180);
+        assert_eq!(owned.db.n_requests(), compact.db.n_requests());
+        assert_eq!(owned.db.n_batches(), compact.db.n_batches());
+        for (x, y) in owned.metrics.records.iter().zip(&compact.metrics.records) {
+            assert_eq!(x.request_id, y.request_id);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+    }
+}

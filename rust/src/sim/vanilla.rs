@@ -1,6 +1,10 @@
 //! Discrete-event simulation of the VS / VSQ baselines (paper §IV-A):
 //! FCFS request queue, fixed batch size, no prediction.  VSQ is VS over
 //! the quantized engine with its larger fixed batch size.
+//!
+//! The loop runs over compact [`RequestMeta`] records — vanilla
+//! scheduling never reads request text, so both the owned-trace and the
+//! [`TraceStore`] entry points feed the same zero-copy core.
 
 use std::collections::VecDeque;
 
@@ -10,12 +14,34 @@ use crate::engine::{BatchOutcome, InferenceEngine};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::sim::events::EventQueue;
 use crate::sim::OOM_RELOAD_S;
-use crate::workload::{PredictedRequest, Request};
+use crate::workload::{PredictedRequest, Request, RequestMeta, TraceStore};
 
 enum Event {
     Arrival(usize),
     BatchDone(usize, Batch, f64, Vec<crate::engine::ServedRequest>),
     InstanceReady(usize),
+}
+
+/// Run vanilla scheduling over an owned trace (metas are extracted once;
+/// no text is touched).
+pub fn run_vanilla(
+    cfg: &ServingConfig,
+    fixed_batch: u32,
+    engine: &dyn InferenceEngine,
+    trace: &[Request],
+) -> RunMetrics {
+    let metas: Vec<RequestMeta> = trace.iter().map(RequestMeta::detached).collect();
+    run_vanilla_metas(cfg, fixed_batch, engine, &metas)
+}
+
+/// Run vanilla scheduling over an interned [`TraceStore`] (zero-copy).
+pub fn run_vanilla_store(
+    cfg: &ServingConfig,
+    fixed_batch: u32,
+    engine: &dyn InferenceEngine,
+    store: &TraceStore,
+) -> RunMetrics {
+    run_vanilla_metas(cfg, fixed_batch, engine, store.metas())
 }
 
 /// Run vanilla scheduling with `fixed_batch` requests per batch.
@@ -24,16 +50,16 @@ enum Event {
 /// min(queue, fixed_batch) requests form a batch (production servers
 /// flush partial batches on a timeout; an idle instance here flushes
 /// immediately, which is the zero-timeout limit).
-pub fn run_vanilla(
+fn run_vanilla_metas(
     cfg: &ServingConfig,
     fixed_batch: u32,
     engine: &dyn InferenceEngine,
-    trace: &[Request],
+    trace: &[RequestMeta],
 ) -> RunMetrics {
     let mut metrics = RunMetrics::new();
     let mut events: EventQueue<Event> = EventQueue::new();
-    for (i, r) in trace.iter().enumerate() {
-        events.push(r.arrival, Event::Arrival(i));
+    for (i, m) in trace.iter().enumerate() {
+        events.push(m.arrival, Event::Arrival(i));
     }
 
     let mut fifo: VecDeque<usize> = VecDeque::new();
@@ -47,7 +73,7 @@ pub fn run_vanilla(
                 for (pr, sr) in batch.requests.iter().zip(&per_request) {
                     metrics.record(RequestRecord {
                         request_id: sr.request_id,
-                        arrival: pr.request.arrival,
+                        arrival: pr.meta.arrival,
                         finish: now,
                         valid_tokens: sr.valid_tokens,
                         invalid_tokens: sr.invalid_tokens,
@@ -64,7 +90,7 @@ pub fn run_vanilla(
             for _ in 0..take {
                 let i = fifo.pop_front().unwrap();
                 reqs.push(PredictedRequest {
-                    request: trace[i].clone(),
+                    meta: trace[i],
                     // vanilla scheduling has no prediction; the field is
                     // unused on this path.
                     predicted_gen_len: 0,
@@ -93,7 +119,7 @@ pub fn run_vanilla(
                     metrics.record_oom();
                     let n = batch.requests.len();
                     for pr in batch.requests.into_iter().rev().take(n / 2) {
-                        fifo.push_front(pr.request.id as usize);
+                        fifo.push_front(pr.meta.id as usize);
                     }
                     events.push(now + wasted_time + OOM_RELOAD_S, Event::InstanceReady(inst));
                 }
@@ -127,6 +153,20 @@ mod tests {
         let m = run_vanilla(&cfg, 7, &engine, &trace);
         assert_eq!(m.records.len(), 200);
         assert_eq!(m.oom_events, 0, "Eq.1 batch must not OOM");
+    }
+
+    #[test]
+    fn store_path_replays_owned_path() {
+        let (cfg, engine, trace) = setup(150, 4.0);
+        let store = TraceStore::from_requests(&trace);
+        let a = run_vanilla(&cfg, 7, &engine, &trace);
+        let b = run_vanilla_store(&cfg, 7, &engine, &store);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.request_id, y.request_id);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+            assert_eq!(x.valid_tokens, y.valid_tokens);
+        }
     }
 
     #[test]

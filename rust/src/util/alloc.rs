@@ -1,0 +1,92 @@
+//! A counting global allocator for the scale benches.
+//!
+//! Wraps the system allocator with relaxed atomic live/peak byte
+//! counters, so `benches/bench_sim`'s scale mode can report **peak heap
+//! bytes** for the owned-`Request` path vs the interned `TraceStore`
+//! path without external tooling.  Register it in a binary with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: magnus::util::alloc::CountingAllocator = CountingAllocator;
+//! ```
+//!
+//! Counting costs two relaxed atomic ops per alloc/free — negligible
+//! against the allocations being measured, and identical for every
+//! measured variant, so ratios are unaffected.  Peak tracking is a
+//! `fetch_max` **upper bound**: `realloc` is counted as
+//! alloc-new-then-free-old, so the transient old+new double-residency
+//! of a moving grow is included (an in-place grow is over-counted by
+//! the old size for that instant — conservative, never an
+//! understatement).  The benches run the measured phases
+//! single-threaded.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// System allocator + live/peak byte accounting.
+pub struct CountingAllocator;
+
+#[inline]
+fn on_alloc(bytes: usize) {
+    let live = LIVE.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+#[inline]
+fn on_dealloc(bytes: usize) {
+    LIVE.fetch_sub(bytes, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        on_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            // Counted as alloc(new) then free(old): a moving realloc
+            // briefly holds both buffers, and the peak must see it.
+            on_alloc(new_size);
+            on_dealloc(layout.size());
+        }
+        p
+    }
+}
+
+/// Bytes currently live (allocated − freed) under the counting allocator.
+/// Zero when [`CountingAllocator`] is not the registered global allocator.
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`live_bytes`] since the last [`reset_peak`].
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Restart peak tracking from the current live level — call between
+/// measured phases.
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}

@@ -325,6 +325,80 @@ pub fn record_sched_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// One measured point of the zero-copy scale sweep (`BENCH_scale.json`).
+///
+/// `n` requests at the sweep's arrival rate; `store_*` fields measure the
+/// interned `TraceStore` path (streaming generation + compact pipeline),
+/// `owned_*` the owned-`Request` reference (`sim::reference`) — `None`
+/// above the owned cap, where the reference is wall-clock prohibitive.
+/// Times are end-to-end seconds including trace generation; peaks are
+/// [`crate::util::alloc`] high-water bytes over the same window.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePoint {
+    pub n: usize,
+    pub store_s: f64,
+    pub store_peak_bytes: usize,
+    pub arena_bytes: usize,
+    pub owned_s: Option<f64>,
+    pub owned_peak_bytes: Option<usize>,
+}
+
+/// Record the zero-copy scale sweep as `BENCH_scale.json` at the repo
+/// root (same family as the other `BENCH_*.json` records).  Derives the
+/// headline ratios — wall-time speedup and peak-byte reduction — at the
+/// largest N both paths ran.
+pub fn record_scale_bench(
+    path: &str,
+    rate: f64,
+    points: &[ScalePoint],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let arr = |f: &dyn Fn(&ScalePoint) -> Json| {
+        Json::Arr(points.iter().map(f).collect())
+    };
+    let mut fields = vec![
+        ("bench", Json::str("sim_scale_zero_copy")),
+        ("rate", Json::num(rate)),
+        ("n", arr(&|p| Json::num(p.n as f64))),
+        ("store_s", arr(&|p| Json::num(p.store_s))),
+        (
+            "store_peak_bytes",
+            arr(&|p| Json::num(p.store_peak_bytes as f64)),
+        ),
+        ("arena_bytes", arr(&|p| Json::num(p.arena_bytes as f64))),
+        (
+            "owned_s",
+            arr(&|p| p.owned_s.map_or(Json::Null, Json::num)),
+        ),
+        (
+            "owned_peak_bytes",
+            arr(&|p| p.owned_peak_bytes.map_or(Json::Null, |b| Json::num(b as f64))),
+        ),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    if let Some(p) = points
+        .iter()
+        .rev()
+        .find(|p| p.owned_s.is_some() && p.owned_peak_bytes.is_some())
+    {
+        fields.push(("compared_n", Json::num(p.n as f64)));
+        fields.push((
+            "speedup",
+            Json::num(p.owned_s.unwrap() / p.store_s.max(1e-12)),
+        ));
+        fields.push((
+            "peak_bytes_ratio",
+            Json::num(p.owned_peak_bytes.unwrap() as f64 / p.store_peak_bytes.max(1) as f64),
+        ));
+    }
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,6 +469,48 @@ mod tests {
         assert_eq!(j.get("speedup_deepest").as_f64(), Some(320.0));
         assert_eq!(j.get("logdb_contention_overhead").as_f64(), Some(1.3));
         assert_eq!(j.get("depths").as_arr().unwrap().len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_scale_bench_derives_ratios_at_largest_common_n() {
+        let path = std::env::temp_dir().join("magnus_bench_scale_test.json");
+        let path = path.to_string_lossy().into_owned();
+        let points = [
+            ScalePoint {
+                n: 10_000,
+                store_s: 0.5,
+                store_peak_bytes: 10_000_000,
+                arena_bytes: 1_500_000,
+                owned_s: Some(1.0),
+                owned_peak_bytes: Some(40_000_000),
+            },
+            ScalePoint {
+                n: 100_000,
+                store_s: 5.0,
+                store_peak_bytes: 100_000_000,
+                arena_bytes: 15_000_000,
+                owned_s: Some(10.0),
+                owned_peak_bytes: Some(400_000_000),
+            },
+            ScalePoint {
+                n: 1_000_000,
+                store_s: 50.0,
+                store_peak_bytes: 1_000_000_000,
+                arena_bytes: 150_000_000,
+                owned_s: None,
+                owned_peak_bytes: None,
+            },
+        ];
+        record_scale_bench(&path, 4.0, &points, vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // ratios derive from the largest N with an owned measurement
+        assert_eq!(j.get("compared_n").as_u64(), Some(100_000));
+        assert_eq!(j.get("speedup").as_f64(), Some(2.0));
+        assert_eq!(j.get("peak_bytes_ratio").as_f64(), Some(4.0));
+        assert_eq!(j.get("n").as_arr().unwrap().len(), 3);
+        // the owned column is null past the cap
+        assert!(matches!(j.get("owned_s").as_arr().unwrap()[2], Json::Null));
         let _ = std::fs::remove_file(&path);
     }
 

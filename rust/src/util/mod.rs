@@ -7,6 +7,7 @@
 //! are unavailable, and the reproduction needs deterministic equivalents
 //! anyway (every figure must regenerate bit-for-bit from a seed).
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod json;

@@ -289,26 +289,43 @@ const TOPIC_MARKERS: [&str; 8] = [
 ];
 
 /// Synthesise a user-input text of roughly `target_tokens` tokens
-/// (byte-level tokenizer: 1 token per byte + BOS) for the given task/topic.
-pub fn synth_input(task: TaskId, topic: usize, target_tokens: u32, rng: &mut Rng) -> String {
+/// (byte-level tokenizer: 1 token per byte + BOS) for the given task/topic,
+/// appending to `out` (the `TraceStore` arena on the streaming path — the
+/// text is written once at its final address, no intermediate `String`).
+/// Byte-for-byte and RNG-for-RNG identical to the owned [`synth_input`].
+pub fn synth_input_into(
+    task: TaskId,
+    topic: usize,
+    target_tokens: u32,
+    rng: &mut Rng,
+    out: &mut String,
+) {
     let words: &[&str] = match task.app() {
         App::CT | App::BF | App::CC => &CODE_WORDS,
         _ => &NATURAL_WORDS,
     };
     let marker = TOPIC_MARKERS[topic % TOPIC_MARKERS.len()];
-    let mut s = String::with_capacity(target_tokens as usize + 16);
-    s.push_str(marker);
-    while s.len() + 1 < target_tokens as usize {
-        s.push(' ');
+    let start = out.len();
+    out.push_str(marker);
+    while out.len() - start + 1 < target_tokens as usize {
+        out.push(' ');
         // Re-mention the topic marker ~1/6 of the time so user-level
         // semantics are recoverable from hashed n-grams.
         if rng.f64() < 1.0 / 6.0 {
-            s.push_str(marker);
+            out.push_str(marker);
         } else {
-            s.push_str(words[rng.range_usize(0, words.len())]);
+            out.push_str(words[rng.range_usize(0, words.len())]);
         }
     }
-    s.truncate((target_tokens as usize).saturating_sub(1).max(1));
+    // All-ASCII vocabulary, so byte truncation is char-safe.
+    out.truncate(start + (target_tokens as usize).saturating_sub(1).max(1));
+}
+
+/// Synthesise a user-input text as an owned `String` (the pre-arena form;
+/// dataset builders and the owned trace generator still use it).
+pub fn synth_input(task: TaskId, topic: usize, target_tokens: u32, rng: &mut Rng) -> String {
+    let mut s = String::with_capacity(target_tokens as usize + 16);
+    synth_input_into(task, topic, target_tokens, rng, &mut s);
     s
 }
 
@@ -322,15 +339,27 @@ pub struct SampledRequest {
     pub gen_len: u32,
 }
 
-/// Sample a request for `task` under `llm`, honoring the generation-length
-/// cap `g_max` and input cap `l_cap` (0 = use task default).
-pub fn sample_request(
+/// The numeric half of a sampled request — everything but the text.  The
+/// streaming trace generator draws this first, then synthesises the text
+/// straight into the arena (`synth_input_into`).
+#[derive(Debug, Clone, Copy)]
+pub struct SampledShape {
+    pub task: TaskId,
+    pub topic: usize,
+    pub user_input_len: u32,
+    pub gen_len: u32,
+}
+
+/// Draw the numeric shape of a request for `task` under `llm` — the exact
+/// RNG prefix of [`sample_request`] (lognormal length, topic, gen noise),
+/// with the text draw left to the caller.
+pub fn sample_shape(
     task: TaskId,
     llm: LlmProfile,
     g_max: u32,
     l_cap: u32,
     rng: &mut Rng,
-) -> SampledRequest {
+) -> SampledShape {
     let p = task_params(task);
     let (slope_mul, noise_mul) = llm.perturb();
     let len_max = if l_cap > 0 { l_cap.min(p.len_max) } else { p.len_max };
@@ -348,13 +377,31 @@ pub fn sample_request(
     let g = rng.normal_ms(mean, sigma).round();
     let gen_len = (g.max(1.0) as u32).min(g_max);
 
-    let user_input = synth_input(task, topic, uil, rng);
-    SampledRequest {
+    SampledShape {
         task,
         topic,
-        user_input,
         user_input_len: uil,
         gen_len,
+    }
+}
+
+/// Sample a request for `task` under `llm`, honoring the generation-length
+/// cap `g_max` and input cap `l_cap` (0 = use task default).
+pub fn sample_request(
+    task: TaskId,
+    llm: LlmProfile,
+    g_max: u32,
+    l_cap: u32,
+    rng: &mut Rng,
+) -> SampledRequest {
+    let s = sample_shape(task, llm, g_max, l_cap, rng);
+    let user_input = synth_input(task, s.topic, s.user_input_len, rng);
+    SampledRequest {
+        task,
+        topic: s.topic,
+        user_input,
+        user_input_len: s.user_input_len,
+        gen_len: s.gen_len,
     }
 }
 

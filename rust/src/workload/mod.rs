@@ -6,8 +6,10 @@
 pub mod apps;
 pub mod dataset;
 pub mod request;
+pub mod store;
 pub mod trace;
 
 pub use apps::{App, LlmProfile, TaskId};
-pub use request::{PredictedRequest, Request};
+pub use request::{PredictedRequest, Request, RequestMeta, RequestView, Span};
+pub use store::{StreamingTraceGen, TraceStore};
 pub use trace::{generate_trace, trace_from_json, trace_to_json, TraceSpec};

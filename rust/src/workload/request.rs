@@ -5,10 +5,51 @@
 //! ground-truth generation length: the coordinator must never read it for
 //! scheduling decisions (only the engine, which "samples EOS" with it, and
 //! the log database after serving may).
+//!
+//! Two representations coexist:
+//!
+//! * [`Request`] — the **owned** form: text in per-request heap `String`s.
+//!   Kept for trace JSON round-trips, dataset builders, and as the
+//!   reference representation the golden-equivalence suite replays
+//!   (`sim::reference`).
+//! * [`RequestMeta`] — the **compact**, `Copy` form the serving pipeline
+//!   carries: numeric fields plus a [`Span`] into the owning
+//!   [`TraceStore`](crate::workload::TraceStore)'s text arena and an index
+//!   into its deduplicated instruction table.  Moving a request through
+//!   arrival → batching → dispatch → logging copies a few machine words
+//!   and never touches the heap.
+//!
+//! [`RequestView`] is the borrowed bridge between the two: everything a
+//! text consumer (the predictor's feature pipeline, the real-compute
+//! tokenizer) needs, resolved either from an owned `Request` or from a
+//! store + meta without cloning.
 
 use crate::workload::apps::TaskId;
 
-/// A single LMaaS request.
+/// Byte range of one request's user-input text inside a
+/// [`TraceStore`](crate::workload::TraceStore) arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Byte offset of the text in the arena.
+    pub start: u64,
+    /// Byte length of the text.
+    pub len: u32,
+}
+
+impl Span {
+    /// Sentinel span of a record with no backing arena
+    /// ([`RequestMeta::detached`] and synthetic test/bench metas): the
+    /// out-of-range start makes resolving the user input against any
+    /// live store panic (slice out of bounds) instead of silently
+    /// yielding `""` — pair it with `instr: u32::MAX` so instruction
+    /// resolution panics too rather than aliasing a store's entry 0.
+    pub const DETACHED: Span = Span {
+        start: u64::MAX,
+        len: 0,
+    };
+}
+
+/// A single LMaaS request (owned text).
 #[derive(Debug, Clone)]
 pub struct Request {
     /// Unique, monotonically increasing id.
@@ -41,14 +82,117 @@ impl Request {
     pub fn true_gen_len(&self) -> u32 {
         self.gen_len
     }
+
+    /// Borrowed full view (text included) of this request.
+    #[inline]
+    pub fn view(&self) -> RequestView<'_> {
+        RequestView {
+            id: self.id,
+            task: self.task,
+            instruction: &self.instruction,
+            user_input: &self.user_input,
+            user_input_len: self.user_input_len,
+            request_len: self.request_len,
+            gen_len: self.gen_len,
+            arrival: self.arrival,
+        }
+    }
+}
+
+/// The compact request record the pipeline carries: all numeric fields of
+/// [`Request`] plus arena coordinates instead of owned text.  `Copy`, so
+/// arrival, batching, dispatch and logging move it without allocation.
+///
+/// Text resolution goes through the [`TraceStore`](crate::workload::TraceStore)
+/// that minted the record (`store.user_input(&meta)` /
+/// `store.instruction(&meta)` / `store.view_of(&meta)`); a meta built via
+/// [`RequestMeta::detached`] has no backing arena and must never be
+/// resolved (engine/scheduler/test paths that read only numbers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestMeta {
+    /// Unique, monotonically increasing id.
+    pub id: u64,
+    /// Which application task produced it.
+    pub task: TaskId,
+    /// Index into the owning store's deduplicated instruction table.
+    pub instr: u32,
+    /// User input length in tokens.
+    pub user_input_len: u32,
+    /// Whole request length in tokens.
+    pub request_len: u32,
+    /// Ground-truth generation length — engine/log-only, as on `Request`.
+    pub gen_len: u32,
+    /// Arrival time in seconds since workload start.
+    pub arrival: f64,
+    /// User-input text location in the owning store's arena.
+    pub span: Span,
+}
+
+impl RequestMeta {
+    /// L(p) in the paper's notation.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.request_len
+    }
+
+    /// G(p) — ground truth, engine-only.
+    #[inline]
+    pub fn true_gen_len(&self) -> u32 {
+        self.gen_len
+    }
+
+    /// Numeric-only meta for an owned request, with NO backing arena.
+    /// For paths that never resolve text: engine cost models,
+    /// scheduler/batcher tests, the owned-reference sim's engine
+    /// hand-off.  Both text addresses are out-of-range sentinels
+    /// (`instr = u32::MAX`, [`Span::DETACHED`]), so accidentally
+    /// resolving a detached meta against a live store panics instead of
+    /// silently aliasing the store's first instruction or yielding `""`.
+    pub fn detached(r: &Request) -> RequestMeta {
+        RequestMeta {
+            id: r.id,
+            task: r.task,
+            instr: u32::MAX,
+            user_input_len: r.user_input_len,
+            request_len: r.request_len,
+            gen_len: r.gen_len,
+            arrival: r.arrival,
+            span: Span::DETACHED,
+        }
+    }
+}
+
+/// Borrowed view of one request: the numeric fields plus `&str` slices of
+/// both texts.  This is what the predictor feature path consumes — built
+/// either from an owned [`Request`] (`r.view()`, used by dataset training
+/// and goldens) or zero-copy from a store + meta
+/// (`store.view_of(&meta)`, the serving hot path).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestView<'a> {
+    pub id: u64,
+    pub task: TaskId,
+    pub instruction: &'a str,
+    pub user_input: &'a str,
+    pub user_input_len: u32,
+    pub request_len: u32,
+    pub gen_len: u32,
+    pub arrival: f64,
+}
+
+impl<'a> From<&'a Request> for RequestView<'a> {
+    #[inline]
+    fn from(r: &'a Request) -> RequestView<'a> {
+        r.view()
+    }
 }
 
 /// A request annotated with the predictor's output, as it flows through the
 /// batcher/scheduler (the serving path sees `predicted_gen_len`, never
-/// `request.gen_len`).
-#[derive(Debug, Clone)]
+/// `meta.gen_len`).  `Copy`: the whole pipeline record is a few machine
+/// words — no `String` travels past admission.
+#[derive(Debug, Clone, Copy)]
 pub struct PredictedRequest {
-    pub request: Request,
+    pub meta: RequestMeta,
     /// G'(p): predicted generation length, clamped to [1, G_max].
     pub predicted_gen_len: u32,
 }
@@ -56,7 +200,7 @@ pub struct PredictedRequest {
 impl PredictedRequest {
     #[inline]
     pub fn len(&self) -> u32 {
-        self.request.request_len
+        self.meta.request_len
     }
 
     #[inline]

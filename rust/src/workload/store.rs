@@ -1,0 +1,582 @@
+//! Interned trace storage: the zero-copy backbone of the request path.
+//!
+//! A [`TraceStore`] owns all request text of a workload exactly once:
+//!
+//! * user-input texts live back-to-back in one contiguous byte **arena**
+//!   (one `String`), addressed by [`Span`]s;
+//! * instruction texts — a handful of distinct strings repeated across
+//!   every request of a task — live in a deduplicated side table,
+//!   addressed by index (the seed cloned `task.instruction()` into every
+//!   single request);
+//! * each request is a compact, `Copy` [`RequestMeta`] carrying the
+//!   numeric fields plus those two addresses.
+//!
+//! The serving pipeline moves `RequestMeta` (and
+//! [`PredictedRequest`](crate::workload::PredictedRequest)) by value —
+//! arrival, batching, dispatch and logging perform **zero per-request
+//! heap allocations**; text consumers (predictor features, real-compute
+//! tokenization) borrow `&str` slices straight from the arena via
+//! [`TraceStore::view_of`].
+//!
+//! [`StreamingTraceGen`] generates workloads **into** the store: each
+//! request's text is synthesised at its final arena address
+//! (`apps::synth_input_into`), so a million-request trace never exists as
+//! a `Vec<Request>` of owned strings.  The stream is RNG-for-RNG and
+//! byte-for-byte identical to the owned
+//! [`generate_trace`](crate::workload::generate_trace) — property-tested
+//! in `tests/store_equivalence.rs`.
+//!
+//! The owned [`Request`] remains the interchange form: JSON round-trips
+//! ([`TraceStore::to_json`] emits the exact schema `trace_to_json` always
+//! did — task id, never instruction text) and the golden-equivalence
+//! reference (`sim::reference`) materialise through
+//! [`TraceStore::request_of`] / [`TraceStore::to_requests`].
+
+use crate::tokenizer::Tokenizer;
+use crate::util::{Json, Rng};
+use crate::workload::apps::{sample_shape, synth_input_into, TaskId};
+use crate::workload::request::{Request, RequestMeta, RequestView, Span};
+use crate::workload::trace::TraceSpec;
+
+/// All text of a workload trace, interned once, plus the compact
+/// per-request records addressing it.
+#[derive(Debug, Clone, Default)]
+pub struct TraceStore {
+    /// Every request's user-input text, back to back.
+    arena: String,
+    /// Deduplicated instruction texts (typically one per task).
+    instructions: Vec<String>,
+    /// Compact per-request records, in trace order.
+    metas: Vec<RequestMeta>,
+}
+
+impl TraceStore {
+    pub fn new() -> TraceStore {
+        TraceStore::default()
+    }
+
+    /// Store with pre-sized buffers (`arena_bytes` is a hint, not a cap).
+    pub fn with_capacity(n_requests: usize, arena_bytes: usize) -> TraceStore {
+        TraceStore {
+            arena: String::with_capacity(arena_bytes),
+            instructions: Vec::new(),
+            metas: Vec::with_capacity(n_requests),
+        }
+    }
+
+    /// Index of `instruction` in the dedup table, interning it if new.
+    /// Linear probe: the table holds a handful of distinct entries.
+    fn intern_instruction(&mut self, instruction: &str) -> u32 {
+        if let Some(i) = self.instructions.iter().position(|s| s == instruction) {
+            return i as u32;
+        }
+        self.instructions.push(instruction.to_string());
+        (self.instructions.len() - 1) as u32
+    }
+
+    /// Record the meta for a request whose user-input text was just
+    /// appended to the arena starting at byte `start` — the single place
+    /// the span/meta bookkeeping invariant lives (shared by [`Self::push`]
+    /// and the streaming generator, which writes text into the arena
+    /// directly).
+    #[allow(clippy::too_many_arguments)]
+    fn record_meta(
+        &mut self,
+        id: u64,
+        task: TaskId,
+        instr: u32,
+        user_input_len: u32,
+        request_len: u32,
+        gen_len: u32,
+        arrival: f64,
+        start: u64,
+    ) -> RequestMeta {
+        let meta = RequestMeta {
+            id,
+            task,
+            instr,
+            user_input_len,
+            request_len,
+            gen_len,
+            arrival,
+            span: Span {
+                start,
+                len: (self.arena.len() as u64 - start) as u32,
+            },
+        };
+        self.metas.push(meta);
+        meta
+    }
+
+    /// Intern one request: the instruction is deduplicated, the user input
+    /// appended to the arena, and the returned meta (also recorded in the
+    /// store) addresses both.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        id: u64,
+        task: TaskId,
+        instruction: &str,
+        user_input: &str,
+        user_input_len: u32,
+        request_len: u32,
+        gen_len: u32,
+        arrival: f64,
+    ) -> RequestMeta {
+        let instr = self.intern_instruction(instruction);
+        let start = self.arena.len() as u64;
+        self.arena.push_str(user_input);
+        self.record_meta(
+            id,
+            task,
+            instr,
+            user_input_len,
+            request_len,
+            gen_len,
+            arrival,
+            start,
+        )
+    }
+
+    /// Intern an owned request (text copied into the arena once).
+    pub fn push_request(&mut self, r: &Request) -> RequestMeta {
+        self.push(
+            r.id,
+            r.task,
+            &r.instruction,
+            &r.user_input,
+            r.user_input_len,
+            r.request_len,
+            r.gen_len,
+            r.arrival,
+        )
+    }
+
+    /// Intern a whole owned trace.  Deterministic: the resulting store is
+    /// identical (spans, instruction ids, metas) to the one the streaming
+    /// generator builds for the same trace content.
+    pub fn from_requests(reqs: &[Request]) -> TraceStore {
+        let bytes: usize = reqs.iter().map(|r| r.user_input.len()).sum();
+        let mut store = TraceStore::with_capacity(reqs.len(), bytes);
+        for r in reqs {
+            store.push_request(r);
+        }
+        store
+    }
+
+    /// Generate a trace directly into a fresh store (streaming; no owned
+    /// `Vec<Request>` is ever built).  Content-identical to
+    /// [`generate_trace`](crate::workload::generate_trace) for the same
+    /// spec.
+    pub fn generate(spec: &TraceSpec) -> TraceStore {
+        // The task input lengths are lognormal(μ≈4.8, σ≈0.7) clipped to
+        // ≤600 tokens → mean ≈150 bytes/request; 160 headroom avoids a
+        // mid-generation arena double (whose transient old+new
+        // double-residency would land in the scale bench's peak gauge).
+        // A spec-level input cap bounds the per-request bytes tighter
+        // (text bytes ≈ tokens − 1), so capped specs don't over-reserve.
+        let per_request = if spec.l_cap > 0 {
+            (spec.l_cap as usize).min(160)
+        } else {
+            160
+        };
+        let mut store =
+            TraceStore::with_capacity(spec.n_requests, spec.n_requests * per_request);
+        let mut gen = StreamingTraceGen::new(spec);
+        while gen.next_into(&mut store).is_some() {}
+        store
+    }
+
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+
+    /// The compact record of request `i` (trace order).
+    #[inline]
+    pub fn meta(&self, i: usize) -> RequestMeta {
+        self.metas[i]
+    }
+
+    /// All compact records, in trace order.
+    #[inline]
+    pub fn metas(&self) -> &[RequestMeta] {
+        &self.metas
+    }
+
+    /// Borrow the user-input text of `m` from the arena.
+    #[inline]
+    pub fn user_input(&self, m: &RequestMeta) -> &str {
+        let start = m.span.start as usize;
+        &self.arena[start..start + m.span.len as usize]
+    }
+
+    /// Borrow the instruction text of `m` from the dedup table.
+    #[inline]
+    pub fn instruction(&self, m: &RequestMeta) -> &str {
+        &self.instructions[m.instr as usize]
+    }
+
+    /// Zero-copy full view of `m` (the predictor feature input).
+    #[inline]
+    pub fn view_of(&self, m: &RequestMeta) -> RequestView<'_> {
+        RequestView {
+            id: m.id,
+            task: m.task,
+            instruction: self.instruction(m),
+            user_input: self.user_input(m),
+            user_input_len: m.user_input_len,
+            request_len: m.request_len,
+            gen_len: m.gen_len,
+            arrival: m.arrival,
+        }
+    }
+
+    /// Zero-copy view of request `i` (trace order).
+    #[inline]
+    pub fn view(&self, i: usize) -> RequestView<'_> {
+        self.view_of(&self.metas[i])
+    }
+
+    /// Materialise `m` as an owned [`Request`] (clones both texts) — the
+    /// golden/JSON interchange path, never the serving path.
+    pub fn request_of(&self, m: &RequestMeta) -> Request {
+        Request {
+            id: m.id,
+            task: m.task,
+            instruction: self.instruction(m).to_string(),
+            user_input: self.user_input(m).to_string(),
+            user_input_len: m.user_input_len,
+            request_len: m.request_len,
+            gen_len: m.gen_len,
+            arrival: m.arrival,
+        }
+    }
+
+    /// Materialise the whole trace as owned requests (goldens only).
+    pub fn to_requests(&self) -> Vec<Request> {
+        self.metas.iter().map(|m| self.request_of(m)).collect()
+    }
+
+    /// Bytes of interned user-input text (the scale bench's arena gauge).
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Bytes of the deduplicated instruction table.
+    pub fn instruction_bytes(&self) -> usize {
+        self.instructions.iter().map(|s| s.len()).sum()
+    }
+
+    /// Serialise in the trace JSON schema (`id`/`task`/`user_input`/`uil`/
+    /// `len`/`gen`/`arrival`).  Instruction text is **not** emitted — the
+    /// task id reconstructs it on load, so the on-disk form is deduped the
+    /// same way the store is.  Byte-identical to what
+    /// [`trace_to_json`](crate::workload::trace_to_json) emits for the
+    /// equivalent owned trace.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.metas
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("id", Json::num(m.id as f64)),
+                        ("task", Json::num(m.task.index() as f64)),
+                        ("user_input", Json::str(self.user_input(m).to_string())),
+                        ("uil", Json::num(m.user_input_len as f64)),
+                        ("len", Json::num(m.request_len as f64)),
+                        ("gen", Json::num(m.gen_len as f64)),
+                        ("arrival", Json::num(m.arrival)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse a trace (old or new files — the schema never carried
+    /// instruction text) directly into a store: instructions reconstruct
+    /// from the task id via [`TaskId::instruction`], user inputs intern
+    /// into the arena, and no owned `Request` is materialised.  Record
+    /// parsing is shared with the owned deserialiser
+    /// (`trace::parse_trace_record`), so the two cannot drift.
+    pub fn from_json(j: &Json) -> anyhow::Result<TraceStore> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("trace: expected array"))?;
+        // Exact arena size is already known from the parsed items.
+        let bytes: usize = arr
+            .iter()
+            .map(|item| item.get("user_input").as_str().map_or(0, str::len))
+            .sum();
+        let mut store = TraceStore::with_capacity(arr.len(), bytes);
+        for item in arr {
+            let rec = crate::workload::trace::parse_trace_record(item)?;
+            store.push(
+                rec.id,
+                rec.task,
+                rec.task.instruction(),
+                rec.user_input,
+                rec.user_input_len,
+                rec.request_len,
+                rec.gen_len,
+                rec.arrival,
+            );
+        }
+        Ok(store)
+    }
+}
+
+/// Streaming trace generator: Poisson arrivals over the weighted task mix
+/// (exactly [`generate_trace`](crate::workload::generate_trace)'s model
+/// and RNG sequence), yielding one [`RequestMeta`] at a time and writing
+/// each text straight into the target store's arena.
+pub struct StreamingTraceGen {
+    spec: TraceSpec,
+    rng: Rng,
+    tok: Tokenizer,
+    weights: Vec<f64>,
+    t: f64,
+    next: usize,
+}
+
+impl StreamingTraceGen {
+    pub fn new(spec: &TraceSpec) -> StreamingTraceGen {
+        let weights = if spec.task_weights.len() == TaskId::ALL.len() {
+            spec.task_weights.clone()
+        } else {
+            vec![1.0; TaskId::ALL.len()]
+        };
+        StreamingTraceGen {
+            spec: spec.clone(),
+            rng: Rng::new(spec.seed),
+            tok: Tokenizer::new(),
+            weights,
+            t: 0.0,
+            next: 0,
+        }
+    }
+
+    /// Requests not yet generated.
+    pub fn remaining(&self) -> usize {
+        self.spec.n_requests - self.next
+    }
+
+    /// Generate the next request into `store`; `None` once the spec's
+    /// request count is exhausted.
+    pub fn next_into(&mut self, store: &mut TraceStore) -> Option<RequestMeta> {
+        if self.next >= self.spec.n_requests {
+            return None;
+        }
+        self.t += self.rng.exponential(self.spec.rate);
+        let task = TaskId::ALL[self.rng.weighted_index(&self.weights)];
+        let shape = sample_shape(
+            task,
+            self.spec.llm,
+            self.spec.g_max,
+            self.spec.l_cap,
+            &mut self.rng,
+        );
+        let instruction = task.instruction();
+        // The probe is over a ≤ 8-entry table whose non-matching entries
+        // fail on their first bytes — noise next to the text synthesis —
+        // and stays correct however many stores one generator targets.
+        let instr = store.intern_instruction(instruction);
+        // Text is synthesised at its final arena address — the only copy.
+        let start = store.arena.len() as u64;
+        synth_input_into(
+            task,
+            shape.topic,
+            shape.user_input_len,
+            &mut self.rng,
+            &mut store.arena,
+        );
+        let text_len = store.arena.len() - start as usize;
+        let request_len = (self.tok.token_len(instruction) + text_len) as u32;
+        let meta = store.record_meta(
+            self.next as u64,
+            task,
+            instr,
+            shape.user_input_len,
+            request_len,
+            shape.gen_len,
+            self.t,
+            start,
+        );
+        self.next += 1;
+        Some(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::workload::generate_trace;
+
+    #[test]
+    fn streaming_generation_matches_owned_generation() {
+        let spec = TraceSpec {
+            rate: 3.0,
+            n_requests: 400,
+            seed: 11,
+            ..Default::default()
+        };
+        let owned = generate_trace(&spec);
+        let store = TraceStore::generate(&spec);
+        assert_eq!(store.len(), owned.len());
+        for (i, r) in owned.iter().enumerate() {
+            let m = store.meta(i);
+            assert_eq!(m.id, r.id);
+            assert_eq!(m.task, r.task);
+            assert_eq!(m.user_input_len, r.user_input_len);
+            assert_eq!(m.request_len, r.request_len);
+            assert_eq!(m.gen_len, r.gen_len);
+            assert_eq!(m.arrival.to_bits(), r.arrival.to_bits());
+            assert_eq!(store.user_input(&m), r.user_input);
+            assert_eq!(store.instruction(&m), r.instruction);
+        }
+        // Arena holds exactly the concatenated inputs, nothing more.
+        let bytes: usize = owned.iter().map(|r| r.user_input.len()).sum();
+        assert_eq!(store.arena_bytes(), bytes);
+        // Instructions deduplicated: at most one entry per task.
+        assert!(store.instructions.len() <= TaskId::ALL.len());
+    }
+
+    #[test]
+    fn interning_owned_trace_equals_streaming_store() {
+        let spec = TraceSpec {
+            rate: 5.0,
+            n_requests: 150,
+            seed: 23,
+            ..Default::default()
+        };
+        let owned = generate_trace(&spec);
+        let a = TraceStore::generate(&spec);
+        let b = TraceStore::from_requests(&owned);
+        assert_eq!(a.metas(), b.metas());
+        assert_eq!(a.arena, b.arena);
+        assert_eq!(a.instructions, b.instructions);
+    }
+
+    #[test]
+    fn arena_interning_roundtrips_every_sampled_text() {
+        // Satellite property test: for random specs, every interned text
+        // (and the materialised owned request) round-trips exactly.
+        prop_check(12, |rng| {
+            let spec = TraceSpec {
+                rate: rng.range_f64(0.5, 20.0),
+                n_requests: rng.range_usize(1, 120),
+                l_cap: if rng.range_u64(0, 2) == 0 {
+                    0
+                } else {
+                    rng.range_u64(8, 200) as u32
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let owned = generate_trace(&spec);
+            let store = TraceStore::generate(&spec);
+            for (i, r) in owned.iter().enumerate() {
+                let view = store.view(i);
+                assert_eq!(view.user_input, r.user_input);
+                assert_eq!(view.instruction, r.instruction);
+                let back = store.request_of(&store.meta(i));
+                assert_eq!(back.id, r.id);
+                assert_eq!(back.task, r.task);
+                assert_eq!(back.instruction, r.instruction);
+                assert_eq!(back.user_input, r.user_input);
+                assert_eq!(back.user_input_len, r.user_input_len);
+                assert_eq!(back.request_len, r.request_len);
+                assert_eq!(back.gen_len, r.gen_len);
+                assert_eq!(back.arrival.to_bits(), r.arrival.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn json_roundtrip_via_store_matches_owned_schema() {
+        let spec = TraceSpec {
+            n_requests: 40,
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        let owned = generate_trace(&spec);
+        // The store emits the exact bytes the owned serialiser does (and
+        // neither ever emits instruction text — deduped via the task id).
+        let a = store.to_json().to_string();
+        let b = crate::workload::trace_to_json(&owned).to_string();
+        assert_eq!(a, b);
+        assert!(!a.contains("Translate the following"));
+        // And parses straight back into an identical store.
+        let back = TraceStore::from_json(&Json::parse(&a).unwrap()).unwrap();
+        assert_eq!(back.metas(), store.metas());
+        assert_eq!(back.arena_bytes(), store.arena_bytes());
+    }
+
+    #[test]
+    fn streaming_gen_is_resumable_mid_trace() {
+        let spec = TraceSpec {
+            n_requests: 60,
+            seed: 5,
+            ..Default::default()
+        };
+        let whole = TraceStore::generate(&spec);
+        let mut store = TraceStore::new();
+        let mut gen = StreamingTraceGen::new(&spec);
+        let mut n = 0;
+        while let Some(m) = gen.next_into(&mut store) {
+            assert_eq!(m, whole.meta(n));
+            n += 1;
+            assert_eq!(gen.remaining(), spec.n_requests - n);
+        }
+        assert_eq!(n, 60);
+        assert!(gen.next_into(&mut store).is_none());
+    }
+
+    #[test]
+    fn detached_meta_carries_numbers_only() {
+        let spec = TraceSpec {
+            n_requests: 3,
+            ..Default::default()
+        };
+        let owned = generate_trace(&spec);
+        let m = RequestMeta::detached(&owned[1]);
+        assert_eq!(m.id, owned[1].id);
+        assert_eq!(m.request_len, owned[1].request_len);
+        assert_eq!(m.gen_len, owned[1].gen_len);
+        // Both text addresses are sentinels: accidental resolution
+        // panics (out of bounds) rather than aliasing a live store's
+        // first instruction or yielding "".
+        assert_eq!(m.instr, u32::MAX);
+        assert_eq!(m.span, Span::DETACHED);
+    }
+
+    #[test]
+    #[should_panic]
+    fn resolving_detached_instruction_against_store_panics() {
+        let spec = TraceSpec {
+            n_requests: 2,
+            ..Default::default()
+        };
+        let owned = generate_trace(&spec);
+        let store = TraceStore::generate(&spec);
+        let detached = RequestMeta::detached(&owned[0]);
+        let _ = store.instruction(&detached);
+    }
+
+    #[test]
+    #[should_panic]
+    fn resolving_detached_user_input_against_store_panics() {
+        let spec = TraceSpec {
+            n_requests: 2,
+            ..Default::default()
+        };
+        let owned = generate_trace(&spec);
+        let store = TraceStore::generate(&spec);
+        let detached = RequestMeta::detached(&owned[0]);
+        let _ = store.user_input(&detached);
+    }
+}

@@ -75,8 +75,16 @@ pub fn generate_trace(spec: &TraceSpec) -> Vec<Request> {
     out
 }
 
-/// Serialise a trace to JSON (text payloads included: traces are replayable
-/// through the real predictor which embeds the text).
+/// Serialise a trace to JSON (user-input text included: traces are
+/// replayable through the real predictor which embeds the text).
+///
+/// Instruction text is deliberately **not** emitted: the `task` id stands
+/// for it and [`TaskId::instruction`] reconstructs it on load, so the
+/// per-task instruction is stored exactly once-per-trace (by id) instead
+/// of once-per-request — the on-disk analogue of the `TraceStore` dedup.
+/// Byte-identical to [`crate::workload::TraceStore::to_json`] (asserted
+/// in the store's tests); kept as a direct loop so serialising an owned
+/// trace performs no intermediate arena copy.
 pub fn trace_to_json(reqs: &[Request]) -> Json {
     Json::Arr(
         reqs.iter()
@@ -95,29 +103,59 @@ pub fn trace_to_json(reqs: &[Request]) -> Json {
     )
 }
 
-/// Parse a trace back from JSON.
+/// One parsed trace-JSON record (user input borrowed from the JSON
+/// value).  The single schema definition shared by the owned and store
+/// deserialisers, so the two cannot drift on keys or defaults.
+pub(crate) struct TraceRecord<'a> {
+    pub id: u64,
+    pub task: TaskId,
+    pub user_input: &'a str,
+    pub user_input_len: u32,
+    pub request_len: u32,
+    pub gen_len: u32,
+    pub arrival: f64,
+}
+
+/// Parse one record of the trace JSON schema (see [`trace_to_json`]).
+pub(crate) fn parse_trace_record(item: &Json) -> anyhow::Result<TraceRecord<'_>> {
+    let task_idx = item
+        .get("task")
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("trace: missing task"))?;
+    let task = *TaskId::ALL
+        .get(task_idx)
+        .ok_or_else(|| anyhow::anyhow!("trace: bad task index"))?;
+    Ok(TraceRecord {
+        id: item.get("id").as_u64().unwrap_or(0),
+        task,
+        user_input: item.get("user_input").as_str().unwrap_or(""),
+        user_input_len: item.get("uil").as_u64().unwrap_or(0) as u32,
+        request_len: item.get("len").as_u64().unwrap_or(0) as u32,
+        gen_len: item.get("gen").as_u64().unwrap_or(1) as u32,
+        arrival: item.get("arrival").as_f64().unwrap_or(0.0),
+    })
+}
+
+/// Parse a trace back from JSON (old and new files share the schema —
+/// neither ever carried instruction text; instructions reconstruct from
+/// the task id).  [`crate::workload::TraceStore::from_json`] is the
+/// zero-materialisation route for the serving path.
 pub fn trace_from_json(j: &Json) -> anyhow::Result<Vec<Request>> {
     let arr = j
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("trace: expected array"))?;
     let mut out = Vec::with_capacity(arr.len());
     for item in arr {
-        let task_idx = item
-            .get("task")
-            .as_usize()
-            .ok_or_else(|| anyhow::anyhow!("trace: missing task"))?;
-        let task = *TaskId::ALL
-            .get(task_idx)
-            .ok_or_else(|| anyhow::anyhow!("trace: bad task index"))?;
+        let rec = parse_trace_record(item)?;
         out.push(Request {
-            id: item.get("id").as_u64().unwrap_or(0),
-            task,
-            instruction: task.instruction().to_string(),
-            user_input: item.get("user_input").as_str().unwrap_or("").to_string(),
-            user_input_len: item.get("uil").as_u64().unwrap_or(0) as u32,
-            request_len: item.get("len").as_u64().unwrap_or(0) as u32,
-            gen_len: item.get("gen").as_u64().unwrap_or(1) as u32,
-            arrival: item.get("arrival").as_f64().unwrap_or(0.0),
+            id: rec.id,
+            task: rec.task,
+            instruction: rec.task.instruction().to_string(),
+            user_input: rec.user_input.to_string(),
+            user_input_len: rec.user_input_len,
+            request_len: rec.request_len,
+            gen_len: rec.gen_len,
+            arrival: rec.arrival,
         });
     }
     Ok(out)
@@ -173,6 +211,25 @@ mod tests {
             assert_eq!(x.user_input, y.user_input);
             assert_eq!(x.request_len, y.request_len);
             assert_eq!(x.gen_len, y.gen_len);
+        }
+    }
+
+    #[test]
+    fn json_carries_task_id_not_instruction_text() {
+        // Satellite: instructions are stored by task id, never as text —
+        // loading reconstructs them via `TaskId::instruction()`.
+        let trace = generate_trace(&TraceSpec {
+            n_requests: 16,
+            ..Default::default()
+        });
+        let text = trace_to_json(&trace).to_string();
+        assert!(!text.contains("instruction"));
+        for t in TaskId::ALL {
+            assert!(!text.contains(t.instruction()));
+        }
+        let back = trace_from_json(&Json::parse(&text).unwrap()).unwrap();
+        for (x, y) in trace.iter().zip(&back) {
+            assert_eq!(x.instruction, y.instruction);
         }
     }
 

@@ -80,9 +80,14 @@ fn served_logs_improve_a_cold_predictor() {
     let logs = out.db.requests_between(0.0, f64::INFINITY);
     assert_eq!(logs.len(), 600);
 
-    // Fresh predictor trained only on logged requests from the run.
+    // Fresh predictor trained only on logged requests from the run.  The
+    // compact log carries metas; trace ids index the owned trace, which
+    // is the same text the run's store interned.
     let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
-    let reqs: Vec<_> = logs.iter().map(|l| l.request.clone()).collect();
+    let reqs: Vec<_> = logs
+        .iter()
+        .map(|l| trace[l.meta.id as usize].clone())
+        .collect();
     p.train(&reqs);
 
     let split = build_predictor_split(LlmProfile::ChatGlm6B, 1, 150, 1024, 29);

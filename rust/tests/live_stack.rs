@@ -11,7 +11,7 @@ use magnus::predictor::{GenLenPredictor, Variant};
 use magnus::server::{serve_trace, LivePolicy, ServeOptions};
 use magnus::sim::MagnusPolicy;
 use magnus::workload::dataset::build_predictor_split;
-use magnus::workload::{generate_trace, LlmProfile, PredictedRequest, Request, TaskId, TraceSpec};
+use magnus::workload::{generate_trace, LlmProfile, Request, TaskId, TraceSpec, TraceStore};
 
 fn have_artifacts() -> bool {
     let ok = std::path::Path::new("artifacts/manifest.json").exists();
@@ -21,20 +21,24 @@ fn have_artifacts() -> bool {
     ok
 }
 
-fn req(id: u64, input: &str, gen: u32) -> PredictedRequest {
-    PredictedRequest {
-        request: Request {
-            id,
-            task: TaskId::Bf,
-            instruction: "Fix bugs in the following code:".into(),
-            user_input: input.into(),
-            user_input_len: input.len() as u32,
-            request_len: input.len() as u32 + 32,
-            gen_len: gen,
-            arrival: 0.0,
-        },
-        predicted_gen_len: gen,
+fn req(id: u64, input: &str, gen: u32) -> Request {
+    Request {
+        id,
+        task: TaskId::Bf,
+        instruction: "Fix bugs in the following code:".into(),
+        user_input: input.into(),
+        user_input_len: input.len() as u32,
+        request_len: input.len() as u32 + 32,
+        gen_len: gen,
+        arrival: 0.0,
     }
+}
+
+/// Intern `reqs` and form one batch (id `bid`) over the whole store.
+fn batch_of(bid: u64, reqs: &[Request]) -> (TraceStore, Batch) {
+    let store = TraceStore::from_requests(reqs);
+    let b = Batch::of_store(bid, &store);
+    (store, b)
 }
 
 /// The §II-D batch procedure on real compute: iteration count equals the
@@ -45,10 +49,15 @@ fn real_batch_semantics_match_paper() {
         return;
     }
     let mut srv = PjrtBatchServer::load("artifacts").unwrap();
-    let mut b = Batch::new(0, req(0, "int main() {}", 3), 0.0);
-    b.requests.push(req(1, "def f(): pass", 12));
-    b.requests.push(req(2, "x = 1", 7));
-    let out = srv.serve(&b).unwrap();
+    let (store, b) = batch_of(
+        0,
+        &[
+            req(0, "int main() {}", 3),
+            req(1, "def f(): pass", 12),
+            req(2, "x = 1", 7),
+        ],
+    );
+    let out = srv.serve(&b, &store).unwrap();
     match out.outcome {
         BatchOutcome::Completed { per_request, .. } => {
             // G(B) = 12; every request runs 12 iterations.
@@ -73,12 +82,17 @@ fn batchmates_do_not_change_generation() {
         return;
     }
     let mut srv = PjrtBatchServer::load("artifacts").unwrap();
-    let solo = Batch::new(0, req(0, "alpha beta", 8), 0.0);
-    let solo_out = srv.serve(&solo).unwrap();
+    let (solo_store, solo) = batch_of(0, &[req(0, "alpha beta", 8)]);
+    let solo_out = srv.serve(&solo, &solo_store).unwrap();
 
-    let mut duo = Batch::new(1, req(0, "alpha beta", 8), 0.0);
-    duo.requests.push(req(1, "some other much longer input text!", 8));
-    let duo_out = srv.serve(&duo).unwrap();
+    let (duo_store, duo) = batch_of(
+        1,
+        &[
+            req(0, "alpha beta", 8),
+            req(1, "some other much longer input text!", 8),
+        ],
+    );
+    let duo_out = srv.serve(&duo, &duo_store).unwrap();
 
     assert_eq!(
         solo_out.generated[0], duo_out.generated[0],

@@ -14,19 +14,19 @@ use magnus::logdb::{BatchLog, LogDb};
 use magnus::scheduler::{select, BatchView};
 use magnus::util::prop::prop_check;
 use magnus::util::Rng;
-use magnus::workload::{PredictedRequest, Request, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
 
 fn request(id: u64, len: u32, pred: u32, arrival: f64) -> PredictedRequest {
     PredictedRequest {
-        request: Request {
+        meta: RequestMeta {
             id,
             task: TaskId::Gc,
-            instruction: String::new(),
-            user_input: String::new(),
+            instr: u32::MAX,
             user_input_len: len,
             request_len: len,
             gen_len: pred,
             arrival,
+            span: Span::DETACHED,
         },
         predicted_gen_len: pred,
     }

@@ -1,0 +1,240 @@
+//! Golden equivalence of the zero-copy request plumbing.
+//!
+//! The compact path — `TraceStore` arena + `Copy` `RequestMeta`s through
+//! batcher, scheduler, engine, log DB and continuous learning — must
+//! replay the **owned-`Request` reference** (`sim::reference`, an
+//! independent implementation that clones requests at arrival and into
+//! its logs, evaluates Algorithm 1 by raw Eq. 2–5 member scans, and
+//! linear-scans fresh scheduler views) bit for bit: same records, same
+//! OOM counts, same estimator/predictor telemetry, across the
+//! Magnus-family policies and every `DispatchMode`.  The trace layer has
+//! its own golden: the streaming arena generator must emit byte-for-byte
+//! the trace the owned generator emits.
+
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::sim::{
+    run_magnus_owned, run_magnus_store_with, trained_predictor, DispatchMode, MagnusPolicy,
+    SimOutput,
+};
+use magnus::util::prop::prop_check;
+use magnus::workload::{generate_trace, TraceSpec, TraceStore};
+
+/// Field-by-field bitwise comparison of two sim outputs (including the
+/// predictor telemetry the dispatch-equivalence harness doesn't need —
+/// here the two sides run different predict call shapes, so it's load-
+/// bearing).
+fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len(), "{ctx}");
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.request_id, y.request_id, "{ctx}");
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{ctx}");
+        assert_eq!(
+            x.finish.to_bits(),
+            y.finish.to_bits(),
+            "{ctx}: request {} finish {} vs {}",
+            x.request_id,
+            x.finish,
+            y.finish
+        );
+        assert_eq!(x.valid_tokens, y.valid_tokens, "{ctx}");
+        assert_eq!(x.invalid_tokens, y.invalid_tokens, "{ctx}");
+    }
+    assert_eq!(a.metrics.oom_events, b.metrics.oom_events, "{ctx}");
+    assert_eq!(a.db.n_requests(), b.db.n_requests(), "{ctx}");
+    assert_eq!(a.db.n_batches(), b.db.n_batches(), "{ctx}");
+    assert_eq!(a.pred_errors.len(), b.pred_errors.len(), "{ctx}");
+    for (x, y) in a.pred_errors.iter().zip(&b.pred_errors) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx} pred_errors t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx} pred_errors err");
+    }
+    assert_eq!(a.est_errors.len(), b.est_errors.len(), "{ctx}");
+    for (x, y) in a.est_errors.iter().zip(&b.est_errors) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx} est_errors t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx} est_errors err");
+    }
+    let (sa, sb) = (a.metrics.summarise(), b.metrics.summarise());
+    for (va, vb, name) in [
+        (sa.request_throughput, sb.request_throughput, "thr"),
+        (sa.mean_response_time, sb.mean_response_time, "mean_rt"),
+        (sa.p95_response_time, sb.p95_response_time, "p95_rt"),
+        (sa.token_throughput, sb.token_throughput, "tok"),
+        (sa.valid_token_throughput, sb.valid_token_throughput, "vtok"),
+    ] {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: summary {name} {va} vs {vb}");
+    }
+}
+
+/// The tentpole golden: compact store path ≡ owned reference, across all
+/// Magnus-family policies × all dispatch modes, on an overload workload
+/// that exercises joins, OOM splits and (for full Magnus) the
+/// continuous-learning sweeps.
+#[test]
+fn compact_store_path_replays_owned_reference_across_policies_and_modes() {
+    let cfg = ServingConfig::default();
+    let spec = TraceSpec {
+        rate: 9.0,
+        n_requests: 300,
+        seed: 101,
+        ..Default::default()
+    };
+    let trace = generate_trace(&spec);
+    let store = TraceStore::generate(&spec); // streaming, not interned-from-owned
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+
+    for policy in [MagnusPolicy::magnus(), MagnusPolicy::glp(7), MagnusPolicy::abp()] {
+        let owned = run_magnus_owned(
+            &cfg,
+            &policy,
+            trained_predictor(&cfg, 60),
+            &engine,
+            &trace,
+        );
+        for mode in [DispatchMode::Indexed, DispatchMode::Cached, DispatchMode::Fresh] {
+            let compact = run_magnus_store_with(
+                &cfg,
+                &policy,
+                trained_predictor(&cfg, 60),
+                &engine,
+                &store,
+                mode,
+            );
+            assert_identical(
+                &compact,
+                &owned,
+                &format!(
+                    "sched={:?} cap={} est={} mode={mode:?}",
+                    policy.sched, policy.max_batch_size, policy.use_estimator
+                ),
+            );
+        }
+    }
+}
+
+/// OOM recovery equivalence under a shrunken memory budget: splits,
+/// re-queues and reload timing must replay identically through the
+/// compact and owned representations.
+#[test]
+fn compact_and_owned_agree_under_oom_splits() {
+    let mut cfg = ServingConfig::default();
+    cfg.gpu.model_resident_bytes = 20_000_000_000;
+    cfg.mem_margin = 1.0; // no planner guard: force engine OOMs
+    // Same workload shape tests/integration.rs proves produces OOM splits.
+    let spec = TraceSpec {
+        rate: 20.0,
+        n_requests: 300,
+        seed: 17,
+        ..Default::default()
+    };
+    let trace = generate_trace(&spec);
+    let store = TraceStore::generate(&spec);
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let owned = run_magnus_owned(
+        &cfg,
+        &MagnusPolicy::magnus(),
+        trained_predictor(&cfg, 50),
+        &engine,
+        &trace,
+    );
+    let compact = run_magnus_store_with(
+        &cfg,
+        &MagnusPolicy::magnus(),
+        trained_predictor(&cfg, 50),
+        &engine,
+        &store,
+        DispatchMode::Indexed,
+    );
+    assert!(owned.metrics.oom_events > 0, "workload must exercise OOM");
+    assert_identical(&compact, &owned, "oom-split workload");
+}
+
+/// Property test: random traces, loads and policies — the compact path
+/// replays the owned reference bit for bit.
+#[test]
+fn compact_replays_owned_on_random_traces() {
+    prop_check(8, |rng| {
+        let cfg = ServingConfig::default();
+        let spec = TraceSpec {
+            rate: rng.range_f64(2.0, 20.0),
+            n_requests: rng.range_usize(40, 130),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let policy = match rng.range_u64(0, 3) {
+            0 => MagnusPolicy::magnus(),
+            1 => MagnusPolicy::glp(7),
+            _ => MagnusPolicy::abp(),
+        };
+        let mode = match rng.range_u64(0, 3) {
+            0 => DispatchMode::Indexed,
+            1 => DispatchMode::Cached,
+            _ => DispatchMode::Fresh,
+        };
+        let trace = generate_trace(&spec);
+        let store = TraceStore::generate(&spec);
+        let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+        let owned =
+            run_magnus_owned(&cfg, &policy, trained_predictor(&cfg, 40), &engine, &trace);
+        let compact = run_magnus_store_with(
+            &cfg,
+            &policy,
+            trained_predictor(&cfg, 40),
+            &engine,
+            &store,
+            mode,
+        );
+        assert_identical(
+            &compact,
+            &owned,
+            &format!(
+                "rate={:.1} n={} seed={:#x} sched={:?} mode={mode:?}",
+                spec.rate, spec.n_requests, spec.seed, policy.sched
+            ),
+        );
+    });
+}
+
+/// Trace-layer golden: the streaming arena generator emits byte-for-byte
+/// the trace the owned generator emits (all fields, all texts), across
+/// random specs — including task-weight and input-cap variants.
+#[test]
+fn streaming_generator_is_bitwise_identical_to_owned_generator() {
+    prop_check(10, |rng| {
+        let mut task_weights = Vec::new();
+        if rng.range_u64(0, 2) == 0 {
+            task_weights = (0..8).map(|_| rng.f64() + 0.01).collect();
+        }
+        let spec = TraceSpec {
+            rate: rng.range_f64(0.5, 30.0),
+            n_requests: rng.range_usize(1, 200),
+            l_cap: if rng.range_u64(0, 2) == 0 {
+                0
+            } else {
+                rng.range_u64(8, 300) as u32
+            },
+            task_weights,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let owned = generate_trace(&spec);
+        let store = TraceStore::generate(&spec);
+        assert_eq!(store.len(), owned.len());
+        for (i, r) in owned.iter().enumerate() {
+            let v = store.view(i);
+            assert_eq!(v.id, r.id);
+            assert_eq!(v.task, r.task);
+            assert_eq!(v.instruction, r.instruction);
+            assert_eq!(v.user_input, r.user_input);
+            assert_eq!(v.user_input_len, r.user_input_len);
+            assert_eq!(v.request_len, r.request_len);
+            assert_eq!(v.gen_len, r.gen_len);
+            assert_eq!(v.arrival.to_bits(), r.arrival.to_bits());
+        }
+        // Round trip through owned materialisation too.
+        let back = store.to_requests();
+        for (x, y) in back.iter().zip(&owned) {
+            assert_eq!(x.user_input, y.user_input);
+            assert_eq!(x.instruction, y.instruction);
+        }
+    });
+}
