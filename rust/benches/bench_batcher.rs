@@ -8,7 +8,7 @@ use magnus::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use magnus::config::ServingConfig;
 use magnus::util::bench::BenchSuite;
 use magnus::util::Rng;
-use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
 
 fn req(id: u64, rng: &mut Rng) -> PredictedRequest {
     let len = rng.range_u64(8, 1024) as u32;
@@ -17,6 +17,7 @@ fn req(id: u64, rng: &mut Rng) -> PredictedRequest {
         meta: RequestMeta {
             id,
             task: TaskId::Gc,
+            store: StoreId::DETACHED,
             instr: u32::MAX,
             user_input_len: len,
             request_len: len,

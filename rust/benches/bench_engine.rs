@@ -11,13 +11,14 @@ use magnus::engine::cost::CostModelEngine;
 use magnus::engine::InferenceEngine;
 use magnus::runtime::ModelRuntime;
 use magnus::util::bench::BenchSuite;
-use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
 
 fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
     PredictedRequest {
         meta: RequestMeta {
             id,
             task: TaskId::Gc,
+            store: StoreId::DETACHED,
             instr: u32::MAX,
             user_input_len: len,
             request_len: len,

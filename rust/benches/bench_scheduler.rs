@@ -15,7 +15,7 @@ use magnus::logdb::{LogDb, RequestLog};
 use magnus::scheduler::{select, BatchView};
 use magnus::util::bench::{record_sched_bench, BenchSuite};
 use magnus::util::{Json, Rng};
-use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
 
 const DEPTHS: [usize; 3] = [16, 256, 4096];
 const NOW: f64 = 1_000.0;
@@ -57,6 +57,7 @@ fn filled_batcher(n: usize, seed: u64) -> AdaptiveBatcher {
                 meta: RequestMeta {
                     id: i as u64,
                     task: TaskId::Gc,
+                    store: StoreId::DETACHED,
                     instr: u32::MAX,
                     user_input_len: len,
                     request_len: len,
@@ -77,6 +78,7 @@ fn rlog(at: f64) -> RequestLog {
         meta: RequestMeta {
             id: 0,
             task: TaskId::Gc,
+            store: StoreId::DETACHED,
             instr: u32::MAX,
             user_input_len: 5,
             request_len: 6,

@@ -15,13 +15,23 @@
 //!    which the owned shape cannot reach — are the zero-copy-specific
 //!    evidence.  The owned reference is capped at 10⁵.
 //!
+//! 3. **Trace I/O (binary format + mmap arena)** — loading the same
+//!    replayed trace via the JSON route (read + parse + re-intern: the
+//!    whole text arena is materialised before the first request can
+//!    dispatch) vs `TraceStore::open_mmap` (O(metas) binary decode, the
+//!    kernel pages text on demand) vs the read-into-memory fallback, at
+//!    N ∈ {10⁴, 10⁵, 10⁶} → `BENCH_trace.json`, wall time + peak heap.
+//!
 //! Section 1 asserts bit-for-bit behavioural equivalence before timing
 //! anything; section 2 asserts it for every row the owned reference
 //! runs at (N ≤ 10⁵ — rows above the cap are completion-checked only;
 //! representation equivalence at those sizes rests on the golden suite
-//! in tests/store_equivalence.rs and tests/dispatch_equivalence.rs).
-//! `MAGNUS_BENCH_QUICK` or `MAGNUS_SCALE_SMOKE` limit the scale sweep
-//! to N = 10⁴ (CI smoke).
+//! in tests/store_equivalence.rs and tests/dispatch_equivalence.rs);
+//! section 3 asserts every loaded store is bit-identical (metas, arena,
+//! instruction table) to the generated one before its numbers count
+//! (run-level equivalence of the loaded stores is tests/trace_io.rs's
+//! job).  `MAGNUS_BENCH_QUICK` or `MAGNUS_SCALE_SMOKE` limit both
+//! sweeps to N = 10⁴ (CI smoke).
 
 use std::time::Instant;
 
@@ -33,7 +43,9 @@ use magnus::sim::{
     MagnusPolicy,
 };
 use magnus::util::alloc::{peak_bytes, reset_peak, CountingAllocator};
-use magnus::util::bench::{record_scale_bench, record_sim_bench, ScalePoint};
+use magnus::util::bench::{
+    record_scale_bench, record_sim_bench, record_trace_bench, ScalePoint, TracePoint,
+};
 use magnus::util::Json;
 use magnus::workload::{generate_trace, TraceSpec, TraceStore};
 
@@ -282,6 +294,112 @@ fn main() {
     .expect("write BENCH_scale.json");
     println!("wrote {scale_path}");
 
+    // ── section 3: trace I/O — JSON parse vs binary open ──────────────
+    println!("\n== trace I/O: JSON parse vs binary mmap open (N {ns:?}) ==");
+    let tmp = |n: usize, ext: &str| {
+        std::env::temp_dir().join(format!(
+            "magnus_bench_trace_{}_{n}.{ext}",
+            std::process::id()
+        ))
+    };
+    let mut tpoints: Vec<TracePoint> = Vec::new();
+    for &n in ns {
+        let spec = TraceSpec {
+            rate: SCALE_RATE,
+            n_requests: n,
+            seed: 7,
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        let bin_path = tmp(n, "mtr");
+        let json_path = tmp(n, "json");
+        store.write_file(&bin_path).expect("write binary trace");
+        std::fs::write(&json_path, store.to_json().to_string()).expect("write JSON trace");
+        let file_bytes = std::fs::metadata(&bin_path).unwrap().len() as usize;
+
+        // JSON route: read + parse + re-intern — the pre-PR-5 load path.
+        reset_peak();
+        let base = peak_bytes();
+        let t0 = Instant::now();
+        let text = std::fs::read_to_string(&json_path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let json_store = TraceStore::from_json(&j).unwrap();
+        let json_parse_s = t0.elapsed().as_secs_f64();
+        let json_peak = peak_bytes() - base;
+        drop(j);
+        drop(text);
+
+        // Binary route, mapped: O(metas) decode, arena paged on demand.
+        reset_peak();
+        let base = peak_bytes();
+        let t0 = Instant::now();
+        let mstore = TraceStore::open_mmap(&bin_path).unwrap();
+        let mmap_open_s = t0.elapsed().as_secs_f64();
+        let mmap_peak = peak_bytes() - base;
+
+        // Binary route, read fallback: same decode over owned bytes.
+        reset_peak();
+        let base = peak_bytes();
+        let t0 = Instant::now();
+        let rstore = TraceStore::open_read(&bin_path).unwrap();
+        let read_open_s = t0.elapsed().as_secs_f64();
+        let read_peak = peak_bytes() - base;
+
+        // Every loaded store must be bit-identical before numbers count.
+        for (loaded, route) in [(&json_store, "json"), (&mstore, "mmap"), (&rstore, "read")]
+        {
+            assert_eq!(loaded.metas(), store.metas(), "{route} metas diverged");
+            assert_eq!(
+                loaded.arena_str(),
+                store.arena_str(),
+                "{route} arena diverged"
+            );
+            assert_eq!(
+                loaded.instruction_table(),
+                store.instruction_table(),
+                "{route} instruction table diverged"
+            );
+        }
+
+        let fmt_mb = |b: usize| b as f64 / 1e6;
+        println!(
+            "  n={n:>9}: json {json_parse_s:8.3} s / {:8.1} MB peak | mmap open \
+             {mmap_open_s:8.4} s / {:6.1} MB peak{} | read open {read_open_s:8.4} s / \
+             {:6.1} MB peak → {:.1}x faster open, {:.1}x lower peak",
+            fmt_mb(json_peak),
+            fmt_mb(mmap_peak),
+            if mstore.is_mmap_backed() { "" } else { " (fallback!)" },
+            fmt_mb(read_peak),
+            json_parse_s / mmap_open_s.max(1e-12),
+            json_peak as f64 / mmap_peak.max(1) as f64,
+        );
+        tpoints.push(TracePoint {
+            n,
+            file_bytes,
+            arena_bytes: store.arena_bytes(),
+            json_parse_s,
+            json_peak_bytes: json_peak,
+            mmap_open_s,
+            mmap_open_peak_bytes: mmap_peak,
+            read_open_s,
+            read_open_peak_bytes: read_peak,
+            mmap_backed: mstore.is_mmap_backed(),
+        });
+        let _ = std::fs::remove_file(&bin_path);
+        let _ = std::fs::remove_file(&json_path);
+    }
+    let trace_path = format!("{}/../BENCH_trace.json", env!("CARGO_MANIFEST_DIR"));
+    record_trace_bench(
+        &trace_path,
+        &tpoints,
+        vec![
+            ("smoke", Json::Bool(smoke)),
+            ("source", Json::str("benches/bench_sim.rs")),
+        ],
+    )
+    .expect("write BENCH_trace.json");
+    println!("wrote {trace_path}");
+
     // No wall-clock assertion: shared runners are noisy and a spurious
     // red would gate merges on scheduler jitter.  The hard gates are the
     // bitwise equivalences asserted above; speedups and peak bytes are
@@ -289,7 +407,8 @@ fn main() {
     println!(
         "\nPASS: dispatch modes bit-for-bit equivalent; store ≡ owned \
          asserted up to N = {OWNED_CAP} (larger rows completion-checked; \
-         equivalence there rests on the golden suite); dispatch speedup \
+         equivalence there rests on the golden suite); loaded stores \
+         (json/mmap/read) bit-identical at every N; dispatch speedup \
          {speedup:.2}x recorded"
     );
 }

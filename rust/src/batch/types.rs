@@ -142,13 +142,14 @@ impl Batch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::{RequestMeta, Span, TaskId};
+    use crate::workload::{RequestMeta, Span, StoreId, TaskId};
 
     pub(crate) fn req(id: u64, len: u32, gen: u32, pred: u32, arrival: f64) -> PredictedRequest {
         PredictedRequest {
             meta: RequestMeta {
                 id,
                 task: TaskId::Gc,
+                store: StoreId::DETACHED,
                 instr: u32::MAX,
                 user_input_len: len.saturating_sub(1),
                 request_len: len,

@@ -185,7 +185,7 @@ fn fig6(_args: &Args) {
     use magnus::batch::{AdaptiveBatcher, Batch, BatcherConfig};
     use magnus::engine::cost::CostModelEngine;
     use magnus::engine::InferenceEngine;
-    use magnus::workload::{PredictedRequest, RequestMeta, Span};
+    use magnus::workload::{PredictedRequest, RequestMeta, Span, StoreId};
 
     println!("\n== Fig 6: case study — 18 small + 3 large requests ==");
     let cfg = ServingConfig::default();
@@ -195,6 +195,7 @@ fn fig6(_args: &Args) {
         meta: RequestMeta {
             id,
             task: TaskId::Gc,
+            store: StoreId::DETACHED,
             instr: u32::MAX,
             user_input_len: l,
             request_len: l,

@@ -123,13 +123,14 @@ mod tests {
     use super::*;
     use crate::batch::Batch;
     use crate::config::ServingConfig;
-    use crate::workload::{PredictedRequest, RequestMeta, Span, TaskId};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
 
     fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
         PredictedRequest {
             meta: RequestMeta {
                 id,
                 task: TaskId::Gc,
+                store: StoreId::DETACHED,
                 instr: u32::MAX,
                 user_input_len: len,
                 request_len: len,

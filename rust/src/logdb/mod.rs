@@ -261,13 +261,14 @@ impl LogDb {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::{Span, TaskId};
+    use crate::workload::{Span, StoreId, TaskId};
 
     fn rlog(at: f64) -> RequestLog {
         RequestLog {
             meta: RequestMeta {
                 id: 0,
                 task: TaskId::Gc,
+                store: StoreId::DETACHED,
                 instr: u32::MAX,
                 user_input_len: 5,
                 request_len: 6,

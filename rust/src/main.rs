@@ -5,13 +5,17 @@
 //!              compute via the AOT artifacts) under a chosen policy
 //!   sim        run a policy over a synthetic workload on the calibrated
 //!              cost-model engine (V100-scale, fast)
-//!   gen-trace  write a workload trace as JSON
+//!   gen-trace  write a workload trace (JSON, or the binary format when
+//!              the output path ends in .mtr)
+//!   pack-trace convert a JSON trace to the mmap-able binary format
 //!   eval-pred  train + evaluate the four predictor variants
 //!
 //! Examples:
 //!   magnus sim --policy magnus --rate 10 --requests 800
 //!   magnus serve --workers 2 --requests 20 --time-scale 20
 //!   magnus gen-trace --rate 5 --requests 1000 --out trace.json
+//!   magnus gen-trace --rate 5 --requests 1000000 --out trace.mtr
+//!   magnus pack-trace --in trace.json --out trace.mtr
 //!   magnus eval-pred --train 600 --test 200
 
 use magnus::config::ServingConfig;
@@ -19,15 +23,17 @@ use magnus::predictor::{GenLenPredictor, Variant};
 use magnus::sim::{run_policy, Policy};
 use magnus::util::cli::Args;
 use magnus::util::stats::rmse;
+use magnus::util::Json;
 use magnus::workload::dataset::build_predictor_split;
-use magnus::workload::{generate_trace, trace_to_json, LlmProfile, TraceSpec};
+use magnus::workload::{generate_trace, LlmProfile, TraceSpec, TraceStore};
 
-const USAGE: &str = "magnus <serve|sim|gen-trace|eval-pred> [options]
+const USAGE: &str = "magnus <serve|sim|gen-trace|pack-trace|eval-pred> [options]
   common:    --config <file.json>  --seed N
   sim:       --policy VS|VSQ|CCB|GLP|ABP|Magnus  --rate R --requests N --train N
   serve:     --policy magnus|vanilla --workers N --rate R --requests N
-             --time-scale S --g-max N --l-cap N [--trace file.json]
-  gen-trace: --rate R --requests N --out file.json
+             --time-scale S --g-max N --l-cap N [--trace file.json|file.mtr]
+  gen-trace: --rate R --requests N --out file.json|file.mtr (binary, mmap-able)
+  pack-trace: --in trace.json [--out trace.mtr]
   eval-pred: --train N --test N";
 
 fn main() {
@@ -72,7 +78,10 @@ fn run() -> anyhow::Result<()> {
         }
         "serve" => cmd_serve(&args, &mut cfg)?,
         "gen-trace" => {
-            let trace = generate_trace(&TraceSpec {
+            // Streaming generation: the trace lands in a TraceStore arena
+            // (never a Vec<Request>), and serialises to either schema —
+            // the store's JSON is byte-identical to the owned route's.
+            let store = TraceStore::generate(&TraceSpec {
                 rate: args.get_f64("rate", 5.0),
                 n_requests: args.get_usize("requests", 1000),
                 g_max: args.get_u64("g-max", 1024) as u32,
@@ -80,14 +89,40 @@ fn run() -> anyhow::Result<()> {
                 seed: cfg.seed,
                 ..Default::default()
             });
-            let json = trace_to_json(&trace).to_string_pretty();
             match args.get("out") {
-                Some(path) => {
-                    std::fs::write(path, json)?;
-                    println!("wrote {} requests to {path}", trace.len());
+                Some(path) if path.ends_with(".mtr") => {
+                    store.write_file(path)?;
+                    println!(
+                        "wrote {} requests (binary trace, {} arena bytes) to {path}",
+                        store.len(),
+                        store.arena_bytes()
+                    );
                 }
-                None => println!("{json}"),
+                Some(path) => {
+                    std::fs::write(path, store.to_json().to_string_pretty())?;
+                    println!("wrote {} requests to {path}", store.len());
+                }
+                None => println!("{}", store.to_json().to_string_pretty()),
             }
+        }
+        "pack-trace" => {
+            let input = args
+                .get("in")
+                .ok_or_else(|| anyhow::anyhow!("pack-trace needs --in <trace.json>"))?;
+            let out = args.get("out").map(str::to_string).unwrap_or_else(|| {
+                format!("{}.mtr", input.strip_suffix(".json").unwrap_or(input))
+            });
+            let text = std::fs::read_to_string(input)?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let store = TraceStore::from_json(&j)?;
+            store.write_file(&out)?;
+            println!(
+                "packed {} requests: {input} ({} JSON bytes) -> {out} ({} bytes; \
+                 opens O(metas) via mmap)",
+                store.len(),
+                text.len(),
+                std::fs::metadata(&out)?.len()
+            );
         }
         "eval-pred" => {
             let split = build_predictor_split(
@@ -115,28 +150,32 @@ fn run() -> anyhow::Result<()> {
 /// Replay a workload through the LIVE cluster (real PJRT compute).
 #[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
-    use magnus::server::{serve_trace, LivePolicy, ServeOptions};
+    use std::sync::Arc;
+
+    use magnus::server::{serve_trace_store, LivePolicy, ServeOptions};
     use magnus::sim::MagnusPolicy;
-    use magnus::workload::trace_from_json;
 
     let g_max = args.get_u64("g-max", 24) as u32;
     let l_cap = args.get_u64("l-cap", 40) as u32;
     cfg.gpu.g_max = g_max;
-    let trace = match args.get("trace") {
+    // All three sources produce the same Arc<TraceStore> the workers
+    // share; a binary trace maps read-only (open is O(metas), and
+    // several server processes replaying one trace share the mapping).
+    let store = match args.get("trace") {
+        Some(path) if path.ends_with(".mtr") => Arc::new(TraceStore::open_mmap(path)?),
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
-            let j = magnus::util::Json::parse(&text)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            trace_from_json(&j)?
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            Arc::new(TraceStore::from_json(&j)?)
         }
-        None => generate_trace(&TraceSpec {
+        None => Arc::new(TraceStore::generate(&TraceSpec {
             rate: args.get_f64("rate", 2.0),
             n_requests: args.get_usize("requests", 20),
             g_max,
             l_cap,
             seed: cfg.seed,
             ..Default::default()
-        }),
+        })),
     };
     let policy_name = args.get_or("policy", "magnus").to_ascii_lowercase();
     let (policy, predictor) = match policy_name.as_str() {
@@ -154,7 +193,7 @@ fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
             (LivePolicy::Magnus(MagnusPolicy::magnus()), Some(p))
         }
     };
-    let metrics = serve_trace(
+    let metrics = serve_trace_store(
         cfg,
         &ServeOptions {
             artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
@@ -164,7 +203,7 @@ fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
         },
         policy,
         predictor,
-        &trace,
+        store,
     )?;
     let s = metrics.summarise();
     println!(

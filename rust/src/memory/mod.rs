@@ -65,13 +65,14 @@ impl MemoryModel {
 mod tests {
     use super::*;
     use crate::util::prop::prop_check;
-    use crate::workload::{PredictedRequest, RequestMeta, Span, TaskId};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
 
     fn req(len: u32, gen: u32, pred: u32) -> PredictedRequest {
         PredictedRequest {
             meta: RequestMeta {
                 id: 0,
                 task: TaskId::Gc,
+                store: StoreId::DETACHED,
                 instr: u32::MAX,
                 user_input_len: len,
                 request_len: len,

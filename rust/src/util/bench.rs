@@ -399,6 +399,83 @@ pub fn record_scale_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// One measured point of the trace-I/O sweep (`BENCH_trace.json`).
+///
+/// The same generated trace serialised both ways, then loaded back: the
+/// `json_*` fields time the JSON route (read + parse + re-intern, which
+/// materialises the whole text arena before the first request can
+/// dispatch), the `mmap_*` fields time `TraceStore::open_mmap` (O(metas)
+/// decode; the kernel pages the arena on demand), and the `read_*`
+/// fields the explicit read-into-memory fallback over the same decode.
+/// Peaks are [`crate::util::alloc`] high-water bytes over each load.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    pub n: usize,
+    /// Binary trace file size (the mapped footprint).
+    pub file_bytes: usize,
+    pub arena_bytes: usize,
+    pub json_parse_s: f64,
+    pub json_peak_bytes: usize,
+    pub mmap_open_s: f64,
+    pub mmap_open_peak_bytes: usize,
+    pub read_open_s: f64,
+    pub read_open_peak_bytes: usize,
+    /// Whether `open_mmap` actually mapped (false = platform fell back).
+    pub mmap_backed: bool,
+}
+
+/// Record the trace-I/O sweep as `BENCH_trace.json` at the repo root
+/// (same family as the other `BENCH_*.json` records).  Derives the
+/// headline ratios — binary-open speedup over JSON parse and the peak-
+/// heap reduction — at the largest measured N.
+pub fn record_trace_bench(
+    path: &str,
+    points: &[TracePoint],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let arr = |f: &dyn Fn(&TracePoint) -> Json| Json::Arr(points.iter().map(f).collect());
+    let mut fields = vec![
+        ("bench", Json::str("trace_io_load")),
+        ("n", arr(&|p| Json::num(p.n as f64))),
+        ("file_bytes", arr(&|p| Json::num(p.file_bytes as f64))),
+        ("arena_bytes", arr(&|p| Json::num(p.arena_bytes as f64))),
+        ("json_parse_s", arr(&|p| Json::num(p.json_parse_s))),
+        (
+            "json_peak_bytes",
+            arr(&|p| Json::num(p.json_peak_bytes as f64)),
+        ),
+        ("mmap_open_s", arr(&|p| Json::num(p.mmap_open_s))),
+        (
+            "mmap_open_peak_bytes",
+            arr(&|p| Json::num(p.mmap_open_peak_bytes as f64)),
+        ),
+        ("read_open_s", arr(&|p| Json::num(p.read_open_s))),
+        (
+            "read_open_peak_bytes",
+            arr(&|p| Json::num(p.read_open_peak_bytes as f64)),
+        ),
+        ("mmap_backed", arr(&|p| Json::Bool(p.mmap_backed))),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    if let Some(p) = points.last() {
+        fields.push(("compared_n", Json::num(p.n as f64)));
+        fields.push((
+            "open_speedup",
+            Json::num(p.json_parse_s / p.mmap_open_s.max(1e-12)),
+        ));
+        fields.push((
+            "peak_bytes_ratio",
+            Json::num(p.json_peak_bytes as f64 / p.mmap_open_peak_bytes.max(1) as f64),
+        ));
+    }
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,6 +588,45 @@ mod tests {
         assert_eq!(j.get("n").as_arr().unwrap().len(), 3);
         // the owned column is null past the cap
         assert!(matches!(j.get("owned_s").as_arr().unwrap()[2], Json::Null));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_trace_bench_derives_ratios_at_largest_n() {
+        let path = std::env::temp_dir().join("magnus_bench_trace_test.json");
+        let path = path.to_string_lossy().into_owned();
+        let points = [
+            TracePoint {
+                n: 10_000,
+                file_bytes: 2_000_000,
+                arena_bytes: 1_500_000,
+                json_parse_s: 0.2,
+                json_peak_bytes: 12_000_000,
+                mmap_open_s: 0.01,
+                mmap_open_peak_bytes: 600_000,
+                read_open_s: 0.02,
+                read_open_peak_bytes: 2_600_000,
+                mmap_backed: true,
+            },
+            TracePoint {
+                n: 1_000_000,
+                file_bytes: 200_000_000,
+                arena_bytes: 150_000_000,
+                json_parse_s: 20.0,
+                json_peak_bytes: 1_200_000_000,
+                mmap_open_s: 0.5,
+                mmap_open_peak_bytes: 60_000_000,
+                read_open_s: 1.0,
+                read_open_peak_bytes: 260_000_000,
+                mmap_backed: true,
+            },
+        ];
+        record_trace_bench(&path, &points, vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("compared_n").as_u64(), Some(1_000_000));
+        assert_eq!(j.get("open_speedup").as_f64(), Some(40.0));
+        assert_eq!(j.get("peak_bytes_ratio").as_f64(), Some(20.0));
+        assert_eq!(j.get("n").as_arr().unwrap().len(), 2);
         let _ = std::fs::remove_file(&path);
     }
 

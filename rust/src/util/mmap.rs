@@ -1,0 +1,290 @@
+//! Read-only memory-mapped files behind a small safe wrapper.
+//!
+//! The repo vendors no crates (no `libc`, no `memmap2`), so the two
+//! syscalls the trace loader needs — `mmap` / `munmap` — are declared
+//! directly against the C library every unix target already links.  The
+//! wrapper keeps all the unsafety in one place:
+//!
+//! * [`Mmap`] owns a `PROT_READ`/`MAP_PRIVATE` mapping of a whole file
+//!   and derefs to `&[u8]`.  This process never writes through the
+//!   mapping and never remaps, so sharing `&Mmap` across threads is
+//!   data-race free (`Send + Sync`); read-only private mappings still
+//!   share page-cache pages between processes mapping the same file.
+//! * [`FileBytes`] is the enum the trace loader actually consumes: the
+//!   same bytes either mapped ([`FileBytes::Mapped`]) or read into an
+//!   owned `Vec` ([`FileBytes::Owned`]).  [`map_file`] prefers the
+//!   mapping and silently falls back to a read when mapping is
+//!   unavailable; [`read_file`] always takes the owned route.  Callers
+//!   decode through `&[u8]` either way, so the two backings share one
+//!   code path and one test suite.
+//!
+//! The mapped route is compiled only for **64-bit unix** targets: the
+//! `extern` declaration below passes the file offset as `i64`, which
+//! matches `off_t` exactly where `off_t` is 64-bit.  On 32-bit unix
+//! (where the plain `mmap` symbol takes a 32-bit `off_t`, so the call
+//! would be a wrong-ABI foreign call) and on non-unix targets,
+//! [`map_file`] is simply [`read_file`] — same decode, no mapping.
+//!
+//! Caveat (inherent to file mappings, not this wrapper): the mapped
+//! bytes are only as immutable as the underlying file.  If another
+//! process truncates it while mapped, touching the vanished pages
+//! raises `SIGBUS`; if another process rewrites it **in place** (same
+//! size, `dd conv=notrunc`-style), the mapped bytes change underneath
+//! us — and callers that cached validation results about the content
+//! (e.g. the trace loader's one-time UTF-8 check backing later
+//! `from_utf8_unchecked` resolution) would be left holding a violated
+//! invariant, which is undefined behavior, not a crash.  `MAP_PRIVATE`
+//! narrows but does not close that window (untouched pages still track
+//! the file).  Trace files are written once and then replayed
+//! read-only; `map_file` MUST NOT be pointed at files that concurrent
+//! writers may modify — use [`read_file`] for anything mutable.
+
+use std::io;
+use std::ops::Deref;
+use std::path::Path;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    // The C library is always linked on unix targets; these two are in
+    // POSIX and off_t is 64-bit on every 64-bit unix target rust ships
+    // for (the module is cfg-gated to exactly those, keeping the i64
+    // offset ABI-correct).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only, private mapping of an entire file.
+///
+/// Dereferences to the file's bytes.  Read-only and fixed-size for its
+/// whole lifetime; unmapped on drop.  See the module docs for the
+/// file-immutability precondition.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and never remapped or unmapped until
+// Drop, so concurrent shared reads from any thread are data-race free.
+// (The module-level caveat about external file modification applies to
+// single-threaded use equally; it is a file-immutability precondition,
+// not a threading one.)
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for Mmap {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for Mmap {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Mmap {
+    /// Map `file` read-only in its entirety.  Fails with the OS error if
+    /// the file cannot be mapped (callers typically fall back to a
+    /// plain read); a zero-length file is an error here too (`mmap(2)`
+    /// rejects len 0) and is handled by [`map_file`].
+    pub fn of_file(file: &std::fs::File) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "mmap: zero-length file",
+            ));
+        }
+        let len = usize::try_from(len).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidInput, "mmap: file exceeds address space")
+        })?;
+        // SAFETY: fd is a valid open file for the duration of the call;
+        // we request a fresh PROT_READ/MAP_PRIVATE mapping at a
+        // kernel-chosen address and check for MAP_FAILED.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap {
+            ptr: ptr as *const u8,
+            len,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Deref for Mmap {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+        // self; the kernel keeps it valid until munmap in Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len are exactly what mmap returned; after this the
+        // struct is gone, so no dangling deref can observe the unmap.
+        unsafe {
+            sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+/// File contents, either mapped or owned — one decode path for both.
+#[derive(Debug)]
+pub enum FileBytes {
+    /// Kernel-paged, read-only mapping ([`map_file`]'s preferred route).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped(Mmap),
+    /// Bytes read into memory (the fallback route, and [`read_file`]).
+    Owned(Vec<u8>),
+}
+
+impl FileBytes {
+    /// Whether these bytes are backed by a live mapping (telemetry /
+    /// bench labelling; decoding never branches on it).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            FileBytes::Mapped(_) => true,
+            FileBytes::Owned(_) => false,
+        }
+    }
+}
+
+impl Deref for FileBytes {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            FileBytes::Mapped(m) => m,
+            FileBytes::Owned(v) => v,
+        }
+    }
+}
+
+/// Map `path` read-only, falling back to an in-memory read when mapping
+/// is unavailable (non-unix or 32-bit target, zero-length file, or an
+/// mmap error such as a filesystem that forbids mappings).  A missing
+/// file is an error on both routes.  The file must not be modified
+/// while the returned bytes are alive (module docs).
+pub fn map_file(path: &Path) -> io::Result<FileBytes> {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    {
+        let file = std::fs::File::open(path)?;
+        match Mmap::of_file(&file) {
+            Ok(m) => Ok(FileBytes::Mapped(m)),
+            Err(_) => read_file(path),
+        }
+    }
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    {
+        read_file(path)
+    }
+}
+
+/// Read `path` fully into owned bytes — the explicit fallback route
+/// (tests exercise it on every platform so the two backings cannot
+/// drift).
+pub fn read_file(path: &Path) -> io::Result<FileBytes> {
+    Ok(FileBytes::Owned(std::fs::read(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("magnus_mmap_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn mapped_and_read_bytes_are_identical() {
+        let path = temp("roundtrip");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let mapped = map_file(&path).unwrap();
+        let owned = read_file(&path).unwrap();
+        assert_eq!(&*mapped, payload.as_slice());
+        assert_eq!(&*owned, payload.as_slice());
+        assert!(!owned.is_mapped());
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(mapped.is_mapped());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned() {
+        let path = temp("empty");
+        std::fs::write(&path, b"").unwrap();
+        let bytes = map_file(&path).unwrap();
+        assert_eq!(bytes.len(), 0);
+        assert!(!bytes.is_mapped());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_errors_on_both_routes() {
+        let path = temp("missing_never_written");
+        assert!(map_file(&path).is_err());
+        assert!(read_file(&path).is_err());
+    }
+
+    #[test]
+    fn mapping_outlives_the_file_handle_and_shares_across_threads() {
+        let path = temp("threads");
+        let payload = b"shared read-only mapping".repeat(500);
+        std::fs::write(&path, &payload).unwrap();
+        let bytes = std::sync::Arc::new(map_file(&path).unwrap());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let b = std::sync::Arc::clone(&bytes);
+                s.spawn(move || {
+                    assert_eq!(&b.as_ref()[..], payload.as_slice());
+                });
+            }
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,6 +1,6 @@
 //! Substrate utilities: deterministic RNG + samplers, JSON, statistics,
-//! CLI parsing, micro-bench harness, property-testing harness and a
-//! scoped-thread parallel map.
+//! CLI parsing, micro-bench harness, property-testing harness, a
+//! scoped-thread parallel map and a read-only mmap wrapper.
 //!
 //! These exist because the build environment vendors only the `xla` crate's
 //! dependency closure — `rand`, `serde`, `clap`, `criterion` and `proptest`
@@ -11,6 +11,7 @@ pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod mmap;
 pub mod par;
 pub mod prop;
 pub mod rng;

@@ -10,6 +10,9 @@ pub mod store;
 pub mod trace;
 
 pub use apps::{App, LlmProfile, TaskId};
-pub use request::{PredictedRequest, Request, RequestMeta, RequestView, Span};
-pub use store::{StreamingTraceGen, TraceStore};
+pub use request::{PredictedRequest, Request, RequestMeta, RequestView, Span, StoreId};
+pub use store::{
+    StreamingTraceGen, TraceStore, TRACE_HEADER_BYTES, TRACE_MAGIC, TRACE_META_BYTES,
+    TRACE_VERSION,
+};
 pub use trace::{generate_trace, trace_from_json, trace_to_json, TraceSpec};

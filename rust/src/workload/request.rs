@@ -24,7 +24,39 @@
 //! tokenizer) needs, resolved either from an owned `Request` or from a
 //! store + meta without cloning.
 
+use std::sync::atomic::{AtomicU32, Ordering};
+
 use crate::workload::apps::TaskId;
+
+/// Provenance stamp of a [`TraceStore`]: every live store mints a
+/// process-unique id at construction and stamps it into each
+/// [`RequestMeta`] it records; text resolution debug-asserts the stamp,
+/// so a meta resolved against the *wrong* live store fails loudly
+/// instead of silently aliasing that store's arena (a wrong-store span
+/// that happens to be in range would otherwise return someone else's
+/// text).
+///
+/// The stamp is runtime-only identity: it is **not** persisted in the
+/// binary trace format (reopening a file mints a fresh id) and is
+/// excluded from [`RequestMeta`]'s `PartialEq` (two stores interning the
+/// same trace hold *equal* metas with *different* provenance).
+///
+/// [`TraceStore`]: crate::workload::TraceStore
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreId(u32);
+
+impl StoreId {
+    /// Sentinel of a meta with no backing store ([`RequestMeta::detached`]
+    /// and synthetic test/bench metas).  Never minted for a live store,
+    /// so the provenance debug-assert fires on any resolution attempt.
+    pub const DETACHED: StoreId = StoreId(0);
+
+    /// Mint a fresh process-unique store id (live stores only).
+    pub fn mint() -> StoreId {
+        static NEXT: AtomicU32 = AtomicU32::new(1);
+        StoreId(NEXT.fetch_add(1, Ordering::Relaxed))
+    }
+}
 
 /// Byte range of one request's user-input text inside a
 /// [`TraceStore`](crate::workload::TraceStore) arena.
@@ -108,12 +140,15 @@ impl Request {
 /// `store.instruction(&meta)` / `store.view_of(&meta)`); a meta built via
 /// [`RequestMeta::detached`] has no backing arena and must never be
 /// resolved (engine/scheduler/test paths that read only numbers).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy)]
 pub struct RequestMeta {
     /// Unique, monotonically increasing id.
     pub id: u64,
     /// Which application task produced it.
     pub task: TaskId,
+    /// Provenance: the store that minted this meta ([`StoreId::DETACHED`]
+    /// when there is none).  Debug-asserted on every text resolution.
+    pub store: StoreId,
     /// Index into the owning store's deduplicated instruction table.
     pub instr: u32,
     /// User input length in tokens.
@@ -126,6 +161,23 @@ pub struct RequestMeta {
     pub arrival: f64,
     /// User-input text location in the owning store's arena.
     pub span: Span,
+}
+
+impl PartialEq for RequestMeta {
+    /// Content equality — the provenance stamp is deliberately excluded:
+    /// two stores interning the same trace (streamed vs owned vs
+    /// reopened from a file) hold equal metas even though each carries
+    /// its own [`StoreId`].
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+            && self.task == other.task
+            && self.instr == other.instr
+            && self.user_input_len == other.user_input_len
+            && self.request_len == other.request_len
+            && self.gen_len == other.gen_len
+            && self.arrival == other.arrival
+            && self.span == other.span
+    }
 }
 
 impl RequestMeta {
@@ -152,6 +204,7 @@ impl RequestMeta {
         RequestMeta {
             id: r.id,
             task: r.task,
+            store: StoreId::DETACHED,
             instr: u32::MAX,
             user_input_len: r.user_input_len,
             request_len: r.request_len,

@@ -1,0 +1,58 @@
+//! Helpers shared by the golden-equivalence integration suites
+//! (`dispatch_equivalence`, `store_equivalence`, `trace_io`).  A
+//! subdirectory module, not a test target: each suite pulls it in with
+//! `mod common;`, so there is exactly one definition of the equivalence
+//! gate and it cannot drift between suites.
+
+use magnus::sim::SimOutput;
+
+/// Field-by-field bitwise comparison of two sim outputs: per-request
+/// records, OOM counts, log-DB sizes, predictor and estimator telemetry
+/// (values AND timestamps), and the derived summary statistics.  This is
+/// the union of every suite's needs — e.g. the predictor telemetry is
+/// load-bearing where the two sides run different predict call shapes
+/// (store vs owned), and harmlessly redundant elsewhere.
+pub fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len(), "{ctx}");
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.request_id, y.request_id, "{ctx}");
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{ctx}");
+        assert_eq!(
+            x.finish.to_bits(),
+            y.finish.to_bits(),
+            "{ctx}: request {} finish {} vs {}",
+            x.request_id,
+            x.finish,
+            y.finish
+        );
+        assert_eq!(x.valid_tokens, y.valid_tokens, "{ctx}");
+        assert_eq!(x.invalid_tokens, y.invalid_tokens, "{ctx}");
+    }
+    assert_eq!(a.metrics.oom_events, b.metrics.oom_events, "{ctx}");
+    assert_eq!(a.db.n_requests(), b.db.n_requests(), "{ctx}");
+    assert_eq!(a.db.n_batches(), b.db.n_batches(), "{ctx}");
+    assert_eq!(a.pred_errors.len(), b.pred_errors.len(), "{ctx}");
+    for (x, y) in a.pred_errors.iter().zip(&b.pred_errors) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx} pred_errors t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx} pred_errors err");
+    }
+    assert_eq!(a.est_errors.len(), b.est_errors.len(), "{ctx}");
+    for (x, y) in a.est_errors.iter().zip(&b.est_errors) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx} est_errors t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx} est_errors err");
+    }
+    let (sa, sb) = (a.metrics.summarise(), b.metrics.summarise());
+    for (va, vb, name) in [
+        (sa.request_throughput, sb.request_throughput, "thr"),
+        (sa.mean_response_time, sb.mean_response_time, "mean_rt"),
+        (sa.p95_response_time, sb.p95_response_time, "p95_rt"),
+        (sa.token_throughput, sb.token_throughput, "tok"),
+        (sa.valid_token_throughput, sb.valid_token_throughput, "vtok"),
+    ] {
+        assert_eq!(
+            va.to_bits(),
+            vb.to_bits(),
+            "{ctx}: summary {name} {va} vs {vb}"
+        );
+    }
+}

@@ -21,6 +21,9 @@ use magnus::util::prop::prop_check;
 use magnus::util::Json;
 use magnus::workload::{generate_trace, TraceSpec};
 
+mod common;
+use common::assert_identical;
+
 fn run_mode(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
@@ -39,42 +42,6 @@ fn run_mode(
     let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
     let predictor = trained_predictor(cfg, train);
     run_magnus_with(cfg, policy, predictor, &engine, &trace, mode)
-}
-
-/// Field-by-field bitwise comparison of two sim outputs.
-fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
-    assert_eq!(a.metrics.records.len(), b.metrics.records.len(), "{ctx}");
-    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
-        assert_eq!(x.request_id, y.request_id, "{ctx}");
-        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{ctx}");
-        assert_eq!(
-            x.finish.to_bits(),
-            y.finish.to_bits(),
-            "{ctx}: request {} finish {} vs {}",
-            x.request_id,
-            x.finish,
-            y.finish
-        );
-        assert_eq!(x.valid_tokens, y.valid_tokens, "{ctx}");
-        assert_eq!(x.invalid_tokens, y.invalid_tokens, "{ctx}");
-    }
-    assert_eq!(a.metrics.oom_events, b.metrics.oom_events, "{ctx}");
-    assert_eq!(a.db.n_batches(), b.db.n_batches(), "{ctx}");
-    assert_eq!(a.est_errors.len(), b.est_errors.len(), "{ctx}");
-    for (x, y) in a.est_errors.iter().zip(&b.est_errors) {
-        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}");
-        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}");
-    }
-    let (sa, sb) = (a.metrics.summarise(), b.metrics.summarise());
-    for (va, vb, name) in [
-        (sa.request_throughput, sb.request_throughput, "thr"),
-        (sa.mean_response_time, sb.mean_response_time, "mean_rt"),
-        (sa.p95_response_time, sb.p95_response_time, "p95_rt"),
-        (sa.token_throughput, sb.token_throughput, "tok"),
-        (sa.valid_token_throughput, sb.valid_token_throughput, "vtok"),
-    ] {
-        assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: summary {name} {va} vs {vb}");
-    }
 }
 
 /// Acceptance-scale golden run (rate 10, n 600, full Magnus) + perf

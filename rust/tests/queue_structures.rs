@@ -14,13 +14,14 @@ use magnus::logdb::{BatchLog, LogDb};
 use magnus::scheduler::{select, BatchView};
 use magnus::util::prop::prop_check;
 use magnus::util::Rng;
-use magnus::workload::{PredictedRequest, RequestMeta, Span, TaskId};
+use magnus::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
 
 fn request(id: u64, len: u32, pred: u32, arrival: f64) -> PredictedRequest {
     PredictedRequest {
         meta: RequestMeta {
             id,
             task: TaskId::Gc,
+            store: StoreId::DETACHED,
             instr: u32::MAX,
             user_input_len: len,
             request_len: len,

@@ -1,0 +1,408 @@
+//! Differential trace-I/O suite: the binary trace format and its two
+//! file backings must be indistinguishable from the in-memory store.
+//!
+//! * **Round-trip properties** — random traces written to a file and
+//!   reopened via the mmap route and the read-into-memory fallback must
+//!   be byte-identical to the generated store (metas, arena bytes,
+//!   instruction table, re-serialised bytes) and produce bit-identical
+//!   `run_magnus_store` output — also versus the JSON route, the
+//!   pre-binary load path.
+//! * **Corrupt-input rejection** — a table of mutated valid files
+//!   (truncations, bad magic/version, inflated counts, spans past the
+//!   arena or splitting a UTF-8 sequence, bad indices, non-UTF-8 text)
+//!   must all decode to errors: never a panic, never a store that could
+//!   alias text.  Driven through `from_binary_bytes` AND both file-open
+//!   routes, which share one decode.
+//! * **Concurrency smoke** — N threads resolving `RequestView`s out of
+//!   one shared mmap-backed `Arc<TraceStore>` while a Magnus sim runs
+//!   over the same store; results must match the single-threaded run.
+//! * **Provenance** — a meta resolved against the wrong live store must
+//!   panic loudly (debug builds) even when the two stores hold
+//!   identical bytes, where aliasing would be silent.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::sim::{run_magnus_store, trained_predictor, MagnusPolicy};
+use magnus::util::prop::prop_check;
+use magnus::util::Json;
+use magnus::workload::{
+    TaskId, TraceSpec, TraceStore, TRACE_HEADER_BYTES, TRACE_META_BYTES, TRACE_VERSION,
+};
+
+mod common;
+use common::assert_identical;
+
+/// Collision-free temp path (unique per process AND per call, so
+/// parallel tests never race on a file).
+fn temp_path(tag: &str) -> PathBuf {
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "magnus_trace_io_{}_{n}_{tag}.mtr",
+        std::process::id()
+    ))
+}
+
+/// Representation equality of a loaded store against the original:
+/// every byte the format carries.
+fn assert_same_store(loaded: &TraceStore, original: &TraceStore, ctx: &str) {
+    assert_eq!(loaded.metas(), original.metas(), "{ctx}: metas");
+    assert_eq!(loaded.arena_str(), original.arena_str(), "{ctx}: arena");
+    assert_eq!(
+        loaded.instruction_table(),
+        original.instruction_table(),
+        "{ctx}: instruction table"
+    );
+    assert_eq!(loaded.to_binary(), original.to_binary(), "{ctx}: bytes");
+}
+
+#[test]
+fn mmap_and_read_backings_replay_the_in_memory_store_bitwise() {
+    prop_check(8, |rng| {
+        let cfg = ServingConfig::default();
+        let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+        let spec = TraceSpec {
+            rate: rng.range_f64(2.0, 12.0),
+            n_requests: rng.range_usize(20, 160),
+            l_cap: if rng.range_u64(0, 2) == 0 {
+                0
+            } else {
+                rng.range_u64(8, 200) as u32
+            },
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        let path = temp_path("prop");
+        store.write_file(&path).unwrap();
+
+        let mmap = TraceStore::open_mmap(&path).unwrap();
+        let read = TraceStore::open_read(&path).unwrap();
+        assert!(mmap.is_file_backed());
+        assert!(read.is_file_backed() && !read.is_mmap_backed());
+        assert_same_store(&mmap, &store, "mmap");
+        assert_same_store(&read, &store, "read fallback");
+
+        // The JSON route (pre-binary load path) must agree too.
+        let json_store =
+            TraceStore::from_json(&Json::parse(&store.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(json_store.metas(), store.metas(), "json: metas");
+        assert_eq!(json_store.arena_str(), store.arena_str(), "json: arena");
+
+        // Bit-identical serving behaviour on every backing.
+        let run = |s: &TraceStore| {
+            run_magnus_store(
+                &cfg,
+                &MagnusPolicy::magnus(),
+                trained_predictor(&cfg, 120),
+                &engine,
+                s,
+            )
+        };
+        let base = run(&store);
+        assert_identical(&base, &run(&mmap), "mmap vs in-memory");
+        assert_identical(&base, &run(&read), "read vs in-memory");
+        assert_identical(&base, &run(&json_store), "json vs in-memory");
+
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
+fn corrupt_binary_traces_are_rejected_never_panicking() {
+    let store = TraceStore::generate(&TraceSpec {
+        n_requests: 12,
+        seed: 3,
+        ..Default::default()
+    });
+    let valid = store.to_binary();
+    assert!(
+        TraceStore::from_binary_bytes(valid.clone()).is_ok(),
+        "pristine bytes must decode"
+    );
+
+    // Header field offsets (see the format docs in workload/store.rs).
+    let meta0 = TRACE_HEADER_BYTES;
+    let instr_table = meta0 + 12 * TRACE_META_BYTES;
+    type Mutation = Box<dyn Fn(Vec<u8>) -> Vec<u8>>;
+    let put_u64 = |b: &mut [u8], off: usize, v: u64| {
+        b[off..off + 8].copy_from_slice(&v.to_le_bytes());
+    };
+    let put_u32 = |b: &mut [u8], off: usize, v: u32| {
+        b[off..off + 4].copy_from_slice(&v.to_le_bytes());
+    };
+    let cases: Vec<(&str, Mutation)> = vec![
+        ("empty file", Box::new(|_| Vec::new())),
+        (
+            "truncated header",
+            Box::new(|b: Vec<u8>| b[..TRACE_HEADER_BYTES - 7].to_vec()),
+        ),
+        (
+            "truncated mid meta table",
+            Box::new(move |b: Vec<u8>| b[..meta0 + TRACE_META_BYTES / 2].to_vec()),
+        ),
+        (
+            "one byte chopped off the arena",
+            Box::new(|mut b: Vec<u8>| {
+                b.pop();
+                b
+            }),
+        ),
+        (
+            "one trailing garbage byte",
+            Box::new(|mut b: Vec<u8>| {
+                b.push(0);
+                b
+            }),
+        ),
+        (
+            "bad magic",
+            Box::new(|mut b: Vec<u8>| {
+                b[0] ^= 0xFF;
+                b
+            }),
+        ),
+        (
+            "wrong version",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u32(&mut b, 8, TRACE_VERSION + 1);
+                b
+            }),
+        ),
+        (
+            "nonzero reserved header field",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u32(&mut b, 12, 0xDEAD);
+                b
+            }),
+        ),
+        (
+            "meta count inflated to overflow",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u64(&mut b, 16, u64::MAX);
+                b
+            }),
+        ),
+        (
+            "instruction count inflated",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u64(&mut b, 24, u64::MAX / 8);
+                b
+            }),
+        ),
+        (
+            "meta span start past the arena",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u64(&mut b, meta0 + 16, u64::MAX / 2);
+                b
+            }),
+        ),
+        (
+            "meta span length overruns the arena",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u32(&mut b, meta0 + 24, u32::MAX);
+                b
+            }),
+        ),
+        (
+            "bad task id",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u32(&mut b, meta0 + 28, 999);
+                b
+            }),
+        ),
+        (
+            "instruction index out of range",
+            Box::new(move |mut b: Vec<u8>| {
+                put_u32(&mut b, meta0 + 32, u32::MAX);
+                b
+            }),
+        ),
+        (
+            "non-UTF-8 instruction text",
+            Box::new(move |mut b: Vec<u8>| {
+                b[instr_table + 4] = 0xFF; // first byte after the length prefix
+                b
+            }),
+        ),
+        (
+            "non-UTF-8 arena byte",
+            Box::new(|mut b: Vec<u8>| {
+                let last = b.len() - 1; // arena is the final section
+                b[last] = 0xFF;
+                b
+            }),
+        ),
+    ];
+
+    for (name, mutate) in cases {
+        let bytes = mutate(valid.clone());
+        // In-memory decode: an error, not a panic, not a store.
+        match catch_unwind(AssertUnwindSafe(|| TraceStore::from_binary_bytes(bytes.clone()))) {
+            Ok(res) => assert!(res.is_err(), "corrupt case {name:?} was accepted"),
+            Err(_) => panic!("corrupt case {name:?} panicked instead of erroring"),
+        }
+        // And identically through real files on both open routes.
+        let path = temp_path("corrupt");
+        std::fs::write(&path, &bytes).unwrap();
+        let via_mmap = || TraceStore::open_mmap(&path);
+        let via_read = || TraceStore::open_read(&path);
+        let routes: [(&str, &dyn Fn() -> anyhow::Result<TraceStore>); 2] =
+            [("mmap", &via_mmap), ("read", &via_read)];
+        for (route, open) in routes {
+            match catch_unwind(AssertUnwindSafe(open)) {
+                Ok(res) => {
+                    assert!(res.is_err(), "corrupt case {name:?} accepted via {route}")
+                }
+                Err(_) => panic!("corrupt case {name:?} panicked via {route}"),
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn span_splitting_a_utf8_sequence_is_rejected() {
+    // Craft a store whose arena holds a multi-byte char, then point a
+    // span's end into the middle of it: accepting that span would make
+    // per-access unchecked slicing unsound, so decode must reject it.
+    let mut store = TraceStore::new();
+    store.push(0, TaskId::Gc, "fix grammar", "héllo", 5, 8, 4, 0.25);
+    let mut bytes = store.to_binary();
+    let span_len_off = TRACE_HEADER_BYTES + 24;
+    bytes[span_len_off..span_len_off + 4].copy_from_slice(&2u32.to_le_bytes());
+    let err = TraceStore::from_binary_bytes(bytes).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("UTF-8"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// FNV-1a over every view the store can resolve — forces full text
+/// resolution (arena + instruction table) in a deterministic order.
+fn trace_checksum(store: &TraceStore) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for i in 0..store.len() {
+        let v = store.view(i);
+        eat(v.user_input.as_bytes());
+        eat(v.instruction.as_bytes());
+        eat(&v.gen_len.to_le_bytes());
+    }
+    h
+}
+
+#[test]
+fn threads_resolving_views_from_shared_mmap_store_match_single_threaded_sim() {
+    let spec = TraceSpec {
+        rate: 8.0,
+        n_requests: 200,
+        seed: 31,
+        ..Default::default()
+    };
+    let store = TraceStore::generate(&spec);
+    let path = temp_path("concurrent");
+    store.write_file(&path).unwrap();
+    let shared = Arc::new(TraceStore::open_mmap(&path).unwrap());
+
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let run = |s: &TraceStore| {
+        run_magnus_store(
+            &cfg,
+            &MagnusPolicy::magnus(),
+            trained_predictor(&cfg, 100),
+            &engine,
+            s,
+        )
+    };
+    let single = run(&store);
+    let expect = trace_checksum(&store);
+    assert_eq!(trace_checksum(&shared), expect, "backings must agree before racing");
+
+    let concurrent = std::thread::scope(|scope| {
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&shared);
+                scope.spawn(move || {
+                    (0..8).map(|_| trace_checksum(&s)).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        // The sim runs over the same shared mapping while readers hammer
+        // every span of it.
+        let out = run(&shared);
+        for r in readers {
+            for sum in r.join().expect("reader thread panicked") {
+                assert_eq!(sum, expect, "concurrent resolution diverged");
+            }
+        }
+        out
+    });
+    assert_identical(&single, &concurrent, "mmap-shared concurrent vs single-threaded");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resolving_a_meta_against_the_wrong_store_panics_loudly() {
+    if !cfg!(debug_assertions) {
+        // The provenance stamp is a debug_assert on the resolution hot
+        // path; release builds trade the check for throughput.
+        return;
+    }
+    let spec = TraceSpec {
+        n_requests: 6,
+        seed: 1,
+        ..Default::default()
+    };
+    // Two stores with IDENTICAL content: without the stamp, resolving
+    // a's meta against b would silently alias b's (byte-equal) arena —
+    // exactly the quiet failure the stamp turns into a loud one.
+    let a = TraceStore::generate(&spec);
+    let b = TraceStore::generate(&spec);
+    assert_eq!(a.arena_str(), b.arena_str());
+    let m = a.meta(3);
+    assert_eq!(a.user_input(&m), a.user_input(&m)); // right store: fine
+    for (what, res) in [
+        (
+            "user_input",
+            catch_unwind(AssertUnwindSafe(|| b.user_input(&m).len())),
+        ),
+        (
+            "instruction",
+            catch_unwind(AssertUnwindSafe(|| b.instruction(&m).len())),
+        ),
+        (
+            "view_of",
+            catch_unwind(AssertUnwindSafe(|| b.view_of(&m).request_len)),
+        ),
+    ] {
+        assert!(
+            res.is_err(),
+            "{what}: wrong-store resolution must panic, not alias"
+        );
+    }
+
+    // Reopening a file mints fresh provenance: metas of the original
+    // store don't resolve against the reopened one (and vice versa).
+    let path = temp_path("provenance");
+    a.write_file(&path).unwrap();
+    let reopened = TraceStore::open_mmap(&path).unwrap();
+    assert_eq!(reopened.user_input(&reopened.meta(3)), a.user_input(&m));
+    assert!(catch_unwind(AssertUnwindSafe(|| reopened.user_input(&m).len())).is_err());
+    assert!(
+        catch_unwind(AssertUnwindSafe(|| a.user_input(&reopened.meta(3)).len())).is_err()
+    );
+    let _ = std::fs::remove_file(&path);
+}
