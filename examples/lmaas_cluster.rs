@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
             n_workers,
             time_scale,
             warm_up: false,
+            ..Default::default()
         },
         LivePolicy::Magnus(MagnusPolicy::magnus()),
         Some(predictor),
@@ -83,6 +84,7 @@ fn main() -> anyhow::Result<()> {
             n_workers,
             time_scale,
             warm_up: false,
+            ..Default::default()
         },
         LivePolicy::Vanilla { fixed_batch: 4 },
         None,

@@ -1,0 +1,126 @@
+//! Robustness degradation curve: the full Magnus pipeline replayed under
+//! an escalating deterministic fault schedule → `BENCH_robustness.json`.
+//!
+//! Each point reruns the SAME trace (same workload seed) under a seeded
+//! [`FaultPlan`] whose crash / transient-error / forced-OOM probabilities
+//! scale with the point's fault rate; the `fault_rate == 0.0` row is the
+//! untouched baseline the degradation ratios divide by.  Two invariants
+//! are asserted before any number is recorded:
+//!
+//! * **exactly-once** — every admitted request completes or is shed
+//!   (`completed + shed == n`) at every fault rate;
+//! * fault-free shape — the baseline row sheds nothing and reports zero
+//!   retries / restarts / fallback predictions.
+//!
+//! `MAGNUS_ROBUSTNESS_SMOKE` (or `MAGNUS_BENCH_QUICK`) shrinks the trace
+//! for CI.
+
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::faults::{FaultPlan, OomStorm, PredictorOutage, Window};
+use magnus::predictor::FallbackMode;
+use magnus::sim::{run_magnus_store_faulted, trained_predictor, DispatchMode, MagnusPolicy};
+use magnus::util::bench::{record_robustness_bench, RobustnessPoint};
+use magnus::workload::{TraceSpec, TraceStore};
+
+const RATE: f64 = 8.0;
+const SEED: u64 = 4242;
+const PREDICTOR_TRAIN: usize = 200;
+
+/// Fault schedule for one sweep point: crash and transient-error
+/// probabilities split the rate, an OOM storm covers the whole span at
+/// half the rate, and a predictor outage blacks out the middle third.
+fn plan_at(fault_rate: f64, span_s: f64) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    if fault_rate <= 0.0 {
+        return plan;
+    }
+    plan.seed = 7;
+    plan.crash_p = fault_rate / 2.0;
+    plan.serve_error_p = fault_rate / 2.0;
+    plan.oom_storms = vec![OomStorm {
+        window: Window::new(0.0, span_s),
+        p: fault_rate / 2.0,
+    }];
+    plan.predictor_outages = vec![PredictorOutage {
+        window: Window::new(0.2 * span_s, 0.5 * span_s),
+        mode: FallbackMode::Heuristic,
+    }];
+    plan.overrun_guard = true;
+    plan
+}
+
+fn main() {
+    let quick = std::env::var("MAGNUS_ROBUSTNESS_SMOKE").is_ok()
+        || std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+    let n: usize = if quick { 250 } else { 800 };
+    // The plan windows are in sim seconds; size them off the nominal
+    // arrival span (n / rate) so every storm actually overlaps traffic.
+    let span_s = n as f64 / RATE;
+
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let store = TraceStore::generate(&TraceSpec {
+        rate: RATE,
+        n_requests: n,
+        seed: SEED,
+        ..Default::default()
+    });
+
+    println!("== robustness fault sweep (n={n}, rate={RATE}) ==");
+    let mut points: Vec<RobustnessPoint> = Vec::new();
+    for &fault_rate in &[0.0, 0.05, 0.15, 0.30] {
+        let plan = plan_at(fault_rate, span_s);
+        let out = run_magnus_store_faulted(
+            &cfg,
+            &MagnusPolicy::magnus(),
+            trained_predictor(&cfg, PREDICTOR_TRAIN),
+            &engine,
+            &store,
+            DispatchMode::Indexed,
+            &plan,
+        );
+        let m = &out.metrics;
+        assert_eq!(
+            m.records.len() + m.shed.len(),
+            n,
+            "exactly-once accounting must close at fault_rate {fault_rate}"
+        );
+        if fault_rate == 0.0 {
+            assert!(m.shed.is_empty(), "fault-free baseline must shed nothing");
+            assert_eq!((m.retries, m.worker_restarts, m.fallback_predictions), (0, 0, 0));
+        }
+        let s = m.summarise();
+        println!(
+            "  rate {:4.2}: {} done, {} shed | thr {:.3} req/s | mean RT {:.1}s | \
+             retries {} | restarts {} | fallbacks {} | OOM {}",
+            fault_rate,
+            s.n_requests,
+            s.shed_requests,
+            s.request_throughput,
+            s.mean_response_time,
+            s.retries,
+            s.worker_restarts,
+            s.fallback_predictions,
+            s.oom_events
+        );
+        points.push(RobustnessPoint {
+            label: format!("fault_rate_{fault_rate}"),
+            fault_rate,
+            n_requests: n,
+            completed: s.n_requests,
+            shed: s.shed_requests,
+            retries: s.retries,
+            worker_restarts: s.worker_restarts,
+            fallback_predictions: s.fallback_predictions,
+            oom_events: s.oom_events,
+            request_throughput: s.request_throughput,
+            mean_response_time: s.mean_response_time,
+            p95_response_time: s.p95_response_time,
+        });
+    }
+
+    let path = format!("{}/../BENCH_robustness.json", env!("CARGO_MANIFEST_DIR"));
+    record_robustness_bench(&path, n, RATE, &points, vec![]).unwrap();
+    println!("wrote {path}");
+}

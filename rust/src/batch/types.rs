@@ -137,6 +137,62 @@ impl Batch {
         };
         (left, right)
     }
+
+    /// Overrun-guard OOM split (ISSUE 6 alternative to the even
+    /// [`Batch::split`]): partition on the engine's observed EOS timing —
+    /// requests that finished before the OOM iteration (the engine
+    /// "samples EOS", so `gen_len < at_iteration` is runtime feedback,
+    /// not a scheduling peek at ground truth) go left unchanged, while
+    /// the still-generating overrunners go right with their prediction
+    /// re-bucketed to at least the iteration they provably reached
+    /// (doubled, clamped to `[at_iteration, G_max]`) so the re-queued
+    /// half is scheduled against an honest length instead of riding the
+    /// same under-prediction back into OOM.  Both halves are marked
+    /// uninsertable.  Returns `Err(self)` when either side would be empty
+    /// (no split possible — the caller falls back to the even split).
+    pub fn split_overrun(
+        self,
+        next_id: u64,
+        at_iteration: u32,
+        g_max: u32,
+    ) -> Result<(Batch, Batch), Batch> {
+        let n_done = self
+            .requests
+            .iter()
+            .filter(|r| r.meta.gen_len < at_iteration)
+            .count();
+        if n_done == 0 || n_done == self.requests.len() {
+            return Err(self);
+        }
+        let (id, created_at) = (self.id, self.created_at);
+        let lo = at_iteration.min(g_max);
+        let mut done = Vec::with_capacity(n_done);
+        let mut over = Vec::with_capacity(self.requests.len() - n_done);
+        for mut r in self.requests {
+            if r.meta.gen_len < at_iteration {
+                done.push(r);
+            } else {
+                r.predicted_gen_len = r
+                    .predicted_gen_len
+                    .saturating_mul(2)
+                    .clamp(lo, g_max.max(1));
+                over.push(r);
+            }
+        }
+        let left = Batch {
+            id,
+            requests: done,
+            created_at,
+            insertable: false,
+        };
+        let right = Batch {
+            id: next_id,
+            requests: over,
+            created_at,
+            insertable: false,
+        };
+        Ok((left, right))
+    }
 }
 
 #[cfg(test)]
@@ -186,5 +242,55 @@ mod tests {
         assert_eq!(r.id, 8);
         // length-sorted halves: every left length <= every right length
         assert!(l.len() <= r.requests.iter().map(|x| x.len()).min().unwrap());
+    }
+
+    #[test]
+    fn split_overrun_partitions_on_observed_eos() {
+        let mut b = Batch::new(3, req(0, 10, 4, 6, 0.0), 0.0);
+        b.requests.push(req(1, 12, 7, 6, 0.0)); // done before iter 8
+        b.requests.push(req(2, 14, 20, 6, 0.0)); // overruns
+        b.requests.push(req(3, 16, 9, 6, 0.0)); // overruns (gen >= 8)
+        let (l, r) = b.split_overrun(4, 8, 64).unwrap();
+        assert_eq!(l.id, 3);
+        assert_eq!(r.id, 4);
+        assert!(!l.insertable && !r.insertable);
+        let lids: Vec<u64> = l.requests.iter().map(|x| x.meta.id).collect();
+        let rids: Vec<u64> = r.requests.iter().map(|x| x.meta.id).collect();
+        assert_eq!(lids, vec![0, 1]);
+        assert_eq!(rids, vec![2, 3]);
+        // finished requests keep their prediction; overrunners re-bucket
+        assert!(l.requests.iter().all(|x| x.predicted_gen_len == 6));
+        // 6*2 = 12 >= at_iteration=8, within g_max
+        assert!(r.requests.iter().all(|x| x.predicted_gen_len == 12));
+    }
+
+    #[test]
+    fn split_overrun_rebucket_clamps_to_overrun_floor_and_g_max() {
+        // prediction so low that doubling stays under the OOM iteration:
+        // the floor lifts it to at_iteration
+        let mut b = Batch::new(0, req(0, 10, 2, 3, 0.0), 0.0);
+        b.requests.push(req(1, 10, 40, 3, 0.0));
+        let (_, r) = b.split_overrun(9, 30, 64).unwrap();
+        assert_eq!(r.requests[0].predicted_gen_len, 30);
+        // g_max caps the floor and the doubling
+        let mut b = Batch::new(0, req(0, 10, 2, 3, 0.0), 0.0);
+        b.requests.push(req(1, 10, 40, 60, 0.0));
+        let (_, r) = b.split_overrun(9, 30, 64).unwrap();
+        assert_eq!(r.requests[0].predicted_gen_len, 64);
+    }
+
+    #[test]
+    fn split_overrun_refuses_empty_sides() {
+        // every request overruns -> no split
+        let mut b = Batch::new(0, req(0, 10, 50, 5, 0.0), 0.0);
+        b.requests.push(req(1, 10, 60, 5, 0.0));
+        assert!(b.split_overrun(9, 8, 64).is_err());
+        // every request already finished -> no split either
+        let mut b = Batch::new(0, req(0, 10, 2, 5, 0.0), 0.0);
+        b.requests.push(req(1, 10, 3, 5, 0.0));
+        let b = b.split_overrun(9, 8, 64).unwrap_err();
+        // the batch comes back intact for the caller's fallback
+        assert_eq!(b.size(), 2);
+        assert_eq!(b.id, 0);
     }
 }

@@ -1,0 +1,248 @@
+//! Fault-injecting engine wrapper (ISSUE 6): wraps any
+//! [`InferenceEngine`] and overlays a [`FaultPlan`]'s injected failures on
+//! its nominal outcomes.
+//!
+//! The wrapper is a *pure observer* of the inner engine: it always runs
+//! the nominal serve first, then decides — statelessly, from the plan's
+//! seeded hash over `(batch_id, attempt)` — whether that dispatch instead
+//! crashed its worker, failed transiently, was killed by a forced-OOM
+//! storm, or was merely slowed by an open stall window.  Because every
+//! decision hashes coordinates rather than advancing a generator, the
+//! same plan replays bit-identically regardless of dispatch interleaving,
+//! and a no-op plan adds zero floating-point operations to the nominal
+//! path (the caller is expected to branch on
+//! [`FaultPlan::is_noop`](crate::faults::FaultPlan::is_noop) and call the
+//! inner engine directly for golden-equivalence paths).
+
+use crate::batch::Batch;
+use crate::engine::{BatchOutcome, InferenceEngine};
+use crate::faults::FaultPlan;
+
+/// What one fault-overlaid dispatch produced.
+#[derive(Debug, Clone)]
+pub enum InjectedOutcome {
+    /// The dispatch ran to an engine outcome (possibly a forced OOM or a
+    /// stall-scaled version of the nominal one).  `forced` marks an OOM
+    /// the plan injected rather than the engine's own memory model.
+    Outcome {
+        outcome: BatchOutcome,
+        forced: bool,
+    },
+    /// The worker crashed mid-serve: the batch is lost in-flight and the
+    /// instance needs a restart.  `wasted_time` elapsed before the crash.
+    Crash { wasted_time: f64 },
+    /// The serve call failed transiently (worker survives): the batch
+    /// must be retried or shed.  `wasted_time` elapsed before the error.
+    TransientError { wasted_time: f64 },
+}
+
+/// An [`InferenceEngine`] plus a [`FaultPlan`] overlay.  Borrows both —
+/// it is a per-call-site view, not an owner.
+pub struct FaultyEngine<'a> {
+    inner: &'a dyn InferenceEngine,
+    plan: &'a FaultPlan,
+}
+
+impl<'a> FaultyEngine<'a> {
+    pub fn new(inner: &'a dyn InferenceEngine, plan: &'a FaultPlan) -> FaultyEngine<'a> {
+        FaultyEngine { inner, plan }
+    }
+
+    /// The wrapped engine, for no-op-plan fast paths that must stay
+    /// byte-identical to legacy dispatch.
+    pub fn inner(&self) -> &'a dyn InferenceEngine {
+        self.inner
+    }
+
+    /// Serve `batch` at simulated/replayed time `now`, dispatch number
+    /// `attempt` (0 for the first try; retries bump it so each redispatch
+    /// redraws its fault decisions).
+    pub fn serve_batch_at(&self, now: f64, batch: &Batch, attempt: u64) -> InjectedOutcome {
+        let nominal = self.inner.serve_batch(batch);
+        let stall = self.plan.stall_factor(now);
+        let base = stall
+            * match &nominal {
+                BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                BatchOutcome::Oom { wasted_time, .. } => *wasted_time,
+            };
+        if self.plan.injects_crash(batch.id, attempt) {
+            return InjectedOutcome::Crash {
+                wasted_time: base * self.plan.wasted_fraction(batch.id, attempt),
+            };
+        }
+        if self.plan.injects_serve_error(batch.id, attempt) {
+            return InjectedOutcome::TransientError {
+                wasted_time: base * self.plan.wasted_fraction(batch.id, attempt),
+            };
+        }
+        if !nominal.is_oom() && self.plan.forced_oom(now, batch.id, attempt) {
+            // Kill the batch mid-decode: the storm models memory pressure
+            // from outside this batch, so the split point is the halfway
+            // iteration rather than anything the cost model derived.
+            return InjectedOutcome::Outcome {
+                outcome: BatchOutcome::Oom {
+                    at_iteration: (batch.true_gen_len() / 2).max(1),
+                    wasted_time: base * self.plan.wasted_fraction(batch.id, attempt),
+                },
+                forced: true,
+            };
+        }
+        let outcome = if stall != 1.0 {
+            scale_outcome(nominal, stall)
+        } else {
+            // Bit-exactness: multiplying by 1.0 is a float identity, but
+            // skipping the op entirely keeps this path provably inert.
+            nominal
+        };
+        InjectedOutcome::Outcome {
+            outcome,
+            forced: false,
+        }
+    }
+}
+
+/// Scale an outcome's times by an open stall factor.
+fn scale_outcome(outcome: BatchOutcome, factor: f64) -> BatchOutcome {
+    match outcome {
+        BatchOutcome::Completed {
+            serving_time,
+            per_request,
+        } => BatchOutcome::Completed {
+            serving_time: serving_time * factor,
+            per_request,
+        },
+        BatchOutcome::Oom {
+            at_iteration,
+            wasted_time,
+        } => BatchOutcome::Oom {
+            at_iteration,
+            wasted_time: wasted_time * factor,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::engine::cost::CostModelEngine;
+    use crate::faults::{OomStorm, Stall, Window};
+    use crate::workload::{PredictedRequest, RequestMeta, Span, StoreId, TaskId};
+
+    fn req(id: u64, len: u32, gen: u32, pred: u32, arrival: f64) -> PredictedRequest {
+        PredictedRequest {
+            meta: RequestMeta {
+                id,
+                task: TaskId::Gc,
+                store: StoreId::DETACHED,
+                instr: u32::MAX,
+                user_input_len: len.saturating_sub(1),
+                request_len: len,
+                gen_len: gen,
+                arrival,
+                span: Span::DETACHED,
+            },
+            predicted_gen_len: pred,
+        }
+    }
+
+    fn small_batch() -> Batch {
+        let mut b = Batch::new(7, req(1, 30, 12, 12, 0.0), 0.2);
+        b.requests.push(req(2, 28, 10, 10, 0.1));
+        b
+    }
+
+    fn engine() -> CostModelEngine {
+        let cfg = ServingConfig::default();
+        CostModelEngine::new(cfg.cost.clone(), &cfg.gpu)
+    }
+
+    #[test]
+    fn noop_plan_passes_nominal_outcome_through_bitwise() {
+        let eng = engine();
+        let plan = FaultPlan::none();
+        let faulty = FaultyEngine::new(&eng, &plan);
+        let batch = small_batch();
+        let nominal = eng.serve_batch(&batch);
+        match (faulty.serve_batch_at(3.0, &batch, 0), nominal) {
+            (
+                InjectedOutcome::Outcome {
+                    outcome:
+                        BatchOutcome::Completed {
+                            serving_time: a, ..
+                        },
+                    forced: false,
+                },
+                BatchOutcome::Completed {
+                    serving_time: b, ..
+                },
+            ) => assert_eq!(a.to_bits(), b.to_bits()),
+            other => panic!("expected pass-through completion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crash_decisions_are_deterministic_and_redrawn_per_attempt() {
+        let eng = engine();
+        let mut plan = FaultPlan::none();
+        plan.seed = 42;
+        plan.crash_p = 0.5;
+        let faulty = FaultyEngine::new(&eng, &plan);
+        let batch = small_batch();
+        let classify = |attempt: u64| -> (bool, u64) {
+            match faulty.serve_batch_at(1.0, &batch, attempt) {
+                InjectedOutcome::Crash { wasted_time } => (true, wasted_time.to_bits()),
+                _ => (false, 0),
+            }
+        };
+        let first: Vec<_> = (0..32).map(classify).collect();
+        let second: Vec<_> = (0..32).map(classify).collect();
+        assert_eq!(first, second, "same plan must replay bit-identically");
+        let crashes = first.iter().filter(|(c, _)| *c).count();
+        assert!(crashes > 4 && crashes < 28, "p=0.5 over 32 draws: {crashes}");
+    }
+
+    #[test]
+    fn stalls_scale_and_storms_force_ooms() {
+        let eng = engine();
+        let mut plan = FaultPlan::none();
+        plan.stalls.push(Stall {
+            window: Window::new(0.0, 10.0),
+            factor: 3.0,
+        });
+        plan.oom_storms.push(OomStorm {
+            window: Window::new(100.0, 200.0),
+            p: 1.0,
+        });
+        let faulty = FaultyEngine::new(&eng, &plan);
+        let batch = small_batch();
+        let nominal = match eng.serve_batch(&batch) {
+            BatchOutcome::Completed { serving_time, .. } => serving_time,
+            other => panic!("cost model should complete: {other:?}"),
+        };
+        match faulty.serve_batch_at(5.0, &batch, 0) {
+            InjectedOutcome::Outcome {
+                outcome: BatchOutcome::Completed { serving_time, .. },
+                forced: false,
+            } => {
+                assert_eq!(serving_time.to_bits(), (nominal * 3.0).to_bits());
+            }
+            other => panic!("expected stalled completion, got {other:?}"),
+        }
+        match faulty.serve_batch_at(150.0, &batch, 0) {
+            InjectedOutcome::Outcome {
+                outcome: BatchOutcome::Oom { at_iteration, .. },
+                forced: true,
+            } => assert_eq!(at_iteration, batch.true_gen_len() / 2),
+            other => panic!("expected forced OOM, got {other:?}"),
+        }
+        // outside every window: byte-identical nominal path
+        match faulty.serve_batch_at(50.0, &batch, 0) {
+            InjectedOutcome::Outcome {
+                outcome: BatchOutcome::Completed { serving_time, .. },
+                forced: false,
+            } => assert_eq!(serving_time.to_bits(), nominal.to_bits()),
+            other => panic!("expected nominal completion, got {other:?}"),
+        }
+    }
+}

@@ -13,6 +13,7 @@
 //! [`quantized::QuantizedEngine`] wraps either to model the VSQ baseline.
 
 pub mod cost;
+pub mod faulty;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod quantized;

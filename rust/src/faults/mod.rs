@@ -1,0 +1,600 @@
+//! Deterministic fault injection: a seeded, replayable [`FaultPlan`]
+//! consumed by the cost-model simulator ([`crate::sim::magnus`]) and the
+//! live supervised server ([`crate::server`]).
+//!
+//! Every fault decision is a pure hash of `(plan seed, fault kind,
+//! decision coordinates)` — no RNG state threads through the serving
+//! loop, so a retried batch redraws deterministically, two runs of the
+//! same plan are bit-identical, and an empty plan adds **zero** float
+//! operations to the fault-free path (the callers branch to the legacy
+//! code before any hash is computed).
+//!
+//! The taxonomy (tested end-to-end by `tests/chaos.rs`):
+//! * worker **crash** with probability `crash_p` per dispatch — the
+//!   instance dies mid-serve and restarts with capped exponential
+//!   backoff;
+//! * **transient serve error** with probability `serve_error_p` — the
+//!   serve fails but the instance survives;
+//! * engine **stall** windows — serving/wasted times are multiplied by a
+//!   slowdown factor while the window is open;
+//! * forced-**OOM storms** — inside the window, batches that would have
+//!   completed are killed at a mid-generation iteration with probability
+//!   `p` (memory-pressure bursts the cost model alone would never emit);
+//! * **predictor outages** — windows during which the trained forest is
+//!   unreachable and admission falls back per
+//!   [`FallbackMode`](crate::predictor::FallbackMode);
+//! * **predictor noise** — multiplicative jitter + additive bias on
+//!   every prediction (a degraded-but-online predictor).
+
+use crate::predictor::FallbackMode;
+use crate::util::Json;
+
+/// Half-open time window `[start, end)` in sim/replayed seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Window {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Window {
+    pub fn new(start: f64, end: f64) -> Window {
+        Window { start, end }
+    }
+
+    #[inline]
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start && t < self.end
+    }
+}
+
+/// Engine slowdown: serving/wasted times are multiplied by `factor`
+/// while `window` is open (overlapping stalls compound).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stall {
+    pub window: Window,
+    pub factor: f64,
+}
+
+/// Forced-OOM burst: inside `window`, a batch that would have completed
+/// is killed mid-generation with probability `p` per dispatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OomStorm {
+    pub window: Window,
+    pub p: f64,
+}
+
+/// Predictor-offline window and which fallback admission uses during it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictorOutage {
+    pub window: Window,
+    pub mode: FallbackMode,
+}
+
+/// Degraded-but-online predictor: every prediction is scaled by a
+/// deterministic per-request jitter in `[1 - jitter, 1 + jitter)` and
+/// shifted by `bias`, then re-clamped to `[1, G_max]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictorNoise {
+    pub bias: f64,
+    pub jitter: f64,
+}
+
+/// A seeded, replayable fault schedule.  [`FaultPlan::none`] is the
+/// explicit no-fault plan; consumers treat it as "run the legacy path
+/// byte-for-byte" (checked by [`FaultPlan::is_noop`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of every fault decision (independent of the workload seed).
+    pub seed: u64,
+    /// Per-dispatch probability that the serving instance crashes.
+    pub crash_p: f64,
+    /// Per-dispatch probability of a transient serve error.
+    pub serve_error_p: f64,
+    pub stalls: Vec<Stall>,
+    pub oom_storms: Vec<OomStorm>,
+    pub predictor_outages: Vec<PredictorOutage>,
+    pub predictor_noise: Option<PredictorNoise>,
+    /// Injected-fault re-dispatches allowed per batch before its
+    /// requests are recorded as shed (OOM splits are not retries).
+    pub max_retries: u32,
+    /// Restarts allowed per worker before the supervisor retires it.
+    pub max_worker_restarts: u32,
+    /// Base of the capped exponential restart backoff (seconds).
+    pub restart_backoff_s: f64,
+    /// §III-C alternative on OOM: split on observed EOS and re-bucket
+    /// the overrunning half ([`crate::batch::Batch::split_overrun`])
+    /// instead of splitting evenly.
+    pub overrun_guard: bool,
+}
+
+/// Fault-kind salts for the decision hash (distinct streams per axis).
+const K_CRASH: u64 = 1;
+const K_ERROR: u64 = 2;
+const K_OOM: u64 = 3;
+const K_WASTE: u64 = 4;
+const K_NOISE: u64 = 5;
+
+/// SplitMix64 finalizer (same mixer as `util::rng`, reimplemented here
+/// because the plan hashes coordinates statelessly instead of advancing
+/// a generator).
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+impl FaultPlan {
+    /// The explicit no-fault plan (every consumer's default).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            crash_p: 0.0,
+            serve_error_p: 0.0,
+            stalls: Vec::new(),
+            oom_storms: Vec::new(),
+            predictor_outages: Vec::new(),
+            predictor_noise: None,
+            max_retries: 3,
+            max_worker_restarts: 4,
+            restart_backoff_s: 0.25,
+            overrun_guard: false,
+        }
+    }
+
+    /// True when the plan injects nothing at all — consumers take the
+    /// legacy byte-identical path (golden equivalence depends on it).
+    pub fn is_noop(&self) -> bool {
+        self.crash_p <= 0.0
+            && self.serve_error_p <= 0.0
+            && self.stalls.is_empty()
+            && self.oom_storms.is_empty()
+            && !self.has_predictor_faults()
+            && !self.overrun_guard
+    }
+
+    /// True when admission must route predictions through the fallback/
+    /// noise chain instead of the exact legacy batch-predict call.
+    pub fn has_predictor_faults(&self) -> bool {
+        !self.predictor_outages.is_empty() || self.predictor_noise.is_some()
+    }
+
+    /// Stateless uniform draw in `[0, 1)` for `(kind, a, b)`.
+    #[inline]
+    fn unit(&self, kind: u64, a: u64, b: u64) -> f64 {
+        let h = mix(mix(mix(self.seed ^ kind.wrapping_mul(GOLDEN)) ^ a) ^ b);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Does dispatch `attempt` of `batch_id` crash its instance?
+    #[inline]
+    pub fn injects_crash(&self, batch_id: u64, attempt: u64) -> bool {
+        self.crash_p > 0.0 && self.unit(K_CRASH, batch_id, attempt) < self.crash_p
+    }
+
+    /// Does dispatch `attempt` of `batch_id` fail transiently?
+    #[inline]
+    pub fn injects_serve_error(&self, batch_id: u64, attempt: u64) -> bool {
+        self.serve_error_p > 0.0 && self.unit(K_ERROR, batch_id, attempt) < self.serve_error_p
+    }
+
+    /// Is this dispatch killed by an open OOM storm?
+    pub fn forced_oom(&self, now: f64, batch_id: u64, attempt: u64) -> bool {
+        self.oom_storms
+            .iter()
+            .any(|s| s.window.contains(now) && self.unit(K_OOM, batch_id, attempt) < s.p)
+    }
+
+    /// Product of every open stall factor (1.0 when none is open).
+    pub fn stall_factor(&self, now: f64) -> f64 {
+        let mut f = 1.0;
+        for s in &self.stalls {
+            if s.window.contains(now) {
+                f *= s.factor;
+            }
+        }
+        f
+    }
+
+    /// Fraction of the nominal serve time burned before an injected
+    /// crash/error/forced-OOM surfaces, in `[0, 1)`.
+    #[inline]
+    pub fn wasted_fraction(&self, batch_id: u64, attempt: u64) -> f64 {
+        self.unit(K_WASTE, batch_id, attempt)
+    }
+
+    /// The fallback mode of the first outage window containing `now`.
+    pub fn predictor_outage(&self, now: f64) -> Option<FallbackMode> {
+        self.predictor_outages
+            .iter()
+            .find(|o| o.window.contains(now))
+            .map(|o| o.mode)
+    }
+
+    /// Apply predictor noise to one prediction (identity when the plan
+    /// has no noise axis).  Clamped to `[1, G_max]` like the predictor.
+    pub fn noisy_prediction(&self, predicted: u32, request_id: u64, g_max: u32) -> u32 {
+        match &self.predictor_noise {
+            None => predicted,
+            Some(n) => {
+                let u = self.unit(K_NOISE, request_id, 0);
+                let raw = predicted as f64 * (1.0 + n.jitter * (2.0 * u - 1.0)) + n.bias;
+                (raw.round().max(1.0) as u32).min(g_max.max(1))
+            }
+        }
+    }
+
+    /// Capped exponential backoff before a worker's restart number
+    /// `restarts` (0-based): `base * 2^min(restarts, 5)`.
+    pub fn restart_backoff(&self, restarts: u32) -> f64 {
+        self.restart_backoff_s.max(0.0) * f64::from(1u32 << restarts.min(5))
+    }
+
+    // ------------------------------------------------------ persistence ---
+
+    /// Load a plan from `arg`: a JSON file path if one exists there,
+    /// otherwise an inline spec string (see [`FaultPlan::parse_spec`]).
+    pub fn load(arg: &str) -> anyhow::Result<FaultPlan> {
+        if std::path::Path::new(arg).exists() {
+            let text = std::fs::read_to_string(arg)?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            FaultPlan::from_json(&j)
+        } else {
+            FaultPlan::parse_spec(arg)
+        }
+    }
+
+    /// Parse a compact comma-separated spec, e.g.
+    /// `seed=7,crash=0.1,err=0.05,stall=10..40@3,oom=0..1e9@0.2,predoff=5..25,noise=8@0.5,guard`.
+    ///
+    /// Keys: `seed=N`, `crash=P`, `err=P`, `stall=A..B@FACTOR`,
+    /// `oom=A..B@P`, `predoff=A..B[:heuristic|:max]` (default heuristic),
+    /// `noise=BIAS@JITTER`, `retries=N`, `restarts=N`, `backoff=S`, and
+    /// the bare flag `guard` (overrun re-bucketing on OOM).
+    pub fn parse_spec(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if part == "guard" {
+                plan.overrun_guard = true;
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad fault spec `{part}` (want key=value)"))?;
+            match key {
+                "seed" => plan.seed = num(val)? as u64,
+                "crash" => plan.crash_p = num(val)?,
+                "err" => plan.serve_error_p = num(val)?,
+                "retries" => plan.max_retries = num(val)? as u32,
+                "restarts" => plan.max_worker_restarts = num(val)? as u32,
+                "backoff" => plan.restart_backoff_s = num(val)?,
+                "stall" => {
+                    let (window, factor) = window_at(val)?;
+                    plan.stalls.push(Stall { window, factor });
+                }
+                "oom" => {
+                    let (window, p) = window_at(val)?;
+                    plan.oom_storms.push(OomStorm { window, p });
+                }
+                "predoff" => {
+                    let (range, mode) = match val.split_once(':') {
+                        None => (val, FallbackMode::Heuristic),
+                        Some((r, "heuristic")) => (r, FallbackMode::Heuristic),
+                        Some((r, "max")) => (r, FallbackMode::MaxBucket),
+                        Some((_, m)) => anyhow::bail!("unknown fallback mode `{m}`"),
+                    };
+                    plan.predictor_outages.push(PredictorOutage {
+                        window: window_of(range)?,
+                        mode,
+                    });
+                }
+                "noise" => {
+                    let (bias, jitter) = val
+                        .split_once('@')
+                        .ok_or_else(|| anyhow::anyhow!("noise wants BIAS@JITTER, got `{val}`"))?;
+                    plan.predictor_noise = Some(PredictorNoise {
+                        bias: num(bias)?,
+                        jitter: num(jitter)?,
+                    });
+                }
+                _ => anyhow::bail!("unknown fault spec key `{key}`"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// JSON form (round-trips through [`FaultPlan::from_json`]).  Note
+    /// the seed travels as a JSON number: exact up to 2^53.
+    pub fn to_json(&self) -> Json {
+        let win = |w: &Window| vec![("start", Json::num(w.start)), ("end", Json::num(w.end))];
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("crash_p", Json::num(self.crash_p)),
+            ("serve_error_p", Json::num(self.serve_error_p)),
+            (
+                "stalls",
+                Json::Arr(
+                    self.stalls
+                        .iter()
+                        .map(|s| {
+                            let mut f = win(&s.window);
+                            f.push(("factor", Json::num(s.factor)));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "oom_storms",
+                Json::Arr(
+                    self.oom_storms
+                        .iter()
+                        .map(|s| {
+                            let mut f = win(&s.window);
+                            f.push(("p", Json::num(s.p)));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "predictor_outages",
+                Json::Arr(
+                    self.predictor_outages
+                        .iter()
+                        .map(|o| {
+                            let mut f = win(&o.window);
+                            f.push(("mode", Json::str(mode_name(o.mode))));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "predictor_noise",
+                match &self.predictor_noise {
+                    None => Json::Null,
+                    Some(n) => Json::obj(vec![
+                        ("bias", Json::num(n.bias)),
+                        ("jitter", Json::num(n.jitter)),
+                    ]),
+                },
+            ),
+            ("max_retries", Json::num(self.max_retries)),
+            ("max_worker_restarts", Json::num(self.max_worker_restarts)),
+            ("restart_backoff_s", Json::num(self.restart_backoff_s)),
+            ("overrun_guard", Json::Bool(self.overrun_guard)),
+        ])
+    }
+
+    /// Parse the JSON form; missing fields keep [`FaultPlan::none`]
+    /// defaults, so a partial plan file is valid.
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        if let Some(v) = j.get("seed").as_u64() {
+            plan.seed = v;
+        }
+        plan.crash_p = j.get("crash_p").as_f64().unwrap_or(plan.crash_p);
+        plan.serve_error_p = j.get("serve_error_p").as_f64().unwrap_or(plan.serve_error_p);
+        if let Some(xs) = j.get("stalls").as_arr() {
+            for x in xs {
+                plan.stalls.push(Stall {
+                    window: window_json(x)?,
+                    factor: req_f64(x, "factor")?,
+                });
+            }
+        }
+        if let Some(xs) = j.get("oom_storms").as_arr() {
+            for x in xs {
+                plan.oom_storms.push(OomStorm {
+                    window: window_json(x)?,
+                    p: req_f64(x, "p")?,
+                });
+            }
+        }
+        if let Some(xs) = j.get("predictor_outages").as_arr() {
+            for x in xs {
+                let mode = match x.get("mode").as_str() {
+                    None | Some("heuristic") => FallbackMode::Heuristic,
+                    Some("max-bucket") | Some("max") => FallbackMode::MaxBucket,
+                    Some(m) => anyhow::bail!("unknown fallback mode `{m}`"),
+                };
+                plan.predictor_outages.push(PredictorOutage {
+                    window: window_json(x)?,
+                    mode,
+                });
+            }
+        }
+        let noise = j.get("predictor_noise");
+        if !matches!(noise, Json::Null) {
+            plan.predictor_noise = Some(PredictorNoise {
+                bias: req_f64(noise, "bias")?,
+                jitter: req_f64(noise, "jitter")?,
+            });
+        }
+        if let Some(v) = j.get("max_retries").as_u64() {
+            plan.max_retries = v as u32;
+        }
+        if let Some(v) = j.get("max_worker_restarts").as_u64() {
+            plan.max_worker_restarts = v as u32;
+        }
+        plan.restart_backoff_s =
+            j.get("restart_backoff_s").as_f64().unwrap_or(plan.restart_backoff_s);
+        if let Some(b) = j.get("overrun_guard").as_bool() {
+            plan.overrun_guard = b;
+        }
+        Ok(plan)
+    }
+}
+
+fn mode_name(mode: FallbackMode) -> &'static str {
+    match mode {
+        FallbackMode::Heuristic => "heuristic",
+        FallbackMode::MaxBucket => "max-bucket",
+    }
+}
+
+fn num(s: &str) -> anyhow::Result<f64> {
+    s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad number `{s}` in fault spec"))
+}
+
+/// Parse `A..B` into a window.
+fn window_of(s: &str) -> anyhow::Result<Window> {
+    let (a, b) =
+        s.split_once("..").ok_or_else(|| anyhow::anyhow!("bad window `{s}` (want A..B)"))?;
+    Ok(Window::new(num(a)?, num(b)?))
+}
+
+/// Parse `A..B@X` into a window plus its attached value.
+fn window_at(s: &str) -> anyhow::Result<(Window, f64)> {
+    let (range, x) =
+        s.split_once('@').ok_or_else(|| anyhow::anyhow!("bad value `{s}` (want A..B@X)"))?;
+    Ok((window_of(range)?, num(x)?))
+}
+
+fn window_json(x: &Json) -> anyhow::Result<Window> {
+    Ok(Window::new(req_f64(x, "start")?, req_f64(x, "end")?))
+}
+
+fn req_f64(x: &Json, key: &str) -> anyhow::Result<f64> {
+    x.get(key).as_f64().ok_or_else(|| anyhow::anyhow!("fault plan JSON missing `{key}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_probability_shaped() {
+        let mut plan = FaultPlan::none();
+        plan.seed = 42;
+        plan.crash_p = 0.3;
+        plan.serve_error_p = 0.3;
+        let crashes: Vec<bool> = (0..2000).map(|b| plan.injects_crash(b, 0)).collect();
+        assert_eq!(crashes, (0..2000).map(|b| plan.injects_crash(b, 0)).collect::<Vec<_>>());
+        let rate = crashes.iter().filter(|&&c| c).count() as f64 / 2000.0;
+        assert!((rate - 0.3).abs() < 0.05, "crash rate {rate}");
+        // distinct attempts redraw; distinct kinds are independent streams
+        assert!((0..2000).any(|b| plan.injects_crash(b, 0) != plan.injects_crash(b, 1)));
+        assert!((0..2000).any(|b| plan.injects_crash(b, 0) != plan.injects_serve_error(b, 0)));
+    }
+
+    #[test]
+    fn zero_probability_never_fires() {
+        let plan = FaultPlan::none();
+        assert!((0..500).all(|b| !plan.injects_crash(b, 0)));
+        assert!((0..500).all(|b| !plan.injects_serve_error(b, 0)));
+        assert!(!plan.forced_oom(1.0, 0, 0));
+        assert!(plan.is_noop());
+    }
+
+    #[test]
+    fn windows_gate_storms_and_stalls() {
+        let mut plan = FaultPlan::none();
+        plan.seed = 7;
+        plan.oom_storms.push(OomStorm {
+            window: Window::new(10.0, 20.0),
+            p: 1.0,
+        });
+        plan.stalls.push(Stall {
+            window: Window::new(10.0, 20.0),
+            factor: 3.0,
+        });
+        plan.stalls.push(Stall {
+            window: Window::new(15.0, 25.0),
+            factor: 2.0,
+        });
+        assert!(!plan.forced_oom(9.9, 1, 0) && plan.forced_oom(10.0, 1, 0));
+        assert!(plan.forced_oom(19.9, 1, 0) && !plan.forced_oom(20.0, 1, 0));
+        assert_eq!(plan.stall_factor(5.0), 1.0);
+        assert_eq!(plan.stall_factor(12.0), 3.0);
+        assert_eq!(plan.stall_factor(17.0), 6.0);
+        assert_eq!(plan.stall_factor(22.0), 2.0);
+        assert!(!plan.is_noop());
+    }
+
+    #[test]
+    fn predictor_outage_and_noise() {
+        let mut plan = FaultPlan::none();
+        plan.seed = 9;
+        plan.predictor_outages.push(PredictorOutage {
+            window: Window::new(5.0, 8.0),
+            mode: FallbackMode::MaxBucket,
+        });
+        assert_eq!(plan.predictor_outage(6.0), Some(FallbackMode::MaxBucket));
+        assert_eq!(plan.predictor_outage(8.0), None);
+        // no noise axis: predictions pass through untouched
+        assert_eq!(plan.noisy_prediction(17, 3, 64), 17);
+        plan.predictor_noise = Some(PredictorNoise {
+            bias: 1000.0,
+            jitter: 0.0,
+        });
+        assert_eq!(plan.noisy_prediction(17, 3, 64), 64, "clamped to g_max");
+        plan.predictor_noise = Some(PredictorNoise {
+            bias: -1000.0,
+            jitter: 0.0,
+        });
+        assert_eq!(plan.noisy_prediction(17, 3, 64), 1, "clamped to 1");
+        plan.predictor_noise = Some(PredictorNoise {
+            bias: 0.0,
+            jitter: 0.5,
+        });
+        let jittered: Vec<u32> = (0..50).map(|id| plan.noisy_prediction(40, id, 1024)).collect();
+        assert!(jittered.iter().any(|&g| g != 40), "jitter must perturb");
+        assert!(jittered.iter().all(|&g| (20..=60).contains(&g)), "{jittered:?}");
+    }
+
+    #[test]
+    fn restart_backoff_is_capped_exponential() {
+        let plan = FaultPlan::none();
+        assert_eq!(plan.restart_backoff(0), 0.25);
+        assert_eq!(plan.restart_backoff(1), 0.5);
+        assert_eq!(plan.restart_backoff(5), 8.0);
+        assert_eq!(plan.restart_backoff(50), 8.0, "exponent capped");
+    }
+
+    #[test]
+    fn spec_parses_every_axis() {
+        let plan = FaultPlan::parse_spec(
+            "seed=7,crash=0.1,err=0.05,stall=10..40@3,oom=0..100@0.2,predoff=5..25:max,\
+             noise=8@0.5,retries=2,restarts=6,backoff=0.1,guard",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.crash_p, 0.1);
+        assert_eq!(plan.serve_error_p, 0.05);
+        assert_eq!(plan.stalls, vec![Stall { window: Window::new(10.0, 40.0), factor: 3.0 }]);
+        assert_eq!(plan.oom_storms, vec![OomStorm { window: Window::new(0.0, 100.0), p: 0.2 }]);
+        assert_eq!(
+            plan.predictor_outages,
+            vec![PredictorOutage { window: Window::new(5.0, 25.0), mode: FallbackMode::MaxBucket }]
+        );
+        assert_eq!(plan.predictor_noise, Some(PredictorNoise { bias: 8.0, jitter: 0.5 }));
+        assert_eq!((plan.max_retries, plan.max_worker_restarts), (2, 6));
+        assert_eq!(plan.restart_backoff_s, 0.1);
+        assert!(plan.overrun_guard);
+        assert!(FaultPlan::parse_spec("nope=1").is_err());
+        assert!(FaultPlan::parse_spec("stall=banana").is_err());
+        assert_eq!(FaultPlan::parse_spec("").unwrap(), FaultPlan::none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_plan() {
+        let plan = FaultPlan::parse_spec(
+            "seed=11,crash=0.2,err=0.1,stall=1..2@4,oom=3..4@0.5,predoff=5..6,noise=2@0.25,guard",
+        )
+        .unwrap();
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        let reparsed =
+            FaultPlan::from_json(&Json::parse(&plan.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(reparsed, plan);
+        // partial JSON keeps defaults
+        let partial = FaultPlan::from_json(&Json::parse("{\"crash_p\": 0.5}").unwrap()).unwrap();
+        assert_eq!(partial.crash_p, 0.5);
+        assert_eq!(partial.max_retries, FaultPlan::none().max_retries);
+    }
+}

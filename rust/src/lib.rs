@@ -28,6 +28,7 @@ pub mod config;
 pub mod embedding;
 pub mod engine;
 pub mod estimator;
+pub mod faults;
 pub mod learning;
 pub mod logdb;
 pub mod memory;
@@ -36,7 +37,6 @@ pub mod predictor;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
-#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod tokenizer;

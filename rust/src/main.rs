@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   serve      replay a workload through the LIVE cluster (real PJRT
 //!              compute via the AOT artifacts) under a chosen policy
+//!   serve-sim  replay a workload through the supervised cluster over the
+//!              cost-model backend (no artifacts needed) — accepts a
+//!              deterministic fault plan for chaos drills
 //!   sim        run a policy over a synthetic workload on the calibrated
 //!              cost-model engine (V100-scale, fast)
 //!   gen-trace  write a workload trace (JSON, or the binary format when
@@ -12,29 +15,39 @@
 //!
 //! Examples:
 //!   magnus sim --policy magnus --rate 10 --requests 800
+//!   magnus sim --policy magnus --fault-plan "seed=7,crash=0.1,oom=0..50@0.2"
 //!   magnus serve --workers 2 --requests 20 --time-scale 20
+//!   magnus serve-sim --workers 2 --requests 100 --fault-plan plan.json
 //!   magnus gen-trace --rate 5 --requests 1000 --out trace.json
 //!   magnus gen-trace --rate 5 --requests 1000000 --out trace.mtr
 //!   magnus pack-trace --in trace.json --out trace.mtr
 //!   magnus eval-pred --train 600 --test 200
 
 use magnus::config::ServingConfig;
+use magnus::faults::FaultPlan;
 use magnus::predictor::{GenLenPredictor, Variant};
-use magnus::sim::{run_policy, Policy};
+use magnus::sim::{run_policy, run_policy_store_faulted, Policy};
 use magnus::util::cli::Args;
 use magnus::util::stats::rmse;
 use magnus::util::Json;
 use magnus::workload::dataset::build_predictor_split;
 use magnus::workload::{generate_trace, LlmProfile, TraceSpec, TraceStore};
 
-const USAGE: &str = "magnus <serve|sim|gen-trace|pack-trace|eval-pred> [options]
+const USAGE: &str = "magnus <serve|serve-sim|sim|gen-trace|pack-trace|eval-pred> [options]
   common:    --config <file.json>  --seed N
   sim:       --policy VS|VSQ|CCB|GLP|ABP|Magnus  --rate R --requests N --train N
+             [--fault-plan file.json|spec]
   serve:     --policy magnus|vanilla --workers N --rate R --requests N
              --time-scale S --g-max N --l-cap N [--trace file.json|file.mtr]
+             [--fault-plan file.json|spec]
+  serve-sim: --policy magnus|vanilla --workers N --rate R --requests N
+             --time-scale S --g-max N --l-cap N [--fault-plan file.json|spec]
   gen-trace: --rate R --requests N --out file.json|file.mtr (binary, mmap-able)
   pack-trace: --in trace.json [--out trace.mtr]
-  eval-pred: --train N --test N";
+  eval-pred: --train N --test N
+  fault-plan spec: seed=N,crash=P,err=P,stall=A..B@F,oom=A..B@P,guard,
+             predoff=A..B[:heuristic|:max],noise=BIAS@JITTER,
+             retries=N,restarts=N,backoff=S";
 
 fn main() {
     if let Err(e) = run() {
@@ -61,7 +74,15 @@ fn run() -> anyhow::Result<()> {
                 seed: cfg.seed,
                 ..Default::default()
             });
-            let out = run_policy(&cfg, policy, &trace, args.get_usize("train", 300));
+            let train = args.get_usize("train", 300);
+            let out = match args.get("fault-plan") {
+                Some(spec) => {
+                    let plan = FaultPlan::load(spec)?;
+                    let store = TraceStore::from_requests(&trace);
+                    run_policy_store_faulted(&cfg, policy, &store, train, &plan)?
+                }
+                None => run_policy(&cfg, policy, &trace, train),
+            };
             let s = out.metrics.summarise();
             println!(
                 "{}: {} requests | thr {:.3} req/s | mean RT {:.1}s | p95 RT {:.1}s | \
@@ -75,8 +96,20 @@ fn run() -> anyhow::Result<()> {
                 s.valid_token_throughput,
                 s.oom_events
             );
+            if args.get("fault-plan").is_some() {
+                println!(
+                    "  faults: shed {} | retries {} | restarts {} | fallback preds {} | \
+                     injected {}",
+                    s.shed_requests,
+                    s.retries,
+                    s.worker_restarts,
+                    s.fallback_predictions,
+                    out.metrics.injected_faults
+                );
+            }
         }
         "serve" => cmd_serve(&args, &mut cfg)?,
+        "serve-sim" => cmd_serve_sim(&args, &mut cfg)?,
         "gen-trace" => {
             // Streaming generation: the trace lands in a TraceStore arena
             // (never a Vec<Request>), and serialises to either schema —
@@ -200,6 +233,10 @@ fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
             n_workers: args.get_usize("workers", 2),
             time_scale: args.get_f64("time-scale", 10.0),
             warm_up: args.flag("warm-up"),
+            fault_plan: match args.get("fault-plan") {
+                Some(spec) => FaultPlan::load(spec)?,
+                None => FaultPlan::none(),
+            },
         },
         policy,
         predictor,
@@ -220,6 +257,78 @@ fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
 fn cmd_serve(_args: &Args, _cfg: &mut ServingConfig) -> anyhow::Result<()> {
     anyhow::bail!(
         "`serve` needs the live PJRT stack; rebuild with `--features pjrt` \
-         (requires the vendored xla crate, see rust/Cargo.toml)"
+         (requires the vendored xla crate, see rust/Cargo.toml) — or use \
+         `serve-sim` for the cost-model backend"
     )
+}
+
+/// Replay a workload through the supervised cluster over the cost-model
+/// backend: the same leader/worker machinery as `serve` (threads,
+/// channels, wall clock, supervised restarts) with analytic serving
+/// times.  No artifacts needed; honours `--fault-plan`.
+fn cmd_serve_sim(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
+    use std::sync::Arc;
+
+    use magnus::server::{serve_trace_store_sim, LivePolicy, ServeOptions};
+    use magnus::sim::MagnusPolicy;
+
+    let g_max = args.get_u64("g-max", 64) as u32;
+    let l_cap = args.get_u64("l-cap", 80) as u32;
+    cfg.gpu.g_max = g_max;
+    let store = Arc::new(TraceStore::generate(&TraceSpec {
+        rate: args.get_f64("rate", 5.0),
+        n_requests: args.get_usize("requests", 100),
+        g_max,
+        l_cap,
+        seed: cfg.seed,
+        ..Default::default()
+    }));
+    let plan = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::load(spec)?,
+        None => FaultPlan::none(),
+    };
+    let policy_name = args.get_or("policy", "magnus").to_ascii_lowercase();
+    let (policy, predictor) = match policy_name.as_str() {
+        "vanilla" | "vs" => (
+            LivePolicy::Vanilla {
+                fixed_batch: args.get_u64("fixed-batch", 4) as u32,
+            },
+            None,
+        ),
+        _ => {
+            let split =
+                build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
+            let mut p = GenLenPredictor::new(Variant::Usin, cfg);
+            p.train(&split.train);
+            (LivePolicy::Magnus(MagnusPolicy::magnus()), Some(p))
+        }
+    };
+    let metrics = serve_trace_store_sim(
+        cfg,
+        &ServeOptions {
+            n_workers: args.get_usize("workers", 2),
+            time_scale: args.get_f64("time-scale", 50.0),
+            fault_plan: plan,
+            ..Default::default()
+        },
+        policy,
+        predictor,
+        store,
+    )?;
+    let s = metrics.summarise();
+    println!(
+        "serve-sim {}: {} served, {} shed | thr {:.3} req/s | mean RT {:.2}s | \
+         p95 RT {:.2}s | retries {} | restarts {} | fallback preds {} \
+         (replayed seconds)",
+        policy_name,
+        s.n_requests,
+        s.shed_requests,
+        s.request_throughput,
+        s.mean_response_time,
+        s.p95_response_time,
+        s.retries,
+        s.worker_restarts,
+        s.fallback_predictions
+    );
+    Ok(())
 }

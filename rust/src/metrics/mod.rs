@@ -30,6 +30,20 @@ pub struct RunMetrics {
     pub last_finish: f64,
     /// Earliest arrival (run start).
     pub first_arrival: f64,
+    /// Request ids explicitly given up on after bounded retries (ISSUE 6
+    /// exactly-once accounting: admitted = completed + shed, always).
+    pub shed: Vec<u64>,
+    /// Batches re-queued after an injected crash/transient serve error.
+    pub retries: u32,
+    /// Worker restarts performed by the supervisor.
+    pub worker_restarts: u32,
+    /// Admissions predicted by the fallback chain (predictor offline).
+    pub fallback_predictions: u32,
+    /// Requests re-bucketed by the overrun guard after an OOM split.
+    pub rebucketed: u32,
+    /// Faults the plan injected (crashes + transient errors + forced
+    /// OOMs) — 0 in any fault-free run, asserted by the golden gates.
+    pub injected_faults: u32,
 }
 
 /// Summary row for one (policy, arrival-rate) cell of the figures.
@@ -47,6 +61,14 @@ pub struct Summary {
     /// Valid tokens per second — Fig. 10b.
     pub valid_token_throughput: f64,
     pub oom_events: u32,
+    /// Requests explicitly shed (never silently lost) — 0 fault-free.
+    pub shed_requests: usize,
+    /// Batch re-dispatches after injected failures — 0 fault-free.
+    pub retries: u32,
+    /// Supervisor worker restarts — 0 fault-free.
+    pub worker_restarts: u32,
+    /// Fallback-chain predictions — 0 fault-free.
+    pub fallback_predictions: u32,
 }
 
 impl RunMetrics {
@@ -56,6 +78,12 @@ impl RunMetrics {
             oom_events: 0,
             last_finish: 0.0,
             first_arrival: f64::INFINITY,
+            shed: Vec::new(),
+            retries: 0,
+            worker_restarts: 0,
+            fallback_predictions: 0,
+            rebucketed: 0,
+            injected_faults: 0,
         }
     }
 
@@ -67,6 +95,12 @@ impl RunMetrics {
 
     pub fn record_oom(&mut self) {
         self.oom_events += 1;
+    }
+
+    /// Give up on a request after bounded retries: the id is recorded so
+    /// accounting still closes (admitted = completed + shed).
+    pub fn record_shed(&mut self, request_id: u64) {
+        self.shed.push(request_id);
     }
 
     /// Aggregate over the run.  The throughput denominator is the span
@@ -89,6 +123,10 @@ impl RunMetrics {
             token_throughput: total as f64 / span,
             valid_token_throughput: valid as f64 / span,
             oom_events: self.oom_events,
+            shed_requests: self.shed.len(),
+            retries: self.retries,
+            worker_restarts: self.worker_restarts,
+            fallback_predictions: self.fallback_predictions,
         }
     }
 }
@@ -178,5 +216,28 @@ mod tests {
         m.record_oom();
         m.record_oom();
         assert_eq!(m.summarise().oom_events, 2);
+    }
+
+    #[test]
+    fn robustness_counters_flow_into_summary() {
+        let mut m = RunMetrics::new();
+        m.record(rec(0, 0.0, 5.0, 50, 10));
+        m.record_shed(7);
+        m.record_shed(9);
+        m.retries = 3;
+        m.worker_restarts = 1;
+        m.fallback_predictions = 4;
+        let s = m.summarise();
+        assert_eq!(s.shed_requests, 2);
+        assert_eq!(m.shed, vec![7, 9]);
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.fallback_predictions, 4);
+        // a fresh collector reports everything zero (golden-gate shape)
+        let z = RunMetrics::new().summarise();
+        assert_eq!(
+            (z.shed_requests, z.retries, z.worker_restarts, z.fallback_predictions),
+            (0, 0, 0, 0)
+        );
     }
 }

@@ -1,0 +1,100 @@
+//! Degraded-mode prediction: what the serving tier does when the trained
+//! predictor is unavailable (ISSUE 6, ROADMAP items 3–4).
+//!
+//! The fallback chain is: trained forest → input-length heuristic →
+//! conservative max-bucket default.  The middle rung follows the paper's
+//! own observation (§III-B, Table II) that user-input length is the
+//! single strongest cheap signal for generation length; the last rung
+//! trades batcher efficiency for safety by assuming every request runs to
+//! `G_max`, which can never trigger an overrun-driven OOM.
+//!
+//! Which rung is active is decided by the caller (normally a
+//! [`FaultPlan`](crate::faults::FaultPlan) predictor-outage window, or a
+//! load error for live artifacts) — this module only computes the
+//! degraded value, so it stays dependency-free and trivially testable.
+
+use crate::predictor::GenLenPredictor;
+use crate::workload::RequestView;
+
+/// Which degraded rung of the prediction fallback chain to use while the
+/// trained predictor is offline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FallbackMode {
+    /// Predict the user-input length, clamped to `[1, G_max]` — the
+    /// paper's strongest single-feature signal (UIL, Table II).
+    Heuristic,
+    /// Predict `G_max` for everything: maximally conservative, immune to
+    /// overrun OOMs, worst for batching efficiency.
+    MaxBucket,
+}
+
+/// The prediction an offline-predictor rung produces for one request.
+/// Clamped to `[1, max(G_max, 1)]` exactly like the trained path's
+/// output, so downstream bucketing invariants hold unchanged.
+pub fn fallback_prediction(mode: FallbackMode, user_input_len: u32, g_max: u32) -> u32 {
+    let cap = g_max.max(1);
+    match mode {
+        FallbackMode::Heuristic => user_input_len.clamp(1, cap),
+        FallbackMode::MaxBucket => cap,
+    }
+}
+
+/// One admission-time prediction under a possibly-degraded predictor:
+/// `outage == None` runs the trained predictor exactly as the fault-free
+/// path does; `Some(mode)` short-circuits to the fallback chain without
+/// touching the forest (it is "offline").  Returns the prediction and
+/// whether a fallback rung produced it (so callers can count
+/// `fallback_predictions`).
+pub fn predict_degraded(
+    predictor: &mut GenLenPredictor,
+    outage: Option<FallbackMode>,
+    view: &RequestView<'_>,
+    g_max: u32,
+) -> (u32, bool) {
+    match outage {
+        Some(mode) => (fallback_prediction(mode, view.user_input_len, g_max), true),
+        None => (predictor.predict(*view), false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::predictor::Variant;
+    use crate::workload::{generate_trace, TraceSpec};
+
+    #[test]
+    fn fallback_rungs_clamp_like_the_trained_path() {
+        assert_eq!(fallback_prediction(FallbackMode::Heuristic, 17, 64), 17);
+        assert_eq!(fallback_prediction(FallbackMode::Heuristic, 0, 64), 1);
+        assert_eq!(fallback_prediction(FallbackMode::Heuristic, 900, 64), 64);
+        assert_eq!(fallback_prediction(FallbackMode::MaxBucket, 17, 64), 64);
+        // degenerate g_max never yields 0 (bucket index math divides by it)
+        assert_eq!(fallback_prediction(FallbackMode::Heuristic, 5, 0), 1);
+        assert_eq!(fallback_prediction(FallbackMode::MaxBucket, 5, 0), 1);
+    }
+
+    #[test]
+    fn degraded_path_bypasses_predictor_and_flags_fallback() {
+        let cfg = ServingConfig::default();
+        let mut p = GenLenPredictor::new(Variant::Uilo, &cfg);
+        let trace = generate_trace(&TraceSpec {
+            n_requests: 4,
+            seed: 99,
+            ..TraceSpec::default()
+        });
+        let v = trace[0].view();
+        let g_max = cfg.gpu.g_max;
+        let (pred, fell_back) =
+            predict_degraded(&mut p, Some(FallbackMode::MaxBucket), &v, g_max);
+        assert_eq!((pred, fell_back), (g_max, true));
+        let (pred, fell_back) =
+            predict_degraded(&mut p, Some(FallbackMode::Heuristic), &v, g_max);
+        assert_eq!(pred, v.user_input_len.clamp(1, g_max));
+        assert!(fell_back);
+        let (pred, fell_back) = predict_degraded(&mut p, None, &v, g_max);
+        assert!(!fell_back);
+        assert!(pred >= 1 && pred <= g_max);
+    }
+}

@@ -4,6 +4,7 @@
 //! predictor service with continuous learning.
 
 pub mod data;
+pub mod fallback;
 pub mod features;
 pub mod flat;
 pub mod forest;
@@ -11,6 +12,7 @@ pub mod glp;
 pub mod tree;
 
 pub use data::ColMatrix;
+pub use fallback::{fallback_prediction, predict_degraded, FallbackMode};
 pub use features::{FeatureExtractor, Variant};
 pub use flat::FlatForest;
 pub use forest::{Forest, ForestParams};

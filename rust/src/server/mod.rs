@@ -1,30 +1,53 @@
-//! Live serving cluster: the Fig. 7 workflow over REAL compute.
+//! Supervised live serving cluster: the Fig. 7 workflow over real
+//! threads, channels and a wall clock.
 //!
 //! A leader thread owns the coordinator state (predictor → WMA batcher →
 //! estimator → scheduler, §III-A) and replays a trace in (scaled) wall
-//! time; N worker threads each own a [`PjrtBatchServer`] (one "LLM
-//! instance" per §III-F worker process — PJRT clients are `!Send`, so each
-//! worker constructs its engine on its own thread) and serve dispatched
-//! batches, reporting completions back over channels.  This mirrors the
-//! discrete-event simulator exactly — same policy objects, different clock
-//! and engine — which is what makes the simulator's figures trustworthy.
+//! time; N worker threads each own an engine built by a [`WorkerFactory`]
+//! (one "LLM instance" per §III-F worker process) and serve dispatched
+//! batches, reporting completions back over channels.  Two factories are
+//! provided: the PJRT backend executes real compute from compiled
+//! artifacts, and the cost-model backend drives the same machinery from
+//! the analytic engine, which is what the chaos suite exercises.
+//!
+//! The leader is a *supervisor*, not a bail-on-first-error coordinator:
+//! a worker that dies is restarted with capped exponential backoff (up
+//! to the fault plan's budget), its in-flight batch is re-queued from
+//! the leader-side copy with bounded retries, and a batch that exhausts
+//! its retries is recorded as shed — never silently lost.  The headline
+//! invariant, asserted at shutdown and by the chaos tests, is that every
+//! admitted request completes exactly once or is explicitly shed.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use crate::config::ServingConfig;
-use crate::engine::pjrt::PjrtBatchServer;
+use crate::engine::cost::CostModelEngine;
+use crate::engine::faulty::{FaultyEngine, InjectedOutcome};
 use crate::engine::BatchOutcome;
 use crate::estimator::{BatchShape, ServingTimeEstimator};
+use crate::faults::FaultPlan;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
-use crate::predictor::GenLenPredictor;
+use crate::predictor::{predict_degraded, GenLenPredictor};
 use crate::sim::MagnusPolicy;
-use crate::workload::{PredictedRequest, Request, TraceStore};
+use crate::workload::{PredictedRequest, TraceStore};
+
+#[cfg(feature = "pjrt")]
+use crate::engine::pjrt::PjrtBatchServer;
+#[cfg(feature = "pjrt")]
+use crate::workload::Request;
+
+/// What a worker receives per dispatch: the batch, the serving-time
+/// estimate captured at dispatch (rides the round-trip so the leader
+/// keeps no batch-id → estimate map) and the replayed-time dispatch
+/// stamp (fault plans locate their windows in trace time).
+type Dispatch = (Batch, f64, f64);
 
 /// Live-serving policy.
 pub enum LivePolicy {
@@ -42,6 +65,8 @@ pub struct ServeOptions {
     pub time_scale: f64,
     /// Compile all buckets before accepting traffic.
     pub warm_up: bool,
+    /// Deterministic fault schedule (noop by default).
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for ServeOptions {
@@ -51,7 +76,236 @@ impl Default for ServeOptions {
             n_workers: 2,
             time_scale: 10.0,
             warm_up: false,
+            fault_plan: FaultPlan::none(),
         }
+    }
+}
+
+/// Leader-side capacity probe: what the planner may assume about every
+/// worker without constructing an engine on the leader thread.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerProbe {
+    pub max_batch: usize,
+    /// Θ — KV-cache byte budget the batcher plans against.
+    pub theta: u64,
+    /// δ — KV bytes per token.
+    pub delta: u64,
+}
+
+/// Worker-side serve failure classification.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The engine survives; the worker stays up and the batch can be
+    /// re-dispatched immediately.
+    Transient(String),
+    /// Engine state is unknown or gone; the worker must be rebuilt.
+    Fatal(String),
+}
+
+impl ServeError {
+    fn message(self) -> String {
+        match self {
+            ServeError::Transient(m) | ServeError::Fatal(m) => m,
+        }
+    }
+}
+
+/// One worker's compute substrate, owned by its thread.
+pub trait WorkerEngine {
+    /// Serve a dispatched batch.  `dispatched_at` is the replayed-time
+    /// dispatch stamp (trace seconds).
+    fn serve_batch(
+        &mut self,
+        batch: &Batch,
+        store: &TraceStore,
+        dispatched_at: f64,
+    ) -> std::result::Result<BatchOutcome, ServeError>;
+
+    /// Optional pre-traffic warm-up (e.g. compile all buckets).
+    fn prewarm(&mut self) -> std::result::Result<(), ServeError> {
+        Ok(())
+    }
+}
+
+/// Builds worker engines on their own threads (PJRT clients are
+/// `!Send`) and answers the leader's capacity probe.
+pub trait WorkerFactory: Send + Sync + 'static {
+    type Engine: WorkerEngine;
+
+    /// Leader-side capacity probe (no engine construction).
+    fn probe(&self) -> Result<WorkerProbe>;
+
+    /// Build one worker engine; called on the worker's own thread, and
+    /// again on every supervised restart of that slot.
+    fn build(&self, worker: usize) -> std::result::Result<Self::Engine, ServeError>;
+}
+
+/// Cost-model worker factory: real threads, channels and wall clock, but
+/// the analytic engine computes outcomes (scaled down into wall seconds
+/// by `time_scale`).  Exercises the full supervision machinery without
+/// PJRT artifacts — the substrate the chaos suite drives.
+pub struct CostWorkerFactory {
+    engine: CostModelEngine,
+    probe: WorkerProbe,
+    time_scale: f64,
+    plan: FaultPlan,
+    /// Worker incarnations built so far.  Each incarnation gets its own
+    /// fault-salt namespace so a re-dispatched batch redraws its
+    /// crash/error decisions instead of deterministically dying on every
+    /// worker that picks it up.
+    serial: AtomicU64,
+}
+
+impl CostWorkerFactory {
+    pub fn from_config(cfg: &ServingConfig, time_scale: f64, plan: FaultPlan) -> Self {
+        CostWorkerFactory {
+            engine: CostModelEngine::new(cfg.cost.clone(), &cfg.gpu),
+            probe: WorkerProbe {
+                max_batch: usize::MAX,
+                theta: (cfg.gpu.theta() as f64 * cfg.mem_margin) as u64,
+                delta: cfg.gpu.delta_bytes_per_token,
+            },
+            time_scale: time_scale.max(1e-9),
+            plan,
+            serial: AtomicU64::new(0),
+        }
+    }
+}
+
+impl WorkerFactory for CostWorkerFactory {
+    type Engine = CostWorker;
+
+    fn probe(&self) -> Result<WorkerProbe> {
+        Ok(self.probe)
+    }
+
+    fn build(&self, _worker: usize) -> std::result::Result<CostWorker, ServeError> {
+        Ok(CostWorker {
+            engine: self.engine.clone(),
+            plan: self.plan.clone(),
+            time_scale: self.time_scale,
+            salt_base: self.serial.fetch_add(1, Ordering::Relaxed) << 20,
+            serves: 0,
+        })
+    }
+}
+
+/// Cap on how long a cost-model worker actually sleeps per batch, so
+/// chaos tests stay fast even when a stall multiplier inflates the
+/// modelled time.
+const COST_SLEEP_CAP_S: f64 = 0.25;
+
+/// One cost-model worker incarnation.
+pub struct CostWorker {
+    engine: CostModelEngine,
+    plan: FaultPlan,
+    time_scale: f64,
+    salt_base: u64,
+    serves: u64,
+}
+
+impl WorkerEngine for CostWorker {
+    fn serve_batch(
+        &mut self,
+        batch: &Batch,
+        _store: &TraceStore,
+        dispatched_at: f64,
+    ) -> std::result::Result<BatchOutcome, ServeError> {
+        self.serves += 1;
+        let salt = self.salt_base | (self.serves & 0xF_FFFF);
+        let faulty = FaultyEngine::new(&self.engine, &self.plan);
+        match faulty.serve_batch_at(dispatched_at, batch, salt) {
+            InjectedOutcome::Crash { .. } => Err(ServeError::Fatal(format!(
+                "injected crash (serve #{} of this incarnation)",
+                self.serves
+            ))),
+            InjectedOutcome::TransientError { .. } => Err(ServeError::Transient(format!(
+                "injected transient serve error (serve #{})",
+                self.serves
+            ))),
+            InjectedOutcome::Outcome { outcome, .. } => {
+                let model_s = match &outcome {
+                    BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                    BatchOutcome::Oom { wasted_time, .. } => *wasted_time,
+                };
+                let busy = (model_s / self.time_scale).clamp(0.0, COST_SLEEP_CAP_S);
+                if busy > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(busy));
+                }
+                Ok(scale_to_wall(outcome, self.time_scale))
+            }
+        }
+    }
+}
+
+/// Map a model-time outcome into wall seconds so the leader's uniform
+/// `serving_time * time_scale` logging round-trips back to model time.
+fn scale_to_wall(outcome: BatchOutcome, time_scale: f64) -> BatchOutcome {
+    match outcome {
+        BatchOutcome::Completed {
+            serving_time,
+            per_request,
+        } => BatchOutcome::Completed {
+            serving_time: serving_time / time_scale,
+            per_request,
+        },
+        BatchOutcome::Oom {
+            at_iteration,
+            wasted_time,
+        } => BatchOutcome::Oom {
+            at_iteration,
+            wasted_time: wasted_time / time_scale,
+        },
+    }
+}
+
+/// PJRT worker factory: each worker loads the compiled artifacts and
+/// serves real compute.
+#[cfg(feature = "pjrt")]
+pub struct PjrtWorkerFactory {
+    pub artifacts_dir: String,
+}
+
+#[cfg(feature = "pjrt")]
+impl WorkerFactory for PjrtWorkerFactory {
+    type Engine = PjrtBatchServer;
+
+    /// Lightweight manifest probe (no PJRT client on the leader).
+    /// Artifacts bound the real memory: Θ is the max bucket's KV bytes,
+    /// so the planner can never exceed a compiled shape.
+    fn probe(&self) -> Result<WorkerProbe> {
+        let m = crate::runtime::Manifest::load(&self.artifacts_dir)?;
+        let max_batch = m.max_batch();
+        Ok(WorkerProbe {
+            max_batch,
+            theta: (max_batch as u64) * (m.model.l_max as u64) * m.model.kv_bytes_per_token,
+            delta: m.model.kv_bytes_per_token,
+        })
+    }
+
+    fn build(&self, worker: usize) -> std::result::Result<PjrtBatchServer, ServeError> {
+        PjrtBatchServer::load(&self.artifacts_dir)
+            .map_err(|e| ServeError::Fatal(format!("worker {worker} load: {e:#}")))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl WorkerEngine for PjrtBatchServer {
+    fn serve_batch(
+        &mut self,
+        batch: &Batch,
+        store: &TraceStore,
+        _dispatched_at: f64,
+    ) -> std::result::Result<BatchOutcome, ServeError> {
+        match PjrtBatchServer::serve(self, batch, store) {
+            Ok(out) => Ok(out.outcome),
+            // A PJRT error leaves client state unknown: rebuild the worker.
+            Err(e) => Err(ServeError::Fatal(format!("{e:#}"))),
+        }
+    }
+
+    fn prewarm(&mut self) -> std::result::Result<(), ServeError> {
+        self.warm_up().map_err(|e| ServeError::Fatal(format!("{e:#}")))
     }
 }
 
@@ -68,124 +322,266 @@ enum WorkerMsg {
     Failed {
         worker: usize,
         error: String,
+        /// True when the worker thread exited (engine state unknown);
+        /// false for a transient serve error the worker survived.
+        fatal: bool,
     },
     Ready {
-        #[allow(dead_code)] // diagnostic payload, read in error paths only
         worker: usize,
     },
 }
 
-/// Replay an owned `trace` through the live cluster; interns it once and
-/// delegates to [`serve_trace_store`].  Callers that can produce a
-/// [`TraceStore`] directly (JSON load via `TraceStore::from_json`,
-/// streaming generation) should use the store entry point and skip the
-/// owned `Vec<Request>` entirely — this wrapper holds both copies of the
-/// text alive for the run.
-pub fn serve_trace(
-    cfg: &ServingConfig,
-    opts: &ServeOptions,
-    policy: LivePolicy,
-    predictor: Option<GenLenPredictor>,
-    trace: &[Request],
-) -> Result<RunMetrics> {
-    serve_trace_store(
-        cfg,
-        opts,
-        policy,
-        predictor,
-        Arc::new(TraceStore::from_requests(trace)),
-    )
+/// Supervisor's view of one worker slot's lifecycle.
+enum SlotState {
+    /// Thread spawned, engine still building / warming.
+    Starting,
+    /// Ready and serving.
+    Up,
+    /// Crashed; eligible for respawn once the backoff deadline passes.
+    Down(Instant),
+    /// Restart budget exhausted — never respawned again.
+    Retired,
 }
 
-/// Replay an interned trace through the live cluster; returns run
+struct WorkerSlot {
+    tx: Option<mpsc::Sender<Dispatch>>,
+    state: SlotState,
+    /// Restarts consumed (for the backoff exponent and the budget).
+    restarts: u32,
+    /// Leader-side copy of the dispatched batch: crash recovery re-queues
+    /// from here, so a dead worker can never take requests with it.
+    in_flight: Option<(Batch, f64)>,
+}
+
+/// Spawn one worker incarnation for `slot` and return its dispatch
+/// channel.  The thread builds its engine via the factory (on-thread —
+/// PJRT clients are `!Send`), reports `Ready`, then serves until its
+/// dispatch channel closes or a fatal error kills it.
+fn spawn_worker<F: WorkerFactory>(
+    factory: &Arc<F>,
+    worker: usize,
+    warm: bool,
+    done: &mpsc::Sender<WorkerMsg>,
+    store: &Arc<TraceStore>,
+    handles: &mut Vec<std::thread::JoinHandle<()>>,
+) -> mpsc::Sender<Dispatch> {
+    let (tx, rx) = mpsc::channel::<Dispatch>();
+    let done = done.clone();
+    let factory = Arc::clone(factory);
+    let store = Arc::clone(store);
+    handles.push(std::thread::spawn(move || {
+        let mut engine = match factory.build(worker) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = done.send(WorkerMsg::Failed {
+                    worker,
+                    error: e.message(),
+                    fatal: true,
+                });
+                return;
+            }
+        };
+        if warm {
+            if let Err(e) = engine.prewarm() {
+                let _ = done.send(WorkerMsg::Failed {
+                    worker,
+                    error: e.message(),
+                    fatal: true,
+                });
+                return;
+            }
+        }
+        let _ = done.send(WorkerMsg::Ready { worker });
+        while let Ok((batch, est, at)) = rx.recv() {
+            match engine.serve_batch(&batch, &store, at) {
+                Ok(outcome) => {
+                    let _ = done.send(WorkerMsg::Done {
+                        worker,
+                        batch,
+                        est,
+                        outcome,
+                    });
+                }
+                Err(ServeError::Transient(error)) => {
+                    let _ = done.send(WorkerMsg::Failed {
+                        worker,
+                        error,
+                        fatal: false,
+                    });
+                }
+                Err(ServeError::Fatal(error)) => {
+                    let _ = done.send(WorkerMsg::Failed {
+                        worker,
+                        error,
+                        fatal: true,
+                    });
+                    return;
+                }
+            }
+        }
+    }));
+    tx
+}
+
+/// Re-queue (bounded) or shed a crashed worker's in-flight batch from
+/// the leader-side copy.
+fn recover_in_flight(
+    slot: &mut WorkerSlot,
+    plan: &FaultPlan,
+    magnus: bool,
+    attempts: &mut HashMap<u64, u32>,
+    batcher: &mut AdaptiveBatcher,
+    pending: &mut VecDeque<Batch>,
+    metrics: &mut RunMetrics,
+) {
+    let (batch, _est) = match slot.in_flight.take() {
+        Some(x) => x,
+        None => return,
+    };
+    let attempt = attempts.entry(batch.id).or_insert(0);
+    *attempt += 1;
+    if *attempt > plan.max_retries {
+        for pr in &batch.requests {
+            metrics.record_shed(pr.meta.id);
+        }
+        return;
+    }
+    metrics.retries += 1;
+    if magnus {
+        batcher.requeue(batch);
+    } else {
+        pending.push_back(batch);
+    }
+}
+
+/// Re-queue the two halves of an OOM'd batch (§III-C), preferring the
+/// overrun-guard EOS partition when the plan enables it.  Singleton
+/// batches cannot split and ride the bounded retry path instead.
+#[allow(clippy::too_many_arguments)]
+fn requeue_oom_live(
+    plan: &FaultPlan,
+    magnus: bool,
+    attempts: &mut HashMap<u64, u32>,
+    batcher: &mut AdaptiveBatcher,
+    pending: &mut VecDeque<Batch>,
+    metrics: &mut RunMetrics,
+    mut batch: Batch,
+    at_iteration: u32,
+    g_max: u32,
+    next_batch_id_vanilla: &mut u64,
+) {
+    if batch.size() < 2 {
+        batch.insertable = false;
+        let attempt = attempts.entry(batch.id).or_insert(0);
+        *attempt += 1;
+        if *attempt > plan.max_retries {
+            for pr in &batch.requests {
+                metrics.record_shed(pr.meta.id);
+            }
+            return;
+        }
+        metrics.retries += 1;
+        if magnus {
+            batcher.requeue(batch);
+        } else {
+            pending.push_back(batch);
+        }
+        return;
+    }
+    let nid = if magnus {
+        batcher.alloc_id()
+    } else {
+        let id = *next_batch_id_vanilla;
+        *next_batch_id_vanilla += 1;
+        id
+    };
+    let batch = if plan.overrun_guard {
+        match batch.split_overrun(nid, at_iteration, g_max) {
+            Ok((l, r)) => {
+                metrics.rebucketed += r.size();
+                if magnus {
+                    batcher.requeue(l);
+                    batcher.requeue(r);
+                } else {
+                    pending.push_back(l);
+                    pending.push_back(r);
+                }
+                return;
+            }
+            Err(b) => b,
+        }
+    } else {
+        batch
+    };
+    let (l, r) = batch.split(nid);
+    if magnus {
+        batcher.requeue(l);
+        batcher.requeue(r);
+    } else {
+        pending.push_back(l);
+        pending.push_back(r);
+    }
+}
+
+/// Clamp the leader's arrival-poll timeout: a `next_arrival` already in
+/// the past yields `ZERO` (a negative or NaN argument would panic inside
+/// `Duration::from_secs_f64`), and the 50 ms cap keeps completions and
+/// worker restarts responsive while idling toward a distant arrival.
+/// `f64::clamp` propagates NaN, hence the explicit guard.
+pub fn arrival_timeout(due_s: f64, elapsed_s: f64) -> Duration {
+    let dt = due_s - elapsed_s;
+    if dt.is_nan() {
+        return Duration::ZERO;
+    }
+    Duration::from_secs_f64(dt.clamp(0.0, 0.050))
+}
+
+/// Replay an interned trace through the supervised cluster; returns run
 /// metrics (times are in replayed seconds, i.e. wall seconds ×
 /// time_scale, so they are comparable with trace arrival timestamps).
 ///
 /// Zero-copy: the leader admits compact metas, the workers resolve
 /// prompt text from the shared read-only arena, and the dispatch
-/// channels carry `Copy` records instead of cloned strings.
-pub fn serve_trace_store(
+/// channels carry `Copy` records plus one batch.
+///
+/// Exactly-once: the loop runs until `completed + shed == admitted`.
+/// Worker crashes re-queue the leader-side in-flight copy with bounded
+/// retries; exhausted retries shed explicitly; if every slot retires
+/// (restart budgets spent) the remaining queue is shed so accounting
+/// still closes instead of spinning forever.
+pub fn serve_supervised<F: WorkerFactory>(
     cfg: &ServingConfig,
     opts: &ServeOptions,
     policy: LivePolicy,
     mut predictor: Option<GenLenPredictor>,
     store: Arc<TraceStore>,
+    factory: Arc<F>,
 ) -> Result<RunMetrics> {
+    let plan = &opts.fault_plan;
+    let probe = factory.probe()?;
+
+    // done_tx stays alive on the leader: restarts need fresh clones, and
+    // "all workers dead" must surface as slot state, not a Disconnected
+    // error racing the supervisor.
     let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
-    let mut batch_txs: Vec<mpsc::Sender<(Batch, f64)>> = Vec::new();
     let mut handles = Vec::new();
-
+    let mut slots: Vec<WorkerSlot> = Vec::with_capacity(opts.n_workers);
     for w in 0..opts.n_workers {
-        let (tx, rx) = mpsc::channel::<(Batch, f64)>();
-        batch_txs.push(tx);
-        let done = done_tx.clone();
-        let dir = opts.artifacts_dir.clone();
-        let warm = opts.warm_up;
-        let store = Arc::clone(&store);
-        handles.push(std::thread::spawn(move || {
-            // Engine constructed on the worker thread (PJRT is !Send).
-            let mut srv = match PjrtBatchServer::load(&dir) {
-                Ok(s) => s,
-                Err(e) => {
-                    let _ = done.send(WorkerMsg::Failed {
-                        worker: w,
-                        error: format!("{e:#}"),
-                    });
-                    return;
-                }
-            };
-            if warm {
-                if let Err(e) = srv.warm_up() {
-                    let _ = done.send(WorkerMsg::Failed {
-                        worker: w,
-                        error: format!("{e:#}"),
-                    });
-                    return;
-                }
-            }
-            let _ = done.send(WorkerMsg::Ready { worker: w });
-            while let Ok((batch, est)) = rx.recv() {
-                match srv.serve(&batch, &store) {
-                    Ok(out) => {
-                        let _ = done.send(WorkerMsg::Done {
-                            worker: w,
-                            batch,
-                            est,
-                            outcome: out.outcome,
-                        });
-                    }
-                    Err(e) => {
-                        let _ = done.send(WorkerMsg::Failed {
-                            worker: w,
-                            error: format!("{e:#}"),
-                        });
-                        return;
-                    }
-                }
-            }
-        }));
-    }
-    drop(done_tx);
-
-    // Wait for all workers to come up (artifact load + optional warm-up).
-    let mut ready = 0;
-    while ready < opts.n_workers {
-        match done_rx.recv()? {
-            WorkerMsg::Ready { .. } => ready += 1,
-            WorkerMsg::Failed { worker, error } => {
-                anyhow::bail!("worker {worker} failed to start: {error}")
-            }
-            _ => {}
-        }
+        let tx = spawn_worker(&factory, w, opts.warm_up, &done_tx, &store, &mut handles);
+        slots.push(WorkerSlot {
+            tx: Some(tx),
+            state: SlotState::Starting,
+            restarts: 0,
+            in_flight: None,
+        });
     }
 
-    // Coordinator state.  Artifacts bound the real memory: Θ is the max
-    // bucket's KV bytes, so the planner can never exceed a compiled shape.
-    let probe = PjrtBatchServerProbe::load(&opts.artifacts_dir)?;
+    // Coordinator state.
     let (magnus_policy, fixed_batch) = match &policy {
         LivePolicy::Magnus(p) => (Some(p.clone()), 0),
         LivePolicy::Vanilla { fixed_batch } => (None, *fixed_batch),
     };
+    let magnus = matches!(&policy, LivePolicy::Magnus(_));
     let max_batch = probe.max_batch.min(if let Some(p) = &magnus_policy {
         if p.max_batch_size > 0 {
             p.max_batch_size as usize
@@ -197,11 +593,16 @@ pub fn serve_trace_store(
     });
     let mut batcher = AdaptiveBatcher::new(BatcherConfig {
         wma_threshold: cfg.wma_threshold,
-        theta: (probe.max_batch as u64) * (probe.l_max as u64) * probe.delta,
+        theta: probe.theta,
         delta: probe.delta,
-        max_batch_size: max_batch as u32,
+        // usize::MAX (cost backend, uncapped policy) → 0 = uncapped.
+        max_batch_size: u32::try_from(max_batch).unwrap_or(0),
     });
-    let mut fifo: std::collections::VecDeque<usize> = Default::default();
+    let g_max = cfg.gpu.g_max;
+    let mut fifo: VecDeque<usize> = VecDeque::new();
+    // Vanilla-path re-dispatch queue (crash recovery, OOM splits).
+    let mut pending: VecDeque<Batch> = VecDeque::new();
+    let mut attempts: HashMap<u64, u32> = HashMap::new();
     let mut estimator = ServingTimeEstimator::new(cfg.knn_k);
     // Estimator refresh state: a segment cursor into the log DB plus the
     // rows already absorbed, so each completion trains on O(new) entries
@@ -211,27 +612,53 @@ pub fn serve_trace_store(
     let mut est_new_times: Vec<f64> = Vec::new();
     let db = LogDb::new();
     let mut metrics = RunMetrics::new();
-    let mut idle: Vec<usize> = (0..opts.n_workers).collect();
+    let mut idle: Vec<usize> = Vec::new();
     let mut next_batch_id_vanilla = 1_000_000u64;
 
     let start = Instant::now();
     let scale = opts.time_scale.max(1e-9);
     let now_replayed = |start: Instant| start.elapsed().as_secs_f64() * scale;
 
+    let admitted = store.len();
     let mut next_arrival = 0usize;
     let mut completed = 0usize;
 
-    while completed < store.len() {
+    while completed + metrics.shed.len() < admitted {
+        // 0. Respawn crashed workers whose backoff deadline has passed.
+        let wall = Instant::now();
+        for w in 0..slots.len() {
+            let due = match slots[w].state {
+                SlotState::Down(due) => due,
+                _ => continue,
+            };
+            if due <= wall {
+                let tx = spawn_worker(&factory, w, opts.warm_up, &done_tx, &store, &mut handles);
+                slots[w].tx = Some(tx);
+                slots[w].state = SlotState::Starting;
+            }
+        }
+
         // 1. Admit every request whose (scaled) arrival time has passed.
         //    Zero-copy: the meta is a few machine words and the predictor
-        //    borrows the prompt text straight from the shared arena.
+        //    borrows the prompt text straight from the shared arena.  The
+        //    fallback chain (trained predictor → input-length heuristic →
+        //    max-bucket default) keeps admission alive through predictor
+        //    outages.
         let now = now_replayed(start);
-        while next_arrival < store.len() && store.meta(next_arrival).arrival <= now {
+        while next_arrival < admitted && store.meta(next_arrival).arrival <= now {
             let meta = store.meta(next_arrival);
             next_arrival += 1;
             match (&policy, &mut predictor) {
                 (LivePolicy::Magnus(_), Some(p)) => {
-                    let predicted = p.predict(store.view_of(&meta));
+                    let view = store.view_of(&meta);
+                    let outage = plan.predictor_outage(now);
+                    let (predicted, fell_back) = predict_degraded(p, outage, &view, g_max);
+                    let predicted = if fell_back {
+                        metrics.fallback_predictions += 1;
+                        predicted
+                    } else {
+                        plan.noisy_prediction(predicted, meta.id, g_max)
+                    };
                     batcher.insert(
                         PredictedRequest {
                             meta,
@@ -244,8 +671,8 @@ pub fn serve_trace_store(
             }
         }
 
-        // 2. Dispatch to idle workers (the captured estimate rides the
-        //    worker round-trip; no leader-side map).
+        // 2. Dispatch to idle workers.  The leader keeps a copy of every
+        //    in-flight batch so a crash can re-queue it.
         while !idle.is_empty() {
             let now = now_replayed(start);
             let (batch, est) = match &policy {
@@ -264,38 +691,65 @@ pub fn serve_trace_store(
                     (batcher.take(pick), est)
                 }
                 LivePolicy::Vanilla { fixed_batch } => {
-                    if fifo.is_empty() {
+                    if let Some(b) = pending.pop_front() {
+                        (b, 0.0)
+                    } else if fifo.is_empty() {
                         break;
+                    } else {
+                        let take = (*fixed_batch as usize).min(fifo.len());
+                        let mut reqs = Vec::with_capacity(take);
+                        for _ in 0..take {
+                            let i = fifo.pop_front().unwrap();
+                            reqs.push(PredictedRequest {
+                                meta: store.meta(i),
+                                predicted_gen_len: 0,
+                            });
+                        }
+                        let mut it = reqs.into_iter();
+                        let mut b = Batch::new(next_batch_id_vanilla, it.next().unwrap(), now);
+                        next_batch_id_vanilla += 1;
+                        b.requests.extend(it);
+                        (b, 0.0)
                     }
-                    let take = (*fixed_batch as usize).min(fifo.len());
-                    let mut reqs = Vec::with_capacity(take);
-                    for _ in 0..take {
-                        let i = fifo.pop_front().unwrap();
-                        reqs.push(PredictedRequest {
-                            meta: store.meta(i),
-                            predicted_gen_len: 0,
-                        });
-                    }
-                    let mut it = reqs.into_iter();
-                    let mut b =
-                        Batch::new(next_batch_id_vanilla, it.next().unwrap(), now);
-                    next_batch_id_vanilla += 1;
-                    b.requests.extend(it);
-                    (b, 0.0)
                 }
             };
             let w = idle.pop().unwrap();
-            batch_txs[w].send((batch, est)).expect("worker channel closed");
+            slots[w].in_flight = Some((batch.clone(), est));
+            let delivered = match &slots[w].tx {
+                Some(tx) => tx.send((batch, est, now)).is_ok(),
+                None => false,
+            };
+            if !delivered {
+                // Defensive: a channel closed without a Failed message
+                // (unreachable by protocol).  Recover the copy so the
+                // requests are not lost with the dead channel.
+                slots[w].tx = None;
+                slots[w].state = SlotState::Retired;
+                recover_in_flight(
+                    &mut slots[w],
+                    plan,
+                    magnus,
+                    &mut attempts,
+                    &mut batcher,
+                    &mut pending,
+                    &mut metrics,
+                );
+            }
         }
 
-        // 3. Wait for the next completion or the next arrival deadline.
-        let timeout = if next_arrival < store.len() {
+        // 3. Wait for the next completion, the next arrival deadline, or
+        //    the next restart deadline — whichever is soonest.
+        let timeout = if next_arrival < admitted {
             let due = store.meta(next_arrival).arrival / scale;
-            let elapsed = start.elapsed().as_secs_f64();
-            Duration::from_secs_f64((due - elapsed).max(0.0).min(0.050))
+            arrival_timeout(due, start.elapsed().as_secs_f64())
         } else {
             Duration::from_millis(50)
         };
+        let wall = Instant::now();
+        let timeout = slots.iter().fold(timeout, |t, s| match s.state {
+            SlotState::Down(due) => t.min(due.saturating_duration_since(wall)),
+            _ => t,
+        });
         match done_rx.recv_timeout(timeout) {
             Ok(WorkerMsg::Done {
                 worker,
@@ -303,91 +757,334 @@ pub fn serve_trace_store(
                 est,
                 outcome,
             }) => {
+                slots[worker].in_flight = None;
                 let now = now_replayed(start);
-                if let BatchOutcome::Completed {
-                    serving_time,
-                    per_request,
-                } = outcome
-                {
-                    completed += per_request.len();
-                    for (pr, sr) in batch.requests.iter().zip(&per_request) {
-                        metrics.record(RequestRecord {
-                            request_id: sr.request_id,
-                            arrival: pr.meta.arrival,
-                            finish: now,
-                            valid_tokens: sr.valid_tokens,
-                            invalid_tokens: sr.invalid_tokens,
-                        });
-                        db.log_request(RequestLog {
-                            meta: pr.meta,
-                            predicted_gen_len: pr.predicted_gen_len,
-                            actual_gen_len: pr.meta.gen_len,
+                match outcome {
+                    BatchOutcome::Completed {
+                        serving_time,
+                        per_request,
+                    } => {
+                        attempts.remove(&batch.id);
+                        completed += per_request.len();
+                        for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                            metrics.record(RequestRecord {
+                                request_id: sr.request_id,
+                                arrival: pr.meta.arrival,
+                                finish: now,
+                                valid_tokens: sr.valid_tokens,
+                                invalid_tokens: sr.invalid_tokens,
+                            });
+                            db.log_request(RequestLog {
+                                meta: pr.meta,
+                                predicted_gen_len: pr.predicted_gen_len,
+                                actual_gen_len: pr.meta.gen_len,
+                                at: now,
+                            });
+                        }
+                        db.log_batch(BatchLog {
+                            shape: batch.true_shape(),
+                            estimated_time: est,
+                            // serving_time is wall seconds; scale into
+                            // replayed seconds so HRRN compares like with
+                            // like.
+                            actual_time: serving_time * scale,
                             at: now,
                         });
+                        // Online estimator refresh from real executions:
+                        // absorb only the log tail since the last refresh
+                        // (KNN appends are equivalent to a fresh fit on
+                        // the union — property-tested in estimator::knn).
+                        // Rows accumulate until the 3-row cold-start
+                        // threshold.
+                        est_cursor += db.visit_batches_from(est_cursor, |l| {
+                            est_new_shapes.push(l.shape);
+                            est_new_times.push(l.actual_time);
+                        });
+                        if estimator.is_trained() || est_new_shapes.len() >= 3 {
+                            estimator.augment_and_refit(&est_new_shapes, &est_new_times);
+                            est_new_shapes.clear();
+                            est_new_times.clear();
+                        }
                     }
-                    db.log_batch(BatchLog {
-                        shape: batch.true_shape(),
-                        estimated_time: est,
-                        // serving_time is wall seconds; scale into replayed
-                        // seconds so HRRN compares like with like.
-                        actual_time: serving_time * scale,
-                        at: now,
-                    });
-                    // Online estimator refresh from real executions:
-                    // absorb only the log tail since the last refresh
-                    // (KNN appends are equivalent to a fresh fit on the
-                    // union — property-tested in estimator::knn).  Rows
-                    // accumulate until the 3-row cold-start threshold.
-                    est_cursor += db.visit_batches_from(est_cursor, |l| {
-                        est_new_shapes.push(l.shape);
-                        est_new_times.push(l.actual_time);
-                    });
-                    if estimator.is_trained() || est_new_shapes.len() >= 3 {
-                        estimator.augment_and_refit(&est_new_shapes, &est_new_times);
-                        est_new_shapes.clear();
-                        est_new_times.clear();
+                    BatchOutcome::Oom { at_iteration, .. } => {
+                        metrics.record_oom();
+                        requeue_oom_live(
+                            plan,
+                            magnus,
+                            &mut attempts,
+                            &mut batcher,
+                            &mut pending,
+                            &mut metrics,
+                            batch,
+                            at_iteration,
+                            g_max,
+                            &mut next_batch_id_vanilla,
+                        );
                     }
                 }
                 idle.push(worker);
             }
-            Ok(WorkerMsg::Failed { worker, error }) => {
-                anyhow::bail!("worker {worker} failed: {error}");
+            Ok(WorkerMsg::Failed {
+                worker,
+                error,
+                fatal,
+            }) => {
+                recover_in_flight(
+                    &mut slots[worker],
+                    plan,
+                    magnus,
+                    &mut attempts,
+                    &mut batcher,
+                    &mut pending,
+                    &mut metrics,
+                );
+                if fatal {
+                    slots[worker].tx = None;
+                    if slots[worker].restarts >= plan.max_worker_restarts {
+                        slots[worker].state = SlotState::Retired;
+                        eprintln!("server: worker {worker} retired: {error}");
+                    } else {
+                        slots[worker].restarts += 1;
+                        metrics.worker_restarts += 1;
+                        let backoff = plan.restart_backoff(slots[worker].restarts - 1).max(0.0);
+                        slots[worker].state =
+                            SlotState::Down(Instant::now() + Duration::from_secs_f64(backoff));
+                        eprintln!(
+                            "server: worker {worker} down ({error}); restart in {backoff:.3}s"
+                        );
+                    }
+                } else {
+                    // Transient: the worker thread survived and loops on.
+                    idle.push(worker);
+                }
             }
-            Ok(WorkerMsg::Ready { .. }) => {}
+            Ok(WorkerMsg::Ready { worker }) => {
+                slots[worker].state = SlotState::Up;
+                idle.push(worker);
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                anyhow::bail!("all workers exited early");
+                // Unreachable: the leader holds done_tx for restarts.
+                anyhow::bail!("supervisor channel closed unexpectedly");
             }
+        }
+
+        // 4. If every slot has exhausted its restart budget there is no
+        //    worker left (and none coming back): shed everything still
+        //    queued so accounting closes instead of spinning forever.
+        if slots.iter().all(|s| matches!(s.state, SlotState::Retired)) {
+            while !batcher.is_empty() {
+                let b = batcher.take(0);
+                for pr in &b.requests {
+                    metrics.record_shed(pr.meta.id);
+                }
+            }
+            while let Some(b) = pending.pop_front() {
+                for pr in &b.requests {
+                    metrics.record_shed(pr.meta.id);
+                }
+            }
+            while let Some(i) = fifo.pop_front() {
+                metrics.record_shed(store.meta(i).id);
+            }
+            for i in next_arrival..admitted {
+                metrics.record_shed(store.meta(i).id);
+            }
+            break;
         }
     }
 
-    drop(batch_txs);
+    // Shutdown: close the dispatch channels, join every incarnation, then
+    // drain completions that raced the shutdown edge so no Done message
+    // is silently dropped (they finished serving; record them).
+    for s in &mut slots {
+        s.tx = None;
+    }
     for h in handles {
         let _ = h.join();
     }
+    drop(done_tx);
+    let now = now_replayed(start);
+    while let Ok(msg) = done_rx.try_recv() {
+        if let WorkerMsg::Done {
+            batch,
+            outcome: BatchOutcome::Completed { per_request, .. },
+            ..
+        } = msg
+        {
+            completed += per_request.len();
+            for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                metrics.record(RequestRecord {
+                    request_id: sr.request_id,
+                    arrival: pr.meta.arrival,
+                    finish: now,
+                    valid_tokens: sr.valid_tokens,
+                    invalid_tokens: sr.invalid_tokens,
+                });
+                db.log_request(RequestLog {
+                    meta: pr.meta,
+                    predicted_gen_len: pr.predicted_gen_len,
+                    actual_gen_len: pr.meta.gen_len,
+                    at: now,
+                });
+            }
+        }
+    }
+    debug_assert_eq!(
+        completed + metrics.shed.len(),
+        admitted,
+        "exactly-once accounting must close: every admitted request \
+         completes or is explicitly shed"
+    );
     Ok(metrics)
 }
 
-/// Lightweight manifest probe (avoids holding a PJRT client on the leader).
-struct PjrtBatchServerProbe {
-    max_batch: usize,
-    l_max: usize,
-    delta: u64,
+/// Replay an owned `trace` through the live cluster; interns it once and
+/// delegates to [`serve_trace_store`].  Callers that can produce a
+/// [`TraceStore`] directly (JSON load via `TraceStore::from_json`,
+/// streaming generation) should use the store entry point and skip the
+/// owned `Vec<Request>` entirely — this wrapper holds both copies of the
+/// text alive for the run.
+#[cfg(feature = "pjrt")]
+pub fn serve_trace(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    predictor: Option<GenLenPredictor>,
+    trace: &[Request],
+) -> Result<RunMetrics> {
+    serve_trace_store(
+        cfg,
+        opts,
+        policy,
+        predictor,
+        Arc::new(TraceStore::from_requests(trace)),
+    )
 }
 
-impl PjrtBatchServerProbe {
-    fn load(dir: &str) -> Result<Self> {
-        let m = crate::runtime::Manifest::load(dir)?;
-        Ok(PjrtBatchServerProbe {
-            max_batch: m.max_batch(),
-            l_max: m.model.l_max,
-            delta: m.model.kv_bytes_per_token,
-        })
-    }
+/// Replay an interned trace over real PJRT compute.
+#[cfg(feature = "pjrt")]
+pub fn serve_trace_store(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    predictor: Option<GenLenPredictor>,
+    store: Arc<TraceStore>,
+) -> Result<RunMetrics> {
+    let factory = Arc::new(PjrtWorkerFactory {
+        artifacts_dir: opts.artifacts_dir.clone(),
+    });
+    serve_supervised(cfg, opts, policy, predictor, store, factory)
+}
+
+/// Replay an interned trace over the cost-model backend: the same
+/// supervised cluster (threads, channels, wall clock, restarts) with
+/// analytic serving times, honouring `opts.fault_plan`.  No artifacts
+/// required — this is the chaos suite's substrate.
+pub fn serve_trace_store_sim(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    predictor: Option<GenLenPredictor>,
+    store: Arc<TraceStore>,
+) -> Result<RunMetrics> {
+    let factory = Arc::new(CostWorkerFactory::from_config(
+        cfg,
+        opts.time_scale,
+        opts.fault_plan.clone(),
+    ));
+    serve_supervised(cfg, opts, policy, predictor, store, factory)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::predictor::Variant;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::{LlmProfile, TraceSpec};
+
+    #[test]
+    fn arrival_timeout_clamps_past_nan_and_far_future() {
+        assert_eq!(arrival_timeout(1.0, 5.0), Duration::ZERO); // already past
+        assert_eq!(arrival_timeout(3.0, 3.0), Duration::ZERO); // due now
+        assert_eq!(arrival_timeout(f64::NAN, 1.0), Duration::ZERO);
+        let near = arrival_timeout(1.010, 1.0);
+        assert!(near > Duration::ZERO && near <= Duration::from_millis(50));
+        let far = arrival_timeout(100.0, 0.0);
+        assert!(far >= Duration::from_millis(49) && far <= Duration::from_millis(50));
+        let inf = arrival_timeout(f64::INFINITY, 0.0);
+        assert!(inf >= Duration::from_millis(49) && inf <= Duration::from_millis(50));
+    }
+
+    /// Fault-free supervised run over the cost backend: everything
+    /// completes, nothing sheds, every robustness counter stays zero.
+    #[test]
+    fn supervised_cost_backend_serves_all_fault_free() {
+        let mut cfg = ServingConfig::default();
+        cfg.gpu.g_max = 24;
+        let store = Arc::new(TraceStore::generate(&TraceSpec {
+            rate: 20.0,
+            n_requests: 12,
+            g_max: 24,
+            l_cap: 40,
+            seed: 11,
+            ..Default::default()
+        }));
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 40, 5, 24, 6);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let opts = ServeOptions {
+            n_workers: 2,
+            time_scale: 400.0,
+            ..Default::default()
+        };
+        let metrics = serve_trace_store_sim(
+            &cfg,
+            &opts,
+            LivePolicy::Magnus(MagnusPolicy::magnus()),
+            Some(p),
+            store,
+        )
+        .unwrap();
+        assert_eq!(metrics.records.len(), 12);
+        assert!(metrics.shed.is_empty());
+        assert_eq!(metrics.retries, 0);
+        assert_eq!(metrics.worker_restarts, 0);
+        assert_eq!(metrics.fallback_predictions, 0);
+        assert!(metrics.records.iter().all(|r| r.finish >= r.arrival));
+    }
+
+    #[test]
+    fn supervised_cost_backend_vanilla_smoke() {
+        let cfg = ServingConfig::default();
+        let store = Arc::new(TraceStore::generate(&TraceSpec {
+            rate: 20.0,
+            n_requests: 8,
+            g_max: 16,
+            l_cap: 30,
+            seed: 7,
+            ..Default::default()
+        }));
+        let opts = ServeOptions {
+            n_workers: 1,
+            time_scale: 400.0,
+            ..Default::default()
+        };
+        let metrics = serve_trace_store_sim(
+            &cfg,
+            &opts,
+            LivePolicy::Vanilla { fixed_batch: 4 },
+            None,
+            store,
+        )
+        .unwrap();
+        assert_eq!(metrics.records.len(), 8);
+        assert!(metrics.shed.is_empty());
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
+mod pjrt_tests {
     use super::*;
     use crate::predictor::Variant;
     use crate::workload::dataset::build_predictor_split;

@@ -12,16 +12,18 @@
 //! the same compact core; `sim::reference` keeps the owned-`Request`
 //! pipeline alive as the golden/scale baseline.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use crate::config::{SchedPolicy, ServingConfig};
+use crate::engine::faulty::{FaultyEngine, InjectedOutcome};
 use crate::engine::{BatchOutcome, InferenceEngine};
 use crate::estimator::ServingTimeEstimator;
+use crate::faults::FaultPlan;
 use crate::learning::ContinuousLearner;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
-use crate::predictor::GenLenPredictor;
+use crate::predictor::{predict_degraded, GenLenPredictor};
 use crate::scheduler::{select, view_of, BatchView};
 use crate::sim::events::EventQueue;
 use crate::sim::OOM_RELOAD_S;
@@ -150,14 +152,47 @@ pub fn run_magnus_store(
     run_magnus_store_with(cfg, policy, predictor, engine, store, DispatchMode::Indexed)
 }
 
-/// [`run_magnus_store`] with an explicit [`DispatchMode`].
+/// [`run_magnus_store`] with an explicit [`DispatchMode`].  Runs under
+/// the explicit no-fault plan — the faulted core takes a byte-identical
+/// fast path for it, so goldens over this entry point are unaffected.
 pub fn run_magnus_store_with(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
+    predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    store: &TraceStore,
+    mode: DispatchMode,
+) -> SimOutput {
+    let plan = FaultPlan::none();
+    run_magnus_store_faulted(cfg, policy, predictor, engine, store, mode, &plan)
+}
+
+/// Per-run fault bookkeeping: dispatch attempt counters (retry salts for
+/// the plan's stateless hash, and the bounded-retry cutoff) plus
+/// per-instance restart counts (exponential-backoff exponents).
+struct FaultState {
+    attempts: HashMap<u64, u32>,
+    inst_restarts: Vec<u32>,
+}
+
+/// [`run_magnus_store_with`] under a [`FaultPlan`] — the chaos-testing
+/// core (ISSUE 6).  Injected crashes and transient serve errors re-queue
+/// the batch with bounded retries (then shed it, explicitly, into
+/// `metrics.shed`), forced-OOM storms ride the §III-C split-and-requeue
+/// path (via [`Batch::split_overrun`] when the plan's overrun guard is
+/// on), stall windows scale serving times, and predictor outage/noise
+/// windows reroute admission through the fallback chain.  Invariant:
+/// every admitted request completes exactly once or is recorded as shed.
+/// A no-op plan takes the legacy code path byte-for-byte.
+#[allow(clippy::too_many_arguments)]
+pub fn run_magnus_store_faulted(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
     mut predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
     store: &TraceStore,
     mode: DispatchMode,
+    plan: &FaultPlan,
 ) -> SimOutput {
     let mut batcher = AdaptiveBatcher::new(BatcherConfig {
         wma_threshold: cfg.wma_threshold,
@@ -171,6 +206,13 @@ pub fn run_magnus_store_with(
     let mut metrics = RunMetrics::new();
     let mut pred_errors = Vec::new();
     let mut est_errors = Vec::new();
+
+    let faulty = FaultyEngine::new(engine, plan);
+    let g_max = cfg.gpu.g_max;
+    let mut fstate = FaultState {
+        attempts: HashMap::new(),
+        inst_restarts: vec![0; cfg.n_instances],
+    };
 
     let mut events: EventQueue<Event> = EventQueue::new();
     for (i, m) in store.metas().iter().enumerate() {
@@ -209,7 +251,23 @@ pub fn run_magnus_store_with(
                 }
                 arrival_views.clear();
                 arrival_views.extend(arrivals.iter().map(|&k| store.view(k)));
-                predictor.predict_many_views(&arrival_views, &mut preds);
+                if plan.has_predictor_faults() {
+                    // Degraded admission: outage windows reroute to the
+                    // fallback chain, noise perturbs trained predictions.
+                    preds.clear();
+                    for v in &arrival_views {
+                        let outage = plan.predictor_outage(now);
+                        let (p, fell_back) = predict_degraded(&mut predictor, outage, v, g_max);
+                        if fell_back {
+                            metrics.fallback_predictions += 1;
+                            preds.push(p);
+                        } else {
+                            preds.push(plan.noisy_prediction(p, v.id, g_max));
+                        }
+                    }
+                } else {
+                    predictor.predict_many_views(&arrival_views, &mut preds);
+                }
                 for (k, &ti) in arrivals.iter().enumerate() {
                     let meta = store.meta(ti);
                     let predicted = preds[k];
@@ -230,7 +288,10 @@ pub fn run_magnus_store_with(
                         now,
                         mode,
                         policy,
-                        engine,
+                        &faulty,
+                        plan,
+                        g_max,
+                        &mut fstate,
                         &mut batcher,
                         &estimator,
                         &mut idle,
@@ -290,7 +351,10 @@ pub fn run_magnus_store_with(
             now,
             mode,
             policy,
-            engine,
+            &faulty,
+            plan,
+            g_max,
+            &mut fstate,
             &mut batcher,
             &estimator,
             &mut idle,
@@ -300,7 +364,12 @@ pub fn run_magnus_store_with(
         );
     }
 
-    debug_assert_eq!(served, store.len(), "all requests must complete");
+    debug_assert_eq!(
+        served + metrics.shed.len(),
+        store.len(),
+        "exactly-once accounting must close: every admitted request \
+         completes or is explicitly shed"
+    );
     SimOutput {
         metrics,
         db,
@@ -319,7 +388,10 @@ fn dispatch_idle(
     now: f64,
     mode: DispatchMode,
     policy: &MagnusPolicy,
-    engine: &dyn InferenceEngine,
+    faulty: &FaultyEngine<'_>,
+    plan: &FaultPlan,
+    g_max: u32,
+    fstate: &mut FaultState,
     batcher: &mut AdaptiveBatcher,
     estimator: &ServingTimeEstimator,
     idle: &mut VecDeque<usize>,
@@ -364,23 +436,77 @@ fn dispatch_idle(
         let batch = batcher.take(pick);
         let inst = idle.pop_front().unwrap();
 
-        match engine.serve_batch(&batch) {
-            BatchOutcome::Oom {
-                at_iteration: _,
-                wasted_time,
+        if plan.is_noop() {
+            // Legacy path, byte-for-byte: the golden-equivalence suites
+            // replay fault-free runs through here.
+            match faulty.inner().serve_batch(&batch) {
+                BatchOutcome::Oom {
+                    at_iteration: _,
+                    wasted_time,
+                } => {
+                    // §III-C: split evenly, mark uninsertable, re-queue.
+                    metrics.record_oom();
+                    let nid = batcher.alloc_id();
+                    let (l, r) = batch.split(nid);
+                    batcher.requeue(l);
+                    batcher.requeue(r);
+                    events.push(
+                        now + wasted_time + OOM_RELOAD_S,
+                        Event::InstanceReady(inst),
+                    );
+                }
+                done @ BatchOutcome::Completed { .. } => {
+                    let serving_time = match &done {
+                        BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                        _ => unreachable!(),
+                    };
+                    events.push(now + serving_time, Event::BatchDone(inst, batch, est, done));
+                }
+            }
+            continue;
+        }
+
+        let attempt = fstate.attempts.get(&batch.id).copied().unwrap_or(0);
+        match faulty.serve_batch_at(now, &batch, u64::from(attempt)) {
+            InjectedOutcome::Crash { wasted_time } => {
+                // The instance dies mid-serve: retry/shed the batch and
+                // bring the instance back after a capped exponential
+                // backoff (the sim never retires instances — the live
+                // supervisor's max_worker_restarts handles that).
+                metrics.injected_faults += 1;
+                let backoff = plan.restart_backoff(fstate.inst_restarts[inst]);
+                fstate.inst_restarts[inst] += 1;
+                metrics.worker_restarts += 1;
+                retry_or_shed(plan, batcher, metrics, fstate, batch);
+                events.push(now + wasted_time + backoff, Event::InstanceReady(inst));
+            }
+            InjectedOutcome::TransientError { wasted_time } => {
+                metrics.injected_faults += 1;
+                retry_or_shed(plan, batcher, metrics, fstate, batch);
+                events.push(now + wasted_time, Event::InstanceReady(inst));
+            }
+            InjectedOutcome::Outcome {
+                outcome:
+                    BatchOutcome::Oom {
+                        at_iteration,
+                        wasted_time,
+                    },
+                forced,
             } => {
-                // §III-C: split evenly, mark uninsertable, re-queue.
                 metrics.record_oom();
-                let nid = batcher.alloc_id();
-                let (l, r) = batch.split(nid);
-                batcher.requeue(l);
-                batcher.requeue(r);
+                if forced {
+                    metrics.injected_faults += 1;
+                }
+                requeue_oom(plan, batcher, metrics, fstate, batch, at_iteration, g_max);
                 events.push(
                     now + wasted_time + OOM_RELOAD_S,
                     Event::InstanceReady(inst),
                 );
             }
-            done @ BatchOutcome::Completed { .. } => {
+            InjectedOutcome::Outcome {
+                outcome: done @ BatchOutcome::Completed { .. },
+                ..
+            } => {
                 let serving_time = match &done {
                     BatchOutcome::Completed { serving_time, .. } => *serving_time,
                     _ => unreachable!(),
@@ -389,6 +515,65 @@ fn dispatch_idle(
             }
         }
     }
+}
+
+/// Bounded-retry policy for a batch lost to an injected crash/error:
+/// bump its attempt count, re-queue while attempts remain, otherwise
+/// shed every member request explicitly (never silently lost).
+fn retry_or_shed(
+    plan: &FaultPlan,
+    batcher: &mut AdaptiveBatcher,
+    metrics: &mut RunMetrics,
+    fstate: &mut FaultState,
+    batch: Batch,
+) {
+    let attempt = fstate.attempts.entry(batch.id).or_insert(0);
+    *attempt += 1;
+    if *attempt > plan.max_retries {
+        for pr in &batch.requests {
+            metrics.record_shed(pr.meta.id);
+        }
+    } else {
+        metrics.retries += 1;
+        batcher.requeue(batch);
+    }
+}
+
+/// Re-queue an OOM-killed batch: the overrun guard first tries the
+/// EOS-partitioned [`Batch::split_overrun`] (re-bucketing overrunners),
+/// falling back to the §III-C even split.  A singleton cannot split, so
+/// it is marked uninsertable and retried/shed like a failed dispatch.
+fn requeue_oom(
+    plan: &FaultPlan,
+    batcher: &mut AdaptiveBatcher,
+    metrics: &mut RunMetrics,
+    fstate: &mut FaultState,
+    mut batch: Batch,
+    at_iteration: u32,
+    g_max: u32,
+) {
+    if batch.size() < 2 {
+        batch.insertable = false;
+        retry_or_shed(plan, batcher, metrics, fstate, batch);
+        return;
+    }
+    let nid = batcher.alloc_id();
+    let batch = if plan.overrun_guard {
+        match batch.split_overrun(nid, at_iteration, g_max) {
+            Ok((l, r)) => {
+                metrics.rebucketed += r.size();
+                batcher.requeue(l);
+                batcher.requeue(r);
+                return;
+            }
+            Err(b) => b,
+        }
+    } else {
+        batch
+    };
+    let (l, r) = batch.split(nid);
+    batcher.requeue(l);
+    batcher.requeue(r);
 }
 
 #[cfg(test)]

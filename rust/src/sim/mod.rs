@@ -20,8 +20,8 @@ use crate::workload::{LlmProfile, Request, TraceStore};
 
 pub use events::EventQueue;
 pub use magnus::{
-    run_magnus, run_magnus_store, run_magnus_store_with, run_magnus_with, DispatchMode,
-    MagnusPolicy, SimOutput,
+    run_magnus, run_magnus_store, run_magnus_store_faulted, run_magnus_store_with,
+    run_magnus_with, DispatchMode, MagnusPolicy, SimOutput,
 };
 pub use reference::run_magnus_owned;
 
@@ -170,6 +170,45 @@ pub fn run_policy_store(
             store,
         ),
     }
+}
+
+/// [`run_policy_store`] under a [`FaultPlan`](crate::faults::FaultPlan)
+/// (ISSUE 6 chaos axis): the
+/// Magnus-family arms run the faulted core; the non-predictive baselines
+/// (VS/VSQ/CCB) have no supervised dispatch loop to inject into, so
+/// requesting them with a non-noop plan is an error rather than a
+/// silently fault-free run.
+pub fn run_policy_store_faulted(
+    cfg: &ServingConfig,
+    policy: Policy,
+    store: &TraceStore,
+    predictor_train: usize,
+    plan: &crate::faults::FaultPlan,
+) -> anyhow::Result<SimOutput> {
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let magnus_policy = match policy {
+        Policy::Glp => MagnusPolicy::glp(cfg.gpu.vanilla_batch_size()),
+        Policy::Abp => MagnusPolicy::abp(),
+        Policy::Magnus => MagnusPolicy::magnus(),
+        other => {
+            if plan.is_noop() {
+                return Ok(run_policy_store(cfg, policy, store, predictor_train));
+            }
+            anyhow::bail!(
+                "--fault-plan supports GLP/ABP/Magnus, not {}",
+                other.name()
+            );
+        }
+    };
+    Ok(run_magnus_store_faulted(
+        cfg,
+        &magnus_policy,
+        trained_predictor(cfg, predictor_train),
+        &engine,
+        store,
+        DispatchMode::Indexed,
+        plan,
+    ))
 }
 
 fn wrap(metrics: crate::metrics::RunMetrics) -> SimOutput {

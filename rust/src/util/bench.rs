@@ -476,6 +476,103 @@ pub fn record_trace_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// One measured point of the robustness fault sweep
+/// (`BENCH_robustness.json`).
+///
+/// Each point replays the same trace under a seeded [`crate::faults`]
+/// plan whose crash / transient-error / forced-OOM probabilities scale
+/// with `fault_rate` (0.0 = fault-free baseline).  Counters come from
+/// [`crate::metrics::RunMetrics`]; every admitted request is either in
+/// `completed` or `shed` — the exactly-once invariant the chaos suite
+/// asserts.
+#[derive(Debug, Clone)]
+pub struct RobustnessPoint {
+    pub label: String,
+    pub fault_rate: f64,
+    pub n_requests: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub retries: u32,
+    pub worker_restarts: u32,
+    pub fallback_predictions: u32,
+    pub oom_events: u32,
+    pub request_throughput: f64,
+    pub mean_response_time: f64,
+    pub p95_response_time: f64,
+}
+
+/// Record the robustness degradation curve as `BENCH_robustness.json` at
+/// the repo root (same family as the other `BENCH_*.json` records).
+/// Derives the headline ratios — throughput and mean-RT degradation plus
+/// the completion fraction — at the highest fault rate relative to the
+/// `fault_rate == 0.0` baseline when both are present.
+pub fn record_robustness_bench(
+    path: &str,
+    n_requests: usize,
+    rate: f64,
+    points: &[RobustnessPoint],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let arr = |f: &dyn Fn(&RobustnessPoint) -> Json| {
+        Json::Arr(points.iter().map(f).collect())
+    };
+    let mut fields = vec![
+        ("bench", Json::str("robustness_fault_sweep")),
+        ("requests", Json::num(n_requests as f64)),
+        ("rate", Json::num(rate)),
+        ("label", arr(&|p| Json::str(p.label.clone()))),
+        ("fault_rate", arr(&|p| Json::num(p.fault_rate))),
+        ("completed", arr(&|p| Json::num(p.completed as f64))),
+        ("shed", arr(&|p| Json::num(p.shed as f64))),
+        ("retries", arr(&|p| Json::num(p.retries))),
+        ("worker_restarts", arr(&|p| Json::num(p.worker_restarts))),
+        (
+            "fallback_predictions",
+            arr(&|p| Json::num(p.fallback_predictions)),
+        ),
+        ("oom_events", arr(&|p| Json::num(p.oom_events))),
+        (
+            "request_throughput",
+            arr(&|p| Json::num(p.request_throughput)),
+        ),
+        (
+            "mean_response_time",
+            arr(&|p| Json::num(p.mean_response_time)),
+        ),
+        (
+            "p95_response_time",
+            arr(&|p| Json::num(p.p95_response_time)),
+        ),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    let base = points.iter().find(|p| p.fault_rate == 0.0);
+    let worst = points
+        .iter()
+        .filter(|p| p.fault_rate > 0.0)
+        .max_by(|a, b| a.fault_rate.partial_cmp(&b.fault_rate).unwrap());
+    if let (Some(base), Some(worst)) = (base, worst) {
+        fields.push(("worst_fault_rate", Json::num(worst.fault_rate)));
+        fields.push((
+            "throughput_degradation",
+            Json::num(base.request_throughput / worst.request_throughput.max(1e-12)),
+        ));
+        fields.push((
+            "mean_rt_inflation",
+            Json::num(worst.mean_response_time / base.mean_response_time.max(1e-12)),
+        ));
+        fields.push((
+            "worst_completion_fraction",
+            Json::num(worst.completed as f64 / (worst.completed + worst.shed).max(1) as f64),
+        ));
+    }
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -627,6 +724,48 @@ mod tests {
         assert_eq!(j.get("open_speedup").as_f64(), Some(40.0));
         assert_eq!(j.get("peak_bytes_ratio").as_f64(), Some(20.0));
         assert_eq!(j.get("n").as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_robustness_bench_derives_degradation_vs_baseline() {
+        let path = std::env::temp_dir().join("magnus_bench_robustness_test.json");
+        let path = path.to_string_lossy().into_owned();
+        let mk = |label: &str, rate: f64, completed: usize, shed: usize, thr: f64, rt: f64| {
+            RobustnessPoint {
+                label: label.to_string(),
+                fault_rate: rate,
+                n_requests: 100,
+                completed,
+                shed,
+                retries: if rate > 0.0 { 9 } else { 0 },
+                worker_restarts: 0,
+                fallback_predictions: 0,
+                oom_events: 2,
+                request_throughput: thr,
+                mean_response_time: rt,
+                p95_response_time: rt * 2.0,
+            }
+        };
+        let points = [
+            mk("baseline", 0.0, 100, 0, 4.0, 10.0),
+            mk("mid", 0.15, 98, 2, 2.0, 15.0),
+            mk("storm", 0.30, 80, 20, 1.0, 30.0),
+        ];
+        record_robustness_bench(&path, 100, 8.0, &points, vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("worst_fault_rate").as_f64(), Some(0.30));
+        assert_eq!(j.get("throughput_degradation").as_f64(), Some(4.0));
+        assert_eq!(j.get("mean_rt_inflation").as_f64(), Some(3.0));
+        assert_eq!(j.get("worst_completion_fraction").as_f64(), Some(0.8));
+        assert_eq!(j.get("fault_rate").as_arr().unwrap().len(), 3);
+        // exactly-once accounting is visible per point
+        let c = j.get("completed").as_arr().unwrap();
+        let s = j.get("shed").as_arr().unwrap();
+        for i in 0..3 {
+            let total = c[i].as_f64().unwrap() + s[i].as_f64().unwrap();
+            assert_eq!(total, 100.0);
+        }
         let _ = std::fs::remove_file(&path);
     }
 

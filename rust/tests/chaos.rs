@@ -1,0 +1,383 @@
+//! Differential chaos suite (ISSUE 6 tentpole gate).
+//!
+//! Headline invariant: under ANY fault schedule, every admitted request
+//! completes exactly once or is explicitly shed — nothing is silently
+//! lost, nothing is double-served.  Checked over the discrete-event
+//! simulator core (`run_magnus_store_faulted`) and the supervised live
+//! cluster (`serve_trace_store_sim`, cost-model backend: real threads,
+//! channels, restarts and wall clock).
+//!
+//! Secondary gates:
+//! * a fault-free plan (even with non-default retry/backoff budgets) is
+//!   bit-identical to the legacy goldens for every Magnus-family policy;
+//! * same seed + same plan → bit-identical records, shed lists and
+//!   robustness counters on replay (fault decisions are stateless
+//!   hashes, not RNG state threaded through the loop);
+//! * whole-run OOM storms shed explicitly (bounded retries), whole-run
+//!   predictor outages route every admission through the fallback chain.
+
+mod common;
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::faults::{FaultPlan, OomStorm, PredictorNoise, PredictorOutage, Stall, Window};
+use magnus::predictor::{FallbackMode, GenLenPredictor, Variant};
+use magnus::server::{serve_trace_store_sim, LivePolicy, ServeOptions};
+use magnus::sim::{
+    run_magnus_store_faulted, run_policy_store, run_policy_store_faulted, DispatchMode,
+    MagnusPolicy, Policy, SimOutput,
+};
+use magnus::workload::{TraceSpec, TraceStore};
+
+fn chaos_store(n: usize, rate: f64, seed: u64) -> TraceStore {
+    TraceStore::generate(&TraceSpec {
+        rate,
+        n_requests: n,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Run the faulted simulator core under the untrained input-length
+/// predictor (Uilo) — chaos runs exercise fault plumbing, not forest
+/// accuracy, and skipping training keeps the suite fast.
+fn run_chaos(cfg: &ServingConfig, store: &TraceStore, plan: &FaultPlan) -> SimOutput {
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    run_magnus_store_faulted(
+        cfg,
+        &MagnusPolicy::magnus(),
+        GenLenPredictor::new(Variant::Uilo, cfg),
+        &engine,
+        store,
+        DispatchMode::Indexed,
+        plan,
+    )
+}
+
+/// The headline invariant: completed ∪ shed covers every admitted id,
+/// with no id appearing twice on either side or both sides.
+fn assert_exactly_once(
+    records: &[magnus::metrics::RequestRecord],
+    shed: &[u64],
+    store: &TraceStore,
+    ctx: &str,
+) {
+    let mut seen = HashSet::new();
+    for r in records {
+        assert!(
+            seen.insert(r.request_id),
+            "{ctx}: request {} completed twice",
+            r.request_id
+        );
+    }
+    for &id in shed {
+        assert!(
+            seen.insert(id),
+            "{ctx}: request {id} shed twice or both completed and shed"
+        );
+    }
+    assert_eq!(
+        seen.len(),
+        store.len(),
+        "{ctx}: admitted != completed + shed"
+    );
+    for m in store.metas() {
+        assert!(seen.contains(&m.id), "{ctx}: request {} lost", m.id);
+    }
+}
+
+/// Bitwise comparison for FAULTED runs (the golden-gate
+/// `common::assert_identical` additionally requires every robustness
+/// counter to be zero, so it only fits fault-free pairs).
+fn assert_bitwise_replay(a: &SimOutput, b: &SimOutput, ctx: &str) {
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len(), "{ctx}");
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.request_id, y.request_id, "{ctx}");
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{ctx}");
+        assert_eq!(x.valid_tokens, y.valid_tokens, "{ctx}");
+        assert_eq!(x.invalid_tokens, y.invalid_tokens, "{ctx}");
+    }
+    assert_eq!(a.metrics.shed, b.metrics.shed, "{ctx}: shed");
+    assert_eq!(a.metrics.oom_events, b.metrics.oom_events, "{ctx}");
+    assert_eq!(a.metrics.retries, b.metrics.retries, "{ctx}");
+    assert_eq!(a.metrics.worker_restarts, b.metrics.worker_restarts, "{ctx}");
+    assert_eq!(
+        a.metrics.fallback_predictions,
+        b.metrics.fallback_predictions,
+        "{ctx}"
+    );
+    assert_eq!(a.metrics.rebucketed, b.metrics.rebucketed, "{ctx}");
+    assert_eq!(a.metrics.injected_faults, b.metrics.injected_faults, "{ctx}");
+}
+
+/// A plan that injects nothing — even with non-default retry/backoff
+/// budgets — must be bit-identical to the legacy entry point for every
+/// Magnus-family policy (the fault-free golden gate).
+#[test]
+fn fault_free_plan_is_bit_identical_to_legacy_goldens() {
+    let cfg = ServingConfig::default();
+    let store = chaos_store(200, 10.0, 31);
+    let mut plan = FaultPlan::none();
+    plan.max_retries = 9;
+    plan.restart_backoff_s = 1.5;
+    assert!(plan.is_noop());
+    for policy in [Policy::Magnus, Policy::Glp, Policy::Abp] {
+        let a = run_policy_store(&cfg, policy, &store, 120);
+        let b = run_policy_store_faulted(&cfg, policy, &store, 120, &plan).unwrap();
+        common::assert_identical(&a, &b, policy.name());
+    }
+}
+
+/// Non-predictive baselines have no supervised dispatch loop to inject
+/// into: a noop plan falls through to the legacy run, a non-noop plan is
+/// an explicit error (never a silently fault-free run).
+#[test]
+fn baseline_policies_reject_non_noop_plans() {
+    let cfg = ServingConfig::default();
+    let store = chaos_store(40, 10.0, 32);
+    let ok = run_policy_store_faulted(&cfg, Policy::Vs, &store, 0, &FaultPlan::none());
+    assert!(ok.is_ok());
+    let mut plan = FaultPlan::none();
+    plan.crash_p = 0.5;
+    let err = run_policy_store_faulted(&cfg, Policy::Vs, &store, 0, &plan);
+    assert!(err.is_err());
+}
+
+/// Exactly-once under three qualitatively different schedules, and
+/// bit-identical replay of each (stateless fault decisions).
+#[test]
+fn chaos_schedules_hold_exactly_once_and_replay_bitwise() {
+    let cfg = ServingConfig::default();
+    let n = 240;
+    let rate = 12.0;
+    let span = n as f64 / rate;
+    let store = chaos_store(n, rate, 99);
+
+    let mut crashes = FaultPlan::none();
+    crashes.seed = 11;
+    crashes.crash_p = 0.3;
+    crashes.serve_error_p = 0.2;
+
+    let mut degraded = FaultPlan::none();
+    degraded.seed = 12;
+    degraded.stalls = vec![Stall {
+        window: Window::new(0.0, span),
+        factor: 3.0,
+    }];
+    degraded.predictor_noise = Some(PredictorNoise {
+        bias: 4.0,
+        jitter: 0.5,
+    });
+
+    let mut storm = FaultPlan::none();
+    storm.seed = 13;
+    storm.crash_p = 0.15;
+    storm.oom_storms = vec![OomStorm {
+        window: Window::new(0.25 * span, 0.75 * span),
+        p: 0.5,
+    }];
+    storm.predictor_outages = vec![PredictorOutage {
+        window: Window::new(0.5 * span, span),
+        mode: FallbackMode::Heuristic,
+    }];
+    storm.overrun_guard = true;
+
+    for (name, plan) in [
+        ("crashes", &crashes),
+        ("degraded", &degraded),
+        ("storm", &storm),
+    ] {
+        let a = run_chaos(&cfg, &store, plan);
+        assert_exactly_once(&a.metrics.records, &a.metrics.shed, &store, name);
+        let b = run_chaos(&cfg, &store, plan);
+        assert_bitwise_replay(&a, &b, name);
+    }
+    // The degraded plan injects no failures: everything completes.
+    let degraded_out = run_chaos(&cfg, &store, &degraded);
+    assert_eq!(degraded_out.metrics.records.len(), n);
+    assert!(degraded_out.metrics.shed.is_empty());
+    assert_eq!(degraded_out.metrics.retries, 0);
+}
+
+/// A whole-run certain OOM storm: no batch can ever complete, so after
+/// bounded splits and retries EVERY request is explicitly shed — the
+/// worst case degrades to explicit shedding, never to silent loss.
+#[test]
+fn total_oom_storm_sheds_everything_explicitly() {
+    let cfg = ServingConfig::default();
+    let store = chaos_store(60, 15.0, 77);
+    let mut plan = FaultPlan::none();
+    plan.seed = 5;
+    plan.oom_storms = vec![OomStorm {
+        window: Window::new(0.0, f64::INFINITY),
+        p: 1.0,
+    }];
+    let out = run_chaos(&cfg, &store, &plan);
+    assert_exactly_once(&out.metrics.records, &out.metrics.shed, &store, "total storm");
+    assert!(out.metrics.records.is_empty(), "nothing can complete under p=1.0");
+    assert_eq!(out.metrics.shed.len(), store.len());
+    assert!(out.metrics.oom_events > 0);
+    assert!(out.metrics.injected_faults > 0);
+}
+
+/// Same storm with the overrun guard on: the EOS-partitioned split path
+/// runs (when both sides are non-empty) and the invariant still holds.
+#[test]
+fn total_oom_storm_with_overrun_guard_still_closes_accounting() {
+    let cfg = ServingConfig::default();
+    let store = chaos_store(60, 15.0, 77);
+    let mut plan = FaultPlan::none();
+    plan.seed = 5;
+    plan.oom_storms = vec![OomStorm {
+        window: Window::new(0.0, f64::INFINITY),
+        p: 1.0,
+    }];
+    plan.overrun_guard = true;
+    let out = run_chaos(&cfg, &store, &plan);
+    assert_exactly_once(&out.metrics.records, &out.metrics.shed, &store, "guarded storm");
+    assert!(out.metrics.oom_events > 0);
+}
+
+/// A whole-run predictor outage: every admission routes through the
+/// fallback chain, and (with no other faults) everything completes.
+#[test]
+fn total_predictor_outage_falls_back_for_every_admission() {
+    let cfg = ServingConfig::default();
+    let store = chaos_store(80, 10.0, 55);
+    let mut plan = FaultPlan::none();
+    plan.predictor_outages = vec![PredictorOutage {
+        window: Window::new(0.0, f64::INFINITY),
+        mode: FallbackMode::Heuristic,
+    }];
+    let out = run_chaos(&cfg, &store, &plan);
+    assert_eq!(out.metrics.fallback_predictions as usize, store.len());
+    assert_eq!(out.metrics.records.len(), store.len());
+    assert!(out.metrics.shed.is_empty());
+
+    plan.predictor_outages[0].mode = FallbackMode::MaxBucket;
+    let out = run_chaos(&cfg, &store, &plan);
+    assert_eq!(out.metrics.fallback_predictions as usize, store.len());
+    assert_exactly_once(&out.metrics.records, &out.metrics.shed, &store, "max bucket");
+}
+
+/// Live supervised cluster (cost backend) under heavy crash + transient
+/// error pressure: workers die and restart on real threads, yet the
+/// exactly-once set invariant holds.  (Wall-clock timing is
+/// nondeterministic, so only set-level facts are asserted.)
+#[test]
+fn live_supervised_crash_chaos_loses_no_request() {
+    let mut cfg = ServingConfig::default();
+    cfg.gpu.g_max = 24;
+    let store = Arc::new(TraceStore::generate(&TraceSpec {
+        rate: 20.0,
+        n_requests: 30,
+        g_max: 24,
+        l_cap: 40,
+        seed: 21,
+        ..Default::default()
+    }));
+    let mut plan = FaultPlan::none();
+    plan.seed = 9;
+    plan.crash_p = 0.6;
+    plan.serve_error_p = 0.3;
+    plan.max_retries = 5;
+    plan.max_worker_restarts = 6;
+    plan.restart_backoff_s = 0.005;
+    let opts = ServeOptions {
+        n_workers: 2,
+        time_scale: 300.0,
+        fault_plan: plan,
+        ..Default::default()
+    };
+    let p = GenLenPredictor::new(Variant::Uilo, &cfg);
+    let metrics = serve_trace_store_sim(
+        &cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        Some(p),
+        Arc::clone(&store),
+    )
+    .unwrap();
+    assert_exactly_once(&metrics.records, &metrics.shed, &store, "live crash chaos");
+}
+
+/// Certain crashes with a tiny restart budget: every incarnation dies on
+/// its first serve, the supervisor retires the slot after the budget,
+/// and the whole queue is shed — records empty, restart count exact.
+#[test]
+fn live_all_workers_retired_sheds_whole_queue() {
+    let mut cfg = ServingConfig::default();
+    cfg.gpu.g_max = 24;
+    let store = Arc::new(TraceStore::generate(&TraceSpec {
+        rate: 50.0,
+        n_requests: 10,
+        g_max: 24,
+        l_cap: 40,
+        seed: 23,
+        ..Default::default()
+    }));
+    let mut plan = FaultPlan::none();
+    plan.seed = 3;
+    plan.crash_p = 1.0;
+    plan.max_worker_restarts = 2;
+    plan.restart_backoff_s = 0.002;
+    let opts = ServeOptions {
+        n_workers: 1,
+        time_scale: 300.0,
+        fault_plan: plan,
+        ..Default::default()
+    };
+    let p = GenLenPredictor::new(Variant::Uilo, &cfg);
+    let metrics = serve_trace_store_sim(
+        &cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        Some(p),
+        Arc::clone(&store),
+    )
+    .unwrap();
+    assert!(metrics.records.is_empty(), "crash_p = 1.0 completes nothing");
+    assert_eq!(metrics.shed.len(), store.len());
+    assert_eq!(metrics.worker_restarts, 2);
+    assert_exactly_once(&metrics.records, &metrics.shed, &store, "all retired");
+}
+
+/// Live fault-free supervised run keeps every robustness counter at
+/// zero — the live analogue of the golden-gate counter assertions.
+#[test]
+fn live_fault_free_run_reports_zero_robustness_counters() {
+    let mut cfg = ServingConfig::default();
+    cfg.gpu.g_max = 24;
+    let store = Arc::new(TraceStore::generate(&TraceSpec {
+        rate: 20.0,
+        n_requests: 16,
+        g_max: 24,
+        l_cap: 40,
+        seed: 29,
+        ..Default::default()
+    }));
+    let opts = ServeOptions {
+        n_workers: 2,
+        time_scale: 300.0,
+        ..Default::default()
+    };
+    let p = GenLenPredictor::new(Variant::Uilo, &cfg);
+    let metrics = serve_trace_store_sim(
+        &cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        Some(p),
+        Arc::clone(&store),
+    )
+    .unwrap();
+    assert_eq!(metrics.records.len(), 16);
+    assert!(metrics.shed.is_empty());
+    assert_eq!(metrics.retries, 0);
+    assert_eq!(metrics.worker_restarts, 0);
+    assert_eq!(metrics.fallback_predictions, 0);
+    assert_eq!(metrics.rebucketed, 0);
+    assert_eq!(metrics.injected_faults, 0);
+}

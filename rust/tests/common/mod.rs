@@ -55,4 +55,35 @@ pub fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
             "{ctx}: summary {name} {va} vs {vb}"
         );
     }
+    // Robustness counters: the golden suites only ever compare
+    // fault-free runs, so beyond matching each other these must all be
+    // exactly zero — any nonzero value means a fault-injection code
+    // path leaked into the legacy pipeline.
+    for (va, vb, name) in [
+        (a.metrics.shed.len() as u64, b.metrics.shed.len() as u64, "shed"),
+        (u64::from(a.metrics.retries), u64::from(b.metrics.retries), "retries"),
+        (
+            u64::from(a.metrics.worker_restarts),
+            u64::from(b.metrics.worker_restarts),
+            "worker_restarts",
+        ),
+        (
+            u64::from(a.metrics.fallback_predictions),
+            u64::from(b.metrics.fallback_predictions),
+            "fallback_predictions",
+        ),
+        (
+            u64::from(a.metrics.rebucketed),
+            u64::from(b.metrics.rebucketed),
+            "rebucketed",
+        ),
+        (
+            u64::from(a.metrics.injected_faults),
+            u64::from(b.metrics.injected_faults),
+            "injected_faults",
+        ),
+    ] {
+        assert_eq!(va, vb, "{ctx}: counter {name}");
+        assert_eq!(va, 0, "{ctx}: counter {name} must be zero fault-free");
+    }
 }
