@@ -1,0 +1,315 @@
+//! Edge overload curve: a live HTTP front door driven past capacity by
+//! the open-loop generator → `BENCH_edge.json` (ISSUE 7).
+//!
+//! Protocol:
+//!
+//! 1. **Capacity** — saturate the bare ingress channel (no HTTP, no
+//!    admission) and measure completions/second; this is the core's
+//!    ceiling `C` and the denominator for every overload multiple.
+//! 2. **Sweep** — fresh [`EdgeServer`] per point, offered load at
+//!    `{1×, 2×, 5×} C` Poisson plus one bursty 2× point; record goodput,
+//!    shed rate, and p50/p99 latency.
+//! 3. **Comparison** — the channel-only path paced at `1× C`, so the 1×
+//!    edge point has an HTTP-free twin to be judged against.
+//!
+//! Asserted before anything is recorded, at every point:
+//!
+//! * the edge accounting identity `offered == completed + shed +
+//!   expired + core_shed` (nothing lost, nothing hung);
+//! * the generator's own ledger closes (`LoadReport::accounted`);
+//! * in full mode, 1× goodput within 10% of the channel-only twin —
+//!   the front door must be ~free when there is no overload.
+//!
+//! `MAGNUS_EDGE_SMOKE` (or `MAGNUS_BENCH_QUICK`) shrinks everything for
+//! CI; the 10% goodput gate is skipped there (sub-second runs are noise).
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use magnus::config::ServingConfig;
+use magnus::edge::{run_loadgen, AdmissionConfig, EdgeOptions, EdgeServer, LoadGenConfig};
+use magnus::faults::FaultPlan;
+use magnus::http::HttpConfig;
+use magnus::server::{serve_ingress_sim, CoreSignal, EdgeJob, LivePolicy, ServeOptions};
+use magnus::sim::{trained_predictor, MagnusPolicy};
+use magnus::util::bench::{record_edge_bench, EdgePoint};
+use magnus::util::{Json, Rng};
+use magnus::workload::{TraceSpec, TraceStore};
+
+const SEED: u64 = 777;
+const TIME_SCALE: f64 = 200.0;
+const N_WORKERS: usize = 2;
+const DEADLINE_MS: u64 = 3_000;
+
+fn serve_opts() -> ServeOptions {
+    ServeOptions {
+        n_workers: N_WORKERS,
+        time_scale: TIME_SCALE,
+        fault_plan: FaultPlan::none(),
+        ..Default::default()
+    }
+}
+
+/// Predicted generation length per trace index, from the same trained
+/// predictor the edge uses (the channel paths need them precomputed).
+fn predictions(cfg: &ServingConfig, store: &TraceStore) -> Vec<u32> {
+    let mut p = trained_predictor(cfg, 120);
+    (0..store.len()).map(|i| p.predict(store.view(i)).max(1)).collect()
+}
+
+/// Saturate the bare ingress channel: every job offered at t=0, no HTTP,
+/// no admission.  Completions per wall second is the core's capacity.
+fn channel_capacity(
+    cfg: &ServingConfig,
+    store: &Arc<TraceStore>,
+    preds: &[u32],
+    n: usize,
+) -> f64 {
+    let (jobs_tx, jobs_rx) = mpsc::channel();
+    let (sig_tx, sig_rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for serial in 0..n {
+        let i = serial % store.len();
+        let mut meta = store.meta(i);
+        meta.id = serial as u64 + 1;
+        jobs_tx.send(EdgeJob { meta, predicted_gen_len: preds[i] }).unwrap();
+    }
+    drop(jobs_tx);
+    let core = {
+        let (cfg, opts, store) = (cfg.clone(), serve_opts(), Arc::clone(store));
+        std::thread::spawn(move || {
+            serve_ingress_sim(
+                &cfg,
+                &opts,
+                LivePolicy::Magnus(MagnusPolicy::magnus()),
+                jobs_rx,
+                sig_tx,
+                store,
+            )
+        })
+    };
+    let mut done = 0usize;
+    for sig in sig_rx.iter() {
+        if matches!(sig, CoreSignal::Completed { .. }) {
+            done += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let metrics = core.join().unwrap().unwrap();
+    assert_eq!(
+        metrics.records.len() + metrics.shed.len(),
+        n,
+        "capacity run must account for every job"
+    );
+    assert_eq!(done, metrics.records.len());
+    done as f64 / elapsed.max(1e-9)
+}
+
+/// Channel-only path paced at `rate` — the HTTP-free twin of the 1×
+/// edge point.  Returns goodput (everything completes; no admission).
+fn channel_paced_goodput(
+    cfg: &ServingConfig,
+    store: &Arc<TraceStore>,
+    preds: &[u32],
+    n: usize,
+    rate: f64,
+) -> f64 {
+    let (jobs_tx, jobs_rx) = mpsc::channel();
+    let (sig_tx, sig_rx) = mpsc::channel();
+    let core = {
+        let (cfg, opts, store) = (cfg.clone(), serve_opts(), Arc::clone(store));
+        std::thread::spawn(move || {
+            serve_ingress_sim(
+                &cfg,
+                &opts,
+                LivePolicy::Magnus(MagnusPolicy::magnus()),
+                jobs_rx,
+                sig_tx,
+                store,
+            )
+        })
+    };
+    let t0 = Instant::now();
+    let mut rng = Rng::new(SEED ^ 0x9ace);
+    let mut due = 0.0f64;
+    for serial in 0..n {
+        due += rng.exponential(rate.max(1e-9));
+        let wait = due - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        let i = serial % store.len();
+        let mut meta = store.meta(i);
+        meta.id = serial as u64 + 1;
+        jobs_tx.send(EdgeJob { meta, predicted_gen_len: preds[i] }).unwrap();
+    }
+    drop(jobs_tx);
+    let mut done = 0usize;
+    for sig in sig_rx.iter() {
+        if matches!(sig, CoreSignal::Completed { .. }) {
+            done += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    core.join().unwrap().unwrap();
+    done as f64 / elapsed.max(1e-9)
+}
+
+/// One edge sweep point: fresh server, open-loop load at `rate`, drain,
+/// assert the ledgers, fold into an [`EdgePoint`].
+#[allow(clippy::too_many_arguments)]
+fn edge_point(
+    cfg: &ServingConfig,
+    store: &Arc<TraceStore>,
+    preds: &[u32],
+    label: &str,
+    overload: f64,
+    rate: f64,
+    n: usize,
+    burst: Option<(f64, f64)>,
+) -> EdgePoint {
+    // Budget ≈ 48 mean predictions in core; binding under overload,
+    // invisible below capacity (the core never holds near 48 batches of
+    // headroom at 1×).
+    let mean_pred = preds.iter().map(|&p| u64::from(p)).sum::<u64>() / preds.len() as u64;
+    let opts = EdgeOptions {
+        http: HttpConfig {
+            max_connections: 128,
+            read_timeout: Duration::from_secs(5),
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            queue_cap: 32,
+            token_budget: mean_pred * 48,
+            rps_limit: f64::INFINITY,
+            default_deadline_s: DEADLINE_MS as f64 / 1e3,
+            max_deadline_s: 30.0,
+        },
+        n_workers: N_WORKERS,
+        time_scale: TIME_SCALE,
+        fault_plan: FaultPlan::none(),
+        drain_grace: Duration::from_secs(20),
+    };
+    let edge = EdgeServer::start(
+        cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        Some(trained_predictor(cfg, 120)),
+        Arc::clone(store),
+    )
+    .unwrap();
+    let lg = run_loadgen(&LoadGenConfig {
+        addr: edge.addr().to_string(),
+        rps: rate,
+        n_requests: n,
+        trace_len: store.len(),
+        burst,
+        n_conns: 24,
+        deadline_ms: Some(DEADLINE_MS),
+        plan: FaultPlan::none(),
+        seed: SEED,
+    })
+    .unwrap();
+    let report = edge.shutdown().unwrap();
+    assert!(report.accounted(), "{label}: edge ledger must close: {report:?}");
+    assert!(lg.accounted(), "{label}: loadgen ledger must close: {lg:?}");
+    assert_eq!(report.bad_requests, 0, "{label}: bench sends only valid bodies");
+    println!(
+        "  {label}: offered {} @ {:.0} rps | ok {} shed {} expired {} core-shed {} | \
+         goodput {:.1} rps | p99 {:.3}s | lag {:.3}s",
+        report.offered,
+        rate,
+        report.completed,
+        report.shed,
+        report.expired,
+        report.core_shed,
+        report.goodput(),
+        report.latency.quantile(99.0),
+        lg.max_lag_s,
+    );
+    EdgePoint {
+        label: label.to_string(),
+        overload,
+        offered_rps: rate,
+        offered: report.offered,
+        completed: report.completed,
+        shed: report.shed,
+        expired: report.expired,
+        core_shed: report.core_shed,
+        goodput: report.goodput(),
+        shed_rate: report.shed_rate(),
+        p50_latency_s: report.latency.quantile(50.0),
+        p99_latency_s: report.latency.quantile(99.0),
+        max_lag_s: lg.max_lag_s,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("MAGNUS_EDGE_SMOKE").is_ok()
+        || std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+    let cfg = ServingConfig::default();
+    let store = Arc::new(TraceStore::generate(&TraceSpec {
+        rate: 8.0,
+        n_requests: 128,
+        seed: SEED,
+        ..Default::default()
+    }));
+    let preds = predictions(&cfg, &store);
+
+    let n_cap = if smoke { 80 } else { 400 };
+    let capacity = channel_capacity(&cfg, &store, &preds, n_cap);
+    println!("== edge overload sweep (capacity {capacity:.1} rps, smoke={smoke}) ==");
+
+    // Point duration in seconds of offered load; n is capped so a very
+    // fast core cannot explode the request count.
+    let dur = if smoke { 1.5 } else { 6.0 };
+    let n_cap_point = if smoke { 300 } else { 3_000 };
+    let n_at = |mult: f64| ((capacity * mult * dur) as usize).clamp(20, n_cap_point);
+
+    let mut points = Vec::new();
+    for (label, mult) in [("overload_1x", 1.0), ("overload_2x", 2.0), ("overload_5x", 5.0)] {
+        points.push(edge_point(
+            &cfg,
+            &store,
+            &preds,
+            label,
+            mult,
+            capacity * mult,
+            n_at(mult),
+            None,
+        ));
+    }
+    points.push(edge_point(
+        &cfg,
+        &store,
+        &preds,
+        "burst_2x",
+        2.0,
+        capacity * 2.0,
+        n_at(2.0),
+        Some((1.0, 4.0)),
+    ));
+
+    let channel_1x = channel_paced_goodput(&cfg, &store, &preds, n_at(1.0), capacity);
+    let edge_1x = points[0].goodput;
+    println!("  1x goodput: edge {edge_1x:.1} rps vs channel-only {channel_1x:.1} rps");
+    if !smoke {
+        assert!(
+            edge_1x >= 0.9 * channel_1x,
+            "HTTP front door costs more than 10% at 1x: edge {edge_1x:.1} vs channel {channel_1x:.1}"
+        );
+    }
+
+    let path = format!("{}/../BENCH_edge.json", env!("CARGO_MANIFEST_DIR"));
+    record_edge_bench(
+        &path,
+        capacity,
+        &points,
+        vec![
+            ("channel_goodput_1x", Json::num(channel_1x)),
+            ("smoke", Json::num(smoke as u32 as f64)),
+        ],
+    )
+    .unwrap();
+    println!("wrote {path}");
+}

@@ -1,0 +1,118 @@
+//! `bench_diff` — CI regression gate over `BENCH_*.json` artifacts
+//! (ISSUE 7 satellite).
+//!
+//! Compares every `BENCH_*.json` present in `--new DIR` against the same
+//! file in `--old DIR` (the previous run's uploaded artifact) and fails
+//! — exit code 1 — when any higher-is-better headline number regressed
+//! by more than `--threshold` (default 0.25, i.e. 25%).
+//!
+//! Headline fields are the *top-level numeric* keys whose name contains
+//! `throughput` or `goodput`, or ends in `speedup` or `retention` —
+//! the derived ratios every recorder in `util::bench` writes exactly so
+//! they can be gated here.  Array-valued series and lower-is-better
+//! numbers (latencies, shed rates) are deliberately not gated: they are
+//! noisy and direction-ambiguous; the headline ratios already summarise
+//! them.
+//!
+//! Missing baseline (first run, renamed bench, expired artifact) is a
+//! pass with a notice, never a failure — the gate must not brick CI on
+//! its own bootstrap.
+
+use magnus::util::cli::Args;
+use magnus::util::Json;
+
+fn is_headline(key: &str) -> bool {
+    key.contains("throughput")
+        || key.contains("goodput")
+        || key.ends_with("speedup")
+        || key.ends_with("retention")
+}
+
+/// Top-level numeric headline fields of one bench record.
+fn headlines(j: &Json) -> Vec<(String, f64)> {
+    let Some(obj) = j.as_obj() else { return Vec::new() };
+    let mut out: Vec<(String, f64)> = obj
+        .iter()
+        .filter(|(k, _)| is_headline(k))
+        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+        .collect();
+    out.sort();
+    out
+}
+
+fn main() {
+    let args = match Args::parse_env(&[]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bench_diff: {e}");
+            std::process::exit(2);
+        }
+    };
+    let old_dir = args.get_or("old", "bench-baseline").to_string();
+    let new_dir = args.get_or("new", ".").to_string();
+    let threshold = args.get_f64("threshold", 0.25);
+
+    let mut checked = 0usize;
+    let mut regressions = Vec::new();
+
+    let entries = match std::fs::read_dir(&new_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench_diff: cannot read --new {new_dir}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+
+    if names.is_empty() {
+        println!("bench_diff: no BENCH_*.json in {new_dir}; nothing to gate");
+        return;
+    }
+
+    for name in &names {
+        let new_path = format!("{new_dir}/{name}");
+        let old_path = format!("{old_dir}/{name}");
+        let new_j = match std::fs::read_to_string(&new_path).map(|s| Json::parse(&s)) {
+            Ok(Ok(j)) => j,
+            _ => {
+                eprintln!("bench_diff: {new_path} unreadable/unparsable; skipping");
+                continue;
+            }
+        };
+        let old_j = match std::fs::read_to_string(&old_path).map(|s| Json::parse(&s)) {
+            Ok(Ok(j)) => j,
+            _ => {
+                println!("  {name}: no baseline in {old_dir} — pass (bootstrap)");
+                continue;
+            }
+        };
+        let old_fields: std::collections::BTreeMap<String, f64> =
+            headlines(&old_j).into_iter().collect();
+        for (key, new_v) in headlines(&new_j) {
+            let Some(&old_v) = old_fields.get(&key) else { continue };
+            if old_v <= 0.0 || !old_v.is_finite() || !new_v.is_finite() {
+                continue;
+            }
+            checked += 1;
+            let ratio = new_v / old_v;
+            let verdict = if ratio < 1.0 - threshold { "REGRESSED" } else { "ok" };
+            println!("  {name}: {key} {old_v:.4} -> {new_v:.4} ({ratio:.3}x) {verdict}");
+            if ratio < 1.0 - threshold {
+                regressions.push(format!("{name}:{key} {old_v:.4} -> {new_v:.4}"));
+            }
+        }
+    }
+
+    println!("bench_diff: {checked} headline fields checked, {} regressions", regressions.len());
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("bench_diff: regression past {:.0}%: {r}", threshold * 100.0);
+        }
+        std::process::exit(1);
+    }
+}

@@ -326,6 +326,9 @@ fn fig10_11(args: &Args) {
     emit_sweep("fig11a_request_tp", &names, &data, |s| s.request_throughput);
     emit_sweep("fig11b_mean_rt", &names, &data, |s| s.mean_response_time);
     emit_sweep("fig11c_p95_rt", &names, &data, |s| s.p95_response_time);
+    // Tail views beyond the paper's p95 (histogram-backed: see metrics).
+    emit_sweep("fig11d_p50_rt", &names, &data, |s| s.p50_response_time);
+    emit_sweep("fig11e_p99_rt", &names, &data, |s| s.p99_response_time);
 }
 
 /// Figs. 12 & 13: ablation — VS / GLP / ABP / Magnus.
@@ -339,6 +342,9 @@ fn fig12_13(args: &Args) {
     emit_sweep("fig13a_request_tp", &names, &data, |s| s.request_throughput);
     emit_sweep("fig13b_mean_rt", &names, &data, |s| s.mean_response_time);
     emit_sweep("fig13c_p95_rt", &names, &data, |s| s.p95_response_time);
+    // Tail views beyond the paper's p95 (histogram-backed: see metrics).
+    emit_sweep("fig13d_p50_rt", &names, &data, |s| s.p50_response_time);
+    emit_sweep("fig13e_p99_rt", &names, &data, |s| s.p99_response_time);
 }
 
 /// Fig. 14: time-varying RMSE of the two predictors under continuous

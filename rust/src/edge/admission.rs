@@ -1,0 +1,411 @@
+//! Predicted-length admission control (ISSUE 7 tentpole).
+//!
+//! The controller is the paper's thesis applied one layer earlier than
+//! batching: the generation-length prediction is available *before* a
+//! request costs anything, so the front door can ration memory and queue
+//! space by predicted cost instead of request count.  It is pure and
+//! clock-free — every method takes `now` (seconds on the caller's clock)
+//! — so the unit tests and the golden gates drive it deterministically,
+//! and the same code runs under the HTTP edge's wall clock.
+//!
+//! Decisions, in order, for each offered request:
+//!
+//! 1. **drain** — a draining edge sheds everything new (`503`);
+//! 2. **rate** — a token bucket at `rps_limit` (∞ disables, `0.0` sheds
+//!    every request, explicitly — the degenerate case the tests pin);
+//! 3. **memory** — admit to core while the sum of *predicted* lengths of
+//!    in-core requests stays within `token_budget` (one oversize request
+//!    is always admitted when the core is empty, so a request predicted
+//!    longer than the whole budget degrades to serial service instead of
+//!    deadlocking);
+//! 4. **queue** — otherwise a bounded queue holds the request until
+//!    budget frees; a full queue prefers short work: the incoming
+//!    request *evicts* the longest-predicted queued request if it is
+//!    strictly shorter, else it is shed (`429`).  Shedding the long job
+//!    forfeits the fewest completions per unit of memory — the same
+//!    greedy argument as the batcher's WMA ordering.
+//!
+//! Queued requests carry a deadline; [`AdmissionController::expire_due`]
+//! removes past-due *queued* work (in-core work is never revoked — the
+//! tokens are already spent, finishing is strictly better than wasting
+//! them).  [`AdmissionController::pump`] scans the whole queue, not just
+//! the head, so short requests slip past a long head that does not fit
+//! yet.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// Edge admission tunables.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Bounded admission-queue capacity (requests).
+    pub queue_cap: usize,
+    /// Memory budget: max sum of predicted generation lengths in core.
+    pub token_budget: u64,
+    /// Arrival-rate cap (token bucket). `f64::INFINITY` disables;
+    /// `0.0` sheds every request.
+    pub rps_limit: f64,
+    /// Deadline applied when the client does not send one (seconds).
+    pub default_deadline_s: f64,
+    /// Ceiling on client-requested deadlines (seconds).
+    pub max_deadline_s: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_cap: 64,
+            token_budget: 4096,
+            rps_limit: f64::INFINITY,
+            default_deadline_s: 30.0,
+            max_deadline_s: 120.0,
+        }
+    }
+}
+
+/// Why a request was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Queue full and the incoming request was not shorter than every
+    /// queued one.
+    QueueFull,
+    /// Token bucket empty (or `rps_limit == 0`).
+    RateLimited,
+    /// Edge is draining for shutdown.
+    Draining,
+    /// Was queued, then displaced by a shorter-predicted arrival.
+    Evicted,
+}
+
+/// Admission decision for one offered request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Offer {
+    /// Admit to core now.
+    Forward,
+    /// Held in the bounded queue; `evicted` names a previously queued
+    /// request displaced to make room (resolve it as shed).
+    Queued { evicted: Option<u64> },
+    Shed(ShedReason),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct QueuedReq {
+    id: u64,
+    predicted: u64,
+    deadline: f64,
+}
+
+/// See the module docs for the decision procedure.
+#[derive(Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// id → predicted tokens, for everything admitted and not complete.
+    in_core: HashMap<u64, u64>,
+    in_core_tokens: u64,
+    queue: VecDeque<QueuedReq>,
+    /// Token bucket for the rate limit.
+    bucket: f64,
+    bucket_at: f64,
+    draining: bool,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        let burst = if cfg.rps_limit.is_finite() { cfg.rps_limit.max(1.0) } else { 0.0 };
+        AdmissionController {
+            cfg,
+            in_core: HashMap::new(),
+            in_core_tokens: 0,
+            queue: VecDeque::new(),
+            bucket: burst, // start full: the first second of traffic is not penalised
+            bucket_at: 0.0,
+            draining: false,
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn in_core_count(&self) -> usize {
+        self.in_core.len()
+    }
+
+    pub fn in_core_tokens(&self) -> u64 {
+        self.in_core_tokens
+    }
+
+    /// Nothing queued and nothing in core.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.in_core.is_empty()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Stop admitting: every subsequent offer sheds with
+    /// [`ShedReason::Draining`]; queued and in-core work is unaffected.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    /// Would admitting `predicted` more tokens stay within budget?  An
+    /// empty core always fits (anti-deadlock: see module docs).
+    fn fits(&self, predicted: u64) -> bool {
+        self.in_core.is_empty() || self.in_core_tokens.saturating_add(predicted) <= self.cfg.token_budget
+    }
+
+    /// Refill-then-take on the rate bucket. Returns false when the
+    /// request must be rate-shed.
+    fn take_rate_token(&mut self, now: f64) -> bool {
+        if self.cfg.rps_limit.is_infinite() {
+            return true;
+        }
+        if self.cfg.rps_limit <= 0.0 {
+            return false;
+        }
+        let burst = self.cfg.rps_limit.max(1.0);
+        let dt = (now - self.bucket_at).max(0.0);
+        self.bucket = (self.bucket + dt * self.cfg.rps_limit).min(burst);
+        self.bucket_at = now;
+        if self.bucket >= 1.0 {
+            self.bucket -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Clamp a client deadline request into `(0, max_deadline_s]`,
+    /// falling back to the default for absent/NaN/non-positive input.
+    pub fn resolve_deadline(&self, requested_s: Option<f64>, now: f64) -> f64 {
+        let d = match requested_s {
+            Some(d) if d.is_finite() && d > 0.0 => d.min(self.cfg.max_deadline_s),
+            _ => self.cfg.default_deadline_s,
+        };
+        now + d
+    }
+
+    /// Admission decision for request `id` with predicted generation
+    /// length `predicted` and absolute deadline `deadline` (same clock
+    /// as `now`).  On `Offer::Forward` the controller has already moved
+    /// the request in-core; the caller must actually dispatch it.
+    pub fn offer(&mut self, id: u64, predicted: u32, deadline: f64, now: f64) -> Offer {
+        if self.draining {
+            return Offer::Shed(ShedReason::Draining);
+        }
+        if !self.take_rate_token(now) {
+            return Offer::Shed(ShedReason::RateLimited);
+        }
+        let p = u64::from(predicted.max(1));
+        // Budget admission only when nothing is queued ahead — otherwise
+        // a short arrival would jump every queued request, starving them.
+        if self.queue.is_empty() && self.fits(p) {
+            self.in_core.insert(id, p);
+            self.in_core_tokens += p;
+            return Offer::Forward;
+        }
+        if self.queue.len() < self.cfg.queue_cap {
+            self.queue.push_back(QueuedReq { id, predicted: p, deadline });
+            return Offer::Queued { evicted: None };
+        }
+        // Full queue: drop the most expensive queued prediction if the
+        // newcomer is strictly cheaper, else refuse the newcomer.
+        let victim = self
+            .queue
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.predicted.cmp(&b.1.predicted).then(a.0.cmp(&b.0)))
+            .map(|(i, q)| (i, q.predicted));
+        match victim {
+            Some((i, vp)) if p < vp => {
+                let evicted = self.queue.remove(i).map(|q| q.id);
+                self.queue.push_back(QueuedReq { id, predicted: p, deadline });
+                Offer::Queued { evicted }
+            }
+            _ => Offer::Shed(ShedReason::QueueFull),
+        }
+    }
+
+    /// Admit queued work that now fits, scanning the whole queue so a
+    /// short request bypasses a long head that is still blocked.
+    /// Returns the ids admitted, in admission order; the caller
+    /// dispatches them.
+    pub fn pump(&mut self, _now: f64) -> Vec<u64> {
+        let mut admitted = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let q = self.queue[i];
+            if self.fits(q.predicted) {
+                self.queue.remove(i);
+                self.in_core.insert(q.id, q.predicted);
+                self.in_core_tokens += q.predicted;
+                admitted.push(q.id);
+            } else {
+                i += 1;
+            }
+        }
+        admitted
+    }
+
+    /// Remove queued requests whose deadline has passed; in-core work is
+    /// never expired.  Returns the expired ids.
+    pub fn expire_due(&mut self, now: f64) -> Vec<u64> {
+        let mut expired = Vec::new();
+        self.queue.retain(|q| {
+            if q.deadline <= now {
+                expired.push(q.id);
+                false
+            } else {
+                true
+            }
+        });
+        expired
+    }
+
+    /// The core finished (or shed) request `id`: release its tokens.
+    pub fn complete(&mut self, id: u64) {
+        if let Some(p) = self.in_core.remove(&id) {
+            self.in_core_tokens -= p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(queue_cap: usize, token_budget: u64, rps_limit: f64) -> AdmissionController {
+        AdmissionController::new(AdmissionConfig {
+            queue_cap,
+            token_budget,
+            rps_limit,
+            default_deadline_s: 10.0,
+            max_deadline_s: 60.0,
+        })
+    }
+
+    /// ISSUE 7 satellite: a zero RPS limit must shed every request,
+    /// explicitly and with the rate reason — never hang, never admit.
+    #[test]
+    fn zero_rps_limit_sheds_everything() {
+        let mut c = ctl(8, 1_000, 0.0);
+        for i in 0..100u64 {
+            let dl = c.resolve_deadline(None, i as f64);
+            assert_eq!(
+                c.offer(i, 10, dl, i as f64),
+                Offer::Shed(ShedReason::RateLimited),
+                "request {i}"
+            );
+        }
+        assert!(c.is_idle());
+        assert_eq!(c.in_core_tokens(), 0);
+    }
+
+    /// No overload → pure pass-through: with generous budgets every
+    /// offer forwards immediately, in order, whatever the workload.
+    #[test]
+    fn no_overload_is_pass_through() {
+        crate::util::prop::prop_check(60, |rng| {
+            let n = rng.range_usize(1, 40);
+            let mut c = ctl(n, u64::MAX, f64::INFINITY);
+            let mut now = 0.0;
+            for i in 0..n as u64 {
+                now += rng.f64();
+                let p = rng.range_u64(1, 5_000) as u32;
+                let dl = c.resolve_deadline(Some(rng.f64() * 100.0), now);
+                assert_eq!(c.offer(i, p, dl, now), Offer::Forward);
+            }
+            assert_eq!(c.in_core_count(), n);
+            assert_eq!(c.queue_depth(), 0);
+        });
+    }
+
+    #[test]
+    fn budget_queues_then_pump_admits_after_complete() {
+        let mut c = ctl(8, 100, f64::INFINITY);
+        assert_eq!(c.offer(1, 60, 10.0, 0.0), Offer::Forward);
+        assert_eq!(c.offer(2, 60, 10.0, 0.0), Offer::Queued { evicted: None });
+        // A short request also queues — no jumping ahead of request 2...
+        assert_eq!(c.offer(3, 10, 10.0, 0.0), Offer::Queued { evicted: None });
+        assert_eq!(c.pump(0.0), vec![3u64], "...but pump admits what fits");
+        c.complete(1);
+        c.complete(3);
+        assert_eq!(c.pump(0.1), vec![2u64]);
+        assert_eq!(c.in_core_tokens(), 60);
+        c.complete(2);
+        assert!(c.is_idle());
+    }
+
+    #[test]
+    fn full_queue_evicts_longest_prediction_for_shorter_arrival() {
+        let mut c = ctl(2, 10, f64::INFINITY);
+        assert_eq!(c.offer(1, 10, 9.0, 0.0), Offer::Forward); // fills the budget
+        assert_eq!(c.offer(2, 500, 9.0, 0.0), Offer::Queued { evicted: None });
+        assert_eq!(c.offer(3, 80, 9.0, 0.0), Offer::Queued { evicted: None });
+        // Queue full; the longest-predicted (id 2) is displaced.
+        assert_eq!(c.offer(4, 40, 9.0, 0.0), Offer::Queued { evicted: Some(2) });
+        // A longer-than-everyone arrival is the one shed instead.
+        assert_eq!(c.offer(5, 900, 9.0, 0.0), Offer::Shed(ShedReason::QueueFull));
+        assert_eq!(c.queue_depth(), 2);
+    }
+
+    #[test]
+    fn oversize_request_admits_on_empty_core_not_deadlock() {
+        let mut c = ctl(4, 100, f64::INFINITY);
+        // Predicted longer than the entire budget: admitted anyway when
+        // the core is empty (serial degradation, not a wedge).
+        assert_eq!(c.offer(1, 10_000, 5.0, 0.0), Offer::Forward);
+        assert_eq!(c.offer(2, 1, 5.0, 0.0), Offer::Queued { evicted: None });
+        assert_eq!(c.pump(0.0), Vec::<u64>::new());
+        c.complete(1);
+        assert_eq!(c.pump(0.1), vec![2u64]);
+    }
+
+    #[test]
+    fn deadlines_expire_queued_but_never_in_core() {
+        let mut c = ctl(8, 50, f64::INFINITY);
+        assert_eq!(c.offer(1, 50, 100.0, 0.0), Offer::Forward);
+        assert_eq!(c.offer(2, 50, 1.0, 0.0), Offer::Queued { evicted: None });
+        assert_eq!(c.offer(3, 50, 3.0, 0.0), Offer::Queued { evicted: None });
+        assert_eq!(c.expire_due(2.0), vec![2u64]);
+        assert_eq!(c.expire_due(2.0), Vec::<u64>::new(), "expiry is idempotent");
+        // In-core id 1 is past any deadline but is never revoked.
+        assert_eq!(c.expire_due(1_000.0), vec![3u64]);
+        assert_eq!(c.in_core_count(), 1);
+    }
+
+    #[test]
+    fn rate_bucket_enforces_rps_and_refills() {
+        let mut c = ctl(0, u64::MAX, 2.0);
+        // Burst capacity is max(rps, 1) = 2: two immediate admits, then shed.
+        assert_eq!(c.offer(1, 1, 9.0, 0.0), Offer::Forward);
+        assert_eq!(c.offer(2, 1, 9.0, 0.0), Offer::Forward);
+        assert_eq!(c.offer(3, 1, 9.0, 0.0), Offer::Shed(ShedReason::RateLimited));
+        // Half a second refills one token at 2 rps.
+        assert_eq!(c.offer(4, 1, 9.0, 0.5), Offer::Forward);
+        assert_eq!(c.offer(5, 1, 9.0, 0.5), Offer::Shed(ShedReason::RateLimited));
+    }
+
+    #[test]
+    fn drain_sheds_new_work_only() {
+        let mut c = ctl(8, 10, f64::INFINITY);
+        assert_eq!(c.offer(1, 10, 9.0, 0.0), Offer::Forward);
+        assert_eq!(c.offer(2, 10, 9.0, 0.0), Offer::Queued { evicted: None });
+        c.begin_drain();
+        assert_eq!(c.offer(3, 1, 9.0, 0.0), Offer::Shed(ShedReason::Draining));
+        c.complete(1);
+        assert_eq!(c.pump(0.0), vec![2u64], "queued work still drains to core");
+    }
+
+    #[test]
+    fn resolve_deadline_clamps_and_defaults() {
+        let c = ctl(1, 1, f64::INFINITY);
+        assert_eq!(c.resolve_deadline(None, 5.0), 15.0);
+        assert_eq!(c.resolve_deadline(Some(f64::NAN), 5.0), 15.0);
+        assert_eq!(c.resolve_deadline(Some(-3.0), 5.0), 15.0);
+        assert_eq!(c.resolve_deadline(Some(2.0), 5.0), 7.0);
+        assert_eq!(c.resolve_deadline(Some(1e9), 5.0), 65.0);
+    }
+}

@@ -1,0 +1,361 @@
+//! Open-loop load generator (ISSUE 7): replay trace entries against a
+//! live edge socket at a configured arrival rate, independent of how
+//! fast the server answers.
+//!
+//! Open-loop is the property that makes overload benchmarks honest: a
+//! closed-loop client slows down when the server does, hiding the very
+//! collapse we are measuring.  Here a generator thread emits arrivals on
+//! the configured Poisson (or bursty) schedule into a channel; a pool of
+//! connection workers sends each one as soon as a connection is free.
+//! Under extreme overload the pool itself can lag the schedule — the
+//! report carries `max_lag_s` so a run that stopped being open-loop says
+//! so instead of lying.
+//!
+//! Client-side chaos comes from the same [`FaultPlan`](crate::faults)
+//! machinery the server uses, keyed per request serial so runs are
+//! reproducible: `conndrop=P` closes the socket mid-request (the server
+//! must reap the partial read, not hang); `slowclient=P@D` stalls
+//! `D` seconds between head and body (the server's read timeout bounds
+//! the damage).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::faults::FaultPlan;
+use crate::http::{read_response, ParseError};
+use crate::metrics::Histogram;
+use crate::util::{Json, Rng};
+
+use anyhow::{anyhow, Result};
+
+/// One load-generation run against a live edge.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Edge address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Mean offered arrival rate (requests per second).
+    pub rps: f64,
+    /// Total requests to offer.
+    pub n_requests: usize,
+    /// Trace entries are addressed round-robin modulo this length.
+    pub trace_len: usize,
+    /// `Some((period_s, factor))` switches Poisson arrivals to a square
+    /// wave: `rps × factor` for the first half of each period, `rps ÷
+    /// factor` for the second (same mean rate; stresses the queue).
+    pub burst: Option<(f64, f64)>,
+    /// Concurrent client connections.
+    pub n_conns: usize,
+    /// Deadline sent with every request (`None` = server default).
+    pub deadline_ms: Option<u64>,
+    /// Client-side fault axes (`conndrop`, `slowclient`); server axes in
+    /// the plan are ignored here.
+    pub plan: FaultPlan,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            rps: 50.0,
+            n_requests: 500,
+            trace_len: 1,
+            burst: None,
+            n_conns: 8,
+            deadline_ms: None,
+            plan: FaultPlan::none(),
+            seed: 1,
+        }
+    }
+}
+
+/// What happened to the offered load, by terminal status.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Requests the generator attempted (== `n_requests`).
+    pub offered: u64,
+    /// `200` — served within deadline.
+    pub ok: u64,
+    /// `429`/`503` — explicitly refused (admission, rate, drain, core).
+    pub shed: u64,
+    /// `504` — deadline expired in the edge queue.
+    pub expired: u64,
+    /// Connections this client dropped on purpose (conndrop axis).
+    pub dropped: u64,
+    /// Transport/parse failures that were *not* injected.
+    pub client_errors: u64,
+    /// End-to-end wall latency of `ok` responses.
+    pub latency: Histogram,
+    pub elapsed_s: f64,
+    /// Worst (send instant − scheduled instant): how open-loop the run
+    /// actually was.
+    pub max_lag_s: f64,
+}
+
+impl LoadReport {
+    pub fn goodput(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.ok as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Every offered request has a terminal classification.
+    pub fn accounted(&self) -> bool {
+        self.offered == self.ok + self.shed + self.expired + self.dropped + self.client_errors
+    }
+}
+
+/// Instantaneous rate at schedule time `t` for the configured shape.
+fn rate_at(cfg: &LoadGenConfig, t: f64) -> f64 {
+    match cfg.burst {
+        Some((period, factor)) if period > 0.0 && factor > 1.0 => {
+            let phase = (t / period).fract();
+            if phase < 0.5 {
+                cfg.rps * factor
+            } else {
+                cfg.rps / factor
+            }
+        }
+        _ => cfg.rps,
+    }
+}
+
+/// Precompute the arrival schedule: exponential inter-arrival gaps at
+/// the (possibly modulated) instantaneous rate — a Poisson process, or a
+/// piecewise-Poisson square wave.
+fn build_schedule(cfg: &LoadGenConfig, rng: &mut Rng) -> Vec<f64> {
+    let mut at = Vec::with_capacity(cfg.n_requests);
+    let mut t = 0.0;
+    for _ in 0..cfg.n_requests {
+        let r = rate_at(cfg, t).max(1e-9);
+        t += rng.exponential(r);
+        at.push(t);
+    }
+    at
+}
+
+enum Outcome {
+    Status(u16, f64),
+    Dropped,
+    ClientError,
+}
+
+/// Offer the full schedule to `cfg.addr`; blocks until every request
+/// has a terminal outcome.
+pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if cfg.trace_len == 0 || cfg.n_requests == 0 {
+        return Err(anyhow!("loadgen needs trace_len > 0 and n_requests > 0"));
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x10ad_9e4e);
+    let schedule = build_schedule(cfg, &mut rng);
+
+    let (work_tx, work_rx) = mpsc::channel::<(u64, usize)>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let (out_tx, out_rx) = mpsc::channel::<Outcome>();
+    let start = Instant::now();
+    let max_lag_ns = Arc::new(AtomicU64::new(0));
+
+    let mut workers = Vec::new();
+    for _ in 0..cfg.n_conns.max(1) {
+        let work_rx = Arc::clone(&work_rx);
+        let out_tx = out_tx.clone();
+        let cfg = cfg.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut conn: Option<TcpStream> = None;
+            loop {
+                let item = work_rx.lock().unwrap().recv();
+                let Ok((serial, index)) = item else { return };
+                let outcome = send_one(&cfg, &mut conn, serial, index);
+                if out_tx.send(outcome).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    drop(out_tx);
+
+    // Generator: pace the schedule on this thread (open-loop — nothing
+    // here depends on responses).
+    {
+        let max_lag_ns = Arc::clone(&max_lag_ns);
+        for (serial, due) in schedule.iter().enumerate() {
+            let due = Duration::from_secs_f64(*due);
+            let now = start.elapsed();
+            if now < due {
+                std::thread::sleep(due - now);
+            } else {
+                let lag = (now - due).as_nanos().min(u128::from(u64::MAX)) as u64;
+                max_lag_ns.fetch_max(lag, Ordering::Relaxed);
+            }
+            let index = serial % cfg.trace_len;
+            if work_tx.send((serial as u64, index)).is_err() {
+                break;
+            }
+        }
+        drop(work_tx); // workers drain and exit
+    }
+
+    let mut report = LoadReport { offered: cfg.n_requests as u64, ..Default::default() };
+    for outcome in out_rx.iter() {
+        match outcome {
+            Outcome::Status(200, lat) => {
+                report.ok += 1;
+                report.latency.observe(lat);
+            }
+            Outcome::Status(504, _) => report.expired += 1,
+            Outcome::Status(_, _) => report.shed += 1,
+            Outcome::Dropped => report.dropped += 1,
+            Outcome::ClientError => report.client_errors += 1,
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    report.elapsed_s = start.elapsed().as_secs_f64();
+    report.max_lag_s = max_lag_ns.load(Ordering::Relaxed) as f64 / 1e9;
+    Ok(report)
+}
+
+/// Send request `serial` over the worker's (reconnecting) connection,
+/// injecting this serial's client faults.
+fn send_one(
+    cfg: &LoadGenConfig,
+    conn: &mut Option<TcpStream>,
+    serial: u64,
+    index: usize,
+) -> Outcome {
+    let mut fields = vec![("index", Json::num(index as f64))];
+    if let Some(ms) = cfg.deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    let body = Json::obj(fields).to_string();
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: edge\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let raw = raw.as_bytes();
+
+    if conn.is_none() {
+        match TcpStream::connect(&cfg.addr) {
+            Ok(s) => {
+                let _ = s.set_read_timeout(Some(Duration::from_secs(150)));
+                let _ = s.set_nodelay(true);
+                *conn = Some(s);
+            }
+            Err(_) => return Outcome::ClientError,
+        }
+    }
+    let stream = conn.as_mut().expect("connection just ensured");
+
+    if cfg.plan.injects_conn_drop(serial) {
+        // Write half the request, then vanish: the server must reap the
+        // partial read without wedging a thread.
+        let _ = stream.write_all(&raw[..raw.len() / 2]);
+        *conn = None; // dropped; next request reconnects
+        return Outcome::Dropped;
+    }
+
+    let sent = if cfg.plan.injects_slow_client(serial) {
+        // Stall between head and body: exercises the read timeout
+        // without (normally) tripping it.
+        let split = raw.len() - body.len();
+        stream.write_all(&raw[..split]).is_ok() && {
+            std::thread::sleep(Duration::from_secs_f64(cfg.plan.slow_client_delay_s.max(0.0)));
+            stream.write_all(&raw[split..]).is_ok()
+        }
+    } else {
+        stream.write_all(raw).is_ok()
+    };
+    if !sent {
+        *conn = None;
+        return Outcome::ClientError;
+    }
+
+    let t0 = Instant::now();
+    match read_response(stream) {
+        Ok((status, _body)) => Outcome::Status(status, t0.elapsed().as_secs_f64()),
+        Err(ParseError::Io(_)) | Err(ParseError::Incomplete) => {
+            *conn = None;
+            Outcome::ClientError
+        }
+        Err(_) => {
+            *conn = None;
+            Outcome::ClientError
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(n: usize, rps: f64) -> LoadGenConfig {
+        LoadGenConfig { rps, n_requests: n, trace_len: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn schedule_is_monotone_and_tracks_mean_rate() {
+        let cfg = base(4_000, 80.0);
+        let mut rng = Rng::new(9);
+        let s = build_schedule(&cfg, &mut rng);
+        assert!(s.windows(2).all(|w| w[1] >= w[0]));
+        let mean_rate = s.len() as f64 / s.last().unwrap();
+        assert!(
+            (mean_rate - 80.0).abs() < 8.0,
+            "poisson mean rate {mean_rate} vs 80"
+        );
+    }
+
+    #[test]
+    fn bursty_schedule_alternates_fast_and_slow_halves() {
+        let cfg = LoadGenConfig { burst: Some((2.0, 4.0)), ..base(6_000, 50.0) };
+        let mut rng = Rng::new(5);
+        let s = build_schedule(&cfg, &mut rng);
+        let (mut fast, mut slow) = (0u64, 0u64);
+        for t in &s {
+            if (t / 2.0).fract() < 0.5 {
+                fast += 1;
+            } else {
+                slow += 1;
+            }
+        }
+        // 4× vs ¼× rate halves: the fast half should dominate heavily.
+        assert!(
+            fast > slow * 4,
+            "burst imbalance missing: fast={fast} slow={slow}"
+        );
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_the_seed() {
+        let cfg = base(200, 30.0);
+        let a = build_schedule(&cfg, &mut Rng::new(42));
+        let b = build_schedule(&cfg, &mut Rng::new(42));
+        let c = build_schedule(&cfg, &mut Rng::new(43));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn loadgen_against_dead_address_accounts_every_request() {
+        // Nothing listens on this port: every request must come back as
+        // a client error — counted, not hung, not panicked.
+        let cfg = LoadGenConfig {
+            addr: "127.0.0.1:1".to_string(),
+            rps: 500.0,
+            n_requests: 40,
+            n_conns: 4,
+            ..base(40, 500.0)
+        };
+        let r = run_loadgen(&cfg).unwrap();
+        assert_eq!(r.offered, 40);
+        assert_eq!(r.client_errors, 40);
+        assert!(r.accounted(), "{r:?}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Overload-tolerant network edge (ISSUE 7 tentpole): an HTTP front
+//! door that uses the paper's generation-length *prediction* — available
+//! before a request has cost anything — for admission control, not just
+//! batching.
+//!
+//! Three pieces:
+//!
+//! * [`admission`] — pure, clock-free [`AdmissionController`]: a memory
+//!   budget over the sum of predicted lengths in core, a bounded queue
+//!   with per-request deadlines, a rate token bucket, and full-queue
+//!   eviction that sacrifices the longest-predicted request first.
+//! * [`server`] — [`EdgeServer`]: HTTP handlers over
+//!   [`crate::http::HttpServer`], wired to the supervised core through
+//!   [`crate::server::serve_ingress_sim`]; a router thread resolves each
+//!   waiting handler from the core's per-request signals and sweeps
+//!   deadlines.  `/v1/generate`, `/metrics`, `/healthz`.
+//! * [`loadgen`] — open-loop Poisson/bursty load generator with
+//!   client-side fault injection, for driving a live edge well past
+//!   capacity.
+//!
+//! The robustness contract, asserted end to end by `tests/edge.rs` and
+//! `benches/bench_edge.rs`: under any overload the edge degrades by
+//! *explicit* refusal (`429`/`503`/`504`), memory stays bounded by the
+//! admission budget, and `offered == completed + shed + expired +
+//! core_shed` — nothing hangs, nothing is silently lost.
+
+pub mod admission;
+pub mod loadgen;
+pub mod server;
+
+pub use admission::{AdmissionConfig, AdmissionController, Offer, ShedReason};
+pub use loadgen::{run_loadgen, LoadGenConfig, LoadReport};
+pub use server::{EdgeOptions, EdgeReport, EdgeServer};

@@ -1,0 +1,590 @@
+//! The HTTP front door: admission-controlled live serving over the
+//! supervised core (ISSUE 7 tentpole).
+//!
+//! ```text
+//!   clients ── http::HttpServer ── handler ──┐
+//!                                            │ offer(id, predicted, deadline)
+//!                              AdmissionController (edge clock, wall secs)
+//!                                            │ Forward / Queued / Shed
+//!                    EdgeJob ────────────────┤
+//!                       │                    └─ 429/503 immediately
+//!             server::serve_ingress_sim  (leader + workers, exactly-once)
+//!                       │ CoreSignal::{Completed, Shed}
+//!                    router thread ── resolves waiting handlers,
+//!                                     expires deadlines, pumps the queue
+//! ```
+//!
+//! Every offered request resolves to exactly one of four terminal
+//! counters — `completed`, `shed` (admission refused it), `expired`
+//! (deadline passed while queued), `core_shed` (the core gave up) — so
+//!
+//! ```text
+//!     offered == completed + shed + expired + core_shed
+//! ```
+//!
+//! holds at shutdown no matter the overload or the fault plan; the
+//! tests and `bench_edge` assert it ([`EdgeReport::accounted`]).
+//! `bad_requests` (malformed bodies, out-of-range indices) are counted
+//! separately and never enter the identity — nothing was offered to
+//! admission.
+//!
+//! The edge runs on *wall* seconds (client deadlines are real time); the
+//! core keeps its replayed clock (`time_scale`) and rewrites each job's
+//! arrival on receipt, so the two clocks never need reconciling.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ServingConfig;
+use crate::faults::FaultPlan;
+use crate::http::{HttpConfig, HttpRequest, HttpResponse, HttpServer};
+use crate::metrics::{Histogram, RunMetrics};
+use crate::predictor::GenLenPredictor;
+use crate::server::{serve_ingress_sim, CoreSignal, EdgeJob, LivePolicy, ServeOptions};
+use crate::util::Json;
+use crate::workload::{RequestMeta, TraceStore};
+
+use super::admission::{AdmissionConfig, AdmissionController, Offer, ShedReason};
+
+use anyhow::{anyhow, Result};
+
+/// Everything the edge needs beyond the core's `ServingConfig`.
+#[derive(Debug, Clone)]
+pub struct EdgeOptions {
+    pub http: HttpConfig,
+    pub admission: AdmissionConfig,
+    pub n_workers: usize,
+    /// Core replay speed-up (the edge itself runs on wall time).
+    pub time_scale: f64,
+    /// Core-side fault schedule (crashes, OOMs, predictor outages).
+    pub fault_plan: FaultPlan,
+    /// Shutdown: how long to wait for queued + in-core work to finish
+    /// before expiring the leftovers.
+    pub drain_grace: Duration,
+}
+
+impl Default for EdgeOptions {
+    fn default() -> Self {
+        EdgeOptions {
+            http: HttpConfig::default(),
+            admission: AdmissionConfig::default(),
+            n_workers: 2,
+            time_scale: 200.0,
+            fault_plan: FaultPlan::none(),
+            drain_grace: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Terminal outcome sent to the handler thread waiting on a request.
+enum Reply {
+    Done { valid_tokens: u32, invalid_tokens: u32 },
+    /// The core shed it (retry budget gone / workers retired / core gone).
+    CoreShed,
+    /// Deadline passed while queued at the edge.
+    Expired,
+    /// Displaced from a full queue by a shorter-predicted arrival.
+    Evicted,
+}
+
+struct Waiter {
+    tx: mpsc::Sender<Reply>,
+    start: Instant,
+}
+
+/// Mutable edge state, one lock: admission math is microseconds per
+/// request, far below the HTTP round-trip it sits inside.
+struct Ctl {
+    admission: AdmissionController,
+    predictor: Option<GenLenPredictor>,
+    /// `None` once shutdown closes the ingress — core sees Disconnected.
+    jobs: Option<mpsc::Sender<EdgeJob>>,
+    waiters: HashMap<u64, Waiter>,
+    /// Queued-at-edge requests (id → what to forward when budget frees).
+    queued: HashMap<u64, (RequestMeta, u32)>,
+    next_id: u64,
+}
+
+struct Shared {
+    ctl: Mutex<Ctl>,
+    store: Arc<TraceStore>,
+    g_max: u32,
+    started: Instant,
+    offered: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    core_shed: AtomicU64,
+    bad_requests: AtomicU64,
+    /// Wall-clock latency of *completed* requests.
+    latency: Mutex<Histogram>,
+}
+
+impl Shared {
+    fn now_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// Final accounting for one edge run; built by [`EdgeServer::shutdown`].
+#[derive(Debug)]
+pub struct EdgeReport {
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub core_shed: u64,
+    pub bad_requests: u64,
+    /// Wall latency of completed requests (edge clock).
+    pub latency: Histogram,
+    /// The core's own run metrics (replayed clock).
+    pub core: RunMetrics,
+    pub http_accepted: u64,
+    pub http_over_cap: u64,
+    pub http_reaped: u64,
+    pub elapsed_s: f64,
+}
+
+impl EdgeReport {
+    /// The exactly-once identity the whole design exists to uphold.
+    pub fn accounted(&self) -> bool {
+        self.offered == self.completed + self.shed + self.expired + self.core_shed
+    }
+
+    /// Completions per wall second.
+    pub fn goodput(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.completed as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of offered requests refused (shed + expired + core-shed).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered > 0 {
+            (self.offered - self.completed) as f64 / self.offered as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A running front door; [`EdgeServer::shutdown`] drains and reports.
+pub struct EdgeServer {
+    shared: Arc<Shared>,
+    http: Option<HttpServer>,
+    core: Option<std::thread::JoinHandle<Result<RunMetrics>>>,
+    router: Option<std::thread::JoinHandle<()>>,
+    drain_grace: Duration,
+    addr: std::net::SocketAddr,
+}
+
+impl EdgeServer {
+    /// Start core workers, the signal router, and the HTTP listener.
+    /// Requests address trace entries by index (`POST /v1/generate`
+    /// `{"index": i, "deadline_ms": d?}`), so the store is the shared
+    /// corpus between load generator and server — no prompt bytes cross
+    /// the admission path twice.
+    pub fn start(
+        cfg: &ServingConfig,
+        opts: &EdgeOptions,
+        policy: LivePolicy,
+        predictor: Option<GenLenPredictor>,
+        store: Arc<TraceStore>,
+    ) -> Result<EdgeServer> {
+        let (jobs_tx, jobs_rx) = mpsc::channel::<EdgeJob>();
+        let (sig_tx, sig_rx) = mpsc::channel::<CoreSignal>();
+
+        let shared = Arc::new(Shared {
+            ctl: Mutex::new(Ctl {
+                admission: AdmissionController::new(opts.admission.clone()),
+                predictor,
+                jobs: Some(jobs_tx),
+                waiters: HashMap::new(),
+                queued: HashMap::new(),
+                next_id: 1,
+            }),
+            store: Arc::clone(&store),
+            g_max: cfg.gpu.g_max,
+            started: Instant::now(),
+            offered: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            core_shed: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            latency: Mutex::new(Histogram::default()),
+        });
+
+        let core = {
+            let cfg = cfg.clone();
+            let serve_opts = ServeOptions {
+                n_workers: opts.n_workers,
+                time_scale: opts.time_scale,
+                fault_plan: opts.fault_plan.clone(),
+                ..Default::default()
+            };
+            let store = Arc::clone(&store);
+            std::thread::spawn(move || {
+                serve_ingress_sim(&cfg, &serve_opts, policy, jobs_rx, sig_tx, store)
+            })
+        };
+
+        let router = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || route_signals(sig_rx, &shared))
+        };
+
+        let handler = {
+            let shared = Arc::clone(&shared);
+            Arc::new(move |req: HttpRequest| handle(&shared, req))
+        };
+        let http = HttpServer::start(opts.http.clone(), handler)
+            .map_err(|e| anyhow!("edge bind {}: {e}", opts.http.addr))?;
+        let addr = http.addr();
+
+        Ok(EdgeServer {
+            shared,
+            http: Some(http),
+            core: Some(core),
+            router: Some(router),
+            drain_grace: opts.drain_grace,
+            addr,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop admitting (new offers shed `503`), let
+    /// queued + in-core work finish within the grace window, expire the
+    /// stragglers, close the ingress so the core returns, and collect
+    /// both sides' accounting.
+    pub fn shutdown(mut self) -> Result<EdgeReport> {
+        self.shared.ctl.lock().unwrap().admission.begin_drain();
+
+        let deadline = Instant::now() + self.drain_grace;
+        loop {
+            if self.shared.ctl.lock().unwrap().admission.is_idle() || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        {
+            // Past grace: whatever is still queued at the edge expires
+            // now; in-core work is left for the core's own drain.
+            let mut ctl = self.shared.ctl.lock().unwrap();
+            let leftover: Vec<u64> = ctl.queued.keys().copied().collect();
+            for id in leftover {
+                ctl.queued.remove(&id);
+                ctl.admission.complete(id); // no-op for queued ids; defensive
+                if let Some(w) = ctl.waiters.remove(&id) {
+                    self.shared.expired.fetch_add(1, Ordering::Relaxed);
+                    let _ = w.tx.send(Reply::Expired);
+                }
+            }
+            ctl.jobs = None; // core's ingress disconnects
+        }
+
+        let core = self
+            .core
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .map_err(|_| anyhow!("core serving thread panicked"))??;
+        if let Some(r) = self.router.take() {
+            let _ = r.join(); // exits on signal-channel disconnect
+        }
+        let http = self.http.take().expect("shutdown called once");
+        let (http_accepted, http_over_cap, http_reaped) = {
+            let s = http.stats();
+            (
+                s.accepted.load(Ordering::Relaxed),
+                s.over_cap.load(Ordering::Relaxed),
+                s.reaped.load(Ordering::Relaxed),
+            )
+        };
+        http.shutdown();
+
+        let sh = &self.shared;
+        Ok(EdgeReport {
+            offered: sh.offered.load(Ordering::Relaxed),
+            completed: sh.completed.load(Ordering::Relaxed),
+            shed: sh.shed.load(Ordering::Relaxed),
+            expired: sh.expired.load(Ordering::Relaxed),
+            core_shed: sh.core_shed.load(Ordering::Relaxed),
+            bad_requests: sh.bad_requests.load(Ordering::Relaxed),
+            latency: sh.latency.lock().unwrap().clone(),
+            core,
+            http_accepted,
+            http_over_cap,
+            http_reaped,
+            elapsed_s: sh.now_s(),
+        })
+    }
+}
+
+/// Resolve deadline-expired queued work and forward whatever now fits.
+/// Runs under the ctl lock; called from the router on every signal and
+/// on every idle tick.
+fn pump_and_expire(ctl: &mut Ctl, shared: &Shared) {
+    let now = shared.now_s();
+    for id in ctl.admission.expire_due(now) {
+        ctl.queued.remove(&id);
+        if let Some(w) = ctl.waiters.remove(&id) {
+            shared.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = w.tx.send(Reply::Expired);
+        }
+    }
+    for id in ctl.admission.pump(now) {
+        let Some((meta, predicted)) = ctl.queued.remove(&id) else { continue };
+        let sent = match &ctl.jobs {
+            Some(tx) => tx.send(EdgeJob { meta, predicted_gen_len: predicted }).is_ok(),
+            None => false,
+        };
+        if !sent {
+            ctl.admission.complete(id);
+            if let Some(w) = ctl.waiters.remove(&id) {
+                shared.core_shed.fetch_add(1, Ordering::Relaxed);
+                let _ = w.tx.send(Reply::CoreShed);
+            }
+        }
+    }
+}
+
+/// Router thread: every per-request outcome the core emits lands here
+/// exactly once; the 25ms timeout doubles as the deadline/pump sweep.
+/// Exits when the core returns (its signal sender drops).
+fn route_signals(signals: mpsc::Receiver<CoreSignal>, shared: &Shared) {
+    loop {
+        match signals.recv_timeout(Duration::from_millis(25)) {
+            Ok(CoreSignal::Completed { request_id, valid_tokens, invalid_tokens }) => {
+                let mut ctl = shared.ctl.lock().unwrap();
+                ctl.admission.complete(request_id);
+                if let Some(w) = ctl.waiters.remove(&request_id) {
+                    shared.completed.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .latency
+                        .lock()
+                        .unwrap()
+                        .observe(w.start.elapsed().as_secs_f64());
+                    let _ = w.tx.send(Reply::Done { valid_tokens, invalid_tokens });
+                }
+                pump_and_expire(&mut ctl, shared);
+            }
+            Ok(CoreSignal::Shed { request_id }) => {
+                let mut ctl = shared.ctl.lock().unwrap();
+                ctl.admission.complete(request_id);
+                if let Some(w) = ctl.waiters.remove(&request_id) {
+                    shared.core_shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = w.tx.send(Reply::CoreShed);
+                }
+                pump_and_expire(&mut ctl, shared);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let mut ctl = shared.ctl.lock().unwrap();
+                pump_and_expire(&mut ctl, shared);
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Core returned (or died): nothing else will resolve the
+                // outstanding waiters — fail them all, close ingress.
+                let mut ctl = shared.ctl.lock().unwrap();
+                ctl.jobs = None;
+                ctl.queued.clear();
+                for (_, w) in ctl.waiters.drain() {
+                    shared.core_shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = w.tx.send(Reply::CoreShed);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// How long a handler thread waits for its terminal [`Reply`].  Far
+/// above any legitimate service time; the router's drain-on-disconnect
+/// means this only fires if the router itself is gone.
+const REPLY_CAP: Duration = Duration::from_secs(120);
+
+fn handle(shared: &Shared, req: HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if shared.ctl.lock().unwrap().admission.is_draining() {
+                HttpResponse::text(503, "draining")
+            } else {
+                HttpResponse::text(200, "ok")
+            }
+        }
+        ("GET", "/metrics") => HttpResponse::text(200, &render_metrics(shared)),
+        ("POST", "/v1/generate") => handle_generate(shared, &req),
+        (_, "/v1/generate") | (_, "/metrics") | (_, "/healthz") => {
+            HttpResponse::text(405, "method not allowed")
+        }
+        _ => HttpResponse::text(404, "unknown path"),
+    }
+}
+
+fn handle_generate(shared: &Shared, req: &HttpRequest) -> HttpResponse {
+    let bad = |msg: &str| {
+        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+        HttpResponse::text(400, msg)
+    };
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return bad("body not UTF-8"),
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(_) => return bad("body not JSON"),
+    };
+    let Some(index) = j.get("index").as_usize() else {
+        return bad("missing numeric 'index'");
+    };
+    if index >= shared.store.len() {
+        return bad("'index' out of range for the loaded trace");
+    }
+    let deadline_s = j.get("deadline_ms").as_f64().map(|ms| ms / 1_000.0);
+
+    let (rx, id) = {
+        let mut ctl = shared.ctl.lock().unwrap();
+        if ctl.jobs.is_none() {
+            shared.offered.fetch_add(1, Ordering::Relaxed);
+            shared.shed.fetch_add(1, Ordering::Relaxed);
+            return shed_response(ShedReason::Draining);
+        }
+        let id = ctl.next_id;
+        ctl.next_id += 1;
+        // The meta is re-minted with an edge-unique id: many live
+        // requests may replay the same trace entry, and core accounting
+        // keys on id.
+        let mut meta = shared.store.meta(index);
+        meta.id = id;
+        let predicted = match &mut ctl.predictor {
+            Some(p) => p.predict(shared.store.view(index)).max(1),
+            None => shared.g_max.max(1),
+        };
+        shared.offered.fetch_add(1, Ordering::Relaxed);
+        let now = shared.now_s();
+        let deadline = ctl.admission.resolve_deadline(deadline_s, now);
+        match ctl.admission.offer(id, predicted, deadline, now) {
+            Offer::Forward => {
+                let (tx, rx) = mpsc::channel();
+                ctl.waiters.insert(id, Waiter { tx, start: Instant::now() });
+                let sent = match &ctl.jobs {
+                    Some(jtx) => jtx.send(EdgeJob { meta, predicted_gen_len: predicted }).is_ok(),
+                    None => false,
+                };
+                if !sent {
+                    ctl.admission.complete(id);
+                    ctl.waiters.remove(&id);
+                    shared.core_shed.fetch_add(1, Ordering::Relaxed);
+                    return HttpResponse::text(503, "serving core unavailable");
+                }
+                (rx, id)
+            }
+            Offer::Queued { evicted } => {
+                if let Some(v) = evicted {
+                    ctl.queued.remove(&v);
+                    if let Some(w) = ctl.waiters.remove(&v) {
+                        shared.shed.fetch_add(1, Ordering::Relaxed);
+                        let _ = w.tx.send(Reply::Evicted);
+                    }
+                }
+                let (tx, rx) = mpsc::channel();
+                ctl.waiters.insert(id, Waiter { tx, start: Instant::now() });
+                ctl.queued.insert(id, (meta, predicted));
+                (rx, id)
+            }
+            Offer::Shed(reason) => {
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                return shed_response(reason);
+            }
+        }
+    };
+
+    match rx.recv_timeout(REPLY_CAP) {
+        Ok(Reply::Done { valid_tokens, invalid_tokens }) => HttpResponse::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("index", Json::num(index as f64)),
+                ("valid_tokens", Json::num(valid_tokens)),
+                ("invalid_tokens", Json::num(invalid_tokens)),
+            ])
+            .to_string(),
+        ),
+        Ok(Reply::CoreShed) => HttpResponse::text(503, "overloaded: core shed request"),
+        Ok(Reply::Expired) => HttpResponse::text(504, "deadline expired in admission queue"),
+        Ok(Reply::Evicted) => {
+            HttpResponse::text(429, "evicted from queue by shorter-predicted request")
+        }
+        Err(_) => {
+            // Router gone or wedged — resolve ourselves, once.
+            let mut ctl = shared.ctl.lock().unwrap();
+            ctl.queued.remove(&id);
+            ctl.admission.complete(id);
+            if ctl.waiters.remove(&id).is_some() {
+                shared.core_shed.fetch_add(1, Ordering::Relaxed);
+            }
+            HttpResponse::text(503, "edge reply timeout")
+        }
+    }
+}
+
+fn shed_response(reason: ShedReason) -> HttpResponse {
+    match reason {
+        ShedReason::QueueFull => HttpResponse::text(429, "admission queue full"),
+        ShedReason::RateLimited => HttpResponse::text(429, "rate limited"),
+        ShedReason::Evicted => HttpResponse::text(429, "evicted"),
+        ShedReason::Draining => HttpResponse::text(503, "draining"),
+    }
+}
+
+/// Prometheus-style exposition (gauges + counters + latency quantiles).
+fn render_metrics(shared: &Shared) -> String {
+    let (depth, in_core, in_core_tokens, draining) = {
+        let ctl = shared.ctl.lock().unwrap();
+        (
+            ctl.admission.queue_depth(),
+            ctl.admission.in_core_count(),
+            ctl.admission.in_core_tokens(),
+            ctl.admission.is_draining() as u32,
+        )
+    };
+    let (p50, p99, n_lat) = {
+        let h = shared.latency.lock().unwrap();
+        (h.quantile(50.0), h.quantile(99.0), h.total())
+    };
+    let elapsed = shared.now_s();
+    let completed = shared.completed.load(Ordering::Relaxed);
+    let goodput = if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 };
+    let mut out = String::with_capacity(640);
+    let mut line = |k: &str, v: String| {
+        out.push_str("magnus_edge_");
+        out.push_str(k);
+        out.push(' ');
+        out.push_str(&v);
+        out.push('\n');
+    };
+    line("offered_total", shared.offered.load(Ordering::Relaxed).to_string());
+    line("completed_total", completed.to_string());
+    line("shed_total", shared.shed.load(Ordering::Relaxed).to_string());
+    line("expired_total", shared.expired.load(Ordering::Relaxed).to_string());
+    line("core_shed_total", shared.core_shed.load(Ordering::Relaxed).to_string());
+    line("bad_requests_total", shared.bad_requests.load(Ordering::Relaxed).to_string());
+    line("queue_depth", depth.to_string());
+    line("in_core_requests", in_core.to_string());
+    line("in_core_predicted_tokens", in_core_tokens.to_string());
+    line("draining", draining.to_string());
+    line("latency_observations", n_lat.to_string());
+    line("latency_p50_seconds", format!("{p50:.6}"));
+    line("latency_p99_seconds", format!("{p99:.6}"));
+    line("goodput_rps", format!("{goodput:.3}"));
+    line("uptime_seconds", format!("{elapsed:.3}"));
+    out
+}

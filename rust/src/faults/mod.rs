@@ -24,7 +24,17 @@
 //!   unreachable and admission falls back per
 //!   [`FallbackMode`](crate::predictor::FallbackMode);
 //! * **predictor noise** — multiplicative jitter + additive bias on
-//!   every prediction (a degraded-but-online predictor).
+//!   every prediction (a degraded-but-online predictor);
+//! * **connection drop** — the load generator abandons the connection
+//!   mid-request with probability `conn_drop_p` (the server must reap
+//!   the dead socket without leaking the admission slot);
+//! * **slow client** — the load generator stalls `slow_client_delay_s`
+//!   mid-request-write with probability `slow_client_p` (the server's
+//!   read timeout must bound the damage).
+//!
+//! The last two are *client-side* adversity: they are consumed by
+//! [`crate::edge::loadgen`], which injects them against the socket so
+//! the edge/http path is exercised, not simulated.
 
 use crate::predictor::FallbackMode;
 use crate::util::Json;
@@ -105,6 +115,14 @@ pub struct FaultPlan {
     /// the overrunning half ([`crate::batch::Batch::split_overrun`])
     /// instead of splitting evenly.
     pub overrun_guard: bool,
+    /// Per-request probability that the load generator drops the
+    /// connection mid-request (client-side; socket path only).
+    pub conn_drop_p: f64,
+    /// Per-request probability that the load generator stalls
+    /// mid-request-write (client-side; socket path only).
+    pub slow_client_p: f64,
+    /// How long a slow client stalls before finishing its write (s).
+    pub slow_client_delay_s: f64,
 }
 
 /// Fault-kind salts for the decision hash (distinct streams per axis).
@@ -113,6 +131,8 @@ const K_ERROR: u64 = 2;
 const K_OOM: u64 = 3;
 const K_WASTE: u64 = 4;
 const K_NOISE: u64 = 5;
+const K_CONN_DROP: u64 = 6;
+const K_SLOW: u64 = 7;
 
 /// SplitMix64 finalizer (same mixer as `util::rng`, reimplemented here
 /// because the plan hashes coordinates statelessly instead of advancing
@@ -141,6 +161,9 @@ impl FaultPlan {
             max_worker_restarts: 4,
             restart_backoff_s: 0.25,
             overrun_guard: false,
+            conn_drop_p: 0.0,
+            slow_client_p: 0.0,
+            slow_client_delay_s: 0.05,
         }
     }
 
@@ -153,6 +176,8 @@ impl FaultPlan {
             && self.oom_storms.is_empty()
             && !self.has_predictor_faults()
             && !self.overrun_guard
+            && self.conn_drop_p <= 0.0
+            && self.slow_client_p <= 0.0
     }
 
     /// True when admission must route predictions through the fallback/
@@ -205,6 +230,18 @@ impl FaultPlan {
         self.unit(K_WASTE, batch_id, attempt)
     }
 
+    /// Does the load generator abandon request `serial` mid-flight?
+    #[inline]
+    pub fn injects_conn_drop(&self, serial: u64) -> bool {
+        self.conn_drop_p > 0.0 && self.unit(K_CONN_DROP, serial, 0) < self.conn_drop_p
+    }
+
+    /// Does the load generator stall mid-write on request `serial`?
+    #[inline]
+    pub fn injects_slow_client(&self, serial: u64) -> bool {
+        self.slow_client_p > 0.0 && self.unit(K_SLOW, serial, 0) < self.slow_client_p
+    }
+
     /// The fallback mode of the first outage window containing `now`.
     pub fn predictor_outage(&self, now: f64) -> Option<FallbackMode> {
         self.predictor_outages
@@ -251,8 +288,10 @@ impl FaultPlan {
     ///
     /// Keys: `seed=N`, `crash=P`, `err=P`, `stall=A..B@FACTOR`,
     /// `oom=A..B@P`, `predoff=A..B[:heuristic|:max]` (default heuristic),
-    /// `noise=BIAS@JITTER`, `retries=N`, `restarts=N`, `backoff=S`, and
-    /// the bare flag `guard` (overrun re-bucketing on OOM).
+    /// `noise=BIAS@JITTER`, `retries=N`, `restarts=N`, `backoff=S`,
+    /// `conndrop=P`, `slowclient=P@DELAY_S` (client-side socket
+    /// adversity), and the bare flag `guard` (overrun re-bucketing on
+    /// OOM).
     pub fn parse_spec(spec: &str) -> anyhow::Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -298,6 +337,14 @@ impl FaultPlan {
                         bias: num(bias)?,
                         jitter: num(jitter)?,
                     });
+                }
+                "conndrop" => plan.conn_drop_p = num(val)?,
+                "slowclient" => {
+                    let (p, delay) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("slowclient wants P@DELAY_S, got `{val}`")
+                    })?;
+                    plan.slow_client_p = num(p)?;
+                    plan.slow_client_delay_s = num(delay)?;
                 }
                 _ => anyhow::bail!("unknown fault spec key `{key}`"),
             }
@@ -366,6 +413,9 @@ impl FaultPlan {
             ("max_worker_restarts", Json::num(self.max_worker_restarts)),
             ("restart_backoff_s", Json::num(self.restart_backoff_s)),
             ("overrun_guard", Json::Bool(self.overrun_guard)),
+            ("conn_drop_p", Json::num(self.conn_drop_p)),
+            ("slow_client_p", Json::num(self.slow_client_p)),
+            ("slow_client_delay_s", Json::num(self.slow_client_delay_s)),
         ])
     }
 
@@ -425,6 +475,10 @@ impl FaultPlan {
         if let Some(b) = j.get("overrun_guard").as_bool() {
             plan.overrun_guard = b;
         }
+        plan.conn_drop_p = j.get("conn_drop_p").as_f64().unwrap_or(plan.conn_drop_p);
+        plan.slow_client_p = j.get("slow_client_p").as_f64().unwrap_or(plan.slow_client_p);
+        plan.slow_client_delay_s =
+            j.get("slow_client_delay_s").as_f64().unwrap_or(plan.slow_client_delay_s);
         Ok(plan)
     }
 }
@@ -547,6 +601,24 @@ mod tests {
     }
 
     #[test]
+    fn client_side_axes_are_deterministic_and_gate_is_noop() {
+        let plan = FaultPlan::none();
+        assert!((0..500).all(|s| !plan.injects_conn_drop(s)));
+        assert!((0..500).all(|s| !plan.injects_slow_client(s)));
+        let mut chaos = FaultPlan::none();
+        chaos.seed = 13;
+        chaos.conn_drop_p = 0.25;
+        chaos.slow_client_p = 0.25;
+        assert!(!chaos.is_noop(), "client-side axes count as faults");
+        let drops: Vec<bool> = (0..2000).map(|s| chaos.injects_conn_drop(s)).collect();
+        assert_eq!(drops, (0..2000).map(|s| chaos.injects_conn_drop(s)).collect::<Vec<_>>());
+        let rate = drops.iter().filter(|&&d| d).count() as f64 / 2000.0;
+        assert!((rate - 0.25).abs() < 0.05, "conn-drop rate {rate}");
+        // independent streams per axis
+        assert!((0..2000).any(|s| chaos.injects_conn_drop(s) != chaos.injects_slow_client(s)));
+    }
+
+    #[test]
     fn restart_backoff_is_capped_exponential() {
         let plan = FaultPlan::none();
         assert_eq!(plan.restart_backoff(0), 0.25);
@@ -559,7 +631,7 @@ mod tests {
     fn spec_parses_every_axis() {
         let plan = FaultPlan::parse_spec(
             "seed=7,crash=0.1,err=0.05,stall=10..40@3,oom=0..100@0.2,predoff=5..25:max,\
-             noise=8@0.5,retries=2,restarts=6,backoff=0.1,guard",
+             noise=8@0.5,retries=2,restarts=6,backoff=0.1,conndrop=0.2,slowclient=0.1@0.4,guard",
         )
         .unwrap();
         assert_eq!(plan.seed, 7);
@@ -575,6 +647,8 @@ mod tests {
         assert_eq!((plan.max_retries, plan.max_worker_restarts), (2, 6));
         assert_eq!(plan.restart_backoff_s, 0.1);
         assert!(plan.overrun_guard);
+        assert_eq!(plan.conn_drop_p, 0.2);
+        assert_eq!((plan.slow_client_p, plan.slow_client_delay_s), (0.1, 0.4));
         assert!(FaultPlan::parse_spec("nope=1").is_err());
         assert!(FaultPlan::parse_spec("stall=banana").is_err());
         assert_eq!(FaultPlan::parse_spec("").unwrap(), FaultPlan::none());
@@ -583,7 +657,8 @@ mod tests {
     #[test]
     fn json_roundtrip_preserves_plan() {
         let plan = FaultPlan::parse_spec(
-            "seed=11,crash=0.2,err=0.1,stall=1..2@4,oom=3..4@0.5,predoff=5..6,noise=2@0.25,guard",
+            "seed=11,crash=0.2,err=0.1,stall=1..2@4,oom=3..4@0.5,predoff=5..6,noise=2@0.25,\
+             conndrop=0.3,slowclient=0.2@0.05,guard",
         )
         .unwrap();
         let back = FaultPlan::from_json(&plan.to_json()).unwrap();

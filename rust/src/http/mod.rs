@@ -1,0 +1,21 @@
+//! Hand-rolled, std-only HTTP/1.1 (ISSUE 7 tentpole, in the spirit of
+//! PR 5's `util/mmap.rs`: no crates, one narrow well-tested slice of the
+//! protocol).
+//!
+//! [`wire`] is the byte layer — bounded request parsing (head and body
+//! size limits, content-length only, no chunked encoding), response
+//! serialization, and a minimal client-side response reader for the load
+//! generator.  [`server`] is the connection layer — a non-blocking
+//! accept loop, per-connection threads with read/write timeouts and a
+//! connection cap, keep-alive, and graceful-shutdown drain.
+//!
+//! Deliberately *not* supported (the edge needs none of it): chunked
+//! transfer encoding, HTTP/1.0 semantics, multi-line headers, pipelined
+//! requests racing ahead of their responses, TLS.  Anything outside the
+//! supported slice is rejected with an explicit 400, never mis-parsed.
+
+pub mod server;
+pub mod wire;
+
+pub use server::{HttpConfig, HttpServer};
+pub use wire::{read_request, read_response, HttpRequest, HttpResponse, ParseError};

@@ -1,0 +1,349 @@
+//! Connection layer: a threaded HTTP/1.1 server with bounded resources
+//! and a graceful shutdown drain.
+//!
+//! One non-blocking accept thread hands each connection to its own
+//! thread (the handler blocks on the edge's reply channel, so threads —
+//! not an event loop — are the simple correct shape at this scale).
+//! Resource bounds, because the edge must degrade instead of falling
+//! over:
+//!
+//! * a **connection cap** — beyond it, new connections get an immediate
+//!   `503` and are closed, which is load-shedding, not failure;
+//! * **read/write timeouts** on every socket — a slow or dead client
+//!   costs one thread for at most the timeout, never forever;
+//! * **keep-alive** with per-request re-check of the shutdown flag — a
+//!   draining server finishes the request in hand, answers with
+//!   `Connection: close`, and lets the socket go.
+
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::wire::{read_request, HttpRequest, HttpResponse, ParseError};
+
+/// Connection-layer tunables.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks a free port (tests/benches).
+    pub addr: String,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    /// Concurrent-connection cap; excess connections are 503'd.
+    pub max_connections: usize,
+    /// How long `shutdown` waits for in-flight connections to finish.
+    pub drain_grace: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            max_connections: 256,
+            drain_grace: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Request → response. Implemented for plain closures.
+pub trait HttpHandler: Send + Sync + 'static {
+    fn handle(&self, req: HttpRequest) -> HttpResponse;
+}
+
+impl<F> HttpHandler for F
+where
+    F: Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static,
+{
+    fn handle(&self, req: HttpRequest) -> HttpResponse {
+        self(req)
+    }
+}
+
+/// Counters the accept/connection threads keep (all lock-free; the
+/// edge's `/metrics` endpoint reads them live).
+#[derive(Debug, Default)]
+pub struct HttpStats {
+    pub accepted: AtomicU64,
+    /// Connections 503'd at the door because the cap was reached.
+    pub over_cap: AtomicU64,
+    /// Requests that failed to parse (400'd or unanswerable).
+    pub bad_requests: AtomicU64,
+    /// Connections reaped by a read timeout or transport error.
+    pub reaped: AtomicU64,
+    pub live: AtomicUsize,
+}
+
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<HttpStats>,
+    drain_grace: Duration,
+}
+
+impl HttpServer {
+    /// Bind and start serving `handler` on a background accept thread.
+    pub fn start<H: HttpHandler>(cfg: HttpConfig, handler: Arc<H>) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(HttpStats::default());
+        let accept_thread = {
+            let shutdown = Arc::clone(&shutdown);
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || accept_loop(listener, cfg, handler, shutdown, stats))
+        };
+        Ok(HttpServer {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            stats,
+            drain_grace: cfg.drain_grace,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &Arc<HttpStats> {
+        &self.stats
+    }
+
+    /// Stop accepting, then wait (bounded by `drain_grace`) for live
+    /// connections to finish their request in hand.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let deadline = std::time::Instant::now() + self.drain_grace;
+        while self.stats.live.load(Ordering::SeqCst) > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop<H: HttpHandler>(
+    listener: TcpListener,
+    cfg: HttpConfig,
+    handler: Arc<H>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<HttpStats>,
+) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                if stats.live.load(Ordering::SeqCst) >= cfg.max_connections {
+                    stats.over_cap.fetch_add(1, Ordering::Relaxed);
+                    refuse_over_cap(stream, &cfg);
+                    continue;
+                }
+                stats.live.fetch_add(1, Ordering::SeqCst);
+                let handler = Arc::clone(&handler);
+                let shutdown = Arc::clone(&shutdown);
+                let stats = Arc::clone(&stats);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    serve_connection(stream, &cfg, handler, shutdown, &stats);
+                    stats.live.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Explicit shed at the door: the client hears `503`, not a RST.
+fn refuse_over_cap(stream: TcpStream, cfg: &HttpConfig) {
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let mut s = stream;
+    let _ = HttpResponse::text(503, "connection limit reached").closing().write_to(&mut s);
+    let _ = s.shutdown(Shutdown::Both);
+}
+
+fn serve_connection<H: HttpHandler>(
+    stream: TcpStream,
+    cfg: &HttpConfig,
+    handler: Arc<H>,
+    shutdown: Arc<AtomicBool>,
+    stats: &HttpStats,
+) {
+    if stream.set_read_timeout(Some(cfg.read_timeout)).is_err()
+        || stream.set_write_timeout(Some(cfg.write_timeout)).is_err()
+    {
+        return;
+    }
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = write_half;
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            Ok(None) => return, // clean keep-alive close
+            Ok(Some(req)) => {
+                let client_close = req.wants_close();
+                let mut resp = handler.handle(req);
+                // Draining or client-requested close: answer, then drop.
+                let closing = client_close || shutdown.load(Ordering::SeqCst);
+                resp.close = resp.close || closing;
+                let close_after = resp.close;
+                if resp.write_to(&mut writer).is_err() {
+                    stats.reaped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                if close_after {
+                    let _ = writer.flush();
+                    let _ = reader.get_ref().shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+            Err(ParseError::Malformed(m)) | Err(ParseError::TooLarge(m)) => {
+                stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = HttpResponse::text(400, m).closing().write_to(&mut writer);
+                let _ = reader.get_ref().shutdown(Shutdown::Both);
+                return;
+            }
+            Err(ParseError::Incomplete) => {
+                // Peer died mid-request (or a chaos conn-drop): nothing
+                // to answer; reap the socket.
+                stats.reaped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(ParseError::Io(_)) => {
+                // Read timeout or transport error: the slow-client bound.
+                stats.reaped.fetch_add(1, Ordering::Relaxed);
+                let _ = reader.get_ref().shutdown(Shutdown::Both);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::wire::read_response;
+    use std::io::Write as _;
+
+    fn echo_server(max_conn: usize) -> HttpServer {
+        let cfg = HttpConfig {
+            read_timeout: Duration::from_millis(400),
+            write_timeout: Duration::from_millis(400),
+            max_connections: max_conn,
+            drain_grace: Duration::from_secs(2),
+            ..Default::default()
+        };
+        HttpServer::start(
+            cfg,
+            Arc::new(|req: HttpRequest| {
+                if req.path == "/echo" {
+                    HttpResponse::text(200, &String::from_utf8_lossy(&req.body))
+                } else {
+                    HttpResponse::text(404, "nope")
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    fn send(addr: SocketAddr, raw: &[u8]) -> (u16, Vec<u8>) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(raw).unwrap();
+        read_response(&mut s).unwrap()
+    }
+
+    #[test]
+    fn serves_requests_and_keep_alive() {
+        let server = echo_server(16);
+        let addr = server.addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        for i in 0..3 {
+            let body = format!("ping{i}");
+            let raw = format!(
+                "POST /echo HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            );
+            s.write_all(raw.as_bytes()).unwrap();
+            let (status, got) = read_response(&mut s).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(got, body.as_bytes());
+        }
+        let (status, _) = send(addr, b"GET /missing HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status, 404);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_gets_400_and_close() {
+        let server = echo_server(16);
+        let (status, _) = send(server.addr(), b"BROKEN\r\n\r\n");
+        assert_eq!(status, 400);
+        assert_eq!(server.stats().bad_requests.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn slow_client_is_reaped_by_read_timeout() {
+        let server = echo_server(16);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // half a request, then stall past the 400ms read timeout
+        s.write_all(b"POST /echo HTTP/1.1\r\nContent-Le").unwrap();
+        std::thread::sleep(Duration::from_millis(700));
+        // server must have reaped us; a fresh request still works
+        let (status, body) =
+            send(server.addr(), b"POST /echo HTTP/1.1\r\nContent-Length: 2\r\n\r\nok");
+        assert_eq!((status, body.as_slice()), (200, &b"ok"[..]));
+        assert!(server.stats().reaped.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn connection_cap_sheds_with_503() {
+        let server = echo_server(0); // cap 0: every connection refused
+        let (status, _) = send(server.addr(), b"GET /echo HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 503);
+        assert_eq!(server.stats().over_cap.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let server = echo_server(16);
+        let addr = server.addr();
+        server.shutdown();
+        // the listener is gone: either refused outright, or accepted by a
+        // dead socket that then yields nothing
+        match TcpStream::connect(addr) {
+            Err(_) => {}
+            Ok(mut s) => {
+                s.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
+                let _ = s.write_all(b"GET /echo HTTP/1.1\r\n\r\n");
+                assert!(read_response(&mut s).is_err(), "no one should answer");
+            }
+        }
+    }
+}

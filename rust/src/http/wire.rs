@@ -1,0 +1,401 @@
+//! HTTP/1.1 byte layer: bounded request parsing and response
+//! serialization over any `Read`/`Write`.
+//!
+//! Every input path is bounded: the request head (request line +
+//! headers) may not exceed [`MAX_HEAD_BYTES`], the body may not exceed
+//! [`MAX_BODY_BYTES`], and a declared `Content-Length` above the cap is
+//! rejected *before* any body byte is read, so a hostile client cannot
+//! make the server buffer unbounded memory.  Malformed input is an
+//! explicit [`ParseError`], never a panic — the property tests below
+//! drive random and truncated bytes through the parser to hold that
+//! line.
+
+use std::io::{Read, Write};
+
+/// Upper bound on the request line + headers (bytes, CRLFs included).
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Upper bound on a request body we are willing to buffer.
+pub const MAX_BODY_BYTES: usize = 64 * 1024;
+
+/// One parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names are kept as received; lookup is case-insensitive.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Does the client ask us to close after this exchange?
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Why a read/parse failed.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Protocol violation (bad request line, bad header, bad length…).
+    Malformed(&'static str),
+    /// Head or declared body larger than the bound.
+    TooLarge(&'static str),
+    /// The peer closed mid-message (after at least one byte arrived).
+    Incomplete,
+    /// Transport error (includes read timeouts).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Malformed(m) => write!(f, "malformed request: {m}"),
+            ParseError::TooLarge(m) => write!(f, "request too large: {m}"),
+            ParseError::Incomplete => write!(f, "peer closed mid-request"),
+            ParseError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Read one request off `r`.  `Ok(None)` means the peer closed cleanly
+/// *before* sending any byte (the normal end of a keep-alive
+/// connection); every other early close is [`ParseError::Incomplete`].
+pub fn read_request<R: Read>(r: &mut R) -> Result<Option<HttpRequest>, ParseError> {
+    let head = match read_head(r)? {
+        Some(h) => h,
+        None => return Ok(None),
+    };
+    let text = std::str::from_utf8(&head).map_err(|_| ParseError::Malformed("head not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().ok_or(ParseError::Malformed("empty head"))?;
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ParseError::Malformed("bad method"));
+    }
+    if path.is_empty() || !path.starts_with('/') {
+        return Err(ParseError::Malformed("bad path"));
+    }
+    if version != "HTTP/1.1" || parts.next().is_some() {
+        return Err(ParseError::Malformed("bad version"));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue; // trailing split artifact after the final CRLF
+        }
+        let (k, v) = line.split_once(':').ok_or(ParseError::Malformed("bad header line"))?;
+        if k.is_empty() || k.contains(' ') {
+            return Err(ParseError::Malformed("bad header name"));
+        }
+        headers.push((k.to_string(), v.trim().to_string()));
+    }
+    let req = HttpRequest {
+        method,
+        path,
+        headers,
+        body: Vec::new(),
+    };
+    if req
+        .header("transfer-encoding")
+        .map(|v| !v.eq_ignore_ascii_case("identity"))
+        .unwrap_or(false)
+    {
+        return Err(ParseError::Malformed("chunked encoding not supported"));
+    }
+    let len = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => v.trim().parse::<usize>().map_err(|_| ParseError::Malformed("bad content-length"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(ParseError::TooLarge("body"));
+    }
+    let mut body = vec![0u8; len];
+    read_exact_or_incomplete(r, &mut body)?;
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+/// Read bytes up to and including the `\r\n\r\n` head terminator,
+/// returning the head *without* the terminator.  Byte-at-a-time reads
+/// are fine here: callers wrap sockets in `BufReader`.
+fn read_head<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, ParseError> {
+    let mut head: Vec<u8> = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                return if head.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(ParseError::Incomplete)
+                };
+            }
+            Ok(_) => {
+                head.push(byte[0]);
+                if head.len() > MAX_HEAD_BYTES {
+                    return Err(ParseError::TooLarge("head"));
+                }
+                if head.ends_with(b"\r\n\r\n") {
+                    head.truncate(head.len() - 4);
+                    return Ok(Some(head));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ParseError::Io(e)),
+        }
+    }
+}
+
+fn read_exact_or_incomplete<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), ParseError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Err(ParseError::Incomplete),
+        Err(e) => Err(ParseError::Io(e)),
+    }
+}
+
+/// One response to serialize.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Emit `Connection: close` and let the server drop the connection.
+    pub close: bool,
+}
+
+impl HttpResponse {
+    pub fn new(status: u16) -> HttpResponse {
+        HttpResponse {
+            status,
+            headers: Vec::new(),
+            body: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> HttpResponse {
+        let mut r = HttpResponse::new(status);
+        r.headers.push(("Content-Type".into(), "text/plain; charset=utf-8".into()));
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    pub fn json(status: u16, body: String) -> HttpResponse {
+        let mut r = HttpResponse::new(status);
+        r.headers.push(("Content-Type".into(), "application/json".into()));
+        r.body = body.into_bytes();
+        r
+    }
+
+    pub fn closing(mut self) -> HttpResponse {
+        self.close = true;
+        self
+    }
+
+    /// Canonical reason phrase for the statuses the edge emits.
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialize onto `w` (always emits `Content-Length`).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Length: {}\r\n",
+            self.status,
+            Self::reason(self.status),
+            self.body.len()
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        if self.close {
+            head.push_str("Connection: close\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Client-side: read one response off `r` and return `(status, body)`.
+/// Used by the load generator; same bounds as the server side.
+pub fn read_response<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>), ParseError> {
+    let head = read_head(r)?.ok_or(ParseError::Incomplete)?;
+    let text = std::str::from_utf8(&head).map_err(|_| ParseError::Malformed("head not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().ok_or(ParseError::Malformed("empty head"))?;
+    let mut parts = status_line.split(' ');
+    if parts.next() != Some("HTTP/1.1") {
+        return Err(ParseError::Malformed("bad version"));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or(ParseError::Malformed("bad status"))?;
+    let mut len = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once(':').ok_or(ParseError::Malformed("bad header line"))?;
+        if k.eq_ignore_ascii_case("content-length") {
+            len = v.trim().parse().map_err(|_| ParseError::Malformed("bad content-length"))?;
+        }
+    }
+    if len > MAX_BODY_BYTES {
+        return Err(ParseError::TooLarge("body"));
+    }
+    let mut body = vec![0u8; len];
+    read_exact_or_incomplete(r, &mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Option<HttpRequest>, ParseError> {
+        read_request(&mut Cursor::new(bytes))
+    }
+
+    #[test]
+    fn parses_post_with_body_and_headers() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\
+                    X-Test: a b\r\n\r\nhello world";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("X-TEST"), Some("a b"));
+        assert_eq!(req.body, b"hello world");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_connection_close() {
+        let raw = b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncation_is_incomplete() {
+        assert!(parse(b"").unwrap().is_none());
+        assert!(matches!(parse(b"GET / HT"), Err(ParseError::Incomplete)));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(ParseError::Incomplete)
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for raw in [
+            &b"FLOOP\r\n\r\n"[..],
+            b"GET  HTTP/1.1\r\n\r\n",
+            b"GET noslash HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.0\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"get / HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.1\r\nNoColonHere\r\n\r\n",
+            b"GET / HTTP/1.1\r\nBad Name: v\r\n\r\n",
+            b"POST / HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"GET / HTTP/1.1\r\n\xff\xfe\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse(raw), Err(ParseError::Malformed(_))),
+                "should reject {:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+
+    #[test]
+    fn bounds_head_and_body() {
+        let mut huge_head = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..2000 {
+            huge_head.extend_from_slice(format!("X-H{i}: padpadpad\r\n").as_bytes());
+        }
+        huge_head.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&huge_head), Err(ParseError::TooLarge("head"))));
+        // oversized declared body is rejected before reading it
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(parse(raw.as_bytes()), Err(ParseError::TooLarge("body"))));
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_reader() {
+        let mut buf = Vec::new();
+        HttpResponse::json(429, "{\"err\":\"shed\"}".into()).write_to(&mut buf).unwrap();
+        let (status, body) = read_response(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, b"{\"err\":\"shed\"}");
+        // two pipelined responses on one stream read back in order
+        let mut two = Vec::new();
+        HttpResponse::text(200, "a").write_to(&mut two).unwrap();
+        HttpResponse::text(503, "bb").closing().write_to(&mut two).unwrap();
+        let mut c = Cursor::new(&two);
+        assert_eq!(read_response(&mut c).unwrap(), (200, b"a".to_vec()));
+        assert_eq!(read_response(&mut c).unwrap(), (503, b"bb".to_vec()));
+    }
+
+    /// Random bytes and random truncations of a valid request must never
+    /// panic — they parse, or they fail with a typed error.
+    #[test]
+    fn prop_parser_is_total_on_garbage_and_truncations() {
+        prop_check(300, |rng| {
+            let n = rng.range_usize(0, 200);
+            let garbage: Vec<u8> = (0..n).map(|_| rng.range_u64(0, 256) as u8).collect();
+            let _ = parse(&garbage); // any Ok/Err is fine; no panic
+            let body_len = rng.range_usize(0, 50);
+            let body: String = (0..body_len).map(|_| 'x').collect();
+            let valid = format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: h\r\nContent-Length: {body_len}\r\n\r\n{body}"
+            );
+            let cut = rng.range_usize(0, valid.len() + 1);
+            match parse(&valid.as_bytes()[..cut]) {
+                Ok(Some(req)) => {
+                    assert_eq!(cut, valid.len(), "full parse only at full length");
+                    assert_eq!(req.body.len(), body_len);
+                }
+                Ok(None) => assert_eq!(cut, 0, "clean EOF only with zero bytes"),
+                Err(_) => assert!(cut < valid.len(), "valid bytes must parse"),
+            }
+        });
+    }
+}

@@ -25,10 +25,12 @@
 pub mod baselines;
 pub mod batch;
 pub mod config;
+pub mod edge;
 pub mod embedding;
 pub mod engine;
 pub mod estimator;
 pub mod faults;
+pub mod http;
 pub mod learning;
 pub mod logdb;
 pub mod memory;

@@ -12,12 +12,18 @@
 //!              the output path ends in .mtr)
 //!   pack-trace convert a JSON trace to the mmap-able binary format
 //!   eval-pred  train + evaluate the four predictor variants
+//!   serve-edge run the HTTP front door (predicted-length admission,
+//!              deadlines, /metrics) over the cost-model cluster
+//!   load-gen   open-loop Poisson/bursty load against a live edge
 //!
 //! Examples:
 //!   magnus sim --policy magnus --rate 10 --requests 800
 //!   magnus sim --policy magnus --fault-plan "seed=7,crash=0.1,oom=0..50@0.2"
 //!   magnus serve --workers 2 --requests 20 --time-scale 20
 //!   magnus serve-sim --workers 2 --requests 100 --fault-plan plan.json
+//!   magnus serve-edge --addr 127.0.0.1:8080 --duration 30 --token-budget 4096
+//!   magnus load-gen --addr 127.0.0.1:8080 --rps 200 --requests 2000 \
+//!       --burst 2@4 --fault-plan "seed=3,conndrop=0.05,slowclient=0.05@0.2"
 //!   magnus gen-trace --rate 5 --requests 1000 --out trace.json
 //!   magnus gen-trace --rate 5 --requests 1000000 --out trace.mtr
 //!   magnus pack-trace --in trace.json --out trace.mtr
@@ -33,7 +39,7 @@ use magnus::util::Json;
 use magnus::workload::dataset::build_predictor_split;
 use magnus::workload::{generate_trace, LlmProfile, TraceSpec, TraceStore};
 
-const USAGE: &str = "magnus <serve|serve-sim|sim|gen-trace|pack-trace|eval-pred> [options]
+const USAGE: &str = "magnus <serve|serve-sim|serve-edge|load-gen|sim|gen-trace|pack-trace|eval-pred> [options]
   common:    --config <file.json>  --seed N
   sim:       --policy VS|VSQ|CCB|GLP|ABP|Magnus  --rate R --requests N --train N
              [--fault-plan file.json|spec]
@@ -42,12 +48,18 @@ const USAGE: &str = "magnus <serve|serve-sim|sim|gen-trace|pack-trace|eval-pred>
              [--fault-plan file.json|spec]
   serve-sim: --policy magnus|vanilla --workers N --rate R --requests N
              --time-scale S --g-max N --l-cap N [--fault-plan file.json|spec]
+  serve-edge: --addr H:P --workers N --time-scale S --duration SECS
+             --queue-cap N --token-budget T --rps-limit R --deadline SECS
+             [--trace file.json|file.mtr] [--fault-plan file.json|spec]
+  load-gen:  --addr H:P --rps R --requests N --conns N --trace-len N
+             [--burst PERIOD@FACTOR] [--deadline-ms MS]
+             [--fault-plan \"seed=N,conndrop=P,slowclient=P@DELAY\"]
   gen-trace: --rate R --requests N --out file.json|file.mtr (binary, mmap-able)
   pack-trace: --in trace.json [--out trace.mtr]
   eval-pred: --train N --test N
   fault-plan spec: seed=N,crash=P,err=P,stall=A..B@F,oom=A..B@P,guard,
              predoff=A..B[:heuristic|:max],noise=BIAS@JITTER,
-             retries=N,restarts=N,backoff=S";
+             retries=N,restarts=N,backoff=S,conndrop=P,slowclient=P@DELAY";
 
 fn main() {
     if let Err(e) = run() {
@@ -85,13 +97,15 @@ fn run() -> anyhow::Result<()> {
             };
             let s = out.metrics.summarise();
             println!(
-                "{}: {} requests | thr {:.3} req/s | mean RT {:.1}s | p95 RT {:.1}s | \
-                 tokens {:.1}/s (valid {:.1}/s) | OOM {}",
+                "{}: {} requests | thr {:.3} req/s | RT mean {:.1}s p50 {:.1}s p95 {:.1}s \
+                 p99 {:.1}s | tokens {:.1}/s (valid {:.1}/s) | OOM {}",
                 policy.name(),
                 s.n_requests,
                 s.request_throughput,
                 s.mean_response_time,
+                s.p50_response_time,
                 s.p95_response_time,
+                s.p99_response_time,
                 s.token_throughput,
                 s.valid_token_throughput,
                 s.oom_events
@@ -110,6 +124,8 @@ fn run() -> anyhow::Result<()> {
         }
         "serve" => cmd_serve(&args, &mut cfg)?,
         "serve-sim" => cmd_serve_sim(&args, &mut cfg)?,
+        "serve-edge" => cmd_serve_edge(&args, &mut cfg)?,
+        "load-gen" => cmd_load_gen(&args)?,
         "gen-trace" => {
             // Streaming generation: the trace lands in a TraceStore arena
             // (never a Vec<Request>), and serialises to either schema —
@@ -244,10 +260,11 @@ fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
     )?;
     let s = metrics.summarise();
     println!(
-        "live {}: {} requests | thr {:.3} req/s | mean RT {:.2}s | p95 RT {:.2}s \
-         (replayed seconds)",
+        "live {}: {} requests | thr {:.3} req/s | RT mean {:.2}s p50 {:.2}s p95 {:.2}s \
+         p99 {:.2}s (replayed seconds)",
         policy_name, s.n_requests, s.request_throughput,
-        s.mean_response_time, s.p95_response_time
+        s.mean_response_time, s.p50_response_time, s.p95_response_time,
+        s.p99_response_time
     );
     Ok(())
 }
@@ -317,18 +334,152 @@ fn cmd_serve_sim(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
     )?;
     let s = metrics.summarise();
     println!(
-        "serve-sim {}: {} served, {} shed | thr {:.3} req/s | mean RT {:.2}s | \
-         p95 RT {:.2}s | retries {} | restarts {} | fallback preds {} \
+        "serve-sim {}: {} served, {} shed | thr {:.3} req/s | RT mean {:.2}s p50 {:.2}s \
+         p95 {:.2}s p99 {:.2}s | retries {} | restarts {} | fallback preds {} \
          (replayed seconds)",
         policy_name,
         s.n_requests,
         s.shed_requests,
         s.request_throughput,
         s.mean_response_time,
+        s.p50_response_time,
         s.p95_response_time,
+        s.p99_response_time,
         s.retries,
         s.worker_restarts,
         s.fallback_predictions
+    );
+    Ok(())
+}
+
+/// Run the HTTP front door over the cost-model cluster until Ctrl-C-ish
+/// (`--duration` seconds), then drain gracefully and print the ledger.
+fn cmd_serve_edge(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use magnus::edge::{AdmissionConfig, EdgeOptions, EdgeServer};
+    use magnus::http::HttpConfig;
+    use magnus::server::LivePolicy;
+    use magnus::sim::MagnusPolicy;
+
+    let g_max = args.get_u64("g-max", 64) as u32;
+    cfg.gpu.g_max = g_max;
+    let store = match args.get("trace") {
+        Some(path) if path.ends_with(".mtr") => Arc::new(TraceStore::open_mmap(path)?),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            Arc::new(TraceStore::from_json(&j)?)
+        }
+        None => Arc::new(TraceStore::generate(&TraceSpec {
+            rate: args.get_f64("rate", 5.0),
+            n_requests: args.get_usize("requests", 256),
+            g_max,
+            l_cap: args.get_u64("l-cap", 80) as u32,
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+    };
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
+    let mut predictor = GenLenPredictor::new(Variant::Usin, cfg);
+    predictor.train(&split.train);
+
+    let opts = EdgeOptions {
+        http: HttpConfig {
+            addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            queue_cap: args.get_usize("queue-cap", 64),
+            token_budget: args.get_u64("token-budget", 4096),
+            rps_limit: args.get_f64("rps-limit", f64::INFINITY),
+            default_deadline_s: args.get_f64("deadline", 30.0),
+            max_deadline_s: args.get_f64("max-deadline", 120.0),
+        },
+        n_workers: args.get_usize("workers", 2),
+        time_scale: args.get_f64("time-scale", 50.0),
+        fault_plan: match args.get("fault-plan") {
+            Some(spec) => FaultPlan::load(spec)?,
+            None => FaultPlan::none(),
+        },
+        drain_grace: Duration::from_secs(args.get_u64("drain-grace", 30)),
+    };
+    let n_entries = store.len();
+    let edge = EdgeServer::start(
+        cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        Some(predictor),
+        store,
+    )?;
+    println!(
+        "edge listening on {} ({n_entries} trace entries; POST /v1/generate, \
+         GET /metrics, /healthz)",
+        edge.addr(),
+    );
+    std::thread::sleep(Duration::from_secs_f64(args.get_f64("duration", 60.0)));
+    println!("draining...");
+    let r = edge.shutdown()?;
+    println!(
+        "edge: offered {} | completed {} | shed {} | expired {} | core-shed {} | \
+         bad {} | goodput {:.2} rps | p50 {:.3}s p99 {:.3}s | accounted: {}",
+        r.offered,
+        r.completed,
+        r.shed,
+        r.expired,
+        r.core_shed,
+        r.bad_requests,
+        r.goodput(),
+        r.latency.quantile(50.0),
+        r.latency.quantile(99.0),
+        r.accounted()
+    );
+    Ok(())
+}
+
+/// Open-loop load against a live edge (`serve-edge`, or anything
+/// speaking the same three endpoints).
+fn cmd_load_gen(args: &Args) -> anyhow::Result<()> {
+    use magnus::edge::{run_loadgen, LoadGenConfig};
+
+    let burst = args.get("burst").and_then(|s| {
+        let (p, f) = s.split_once('@')?;
+        Some((p.parse::<f64>().ok()?, f.parse::<f64>().ok()?))
+    });
+    let plan = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::load(spec)?,
+        None => FaultPlan::none(),
+    };
+    let cfg = LoadGenConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        rps: args.get_f64("rps", 50.0),
+        n_requests: args.get_usize("requests", 500),
+        trace_len: args.get_usize("trace-len", 256),
+        burst,
+        n_conns: args.get_usize("conns", 8),
+        deadline_ms: args.get("deadline-ms").and_then(|s| s.parse().ok()),
+        plan,
+        seed: args.get_u64("seed", 1),
+    };
+    let r = run_loadgen(&cfg)?;
+    println!(
+        "load-gen: offered {} @ {:.1} rps{} | ok {} | shed {} | expired {} | \
+         dropped {} | client-err {} | goodput {:.2} rps | p50 {:.3}s p99 {:.3}s | \
+         max lag {:.3}s | accounted: {}",
+        r.offered,
+        cfg.rps,
+        if cfg.burst.is_some() { " (bursty)" } else { "" },
+        r.ok,
+        r.shed,
+        r.expired,
+        r.dropped,
+        r.client_errors,
+        r.goodput(),
+        r.latency.quantile(50.0),
+        r.latency.quantile(99.0),
+        r.max_lag_s,
+        r.accounted()
     );
     Ok(())
 }

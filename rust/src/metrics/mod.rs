@@ -1,8 +1,144 @@
 //! Evaluation metrics (paper §IV-A): request throughput, average and tail
 //! (95%) response time, token throughput and valid-token throughput, plus
-//! CSV/markdown emitters for the figure harness.
+//! a fixed-bucket log-scale latency [`Histogram`] (p50/p90/p99 without
+//! retaining per-request samples) and CSV/markdown emitters for the
+//! figure harness.
 
 use crate::util::stats::{mean, percentile};
+
+/// Buckets per decade of the log-scale latency histogram.
+const HIST_BPD: usize = 8;
+/// Decades covered: `[1e-6 s, 1e6 s)` — sub-microsecond to ~11 days.
+const HIST_DECADES: usize = 12;
+/// Lowest bucket boundary (seconds).
+const HIST_LO: f64 = 1e-6;
+/// Bucket count: underflow + HIST_BPD * HIST_DECADES log buckets +
+/// overflow.
+const HIST_N: usize = 2 + HIST_BPD * HIST_DECADES;
+
+/// Fixed-bucket log-scale histogram for response-time quantiles.
+///
+/// Buckets are geometric with ratio `10^(1/8)` (~33% relative width, so
+/// a reported quantile is within ~±15% of the true sample quantile —
+/// plenty for p50/p90/p99 dashboards) spanning `[1e-6 s, 1e6 s)`, plus
+/// explicit underflow/overflow buckets so every observation lands
+/// somewhere and totals always close.  Quantiles are a deterministic
+/// function of the counts (geometric bucket midpoints), so two runs that
+/// observe the same values report bit-identical quantiles — the golden
+/// gates rely on this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: vec![0; HIST_N],
+            total: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for one observation.  NaN and values `<= HIST_LO`
+    /// land in the underflow bucket (a response time is never negative,
+    /// and counting pathological inputs keeps accounting closed).
+    #[inline]
+    fn bucket_of(v: f64) -> usize {
+        if !(v > HIST_LO) {
+            return 0;
+        }
+        let idx = ((v / HIST_LO).log10() * HIST_BPD as f64).floor();
+        if idx < 0.0 {
+            0
+        } else {
+            ((idx as usize) + 1).min(HIST_N - 1)
+        }
+    }
+
+    /// Representative value (seconds) reported for bucket `i`: the
+    /// geometric midpoint, clamped to the histogram range at the ends.
+    #[inline]
+    fn midpoint(i: usize) -> f64 {
+        if i == 0 {
+            HIST_LO
+        } else if i >= HIST_N - 1 {
+            HIST_LO * 10f64.powi(HIST_DECADES as i32)
+        } else {
+            HIST_LO * 10f64.powf((i as f64 - 0.5) / HIST_BPD as f64)
+        }
+    }
+
+    /// Upper bound (seconds) of bucket `i` (`f64::INFINITY` for the
+    /// overflow bucket) — the `/metrics` cumulative-bucket boundary.
+    #[inline]
+    pub fn upper_bound(i: usize) -> f64 {
+        if i >= HIST_N - 1 {
+            f64::INFINITY
+        } else {
+            HIST_LO * 10f64.powf(i as f64 / HIST_BPD as f64)
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Quantile `q` in `[0, 100]`: the representative value of the
+    /// bucket holding the `ceil(q/100 * total)`-th smallest observation.
+    /// Returns 0.0 when empty (matches `stats::percentile`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::midpoint(i);
+            }
+        }
+        Self::midpoint(HIST_N - 1)
+    }
+
+    /// Non-empty buckets as `(upper_bound_s, cumulative_count)` rows in
+    /// ascending order — the Prometheus-style `le` export shape.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((Self::upper_bound(i), cum));
+            }
+        }
+        out
+    }
+}
 
 /// One completed request's record.
 #[derive(Debug, Clone)]
@@ -44,6 +180,9 @@ pub struct RunMetrics {
     /// Faults the plan injected (crashes + transient errors + forced
     /// OOMs) — 0 in any fault-free run, asserted by the golden gates.
     pub injected_faults: u32,
+    /// Log-scale response-time histogram fed by [`RunMetrics::record`]
+    /// (p50/p90/p99 in [`Summary`], bucket export on `/metrics`).
+    pub response_hist: Histogram,
 }
 
 /// Summary row for one (policy, arrival-rate) cell of the figures.
@@ -56,6 +195,12 @@ pub struct Summary {
     pub mean_response_time: f64,
     /// 95th-percentile response time (s) — Fig. 11c.
     pub p95_response_time: f64,
+    /// Median response time (s) from the log-scale histogram.
+    pub p50_response_time: f64,
+    /// 90th-percentile response time (s) from the log-scale histogram.
+    pub p90_response_time: f64,
+    /// 99th-percentile response time (s) from the log-scale histogram.
+    pub p99_response_time: f64,
     /// All generated tokens per second (valid + invalid) — Fig. 10a.
     pub token_throughput: f64,
     /// Valid tokens per second — Fig. 10b.
@@ -84,12 +229,14 @@ impl RunMetrics {
             fallback_predictions: 0,
             rebucketed: 0,
             injected_faults: 0,
+            response_hist: Histogram::new(),
         }
     }
 
     pub fn record(&mut self, r: RequestRecord) {
         self.first_arrival = self.first_arrival.min(r.arrival);
         self.last_finish = self.last_finish.max(r.finish);
+        self.response_hist.observe(r.response_time());
         self.records.push(r);
     }
 
@@ -120,6 +267,9 @@ impl RunMetrics {
             request_throughput: self.records.len() as f64 / span,
             mean_response_time: mean(&rts),
             p95_response_time: percentile(&rts, 95.0),
+            p50_response_time: self.response_hist.quantile(50.0),
+            p90_response_time: self.response_hist.quantile(90.0),
+            p99_response_time: self.response_hist.quantile(99.0),
             token_throughput: total as f64 / span,
             valid_token_throughput: valid as f64 / span,
             oom_events: self.oom_events,
@@ -216,6 +366,69 @@ mod tests {
         m.record_oom();
         m.record_oom();
         assert_eq!(m.summarise().oom_events, 2);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_sample_percentiles() {
+        let mut h = Histogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.01).collect(); // 0.01..10.0 s
+        for &x in &xs {
+            h.observe(x);
+        }
+        assert_eq!(h.total(), 1000);
+        for q in [50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.quantile(q);
+            // geometric buckets at 8/decade: within ~±16% of the sample
+            assert!(
+                (approx / exact - 1.0).abs() < 0.16,
+                "q{q}: hist {approx} vs exact {exact}"
+            );
+        }
+        // monotone in q
+        assert!(h.quantile(50.0) <= h.quantile(90.0));
+        assert!(h.quantile(90.0) <= h.quantile(99.0));
+    }
+
+    #[test]
+    fn histogram_edge_inputs_and_merge() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(99.0), 0.0, "empty histogram reports 0");
+        // pathological inputs land in the underflow bucket, never panic
+        h.observe(f64::NAN);
+        h.observe(-1.0);
+        h.observe(0.0);
+        h.observe(1e-12);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.quantile(99.0), 1e-6);
+        // overflow clamps to the top of the range
+        h.observe(1e300);
+        assert_eq!(h.quantile(100.0), 1e6);
+        let mut other = Histogram::new();
+        other.observe(1.0);
+        other.observe(2.0);
+        h.merge(&other);
+        assert_eq!(h.total(), 7);
+        // cumulative export: monotone bounds, final count == total
+        let rows = h.cumulative_buckets();
+        assert!(rows.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 < w[1].1));
+        assert_eq!(rows.last().unwrap().1, h.total());
+    }
+
+    #[test]
+    fn histogram_determinism_matches_summary_quantiles() {
+        let mut a = RunMetrics::new();
+        let mut b = RunMetrics::new();
+        for i in 0..500 {
+            let r = rec(i, 0.0, 0.001 * (i + 1) as f64, 1, 0);
+            a.record(r.clone());
+            b.record(r);
+        }
+        let (sa, sb) = (a.summarise(), b.summarise());
+        assert_eq!(sa.p50_response_time.to_bits(), sb.p50_response_time.to_bits());
+        assert_eq!(sa.p90_response_time.to_bits(), sb.p90_response_time.to_bits());
+        assert_eq!(sa.p99_response_time.to_bits(), sb.p99_response_time.to_bits());
+        assert!(sa.p50_response_time > 0.0 && sa.p50_response_time <= sa.p99_response_time);
     }
 
     #[test]

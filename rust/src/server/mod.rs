@@ -17,6 +17,15 @@
 //! its retries is recorded as shed — never silently lost.  The headline
 //! invariant, asserted at shutdown and by the chaos tests, is that every
 //! admitted request completes exactly once or is explicitly shed.
+//!
+//! Two ingress modes share the same core loop ([`serve_core`]):
+//! * **Replay** ([`serve_supervised`]) — arrivals come from the trace
+//!   store by replayed time, exactly the pre-edge behaviour;
+//! * **Live** ([`serve_ingress_supervised`]) — arrivals come as
+//!   [`EdgeJob`]s over a channel from the HTTP admission layer
+//!   ([`crate::edge`]), with per-request completion/shed notifications
+//!   flowing back as [`CoreSignal`]s so the edge can answer its
+//!   still-connected clients.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -36,7 +45,7 @@ use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::predictor::{predict_degraded, GenLenPredictor};
 use crate::sim::MagnusPolicy;
-use crate::workload::{PredictedRequest, TraceStore};
+use crate::workload::{PredictedRequest, RequestMeta, TraceStore};
 
 #[cfg(feature = "pjrt")]
 use crate::engine::pjrt::PjrtBatchServer;
@@ -48,6 +57,68 @@ use crate::workload::Request;
 /// keeps no batch-id → estimate map) and the replayed-time dispatch
 /// stamp (fault plans locate their windows in trace time).
 type Dispatch = (Batch, f64, f64);
+
+/// One admitted live request handed to the core by the edge.  The
+/// prediction already happened at admission (the edge owns the
+/// predictor — admission *is* the prediction's first consumer), so the
+/// core only batches and serves.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeJob {
+    pub meta: RequestMeta,
+    pub predicted_gen_len: u32,
+}
+
+/// Per-request outcome notification the core sends back to the edge in
+/// live-ingress mode (the edge resolves its waiting HTTP handlers and
+/// closes its accounting with these).
+#[derive(Debug, Clone, Copy)]
+pub enum CoreSignal {
+    Completed {
+        request_id: u64,
+        valid_tokens: u32,
+        invalid_tokens: u32,
+    },
+    /// The core gave up on the request (retry budget exhausted, or all
+    /// workers retired) — never silently lost.
+    Shed { request_id: u64 },
+}
+
+/// Where the core's requests come from.
+enum Ingress {
+    /// Arrivals replayed from the trace store by (scaled) wall time.
+    Replay,
+    /// Arrivals pushed by the edge; the channel closing means "no more
+    /// traffic, finish what you have and return".
+    Live { jobs: mpsc::Receiver<EdgeJob> },
+}
+
+/// Metrics plus the optional live-mode signal channel: every completion
+/// and every shed flows through here, so the edge hears about each
+/// outcome exactly once no matter which code path produced it.
+struct Ledger {
+    metrics: RunMetrics,
+    signals: Option<mpsc::Sender<CoreSignal>>,
+}
+
+impl Ledger {
+    fn done(&mut self, rec: RequestRecord) {
+        if let Some(tx) = &self.signals {
+            let _ = tx.send(CoreSignal::Completed {
+                request_id: rec.request_id,
+                valid_tokens: rec.valid_tokens,
+                invalid_tokens: rec.invalid_tokens,
+            });
+        }
+        self.metrics.record(rec);
+    }
+
+    fn shed(&mut self, request_id: u64) {
+        if let Some(tx) = &self.signals {
+            let _ = tx.send(CoreSignal::Shed { request_id });
+        }
+        self.metrics.record_shed(request_id);
+    }
+}
 
 /// Live-serving policy.
 pub enum LivePolicy {
@@ -432,7 +503,7 @@ fn recover_in_flight(
     attempts: &mut HashMap<u64, u32>,
     batcher: &mut AdaptiveBatcher,
     pending: &mut VecDeque<Batch>,
-    metrics: &mut RunMetrics,
+    ledger: &mut Ledger,
 ) {
     let (batch, _est) = match slot.in_flight.take() {
         Some(x) => x,
@@ -442,11 +513,11 @@ fn recover_in_flight(
     *attempt += 1;
     if *attempt > plan.max_retries {
         for pr in &batch.requests {
-            metrics.record_shed(pr.meta.id);
+            ledger.shed(pr.meta.id);
         }
         return;
     }
-    metrics.retries += 1;
+    ledger.metrics.retries += 1;
     if magnus {
         batcher.requeue(batch);
     } else {
@@ -464,7 +535,7 @@ fn requeue_oom_live(
     attempts: &mut HashMap<u64, u32>,
     batcher: &mut AdaptiveBatcher,
     pending: &mut VecDeque<Batch>,
-    metrics: &mut RunMetrics,
+    ledger: &mut Ledger,
     mut batch: Batch,
     at_iteration: u32,
     g_max: u32,
@@ -476,11 +547,11 @@ fn requeue_oom_live(
         *attempt += 1;
         if *attempt > plan.max_retries {
             for pr in &batch.requests {
-                metrics.record_shed(pr.meta.id);
+                ledger.shed(pr.meta.id);
             }
             return;
         }
-        metrics.retries += 1;
+        ledger.metrics.retries += 1;
         if magnus {
             batcher.requeue(batch);
         } else {
@@ -498,7 +569,7 @@ fn requeue_oom_live(
     let batch = if plan.overrun_guard {
         match batch.split_overrun(nid, at_iteration, g_max) {
             Ok((l, r)) => {
-                metrics.rebucketed += r.size();
+                ledger.metrics.rebucketed += r.size();
                 if magnus {
                     batcher.requeue(l);
                     batcher.requeue(r);
@@ -553,9 +624,50 @@ pub fn serve_supervised<F: WorkerFactory>(
     cfg: &ServingConfig,
     opts: &ServeOptions,
     policy: LivePolicy,
+    predictor: Option<GenLenPredictor>,
+    store: Arc<TraceStore>,
+    factory: Arc<F>,
+) -> Result<RunMetrics> {
+    serve_core(cfg, opts, policy, predictor, store, factory, Ingress::Replay, None)
+}
+
+/// Live-ingress variant: requests arrive as [`EdgeJob`]s over `jobs`
+/// (predicted at the edge; `meta.arrival` is rewritten to the admission
+/// instant in replayed seconds), per-request outcomes flow back over
+/// `signals`, and the run ends when `jobs` closes and every admitted
+/// request has completed or been shed.  This is what the HTTP front door
+/// ([`crate::edge::EdgeServer`]) runs underneath.
+pub fn serve_ingress_supervised<F: WorkerFactory>(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    jobs: mpsc::Receiver<EdgeJob>,
+    signals: mpsc::Sender<CoreSignal>,
+    store: Arc<TraceStore>,
+    factory: Arc<F>,
+) -> Result<RunMetrics> {
+    serve_core(
+        cfg,
+        opts,
+        policy,
+        None,
+        store,
+        factory,
+        Ingress::Live { jobs },
+        Some(signals),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_core<F: WorkerFactory>(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
     mut predictor: Option<GenLenPredictor>,
     store: Arc<TraceStore>,
     factory: Arc<F>,
+    ingress: Ingress,
+    signals: Option<mpsc::Sender<CoreSignal>>,
 ) -> Result<RunMetrics> {
     let plan = &opts.fault_plan;
     let probe = factory.probe()?;
@@ -599,7 +711,9 @@ pub fn serve_supervised<F: WorkerFactory>(
         max_batch_size: u32::try_from(max_batch).unwrap_or(0),
     });
     let g_max = cfg.gpu.g_max;
-    let mut fifo: VecDeque<usize> = VecDeque::new();
+    // Vanilla-path admission queue (Copy metas; replay pushes from the
+    // store, live ingress pushes from the jobs channel).
+    let mut fifo: VecDeque<RequestMeta> = VecDeque::new();
     // Vanilla-path re-dispatch queue (crash recovery, OOM splits).
     let mut pending: VecDeque<Batch> = VecDeque::new();
     let mut attempts: HashMap<u64, u32> = HashMap::new();
@@ -611,7 +725,10 @@ pub fn serve_supervised<F: WorkerFactory>(
     let mut est_new_shapes: Vec<BatchShape> = Vec::new();
     let mut est_new_times: Vec<f64> = Vec::new();
     let db = LogDb::new();
-    let mut metrics = RunMetrics::new();
+    let mut ledger = Ledger {
+        metrics: RunMetrics::new(),
+        signals,
+    };
     let mut idle: Vec<usize> = Vec::new();
     let mut next_batch_id_vanilla = 1_000_000u64;
 
@@ -619,11 +736,15 @@ pub fn serve_supervised<F: WorkerFactory>(
     let scale = opts.time_scale.max(1e-9);
     let now_replayed = |start: Instant| start.elapsed().as_secs_f64() * scale;
 
-    let admitted = store.len();
+    let replay = matches!(ingress, Ingress::Replay);
+    // Replay: the whole trace is admitted up front.  Live: `admitted`
+    // counts jobs received so far and `jobs_open` tracks the channel.
+    let mut admitted = if replay { store.len() } else { 0 };
+    let mut jobs_open = !replay;
     let mut next_arrival = 0usize;
     let mut completed = 0usize;
 
-    while completed + metrics.shed.len() < admitted {
+    while jobs_open || completed + ledger.metrics.shed.len() < admitted {
         // 0. Respawn crashed workers whose backoff deadline has passed.
         let wall = Instant::now();
         for w in 0..slots.len() {
@@ -638,36 +759,70 @@ pub fn serve_supervised<F: WorkerFactory>(
             }
         }
 
-        // 1. Admit every request whose (scaled) arrival time has passed.
-        //    Zero-copy: the meta is a few machine words and the predictor
-        //    borrows the prompt text straight from the shared arena.  The
-        //    fallback chain (trained predictor → input-length heuristic →
-        //    max-bucket default) keeps admission alive through predictor
-        //    outages.
+        // 1. Admit arrivals.  Replay: every request whose (scaled)
+        //    arrival time has passed — zero-copy, the meta is a few
+        //    machine words and the predictor borrows the prompt text
+        //    straight from the shared arena; the fallback chain (trained
+        //    predictor → input-length heuristic → max-bucket default)
+        //    keeps admission alive through predictor outages.  Live:
+        //    drain the edge's jobs channel; the prediction already
+        //    happened at admission, and `meta.arrival` is rewritten to
+        //    the receipt instant so response times measure real
+        //    queueing + service.
         let now = now_replayed(start);
-        while next_arrival < admitted && store.meta(next_arrival).arrival <= now {
-            let meta = store.meta(next_arrival);
-            next_arrival += 1;
-            match (&policy, &mut predictor) {
-                (LivePolicy::Magnus(_), Some(p)) => {
-                    let view = store.view_of(&meta);
-                    let outage = plan.predictor_outage(now);
-                    let (predicted, fell_back) = predict_degraded(p, outage, &view, g_max);
-                    let predicted = if fell_back {
-                        metrics.fallback_predictions += 1;
-                        predicted
-                    } else {
-                        plan.noisy_prediction(predicted, meta.id, g_max)
-                    };
-                    batcher.insert(
-                        PredictedRequest {
-                            meta,
-                            predicted_gen_len: predicted,
-                        },
-                        now,
-                    );
+        match &ingress {
+            Ingress::Replay => {
+                while next_arrival < admitted && store.meta(next_arrival).arrival <= now {
+                    let meta = store.meta(next_arrival);
+                    next_arrival += 1;
+                    match (&policy, &mut predictor) {
+                        (LivePolicy::Magnus(_), Some(p)) => {
+                            let view = store.view_of(&meta);
+                            let outage = plan.predictor_outage(now);
+                            let (predicted, fell_back) = predict_degraded(p, outage, &view, g_max);
+                            let predicted = if fell_back {
+                                ledger.metrics.fallback_predictions += 1;
+                                predicted
+                            } else {
+                                plan.noisy_prediction(predicted, meta.id, g_max)
+                            };
+                            batcher.insert(
+                                PredictedRequest {
+                                    meta,
+                                    predicted_gen_len: predicted,
+                                },
+                                now,
+                            );
+                        }
+                        _ => fifo.push_back(meta),
+                    }
                 }
-                _ => fifo.push_back(next_arrival - 1),
+            }
+            Ingress::Live { jobs } => {
+                while jobs_open {
+                    match jobs.try_recv() {
+                        Ok(job) => {
+                            admitted += 1;
+                            let mut meta = job.meta;
+                            meta.arrival = now;
+                            if magnus {
+                                batcher.insert(
+                                    PredictedRequest {
+                                        meta,
+                                        predicted_gen_len: job.predicted_gen_len,
+                                    },
+                                    now,
+                                );
+                            } else {
+                                fifo.push_back(meta);
+                            }
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            jobs_open = false;
+                        }
+                    }
+                }
             }
         }
 
@@ -699,9 +854,9 @@ pub fn serve_supervised<F: WorkerFactory>(
                         let take = (*fixed_batch as usize).min(fifo.len());
                         let mut reqs = Vec::with_capacity(take);
                         for _ in 0..take {
-                            let i = fifo.pop_front().unwrap();
+                            let meta = fifo.pop_front().unwrap();
                             reqs.push(PredictedRequest {
-                                meta: store.meta(i),
+                                meta,
                                 predicted_gen_len: 0,
                             });
                         }
@@ -732,14 +887,19 @@ pub fn serve_supervised<F: WorkerFactory>(
                     &mut attempts,
                     &mut batcher,
                     &mut pending,
-                    &mut metrics,
+                    &mut ledger,
                 );
             }
         }
 
         // 3. Wait for the next completion, the next arrival deadline, or
-        //    the next restart deadline — whichever is soonest.
-        let timeout = if next_arrival < admitted {
+        //    the next restart deadline — whichever is soonest.  Live
+        //    ingress has no arrival schedule to sleep toward, but new
+        //    jobs cannot wake `done_rx` either, so it polls on a short
+        //    leash instead.
+        let timeout = if !replay {
+            Duration::from_millis(5)
+        } else if next_arrival < admitted {
             let due = store.meta(next_arrival).arrival / scale;
             arrival_timeout(due, start.elapsed().as_secs_f64())
         } else {
@@ -767,7 +927,7 @@ pub fn serve_supervised<F: WorkerFactory>(
                         attempts.remove(&batch.id);
                         completed += per_request.len();
                         for (pr, sr) in batch.requests.iter().zip(&per_request) {
-                            metrics.record(RequestRecord {
+                            ledger.done(RequestRecord {
                                 request_id: sr.request_id,
                                 arrival: pr.meta.arrival,
                                 finish: now,
@@ -807,14 +967,14 @@ pub fn serve_supervised<F: WorkerFactory>(
                         }
                     }
                     BatchOutcome::Oom { at_iteration, .. } => {
-                        metrics.record_oom();
+                        ledger.metrics.record_oom();
                         requeue_oom_live(
                             plan,
                             magnus,
                             &mut attempts,
                             &mut batcher,
                             &mut pending,
-                            &mut metrics,
+                            &mut ledger,
                             batch,
                             at_iteration,
                             g_max,
@@ -836,7 +996,7 @@ pub fn serve_supervised<F: WorkerFactory>(
                     &mut attempts,
                     &mut batcher,
                     &mut pending,
-                    &mut metrics,
+                    &mut ledger,
                 );
                 if fatal {
                     slots[worker].tx = None;
@@ -845,7 +1005,7 @@ pub fn serve_supervised<F: WorkerFactory>(
                         eprintln!("server: worker {worker} retired: {error}");
                     } else {
                         slots[worker].restarts += 1;
-                        metrics.worker_restarts += 1;
+                        ledger.metrics.worker_restarts += 1;
                         let backoff = plan.restart_backoff(slots[worker].restarts - 1).max(0.0);
                         slots[worker].state =
                             SlotState::Down(Instant::now() + Duration::from_secs_f64(backoff));
@@ -876,19 +1036,34 @@ pub fn serve_supervised<F: WorkerFactory>(
             while !batcher.is_empty() {
                 let b = batcher.take(0);
                 for pr in &b.requests {
-                    metrics.record_shed(pr.meta.id);
+                    ledger.shed(pr.meta.id);
                 }
             }
             while let Some(b) = pending.pop_front() {
                 for pr in &b.requests {
-                    metrics.record_shed(pr.meta.id);
+                    ledger.shed(pr.meta.id);
                 }
             }
-            while let Some(i) = fifo.pop_front() {
-                metrics.record_shed(store.meta(i).id);
+            while let Some(m) = fifo.pop_front() {
+                ledger.shed(m.id);
             }
-            for i in next_arrival..admitted {
-                metrics.record_shed(store.meta(i).id);
+            match &ingress {
+                Ingress::Replay => {
+                    for i in next_arrival..admitted {
+                        ledger.shed(store.meta(i).id);
+                    }
+                }
+                Ingress::Live { jobs } => {
+                    // Shed whatever the edge already pushed; the edge
+                    // notices the signal channel die after we return and
+                    // fails anything it still holds, so accounting closes
+                    // on both sides.
+                    while let Ok(job) = jobs.try_recv() {
+                        admitted += 1;
+                        ledger.shed(job.meta.id);
+                    }
+                    jobs_open = false;
+                }
             }
             break;
         }
@@ -914,7 +1089,7 @@ pub fn serve_supervised<F: WorkerFactory>(
         {
             completed += per_request.len();
             for (pr, sr) in batch.requests.iter().zip(&per_request) {
-                metrics.record(RequestRecord {
+                ledger.done(RequestRecord {
                     request_id: sr.request_id,
                     arrival: pr.meta.arrival,
                     finish: now,
@@ -931,12 +1106,12 @@ pub fn serve_supervised<F: WorkerFactory>(
         }
     }
     debug_assert_eq!(
-        completed + metrics.shed.len(),
+        completed + ledger.metrics.shed.len(),
         admitted,
         "exactly-once accounting must close: every admitted request \
          completes or is explicitly shed"
     );
-    Ok(metrics)
+    Ok(ledger.metrics)
 }
 
 /// Replay an owned `trace` through the live cluster; interns it once and
@@ -996,6 +1171,25 @@ pub fn serve_trace_store_sim(
     serve_supervised(cfg, opts, policy, predictor, store, factory)
 }
 
+/// Live-ingress serving over the cost-model backend: what the HTTP edge
+/// runs underneath when no PJRT artifacts are present (and what the edge
+/// tests/benches drive).
+pub fn serve_ingress_sim(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    policy: LivePolicy,
+    jobs: mpsc::Receiver<EdgeJob>,
+    signals: mpsc::Sender<CoreSignal>,
+    store: Arc<TraceStore>,
+) -> Result<RunMetrics> {
+    let factory = Arc::new(CostWorkerFactory::from_config(
+        cfg,
+        opts.time_scale,
+        opts.fault_plan.clone(),
+    ));
+    serve_ingress_supervised(cfg, opts, policy, jobs, signals, store, factory)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1014,6 +1208,42 @@ mod tests {
         assert!(far >= Duration::from_millis(49) && far <= Duration::from_millis(50));
         let inf = arrival_timeout(f64::INFINITY, 0.0);
         assert!(inf >= Duration::from_millis(49) && inf <= Duration::from_millis(50));
+    }
+
+    /// Property coverage for the timeout clamp itself (ISSUE 7 satellite:
+    /// previously only exercised implicitly through `serve_supervised`):
+    /// for ANY pair of inputs — past-due, NaN, ±∞, huge deltas — the
+    /// result is a valid Duration in `[0, 50ms]`, never a panic, and it
+    /// equals the true clamped delta whenever that delta is finite.
+    #[test]
+    fn arrival_timeout_is_total_and_clamped() {
+        crate::util::prop::prop_check(400, |rng| {
+            // Mix tame magnitudes with pathological ones.
+            let wild = |rng: &mut crate::util::Rng| match rng.range_usize(0, 8) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                3 => rng.range_f64(-1e300, 1e300),
+                4 => -rng.f64() * 1e-9,
+                _ => rng.range_f64(-100.0, 100.0),
+            };
+            let due = wild(rng);
+            let elapsed = wild(rng);
+            let t = arrival_timeout(due, elapsed);
+            assert!(t <= Duration::from_millis(50), "due={due} elapsed={elapsed} t={t:?}");
+            let dt = due - elapsed;
+            if dt.is_nan() || dt <= 0.0 {
+                assert_eq!(t, Duration::ZERO, "due={due} elapsed={elapsed}");
+            } else if dt >= 0.050 {
+                assert_eq!(t, Duration::from_millis(50), "due={due} elapsed={elapsed}");
+            } else {
+                // from_secs_f64 rounds to the nearest nanosecond
+                assert!(
+                    (t.as_secs_f64() - dt).abs() <= 1e-9,
+                    "due={due} elapsed={elapsed} t={t:?}"
+                );
+            }
+        });
     }
 
     /// Fault-free supervised run over the cost backend: everything

@@ -573,6 +573,93 @@ pub fn record_robustness_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// One measured point of the edge overload sweep (`BENCH_edge.json`).
+///
+/// Each point drives a live [`crate::edge::EdgeServer`] with the
+/// open-loop generator at a multiple of measured capacity; the counters
+/// come from [`crate::edge::EdgeReport`], whose accounting identity
+/// (`offered == completed + shed + expired + core_shed`) the bench
+/// asserts before recording anything.
+#[derive(Debug, Clone)]
+pub struct EdgePoint {
+    pub label: String,
+    /// Offered load as a multiple of measured capacity (1.0 = at
+    /// capacity, 5.0 = 5× overload).
+    pub overload: f64,
+    pub offered_rps: f64,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub core_shed: u64,
+    /// Completions per wall second — the number that must *hold* as the
+    /// offered load grows past capacity.
+    pub goodput: f64,
+    pub shed_rate: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Peak admission-queue lag seen by the generator (open-loop check).
+    pub max_lag_s: f64,
+}
+
+/// Record the edge overload curve as `BENCH_edge.json` at the repo root.
+/// Derives the headline numbers: goodput retention and shed rate at the
+/// worst overload relative to the ~1× point — graceful degradation means
+/// retention stays near 1 while shed rate absorbs the excess.
+pub fn record_edge_bench(
+    path: &str,
+    capacity_rps: f64,
+    points: &[EdgePoint],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let arr = |f: &dyn Fn(&EdgePoint) -> Json| Json::Arr(points.iter().map(f).collect());
+    let mut fields = vec![
+        ("bench", Json::str("edge_overload_sweep")),
+        ("capacity_rps", Json::num(capacity_rps)),
+        ("label", arr(&|p| Json::str(p.label.clone()))),
+        ("overload", arr(&|p| Json::num(p.overload))),
+        ("offered_rps", arr(&|p| Json::num(p.offered_rps))),
+        ("offered", arr(&|p| Json::num(p.offered as f64))),
+        ("completed", arr(&|p| Json::num(p.completed as f64))),
+        ("shed", arr(&|p| Json::num(p.shed as f64))),
+        ("expired", arr(&|p| Json::num(p.expired as f64))),
+        ("core_shed", arr(&|p| Json::num(p.core_shed as f64))),
+        ("goodput_rps", arr(&|p| Json::num(p.goodput))),
+        ("shed_rate", arr(&|p| Json::num(p.shed_rate))),
+        ("p50_latency_s", arr(&|p| Json::num(p.p50_latency_s))),
+        ("p99_latency_s", arr(&|p| Json::num(p.p99_latency_s))),
+        ("max_lag_s", arr(&|p| Json::num(p.max_lag_s))),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    let base = points
+        .iter()
+        .filter(|p| p.overload > 0.0)
+        .min_by(|a, b| a.overload.partial_cmp(&b.overload).unwrap());
+    let worst = points
+        .iter()
+        .max_by(|a, b| a.overload.partial_cmp(&b.overload).unwrap());
+    if let (Some(base), Some(worst)) = (base, worst) {
+        if worst.overload > base.overload {
+            fields.push(("worst_overload", Json::num(worst.overload)));
+            fields.push((
+                "goodput_retention",
+                Json::num(worst.goodput / base.goodput.max(1e-12)),
+            ));
+            fields.push(("worst_shed_rate", Json::num(worst.shed_rate)));
+            fields.push((
+                "p99_inflation",
+                Json::num(worst.p99_latency_s / base.p99_latency_s.max(1e-12)),
+            ));
+        }
+    }
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

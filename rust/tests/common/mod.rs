@@ -46,6 +46,9 @@ pub fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
         (sa.request_throughput, sb.request_throughput, "thr"),
         (sa.mean_response_time, sb.mean_response_time, "mean_rt"),
         (sa.p95_response_time, sb.p95_response_time, "p95_rt"),
+        (sa.p50_response_time, sb.p50_response_time, "p50_rt"),
+        (sa.p90_response_time, sb.p90_response_time, "p90_rt"),
+        (sa.p99_response_time, sb.p99_response_time, "p99_rt"),
         (sa.token_throughput, sb.token_throughput, "tok"),
         (sa.valid_token_throughput, sb.valid_token_throughput, "vtok"),
     ] {

@@ -1,0 +1,194 @@
+//! Edge admission invariants, end to end (ISSUE 7 satellite 3):
+//!
+//! * a zero-RPS edge sheds *everything*, explicitly, over real HTTP;
+//! * with no overload the admitted request sequence is a pass-through —
+//!   the sim replay of what the edge admitted is byte-identical to the
+//!   sim replay of the raw trace (golden gate from `tests/common`);
+//! * under combined client chaos (connection drops, slow clients) and
+//!   core chaos (crashes, transient errors) every offered request is
+//!   accounted for exactly once on both sides of the wire.
+//!
+//! Everything runs on loopback with small request counts: these are
+//! correctness gates, not load tests — `benches/bench_edge.rs` owns the
+//! overload curve.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use magnus::config::ServingConfig;
+use magnus::edge::{
+    run_loadgen, AdmissionConfig, AdmissionController, EdgeOptions, EdgeServer, LoadGenConfig,
+    Offer,
+};
+use magnus::faults::FaultPlan;
+use magnus::http::HttpConfig;
+use magnus::server::LivePolicy;
+use magnus::sim::{run_policy_store, trained_predictor, MagnusPolicy, Policy};
+use magnus::workload::{TraceSpec, TraceStore};
+
+fn small_store(n: usize, seed: u64) -> Arc<TraceStore> {
+    Arc::new(TraceStore::generate(&TraceSpec {
+        rate: 8.0,
+        n_requests: n,
+        seed,
+        ..Default::default()
+    }))
+}
+
+fn edge_opts(admission: AdmissionConfig) -> EdgeOptions {
+    EdgeOptions {
+        http: HttpConfig {
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            ..Default::default()
+        },
+        admission,
+        n_workers: 2,
+        time_scale: 400.0,
+        fault_plan: FaultPlan::none(),
+        drain_grace: Duration::from_secs(30),
+    }
+}
+
+/// Zero RPS limit, real sockets: every request comes back `429`, nothing
+/// reaches the core, and the ledger still closes.
+#[test]
+fn zero_rps_edge_sheds_every_request_explicitly() {
+    let cfg = ServingConfig::default();
+    let store = small_store(16, 31);
+    let opts = edge_opts(AdmissionConfig {
+        rps_limit: 0.0,
+        ..AdmissionConfig::default()
+    });
+    let edge = EdgeServer::start(
+        &cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        None,
+        Arc::clone(&store),
+    )
+    .unwrap();
+    let lg = run_loadgen(&LoadGenConfig {
+        addr: edge.addr().to_string(),
+        rps: 200.0,
+        n_requests: 30,
+        trace_len: store.len(),
+        n_conns: 4,
+        seed: 5,
+        ..Default::default()
+    })
+    .unwrap();
+    let report = edge.shutdown().unwrap();
+    assert_eq!(lg.shed, 30, "every request must be refused: {lg:?}");
+    assert_eq!(lg.ok, 0);
+    assert_eq!(report.offered, 30);
+    assert_eq!(report.shed, 30);
+    assert_eq!(report.completed, 0);
+    assert!(report.accounted(), "{report:?}");
+    assert_eq!(report.core.records.len(), 0, "nothing may reach the core");
+    assert_eq!(report.core.shed.len(), 0);
+}
+
+/// No overload → the controller is a pure pass-through, and the sim
+/// replay of the admitted sequence is *byte-identical* to the replay of
+/// the raw trace, under the shared golden gate.  This is the "the edge
+/// costs nothing when idle" claim in its strongest falsifiable form.
+#[test]
+fn no_overload_admission_is_byte_identical_to_bypassing_the_edge() {
+    let cfg = ServingConfig::default();
+    let store = small_store(40, 77);
+    let mut ctl = AdmissionController::new(AdmissionConfig {
+        queue_cap: 64,
+        token_budget: u64::MAX,
+        rps_limit: f64::INFINITY,
+        default_deadline_s: 30.0,
+        max_deadline_s: 120.0,
+    });
+    // Offer the trace in arrival order with its own predictions; with
+    // generous budgets every offer must forward, in order.
+    let mut predictor = trained_predictor(&cfg, 60);
+    let mut admitted = Vec::new();
+    for i in 0..store.len() {
+        let meta = store.meta(i);
+        let p = predictor.predict(store.view(i)).max(1);
+        let dl = ctl.resolve_deadline(None, meta.arrival);
+        match ctl.offer(meta.id, p, dl, meta.arrival) {
+            Offer::Forward => admitted.push(store.request_of(&meta)),
+            other => panic!("request {i} not forwarded under no overload: {other:?}"),
+        }
+        ctl.complete(meta.id);
+    }
+    let rebuilt = TraceStore::from_requests(&admitted);
+    let a = run_policy_store(&cfg, Policy::Magnus, &store, 60);
+    let b = run_policy_store(&cfg, Policy::Magnus, &rebuilt, 60);
+    common::assert_identical(&a, &b, "edge pass-through vs raw trace");
+}
+
+/// Chaos on both sides of the socket: clients drop connections and stall
+/// mid-request, the core crashes and throws transient errors — and still
+/// every offered request resolves exactly once, on the edge's ledger and
+/// the generator's, and the core's own exactly-once identity holds.
+#[test]
+fn chaos_load_accounts_for_every_request_exactly_once() {
+    let cfg = ServingConfig::default();
+    let store = small_store(24, 99);
+
+    let mut core_plan = FaultPlan::none();
+    core_plan.seed = 11;
+    core_plan.crash_p = 0.10;
+    core_plan.serve_error_p = 0.10;
+
+    let mut opts = edge_opts(AdmissionConfig {
+        queue_cap: 8,
+        token_budget: 600,
+        rps_limit: f64::INFINITY,
+        default_deadline_s: 5.0,
+        max_deadline_s: 30.0,
+    });
+    opts.fault_plan = core_plan;
+
+    let edge = EdgeServer::start(
+        &cfg,
+        &opts,
+        LivePolicy::Magnus(MagnusPolicy::magnus()),
+        Some(trained_predictor(&cfg, 60)),
+        Arc::clone(&store),
+    )
+    .unwrap();
+
+    let mut client_plan = FaultPlan::none();
+    client_plan.seed = 23;
+    client_plan.conn_drop_p = 0.2;
+    client_plan.slow_client_p = 0.15;
+    client_plan.slow_client_delay_s = 0.05;
+
+    let lg = run_loadgen(&LoadGenConfig {
+        addr: edge.addr().to_string(),
+        rps: 150.0,
+        n_requests: 80,
+        trace_len: store.len(),
+        burst: None,
+        n_conns: 8,
+        deadline_ms: Some(5_000),
+        plan: client_plan,
+        seed: 17,
+    })
+    .unwrap();
+    let report = edge.shutdown().unwrap();
+
+    // Generator side: every request it offered has a terminal outcome.
+    assert!(lg.accounted(), "loadgen ledger must close: {lg:?}");
+    assert!(lg.dropped > 0, "chaos plan must actually drop connections");
+    // Edge side: the admission identity, under chaos.
+    assert!(report.accounted(), "edge ledger must close: {report:?}");
+    // Dropped connections never became offers; everything else did.
+    assert_eq!(report.offered, lg.ok + lg.shed + lg.expired + lg.client_errors);
+    // Core side: its exactly-once identity, and agreement with the edge.
+    assert_eq!(report.core.records.len() as u64, report.completed);
+    assert_eq!(lg.ok, report.completed, "every 200 the client saw completed in core");
+    // The server reaped each dropped connection instead of hanging.
+    assert!(report.http_reaped >= lg.dropped);
+    assert_eq!(report.bad_requests, 0);
+}
