@@ -1,0 +1,140 @@
+//! Cluster routing/fault matrix: every route policy under every fault
+//! schedule through the deterministic discrete-event cluster
+//! (`run_cluster_store`) → `BENCH_cluster.json`.
+//!
+//! The matrix crosses the four route policies (rr, jspq, p2c, band)
+//! with four instance-level fault schedules (fault-free, one slow
+//! instance, one kill window, one partition window) on an M=4 cluster.
+//! Every cell replays the SAME trace, and before any number is recorded
+//! the cluster ledger must close exactly once
+//! (`offered == completed + shed + expired`).
+//!
+//! The DES path is bit-stable across runs — same seed, same plan, same
+//! numbers — so the gated headline (`cluster_goodput`, the best
+//! policy's goodput under the slow-instance schedule) cannot flap in
+//! CI.  The load-aware policies (jspq, p2c) are expected to beat
+//! round-robin here because they route around the stalled instance's
+//! predicted-token backlog; the bench records the comparison, it does
+//! not assert the ordering.
+//!
+//! `MAGNUS_CLUSTER_SMOKE` (or `MAGNUS_BENCH_QUICK`) shrinks the trace
+//! for CI.
+
+use magnus::cluster::{parse_route_policy, run_cluster_store, ClusterOptions, ROUTE_POLICY_NAMES};
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::faults::FaultPlan;
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::sim::MagnusPolicy;
+use magnus::util::bench::{record_cluster_bench, ClusterPoint};
+use magnus::workload::{TraceSpec, TraceStore};
+
+const RATE: f64 = 20.0;
+const SEED: u64 = 4242;
+const M: usize = 4;
+const HEADLINE_SCHEDULE: &str = "slow1";
+
+/// Instance-level fault schedules, windows sized off the nominal
+/// arrival span so each fault actually overlaps traffic.
+fn schedules(span_s: f64) -> Vec<(&'static str, FaultPlan)> {
+    let slow1 = format!(
+        "seed=9,islow=1:{:.1}..{:.1}@8",
+        0.1 * span_s,
+        0.8 * span_s
+    );
+    let kill1 = format!("seed=9,ikill=1:{:.1}..{:.1}", 0.2 * span_s, 0.6 * span_s);
+    let part2 = format!("seed=9,ipart=2:{:.1}..{:.1}", 0.2 * span_s, 0.5 * span_s);
+    vec![
+        ("nofault", FaultPlan::none()),
+        ("slow1", FaultPlan::parse_spec(&slow1).unwrap()),
+        ("kill1", FaultPlan::parse_spec(&kill1).unwrap()),
+        ("part2", FaultPlan::parse_spec(&part2).unwrap()),
+    ]
+}
+
+fn main() {
+    let quick = std::env::var("MAGNUS_CLUSTER_SMOKE").is_ok()
+        || std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+    let n: usize = if quick { 240 } else { 640 };
+    let span_s = n as f64 / RATE;
+
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let store = TraceStore::generate(&TraceSpec {
+        rate: RATE,
+        n_requests: n,
+        seed: SEED,
+        ..Default::default()
+    });
+    let copts = ClusterOptions {
+        n_nodes: M,
+        hb_interval_s: 1.0,
+        suspect_after: 2,
+        steal_threshold_tokens: 64,
+        route_seed: 0xC1_0C,
+    };
+
+    println!("== cluster routing/fault matrix (n={n}, rate={RATE}, M={M}) ==");
+    let mut points: Vec<ClusterPoint> = Vec::new();
+    for (schedule, plan) in schedules(span_s) {
+        for &policy_name in &ROUTE_POLICY_NAMES {
+            // Fresh routing state and predictor per cell: each run is a
+            // standalone, bit-replayable simulation.
+            let mut route =
+                parse_route_policy(policy_name, copts.route_seed, cfg.gpu.g_max).unwrap();
+            let out = run_cluster_store(
+                &cfg,
+                &MagnusPolicy::magnus(),
+                GenLenPredictor::new(Variant::Uilo, &cfg),
+                &engine,
+                &store,
+                &plan,
+                &copts,
+                route.as_mut(),
+            );
+            assert_eq!(out.offered, n, "{schedule}/{policy_name}: offered != trace");
+            assert!(
+                out.accounted(),
+                "{schedule}/{policy_name}: ledger must close exactly once \
+                 (offered {} completed {} shed {} expired {})",
+                out.offered,
+                out.completed,
+                out.shed,
+                out.expired
+            );
+            let s = out.merged_metrics().summarise();
+            println!(
+                "  {schedule:>7}/{policy_name:<4}: {} done, {} shed | goodput {:.3} req/s | \
+                 p99 {:.2}s | imbalance {:.2} | failovers {} (rec {:.2}s) | \
+                 reroutes {} | steals {} | dup-acks {}",
+                out.completed,
+                out.shed,
+                s.request_throughput,
+                s.p99_response_time,
+                out.imbalance_ratio(),
+                out.failovers,
+                out.mean_recovery_s(),
+                out.reroutes,
+                out.steals,
+                out.duplicate_acks
+            );
+            points.push(ClusterPoint {
+                policy: policy_name.to_string(),
+                schedule: schedule.to_string(),
+                goodput: s.request_throughput,
+                p99_response_time: s.p99_response_time,
+                imbalance: out.imbalance_ratio(),
+                recovery_s: out.mean_recovery_s(),
+                completed: out.completed,
+                shed: out.shed,
+                steals: out.steals,
+                reroutes: out.reroutes,
+                duplicate_acks: out.duplicate_acks,
+            });
+        }
+    }
+
+    let path = format!("{}/../BENCH_cluster.json", env!("CARGO_MANIFEST_DIR"));
+    record_cluster_bench(&path, n, RATE, M, HEADLINE_SCHEDULE, &points, vec![]).unwrap();
+    println!("wrote {path} (headline schedule: {HEADLINE_SCHEDULE})");
+}

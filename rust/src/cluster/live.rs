@@ -1,0 +1,410 @@
+//! Live threaded cluster path (ISSUE 8): M supervised serving cores
+//! (`server::serve_ingress_sim` — real threads, channels, wall clock,
+//! worker supervision) behind the same prediction-aware router the
+//! discrete-event sim uses, with heartbeat health checks against the
+//! fault plan's instance windows and failover of in-flight request
+//! copies.
+//!
+//! Semantics vs the sim path:
+//! - A kill window cuts the instance's ingress (its job sender is
+//!   dropped) once declared Dead; the core drains what it already
+//!   admitted and exits.  Requests the router still holds copies of are
+//!   re-routed under the failover retry budget — late completions from
+//!   the draining core race the re-runs, and the router's terminal set
+//!   resolves them first-signal-wins (later ones count as
+//!   `duplicate_signals`).
+//! - A partition window is handled identically at this layer (ingress
+//!   cut + reroute + dedup): the in-process core cannot actually lose
+//!   its ack channel, so deferred-ack realism lives in the sim path.
+//! - Work stealing is a sim-layer mechanism (it requires reaching into
+//!   peer queues, which the supervised cores own); the live router
+//!   rebalances only through placement and failover.
+//!
+//! Exactly-once: `offered == completed + shed + expired` over the
+//! router's terminal set, debug-asserted at shutdown (`expired` is 0 —
+//! deadline expiry is the edge's axis, not the router's).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cluster::route::{NodeLoad, RoutePolicy, RouteRequest};
+use crate::cluster::ClusterOptions;
+use crate::config::ServingConfig;
+use crate::metrics::RunMetrics;
+use crate::server::{serve_ingress_sim, CoreSignal, EdgeJob, LivePolicy, ServeOptions};
+use crate::util::clamped_duration;
+use crate::workload::TraceStore;
+
+/// Router-side outcome of a live cluster run.
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    /// Always 0 here (deadline expiry is the edge's axis); kept so the
+    /// ledger identity reads the same everywhere.
+    pub expired: u64,
+    /// Terminal signals for already-resolved ids (zombie-core drains
+    /// racing failover re-runs).
+    pub duplicate_signals: u64,
+    /// Request copies re-routed by failover.
+    pub reroutes: u64,
+    /// Dead declarations.
+    pub failovers: u32,
+    /// Fresh cores spawned after a fault window closed.
+    pub respawns: u32,
+    /// Core incarnations that returned an error instead of metrics.
+    pub core_failures: u32,
+    /// Final metrics of every core incarnation, in spawn order.
+    pub per_core: Vec<RunMetrics>,
+}
+
+impl ClusterReport {
+    /// Does the exactly-once ledger close?
+    pub fn accounted(&self) -> bool {
+        self.offered == self.completed + self.shed + self.expired
+    }
+}
+
+/// One live instance slot as the router sees it.
+struct Instance {
+    /// `None` once the instance is Dead (ingress cut) — also how
+    /// liveness is surfaced to the routing policies.
+    sender: Option<mpsc::Sender<EdgeJob>>,
+    /// Router-side copies of requests admitted to this incarnation.
+    in_flight: BTreeMap<u64, EdgeJob>,
+    misses: u32,
+    declared_dead: bool,
+}
+
+fn clone_opts(o: &ServeOptions) -> ServeOptions {
+    ServeOptions {
+        artifacts_dir: o.artifacts_dir.clone(),
+        n_workers: o.n_workers,
+        time_scale: o.time_scale,
+        warm_up: o.warm_up,
+        fault_plan: o.fault_plan.clone(),
+    }
+}
+
+/// Spawn one serving core plus its signal forwarder; returns the job
+/// sender and both join handles.
+#[allow(clippy::type_complexity)]
+fn spawn_core(
+    i: usize,
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    make_policy: &dyn Fn() -> LivePolicy,
+    merged_tx: &mpsc::Sender<(usize, CoreSignal)>,
+    store: &Arc<TraceStore>,
+) -> (
+    mpsc::Sender<EdgeJob>,
+    JoinHandle<Result<RunMetrics>>,
+    JoinHandle<()>,
+) {
+    let (jtx, jrx) = mpsc::channel::<EdgeJob>();
+    let (stx, srx) = mpsc::channel::<CoreSignal>();
+    let (cfg_c, opts_c, store_c) = (cfg.clone(), clone_opts(opts), Arc::clone(store));
+    let policy = make_policy();
+    let core = thread::spawn(move || serve_ingress_sim(&cfg_c, &opts_c, policy, jrx, stx, store_c));
+    let fwd_tx = merged_tx.clone();
+    let fwd = thread::spawn(move || {
+        for sig in srx.iter() {
+            if fwd_tx.send((i, sig)).is_err() {
+                break;
+            }
+        }
+    });
+    (jtx, core, fwd)
+}
+
+/// Serve live-ingress jobs over an M-core cluster.  `jobs` closing means
+/// "no more traffic"; every offered job resolves to exactly one
+/// `CoreSignal` on `signals`.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_cluster_ingress_sim(
+    cfg: &ServingConfig,
+    opts: &ServeOptions,
+    copts: &ClusterOptions,
+    make_policy: &dyn Fn() -> LivePolicy,
+    route_policy: &mut dyn RoutePolicy,
+    jobs: mpsc::Receiver<EdgeJob>,
+    signals: mpsc::Sender<CoreSignal>,
+    store: Arc<TraceStore>,
+) -> Result<ClusterReport> {
+    let m = copts.n_nodes.max(1);
+    let plan = opts.fault_plan.clone();
+    let time_scale = opts.time_scale.max(1e-9);
+
+    let (merged_tx, merged_rx) = mpsc::channel::<(usize, CoreSignal)>();
+    let mut merged_master = Some(merged_tx);
+
+    let mut instances: Vec<Instance> = Vec::with_capacity(m);
+    let mut cores: Vec<JoinHandle<Result<RunMetrics>>> = Vec::new();
+    let mut forwarders: Vec<JoinHandle<()>> = Vec::new();
+    for i in 0..m {
+        let (jtx, core, fwd) = spawn_core(
+            i,
+            cfg,
+            opts,
+            make_policy,
+            merged_master.as_ref().unwrap(),
+            &store,
+        );
+        instances.push(Instance {
+            sender: Some(jtx),
+            in_flight: BTreeMap::new(),
+            misses: 0,
+            declared_dead: false,
+        });
+        cores.push(core);
+        forwarders.push(fwd);
+    }
+
+    let mut terminal: HashSet<u64> = HashSet::new();
+    let mut failover_attempts: HashMap<u64, u32> = HashMap::new();
+    let (mut offered, mut completed, mut shed) = (0u64, 0u64, 0u64);
+    let (mut duplicate_signals, mut reroutes) = (0u64, 0u64);
+    let (mut failovers, mut respawns, mut core_failures) = (0u32, 0u32, 0u32);
+
+    let start = Instant::now();
+    // Heartbeat period in wall seconds: the plan's windows live in
+    // replayed (trace) time, which runs `time_scale`× wall time.  The
+    // shared clamp helper keeps a degenerate interval from panicking
+    // (ISSUE 8 satellite: `util::clamped_duration` in the cluster loop).
+    let wall_hb = clamped_duration(copts.hb_interval_s / time_scale)
+        .max(Duration::from_millis(5));
+    let poll = Duration::from_millis(2).min(wall_hb);
+    let mut next_hb = start + wall_hb;
+    let mut jobs_open = true;
+
+    macro_rules! resolve {
+        ($id:expr, $sig:expr, $ctr:ident) => {
+            if terminal.insert($id) {
+                $ctr += 1;
+                let _ = signals.send($sig);
+            } else {
+                duplicate_signals += 1;
+            }
+        };
+    }
+
+    // Route one job copy; on send failure the target is marked dead and
+    // routing retries over the survivors.
+    macro_rules! place {
+        ($job:expr) => {{
+            let job: EdgeJob = $job;
+            let id = job.meta.id;
+            loop {
+                let loads: Vec<NodeLoad> = instances
+                    .iter()
+                    .map(|inst| NodeLoad {
+                        alive: inst.sender.is_some(),
+                        queued_requests: inst.in_flight.len(),
+                        backlog_tokens: inst
+                            .in_flight
+                            .values()
+                            .map(|j| u64::from(j.predicted_gen_len))
+                            .sum(),
+                    })
+                    .collect();
+                let req = RouteRequest {
+                    id,
+                    predicted: job.predicted_gen_len,
+                };
+                match route_policy.route(&req, &loads) {
+                    Some(j) => {
+                        let ok = instances[j]
+                            .sender
+                            .as_ref()
+                            .map_or(false, |tx| tx.send(job).is_ok());
+                        if ok {
+                            instances[j].in_flight.insert(id, job);
+                            break true;
+                        }
+                        // The core exited under us: cut its ingress and
+                        // let routing retry over the survivors.
+                        instances[j].sender = None;
+                    }
+                    None => {
+                        resolve!(id, CoreSignal::Shed { request_id: id }, shed);
+                        break false;
+                    }
+                }
+            }
+        }};
+    }
+
+    loop {
+        if jobs_open {
+            match jobs.recv_timeout(poll) {
+                Ok(job) => {
+                    offered += 1;
+                    place!(job);
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    jobs_open = false;
+                    // Close every ingress so the cores drain and exit;
+                    // drop our master signal sender so the merged
+                    // channel disconnects once the forwarders finish.
+                    for inst in instances.iter_mut() {
+                        inst.sender = None;
+                    }
+                    merged_master = None;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+            }
+        } else {
+            match merged_rx.recv_timeout(poll) {
+                Ok((i, sig)) => handle_signal(
+                    i,
+                    sig,
+                    &mut instances,
+                    &mut terminal,
+                    &mut completed,
+                    &mut shed,
+                    &mut duplicate_signals,
+                    &signals,
+                ),
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+            }
+        }
+        while let Ok((i, sig)) = merged_rx.try_recv() {
+            handle_signal(
+                i,
+                sig,
+                &mut instances,
+                &mut terminal,
+                &mut completed,
+                &mut shed,
+                &mut duplicate_signals,
+                &signals,
+            );
+        }
+
+        // Heartbeat health checks, in replayed time, while admitting.
+        if jobs_open && Instant::now() >= next_hb {
+            next_hb += wall_hb;
+            let t = start.elapsed().as_secs_f64() * time_scale;
+            for i in 0..m {
+                let miss = plan.instance_dead(i, t) || plan.instance_partitioned(i, t);
+                if miss {
+                    instances[i].misses += 1;
+                    if !instances[i].declared_dead && instances[i].misses >= copts.suspect_after {
+                        instances[i].declared_dead = true;
+                        failovers += 1;
+                        instances[i].sender = None;
+                        let inflight = std::mem::take(&mut instances[i].in_flight);
+                        for (id, job) in inflight {
+                            if terminal.contains(&id) {
+                                continue;
+                            }
+                            let fa = failover_attempts.entry(id).or_insert(0);
+                            *fa += 1;
+                            if *fa > plan.max_retries {
+                                resolve!(id, CoreSignal::Shed { request_id: id }, shed);
+                                continue;
+                            }
+                            if place!(job) {
+                                reroutes += 1;
+                            }
+                        }
+                    }
+                } else {
+                    if instances[i].declared_dead {
+                        // Window over: bring a fresh incarnation up.
+                        instances[i].declared_dead = false;
+                        respawns += 1;
+                        let (jtx, core, fwd) = spawn_core(
+                            i,
+                            cfg,
+                            opts,
+                            make_policy,
+                            merged_master.as_ref().expect("admitting implies master"),
+                            &store,
+                        );
+                        instances[i].sender = Some(jtx);
+                        cores.push(core);
+                        forwarders.push(fwd);
+                    }
+                    instances[i].misses = 0;
+                }
+            }
+        }
+    }
+
+    // The merged channel is closed: every core exited and every signal
+    // was delivered.  Anything still untracked resolves as shed so the
+    // ledger closes even if a core died without signalling.
+    let leftover: Vec<u64> = instances
+        .iter()
+        .flat_map(|inst| inst.in_flight.keys().copied())
+        .collect();
+    for id in leftover {
+        resolve!(id, CoreSignal::Shed { request_id: id }, shed);
+    }
+
+    let mut per_core = Vec::new();
+    for core in cores {
+        match core.join() {
+            Ok(Ok(metrics)) => per_core.push(metrics),
+            _ => core_failures += 1,
+        }
+    }
+    for fwd in forwarders {
+        let _ = fwd.join();
+    }
+
+    debug_assert_eq!(
+        offered,
+        completed + shed,
+        "live cluster exactly-once ledger must close: every offered job \
+         resolves to exactly one terminal signal"
+    );
+    Ok(ClusterReport {
+        offered,
+        completed,
+        shed,
+        expired: 0,
+        duplicate_signals,
+        reroutes,
+        failovers,
+        respawns,
+        core_failures,
+        per_core,
+    })
+}
+
+/// Resolve one core signal against the router's terminal set: the first
+/// terminal wins and is forwarded to the edge; later ones are counted
+/// and swallowed.
+#[allow(clippy::too_many_arguments)]
+fn handle_signal(
+    i: usize,
+    sig: CoreSignal,
+    instances: &mut [Instance],
+    terminal: &mut HashSet<u64>,
+    completed: &mut u64,
+    shed: &mut u64,
+    duplicate_signals: &mut u64,
+    signals: &mpsc::Sender<CoreSignal>,
+) {
+    let id = match sig {
+        CoreSignal::Completed { request_id, .. } | CoreSignal::Shed { request_id } => request_id,
+    };
+    instances[i].in_flight.remove(&id);
+    if terminal.insert(id) {
+        match sig {
+            CoreSignal::Completed { .. } => *completed += 1,
+            CoreSignal::Shed { .. } => *shed += 1,
+        }
+        let _ = signals.send(sig);
+    } else {
+        *duplicate_signals += 1;
+    }
+}

@@ -1,0 +1,233 @@
+//! Fault-domain cluster serving (ISSUE 8): M logical engine instances,
+//! each a full replica of the supervised Magnus core (own adaptive
+//! batcher, serving-time estimator, continuous learner, memory budget,
+//! engine slots), fronted by a router that places every admitted request
+//! by *predicted* generation length ([`route::RoutePolicy`]).
+//!
+//! Robustness machinery on top of placement:
+//!
+//! - **Heartbeat health checks** — every `hb_interval_s` the router
+//!   probes each instance; consecutive misses walk Up → Suspect → Dead
+//!   (`suspect_after` misses).  Kill windows and partition windows
+//!   (`FaultPlan::{instance_dead, instance_partitioned}`) both fail the
+//!   probe.
+//! - **Failover** — declaring an instance Dead drains its queued batches
+//!   plus leader-side copies of its in-flight batches back through the
+//!   router under a per-request retry budget (`FaultPlan::max_retries`);
+//!   exhausted requests are shed *explicitly*.
+//! - **Partition semantics** — a partitioned instance keeps serving but
+//!   cannot ack: its completions are deferred to the partition-window
+//!   end.  Because failover may have re-run those requests elsewhere,
+//!   the cluster ledger resolves duplicates first-terminal-wins.
+//! - **Work stealing** — an idle instance with an empty queue pulls the
+//!   heaviest queued batch (predicted tokens) from the most backlogged
+//!   peer, re-bucketing its requests locally; ids move, never copy, so
+//!   stealing can never duplicate a request.
+//!
+//! Exactly-once ledger, the cluster-level invariant (debug-asserted on
+//! every run): `offered == completed + shed + expired` summed across
+//! instances, under any fault schedule.  Both entry points hold it: the
+//! discrete-event sim ([`sim::run_cluster_store`], deterministic and
+//! seed-replayable — an M=1 cluster under a no-instance-fault plan is
+//! bit-identical to the single-instance core) and the live threaded path
+//! ([`live::serve_cluster_ingress_sim`]).
+
+pub mod live;
+pub mod route;
+pub mod sim;
+
+pub use live::{serve_cluster_ingress_sim, ClusterReport};
+pub use route::{
+    parse_route_policy, JoinShortestPredictedQueue, LengthPartitioned, NodeLoad,
+    PowerOfTwoChoices, RoundRobin, RoutePolicy, RouteRequest, ROUTE_POLICY_NAMES,
+};
+pub use sim::{run_cluster_store, ClusterOutput, NodeOutput};
+
+use std::collections::HashSet;
+
+use crate::metrics::RunMetrics;
+
+/// Cluster-level knobs shared by the sim and live paths.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Logical engine instances behind the router (M ≥ 1).
+    pub n_nodes: usize,
+    /// Heartbeat probe period (simulated seconds in the DES path,
+    /// replayed seconds in the live path).
+    pub hb_interval_s: f64,
+    /// Consecutive missed heartbeats before an instance is declared
+    /// Dead (1 = first miss kills it; 2 = one Suspect beat first).
+    pub suspect_after: u32,
+    /// Work stealing fires when the most backlogged peer's queued
+    /// predicted tokens reach this threshold (0 disables stealing).
+    pub steal_threshold_tokens: u64,
+    /// Salt for stateless routing draws (power-of-two-choices).
+    pub route_seed: u64,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            n_nodes: 4,
+            hb_interval_s: 1.0,
+            suspect_after: 2,
+            steal_threshold_tokens: 64,
+            route_seed: 0x524f_5554,
+        }
+    }
+}
+
+/// First-terminal-wins exactly-once ledger: every offered request id
+/// resolves to exactly one terminal state (completed or shed); later
+/// terminals for the same id — e.g. a partitioned instance's deferred
+/// completion racing its failover re-run — count as duplicate acks and
+/// mutate nothing.
+#[derive(Debug, Default)]
+pub struct ClusterLedger {
+    terminal: HashSet<u64>,
+    /// Unique completions.
+    pub completed: usize,
+    /// Unique explicit sheds.
+    pub shed: usize,
+    /// Terminal signals for already-resolved ids (duplicate-delivery
+    /// pressure under partitions; 0 under kill-only schedules).
+    pub duplicate_acks: u64,
+}
+
+impl ClusterLedger {
+    /// Record a completion; true iff this id was not yet terminal.
+    pub fn complete(&mut self, id: u64) -> bool {
+        if self.terminal.insert(id) {
+            self.completed += 1;
+            true
+        } else {
+            self.duplicate_acks += 1;
+            false
+        }
+    }
+
+    /// Record an explicit shed; true iff this id was not yet terminal.
+    pub fn shed(&mut self, id: u64) -> bool {
+        if self.terminal.insert(id) {
+            self.shed += 1;
+            true
+        } else {
+            self.duplicate_acks += 1;
+            false
+        }
+    }
+
+    pub fn is_terminal(&self, id: u64) -> bool {
+        self.terminal.contains(&id)
+    }
+
+    /// Requests resolved to a terminal state so far.
+    pub fn resolved(&self) -> usize {
+        self.completed + self.shed
+    }
+}
+
+/// Instance health as seen by the router's heartbeat checker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Up,
+    /// Missed at least one heartbeat but not yet declared.
+    Suspect,
+    /// Declared dead; carries the failure mode so rejoin knows whether
+    /// the instance rebooted (kill → slots reset) or merely re-connected
+    /// (partition → in-flight work drains via deferred acks).
+    Dead(DeadCause),
+}
+
+/// Why an instance was declared Dead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadCause {
+    /// Kill window: the instance lost all state and reboots at window
+    /// end.
+    Kill,
+    /// Partition window: the instance kept serving but could not ack.
+    Partition,
+}
+
+/// Merge per-instance collectors plus cluster-level counters into one
+/// [`RunMetrics`] (instance order, record order within an instance).
+/// For an M=1 cluster this reproduces the single-instance collector
+/// bit-for-bit.
+pub(crate) fn merge_metrics(
+    nodes: &[RunMetrics],
+    shed_ids: &[u64],
+    fallback_predictions: u32,
+) -> RunMetrics {
+    let mut m = RunMetrics::new();
+    for nm in nodes {
+        for r in &nm.records {
+            m.record(r.clone());
+        }
+        m.oom_events += nm.oom_events;
+        m.retries += nm.retries;
+        m.worker_restarts += nm.worker_restarts;
+        m.rebucketed += nm.rebucketed;
+        m.injected_faults += nm.injected_faults;
+        m.mispredict.merge(&nm.mispredict);
+    }
+    m.fallback_predictions = fallback_predictions;
+    for &id in shed_ids {
+        m.record_shed(id);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_is_first_terminal_wins() {
+        let mut l = ClusterLedger::default();
+        assert!(l.complete(1));
+        assert!(!l.complete(1), "second completion is a duplicate ack");
+        assert!(!l.shed(1), "shed after completion is a duplicate ack");
+        assert!(l.shed(2));
+        assert!(!l.complete(2), "completion after shed is a duplicate ack");
+        assert_eq!(l.completed, 1);
+        assert_eq!(l.shed, 2 - 1);
+        assert_eq!(l.duplicate_acks, 3);
+        assert_eq!(l.resolved(), 2);
+        assert!(l.is_terminal(1) && l.is_terminal(2) && !l.is_terminal(3));
+    }
+
+    #[test]
+    fn merge_metrics_folds_counters_and_sheds() {
+        use crate::metrics::RequestRecord;
+        let mut a = RunMetrics::new();
+        a.record_prediction(10, 10);
+        a.record(RequestRecord {
+            request_id: 1,
+            arrival: 0.0,
+            finish: 1.0,
+            valid_tokens: 4,
+            invalid_tokens: 0,
+        });
+        a.retries = 2;
+        let mut b = RunMetrics::new();
+        b.record_prediction(10, 90);
+        b.record(RequestRecord {
+            request_id: 2,
+            arrival: 0.5,
+            finish: 3.0,
+            valid_tokens: 7,
+            invalid_tokens: 1,
+        });
+        b.oom_events = 1;
+        let m = merge_metrics(&[a, b], &[9], 3);
+        assert_eq!(m.records.len(), 2);
+        assert_eq!(m.retries, 2);
+        assert_eq!(m.oom_events, 1);
+        assert_eq!(m.fallback_predictions, 3);
+        assert_eq!(m.shed, vec![9]);
+        assert_eq!(m.mispredict.predictions, 2);
+        assert_eq!(m.mispredict.mispredicted, 1);
+        assert_eq!(m.first_arrival, 0.0);
+        assert_eq!(m.last_finish, 3.0);
+    }
+}

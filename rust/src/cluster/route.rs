@@ -1,0 +1,273 @@
+//! Prediction-aware request routing for the M-instance cluster (ISSUE 8).
+//!
+//! The router places each admitted request on one logical engine instance
+//! using its *predicted* generation length — the same signal Magnus uses
+//! for batching (PAPER §III-B) pushed one layer up, in the spirit of
+//! length-aware slice scheduling (arXiv:2406.13511).  All policies are
+//! deterministic functions of `(policy state, request id, node loads)` so
+//! cluster runs replay bit-identically under a fixed seed.
+//!
+//! Policies only ever see [`NodeLoad`] snapshots — queued work plus
+//! in-flight predicted tokens — never engine internals, so the same trait
+//! object drives both the discrete-event sim and the live threaded path.
+
+/// The routing-visible identity of one admitted request.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteRequest {
+    /// Stable request id (ties fault hashes and the cluster ledger).
+    pub id: u64,
+    /// Predicted generation length (tokens) from the shared predictor.
+    pub predicted: u32,
+}
+
+/// Router-visible load snapshot for one logical instance.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeLoad {
+    /// False once the health checker has declared the instance Dead
+    /// (Suspect instances still receive traffic until declared).
+    pub alive: bool,
+    /// Requests sitting in the instance's adaptive-batcher queue.
+    pub queued_requests: usize,
+    /// Sum of predicted generation lengths over queued + in-flight
+    /// requests — the "predicted-token load" the paper's length signal
+    /// makes visible to placement.
+    pub backlog_tokens: u64,
+}
+
+/// One placement policy behind the cluster router.  `route` returns the
+/// chosen instance index, or `None` when no listed instance is alive
+/// (the router then sheds the request explicitly).
+pub trait RoutePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn route(&mut self, req: &RouteRequest, loads: &[NodeLoad]) -> Option<usize>;
+}
+
+/// Baseline: rotate over instances, skipping dead ones.  Ignores the
+/// prediction entirely — the control every prediction-aware policy must
+/// beat on goodput or p99 (ISSUE 8 acceptance).
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &RouteRequest, loads: &[NodeLoad]) -> Option<usize> {
+        let m = loads.len();
+        for _ in 0..m {
+            let i = self.cursor % m;
+            self.cursor = (self.cursor + 1) % m;
+            if loads[i].alive {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Join-shortest-predicted-queue: argmin over alive instances of
+/// predicted backlog tokens (ties → fewer queued requests → lowest
+/// index).  The predicted-token metric is what distinguishes this from
+/// classic JSQ: a queue of 3 long-generation requests loses to a queue
+/// of 5 short ones.
+#[derive(Debug, Default)]
+pub struct JoinShortestPredictedQueue;
+
+impl RoutePolicy for JoinShortestPredictedQueue {
+    fn name(&self) -> &'static str {
+        "jspq"
+    }
+
+    fn route(&mut self, _req: &RouteRequest, loads: &[NodeLoad]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, l) in loads.iter().enumerate() {
+            if !l.alive {
+                continue;
+            }
+            best = Some(match best {
+                None => i,
+                Some(b) => {
+                    let cur = (loads[b].backlog_tokens, loads[b].queued_requests);
+                    let cand = (l.backlog_tokens, l.queued_requests);
+                    if cand < cur {
+                        i
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best
+    }
+}
+
+/// splitmix64 finalizer — same stateless-hash construction the fault
+/// plan uses, kept local so routing draws never perturb fault draws.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Power-of-two-choices over predicted-token load: two stateless draws
+/// keyed on `(seed, request id)` pick candidate instances; the lighter
+/// predicted backlog wins (ties → lower index).  Stateless draws keep
+/// replay bit-identical regardless of arrival interleaving.
+#[derive(Debug)]
+pub struct PowerOfTwoChoices {
+    pub seed: u64,
+}
+
+impl RoutePolicy for PowerOfTwoChoices {
+    fn name(&self) -> &'static str {
+        "p2c"
+    }
+
+    fn route(&mut self, req: &RouteRequest, loads: &[NodeLoad]) -> Option<usize> {
+        let alive: Vec<usize> = (0..loads.len()).filter(|&i| loads[i].alive).collect();
+        match alive.len() {
+            0 => None,
+            1 => Some(alive[0]),
+            n => {
+                let a = alive[(mix64(self.seed ^ req.id.wrapping_mul(0xa24b_aed4_963e_e407)) % n as u64) as usize];
+                let b = alive[(mix64(self.seed ^ req.id.wrapping_mul(0x9fb2_1c65_1e98_df25).wrapping_add(1)) % n as u64) as usize];
+                let (la, lb) = (loads[a].backlog_tokens, loads[b].backlog_tokens);
+                if lb < la || (lb == la && b < a) {
+                    Some(b)
+                } else {
+                    Some(a)
+                }
+            }
+        }
+    }
+}
+
+/// Length-partitioned placement (slice scheduling, arXiv:2406.13511):
+/// the predicted-length range `[0, g_max]` is split into equal bands,
+/// one per alive instance, so short requests never queue behind long
+/// ones on the same node.  Band index maps onto alive instances in
+/// index order; dead instances shrink the band set.
+#[derive(Debug)]
+pub struct LengthPartitioned {
+    pub g_max: u32,
+}
+
+impl RoutePolicy for LengthPartitioned {
+    fn name(&self) -> &'static str {
+        "length-partitioned"
+    }
+
+    fn route(&mut self, req: &RouteRequest, loads: &[NodeLoad]) -> Option<usize> {
+        let alive: Vec<usize> = (0..loads.len()).filter(|&i| loads[i].alive).collect();
+        if alive.is_empty() {
+            return None;
+        }
+        let span = u64::from(self.g_max) + 1;
+        let band = (u64::from(req.predicted.min(self.g_max)) * alive.len() as u64) / span;
+        Some(alive[(band as usize).min(alive.len() - 1)])
+    }
+}
+
+/// Canonical policy names, in bench/CLI order.
+pub const ROUTE_POLICY_NAMES: [&str; 4] = ["rr", "jspq", "p2c", "band"];
+
+/// Parse a CLI/bench policy name into a boxed policy.  `seed` salts the
+/// p2c draws; `g_max` bounds the length-partitioned bands.
+pub fn parse_route_policy(name: &str, seed: u64, g_max: u32) -> Option<Box<dyn RoutePolicy>> {
+    match name {
+        "rr" | "round-robin" => Some(Box::new(RoundRobin::default())),
+        "jspq" | "jsq" | "shortest" => Some(Box::new(JoinShortestPredictedQueue)),
+        "p2c" | "power2" => Some(Box::new(PowerOfTwoChoices { seed })),
+        "band" | "length" | "slice" => Some(Box::new(LengthPartitioned { g_max })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(spec: &[(bool, u64)]) -> Vec<NodeLoad> {
+        spec.iter()
+            .map(|&(alive, backlog_tokens)| NodeLoad {
+                alive,
+                queued_requests: backlog_tokens as usize,
+                backlog_tokens,
+            })
+            .collect()
+    }
+
+    fn req(id: u64, predicted: u32) -> RouteRequest {
+        RouteRequest { id, predicted }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut rr = RoundRobin::default();
+        let l = loads(&[(true, 0), (false, 0), (true, 0)]);
+        assert_eq!(rr.route(&req(1, 10), &l), Some(0));
+        assert_eq!(rr.route(&req(2, 10), &l), Some(2));
+        assert_eq!(rr.route(&req(3, 10), &l), Some(0));
+        let dead = loads(&[(false, 0), (false, 0)]);
+        assert_eq!(rr.route(&req(4, 10), &dead), None);
+    }
+
+    #[test]
+    fn jspq_prefers_lightest_predicted_backlog() {
+        let mut p = JoinShortestPredictedQueue;
+        let l = loads(&[(true, 90), (true, 40), (true, 40), (false, 0)]);
+        // 1 and 2 tie on backlog and queued — lowest index wins.
+        assert_eq!(p.route(&req(1, 10), &l), Some(1));
+        assert_eq!(p.route(&req(2, 10), &loads(&[(false, 0), (true, 7)])), Some(1));
+        assert_eq!(p.route(&req(3, 10), &loads(&[(false, 0)])), None);
+    }
+
+    #[test]
+    fn p2c_is_deterministic_and_respects_liveness() {
+        let mut p = PowerOfTwoChoices { seed: 42 };
+        let l = loads(&[(true, 10), (true, 20), (true, 30), (true, 5)]);
+        let first = p.route(&req(7, 10), &l);
+        for _ in 0..5 {
+            assert_eq!(p.route(&req(7, 10), &l), first, "stateless draws replay");
+        }
+        // Single alive instance short-circuits.
+        assert_eq!(p.route(&req(7, 10), &loads(&[(false, 0), (true, 9)])), Some(1));
+        assert_eq!(p.route(&req(7, 10), &loads(&[(false, 0)])), None);
+        // The chosen node is never the heavier of the two candidates:
+        // with every node dead except the lightest two, it picks one of them.
+        let skew = loads(&[(true, 0), (true, 1_000_000)]);
+        for id in 0..64 {
+            let got = p.route(&req(id, 10), &skew).unwrap();
+            assert!(got < 2);
+        }
+    }
+
+    #[test]
+    fn length_partitioned_bands_split_short_from_long() {
+        let mut p = LengthPartitioned { g_max: 64 };
+        let l = loads(&[(true, 0), (true, 0), (true, 0), (true, 0)]);
+        assert_eq!(p.route(&req(1, 0), &l), Some(0));
+        assert_eq!(p.route(&req(2, 16), &l), Some(0));
+        assert_eq!(p.route(&req(3, 17), &l), Some(1));
+        assert_eq!(p.route(&req(4, 64), &l), Some(3));
+        // predictions above g_max clamp into the top band
+        assert_eq!(p.route(&req(5, 10_000), &l), Some(3));
+        // dead nodes shrink the band set: two alive → two bands
+        let l2 = loads(&[(true, 0), (false, 0), (true, 0), (false, 0)]);
+        assert_eq!(p.route(&req(6, 10), &l2), Some(0));
+        assert_eq!(p.route(&req(7, 60), &l2), Some(2));
+    }
+
+    #[test]
+    fn parse_covers_every_policy_name() {
+        for name in ROUTE_POLICY_NAMES {
+            let p = parse_route_policy(name, 1, 64).unwrap();
+            assert!(!p.name().is_empty());
+        }
+        assert!(parse_route_policy("nope", 1, 64).is_none());
+    }
+}

@@ -1,0 +1,906 @@
+//! Discrete-event cluster simulator (ISSUE 8): M replicas of the
+//! single-instance Magnus event loop (`sim::run_magnus_store_faulted`)
+//! behind a prediction-aware router, with heartbeat health checks,
+//! kill/partition failover, slow-instance stall scaling and mispredict-
+//! imbalance work stealing.
+//!
+//! Determinism contract: every run is a pure function of `(cfg, policy,
+//! predictor, store, plan, options, routing policy)` — fault draws are
+//! stateless hashes, routing draws are stateless hashes, leader-side
+//! in-flight copies live in a `BTreeMap` so failover drains in slot
+//! order, and the event queue breaks time ties by insertion sequence.
+//! Replays are bit-identical.
+//!
+//! M=1 reduction: with one node and a plan carrying no instance-level
+//! axes, the router degenerates to a constant, no heartbeats are
+//! scheduled, work stealing has no peers, and the per-node loop executes
+//! the exact event sequence of the single-instance core — outputs are
+//! bit-for-bit identical (asserted by `tests/cluster.rs`).
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
+use crate::cluster::route::{NodeLoad, RoutePolicy, RouteRequest};
+use crate::cluster::{merge_metrics, ClusterLedger, ClusterOptions, DeadCause, Health};
+use crate::config::ServingConfig;
+use crate::engine::faulty::{FaultyEngine, InjectedOutcome};
+use crate::engine::{BatchOutcome, InferenceEngine};
+use crate::estimator::ServingTimeEstimator;
+use crate::faults::FaultPlan;
+use crate::learning::ContinuousLearner;
+use crate::logdb::{BatchLog, LogDb, RequestLog};
+use crate::metrics::{RequestRecord, RunMetrics};
+use crate::predictor::{predict_degraded, GenLenPredictor};
+use crate::sim::events::EventQueue;
+use crate::sim::{MagnusPolicy, OOM_RELOAD_S};
+use crate::workload::{PredictedRequest, RequestView, TraceStore};
+
+enum Event {
+    Arrival(usize),
+    /// A node's engine slot finished serving a batch.  `epoch` is the
+    /// node incarnation at dispatch: completions from before a kill
+    /// declaration are dropped as stale (their requests were failed
+    /// over).
+    BatchDone {
+        node: usize,
+        slot: usize,
+        epoch: u32,
+        batch: Batch,
+        est: f64,
+        outcome: BatchOutcome,
+    },
+    /// An engine slot came back (OOM reload, crash backoff, kill-window
+    /// reboot).
+    SlotReady { node: usize, slot: usize, epoch: u32 },
+    /// Router heartbeat tick: probe every node, walk the Up → Suspect →
+    /// Dead machine, fail over / rejoin.  Only scheduled when the plan
+    /// carries instance-level axes.
+    Heartbeat,
+}
+
+/// One logical engine instance: a full replica of the single-instance
+/// serving state.
+struct Node {
+    batcher: AdaptiveBatcher,
+    estimator: ServingTimeEstimator,
+    learner: ContinuousLearner,
+    db: LogDb,
+    metrics: RunMetrics,
+    est_errors: Vec<(f64, f64)>,
+    /// Engine-retry attempt counters (fault-hash salts), per batch id.
+    attempts: HashMap<u64, u32>,
+    /// Per-slot restart counts (crash backoff exponents).
+    slot_restarts: Vec<u32>,
+    idle: VecDeque<usize>,
+    /// Leader-side copies of batches currently being served, by slot —
+    /// what failover re-runs when the node dies mid-serve.  BTreeMap so
+    /// draining is slot-ordered (deterministic replay).
+    in_flight: BTreeMap<usize, Batch>,
+    /// Incarnation counter: bumped when a kill is declared, so stale
+    /// completions/slot-returns from the dead incarnation are dropped.
+    epoch: u32,
+    health: Health,
+    misses: u32,
+}
+
+impl Node {
+    fn new(cfg: &ServingConfig, policy: &MagnusPolicy) -> Node {
+        Node {
+            batcher: AdaptiveBatcher::new(BatcherConfig {
+                wma_threshold: cfg.wma_threshold,
+                theta: (cfg.gpu.theta() as f64 * cfg.mem_margin) as u64,
+                delta: cfg.gpu.delta_bytes_per_token,
+                max_batch_size: policy.max_batch_size,
+            }),
+            estimator: ServingTimeEstimator::new(cfg.knn_k),
+            learner: ContinuousLearner::new(cfg.learning.clone()),
+            db: LogDb::new(),
+            metrics: RunMetrics::new(),
+            est_errors: Vec::new(),
+            attempts: HashMap::new(),
+            slot_restarts: vec![0; cfg.n_instances],
+            idle: (0..cfg.n_instances).collect(),
+            in_flight: BTreeMap::new(),
+            epoch: 0,
+            health: Health::Up,
+            misses: 0,
+        }
+    }
+
+    fn is_declared_dead(&self) -> bool {
+        matches!(self.health, Health::Dead(_))
+    }
+}
+
+/// Per-instance slice of a cluster run's output.
+pub struct NodeOutput {
+    pub metrics: RunMetrics,
+    pub db: LogDb,
+    /// (time, |estimated − actual|) per batch served on this instance.
+    pub est_errors: Vec<(f64, f64)>,
+}
+
+/// Result of a cluster run.  The exactly-once identity
+/// `offered == completed + shed + expired` holds under any fault
+/// schedule (debug-asserted before returning).
+pub struct ClusterOutput {
+    pub nodes: Vec<NodeOutput>,
+    /// (time, |predicted − actual|) per admitted request, router-side.
+    pub pred_errors: Vec<(f64, f64)>,
+    /// Requests offered to the router (the whole trace).
+    pub offered: usize,
+    /// Unique completions across instances.
+    pub completed: usize,
+    /// Unique explicit sheds (retry budget exhausted, or no instance
+    /// alive to take the request).
+    pub shed: usize,
+    /// Deadline expiries — always 0 in the sim (no deadline axis here);
+    /// kept so the ledger identity reads the same as the live path's.
+    pub expired: usize,
+    /// Terminal signals for already-resolved ids (partition replays).
+    pub duplicate_acks: u64,
+    /// Work-stealing transfers (batches moved between instances).
+    pub steals: u64,
+    /// Requests re-routed by failover.
+    pub reroutes: u64,
+    /// Dead declarations.
+    pub failovers: u32,
+    /// Dead instances that later rejoined.
+    pub rejoins: u32,
+    /// Detection latency per failover: heartbeat declaration time minus
+    /// fault-window start.
+    pub recovery_samples: Vec<f64>,
+    /// Admissions predicted by the fallback chain (router-side).
+    pub fallback_predictions: u32,
+    /// Unique shed request ids, in shed order.
+    pub shed_ids: Vec<u64>,
+}
+
+impl ClusterOutput {
+    /// Cluster-wide collector: per-instance records and counters merged
+    /// in instance order plus router-side sheds/fallbacks.  For M=1
+    /// this is bit-identical to the single-instance collector.
+    pub fn merged_metrics(&self) -> RunMetrics {
+        let ms: Vec<RunMetrics> = self.nodes.iter().map(|n| n.metrics.clone()).collect();
+        merge_metrics(&ms, &self.shed_ids, self.fallback_predictions)
+    }
+
+    /// Does the exactly-once ledger close?
+    pub fn accounted(&self) -> bool {
+        self.offered == self.completed + self.shed + self.expired
+    }
+
+    /// Max per-instance completions over the per-instance mean (1.0 =
+    /// perfectly balanced; 0 completions → 1.0).
+    pub fn imbalance_ratio(&self) -> f64 {
+        if self.completed == 0 || self.nodes.is_empty() {
+            return 1.0;
+        }
+        let max = self
+            .nodes
+            .iter()
+            .map(|n| n.metrics.records.len())
+            .max()
+            .unwrap_or(0) as f64;
+        let mean = self.completed as f64 / self.nodes.len() as f64;
+        max / mean
+    }
+
+    /// Mean failover detection latency (0.0 when no failover fired).
+    pub fn mean_recovery_s(&self) -> f64 {
+        if self.recovery_samples.is_empty() {
+            0.0
+        } else {
+            self.recovery_samples.iter().sum::<f64>() / self.recovery_samples.len() as f64
+        }
+    }
+}
+
+/// Instance-stall scaling that stays bit-exact when no window is open
+/// (`f == 1.0` must not touch the value).
+#[inline]
+fn scale(t: f64, f: f64) -> f64 {
+    if f == 1.0 {
+        t
+    } else {
+        t * f
+    }
+}
+
+/// Router-visible load snapshot (queued + in-flight predicted tokens).
+fn node_loads(nodes: &[Node]) -> Vec<NodeLoad> {
+    nodes
+        .iter()
+        .map(|nd| {
+            let mut tokens = 0u64;
+            for b in nd.batcher.queue() {
+                for pr in &b.requests {
+                    tokens += u64::from(pr.predicted_gen_len);
+                }
+            }
+            for b in nd.in_flight.values() {
+                for pr in &b.requests {
+                    tokens += u64::from(pr.predicted_gen_len);
+                }
+            }
+            NodeLoad {
+                alive: !nd.is_declared_dead(),
+                queued_requests: nd.batcher.queued_requests(),
+                backlog_tokens: tokens,
+            }
+        })
+        .collect()
+}
+
+/// Run the cluster over an interned trace.  `route_policy` is consulted
+/// once per admitted request (and again per failed-over request copy).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cluster_store(
+    cfg: &ServingConfig,
+    policy: &MagnusPolicy,
+    mut predictor: GenLenPredictor,
+    engine: &dyn InferenceEngine,
+    store: &TraceStore,
+    plan: &FaultPlan,
+    copts: &ClusterOptions,
+    route_policy: &mut dyn RoutePolicy,
+) -> ClusterOutput {
+    let m = copts.n_nodes.max(1);
+    let mut nodes: Vec<Node> = (0..m).map(|_| Node::new(cfg, policy)).collect();
+    let faulty = FaultyEngine::new(engine, plan);
+    let g_max = cfg.gpu.g_max;
+    let ifaults = plan.has_instance_faults();
+    let slots_per_node = cfg.n_instances;
+
+    let mut events: EventQueue<Event> = EventQueue::new();
+    for (i, meta) in store.metas().iter().enumerate() {
+        events.push(meta.arrival, Event::Arrival(i));
+    }
+    if ifaults && store.len() > 0 {
+        events.push(copts.hb_interval_s, Event::Heartbeat);
+    }
+
+    let mut ledger = ClusterLedger::default();
+    let mut shed_ids: Vec<u64> = Vec::new();
+    let mut failover_attempts: HashMap<u64, u32> = HashMap::new();
+    let mut pred_errors: Vec<(f64, f64)> = Vec::new();
+    let mut recovery_samples: Vec<f64> = Vec::new();
+    let mut fallback_predictions = 0u32;
+    let (mut steals, mut reroutes) = (0u64, 0u64);
+    let (mut failovers, mut rejoins) = (0u32, 0u32);
+
+    // Scratch buffers reused across events.
+    let mut arrivals: Vec<usize> = Vec::new();
+    let mut arrival_views: Vec<RequestView> = Vec::new();
+    let mut preds: Vec<u32> = Vec::new();
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Arrival(i) => {
+                // Same-timestamp arrival draining + batched prediction,
+                // exactly as the single-instance core does it.
+                arrivals.clear();
+                arrivals.push(i);
+                loop {
+                    match events.peek() {
+                        Some((t, Event::Arrival(j))) if t == now => {
+                            arrivals.push(*j);
+                            events.pop();
+                        }
+                        _ => break,
+                    }
+                }
+                arrival_views.clear();
+                arrival_views.extend(arrivals.iter().map(|&k| store.view(k)));
+                if plan.has_predictor_faults() {
+                    preds.clear();
+                    for v in &arrival_views {
+                        let outage = plan.predictor_outage(now);
+                        let (p, fell_back) = predict_degraded(&mut predictor, outage, v, g_max);
+                        if fell_back {
+                            fallback_predictions += 1;
+                            preds.push(p);
+                        } else {
+                            preds.push(plan.noisy_prediction(p, v.id, g_max));
+                        }
+                    }
+                } else {
+                    predictor.predict_many_views(&arrival_views, &mut preds);
+                }
+                for (k, &ti) in arrivals.iter().enumerate() {
+                    let meta = store.meta(ti);
+                    let predicted = preds[k];
+                    pred_errors.push((now, (predicted as f64 - meta.gen_len as f64).abs()));
+                    let loads = node_loads(&nodes);
+                    let req = RouteRequest {
+                        id: meta.id,
+                        predicted,
+                    };
+                    match route_policy.route(&req, &loads) {
+                        Some(j) => {
+                            nodes[j].batcher.insert(
+                                PredictedRequest {
+                                    meta,
+                                    predicted_gen_len: predicted,
+                                },
+                                now,
+                            );
+                            dispatch_node(
+                                now,
+                                j,
+                                &mut nodes[j],
+                                policy,
+                                &faulty,
+                                plan,
+                                ifaults,
+                                g_max,
+                                &mut events,
+                                &mut ledger,
+                                &mut shed_ids,
+                            );
+                        }
+                        None => {
+                            // No instance alive: shed explicitly at the
+                            // router, never silently dropped.
+                            if ledger.shed(meta.id) {
+                                shed_ids.push(meta.id);
+                            }
+                        }
+                    }
+                }
+            }
+            Event::BatchDone {
+                node: n,
+                slot,
+                epoch,
+                batch,
+                est,
+                outcome,
+            } => {
+                if ifaults && plan.instance_dead(n, now) {
+                    // The instance died mid-serve: the completion is
+                    // lost.  Retry/shed locally (short kill windows that
+                    // dodge every heartbeat must still resolve); the
+                    // slot reboots at window end.  If the death was
+                    // already declared (stale epoch), the requests were
+                    // failed over and the slots reset at rejoin — drop.
+                    if epoch == nodes[n].epoch {
+                        nodes[n].in_flight.remove(&slot);
+                        retry_or_shed_node(plan, &mut nodes[n], &mut ledger, &mut shed_ids, batch);
+                        let end = plan.kill_end(n, now).unwrap_or(now);
+                        events.push(end, Event::SlotReady { node: n, slot, epoch });
+                    }
+                } else if ifaults && plan.instance_partitioned(n, now) {
+                    // Partitioned: served but cannot ack — defer the
+                    // completion to the partition-window end.  Failover
+                    // may re-run these requests elsewhere meanwhile; the
+                    // ledger resolves duplicates first-terminal-wins.
+                    let end = plan.partition_end(n, now).unwrap_or(now);
+                    events.push(
+                        end,
+                        Event::BatchDone {
+                            node: n,
+                            slot,
+                            epoch,
+                            batch,
+                            est,
+                            outcome,
+                        },
+                    );
+                } else if epoch != nodes[n].epoch {
+                    // Stale completion from a killed incarnation: its
+                    // requests were failed over at declaration.
+                } else {
+                    nodes[n].in_flight.remove(&slot);
+                    match outcome {
+                        BatchOutcome::Completed {
+                            serving_time,
+                            per_request,
+                        } => {
+                            for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                                if ledger.complete(pr.meta.id) {
+                                    nodes[n]
+                                        .metrics
+                                        .record_prediction(pr.predicted_gen_len, pr.meta.gen_len);
+                                    nodes[n].metrics.record(RequestRecord {
+                                        request_id: sr.request_id,
+                                        arrival: pr.meta.arrival,
+                                        finish: now,
+                                        valid_tokens: sr.valid_tokens,
+                                        invalid_tokens: sr.invalid_tokens,
+                                    });
+                                    nodes[n].db.log_request(RequestLog {
+                                        meta: pr.meta,
+                                        predicted_gen_len: pr.predicted_gen_len,
+                                        actual_gen_len: pr.meta.gen_len,
+                                        at: now,
+                                    });
+                                }
+                            }
+                            nodes[n].est_errors.push((now, (est - serving_time).abs()));
+                            nodes[n].db.log_batch(BatchLog {
+                                shape: batch.true_shape(),
+                                estimated_time: est,
+                                actual_time: serving_time,
+                                at: now,
+                            });
+                            if policy.use_estimator {
+                                let node = &mut nodes[n];
+                                node.learner.tick(
+                                    now,
+                                    &node.db,
+                                    &mut predictor,
+                                    &mut node.estimator,
+                                    store,
+                                );
+                            }
+                        }
+                        BatchOutcome::Oom { .. } => {
+                            unreachable!("OOM resolved at dispatch")
+                        }
+                    }
+                    nodes[n].idle.push_back(slot);
+                }
+            }
+            Event::SlotReady { node: n, slot, epoch } => {
+                if ifaults && plan.instance_dead(n, now) {
+                    // Slot return lands inside a kill window: defer to
+                    // the reboot at window end.
+                    let end = plan.kill_end(n, now).unwrap_or(now);
+                    events.push(end, Event::SlotReady { node: n, slot, epoch });
+                } else if epoch == nodes[n].epoch {
+                    nodes[n].idle.push_back(slot);
+                }
+            }
+            Event::Heartbeat => {
+                for n in 0..m {
+                    let dead_now = plan.instance_dead(n, now);
+                    let miss = dead_now || plan.instance_partitioned(n, now);
+                    if miss {
+                        nodes[n].misses += 1;
+                        if nodes[n].is_declared_dead() {
+                            continue;
+                        }
+                        if nodes[n].misses < copts.suspect_after {
+                            nodes[n].health = Health::Suspect;
+                            continue;
+                        }
+                        // Declare Dead and fail over.
+                        let cause = if dead_now {
+                            DeadCause::Kill
+                        } else {
+                            DeadCause::Partition
+                        };
+                        nodes[n].health = Health::Dead(cause);
+                        failovers += 1;
+                        let win_start = match cause {
+                            DeadCause::Kill => plan
+                                .inst_kills
+                                .iter()
+                                .filter(|k| k.instance == n && k.window.contains(now))
+                                .map(|k| k.window.start)
+                                .fold(f64::INFINITY, f64::min),
+                            DeadCause::Partition => plan
+                                .inst_partitions
+                                .iter()
+                                .filter(|p| p.instance == n && p.window.contains(now))
+                                .map(|p| p.window.start)
+                                .fold(f64::INFINITY, f64::min),
+                        };
+                        if win_start.is_finite() {
+                            recovery_samples.push(now - win_start);
+                        }
+                        // Drain queued batches; a kill also forfeits the
+                        // in-flight incarnation (epoch bump), a
+                        // partition re-runs copies and dedups later.
+                        let mut drained: Vec<Batch> = Vec::new();
+                        while !nodes[n].batcher.is_empty() {
+                            drained.push(nodes[n].batcher.take(0));
+                        }
+                        match cause {
+                            DeadCause::Kill => {
+                                nodes[n].epoch += 1;
+                                let inflight = std::mem::take(&mut nodes[n].in_flight);
+                                drained.extend(inflight.into_values());
+                            }
+                            DeadCause::Partition => {
+                                drained.extend(nodes[n].in_flight.values().cloned());
+                            }
+                        }
+                        for b in drained {
+                            for pr in b.requests {
+                                if ledger.is_terminal(pr.meta.id) {
+                                    continue;
+                                }
+                                let fa = failover_attempts.entry(pr.meta.id).or_insert(0);
+                                *fa += 1;
+                                if *fa > plan.max_retries {
+                                    if ledger.shed(pr.meta.id) {
+                                        shed_ids.push(pr.meta.id);
+                                    }
+                                    continue;
+                                }
+                                let loads = node_loads(&nodes);
+                                let req = RouteRequest {
+                                    id: pr.meta.id,
+                                    predicted: pr.predicted_gen_len,
+                                };
+                                match route_policy.route(&req, &loads) {
+                                    Some(j) => {
+                                        nodes[j].batcher.insert(pr, now);
+                                        reroutes += 1;
+                                    }
+                                    None => {
+                                        if ledger.shed(pr.meta.id) {
+                                            shed_ids.push(pr.meta.id);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    } else {
+                        if let Health::Dead(cause) = nodes[n].health {
+                            rejoins += 1;
+                            if cause == DeadCause::Kill {
+                                // Reboot: fresh slots, empty engine.
+                                nodes[n].idle = (0..slots_per_node).collect();
+                                nodes[n].in_flight.clear();
+                            }
+                        }
+                        nodes[n].health = Health::Up;
+                        nodes[n].misses = 0;
+                    }
+                }
+                // The heartbeat chain is the cluster's liveness driver:
+                // keep ticking while any request is unresolved.
+                if ledger.resolved() < store.len() {
+                    events.push(now + copts.hb_interval_s, Event::Heartbeat);
+                }
+            }
+        }
+
+        // Dispatch every node while slots are idle and batches queued.
+        for n in 0..m {
+            dispatch_node(
+                now,
+                n,
+                &mut nodes[n],
+                policy,
+                &faulty,
+                plan,
+                ifaults,
+                g_max,
+                &mut events,
+                &mut ledger,
+                &mut shed_ids,
+            );
+        }
+        // Mispredict-imbalance work stealing: idle instances pull the
+        // heaviest queued batch from the most backlogged peer.
+        if copts.steal_threshold_tokens > 0 && m > 1 {
+            while let Some(thief) =
+                steal_once(now, &mut nodes, plan, ifaults, copts.steal_threshold_tokens)
+            {
+                steals += 1;
+                dispatch_node(
+                    now,
+                    thief,
+                    &mut nodes[thief],
+                    policy,
+                    &faulty,
+                    plan,
+                    ifaults,
+                    g_max,
+                    &mut events,
+                    &mut ledger,
+                    &mut shed_ids,
+                );
+            }
+        }
+    }
+
+    debug_assert_eq!(
+        ledger.completed + ledger.shed,
+        store.len(),
+        "cluster exactly-once ledger must close under any fault schedule: \
+         offered == completed + shed (+ expired, always 0 in the sim)"
+    );
+    debug_assert_eq!(
+        nodes.iter().map(|nd| nd.metrics.records.len()).sum::<usize>(),
+        ledger.completed,
+        "per-instance records must sum to the ledger's unique completions"
+    );
+
+    ClusterOutput {
+        nodes: nodes
+            .into_iter()
+            .map(|nd| NodeOutput {
+                metrics: nd.metrics,
+                db: nd.db,
+                est_errors: nd.est_errors,
+            })
+            .collect(),
+        pred_errors,
+        offered: store.len(),
+        completed: ledger.completed,
+        shed: ledger.shed,
+        expired: 0,
+        duplicate_acks: ledger.duplicate_acks,
+        steals,
+        reroutes,
+        failovers,
+        rejoins,
+        recovery_samples,
+        fallback_predictions,
+        shed_ids,
+    }
+}
+
+/// Per-node dispatch loop — the cluster counterpart of the
+/// single-instance `dispatch_idle` (Indexed mode), plus the kill-window
+/// guard, leader-side in-flight copies and instance-stall scaling.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_node(
+    now: f64,
+    n: usize,
+    node: &mut Node,
+    policy: &MagnusPolicy,
+    faulty: &FaultyEngine<'_>,
+    plan: &FaultPlan,
+    ifaults: bool,
+    g_max: u32,
+    events: &mut EventQueue<Event>,
+    ledger: &mut ClusterLedger,
+    shed_ids: &mut Vec<u64>,
+) {
+    if ifaults && (plan.instance_dead(n, now) || node.is_declared_dead()) {
+        return;
+    }
+    while !node.idle.is_empty() && !node.batcher.is_empty() {
+        let (pick, est) = {
+            let estimator = &node.estimator;
+            node.batcher
+                .select_indexed(policy.sched, now, estimator.generation(), |shape| {
+                    estimator.estimate(shape)
+                })
+                .unwrap()
+        };
+        let batch = node.batcher.take(pick);
+        let slot = node.idle.pop_front().unwrap();
+        let epoch = node.epoch;
+
+        if plan.is_noop() {
+            // Legacy path, byte-for-byte: the M=1 equivalence suite
+            // replays fault-free runs through here.
+            match faulty.inner().serve_batch(&batch) {
+                BatchOutcome::Oom {
+                    at_iteration: _,
+                    wasted_time,
+                } => {
+                    node.metrics.record_oom();
+                    let nid = node.batcher.alloc_id();
+                    let (l, r) = batch.split(nid);
+                    node.batcher.requeue(l);
+                    node.batcher.requeue(r);
+                    events.push(
+                        now + wasted_time + OOM_RELOAD_S,
+                        Event::SlotReady { node: n, slot, epoch },
+                    );
+                }
+                done @ BatchOutcome::Completed { .. } => {
+                    let serving_time = match &done {
+                        BatchOutcome::Completed { serving_time, .. } => *serving_time,
+                        _ => unreachable!(),
+                    };
+                    node.in_flight.insert(slot, batch.clone());
+                    events.push(
+                        now + serving_time,
+                        Event::BatchDone {
+                            node: n,
+                            slot,
+                            epoch,
+                            batch,
+                            est,
+                            outcome: done,
+                        },
+                    );
+                }
+            }
+            continue;
+        }
+
+        let attempt = node.attempts.get(&batch.id).copied().unwrap_or(0);
+        let slow = if ifaults {
+            plan.instance_stall(n, now)
+        } else {
+            1.0
+        };
+        match faulty.serve_batch_at(now, &batch, u64::from(attempt)) {
+            InjectedOutcome::Crash { wasted_time } => {
+                node.metrics.injected_faults += 1;
+                let backoff = plan.restart_backoff(node.slot_restarts[slot]);
+                node.slot_restarts[slot] += 1;
+                node.metrics.worker_restarts += 1;
+                retry_or_shed_node(plan, node, ledger, shed_ids, batch);
+                events.push(
+                    now + scale(wasted_time, slow) + backoff,
+                    Event::SlotReady { node: n, slot, epoch },
+                );
+            }
+            InjectedOutcome::TransientError { wasted_time } => {
+                node.metrics.injected_faults += 1;
+                retry_or_shed_node(plan, node, ledger, shed_ids, batch);
+                events.push(
+                    now + scale(wasted_time, slow),
+                    Event::SlotReady { node: n, slot, epoch },
+                );
+            }
+            InjectedOutcome::Outcome {
+                outcome:
+                    BatchOutcome::Oom {
+                        at_iteration,
+                        wasted_time,
+                    },
+                forced,
+            } => {
+                node.metrics.record_oom();
+                if forced {
+                    node.metrics.injected_faults += 1;
+                }
+                requeue_oom_node(plan, node, ledger, shed_ids, batch, at_iteration, g_max);
+                events.push(
+                    now + scale(wasted_time, slow) + OOM_RELOAD_S,
+                    Event::SlotReady { node: n, slot, epoch },
+                );
+            }
+            InjectedOutcome::Outcome {
+                outcome:
+                    BatchOutcome::Completed {
+                        serving_time,
+                        per_request,
+                    },
+                ..
+            } => {
+                // Slow-instance windows stretch the wall-clock serve
+                // (factor 1.0 leaves the float untouched).
+                let serving_time = scale(serving_time, slow);
+                node.in_flight.insert(slot, batch.clone());
+                events.push(
+                    now + serving_time,
+                    Event::BatchDone {
+                        node: n,
+                        slot,
+                        epoch,
+                        batch,
+                        est,
+                        outcome: BatchOutcome::Completed {
+                            serving_time,
+                            per_request,
+                        },
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Bounded-retry policy for a batch lost to a crash/error/kill on one
+/// node — like the single-instance `retry_or_shed`, but sheds go
+/// through the cluster ledger (an id completed elsewhere must not be
+/// double-counted).
+fn retry_or_shed_node(
+    plan: &FaultPlan,
+    node: &mut Node,
+    ledger: &mut ClusterLedger,
+    shed_ids: &mut Vec<u64>,
+    batch: Batch,
+) {
+    let attempt = node.attempts.entry(batch.id).or_insert(0);
+    *attempt += 1;
+    if *attempt > plan.max_retries {
+        for pr in &batch.requests {
+            if ledger.shed(pr.meta.id) {
+                shed_ids.push(pr.meta.id);
+            }
+        }
+    } else {
+        node.metrics.retries += 1;
+        node.batcher.requeue(batch);
+    }
+}
+
+/// OOM re-queue on one node — the single-instance `requeue_oom` against
+/// the node's own batcher and the cluster ledger.
+fn requeue_oom_node(
+    plan: &FaultPlan,
+    node: &mut Node,
+    ledger: &mut ClusterLedger,
+    shed_ids: &mut Vec<u64>,
+    mut batch: Batch,
+    at_iteration: u32,
+    g_max: u32,
+) {
+    if batch.size() < 2 {
+        batch.insertable = false;
+        retry_or_shed_node(plan, node, ledger, shed_ids, batch);
+        return;
+    }
+    let nid = node.batcher.alloc_id();
+    let batch = if plan.overrun_guard {
+        match batch.split_overrun(nid, at_iteration, g_max) {
+            Ok((l, r)) => {
+                node.metrics.rebucketed += r.size();
+                node.batcher.requeue(l);
+                node.batcher.requeue(r);
+                return;
+            }
+            Err(b) => b,
+        }
+    } else {
+        batch
+    };
+    let (l, r) = batch.split(nid);
+    node.batcher.requeue(l);
+    node.batcher.requeue(r);
+}
+
+/// One work-stealing transfer: the first alive instance with an idle
+/// slot and an empty queue pulls the heaviest (predicted tokens)
+/// insertable batch from the most backlogged alive peer, provided that
+/// peer's queued predicted tokens reach `threshold`.  Requests *move*
+/// (`take` then re-insert), so stealing can never duplicate an id.
+/// Returns the thief's index so the caller can run its dispatch loop.
+fn steal_once(
+    now: f64,
+    nodes: &mut [Node],
+    plan: &FaultPlan,
+    ifaults: bool,
+    threshold: u64,
+) -> Option<usize> {
+    let alive =
+        |i: usize, nd: &Node| !nd.is_declared_dead() && !(ifaults && plan.instance_dead(i, now));
+    let thief = nodes
+        .iter()
+        .enumerate()
+        .position(|(i, nd)| alive(i, nd) && !nd.idle.is_empty() && nd.batcher.is_empty())?;
+    let mut victim: Option<(usize, u64)> = None;
+    for (i, nd) in nodes.iter().enumerate() {
+        if i == thief || !alive(i, nd) {
+            continue;
+        }
+        let mut tokens = 0u64;
+        let mut has_insertable = false;
+        for b in nd.batcher.queue() {
+            if b.insertable {
+                has_insertable = true;
+            }
+            for pr in &b.requests {
+                tokens += u64::from(pr.predicted_gen_len);
+            }
+        }
+        if has_insertable && tokens >= threshold && victim.map_or(true, |(_, best)| tokens > best) {
+            victim = Some((i, tokens));
+        }
+    }
+    let (v, _) = victim?;
+    let mut pick: Option<(usize, u64)> = None;
+    for (i, b) in nodes[v].batcher.queue().iter().enumerate() {
+        if !b.insertable {
+            continue;
+        }
+        let t: u64 = b
+            .requests
+            .iter()
+            .map(|pr| u64::from(pr.predicted_gen_len))
+            .sum();
+        if pick.map_or(true, |(_, best)| t > best) {
+            pick = Some((i, t));
+        }
+    }
+    let (bi, _) = pick?;
+    let batch = nodes[v].batcher.take(bi);
+    for pr in batch.requests {
+        nodes[thief].batcher.insert(pr, now);
+    }
+    Some(thief)
+}

@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 use crate::config::ServingConfig;
 use crate::faults::FaultPlan;
 use crate::http::{HttpConfig, HttpRequest, HttpResponse, HttpServer};
-use crate::metrics::{Histogram, RunMetrics};
+use crate::metrics::{Histogram, MispredictGauge, RunMetrics};
 use crate::predictor::GenLenPredictor;
 use crate::server::{serve_ingress_sim, CoreSignal, EdgeJob, LivePolicy, ServeOptions};
 use crate::util::Json;
@@ -92,6 +92,9 @@ enum Reply {
 struct Waiter {
     tx: mpsc::Sender<Reply>,
     start: Instant,
+    /// Predicted generation length at admission — compared against the
+    /// completion's valid tokens by the socket-level mispredict gauge.
+    predicted: u32,
 }
 
 /// Mutable edge state, one lock: admission math is microseconds per
@@ -120,6 +123,8 @@ struct Shared {
     bad_requests: AtomicU64,
     /// Wall-clock latency of *completed* requests.
     latency: Mutex<Histogram>,
+    /// |predicted − actual| bucket error of completed requests.
+    mispredict: Mutex<MispredictGauge>,
 }
 
 impl Shared {
@@ -139,6 +144,8 @@ pub struct EdgeReport {
     pub bad_requests: u64,
     /// Wall latency of completed requests (edge clock).
     pub latency: Histogram,
+    /// Socket-level mispredict gauge over completed requests.
+    pub mispredict: MispredictGauge,
     /// The core's own run metrics (replayed clock).
     pub core: RunMetrics,
     pub http_accepted: u64,
@@ -217,6 +224,7 @@ impl EdgeServer {
             core_shed: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
             latency: Mutex::new(Histogram::default()),
+            mispredict: Mutex::new(MispredictGauge::default()),
         });
 
         let core = {
@@ -320,6 +328,7 @@ impl EdgeServer {
             core_shed: sh.core_shed.load(Ordering::Relaxed),
             bad_requests: sh.bad_requests.load(Ordering::Relaxed),
             latency: sh.latency.lock().unwrap().clone(),
+            mispredict: sh.mispredict.lock().unwrap().clone(),
             core,
             http_accepted,
             http_over_cap,
@@ -373,6 +382,9 @@ fn route_signals(signals: mpsc::Receiver<CoreSignal>, shared: &Shared) {
                         .lock()
                         .unwrap()
                         .observe(w.start.elapsed().as_secs_f64());
+                    // valid_tokens IS the actual generation length the
+                    // core produced — the socket-level mispredict signal.
+                    shared.mispredict.lock().unwrap().record(w.predicted, valid_tokens);
                     let _ = w.tx.send(Reply::Done { valid_tokens, invalid_tokens });
                 }
                 pump_and_expire(&mut ctl, shared);
@@ -474,7 +486,7 @@ fn handle_generate(shared: &Shared, req: &HttpRequest) -> HttpResponse {
         match ctl.admission.offer(id, predicted, deadline, now) {
             Offer::Forward => {
                 let (tx, rx) = mpsc::channel();
-                ctl.waiters.insert(id, Waiter { tx, start: Instant::now() });
+                ctl.waiters.insert(id, Waiter { tx, start: Instant::now(), predicted });
                 let sent = match &ctl.jobs {
                     Some(jtx) => jtx.send(EdgeJob { meta, predicted_gen_len: predicted }).is_ok(),
                     None => false,
@@ -496,7 +508,7 @@ fn handle_generate(shared: &Shared, req: &HttpRequest) -> HttpResponse {
                     }
                 }
                 let (tx, rx) = mpsc::channel();
-                ctl.waiters.insert(id, Waiter { tx, start: Instant::now() });
+                ctl.waiters.insert(id, Waiter { tx, start: Instant::now(), predicted });
                 ctl.queued.insert(id, (meta, predicted));
                 (rx, id)
             }
@@ -586,5 +598,12 @@ fn render_metrics(shared: &Shared) -> String {
     line("latency_p99_seconds", format!("{p99:.6}"));
     line("goodput_rps", format!("{goodput:.3}"));
     line("uptime_seconds", format!("{elapsed:.3}"));
+    let gauge = shared.mispredict.lock().unwrap().clone();
+    line("predictions_total", gauge.predictions.to_string());
+    line("mispredict_total", gauge.mispredicted.to_string());
+    line("mispredict_rate", format!("{:.6}", gauge.rate()));
+    for (d, count) in gauge.bins.iter().enumerate() {
+        line(&format!("mispredict_bucket_error_{d}_total"), count.to_string());
+    }
     out
 }

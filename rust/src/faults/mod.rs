@@ -89,6 +89,36 @@ pub struct PredictorNoise {
     pub jitter: f64,
 }
 
+/// Cluster-level fault (ISSUE 8): instance `instance` is dead for the
+/// whole window — it serves nothing, fails heartbeats, and its queued +
+/// in-flight work must fail over through the router.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstKill {
+    pub instance: usize,
+    pub window: Window,
+}
+
+/// Cluster-level fault: instance `instance` serves `factor`× slower
+/// inside the window (a degraded-but-alive straggler; overlapping
+/// windows on the same instance compound).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstSlow {
+    pub instance: usize,
+    pub window: Window,
+    pub factor: f64,
+}
+
+/// Cluster-level fault: instance `instance` keeps serving inside the
+/// window but its completions stop reaching the router until the window
+/// closes (a network partition: work is not lost, acks are late — the
+/// router may have failed the requests over in the meantime, so late
+/// duplicates must be deduplicated at the cluster ledger).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstPartition {
+    pub instance: usize,
+    pub window: Window,
+}
+
 /// A seeded, replayable fault schedule.  [`FaultPlan::none`] is the
 /// explicit no-fault plan; consumers treat it as "run the legacy path
 /// byte-for-byte" (checked by [`FaultPlan::is_noop`]).
@@ -123,6 +153,12 @@ pub struct FaultPlan {
     pub slow_client_p: f64,
     /// How long a slow client stalls before finishing its write (s).
     pub slow_client_delay_s: f64,
+    /// Cluster axes (ISSUE 8): whole-instance kill windows.
+    pub inst_kills: Vec<InstKill>,
+    /// Cluster axes: slow-instance stall windows.
+    pub inst_slows: Vec<InstSlow>,
+    /// Cluster axes: partition (stop-acking) windows.
+    pub inst_partitions: Vec<InstPartition>,
 }
 
 /// Fault-kind salts for the decision hash (distinct streams per axis).
@@ -164,6 +200,9 @@ impl FaultPlan {
             conn_drop_p: 0.0,
             slow_client_p: 0.0,
             slow_client_delay_s: 0.05,
+            inst_kills: Vec::new(),
+            inst_slows: Vec::new(),
+            inst_partitions: Vec::new(),
         }
     }
 
@@ -178,6 +217,65 @@ impl FaultPlan {
             && !self.overrun_guard
             && self.conn_drop_p <= 0.0
             && self.slow_client_p <= 0.0
+            && !self.has_instance_faults()
+    }
+
+    /// True when the plan carries any cluster-level (whole-instance)
+    /// fault axis — the cluster router branches off its legacy
+    /// fast path on this, mirroring [`FaultPlan::is_noop`].
+    pub fn has_instance_faults(&self) -> bool {
+        !self.inst_kills.is_empty()
+            || !self.inst_slows.is_empty()
+            || !self.inst_partitions.is_empty()
+    }
+
+    /// Is cluster instance `i` inside one of its kill windows at `now`?
+    /// A dead instance serves nothing and fails its heartbeats.
+    pub fn instance_dead(&self, i: usize, now: f64) -> bool {
+        self.inst_kills
+            .iter()
+            .any(|k| k.instance == i && k.window.contains(now))
+    }
+
+    /// Product of every open slow-instance factor for instance `i`
+    /// (1.0 when none is open) — composes with the engine-level
+    /// [`FaultPlan::stall_factor`].
+    pub fn instance_stall(&self, i: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for s in &self.inst_slows {
+            if s.instance == i && s.window.contains(now) {
+                f *= s.factor;
+            }
+        }
+        f
+    }
+
+    /// Is cluster instance `i` partitioned (serving but not acking) at
+    /// `now`?
+    pub fn instance_partitioned(&self, i: usize, now: f64) -> bool {
+        self.inst_partitions
+            .iter()
+            .any(|p| p.instance == i && p.window.contains(now))
+    }
+
+    /// End of the partition window covering instance `i` at `now` (when
+    /// its deferred acks will be delivered).
+    pub fn partition_end(&self, i: usize, now: f64) -> Option<f64> {
+        self.inst_partitions
+            .iter()
+            .filter(|p| p.instance == i && p.window.contains(now))
+            .map(|p| p.window.end)
+            .fold(None, |acc, e| Some(acc.map_or(e, |a: f64| a.max(e))))
+    }
+
+    /// End of the kill window covering instance `i` at `now` (when the
+    /// instance reboots and its slots come back online).
+    pub fn kill_end(&self, i: usize, now: f64) -> Option<f64> {
+        self.inst_kills
+            .iter()
+            .filter(|k| k.instance == i && k.window.contains(now))
+            .map(|k| k.window.end)
+            .fold(None, |acc, e| Some(acc.map_or(e, |a: f64| a.max(e))))
     }
 
     /// True when admission must route predictions through the fallback/
@@ -290,8 +388,11 @@ impl FaultPlan {
     /// `oom=A..B@P`, `predoff=A..B[:heuristic|:max]` (default heuristic),
     /// `noise=BIAS@JITTER`, `retries=N`, `restarts=N`, `backoff=S`,
     /// `conndrop=P`, `slowclient=P@DELAY_S` (client-side socket
-    /// adversity), and the bare flag `guard` (overrun re-bucketing on
-    /// OOM).
+    /// adversity), the cluster axes `ikill=I:A..B` (instance I dead in
+    /// window), `islow=I:A..B@FACTOR` (instance I slowed) and
+    /// `ipart=I:A..B` (instance I partitioned — serving, not acking;
+    /// each may repeat to accumulate windows), and the bare flag `guard`
+    /// (overrun re-bucketing on OOM).
     pub fn parse_spec(spec: &str) -> anyhow::Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -336,6 +437,29 @@ impl FaultPlan {
                     plan.predictor_noise = Some(PredictorNoise {
                         bias: num(bias)?,
                         jitter: num(jitter)?,
+                    });
+                }
+                "ikill" => {
+                    let (instance, rest) = inst_of(val)?;
+                    plan.inst_kills.push(InstKill {
+                        instance,
+                        window: window_of(rest)?,
+                    });
+                }
+                "islow" => {
+                    let (instance, rest) = inst_of(val)?;
+                    let (window, factor) = window_at(rest)?;
+                    plan.inst_slows.push(InstSlow {
+                        instance,
+                        window,
+                        factor,
+                    });
+                }
+                "ipart" => {
+                    let (instance, rest) = inst_of(val)?;
+                    plan.inst_partitions.push(InstPartition {
+                        instance,
+                        window: window_of(rest)?,
                     });
                 }
                 "conndrop" => plan.conn_drop_p = num(val)?,
@@ -416,6 +540,46 @@ impl FaultPlan {
             ("conn_drop_p", Json::num(self.conn_drop_p)),
             ("slow_client_p", Json::num(self.slow_client_p)),
             ("slow_client_delay_s", Json::num(self.slow_client_delay_s)),
+            (
+                "inst_kills",
+                Json::Arr(
+                    self.inst_kills
+                        .iter()
+                        .map(|k| {
+                            let mut f = win(&k.window);
+                            f.push(("instance", Json::num(k.instance as f64)));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "inst_slows",
+                Json::Arr(
+                    self.inst_slows
+                        .iter()
+                        .map(|s| {
+                            let mut f = win(&s.window);
+                            f.push(("instance", Json::num(s.instance as f64)));
+                            f.push(("factor", Json::num(s.factor)));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "inst_partitions",
+                Json::Arr(
+                    self.inst_partitions
+                        .iter()
+                        .map(|p| {
+                            let mut f = win(&p.window);
+                            f.push(("instance", Json::num(p.instance as f64)));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -479,6 +643,31 @@ impl FaultPlan {
         plan.slow_client_p = j.get("slow_client_p").as_f64().unwrap_or(plan.slow_client_p);
         plan.slow_client_delay_s =
             j.get("slow_client_delay_s").as_f64().unwrap_or(plan.slow_client_delay_s);
+        if let Some(xs) = j.get("inst_kills").as_arr() {
+            for x in xs {
+                plan.inst_kills.push(InstKill {
+                    instance: req_usize(x, "instance")?,
+                    window: window_json(x)?,
+                });
+            }
+        }
+        if let Some(xs) = j.get("inst_slows").as_arr() {
+            for x in xs {
+                plan.inst_slows.push(InstSlow {
+                    instance: req_usize(x, "instance")?,
+                    window: window_json(x)?,
+                    factor: req_f64(x, "factor")?,
+                });
+            }
+        }
+        if let Some(xs) = j.get("inst_partitions").as_arr() {
+            for x in xs {
+                plan.inst_partitions.push(InstPartition {
+                    instance: req_usize(x, "instance")?,
+                    window: window_json(x)?,
+                });
+            }
+        }
         Ok(plan)
     }
 }
@@ -514,6 +703,24 @@ fn window_json(x: &Json) -> anyhow::Result<Window> {
 
 fn req_f64(x: &Json, key: &str) -> anyhow::Result<f64> {
     x.get(key).as_f64().ok_or_else(|| anyhow::anyhow!("fault plan JSON missing `{key}`"))
+}
+
+fn req_usize(x: &Json, key: &str) -> anyhow::Result<usize> {
+    x.get(key)
+        .as_u64()
+        .map(|v| v as usize)
+        .ok_or_else(|| anyhow::anyhow!("fault plan JSON missing `{key}`"))
+}
+
+/// Parse `I:rest` into an instance index plus the remaining spec.
+fn inst_of(s: &str) -> anyhow::Result<(usize, &str)> {
+    let (i, rest) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("bad instance fault `{s}` (want I:A..B)"))?;
+    let idx = i
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("bad instance index `{i}` in fault spec"))?;
+    Ok((idx, rest))
 }
 
 #[cfg(test)]
@@ -628,10 +835,53 @@ mod tests {
     }
 
     #[test]
+    fn instance_axes_window_semantics() {
+        let mut plan = FaultPlan::none();
+        plan.inst_kills.push(InstKill {
+            instance: 1,
+            window: Window::new(10.0, 20.0),
+        });
+        plan.inst_slows.push(InstSlow {
+            instance: 0,
+            window: Window::new(5.0, 15.0),
+            factor: 3.0,
+        });
+        plan.inst_slows.push(InstSlow {
+            instance: 0,
+            window: Window::new(10.0, 25.0),
+            factor: 2.0,
+        });
+        plan.inst_partitions.push(InstPartition {
+            instance: 2,
+            window: Window::new(30.0, 40.0),
+        });
+        assert!(!plan.is_noop(), "instance axes count as faults");
+        assert!(plan.has_instance_faults());
+        // kill gates on (instance, window)
+        assert!(!plan.instance_dead(1, 9.9) && plan.instance_dead(1, 10.0));
+        assert!(plan.instance_dead(1, 19.9) && !plan.instance_dead(1, 20.0));
+        assert!(!plan.instance_dead(0, 12.0), "other instances unaffected");
+        // slow factors compound per instance
+        assert_eq!(plan.instance_stall(0, 7.0), 3.0);
+        assert_eq!(plan.instance_stall(0, 12.0), 6.0);
+        assert_eq!(plan.instance_stall(0, 20.0), 2.0);
+        assert_eq!(plan.instance_stall(1, 12.0), 1.0);
+        // partition + deferred-ack delivery time
+        assert!(plan.instance_partitioned(2, 35.0) && !plan.instance_partitioned(2, 40.0));
+        assert_eq!(plan.partition_end(2, 35.0), Some(40.0));
+        assert_eq!(plan.partition_end(2, 45.0), None);
+        assert_eq!(plan.partition_end(0, 35.0), None);
+        // kill window end (instance reboot time)
+        assert_eq!(plan.kill_end(1, 12.0), Some(20.0));
+        assert_eq!(plan.kill_end(1, 25.0), None);
+    }
+
+    #[test]
     fn spec_parses_every_axis() {
         let plan = FaultPlan::parse_spec(
             "seed=7,crash=0.1,err=0.05,stall=10..40@3,oom=0..100@0.2,predoff=5..25:max,\
-             noise=8@0.5,retries=2,restarts=6,backoff=0.1,conndrop=0.2,slowclient=0.1@0.4,guard",
+             noise=8@0.5,retries=2,restarts=6,backoff=0.1,conndrop=0.2,slowclient=0.1@0.4,\
+             ikill=1:10..20,islow=0:5..15@3,ipart=2:30..40,ikill=3:50..60,guard",
         )
         .unwrap();
         assert_eq!(plan.seed, 7);
@@ -649,8 +899,26 @@ mod tests {
         assert!(plan.overrun_guard);
         assert_eq!(plan.conn_drop_p, 0.2);
         assert_eq!((plan.slow_client_p, plan.slow_client_delay_s), (0.1, 0.4));
+        assert_eq!(
+            plan.inst_kills,
+            vec![
+                InstKill { instance: 1, window: Window::new(10.0, 20.0) },
+                InstKill { instance: 3, window: Window::new(50.0, 60.0) },
+            ],
+            "repeated keys accumulate"
+        );
+        assert_eq!(
+            plan.inst_slows,
+            vec![InstSlow { instance: 0, window: Window::new(5.0, 15.0), factor: 3.0 }]
+        );
+        assert_eq!(
+            plan.inst_partitions,
+            vec![InstPartition { instance: 2, window: Window::new(30.0, 40.0) }]
+        );
         assert!(FaultPlan::parse_spec("nope=1").is_err());
         assert!(FaultPlan::parse_spec("stall=banana").is_err());
+        assert!(FaultPlan::parse_spec("ikill=10..20").is_err(), "missing instance index");
+        assert!(FaultPlan::parse_spec("islow=x:1..2@3").is_err());
         assert_eq!(FaultPlan::parse_spec("").unwrap(), FaultPlan::none());
     }
 
@@ -658,7 +926,7 @@ mod tests {
     fn json_roundtrip_preserves_plan() {
         let plan = FaultPlan::parse_spec(
             "seed=11,crash=0.2,err=0.1,stall=1..2@4,oom=3..4@0.5,predoff=5..6,noise=2@0.25,\
-             conndrop=0.3,slowclient=0.2@0.05,guard",
+             conndrop=0.3,slowclient=0.2@0.05,ikill=0:1..2,islow=1:2..3@5,ipart=2:4..6,guard",
         )
         .unwrap();
         let back = FaultPlan::from_json(&plan.to_json()).unwrap();

@@ -24,6 +24,7 @@
 
 pub mod baselines;
 pub mod batch;
+pub mod cluster;
 pub mod config;
 pub mod edge;
 pub mod embedding;

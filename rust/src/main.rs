@@ -6,6 +6,11 @@
 //!   serve-sim  replay a workload through the supervised cluster over the
 //!              cost-model backend (no artifacts needed) — accepts a
 //!              deterministic fault plan for chaos drills
+//!   serve-cluster  route a workload over M engine instances by predicted
+//!              generation length (rr|jspq|p2c|band), with heartbeat
+//!              health checks and prediction-aware failover; the default
+//!              discrete-event run is deterministic and seed-replayable,
+//!              `--live` drives M supervised cores over real threads
 //!   sim        run a policy over a synthetic workload on the calibrated
 //!              cost-model engine (V100-scale, fast)
 //!   gen-trace  write a workload trace (JSON, or the binary format when
@@ -21,6 +26,8 @@
 //!   magnus sim --policy magnus --fault-plan "seed=7,crash=0.1,oom=0..50@0.2"
 //!   magnus serve --workers 2 --requests 20 --time-scale 20
 //!   magnus serve-sim --workers 2 --requests 100 --fault-plan plan.json
+//!   magnus serve-cluster --instances 4 --route jspq --rate 16 --requests 600 \
+//!       --fault-plan "ikill=1:40..90,islow=2:20..80@6"
 //!   magnus serve-edge --addr 127.0.0.1:8080 --duration 30 --token-budget 4096
 //!   magnus load-gen --addr 127.0.0.1:8080 --rps 200 --requests 2000 \
 //!       --burst 2@4 --fault-plan "seed=3,conndrop=0.05,slowclient=0.05@0.2"
@@ -39,7 +46,7 @@ use magnus::util::Json;
 use magnus::workload::dataset::build_predictor_split;
 use magnus::workload::{generate_trace, LlmProfile, TraceSpec, TraceStore};
 
-const USAGE: &str = "magnus <serve|serve-sim|serve-edge|load-gen|sim|gen-trace|pack-trace|eval-pred> [options]
+const USAGE: &str = "magnus <serve|serve-sim|serve-cluster|serve-edge|load-gen|sim|gen-trace|pack-trace|eval-pred> [options]
   common:    --config <file.json>  --seed N
   sim:       --policy VS|VSQ|CCB|GLP|ABP|Magnus  --rate R --requests N --train N
              [--fault-plan file.json|spec]
@@ -48,6 +55,9 @@ const USAGE: &str = "magnus <serve|serve-sim|serve-edge|load-gen|sim|gen-trace|p
              [--fault-plan file.json|spec]
   serve-sim: --policy magnus|vanilla --workers N --rate R --requests N
              --time-scale S --g-max N --l-cap N [--fault-plan file.json|spec]
+  serve-cluster: --instances M --route rr|jspq|p2c|band --rate R --requests N
+             --hb-interval S --suspect-after N --steal-threshold TOKENS
+             [--live --workers N --time-scale S] [--fault-plan file.json|spec]
   serve-edge: --addr H:P --workers N --time-scale S --duration SECS
              --queue-cap N --token-budget T --rps-limit R --deadline SECS
              [--trace file.json|file.mtr] [--fault-plan file.json|spec]
@@ -59,7 +69,8 @@ const USAGE: &str = "magnus <serve|serve-sim|serve-edge|load-gen|sim|gen-trace|p
   eval-pred: --train N --test N
   fault-plan spec: seed=N,crash=P,err=P,stall=A..B@F,oom=A..B@P,guard,
              predoff=A..B[:heuristic|:max],noise=BIAS@JITTER,
-             retries=N,restarts=N,backoff=S,conndrop=P,slowclient=P@DELAY";
+             retries=N,restarts=N,backoff=S,conndrop=P,slowclient=P@DELAY,
+             ikill=I:A..B,islow=I:A..B@F,ipart=I:A..B (instance axes)";
 
 fn main() {
     if let Err(e) = run() {
@@ -69,7 +80,7 @@ fn main() {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::parse_env(&["help", "warm-up"]).map_err(anyhow::Error::msg)?;
+    let args = Args::parse_env(&["help", "warm-up", "live"]).map_err(anyhow::Error::msg)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let mut cfg = ServingConfig::load(args.get("config"))?;
     if let Some(seed) = args.get("seed") {
@@ -124,6 +135,7 @@ fn run() -> anyhow::Result<()> {
         }
         "serve" => cmd_serve(&args, &mut cfg)?,
         "serve-sim" => cmd_serve_sim(&args, &mut cfg)?,
+        "serve-cluster" => cmd_serve_cluster(&args, &mut cfg)?,
         "serve-edge" => cmd_serve_edge(&args, &mut cfg)?,
         "load-gen" => cmd_load_gen(&args)?,
         "gen-trace" => {
@@ -348,6 +360,196 @@ fn cmd_serve_sim(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
         s.retries,
         s.worker_restarts,
         s.fallback_predictions
+    );
+    Ok(())
+}
+
+/// Route a workload over M logical engine instances by predicted
+/// generation length, with heartbeat health checks, failover, and work
+/// stealing.  Default is the deterministic discrete-event path; `--live`
+/// drives M supervised cost-model cores over real threads.
+fn cmd_serve_cluster(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
+    use magnus::cluster::{parse_route_policy, ClusterOptions, ROUTE_POLICY_NAMES};
+    use magnus::engine::cost::CostModelEngine;
+    use magnus::sim::MagnusPolicy;
+
+    let g_max = args.get_u64("g-max", 64) as u32;
+    let l_cap = args.get_u64("l-cap", 80) as u32;
+    cfg.gpu.g_max = g_max;
+    let store = TraceStore::generate(&TraceSpec {
+        rate: args.get_f64("rate", 8.0),
+        n_requests: args.get_usize("requests", 400),
+        g_max,
+        l_cap,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let plan = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::load(spec)?,
+        None => FaultPlan::none(),
+    };
+    let copts = ClusterOptions {
+        n_nodes: args.get_usize("instances", 4),
+        hb_interval_s: args.get_f64("hb-interval", 1.0),
+        suspect_after: args.get_u64("suspect-after", 2) as u32,
+        steal_threshold_tokens: args.get_u64("steal-threshold", 64),
+        route_seed: cfg.seed ^ 0x524f_5554,
+    };
+    let route_name = args.get_or("route", "jspq").to_ascii_lowercase();
+    let mut route = parse_route_policy(&route_name, copts.route_seed, g_max)
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown route policy {route_name:?} (one of {ROUTE_POLICY_NAMES:?})")
+        })?;
+
+    let split = build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
+    let mut predictor = GenLenPredictor::new(Variant::Usin, cfg);
+    predictor.train(&split.train);
+
+    if args.flag("live") {
+        return cmd_serve_cluster_live(args, cfg, &copts, route.as_mut(), plan, predictor, store);
+    }
+
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let policy = MagnusPolicy::magnus();
+    let out = magnus::cluster::run_cluster_store(
+        cfg,
+        &policy,
+        predictor,
+        &engine,
+        &store,
+        &plan,
+        &copts,
+        route.as_mut(),
+    );
+    let s = out.merged_metrics().summarise();
+    println!(
+        "serve-cluster {route_name} x{}: offered {} | completed {} | shed {} | \
+         dup-acks {} | accounted: {}",
+        copts.n_nodes, out.offered, out.completed, out.shed, out.duplicate_acks,
+        out.accounted(),
+    );
+    println!(
+        "  goodput {:.3} req/s | RT mean {:.2}s p50 {:.2}s p95 {:.2}s p99 {:.2}s \
+         | imbalance {:.2} (simulated seconds)",
+        s.request_throughput,
+        s.mean_response_time,
+        s.p50_response_time,
+        s.p95_response_time,
+        s.p99_response_time,
+        out.imbalance_ratio(),
+    );
+    println!(
+        "  failovers {} (mean recovery {:.2}s) | rejoins {} | reroutes {} | \
+         steals {} | retries {} | restarts {} | fallback preds {} | mispredict {:.3}",
+        out.failovers,
+        out.mean_recovery_s(),
+        out.rejoins,
+        out.reroutes,
+        out.steals,
+        s.retries,
+        s.worker_restarts,
+        s.fallback_predictions,
+        s.mispredict_rate,
+    );
+    Ok(())
+}
+
+/// `serve-cluster --live`: feed the trace through real threads — M
+/// supervised cost-model cores behind the in-process router.
+fn cmd_serve_cluster_live(
+    args: &Args,
+    cfg: &ServingConfig,
+    copts: &magnus::cluster::ClusterOptions,
+    route: &mut dyn magnus::cluster::RoutePolicy,
+    plan: FaultPlan,
+    mut predictor: GenLenPredictor,
+    store: TraceStore,
+) -> anyhow::Result<()> {
+    use std::sync::{mpsc, Arc};
+    use std::time::Instant;
+
+    use magnus::cluster::serve_cluster_ingress_sim;
+    use magnus::server::{EdgeJob, LivePolicy, ServeOptions};
+    use magnus::sim::MagnusPolicy;
+    use magnus::util::time::clamped_duration;
+
+    let opts = ServeOptions {
+        n_workers: args.get_usize("workers", 2),
+        time_scale: args.get_f64("time-scale", 50.0),
+        fault_plan: plan,
+        ..Default::default()
+    };
+    let time_scale = opts.time_scale.max(1e-9);
+    let store = Arc::new(store);
+
+    // Predict every request up front (the edge would do this at admission).
+    let mut preds = Vec::with_capacity(store.len());
+    {
+        let views: Vec<_> = (0..store.len()).map(|i| store.view(i)).collect();
+        predictor.predict_many_views(&views, &mut preds);
+    }
+
+    let (jtx, jrx) = mpsc::channel::<EdgeJob>();
+    let (stx, srx) = mpsc::channel();
+    let feeder = {
+        let store = Arc::clone(&store);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            for (i, meta) in store.metas().iter().enumerate() {
+                let due = clamped_duration(meta.arrival / time_scale);
+                let elapsed = t0.elapsed();
+                if due > elapsed {
+                    std::thread::sleep(due - elapsed);
+                }
+                if jtx
+                    .send(EdgeJob {
+                        meta: *meta,
+                        predicted_gen_len: preds[i],
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        })
+    };
+    let make_policy = || LivePolicy::Magnus(MagnusPolicy::magnus());
+    let report = serve_cluster_ingress_sim(
+        cfg,
+        &opts,
+        copts,
+        &make_policy,
+        route,
+        jrx,
+        stx,
+        Arc::clone(&store),
+    )?;
+    feeder.join().ok();
+    // Drain the edge-facing signal channel (no HTTP layer here).
+    let mut signals = 0usize;
+    while srx.try_recv().is_ok() {
+        signals += 1;
+    }
+    println!(
+        "serve-cluster --live {} x{}: offered {} | completed {} | shed {} | \
+         dup-signals {} | accounted: {}",
+        route.name(),
+        copts.n_nodes,
+        report.offered,
+        report.completed,
+        report.shed,
+        report.duplicate_signals,
+        report.accounted(),
+    );
+    println!(
+        "  failovers {} | reroutes {} | respawns {} | core-failures {} | \
+         terminal signals {} (wall-clock run, time-scale {})",
+        report.failovers,
+        report.reroutes,
+        report.respawns,
+        report.core_failures,
+        signals,
+        opts.time_scale,
     );
     Ok(())
 }

@@ -16,6 +16,68 @@ const HIST_LO: f64 = 1e-6;
 /// overflow.
 const HIST_N: usize = 2 + HIST_BPD * HIST_DECADES;
 
+/// Width (tokens) of the generation-length buckets used by the
+/// mispredict gauge: predicted and actual lengths are compared at
+/// bucket granularity (the batcher groups by predicted length, so a
+/// same-bucket miss is harmless while a cross-bucket miss wastes pad
+/// tokens or splits batches).
+pub const MISPREDICT_BUCKET_TOKENS: u32 = 32;
+/// Bins of the per-bucket-error histogram: bin `i` counts completions
+/// whose |predicted − actual| bucket distance is `i`; the last bin
+/// absorbs everything farther.
+pub const MISPREDICT_BINS: usize = 8;
+
+/// Prediction-quality gauge shared by the core collectors
+/// ([`RunMetrics`]) and the HTTP edge (`/metrics`): counts completed
+/// requests whose predicted generation length missed the actual one's
+/// [`MISPREDICT_BUCKET_TOKENS`]-wide bucket, with a per-bucket-distance
+/// error histogram.  Deterministic (pure counts), so golden runs agree
+/// bitwise.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MispredictGauge {
+    /// (predicted, actual) pairs observed — the rate denominator.
+    pub predictions: u64,
+    /// Observations landing in a different bucket than predicted.
+    pub mispredicted: u64,
+    /// `bins[d]` counts observations at bucket distance `d`; the last
+    /// bin absorbs the tail.
+    pub bins: [u64; MISPREDICT_BINS],
+}
+
+impl MispredictGauge {
+    /// Observe one completed request's (predicted, actual) generation
+    /// lengths, compared at [`MISPREDICT_BUCKET_TOKENS`] granularity.
+    pub fn record(&mut self, predicted: u32, actual: u32) {
+        let d = (predicted / MISPREDICT_BUCKET_TOKENS)
+            .abs_diff(actual / MISPREDICT_BUCKET_TOKENS) as usize;
+        self.predictions += 1;
+        if d > 0 {
+            self.mispredicted += 1;
+        }
+        self.bins[d.min(MISPREDICT_BINS - 1)] += 1;
+    }
+
+    /// Fold another gauge's counts into this one (cluster-wide
+    /// aggregation over per-instance gauges).
+    pub fn merge(&mut self, other: &MispredictGauge) {
+        self.predictions += other.predictions;
+        self.mispredicted += other.mispredicted;
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+    }
+
+    /// Fraction of observations that missed their predicted bucket
+    /// (0.0 when nothing was observed).
+    pub fn rate(&self) -> f64 {
+        if self.predictions == 0 {
+            0.0
+        } else {
+            self.mispredicted as f64 / self.predictions as f64
+        }
+    }
+}
+
 /// Fixed-bucket log-scale histogram for response-time quantiles.
 ///
 /// Buckets are geometric with ratio `10^(1/8)` (~33% relative width, so
@@ -183,6 +245,10 @@ pub struct RunMetrics {
     /// Log-scale response-time histogram fed by [`RunMetrics::record`]
     /// (p50/p90/p99 in [`Summary`], bucket export on `/metrics`).
     pub response_hist: Histogram,
+    /// Prediction-quality gauge fed by [`RunMetrics::record_prediction`]
+    /// at every completion.  NOT zero fault-free: mispredicts are a
+    /// property of the predictor, not of injected faults.
+    pub mispredict: MispredictGauge,
 }
 
 /// Summary row for one (policy, arrival-rate) cell of the figures.
@@ -214,6 +280,10 @@ pub struct Summary {
     pub worker_restarts: u32,
     /// Fallback-chain predictions — 0 fault-free.
     pub fallback_predictions: u32,
+    /// Fraction of completed requests whose predicted generation length
+    /// missed the actual one's [`MISPREDICT_BUCKET_TOKENS`]-wide bucket
+    /// (0.0 when no predictions were observed).
+    pub mispredict_rate: f64,
 }
 
 impl RunMetrics {
@@ -230,7 +300,20 @@ impl RunMetrics {
             rebucketed: 0,
             injected_faults: 0,
             response_hist: Histogram::new(),
+            mispredict: MispredictGauge::default(),
         }
+    }
+
+    /// Feed the mispredict gauge with one completed request's
+    /// (predicted, actual) generation lengths.
+    pub fn record_prediction(&mut self, predicted: u32, actual: u32) {
+        self.mispredict.record(predicted, actual);
+    }
+
+    /// Fraction of observed completions that missed their predicted
+    /// bucket (0.0 when nothing was observed).
+    pub fn mispredict_rate(&self) -> f64 {
+        self.mispredict.rate()
     }
 
     pub fn record(&mut self, r: RequestRecord) {
@@ -277,6 +360,7 @@ impl RunMetrics {
             retries: self.retries,
             worker_restarts: self.worker_restarts,
             fallback_predictions: self.fallback_predictions,
+            mispredict_rate: self.mispredict_rate(),
         }
     }
 }
@@ -429,6 +513,22 @@ mod tests {
         assert_eq!(sa.p90_response_time.to_bits(), sb.p90_response_time.to_bits());
         assert_eq!(sa.p99_response_time.to_bits(), sb.p99_response_time.to_bits());
         assert!(sa.p50_response_time > 0.0 && sa.p50_response_time <= sa.p99_response_time);
+    }
+
+    #[test]
+    fn mispredict_gauge_buckets_and_rate() {
+        let mut m = RunMetrics::new();
+        m.record_prediction(10, 20); // same 32-token bucket: a hit
+        m.record_prediction(10, 40); // bucket 0 vs bucket 1
+        m.record_prediction(1, MISPREDICT_BUCKET_TOKENS * 20); // far miss → tail bin
+        assert_eq!(m.mispredict.predictions, 3);
+        assert_eq!(m.mispredict.mispredicted, 2);
+        assert_eq!(m.mispredict.bins[0], 1);
+        assert_eq!(m.mispredict.bins[1], 1);
+        assert_eq!(m.mispredict.bins[MISPREDICT_BINS - 1], 1);
+        assert!((m.mispredict_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.summarise().mispredict_rate, m.mispredict_rate());
+        assert_eq!(RunMetrics::new().mispredict_rate(), 0.0, "empty gauge");
     }
 
     #[test]

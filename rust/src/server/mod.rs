@@ -45,6 +45,7 @@ use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
 use crate::predictor::{predict_degraded, GenLenPredictor};
 use crate::sim::MagnusPolicy;
+use crate::util::clamped_duration;
 use crate::workload::{PredictedRequest, RequestMeta, TraceStore};
 
 #[cfg(feature = "pjrt")]
@@ -595,16 +596,13 @@ fn requeue_oom_live(
 }
 
 /// Clamp the leader's arrival-poll timeout: a `next_arrival` already in
-/// the past yields `ZERO` (a negative or NaN argument would panic inside
-/// `Duration::from_secs_f64`), and the 50 ms cap keeps completions and
-/// worker restarts responsive while idling toward a distant arrival.
-/// `f64::clamp` propagates NaN, hence the explicit guard.
+/// the past (or a NaN delta) yields `ZERO` via
+/// [`crate::util::clamped_duration`], and the 50 ms cap keeps
+/// completions and worker restarts responsive while idling toward a
+/// distant arrival.  The cap is applied on the `Duration` side so NaN
+/// can never reach it (`f64::min` would propagate the cap on NaN).
 pub fn arrival_timeout(due_s: f64, elapsed_s: f64) -> Duration {
-    let dt = due_s - elapsed_s;
-    if dt.is_nan() {
-        return Duration::ZERO;
-    }
-    Duration::from_secs_f64(dt.clamp(0.0, 0.050))
+    clamped_duration(due_s - elapsed_s).min(Duration::from_millis(50))
 }
 
 /// Replay an interned trace through the supervised cluster; returns run
@@ -927,6 +925,7 @@ fn serve_core<F: WorkerFactory>(
                         attempts.remove(&batch.id);
                         completed += per_request.len();
                         for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                            ledger.metrics.record_prediction(pr.predicted_gen_len, pr.meta.gen_len);
                             ledger.done(RequestRecord {
                                 request_id: sr.request_id,
                                 arrival: pr.meta.arrival,
@@ -1006,9 +1005,9 @@ fn serve_core<F: WorkerFactory>(
                     } else {
                         slots[worker].restarts += 1;
                         ledger.metrics.worker_restarts += 1;
-                        let backoff = plan.restart_backoff(slots[worker].restarts - 1).max(0.0);
+                        let backoff = plan.restart_backoff(slots[worker].restarts - 1);
                         slots[worker].state =
-                            SlotState::Down(Instant::now() + Duration::from_secs_f64(backoff));
+                            SlotState::Down(Instant::now() + clamped_duration(backoff));
                         eprintln!(
                             "server: worker {worker} down ({error}); restart in {backoff:.3}s"
                         );
@@ -1089,6 +1088,7 @@ fn serve_core<F: WorkerFactory>(
         {
             completed += per_request.len();
             for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                ledger.metrics.record_prediction(pr.predicted_gen_len, pr.meta.gen_len);
                 ledger.done(RequestRecord {
                     request_id: sr.request_id,
                     arrival: pr.meta.arrival,

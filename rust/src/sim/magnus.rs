@@ -309,6 +309,7 @@ pub fn run_magnus_store_faulted(
                     } => {
                         served += per_request.len();
                         for (pr, sr) in batch.requests.iter().zip(&per_request) {
+                            metrics.record_prediction(pr.predicted_gen_len, pr.meta.gen_len);
                             metrics.record(RequestRecord {
                                 request_id: sr.request_id,
                                 arrival: pr.meta.arrival,

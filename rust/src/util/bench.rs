@@ -660,6 +660,114 @@ pub fn record_edge_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// One measured point of the cluster routing/fault matrix
+/// (`BENCH_cluster.json`): one route policy under one fault schedule,
+/// through the deterministic discrete-event cluster
+/// ([`crate::cluster::run_cluster_store`]) — numbers are bit-stable
+/// across runs, so the CI gate never flaps on them.
+#[derive(Debug, Clone)]
+pub struct ClusterPoint {
+    /// Route policy name (`rr`, `jspq`, `p2c`, `band`).
+    pub policy: String,
+    /// Fault schedule label (`nofault`, `slow1`, `kill1`, ...).
+    pub schedule: String,
+    /// Completions per simulated second under this schedule.
+    pub goodput: f64,
+    pub p99_response_time: f64,
+    /// Max-over-mean completions per instance (1.0 = perfectly even).
+    pub imbalance: f64,
+    /// Mean heartbeat detection latency over failovers (0 if none).
+    pub recovery_s: f64,
+    pub completed: usize,
+    pub shed: usize,
+    pub steals: u64,
+    pub reroutes: u64,
+    pub duplicate_acks: u64,
+}
+
+/// Record the routing-policy × fault-schedule matrix as
+/// `BENCH_cluster.json` at the repo root.  The gated headline
+/// (`cluster_goodput`) is the best policy's goodput on
+/// `headline_schedule`; the round-robin comparison fields are named
+/// without the gate substrings on purpose — they may be negative and
+/// must not trip the higher-is-better check.
+pub fn record_cluster_bench(
+    path: &str,
+    n_requests: usize,
+    rate: f64,
+    n_nodes: usize,
+    headline_schedule: &str,
+    points: &[ClusterPoint],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let arr = |f: &dyn Fn(&ClusterPoint) -> Json| Json::Arr(points.iter().map(f).collect());
+    let mut fields = vec![
+        ("bench", Json::str("cluster_routing_fault_matrix")),
+        ("requests", Json::num(n_requests as f64)),
+        ("rate", Json::num(rate)),
+        ("instances", Json::num(n_nodes as f64)),
+        ("headline_schedule", Json::str(headline_schedule.to_string())),
+        ("policy", arr(&|p| Json::str(p.policy.clone()))),
+        ("schedule", arr(&|p| Json::str(p.schedule.clone()))),
+        ("goodput", arr(&|p| Json::num(p.goodput))),
+        ("p99_response_time", arr(&|p| Json::num(p.p99_response_time))),
+        ("imbalance", arr(&|p| Json::num(p.imbalance))),
+        ("recovery_s", arr(&|p| Json::num(p.recovery_s))),
+        ("completed", arr(&|p| Json::num(p.completed as f64))),
+        ("shed", arr(&|p| Json::num(p.shed as f64))),
+        ("steals", arr(&|p| Json::num(p.steals as f64))),
+        ("reroutes", arr(&|p| Json::num(p.reroutes as f64))),
+        ("duplicate_acks", arr(&|p| Json::num(p.duplicate_acks as f64))),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    let on_headline: Vec<&ClusterPoint> = points
+        .iter()
+        .filter(|p| p.schedule == headline_schedule)
+        .collect();
+    let rr = on_headline.iter().find(|p| p.policy == "rr");
+    let best = on_headline
+        .iter()
+        .max_by(|a, b| a.goodput.partial_cmp(&b.goodput).unwrap());
+    if let Some(best) = best {
+        fields.push(("cluster_goodput", Json::num(best.goodput)));
+        fields.push(("best_policy", Json::str(best.policy.clone())));
+        if let Some(rr) = rr {
+            fields.push((
+                "gain_vs_round_robin_pct",
+                Json::num((best.goodput / rr.goodput.max(1e-12) - 1.0) * 100.0),
+            ));
+            let best_p99 = on_headline
+                .iter()
+                .filter(|p| p.policy != "rr")
+                .map(|p| p.p99_response_time)
+                .fold(f64::INFINITY, f64::min);
+            if best_p99.is_finite() {
+                fields.push((
+                    "p99_gain_vs_round_robin_pct",
+                    Json::num((rr.p99_response_time / best_p99.max(1e-12) - 1.0) * 100.0),
+                ));
+            }
+        }
+    }
+    let recoveries: Vec<f64> = points
+        .iter()
+        .filter(|p| p.recovery_s > 0.0)
+        .map(|p| p.recovery_s)
+        .collect();
+    if !recoveries.is_empty() {
+        fields.push((
+            "mean_recovery_s",
+            Json::num(recoveries.iter().sum::<f64>() / recoveries.len() as f64),
+        ));
+    }
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -730,6 +838,39 @@ mod tests {
         assert_eq!(j.get("speedup_deepest").as_f64(), Some(320.0));
         assert_eq!(j.get("logdb_contention_overhead").as_f64(), Some(1.3));
         assert_eq!(j.get("depths").as_arr().unwrap().len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_cluster_bench_derives_headline_and_rr_gains() {
+        let path = std::env::temp_dir().join("magnus_bench_cluster_test.json");
+        let path = path.to_string_lossy().into_owned();
+        let mk = |policy: &str, schedule: &str, goodput: f64, p99: f64| ClusterPoint {
+            policy: policy.into(),
+            schedule: schedule.into(),
+            goodput,
+            p99_response_time: p99,
+            imbalance: 1.2,
+            recovery_s: if schedule == "kill1" { 2.0 } else { 0.0 },
+            completed: 100,
+            shed: 3,
+            steals: 1,
+            reroutes: 4,
+            duplicate_acks: 0,
+        };
+        let points = [
+            mk("rr", "kill1", 4.0, 10.0),
+            mk("jspq", "kill1", 5.0, 8.0),
+            mk("rr", "nofault", 6.0, 5.0),
+        ];
+        record_cluster_bench(&path, 400, 8.0, 4, "kill1", &points, vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("cluster_goodput").as_f64(), Some(5.0));
+        assert_eq!(j.get("best_policy").as_str(), Some("jspq"));
+        assert_eq!(j.get("gain_vs_round_robin_pct").as_f64(), Some(25.0));
+        assert_eq!(j.get("p99_gain_vs_round_robin_pct").as_f64(), Some(25.0));
+        assert_eq!(j.get("mean_recovery_s").as_f64(), Some(2.0));
+        assert_eq!(j.get("policy").as_arr().unwrap().len(), 3);
         let _ = std::fs::remove_file(&path);
     }
 

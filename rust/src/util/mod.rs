@@ -16,6 +16,8 @@ pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod time;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use time::clamped_duration;

@@ -1,0 +1,46 @@
+//! Duration construction from *computed* float deltas.
+//!
+//! `Duration::from_secs_f64` panics on negative or NaN input, and a
+//! subtraction of two floats in an event loop can produce either (clock
+//! skew, NaN-poisoned estimates, deadlines in the past).  Every such
+//! call site must clamp first — this helper is the one shared clamp so
+//! the audit is "grep for `from_secs_f64`" instead of "re-derive the
+//! edge cases at each site".
+
+use std::time::Duration;
+
+/// Convert a computed delta (seconds) into a [`Duration`], clamping
+/// NaN and non-positive values to [`Duration::ZERO`].
+///
+/// The NaN check is load-bearing and must come first: `f64::min`/`max`
+/// propagate the *other* operand on NaN (`f64::NAN.max(0.0) == 0.0`
+/// but `f64::NAN.min(cap) == cap`), so a naive `clamp` chain can turn
+/// NaN into the cap instead of zero.
+#[inline]
+pub fn clamped_duration(secs: f64) -> Duration {
+    if secs.is_nan() || secs <= 0.0 {
+        return Duration::ZERO;
+    }
+    Duration::from_secs_f64(secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_nan_and_non_positive_to_zero() {
+        assert_eq!(clamped_duration(f64::NAN), Duration::ZERO);
+        assert_eq!(clamped_duration(-1.0), Duration::ZERO);
+        assert_eq!(clamped_duration(-0.0), Duration::ZERO);
+        assert_eq!(clamped_duration(0.0), Duration::ZERO);
+        assert_eq!(clamped_duration(f64::NEG_INFINITY), Duration::ZERO);
+    }
+
+    #[test]
+    fn passes_positive_values_through_exactly() {
+        for secs in [1e-9, 0.05, 1.0, 3600.0] {
+            assert_eq!(clamped_duration(secs), Duration::from_secs_f64(secs));
+        }
+    }
+}

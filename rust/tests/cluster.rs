@@ -1,0 +1,294 @@
+//! Differential chaos suite for the fault-domain cluster (ISSUE 8).
+//!
+//! Three gates over `cluster::run_cluster_store`:
+//!
+//! * **M=1 golden equivalence** — a single-instance cluster under a
+//!   no-instance-fault plan is BIT-identical to the single-instance
+//!   simulator core (`run_magnus_store_faulted`): the router, ledger and
+//!   heartbeat machinery must be pure structure, never arithmetic.
+//! * **Seeded instance-fault schedules** — kills, slow instances and
+//!   partitions (mixed with engine-level crash/OOM axes) hold the
+//!   exactly-once cluster ledger (`offered == completed + shed +
+//!   expired`, no id resolved twice) and replay bit-identically.
+//! * **Work stealing** — under an adversarially imbalanced placement,
+//!   stealing fires and still never duplicates a request id.
+
+mod common;
+
+use std::collections::HashSet;
+
+use magnus::cluster::{
+    parse_route_policy, run_cluster_store, ClusterOptions, ClusterOutput,
+};
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::faults::FaultPlan;
+use magnus::metrics::RunMetrics;
+use magnus::predictor::{GenLenPredictor, Variant};
+use magnus::sim::{
+    run_magnus_store_faulted, DispatchMode, MagnusPolicy, SimOutput,
+};
+use magnus::workload::{TraceSpec, TraceStore};
+
+fn cluster_store(n: usize, rate: f64, seed: u64) -> TraceStore {
+    TraceStore::generate(&TraceSpec {
+        rate,
+        n_requests: n,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Run the cluster under the untrained input-length predictor (Uilo) —
+/// like the chaos suite, these runs exercise fault plumbing, not forest
+/// accuracy.
+fn run_cluster(
+    cfg: &ServingConfig,
+    store: &TraceStore,
+    plan: &FaultPlan,
+    copts: &ClusterOptions,
+    route: &str,
+) -> ClusterOutput {
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let mut policy = parse_route_policy(route, copts.route_seed, cfg.gpu.g_max).unwrap();
+    run_cluster_store(
+        cfg,
+        &MagnusPolicy::magnus(),
+        GenLenPredictor::new(Variant::Uilo, cfg),
+        &engine,
+        store,
+        plan,
+        copts,
+        policy.as_mut(),
+    )
+}
+
+/// Every admitted id resolves to exactly one terminal state across the
+/// merged cluster: no id completes twice, is shed twice, or both.
+fn assert_exactly_once(merged: &RunMetrics, store: &TraceStore, ctx: &str) {
+    let mut seen = HashSet::new();
+    for r in &merged.records {
+        assert!(
+            seen.insert(r.request_id),
+            "{ctx}: request {} completed twice",
+            r.request_id
+        );
+    }
+    for &id in &merged.shed {
+        assert!(
+            seen.insert(id),
+            "{ctx}: request {id} shed twice or both completed and shed"
+        );
+    }
+    assert_eq!(seen.len(), store.len(), "{ctx}: admitted != completed + shed");
+    for m in store.metas() {
+        assert!(seen.contains(&m.id), "{ctx}: request {} lost", m.id);
+    }
+}
+
+/// Bitwise comparison of two cluster runs (faulted runs carry nonzero
+/// robustness counters, so the golden-gate `common::assert_identical`
+/// does not fit here).
+fn assert_bitwise_replay(a: &ClusterOutput, b: &ClusterOutput, ctx: &str) {
+    assert_eq!(a.offered, b.offered, "{ctx}");
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed count");
+    assert_eq!(a.duplicate_acks, b.duplicate_acks, "{ctx}: dup acks");
+    assert_eq!(a.steals, b.steals, "{ctx}: steals");
+    assert_eq!(a.reroutes, b.reroutes, "{ctx}: reroutes");
+    assert_eq!(a.failovers, b.failovers, "{ctx}: failovers");
+    assert_eq!(a.rejoins, b.rejoins, "{ctx}: rejoins");
+    assert_eq!(a.shed_ids, b.shed_ids, "{ctx}: shed ids");
+    assert_eq!(a.pred_errors.len(), b.pred_errors.len(), "{ctx}");
+    for (x, y) in a.pred_errors.iter().zip(&b.pred_errors) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: pred_errors t");
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: pred_errors err");
+    }
+    assert_eq!(a.nodes.len(), b.nodes.len(), "{ctx}");
+    for (i, (na, nb)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        assert_eq!(
+            na.metrics.records.len(),
+            nb.metrics.records.len(),
+            "{ctx}: node {i} record count"
+        );
+        for (x, y) in na.metrics.records.iter().zip(&nb.metrics.records) {
+            assert_eq!(x.request_id, y.request_id, "{ctx}: node {i}");
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{ctx}: node {i}");
+            assert_eq!(
+                x.finish.to_bits(),
+                y.finish.to_bits(),
+                "{ctx}: node {i} request {} finish {} vs {}",
+                x.request_id,
+                x.finish,
+                y.finish
+            );
+            assert_eq!(x.valid_tokens, y.valid_tokens, "{ctx}: node {i}");
+            assert_eq!(x.invalid_tokens, y.invalid_tokens, "{ctx}: node {i}");
+        }
+        assert_eq!(na.metrics.oom_events, nb.metrics.oom_events, "{ctx}: node {i}");
+        assert_eq!(na.metrics.retries, nb.metrics.retries, "{ctx}: node {i}");
+        assert_eq!(
+            na.metrics.worker_restarts,
+            nb.metrics.worker_restarts,
+            "{ctx}: node {i}"
+        );
+        assert_eq!(
+            na.metrics.injected_faults,
+            nb.metrics.injected_faults,
+            "{ctx}: node {i}"
+        );
+        assert_eq!(na.est_errors.len(), nb.est_errors.len(), "{ctx}: node {i}");
+        for (x, y) in na.est_errors.iter().zip(&nb.est_errors) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: node {i} est t");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: node {i} est err");
+        }
+    }
+}
+
+/// An M=1 cluster with no instance faults is the single-instance core
+/// wearing a router hat: records, telemetry, log-DB sizes and summary
+/// statistics must match the direct run bit for bit.
+#[test]
+fn single_node_cluster_is_bit_identical_to_core() {
+    let cfg = ServingConfig::default();
+    let store = cluster_store(220, 10.0, 41);
+    let plan = FaultPlan::none();
+    let copts = ClusterOptions {
+        n_nodes: 1,
+        ..Default::default()
+    };
+
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let direct = run_magnus_store_faulted(
+        &cfg,
+        &MagnusPolicy::magnus(),
+        GenLenPredictor::new(Variant::Uilo, &cfg),
+        &engine,
+        &store,
+        DispatchMode::Indexed,
+        &plan,
+    );
+
+    let out = run_cluster(&cfg, &store, &plan, &copts, "rr");
+    assert!(out.accounted(), "M=1 ledger must close");
+    assert_eq!(out.shed, 0, "fault-free M=1 cluster sheds nothing");
+    let merged = out.merged_metrics();
+    let node = out.nodes.into_iter().next().unwrap();
+    let as_sim = SimOutput {
+        metrics: merged,
+        db: node.db,
+        pred_errors: out.pred_errors,
+        est_errors: node.est_errors,
+    };
+    common::assert_identical(&direct, &as_sim, "M=1 cluster vs core");
+}
+
+/// Exactly-once cluster ledger under three qualitatively different
+/// seeded instance-fault schedules (kill, slow+kill, partition+OOM
+/// storm), each mixed with engine-level axes — and bit-identical replay
+/// of every schedule.
+#[test]
+fn instance_fault_schedules_hold_ledger_and_replay_bitwise() {
+    let cfg = ServingConfig::default();
+    let n = 240;
+    let rate = 12.0;
+    let span = n as f64 / rate;
+    let store = cluster_store(n, rate, 99);
+    let copts = ClusterOptions {
+        n_nodes: 4,
+        hb_interval_s: 0.5,
+        suspect_after: 2,
+        steal_threshold_tokens: 64,
+        route_seed: 7,
+    };
+
+    let kill = FaultPlan::parse_spec(&format!(
+        "seed=11,crash=0.2,ikill=1:{:.1}..{:.1}",
+        0.2 * span,
+        0.6 * span
+    ))
+    .unwrap();
+    let slow_kill = FaultPlan::parse_spec(&format!(
+        "seed=12,err=0.1,islow=2:{:.1}..{:.1}@5,ikill=3:{:.1}..{:.1}",
+        0.1 * span,
+        0.7 * span,
+        0.4 * span,
+        0.8 * span
+    ))
+    .unwrap();
+    let part_storm = FaultPlan::parse_spec(&format!(
+        "seed=13,ipart=0:{:.1}..{:.1},oom={:.1}..{:.1}@0.3,guard",
+        0.2 * span,
+        0.5 * span,
+        0.3 * span,
+        0.6 * span
+    ))
+    .unwrap();
+
+    for (name, plan, route) in [
+        ("kill", &kill, "jspq"),
+        ("slow+kill", &slow_kill, "p2c"),
+        ("part+storm", &part_storm, "rr"),
+    ] {
+        let a = run_cluster(&cfg, &store, plan, &copts, route);
+        assert!(
+            a.accounted(),
+            "{name}: offered {} != completed {} + shed {} + expired {}",
+            a.offered,
+            a.completed,
+            a.shed,
+            a.expired
+        );
+        assert_exactly_once(&a.merged_metrics(), &store, name);
+        let b = run_cluster(&cfg, &store, plan, &copts, route);
+        assert_bitwise_replay(&a, &b, name);
+    }
+
+    // The kill schedules must actually have exercised failover.
+    let a = run_cluster(&cfg, &store, &kill, &copts, "jspq");
+    assert!(a.failovers > 0, "kill window must trigger a declared failover");
+    assert!(a.rejoins > 0, "killed instance must rejoin after its window");
+}
+
+/// Work stealing under an adversarially imbalanced placement: a band
+/// policy scaled far past the real g_max routes EVERY request to node
+/// 0, so its peers sit idle with empty queues and must steal.  Ids
+/// move, never copy — the exactly-once set must stay clean and no
+/// duplicate acks may appear.
+#[test]
+fn work_stealing_rebalances_without_duplicating_ids() {
+    let cfg = ServingConfig::default();
+    let store = cluster_store(200, 30.0, 57);
+    let copts = ClusterOptions {
+        n_nodes: 4,
+        steal_threshold_tokens: 8,
+        ..Default::default()
+    };
+
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    // g_max = 255 while every prediction is ≤ 64: band 0 swallows all.
+    let mut policy = parse_route_policy("band", copts.route_seed, 255).unwrap();
+    let out = run_cluster_store(
+        &cfg,
+        &MagnusPolicy::magnus(),
+        GenLenPredictor::new(Variant::Uilo, &cfg),
+        &engine,
+        &store,
+        &FaultPlan::none(),
+        &copts,
+        policy.as_mut(),
+    );
+
+    assert!(out.accounted(), "stealing run must close the ledger");
+    assert!(
+        out.steals > 0,
+        "all-to-one placement with idle peers must trigger stealing"
+    );
+    assert_eq!(out.duplicate_acks, 0, "fault-free run may never see dup acks");
+    assert_eq!(out.shed, 0, "fault-free run sheds nothing");
+    let merged = out.merged_metrics();
+    assert_exactly_once(&merged, &store, "stealing");
+    // Stealing moved real work off node 0: some peer completed requests.
+    let off_node0: usize = out.nodes[1..].iter().map(|n| n.metrics.records.len()).sum();
+    assert!(off_node0 > 0, "stolen batches must complete on the thief");
+}
