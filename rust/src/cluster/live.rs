@@ -167,6 +167,11 @@ pub fn serve_cluster_ingress_sim(
 
     let mut terminal: HashSet<u64> = HashSet::new();
     let mut failover_attempts: HashMap<u64, u32> = HashMap::new();
+    // Request copies orphaned by an instance death (heartbeat Dead
+    // declaration, or a send failure discovering the core exited) that
+    // still need a failover decision: reroute under the retry budget or
+    // explicit shed.
+    let mut pending_failover: std::collections::VecDeque<EdgeJob> = Default::default();
     let (mut offered, mut completed, mut shed) = (0u64, 0u64, 0u64);
     let (mut duplicate_signals, mut reroutes) = (0u64, 0u64);
     let (mut failovers, mut respawns, mut core_failures) = (0u32, 0u32, 0u32);
@@ -175,9 +180,11 @@ pub fn serve_cluster_ingress_sim(
     // Heartbeat period in wall seconds: the plan's windows live in
     // replayed (trace) time, which runs `time_scale`× wall time.  The
     // shared clamp helper keeps a degenerate interval from panicking
-    // (ISSUE 8 satellite: `util::clamped_duration` in the cluster loop).
+    // (ISSUE 8 satellite: `util::clamped_duration` in the cluster loop);
+    // the upper bound keeps `Instant + wall_hb` from overflowing when
+    // the helper saturates a huge/inf interval to `Duration::MAX`.
     let wall_hb = clamped_duration(copts.hb_interval_s / time_scale)
-        .max(Duration::from_millis(5));
+        .clamp(Duration::from_millis(5), Duration::from_secs(3600));
     let poll = Duration::from_millis(2).min(wall_hb);
     let mut next_hb = start + wall_hb;
     let mut jobs_open = true;
@@ -226,9 +233,13 @@ pub fn serve_cluster_ingress_sim(
                             instances[j].in_flight.insert(id, job);
                             break true;
                         }
-                        // The core exited under us: cut its ingress and
-                        // let routing retry over the survivors.
+                        // The core exited under us: cut its ingress,
+                        // queue its in-flight copies for failover (the
+                        // caller drains them under the retry budget),
+                        // and let routing retry over the survivors.
                         instances[j].sender = None;
+                        let stranded = std::mem::take(&mut instances[j].in_flight);
+                        pending_failover.extend(stranded.into_values());
                     }
                     None => {
                         resolve!(id, CoreSignal::Shed { request_id: id }, shed);
@@ -239,12 +250,36 @@ pub fn serve_cluster_ingress_sim(
         }};
     }
 
+    // Failover every orphaned copy: reroute under the retry budget,
+    // then explicit shed.  Placement can discover further dead cores
+    // and push more orphans, so loop until the queue is dry.
+    macro_rules! drain_failover {
+        () => {
+            while let Some(job) = pending_failover.pop_front() {
+                let id = job.meta.id;
+                if terminal.contains(&id) {
+                    continue;
+                }
+                let fa = failover_attempts.entry(id).or_insert(0);
+                *fa += 1;
+                if *fa > plan.max_retries {
+                    resolve!(id, CoreSignal::Shed { request_id: id }, shed);
+                    continue;
+                }
+                if place!(job) {
+                    reroutes += 1;
+                }
+            }
+        };
+    }
+
     loop {
         if jobs_open {
             match jobs.recv_timeout(poll) {
                 Ok(job) => {
                     offered += 1;
                     place!(job);
+                    drain_failover!();
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     jobs_open = false;
@@ -288,8 +323,16 @@ pub fn serve_cluster_ingress_sim(
         }
 
         // Heartbeat health checks, in replayed time, while admitting.
-        if jobs_open && Instant::now() >= next_hb {
-            next_hb += wall_hb;
+        let now = Instant::now();
+        if jobs_open && now >= next_hb {
+            // Catch up past `now` in one step: after a stall (long
+            // placement, scheduler hiccup) firing the backlog of probes
+            // back-to-back would accumulate misses faster than one per
+            // `hb_interval_s` and declare Dead earlier than
+            // `suspect_after * hb_interval_s` implies.
+            while next_hb <= now {
+                next_hb += wall_hb;
+            }
             let t = start.elapsed().as_secs_f64() * time_scale;
             for i in 0..m {
                 let miss = plan.instance_dead(i, t) || plan.instance_partitioned(i, t);
@@ -300,20 +343,8 @@ pub fn serve_cluster_ingress_sim(
                         failovers += 1;
                         instances[i].sender = None;
                         let inflight = std::mem::take(&mut instances[i].in_flight);
-                        for (id, job) in inflight {
-                            if terminal.contains(&id) {
-                                continue;
-                            }
-                            let fa = failover_attempts.entry(id).or_insert(0);
-                            *fa += 1;
-                            if *fa > plan.max_retries {
-                                resolve!(id, CoreSignal::Shed { request_id: id }, shed);
-                                continue;
-                            }
-                            if place!(job) {
-                                reroutes += 1;
-                            }
-                        }
+                        pending_failover.extend(inflight.into_values());
+                        drain_failover!();
                     }
                 } else {
                     if instances[i].declared_dead {
@@ -344,6 +375,7 @@ pub fn serve_cluster_ingress_sim(
     let leftover: Vec<u64> = instances
         .iter()
         .flat_map(|inst| inst.in_flight.keys().copied())
+        .chain(pending_failover.iter().map(|j| j.meta.id))
         .collect();
     for id in leftover {
         resolve!(id, CoreSignal::Shed { request_id: id }, shed);

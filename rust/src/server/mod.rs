@@ -1006,8 +1006,14 @@ fn serve_core<F: WorkerFactory>(
                         slots[worker].restarts += 1;
                         ledger.metrics.worker_restarts += 1;
                         let backoff = plan.restart_backoff(slots[worker].restarts - 1);
-                        slots[worker].state =
-                            SlotState::Down(Instant::now() + clamped_duration(backoff));
+                        // Bound the Duration before Instant arithmetic: a
+                        // degenerate plan (inf backoff) saturates
+                        // `clamped_duration` to MAX, which would overflow
+                        // `Instant + Duration`.
+                        slots[worker].state = SlotState::Down(
+                            Instant::now()
+                                + clamped_duration(backoff).min(Duration::from_secs(3600)),
+                        );
                         eprintln!(
                             "server: worker {worker} down ({error}); restart in {backoff:.3}s"
                         );

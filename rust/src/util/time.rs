@@ -1,16 +1,23 @@
 //! Duration construction from *computed* float deltas.
 //!
-//! `Duration::from_secs_f64` panics on negative or NaN input, and a
-//! subtraction of two floats in an event loop can produce either (clock
-//! skew, NaN-poisoned estimates, deadlines in the past).  Every such
-//! call site must clamp first — this helper is the one shared clamp so
-//! the audit is "grep for `from_secs_f64`" instead of "re-derive the
-//! edge cases at each site".
+//! `Duration::from_secs_f64` panics on negative, NaN, infinite, or
+//! `Duration`-overflowing input (> u64::MAX s ≈ 1.84e19), and a subtraction or
+//! division of floats in an event loop can produce any of these (clock
+//! skew, NaN-poisoned estimates, deadlines in the past, degenerate
+//! user-supplied intervals).  Every such call site must clamp first —
+//! this helper is the one shared clamp so the audit is "grep for
+//! `from_secs_f64`" instead of "re-derive the edge cases at each site".
+//!
+//! Note for callers feeding the result into `Instant` arithmetic: the
+//! saturated `Duration::MAX` overflows `Instant + Duration` — bound the
+//! result (e.g. `.min(...)`) before adding it to a clock reading.
 
 use std::time::Duration;
 
 /// Convert a computed delta (seconds) into a [`Duration`], clamping
-/// NaN and non-positive values to [`Duration::ZERO`].
+/// NaN and non-positive values to [`Duration::ZERO`] and `+inf` or
+/// anything overflowing `Duration` to [`Duration::MAX`].  Total: never
+/// panics for any `f64` input.
 ///
 /// The NaN check is load-bearing and must come first: `f64::min`/`max`
 /// propagate the *other* operand on NaN (`f64::NAN.max(0.0) == 0.0`
@@ -21,7 +28,7 @@ pub fn clamped_duration(secs: f64) -> Duration {
     if secs.is_nan() || secs <= 0.0 {
         return Duration::ZERO;
     }
-    Duration::from_secs_f64(secs)
+    Duration::try_from_secs_f64(secs).unwrap_or(Duration::MAX)
 }
 
 #[cfg(test)]
@@ -42,5 +49,15 @@ mod tests {
         for secs in [1e-9, 0.05, 1.0, 3600.0] {
             assert_eq!(clamped_duration(secs), Duration::from_secs_f64(secs));
         }
+    }
+
+    #[test]
+    fn saturates_infinity_and_overflow_to_max() {
+        assert_eq!(clamped_duration(f64::INFINITY), Duration::MAX);
+        assert_eq!(clamped_duration(1e300), Duration::MAX);
+        // Past the largest representable Duration (u64::MAX s ≈ 1.84e19).
+        assert_eq!(clamped_duration(2e19), Duration::MAX);
+        // ...while huge-but-representable values still convert exactly.
+        assert_eq!(clamped_duration(1e18), Duration::from_secs_f64(1e18));
     }
 }
