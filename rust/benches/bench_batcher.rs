@@ -24,6 +24,7 @@ fn req(id: u64, rng: &mut Rng) -> PredictedRequest {
             gen_len: gen,
             arrival: 0.0,
             span: Span::DETACHED,
+            uih: 0,
         },
         predicted_gen_len: gen,
     }

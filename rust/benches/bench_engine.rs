@@ -25,6 +25,7 @@ fn req(id: u64, len: u32, gen: u32) -> PredictedRequest {
             gen_len: gen,
             arrival: 0.0,
             span: Span::DETACHED,
+            uih: 0,
         },
         predicted_gen_len: gen,
     }

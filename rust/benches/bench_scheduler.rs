@@ -64,6 +64,7 @@ fn filled_batcher(n: usize, seed: u64) -> AdaptiveBatcher {
                     gen_len: pred,
                     arrival,
                     span: Span::DETACHED,
+                    uih: 0,
                 },
                 predicted_gen_len: pred,
             },
@@ -85,6 +86,7 @@ fn rlog(at: f64) -> RequestLog {
             gen_len: 7,
             arrival: 0.0,
             span: Span::DETACHED,
+            uih: 0,
         },
         predicted_gen_len: 9,
         actual_gen_len: 7,

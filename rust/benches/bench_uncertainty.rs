@@ -1,0 +1,128 @@
+//! Uncertainty-aware scheduling vs the point-estimate baseline under a
+//! seeded drift schedule → `BENCH_uncertainty.json` (ISSUE 9 gate).
+//!
+//! Both rows replay the SAME trace under the SAME fault plan — a
+//! whole-run drift window biasing every trained prediction down by 45%
+//! (well past the ≥0.3-bias acceptance bar).  The baseline row runs with
+//! `uncertainty.enabled = false`: shrunken predictions overpack batches
+//! against Θ, the engine OOMs on the true lengths, and every OOM costs a
+//! reload.  The confidence row charges low-confidence admissions their
+//! upper-quantile tokens, demotes the predictor down the fallback chain
+//! when the signed-error EWMA crosses the drift budget, and speculatively
+//! re-buckets low-confidence batches before the OOM reload.
+//!
+//! Asserted before anything is recorded:
+//!
+//! * **exactly-once** — completed + shed == n in both rows;
+//! * the headline `goodput_retention` (confidence goodput over baseline
+//!   goodput) is ≥ 1.2 — the ISSUE 9 acceptance threshold.
+//!
+//! `MAGNUS_PREDICTOR_SMOKE` (or `MAGNUS_BENCH_QUICK`) shrinks the trace
+//! for CI.
+
+use magnus::config::ServingConfig;
+use magnus::engine::cost::CostModelEngine;
+use magnus::faults::FaultPlan;
+use magnus::sim::{run_magnus_store_faulted, trained_predictor, DispatchMode, MagnusPolicy};
+use magnus::util::bench::{record_uncertainty_bench, UncertaintyPoint};
+use magnus::workload::{TraceSpec, TraceStore};
+
+const RATE: f64 = 8.0;
+const SEED: u64 = 9191;
+const PREDICTOR_TRAIN: usize = 200;
+const DRIFT_BIAS: f64 = -0.45;
+
+fn main() {
+    let quick = std::env::var("MAGNUS_PREDICTOR_SMOKE").is_ok()
+        || std::env::var("MAGNUS_BENCH_QUICK").is_ok();
+    let n: usize = if quick { 250 } else { 800 };
+    let span_s = n as f64 / RATE;
+
+    let engine = {
+        let cfg = ServingConfig::default();
+        CostModelEngine::new(cfg.cost.clone(), &cfg.gpu)
+    };
+    let store = TraceStore::generate(&TraceSpec {
+        rate: RATE,
+        n_requests: n,
+        seed: SEED,
+        ..Default::default()
+    });
+    // Whole-run bias through the compact-spec parser (what an operator
+    // would actually type); seed only matters to the (absent) noise axes.
+    let mut plan =
+        FaultPlan::parse_spec(&format!("drift=0..{:.0}@{DRIFT_BIAS}", span_s * 10.0)).unwrap();
+    plan.seed = 7;
+
+    println!("== uncertainty drift retention (n={n}, rate={RATE}, bias={DRIFT_BIAS}) ==");
+    let mut points: Vec<UncertaintyPoint> = Vec::new();
+    for enabled in [false, true] {
+        let mut cfg = ServingConfig::default();
+        cfg.uncertainty.enabled = enabled;
+        if enabled {
+            // Aggressive posture for the drifted regime: charge the
+            // upper quantile for anything short of near-certainty, and
+            // let per-(app, tier) cells demote on few samples — the
+            // smoke trace spreads thin across cells.
+            cfg.uncertainty.confidence_threshold = 0.95;
+            cfg.uncertainty.drift_budget_tokens = 15.0;
+            cfg.uncertainty.drift_min_samples = 8;
+            cfg.uncertainty.drift_probation = 40;
+        }
+        let out = run_magnus_store_faulted(
+            &cfg,
+            &MagnusPolicy::magnus(),
+            trained_predictor(&cfg, PREDICTOR_TRAIN),
+            &engine,
+            &store,
+            DispatchMode::Indexed,
+            &plan,
+        );
+        let m = &out.metrics;
+        assert_eq!(
+            m.records.len() + m.shed.len(),
+            n,
+            "exactly-once accounting must close (uncertainty={enabled})"
+        );
+        let s = m.summarise();
+        println!(
+            "  uncertainty={:5}: {} done, {} shed | goodput {:.3} req/s | OOM {} | \
+             low-conf {} | demotions {} | spec-rebuckets {} | fallbacks {}",
+            enabled,
+            s.n_requests,
+            s.shed_requests,
+            s.request_throughput,
+            s.oom_events,
+            s.low_confidence_admissions,
+            s.drift_demotions,
+            s.speculative_rebuckets,
+            m.fallback_predictions
+        );
+        points.push(UncertaintyPoint {
+            label: if enabled { "confidence_aware" } else { "point_estimate" }.to_string(),
+            uncertainty_enabled: enabled,
+            completed: s.n_requests,
+            shed: s.shed_requests,
+            goodput: s.request_throughput,
+            oom_events: s.oom_events,
+            low_confidence_admissions: s.low_confidence_admissions,
+            drift_demotions: s.drift_demotions,
+            drift_repromotions: m.drift_repromotions,
+            speculative_rebuckets: s.speculative_rebuckets,
+            fallback_predictions: m.fallback_predictions,
+            mean_response_time: s.mean_response_time,
+        });
+    }
+
+    let retention = points[1].goodput / points[0].goodput.max(1e-12);
+    println!("goodput retention: {retention:.3}x");
+    assert!(
+        retention >= 1.2,
+        "confidence-aware scheduling must retain >=20% more goodput under \
+         {DRIFT_BIAS} drift (got {retention:.3}x)"
+    );
+
+    let path = format!("{}/../BENCH_uncertainty.json", env!("CARGO_MANIFEST_DIR"));
+    record_uncertainty_bench(&path, n, RATE, DRIFT_BIAS, &points, vec![]).unwrap();
+    println!("wrote {path}");
+}

@@ -636,6 +636,7 @@ mod tests {
                 gen_len: pred,
                 arrival: 0.0,
                 span: Span::DETACHED,
+                uih: 0,
             },
             predicted_gen_len: pred,
         }

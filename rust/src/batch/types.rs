@@ -212,6 +212,7 @@ mod tests {
                 gen_len: gen,
                 arrival,
                 span: Span::DETACHED,
+                uih: 0,
             },
             predicted_gen_len: pred,
         }

@@ -202,6 +202,7 @@ fn fig6(_args: &Args) {
             gen_len: g,
             arrival: 0.0,
             span: Span::DETACHED,
+            uih: 0,
         },
         predicted_gen_len: g,
     };

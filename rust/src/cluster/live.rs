@@ -222,6 +222,7 @@ pub fn serve_cluster_ingress_sim(
                 let req = RouteRequest {
                     id,
                     predicted: job.predicted_gen_len,
+                    confidence: 1.0,
                 };
                 match route_policy.route(&req, &loads) {
                     Some(j) => {

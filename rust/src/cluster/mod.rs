@@ -168,6 +168,10 @@ pub(crate) fn merge_metrics(
         m.worker_restarts += nm.worker_restarts;
         m.rebucketed += nm.rebucketed;
         m.injected_faults += nm.injected_faults;
+        m.low_confidence_admissions += nm.low_confidence_admissions;
+        m.drift_demotions += nm.drift_demotions;
+        m.drift_repromotions += nm.drift_repromotions;
+        m.speculative_rebuckets += nm.speculative_rebuckets;
         m.mispredict.merge(&nm.mispredict);
     }
     m.fallback_predictions = fallback_predictions;

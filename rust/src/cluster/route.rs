@@ -18,6 +18,11 @@ pub struct RouteRequest {
     pub id: u64,
     /// Predicted generation length (tokens) from the shared predictor.
     pub predicted: u32,
+    /// Prediction confidence in `[0, 1]` (ISSUE 9): the predictor's
+    /// modal-bucket vote share, or `1.0` when the pipeline runs
+    /// point-estimate-only — every policy that ignores it behaves
+    /// exactly as before.
+    pub confidence: f32,
 }
 
 /// Router-visible load snapshot for one logical instance.
@@ -154,6 +159,14 @@ impl RoutePolicy for PowerOfTwoChoices {
 #[derive(Debug)]
 pub struct LengthPartitioned {
     pub g_max: u32,
+    /// Confidence spillover threshold (ISSUE 9): a request whose
+    /// prediction confidence is *below* this is banded by length only
+    /// nominally — its true length is anyone's guess, so it routes to
+    /// the spillover band (the last alive instance, which also hosts the
+    /// longest nominal band and therefore already absorbs overruns).
+    /// `0.0` (the default) never spills — confidence lives in `[0, 1]`
+    /// — keeping the pre-ISSUE-9 banding bit-identical.
+    pub spill_threshold: f32,
 }
 
 impl RoutePolicy for LengthPartitioned {
@@ -165,6 +178,9 @@ impl RoutePolicy for LengthPartitioned {
         let alive: Vec<usize> = (0..loads.len()).filter(|&i| loads[i].alive).collect();
         if alive.is_empty() {
             return None;
+        }
+        if req.confidence < self.spill_threshold {
+            return Some(alive[alive.len() - 1]);
         }
         let span = u64::from(self.g_max) + 1;
         let band = (u64::from(req.predicted.min(self.g_max)) * alive.len() as u64) / span;
@@ -182,7 +198,16 @@ pub fn parse_route_policy(name: &str, seed: u64, g_max: u32) -> Option<Box<dyn R
         "rr" | "round-robin" => Some(Box::new(RoundRobin::default())),
         "jspq" | "jsq" | "shortest" => Some(Box::new(JoinShortestPredictedQueue)),
         "p2c" | "power2" => Some(Box::new(PowerOfTwoChoices { seed })),
-        "band" | "length" | "slice" => Some(Box::new(LengthPartitioned { g_max })),
+        "band" | "length" | "slice" => Some(Box::new(LengthPartitioned {
+            g_max,
+            spill_threshold: 0.0,
+        })),
+        // Uncertainty-aware banding: low-confidence requests spill to the
+        // last (longest) band instead of trusting their point estimate.
+        "bandu" | "band-spill" => Some(Box::new(LengthPartitioned {
+            g_max,
+            spill_threshold: 0.55,
+        })),
         _ => None,
     }
 }
@@ -202,7 +227,11 @@ mod tests {
     }
 
     fn req(id: u64, predicted: u32) -> RouteRequest {
-        RouteRequest { id, predicted }
+        RouteRequest {
+            id,
+            predicted,
+            confidence: 1.0,
+        }
     }
 
     #[test]
@@ -248,7 +277,10 @@ mod tests {
 
     #[test]
     fn length_partitioned_bands_split_short_from_long() {
-        let mut p = LengthPartitioned { g_max: 64 };
+        let mut p = LengthPartitioned {
+            g_max: 64,
+            spill_threshold: 0.0,
+        };
         let l = loads(&[(true, 0), (true, 0), (true, 0), (true, 0)]);
         assert_eq!(p.route(&req(1, 0), &l), Some(0));
         assert_eq!(p.route(&req(2, 16), &l), Some(0));
@@ -263,10 +295,46 @@ mod tests {
     }
 
     #[test]
+    fn low_confidence_spills_to_the_last_band() {
+        let mut p = LengthPartitioned {
+            g_max: 64,
+            spill_threshold: 0.5,
+        };
+        let l = loads(&[(true, 0), (true, 0), (true, 0), (true, 0)]);
+        // Confident short request: banded normally.
+        assert_eq!(p.route(&req(1, 10), &l), Some(0));
+        // Uncertain short request: spills to the last alive instance.
+        let uncertain = RouteRequest {
+            id: 2,
+            predicted: 10,
+            confidence: 0.2,
+        };
+        assert_eq!(p.route(&uncertain, &l), Some(3));
+        // Dead tail: the spillover band tracks aliveness.
+        let l2 = loads(&[(true, 0), (true, 0), (false, 0), (false, 0)]);
+        assert_eq!(p.route(&uncertain, &l2), Some(1));
+        // Threshold 0.0 never spills (confidence is non-negative), so the
+        // default construction replays pre-confidence banding exactly.
+        let mut off = LengthPartitioned {
+            g_max: 64,
+            spill_threshold: 0.0,
+        };
+        let zero_conf = RouteRequest {
+            id: 3,
+            predicted: 10,
+            confidence: 0.0,
+        };
+        assert_eq!(off.route(&zero_conf, &l), Some(0));
+    }
+
+    #[test]
     fn parse_covers_every_policy_name() {
         for name in ROUTE_POLICY_NAMES {
             let p = parse_route_policy(name, 1, 64).unwrap();
             assert!(!p.name().is_empty());
+        }
+        for name in ["bandu", "band-spill"] {
+            assert!(parse_route_policy(name, 1, 64).is_some(), "{name}");
         }
         assert!(parse_route_policy("nope", 1, 64).is_none());
     }

@@ -17,7 +17,7 @@
 //! the exact event sequence of the single-instance core — outputs are
 //! bit-for-bit identical (asserted by `tests/cluster.rs`).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use crate::cluster::route::{NodeLoad, RoutePolicy, RouteRequest};
@@ -30,7 +30,9 @@ use crate::faults::FaultPlan;
 use crate::learning::ContinuousLearner;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
-use crate::predictor::{predict_degraded, GenLenPredictor};
+use crate::predictor::{
+    fallback_prediction, predict_degraded, DriftDetector, DriftEvent, GenLenPredictor,
+};
 use crate::sim::events::EventQueue;
 use crate::sim::{MagnusPolicy, OOM_RELOAD_S};
 use crate::workload::{PredictedRequest, RequestView, TraceStore};
@@ -152,6 +154,13 @@ pub struct ClusterOutput {
     pub recovery_samples: Vec<f64>,
     /// Admissions predicted by the fallback chain (router-side).
     pub fallback_predictions: u32,
+    /// Router-side admissions charged at the upper quantile (ISSUE 9) —
+    /// 0 with uncertainty off.
+    pub low_confidence_admissions: u32,
+    /// Router-side drift-detector demotions — 0 with uncertainty off.
+    pub drift_demotions: u32,
+    /// Router-side drift-detector re-promotions after probation.
+    pub drift_repromotions: u32,
     /// Unique shed request ids, in shed order.
     pub shed_ids: Vec<u64>,
 }
@@ -162,7 +171,13 @@ impl ClusterOutput {
     /// this is bit-identical to the single-instance collector.
     pub fn merged_metrics(&self) -> RunMetrics {
         let ms: Vec<RunMetrics> = self.nodes.iter().map(|n| n.metrics.clone()).collect();
-        merge_metrics(&ms, &self.shed_ids, self.fallback_predictions)
+        let mut m = merge_metrics(&ms, &self.shed_ids, self.fallback_predictions);
+        // Router-side uncertainty counters sit above the per-node
+        // collectors (admission and drift live at the router).
+        m.low_confidence_admissions += self.low_confidence_admissions;
+        m.drift_demotions += self.drift_demotions;
+        m.drift_repromotions += self.drift_repromotions;
+        m
     }
 
     /// Does the exactly-once ledger close?
@@ -269,10 +284,21 @@ pub fn run_cluster_store(
     let (mut steals, mut reroutes) = (0u64, 0u64);
     let (mut failovers, mut rejoins) = (0u32, 0u32);
 
+    // Uncertainty-aware admission state (ISSUE 9).  All router-side:
+    // the drift detector watches signed error on unique completions and
+    // demotes the predictor down the fallback chain past its budget.
+    let unc = &cfg.uncertainty;
+    let mut drift = DriftDetector::new(unc.drift_config());
+    let mut low_conf: HashSet<u64> = HashSet::new();
+    let mut point_of: HashMap<u64, u32> = HashMap::new();
+    let mut low_confidence_admissions = 0u32;
+    let (mut drift_demotions, mut drift_repromotions) = (0u32, 0u32);
+
     // Scratch buffers reused across events.
     let mut arrivals: Vec<usize> = Vec::new();
     let mut arrival_views: Vec<RequestView> = Vec::new();
     let mut preds: Vec<u32> = Vec::new();
+    let mut confs: Vec<f32> = Vec::new();
 
     while let Some((now, ev)) = events.pop() {
         match ev {
@@ -292,20 +318,72 @@ pub fn run_cluster_store(
                 }
                 arrival_views.clear();
                 arrival_views.extend(arrivals.iter().map(|&k| store.view(k)));
-                if plan.has_predictor_faults() {
+                if unc.enabled {
+                    // Uncertainty-aware admission: charge low-confidence
+                    // requests their upper-quantile tokens and remember
+                    // them so routing can spill and drift can observe.
                     preds.clear();
+                    confs.clear();
                     for v in &arrival_views {
-                        let outage = plan.predictor_outage(now);
+                        let outage = plan
+                            .predictor_outage(now)
+                            .or_else(|| plan.app_outage(v.task.app().index(), now))
+                            .or_else(|| drift.active_fallback());
+                        if let Some(mode) = outage {
+                            let p = fallback_prediction(mode, v.user_input_len, g_max);
+                            fallback_predictions += 1;
+                            point_of.insert(v.id, p);
+                            preds.push(p);
+                            confs.push(1.0);
+                        } else {
+                            let pwc =
+                                predictor.predict_with_confidence(*v, unc.upper_quantile as f32);
+                            let point = plan.noisy_prediction(
+                                plan.drifted_prediction(pwc.point, now, g_max),
+                                v.id,
+                                g_max,
+                            );
+                            let low = f64::from(pwc.confidence) < unc.confidence_threshold;
+                            let admitted = if low {
+                                low_confidence_admissions += 1;
+                                low_conf.insert(v.id);
+                                point.max(plan.noisy_prediction(
+                                    plan.drifted_prediction(pwc.upper_quantile, now, g_max),
+                                    v.id,
+                                    g_max,
+                                ))
+                            } else {
+                                point
+                            };
+                            point_of.insert(v.id, point);
+                            preds.push(admitted);
+                            confs.push(pwc.confidence);
+                        }
+                    }
+                } else if plan.has_predictor_faults() {
+                    preds.clear();
+                    confs.clear();
+                    for v in &arrival_views {
+                        let outage = plan
+                            .predictor_outage(now)
+                            .or_else(|| plan.app_outage(v.task.app().index(), now));
                         let (p, fell_back) = predict_degraded(&mut predictor, outage, v, g_max);
                         if fell_back {
                             fallback_predictions += 1;
                             preds.push(p);
                         } else {
-                            preds.push(plan.noisy_prediction(p, v.id, g_max));
+                            preds.push(plan.noisy_prediction(
+                                plan.drifted_prediction(p, now, g_max),
+                                v.id,
+                                g_max,
+                            ));
                         }
+                        confs.push(1.0);
                     }
                 } else {
                     predictor.predict_many_views(&arrival_views, &mut preds);
+                    confs.clear();
+                    confs.resize(preds.len(), 1.0);
                 }
                 for (k, &ti) in arrivals.iter().enumerate() {
                     let meta = store.meta(ti);
@@ -315,6 +393,7 @@ pub fn run_cluster_store(
                     let req = RouteRequest {
                         id: meta.id,
                         predicted,
+                        confidence: confs[k],
                     };
                     match route_policy.route(&req, &loads) {
                         Some(j) => {
@@ -399,6 +478,21 @@ pub fn run_cluster_store(
                         } => {
                             for (pr, sr) in batch.requests.iter().zip(&per_request) {
                                 if ledger.complete(pr.meta.id) {
+                                    if unc.enabled {
+                                        let point = point_of
+                                            .remove(&pr.meta.id)
+                                            .unwrap_or(pr.predicted_gen_len);
+                                        low_conf.remove(&pr.meta.id);
+                                        match drift.observe(
+                                            pr.meta.task.app(),
+                                            pr.meta.user_input_len,
+                                            f64::from(point) - f64::from(pr.meta.gen_len),
+                                        ) {
+                                            DriftEvent::Demoted => drift_demotions += 1,
+                                            DriftEvent::Repromoted => drift_repromotions += 1,
+                                            DriftEvent::None => {}
+                                        }
+                                    }
                                     nodes[n]
                                         .metrics
                                         .record_prediction(pr.predicted_gen_len, pr.meta.gen_len);
@@ -524,6 +618,7 @@ pub fn run_cluster_store(
                                 let req = RouteRequest {
                                     id: pr.meta.id,
                                     predicted: pr.predicted_gen_len,
+                                    confidence: 1.0,
                                 };
                                 match route_policy.route(&req, &loads) {
                                     Some(j) => {
@@ -632,6 +727,9 @@ pub fn run_cluster_store(
         rejoins,
         recovery_samples,
         fallback_predictions,
+        low_confidence_admissions,
+        drift_demotions,
+        drift_repromotions,
         shed_ids,
     }
 }

@@ -221,6 +221,63 @@ impl Default for LearningConfig {
     }
 }
 
+/// Uncertainty-aware scheduling knobs (ISSUE 9): how admission uses the
+/// predictor's confidence annotation, and when sustained prediction
+/// drift demotes the predictor down the fallback chain.
+///
+/// `enabled: false` (the default) keeps every serving path bit-identical
+/// to the point-estimate pipeline — the confidence layer is never even
+/// computed.
+#[derive(Debug, Clone)]
+pub struct UncertaintyConfig {
+    /// Master switch for confidence-aware admission + drift detection.
+    pub enabled: bool,
+    /// Admissions whose modal-bucket confidence falls below this are
+    /// charged their upper-quantile tokens instead of the point.
+    pub confidence_threshold: f64,
+    /// Cumulative vote-share quantile defining the conservative token
+    /// bound (see `predictor::traits`).
+    pub upper_quantile: f64,
+    /// Cluster banding: route requests below this confidence to the
+    /// spillover band (0.0 = spillover disabled, banding unchanged).
+    pub spill_confidence: f64,
+    /// Drift detector: demotion budget in tokens of signed-error EWMA.
+    pub drift_budget_tokens: f64,
+    /// Drift detector: EWMA smoothing factor.
+    pub drift_alpha: f64,
+    /// Drift detector: minimum per-cell completions before demotion.
+    pub drift_min_samples: u32,
+    /// Drift detector: completions to stay demoted before re-promotion.
+    pub drift_probation: u32,
+}
+
+impl Default for UncertaintyConfig {
+    fn default() -> Self {
+        UncertaintyConfig {
+            enabled: false,
+            confidence_threshold: 0.55,
+            upper_quantile: 0.9,
+            spill_confidence: 0.0,
+            drift_budget_tokens: 25.0,
+            drift_alpha: 0.2,
+            drift_min_samples: 25,
+            drift_probation: 64,
+        }
+    }
+}
+
+impl UncertaintyConfig {
+    /// The drift-detector view of these knobs.
+    pub fn drift_config(&self) -> crate::predictor::DriftConfig {
+        crate::predictor::DriftConfig {
+            alpha: self.drift_alpha,
+            budget_tokens: self.drift_budget_tokens,
+            min_samples: self.drift_min_samples,
+            probation: self.drift_probation,
+        }
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -254,6 +311,8 @@ pub struct ServingConfig {
     pub quant: QuantConfig,
     /// Continuous-learning knobs.
     pub learning: LearningConfig,
+    /// Uncertainty-aware scheduling + drift degradation knobs.
+    pub uncertainty: UncertaintyConfig,
     /// CCB baseline: extra stall per admitted request on top of its
     /// initialisation phase (calibrated so CCB's token throughput lands at
     /// the paper's Fig. 10a ratio vs VS; their implementation pauses every
@@ -279,6 +338,7 @@ impl Default for ServingConfig {
             cost: CostModelParams::default(),
             quant: QuantConfig::default(),
             learning: LearningConfig::default(),
+            uncertainty: UncertaintyConfig::default(),
             ccb_overhead_s: 0.70,
             seed: 42,
         }
@@ -361,6 +421,42 @@ impl ServingConfig {
                     .as_f64()
                     .unwrap_or(base.learning.estimator_err_frac),
             },
+            uncertainty: UncertaintyConfig {
+                enabled: j
+                    .path("uncertainty.enabled")
+                    .as_bool()
+                    .unwrap_or(base.uncertainty.enabled),
+                confidence_threshold: j
+                    .path("uncertainty.confidence_threshold")
+                    .as_f64()
+                    .unwrap_or(base.uncertainty.confidence_threshold),
+                upper_quantile: j
+                    .path("uncertainty.upper_quantile")
+                    .as_f64()
+                    .unwrap_or(base.uncertainty.upper_quantile),
+                spill_confidence: j
+                    .path("uncertainty.spill_confidence")
+                    .as_f64()
+                    .unwrap_or(base.uncertainty.spill_confidence),
+                drift_budget_tokens: j
+                    .path("uncertainty.drift_budget_tokens")
+                    .as_f64()
+                    .unwrap_or(base.uncertainty.drift_budget_tokens),
+                drift_alpha: j
+                    .path("uncertainty.drift_alpha")
+                    .as_f64()
+                    .unwrap_or(base.uncertainty.drift_alpha),
+                drift_min_samples: j
+                    .path("uncertainty.drift_min_samples")
+                    .as_u64()
+                    .unwrap_or(u64::from(base.uncertainty.drift_min_samples))
+                    as u32,
+                drift_probation: j
+                    .path("uncertainty.drift_probation")
+                    .as_u64()
+                    .unwrap_or(u64::from(base.uncertainty.drift_probation))
+                    as u32,
+            },
             ccb_overhead_s: j
                 .get("ccb_overhead_s")
                 .as_f64()
@@ -426,6 +522,27 @@ mod tests {
         assert_eq!(c.learning.predictor_period_s, 60.0);
         // untouched fields keep defaults
         assert_eq!(c.wma_threshold, 50_000.0);
+    }
+
+    #[test]
+    fn uncertainty_defaults_off_and_overrides_apply() {
+        let base = ServingConfig::default();
+        assert!(!base.uncertainty.enabled, "confidence layer must default off");
+        let j = Json::parse(
+            r#"{"uncertainty": {"enabled": true, "confidence_threshold": 0.8,
+                "drift_budget_tokens": 5.5, "drift_probation": 16}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j);
+        assert!(c.uncertainty.enabled);
+        assert_eq!(c.uncertainty.confidence_threshold, 0.8);
+        assert_eq!(c.uncertainty.drift_budget_tokens, 5.5);
+        assert_eq!(c.uncertainty.drift_probation, 16);
+        // untouched knobs keep defaults
+        assert_eq!(c.uncertainty.upper_quantile, 0.9);
+        let dc = c.uncertainty.drift_config();
+        assert_eq!(dc.budget_tokens, 5.5);
+        assert_eq!(dc.probation, 16);
     }
 
     #[test]

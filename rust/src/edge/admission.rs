@@ -272,6 +272,20 @@ impl AdmissionController {
     }
 }
 
+/// Confidence-aware memory charge for one admission (ISSUE 9): below the
+/// confidence `threshold` the request is charged its `upper`-quantile
+/// predicted length instead of the `point` estimate, so an uncertain
+/// prediction reserves budget for its plausible worst case.  Pure —
+/// charging is a property of the prediction, not of controller state —
+/// and monotone: the charge is never below the point estimate.
+pub fn admission_charge(point: u32, upper: u32, confidence: f64, threshold: f64) -> u32 {
+    if confidence < threshold {
+        point.max(upper)
+    } else {
+        point
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,6 +411,20 @@ mod tests {
         assert_eq!(c.offer(3, 1, 9.0, 0.0), Offer::Shed(ShedReason::Draining));
         c.complete(1);
         assert_eq!(c.pump(0.0), vec![2u64], "queued work still drains to core");
+    }
+
+    #[test]
+    fn admission_charge_is_confidence_gated_and_monotone() {
+        // Confident: the point estimate is the charge.
+        assert_eq!(admission_charge(100, 400, 0.9, 0.55), 100);
+        // Uncertain: charged the upper quantile.
+        assert_eq!(admission_charge(100, 400, 0.3, 0.55), 400);
+        // Equality is "confident enough" (strict less-than gates).
+        assert_eq!(admission_charge(100, 400, 0.55, 0.55), 100);
+        // Never below the point, even if the bound is degenerate.
+        assert_eq!(admission_charge(100, 50, 0.0, 0.55), 100);
+        // Threshold 0.0 disables the mechanism entirely.
+        assert_eq!(admission_charge(100, 400, 0.0, 0.0), 100);
     }
 
     #[test]

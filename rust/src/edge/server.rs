@@ -46,7 +46,9 @@ use crate::server::{serve_ingress_sim, CoreSignal, EdgeJob, LivePolicy, ServeOpt
 use crate::util::Json;
 use crate::workload::{RequestMeta, TraceStore};
 
-use super::admission::{AdmissionConfig, AdmissionController, Offer, ShedReason};
+use crate::config::UncertaintyConfig;
+
+use super::admission::{admission_charge, AdmissionConfig, AdmissionController, Offer, ShedReason};
 
 use anyhow::{anyhow, Result};
 
@@ -114,6 +116,8 @@ struct Shared {
     ctl: Mutex<Ctl>,
     store: Arc<TraceStore>,
     g_max: u32,
+    /// Confidence-aware admission knobs (ISSUE 9); inert when disabled.
+    unc: UncertaintyConfig,
     started: Instant,
     offered: AtomicU64,
     completed: AtomicU64,
@@ -121,6 +125,9 @@ struct Shared {
     expired: AtomicU64,
     core_shed: AtomicU64,
     bad_requests: AtomicU64,
+    /// Admissions whose prediction confidence fell below the threshold
+    /// (charged at the upper quantile) — 0 with uncertainty off.
+    low_confidence_admissions: AtomicU64,
     /// Wall-clock latency of *completed* requests.
     latency: Mutex<Histogram>,
     /// |predicted − actual| bucket error of completed requests.
@@ -142,6 +149,8 @@ pub struct EdgeReport {
     pub expired: u64,
     pub core_shed: u64,
     pub bad_requests: u64,
+    /// Upper-quantile-charged admissions — 0 with uncertainty off.
+    pub low_confidence_admissions: u64,
     /// Wall latency of completed requests (edge clock).
     pub latency: Histogram,
     /// Socket-level mispredict gauge over completed requests.
@@ -216,6 +225,7 @@ impl EdgeServer {
             }),
             store: Arc::clone(&store),
             g_max: cfg.gpu.g_max,
+            unc: cfg.uncertainty.clone(),
             started: Instant::now(),
             offered: AtomicU64::new(0),
             completed: AtomicU64::new(0),
@@ -223,6 +233,7 @@ impl EdgeServer {
             expired: AtomicU64::new(0),
             core_shed: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
+            low_confidence_admissions: AtomicU64::new(0),
             latency: Mutex::new(Histogram::default()),
             mispredict: Mutex::new(MispredictGauge::default()),
         });
@@ -327,6 +338,7 @@ impl EdgeServer {
             expired: sh.expired.load(Ordering::Relaxed),
             core_shed: sh.core_shed.load(Ordering::Relaxed),
             bad_requests: sh.bad_requests.load(Ordering::Relaxed),
+            low_confidence_admissions: sh.low_confidence_admissions.load(Ordering::Relaxed),
             latency: sh.latency.lock().unwrap().clone(),
             mispredict: sh.mispredict.lock().unwrap().clone(),
             core,
@@ -477,6 +489,25 @@ fn handle_generate(shared: &Shared, req: &HttpRequest) -> HttpResponse {
         let mut meta = shared.store.meta(index);
         meta.id = id;
         let predicted = match &mut ctl.predictor {
+            Some(p) if shared.unc.enabled => {
+                // Confidence-aware admission: charge uncertain requests
+                // their upper-quantile predicted length so the memory
+                // budget reserves room for the plausible worst case.
+                let pwc = p.predict_with_confidence(
+                    shared.store.view(index),
+                    shared.unc.upper_quantile as f32,
+                );
+                if f64::from(pwc.confidence) < shared.unc.confidence_threshold {
+                    shared.low_confidence_admissions.fetch_add(1, Ordering::Relaxed);
+                }
+                admission_charge(
+                    pwc.point,
+                    pwc.upper_quantile,
+                    f64::from(pwc.confidence),
+                    shared.unc.confidence_threshold,
+                )
+                .max(1)
+            }
             Some(p) => p.predict(shared.store.view(index)).max(1),
             None => shared.g_max.max(1),
         };
@@ -589,6 +620,10 @@ fn render_metrics(shared: &Shared) -> String {
     line("expired_total", shared.expired.load(Ordering::Relaxed).to_string());
     line("core_shed_total", shared.core_shed.load(Ordering::Relaxed).to_string());
     line("bad_requests_total", shared.bad_requests.load(Ordering::Relaxed).to_string());
+    line(
+        "low_confidence_admissions_total",
+        shared.low_confidence_admissions.load(Ordering::Relaxed).to_string(),
+    );
     line("queue_depth", depth.to_string());
     line("in_core_requests", in_core.to_string());
     line("in_core_predicted_tokens", in_core_tokens.to_string());

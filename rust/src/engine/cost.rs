@@ -137,6 +137,7 @@ mod tests {
                 gen_len: gen,
                 arrival: 0.0,
                 span: Span::DETACHED,
+                uih: 0,
             },
             predicted_gen_len: gen,
         }

@@ -89,6 +89,36 @@ pub struct PredictorNoise {
     pub jitter: f64,
 }
 
+/// Workload-drift window (ISSUE 9): while open, every *trained*
+/// prediction is scaled by `1 + bias` (a fractional multiplicative
+/// shift; overlapping windows add their biases) and re-clamped to
+/// `[1, G_max]`.  This models the serving distribution drifting away
+/// from the training distribution — the forest's outputs become
+/// systematically wrong relative to the actual generations, while the
+/// forest-free fallback rungs (UIL heuristic, max-bucket) are
+/// unaffected, which is exactly what makes drift-triggered demotion
+/// worth doing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftWindow {
+    pub window: Window,
+    /// Fractional bias, e.g. `-0.3` = trained predictions land 30 % low.
+    pub bias: f64,
+}
+
+/// Per-application predictor outage (ISSUE 9): inside the window,
+/// requests of application index `app` (position in
+/// [`App::ALL`](crate::workload::App::ALL)) are admitted through the
+/// fallback chain while every other app keeps trained predictions — a
+/// partial-degradation axis the global [`PredictorOutage`] cannot
+/// express.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AppOutage {
+    /// Application index in `App::ALL`.
+    pub app: usize,
+    pub window: Window,
+    pub mode: FallbackMode,
+}
+
 /// Cluster-level fault (ISSUE 8): instance `instance` is dead for the
 /// whole window — it serves nothing, fails heartbeats, and its queued +
 /// in-flight work must fail over through the router.
@@ -134,6 +164,11 @@ pub struct FaultPlan {
     pub oom_storms: Vec<OomStorm>,
     pub predictor_outages: Vec<PredictorOutage>,
     pub predictor_noise: Option<PredictorNoise>,
+    /// Workload-drift windows: trained predictions biased by `1 + bias`
+    /// while open (overlapping windows add biases).
+    pub drift_windows: Vec<DriftWindow>,
+    /// Per-application predictor outages.
+    pub app_outages: Vec<AppOutage>,
     /// Injected-fault re-dispatches allowed per batch before its
     /// requests are recorded as shed (OOM splits are not retries).
     pub max_retries: u32,
@@ -193,6 +228,8 @@ impl FaultPlan {
             oom_storms: Vec::new(),
             predictor_outages: Vec::new(),
             predictor_noise: None,
+            drift_windows: Vec::new(),
+            app_outages: Vec::new(),
             max_retries: 3,
             max_worker_restarts: 4,
             restart_backoff_s: 0.25,
@@ -279,9 +316,48 @@ impl FaultPlan {
     }
 
     /// True when admission must route predictions through the fallback/
-    /// noise chain instead of the exact legacy batch-predict call.
+    /// noise/drift chain instead of the exact legacy batch-predict call.
     pub fn has_predictor_faults(&self) -> bool {
-        !self.predictor_outages.is_empty() || self.predictor_noise.is_some()
+        !self.predictor_outages.is_empty()
+            || self.predictor_noise.is_some()
+            || !self.drift_windows.is_empty()
+            || !self.app_outages.is_empty()
+    }
+
+    /// Sum of every open drift-window bias (0.0 when none is open).
+    pub fn drift_bias(&self, now: f64) -> f64 {
+        let mut bias = 0.0;
+        for d in &self.drift_windows {
+            if d.window.contains(now) {
+                bias += d.bias;
+            }
+        }
+        bias
+    }
+
+    /// Apply the open drift bias to one *trained* prediction (identity
+    /// when no window is open).  Clamped to `[1, G_max]` like the
+    /// predictor; fallback-rung predictions must NOT pass through here —
+    /// the forest drifted, the UIL heuristic did not.
+    pub fn drifted_prediction(&self, predicted: u32, now: f64, g_max: u32) -> u32 {
+        if self.drift_windows.is_empty() {
+            return predicted;
+        }
+        let bias = self.drift_bias(now);
+        if bias == 0.0 {
+            return predicted;
+        }
+        let raw = predicted as f64 * (1.0 + bias);
+        (raw.round().max(1.0) as u32).min(g_max.max(1))
+    }
+
+    /// The fallback mode of the first per-app outage window covering
+    /// application index `app` (position in `App::ALL`) at `now`.
+    pub fn app_outage(&self, app: usize, now: f64) -> Option<FallbackMode> {
+        self.app_outages
+            .iter()
+            .find(|o| o.app == app && o.window.contains(now))
+            .map(|o| o.mode)
     }
 
     /// Stateless uniform draw in `[0, 1)` for `(kind, a, b)`.
@@ -386,92 +462,25 @@ impl FaultPlan {
     ///
     /// Keys: `seed=N`, `crash=P`, `err=P`, `stall=A..B@FACTOR`,
     /// `oom=A..B@P`, `predoff=A..B[:heuristic|:max]` (default heuristic),
-    /// `noise=BIAS@JITTER`, `retries=N`, `restarts=N`, `backoff=S`,
-    /// `conndrop=P`, `slowclient=P@DELAY_S` (client-side socket
-    /// adversity), the cluster axes `ikill=I:A..B` (instance I dead in
-    /// window), `islow=I:A..B@FACTOR` (instance I slowed) and
+    /// `noise=BIAS@JITTER`, `drift=A..B@BIAS` (trained predictions
+    /// scaled by `1 + BIAS` inside the window; may repeat),
+    /// `appoff=APP:A..B[:heuristic|:max]` (per-application outage, APP =
+    /// index in `App::ALL`; may repeat), `retries=N`, `restarts=N`,
+    /// `backoff=S`, `conndrop=P`, `slowclient=P@DELAY_S` (client-side
+    /// socket adversity), the cluster axes `ikill=I:A..B` (instance I
+    /// dead in window), `islow=I:A..B@FACTOR` (instance I slowed) and
     /// `ipart=I:A..B` (instance I partitioned — serving, not acking;
     /// each may repeat to accumulate windows), and the bare flag `guard`
     /// (overrun re-bucketing on OOM).
+    ///
+    /// Malformed specs name the offending clause: `drift=5..@` fails
+    /// with ``fault spec clause `drift=5..@`: …``, not a blanket parse
+    /// error.
     pub fn parse_spec(spec: &str) -> anyhow::Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-            if part == "guard" {
-                plan.overrun_guard = true;
-                continue;
-            }
-            let (key, val) = part
-                .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("bad fault spec `{part}` (want key=value)"))?;
-            match key {
-                "seed" => plan.seed = num(val)? as u64,
-                "crash" => plan.crash_p = num(val)?,
-                "err" => plan.serve_error_p = num(val)?,
-                "retries" => plan.max_retries = num(val)? as u32,
-                "restarts" => plan.max_worker_restarts = num(val)? as u32,
-                "backoff" => plan.restart_backoff_s = num(val)?,
-                "stall" => {
-                    let (window, factor) = window_at(val)?;
-                    plan.stalls.push(Stall { window, factor });
-                }
-                "oom" => {
-                    let (window, p) = window_at(val)?;
-                    plan.oom_storms.push(OomStorm { window, p });
-                }
-                "predoff" => {
-                    let (range, mode) = match val.split_once(':') {
-                        None => (val, FallbackMode::Heuristic),
-                        Some((r, "heuristic")) => (r, FallbackMode::Heuristic),
-                        Some((r, "max")) => (r, FallbackMode::MaxBucket),
-                        Some((_, m)) => anyhow::bail!("unknown fallback mode `{m}`"),
-                    };
-                    plan.predictor_outages.push(PredictorOutage {
-                        window: window_of(range)?,
-                        mode,
-                    });
-                }
-                "noise" => {
-                    let (bias, jitter) = val
-                        .split_once('@')
-                        .ok_or_else(|| anyhow::anyhow!("noise wants BIAS@JITTER, got `{val}`"))?;
-                    plan.predictor_noise = Some(PredictorNoise {
-                        bias: num(bias)?,
-                        jitter: num(jitter)?,
-                    });
-                }
-                "ikill" => {
-                    let (instance, rest) = inst_of(val)?;
-                    plan.inst_kills.push(InstKill {
-                        instance,
-                        window: window_of(rest)?,
-                    });
-                }
-                "islow" => {
-                    let (instance, rest) = inst_of(val)?;
-                    let (window, factor) = window_at(rest)?;
-                    plan.inst_slows.push(InstSlow {
-                        instance,
-                        window,
-                        factor,
-                    });
-                }
-                "ipart" => {
-                    let (instance, rest) = inst_of(val)?;
-                    plan.inst_partitions.push(InstPartition {
-                        instance,
-                        window: window_of(rest)?,
-                    });
-                }
-                "conndrop" => plan.conn_drop_p = num(val)?,
-                "slowclient" => {
-                    let (p, delay) = val.split_once('@').ok_or_else(|| {
-                        anyhow::anyhow!("slowclient wants P@DELAY_S, got `{val}`")
-                    })?;
-                    plan.slow_client_p = num(p)?;
-                    plan.slow_client_delay_s = num(delay)?;
-                }
-                _ => anyhow::bail!("unknown fault spec key `{key}`"),
-            }
+            apply_clause(&mut plan, part)
+                .map_err(|e| anyhow::anyhow!("fault spec clause `{part}`: {e}"))?;
         }
         Ok(plan)
     }
@@ -532,6 +541,33 @@ impl FaultPlan {
                         ("jitter", Json::num(n.jitter)),
                     ]),
                 },
+            ),
+            (
+                "drift_windows",
+                Json::Arr(
+                    self.drift_windows
+                        .iter()
+                        .map(|d| {
+                            let mut f = win(&d.window);
+                            f.push(("bias", Json::num(d.bias)));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "app_outages",
+                Json::Arr(
+                    self.app_outages
+                        .iter()
+                        .map(|o| {
+                            let mut f = win(&o.window);
+                            f.push(("app", Json::num(o.app as f64)));
+                            f.push(("mode", Json::str(mode_name(o.mode))));
+                            Json::obj(f)
+                        })
+                        .collect(),
+                ),
             ),
             ("max_retries", Json::num(self.max_retries)),
             ("max_worker_restarts", Json::num(self.max_worker_restarts)),
@@ -628,6 +664,28 @@ impl FaultPlan {
                 jitter: req_f64(noise, "jitter")?,
             });
         }
+        if let Some(xs) = j.get("drift_windows").as_arr() {
+            for x in xs {
+                plan.drift_windows.push(DriftWindow {
+                    window: window_json(x)?,
+                    bias: req_f64(x, "bias")?,
+                });
+            }
+        }
+        if let Some(xs) = j.get("app_outages").as_arr() {
+            for x in xs {
+                let mode = match x.get("mode").as_str() {
+                    None | Some("heuristic") => FallbackMode::Heuristic,
+                    Some("max-bucket") | Some("max") => FallbackMode::MaxBucket,
+                    Some(m) => anyhow::bail!("unknown fallback mode `{m}`"),
+                };
+                plan.app_outages.push(AppOutage {
+                    app: req_usize(x, "app")?,
+                    window: window_json(x)?,
+                    mode,
+                });
+            }
+        }
         if let Some(v) = j.get("max_retries").as_u64() {
             plan.max_retries = v as u32;
         }
@@ -669,6 +727,119 @@ impl FaultPlan {
             }
         }
         Ok(plan)
+    }
+}
+
+/// Apply one compact-spec clause to `plan`.  Errors describe what the
+/// clause wanted; [`FaultPlan::parse_spec`] wraps them with the clause
+/// text itself so the caller sees exactly which part of the spec is
+/// malformed.
+fn apply_clause(plan: &mut FaultPlan, part: &str) -> anyhow::Result<()> {
+    if part == "guard" {
+        plan.overrun_guard = true;
+        return Ok(());
+    }
+    let (key, val) = part
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("want key=value"))?;
+    match key {
+        "seed" => plan.seed = num(val)? as u64,
+        "crash" => plan.crash_p = num(val)?,
+        "err" => plan.serve_error_p = num(val)?,
+        "retries" => plan.max_retries = num(val)? as u32,
+        "restarts" => plan.max_worker_restarts = num(val)? as u32,
+        "backoff" => plan.restart_backoff_s = num(val)?,
+        "stall" => {
+            let (window, factor) = window_at(val)?;
+            plan.stalls.push(Stall { window, factor });
+        }
+        "oom" => {
+            let (window, p) = window_at(val)?;
+            plan.oom_storms.push(OomStorm { window, p });
+        }
+        "predoff" => {
+            let (range, mode) = range_mode(val)?;
+            plan.predictor_outages.push(PredictorOutage {
+                window: window_of(range)?,
+                mode,
+            });
+        }
+        "noise" => {
+            let (bias, jitter) = val
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("noise wants BIAS@JITTER, got `{val}`"))?;
+            plan.predictor_noise = Some(PredictorNoise {
+                bias: num(bias)?,
+                jitter: num(jitter)?,
+            });
+        }
+        "drift" => {
+            let (window, bias) = window_at(val)?;
+            plan.drift_windows.push(DriftWindow { window, bias });
+        }
+        "appoff" => {
+            let (app, rest) = val.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("appoff wants APP:A..B[:heuristic|:max], got `{val}`")
+            })?;
+            let app = app
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad app index `{app}`"))?;
+            if app >= crate::workload::App::ALL.len() {
+                anyhow::bail!(
+                    "app index {app} out of range (apps 0..{})",
+                    crate::workload::App::ALL.len()
+                );
+            }
+            let (range, mode) = range_mode(rest)?;
+            plan.app_outages.push(AppOutage {
+                app,
+                window: window_of(range)?,
+                mode,
+            });
+        }
+        "ikill" => {
+            let (instance, rest) = inst_of(val)?;
+            plan.inst_kills.push(InstKill {
+                instance,
+                window: window_of(rest)?,
+            });
+        }
+        "islow" => {
+            let (instance, rest) = inst_of(val)?;
+            let (window, factor) = window_at(rest)?;
+            plan.inst_slows.push(InstSlow {
+                instance,
+                window,
+                factor,
+            });
+        }
+        "ipart" => {
+            let (instance, rest) = inst_of(val)?;
+            plan.inst_partitions.push(InstPartition {
+                instance,
+                window: window_of(rest)?,
+            });
+        }
+        "conndrop" => plan.conn_drop_p = num(val)?,
+        "slowclient" => {
+            let (p, delay) = val
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("slowclient wants P@DELAY_S, got `{val}`"))?;
+            plan.slow_client_p = num(p)?;
+            plan.slow_client_delay_s = num(delay)?;
+        }
+        _ => anyhow::bail!("unknown fault spec key `{key}`"),
+    }
+    Ok(())
+}
+
+/// Split an optional `:heuristic`/`:max` suffix off a window range.
+fn range_mode(val: &str) -> anyhow::Result<(&str, FallbackMode)> {
+    match val.split_once(':') {
+        None => Ok((val, FallbackMode::Heuristic)),
+        Some((r, "heuristic")) => Ok((r, FallbackMode::Heuristic)),
+        Some((r, "max")) => Ok((r, FallbackMode::MaxBucket)),
+        Some((_, m)) => anyhow::bail!("unknown fallback mode `{m}`"),
     }
 }
 
@@ -877,13 +1048,110 @@ mod tests {
     }
 
     #[test]
+    fn drift_windows_bias_trained_predictions_only_inside() {
+        let mut plan = FaultPlan::none();
+        plan.drift_windows.push(DriftWindow {
+            window: Window::new(10.0, 20.0),
+            bias: -0.3,
+        });
+        plan.drift_windows.push(DriftWindow {
+            window: Window::new(15.0, 30.0),
+            bias: -0.2,
+        });
+        assert!(!plan.is_noop(), "drift counts as a predictor fault");
+        assert!(plan.has_predictor_faults());
+        // Closed: identity, bit-exact.
+        assert_eq!(plan.drifted_prediction(100, 5.0, 1024), 100);
+        assert_eq!(plan.drift_bias(5.0), 0.0);
+        // One window open: ×0.7.
+        assert_eq!(plan.drifted_prediction(100, 12.0, 1024), 70);
+        // Overlap adds biases: ×0.5.
+        assert!((plan.drift_bias(17.0) + 0.5).abs() < 1e-12);
+        assert_eq!(plan.drifted_prediction(100, 17.0, 1024), 50);
+        // Clamps like the predictor.
+        assert_eq!(plan.drifted_prediction(1, 17.0, 1024), 1);
+        plan.drift_windows.push(DriftWindow {
+            window: Window::new(40.0, 50.0),
+            bias: 100.0,
+        });
+        assert_eq!(plan.drifted_prediction(100, 45.0, 64), 64);
+    }
+
+    #[test]
+    fn app_outages_gate_per_application() {
+        let mut plan = FaultPlan::none();
+        plan.app_outages.push(AppOutage {
+            app: 2,
+            window: Window::new(10.0, 20.0),
+            mode: FallbackMode::MaxBucket,
+        });
+        assert!(!plan.is_noop());
+        assert!(plan.has_predictor_faults());
+        assert_eq!(plan.app_outage(2, 15.0), Some(FallbackMode::MaxBucket));
+        assert_eq!(plan.app_outage(2, 20.0), None, "half-open window");
+        assert_eq!(plan.app_outage(1, 15.0), None, "other apps unaffected");
+        // The *global* outage accessor is independent of the per-app axis.
+        assert_eq!(plan.predictor_outage(15.0), None);
+    }
+
+    #[test]
+    fn malformed_clauses_name_the_offender() {
+        // Satellite: every malformed spec error must carry the offending
+        // clause text, so multi-clause specs are debuggable.
+        let cases = [
+            ("drift=5..@", "drift=5..@"),
+            ("seed=1,drift=5..@,crash=0.1", "drift=5..@"),
+            ("appoff=x:1..2", "appoff=x:1..2"),
+            ("appoff=9:1..2", "appoff=9:1..2"),
+            ("appoff=1:1..2:turbo", "appoff=1:1..2:turbo"),
+            ("appoff=0", "appoff=0"),
+            ("stall=banana", "stall=banana"),
+            ("noise=5", "noise=5"),
+            ("predoff=1..2:warp", "predoff=1..2:warp"),
+            ("ikill=10..20", "ikill=10..20"),
+            ("crash", "crash"),
+            ("bogus=1", "bogus=1"),
+            ("slowclient=0.1", "slowclient=0.1"),
+        ];
+        for (spec, clause) in cases {
+            let err = FaultPlan::parse_spec(spec).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("`{clause}`")),
+                "spec `{spec}`: error `{err}` does not name clause `{clause}`"
+            );
+        }
+        // Valid clauses around a bad one still parse up to the error.
+        let err = FaultPlan::parse_spec("crash=0.5,drift=..@,err=0.1")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`drift=..@`"), "{err}");
+    }
+
+    #[test]
     fn spec_parses_every_axis() {
         let plan = FaultPlan::parse_spec(
             "seed=7,crash=0.1,err=0.05,stall=10..40@3,oom=0..100@0.2,predoff=5..25:max,\
              noise=8@0.5,retries=2,restarts=6,backoff=0.1,conndrop=0.2,slowclient=0.1@0.4,\
-             ikill=1:10..20,islow=0:5..15@3,ipart=2:30..40,ikill=3:50..60,guard",
+             ikill=1:10..20,islow=0:5..15@3,ipart=2:30..40,ikill=3:50..60,\
+             drift=100..200@-0.3,drift=150..250@0.1,appoff=4:10..30:max,appoff=0:40..50,guard",
         )
         .unwrap();
+        assert_eq!(
+            plan.drift_windows,
+            vec![
+                DriftWindow { window: Window::new(100.0, 200.0), bias: -0.3 },
+                DriftWindow { window: Window::new(150.0, 250.0), bias: 0.1 },
+            ],
+            "drift windows accumulate"
+        );
+        assert_eq!(
+            plan.app_outages,
+            vec![
+                AppOutage { app: 4, window: Window::new(10.0, 30.0), mode: FallbackMode::MaxBucket },
+                AppOutage { app: 0, window: Window::new(40.0, 50.0), mode: FallbackMode::Heuristic },
+            ],
+            "per-app outages accumulate; mode defaults to heuristic"
+        );
         assert_eq!(plan.seed, 7);
         assert_eq!(plan.crash_p, 0.1);
         assert_eq!(plan.serve_error_p, 0.05);
@@ -926,9 +1194,11 @@ mod tests {
     fn json_roundtrip_preserves_plan() {
         let plan = FaultPlan::parse_spec(
             "seed=11,crash=0.2,err=0.1,stall=1..2@4,oom=3..4@0.5,predoff=5..6,noise=2@0.25,\
-             conndrop=0.3,slowclient=0.2@0.05,ikill=0:1..2,islow=1:2..3@5,ipart=2:4..6,guard",
+             conndrop=0.3,slowclient=0.2@0.05,ikill=0:1..2,islow=1:2..3@5,ipart=2:4..6,\
+             drift=7..9@-0.4,appoff=3:8..12:max,appoff=1:20..25,guard",
         )
         .unwrap();
+        assert!(!plan.drift_windows.is_empty() && plan.app_outages.len() == 2);
         let back = FaultPlan::from_json(&plan.to_json()).unwrap();
         assert_eq!(back, plan);
         let reparsed =

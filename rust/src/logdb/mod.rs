@@ -275,6 +275,7 @@ mod tests {
                 gen_len: 7,
                 arrival: 0.0,
                 span: Span::DETACHED,
+                uih: 0,
             },
             predicted_gen_len: 9,
             actual_gen_len: 7,

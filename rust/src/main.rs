@@ -396,10 +396,20 @@ fn cmd_serve_cluster(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()>
         route_seed: cfg.seed ^ 0x524f_5554,
     };
     let route_name = args.get_or("route", "jspq").to_ascii_lowercase();
-    let mut route = parse_route_policy(&route_name, copts.route_seed, g_max)
-        .ok_or_else(|| {
+    let mut route = if matches!(route_name.as_str(), "band" | "length" | "slice")
+        && cfg.uncertainty.spill_confidence > 0.0
+    {
+        // Config-driven spillover: the banding policy honours the
+        // uncertainty knob without a separate policy name.
+        Box::new(magnus::cluster::LengthPartitioned {
+            g_max,
+            spill_threshold: cfg.uncertainty.spill_confidence as f32,
+        }) as Box<dyn magnus::cluster::RoutePolicy>
+    } else {
+        parse_route_policy(&route_name, copts.route_seed, g_max).ok_or_else(|| {
             anyhow::anyhow!("unknown route policy {route_name:?} (one of {ROUTE_POLICY_NAMES:?})")
-        })?;
+        })?
+    };
 
     let split = build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
     let mut predictor = GenLenPredictor::new(Variant::Usin, cfg);

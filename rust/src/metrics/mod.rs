@@ -242,6 +242,19 @@ pub struct RunMetrics {
     /// Faults the plan injected (crashes + transient errors + forced
     /// OOMs) — 0 in any fault-free run, asserted by the golden gates.
     pub injected_faults: u32,
+    /// Admissions charged at the predictor's upper-quantile length
+    /// because confidence fell below the configured threshold — 0 with
+    /// uncertainty-aware scheduling off (golden-gated).
+    pub low_confidence_admissions: u32,
+    /// Drift-detector demotions down the fallback chain — 0 with
+    /// uncertainty-aware scheduling off (golden-gated).
+    pub drift_demotions: u32,
+    /// Drift-detector re-promotions after probation drained.
+    pub drift_repromotions: u32,
+    /// Low-confidence batches split pre-emptively by the speculative
+    /// overrun guard at an injected OOM, avoiding the full OOM reload —
+    /// 0 with uncertainty-aware scheduling off (golden-gated).
+    pub speculative_rebuckets: u32,
     /// Log-scale response-time histogram fed by [`RunMetrics::record`]
     /// (p50/p90/p99 in [`Summary`], bucket export on `/metrics`).
     pub response_hist: Histogram,
@@ -280,6 +293,12 @@ pub struct Summary {
     pub worker_restarts: u32,
     /// Fallback-chain predictions — 0 fault-free.
     pub fallback_predictions: u32,
+    /// Upper-quantile-charged admissions — 0 with uncertainty off.
+    pub low_confidence_admissions: u32,
+    /// Drift-detector demotions — 0 with uncertainty off.
+    pub drift_demotions: u32,
+    /// Speculative low-confidence batch splits — 0 with uncertainty off.
+    pub speculative_rebuckets: u32,
     /// Fraction of completed requests whose predicted generation length
     /// missed the actual one's [`MISPREDICT_BUCKET_TOKENS`]-wide bucket
     /// (0.0 when no predictions were observed).
@@ -299,6 +318,10 @@ impl RunMetrics {
             fallback_predictions: 0,
             rebucketed: 0,
             injected_faults: 0,
+            low_confidence_admissions: 0,
+            drift_demotions: 0,
+            drift_repromotions: 0,
+            speculative_rebuckets: 0,
             response_hist: Histogram::new(),
             mispredict: MispredictGauge::default(),
         }
@@ -360,6 +383,9 @@ impl RunMetrics {
             retries: self.retries,
             worker_restarts: self.worker_restarts,
             fallback_predictions: self.fallback_predictions,
+            low_confidence_admissions: self.low_confidence_admissions,
+            drift_demotions: self.drift_demotions,
+            speculative_rebuckets: self.speculative_rebuckets,
             mispredict_rate: self.mispredict_rate(),
         }
     }
@@ -540,17 +566,27 @@ mod tests {
         m.retries = 3;
         m.worker_restarts = 1;
         m.fallback_predictions = 4;
+        m.low_confidence_admissions = 6;
+        m.drift_demotions = 2;
+        m.speculative_rebuckets = 5;
         let s = m.summarise();
         assert_eq!(s.shed_requests, 2);
         assert_eq!(m.shed, vec![7, 9]);
         assert_eq!(s.retries, 3);
         assert_eq!(s.worker_restarts, 1);
         assert_eq!(s.fallback_predictions, 4);
+        assert_eq!(s.low_confidence_admissions, 6);
+        assert_eq!(s.drift_demotions, 2);
+        assert_eq!(s.speculative_rebuckets, 5);
         // a fresh collector reports everything zero (golden-gate shape)
         let z = RunMetrics::new().summarise();
         assert_eq!(
             (z.shed_requests, z.retries, z.worker_restarts, z.fallback_predictions),
             (0, 0, 0, 0)
+        );
+        assert_eq!(
+            (z.low_confidence_admissions, z.drift_demotions, z.speculative_rebuckets),
+            (0, 0, 0)
         );
     }
 }

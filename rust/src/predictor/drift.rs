@@ -1,0 +1,291 @@
+//! Per-app / per-user-tier prediction-drift detection (ISSUE 9c).
+//!
+//! The continuous-learning sweep already *repairs* the forest after the
+//! workload shifts, but repair lags by a refit interval — between the
+//! shift and the refit, every admission runs on systematically wrong
+//! predictions (PR 6's chaos runs surface this as OOM storms).  This
+//! module watches the **signed** prediction error of completed
+//! generations, bucketed per (application, user-input-length tier), and
+//! drives a small deterministic state machine:
+//!
+//! * **Healthy** — trained predictions serve admissions.  When any
+//!   cell's signed-error EWMA exceeds the drift budget (after a minimum
+//!   sample count, so cold cells can't trigger), the detector demotes.
+//! * **Demoted** — admissions run the PR 6 fallback chain
+//!   ([`FallbackMode::Heuristic`]: the UIL rung, which is immune to
+//!   forest drift) for a fixed probation window of completions, giving
+//!   the learner time to absorb + refit.  When the window drains, the
+//!   detector re-promotes and resets every cell.
+//!
+//! Everything is integer/EWMA arithmetic off completion events — no
+//! clocks, no randomness — so a seeded fault schedule replays the exact
+//! demotion/re-promotion sequence bit-for-bit in sim, live server, edge
+//! and cluster.
+
+use crate::predictor::fallback::FallbackMode;
+use crate::workload::App;
+
+/// Number of user-input-length tiers each app's errors are bucketed
+/// into (short / medium / long / very long prompts behave differently
+/// under drift, so one shared EWMA would wash real shifts out).
+pub const N_UIL_TIERS: usize = 4;
+
+/// Tier of a user-input length (tokens).
+#[inline]
+pub fn uil_tier(uil: u32) -> usize {
+    match uil {
+        0..=63 => 0,
+        64..=191 => 1,
+        192..=511 => 2,
+        _ => 3,
+    }
+}
+
+/// Detector knobs — normally sourced from
+/// [`UncertaintyConfig`](crate::config::UncertaintyConfig).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// EWMA smoothing factor in (0, 1]; higher reacts faster.
+    pub alpha: f64,
+    /// Demote when a cell's |signed-error EWMA| exceeds this many tokens.
+    pub budget_tokens: f64,
+    /// Minimum completions in a cell before it may demote (cold-start
+    /// noise guard).
+    pub min_samples: u32,
+    /// Completions to stay demoted before re-promoting.
+    pub probation: u32,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            alpha: 0.2,
+            budget_tokens: 25.0,
+            min_samples: 25,
+            probation: 64,
+        }
+    }
+}
+
+/// What one completion observation did to the detector state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftEvent {
+    None,
+    /// A cell blew its budget: the predictor is demoted to the fallback
+    /// chain for the probation window.
+    Demoted,
+    /// The probation window drained: trained predictions resume.
+    Repromoted,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Cell {
+    ewma: f64,
+    n: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Healthy,
+    Demoted { remaining: u32 },
+}
+
+/// Windowed signed-error drift detector over `App::ALL × N_UIL_TIERS`
+/// cells.
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    cells: Vec<Cell>,
+    state: State,
+    demotions: u32,
+    repromotions: u32,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        DriftDetector {
+            cfg,
+            cells: vec![Cell::default(); App::ALL.len() * N_UIL_TIERS],
+            state: State::Healthy,
+            demotions: 0,
+            repromotions: 0,
+        }
+    }
+
+    /// Feed one completed generation: `signed_err = predicted − actual`
+    /// (point estimate, not the conservatively charged value).  Returns
+    /// what, if anything, the observation did to the detector state.
+    pub fn observe(&mut self, app: App, uil: u32, signed_err: f64) -> DriftEvent {
+        let cell = &mut self.cells[app.index() * N_UIL_TIERS + uil_tier(uil)];
+        cell.n += 1;
+        cell.ewma = if cell.n == 1 {
+            signed_err
+        } else {
+            self.cfg.alpha * signed_err + (1.0 - self.cfg.alpha) * cell.ewma
+        };
+        match self.state {
+            State::Healthy => {
+                if cell.n >= u64::from(self.cfg.min_samples)
+                    && cell.ewma.abs() > self.cfg.budget_tokens
+                {
+                    self.state = State::Demoted {
+                        remaining: self.cfg.probation.max(1),
+                    };
+                    self.demotions += 1;
+                    self.reset_cells();
+                    DriftEvent::Demoted
+                } else {
+                    DriftEvent::None
+                }
+            }
+            State::Demoted { remaining } => {
+                let remaining = remaining - 1;
+                if remaining == 0 {
+                    self.state = State::Healthy;
+                    self.repromotions += 1;
+                    // Fresh cells: probation completions were served by
+                    // the fallback rung, so their errors say nothing
+                    // about the (possibly refitted) forest.
+                    self.reset_cells();
+                    DriftEvent::Repromoted
+                } else {
+                    self.state = State::Demoted { remaining };
+                    DriftEvent::None
+                }
+            }
+        }
+    }
+
+    fn reset_cells(&mut self) {
+        for c in &mut self.cells {
+            *c = Cell::default();
+        }
+    }
+
+    /// The fallback rung admissions must use right now (`None` while
+    /// healthy).  The UIL heuristic rung: cheap, forest-free, immune to
+    /// the drift that tripped the budget.
+    pub fn active_fallback(&self) -> Option<FallbackMode> {
+        match self.state {
+            State::Healthy => None,
+            State::Demoted { .. } => Some(FallbackMode::Heuristic),
+        }
+    }
+
+    pub fn is_demoted(&self) -> bool {
+        matches!(self.state, State::Demoted { .. })
+    }
+
+    /// Total demotion events so far.
+    pub fn demotions(&self) -> u32 {
+        self.demotions
+    }
+
+    /// Total re-promotion events so far.
+    pub fn repromotions(&self) -> u32 {
+        self.repromotions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DriftConfig {
+        DriftConfig {
+            alpha: 0.5,
+            budget_tokens: 10.0,
+            min_samples: 4,
+            probation: 6,
+        }
+    }
+
+    #[test]
+    fn unbiased_errors_never_demote() {
+        let mut d = DriftDetector::new(cfg());
+        for i in 0..500 {
+            let e = if i % 2 == 0 { 8.0 } else { -8.0 };
+            assert_eq!(d.observe(App::MT, 30, e), DriftEvent::None);
+        }
+        assert!(!d.is_demoted());
+        assert_eq!(d.demotions(), 0);
+    }
+
+    #[test]
+    fn sustained_bias_demotes_then_probation_repromotes() {
+        let mut d = DriftDetector::new(cfg());
+        // Below min_samples nothing can fire, however large the bias.
+        for _ in 0..3 {
+            assert_eq!(d.observe(App::GC, 30, 100.0), DriftEvent::None);
+        }
+        assert_eq!(d.observe(App::GC, 30, 100.0), DriftEvent::Demoted);
+        assert!(d.is_demoted());
+        assert_eq!(d.active_fallback(), Some(FallbackMode::Heuristic));
+        // Probation: exactly `probation` completions, then re-promote —
+        // even if the observed errors are still large (they come from
+        // the fallback rung, not the forest).
+        for _ in 0..5 {
+            assert_eq!(d.observe(App::GC, 30, 100.0), DriftEvent::None);
+        }
+        assert_eq!(d.observe(App::GC, 30, 100.0), DriftEvent::Repromoted);
+        assert!(!d.is_demoted());
+        assert_eq!(d.active_fallback(), None);
+        assert_eq!((d.demotions(), d.repromotions()), (1, 1));
+        // Cells were reset: the next demotion needs min_samples again.
+        for _ in 0..3 {
+            assert_eq!(d.observe(App::GC, 30, 100.0), DriftEvent::None);
+        }
+        assert_eq!(d.observe(App::GC, 30, 100.0), DriftEvent::Demoted);
+        assert_eq!(d.demotions(), 2);
+    }
+
+    #[test]
+    fn cells_are_keyed_per_app_and_tier() {
+        let mut d = DriftDetector::new(cfg());
+        // Alternate apps: each cell accumulates its own count, so the
+        // budget trips at min_samples of the *biased* cell only.
+        for _ in 0..3 {
+            assert_eq!(d.observe(App::MT, 30, 50.0), DriftEvent::None);
+            assert_eq!(d.observe(App::CC, 30, 0.0), DriftEvent::None);
+        }
+        assert_eq!(d.observe(App::MT, 30, 50.0), DriftEvent::Demoted);
+
+        // Different UIL tiers of one app are independent cells too:
+        // three short-prompt samples plus three long-prompt samples
+        // leave both cells below min_samples.
+        let mut d = DriftDetector::new(cfg());
+        for _ in 0..3 {
+            assert_eq!(d.observe(App::MT, 10, 50.0), DriftEvent::None);
+            assert_eq!(d.observe(App::MT, 600, 50.0), DriftEvent::None);
+        }
+        assert!(!d.is_demoted());
+        assert_eq!(d.observe(App::MT, 10, 50.0), DriftEvent::Demoted);
+    }
+
+    #[test]
+    fn uil_tiers_partition_the_length_axis() {
+        assert_eq!(uil_tier(0), 0);
+        assert_eq!(uil_tier(63), 0);
+        assert_eq!(uil_tier(64), 1);
+        assert_eq!(uil_tier(191), 1);
+        assert_eq!(uil_tier(192), 2);
+        assert_eq!(uil_tier(511), 2);
+        assert_eq!(uil_tier(512), 3);
+        assert_eq!(uil_tier(u32::MAX), 3);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let run = || {
+            let mut d = DriftDetector::new(cfg());
+            let mut events = Vec::new();
+            for i in 0u64..200 {
+                let app = App::ALL[(i % 6) as usize];
+                let uil = (i * 37 % 700) as u32;
+                let err = if i < 100 { 40.0 } else { -3.0 };
+                events.push(d.observe(app, uil, err));
+            }
+            (events, d.demotions(), d.repromotions())
+        };
+        assert_eq!(run(), run());
+    }
+}

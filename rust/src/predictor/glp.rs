@@ -18,6 +18,7 @@ use crate::config::ServingConfig;
 use crate::predictor::data::ColMatrix;
 use crate::predictor::features::{FeatureExtractor, Variant};
 use crate::predictor::forest::{Forest, ForestParams};
+use crate::predictor::traits::{self, PredictionWithConfidence};
 use crate::predictor::tree::TreeParams;
 use crate::util::Rng;
 use crate::workload::{Request, RequestView, TaskId};
@@ -41,6 +42,8 @@ pub struct GenLenPredictor {
     /// Scratch: row-major batch rows + raw outputs for `predict_many`.
     batch_rows: Vec<f32>,
     batch_out: Vec<f32>,
+    /// Scratch: per-tree raw predictions for the confidence path.
+    vote_buf: Vec<f32>,
 }
 
 impl GenLenPredictor {
@@ -67,6 +70,7 @@ impl GenLenPredictor {
             row_buf: Vec::new(),
             batch_rows: Vec::new(),
             batch_out: Vec::new(),
+            vote_buf: Vec::new(),
         }
     }
 
@@ -223,6 +227,68 @@ impl GenLenPredictor {
         self.predict_many_views(&views, out);
     }
 
+    /// Per-tree raw predictions of the forest that would serve `req` —
+    /// the vote distribution behind the bucket-classifier confidence.
+    /// Returns `false` (and leaves `out` empty) when no trained forest
+    /// covers the request (UILO, or cold start), i.e. when the point
+    /// prediction is the UIL heuristic and carries no vote spread.
+    pub fn tree_predictions<'a>(
+        &mut self,
+        req: impl Into<RequestView<'a>>,
+        out: &mut Vec<f32>,
+    ) -> bool {
+        let req: RequestView<'a> = req.into();
+        out.clear();
+        let trained = match self.variant {
+            Variant::Uilo => false,
+            Variant::Raft => self.per_task[req.task.index()].is_some(),
+            Variant::Inst | Variant::Usin => self.global.is_some(),
+        };
+        if !trained {
+            return false;
+        }
+        self.fx.features_into(self.variant, req, &mut self.row_buf);
+        let forest = match self.variant {
+            Variant::Raft => self.per_task[req.task.index()].as_ref().unwrap(),
+            _ => self.global.as_ref().unwrap(),
+        };
+        for t in forest.trees() {
+            out.push(t.predict(&self.row_buf));
+        }
+        true
+    }
+
+    /// Point prediction plus bucketed confidence: the per-tree votes of
+    /// the serving forest, histogrammed into the [`traits::N_BUCKETS`]
+    /// generation-length buckets.  The `point` field is **exactly**
+    /// [`GenLenPredictor::predict`] (same flat-forest path, same clamp) —
+    /// the confidence layer annotates it and never perturbs it.  Cold
+    /// start / UILO return a fully-confident one-hot (there is no vote
+    /// spread to measure), so untrained predictors behave like the point
+    /// pipeline.
+    pub fn predict_with_confidence<'a>(
+        &mut self,
+        req: impl Into<RequestView<'a>>,
+        quantile: f32,
+    ) -> PredictionWithConfidence {
+        let req: RequestView<'a> = req.into();
+        let point = self.predict(req);
+        let mut votes = std::mem::take(&mut self.vote_buf);
+        let trained = self.tree_predictions(req, &mut votes);
+        let pwc = if trained {
+            traits::prediction_from_votes(point, &votes, self.g_max, quantile)
+        } else {
+            PredictionWithConfidence::certain(point, self.g_max)
+        };
+        self.vote_buf = votes;
+        pwc
+    }
+
+    /// The generation-length cap every prediction is clamped to.
+    pub fn g_max(&self) -> u32 {
+        self.g_max
+    }
+
     /// The trained INST/USIN forest, if any (benches and golden tests
     /// drive the reference traversal through it).
     pub fn global_forest(&self) -> Option<&Forest> {
@@ -315,6 +381,37 @@ mod tests {
             for (r, &got) in split.test.iter().zip(&out) {
                 assert_eq!(got, p.predict(r), "{}", v.name());
             }
+        }
+    }
+
+    #[test]
+    fn confidence_annotates_without_perturbing_the_point() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 80, 30, 1024, 18);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        for r in &split.test {
+            let pwc = p.predict_with_confidence(r, 0.9);
+            assert_eq!(pwc.point, p.predict(r));
+            let sum: f32 = pwc.per_bucket_probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+            assert!(pwc.confidence > 0.0 && pwc.confidence <= 1.0);
+            assert!(pwc.upper_quantile >= pwc.point);
+            assert!(pwc.upper_quantile <= cfg.gpu.g_max);
+        }
+    }
+
+    #[test]
+    fn cold_start_confidence_is_a_one_hot() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 10, 4, 1024, 19);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        for r in &split.test {
+            let pwc = p.predict_with_confidence(r, 0.9);
+            assert_eq!(pwc.point, p.predict(r));
+            assert_eq!(pwc.confidence, 1.0);
+            assert_eq!(pwc.upper_quantile, pwc.point);
+            assert_eq!(pwc.per_bucket_probs[pwc.bucket], 1.0);
         }
     }
 

@@ -4,17 +4,25 @@
 //! predictor service with continuous learning.
 
 pub mod data;
+pub mod drift;
 pub mod fallback;
 pub mod features;
 pub mod flat;
 pub mod forest;
 pub mod glp;
+pub mod traits;
 pub mod tree;
 
 pub use data::ColMatrix;
+pub use drift::{uil_tier, DriftConfig, DriftDetector, DriftEvent, N_UIL_TIERS};
 pub use fallback::{fallback_prediction, predict_degraded, FallbackMode};
 pub use features::{FeatureExtractor, Variant};
 pub use flat::FlatForest;
 pub use forest::{Forest, ForestParams};
 pub use glp::GenLenPredictor;
+pub use traits::{
+    bucket_of, bucket_upper, bucket_width, make_length_predictor, prediction_from_votes,
+    BucketClassifierPredictor, LengthPredictor, PredictionWithConfidence,
+    LENGTH_PREDICTOR_NAMES, N_BUCKETS,
+};
 pub use tree::{Tree, TreeParams};

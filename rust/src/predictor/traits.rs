@@ -1,0 +1,343 @@
+//! Pluggable length prediction with uncertainty (ISSUE 9, ROADMAP item 3).
+//!
+//! The paper's predictor emits a single point estimate; every downstream
+//! consumer (batcher packing, edge admission, cluster routing) silently
+//! trusts it.  Proxy-model serving (arXiv:2404.08509) and entropy-guided
+//! prediction reframe the problem as **bucketed classification with
+//! confidence**: predict which of a few generation-length buckets a
+//! request lands in, and how sure the model is.  This module is the
+//! seam: a [`LengthPredictor`] trait whose output,
+//! [`PredictionWithConfidence`], carries the point estimate *plus* a
+//! per-bucket probability vector, a calibrated confidence, and an
+//! upper-quantile token bound the schedulers can charge conservatively.
+//!
+//! Two registered implementations:
+//!
+//! * [`GenLenPredictor`] itself — the paper's point pipeline, adapted
+//!   behind the trait with a fully-confident one-hot (bit-identical
+//!   behaviour when the confidence layer is disabled).
+//! * [`BucketClassifierPredictor`] — per-bucket vote shares from the
+//!   forest's individual trees (each tree votes for the bucket its raw
+//!   prediction falls in); confidence is the modal vote share and the
+//!   upper quantile is the first bucket edge whose cumulative share
+//!   reaches the configured quantile.
+//!
+//! The point estimate is **never** perturbed: both implementations
+//! return exactly `GenLenPredictor::predict` as `point`, so enabling
+//! confidence changes what schedulers *charge*, not what the predictor
+//! *predicts*.
+
+use crate::predictor::GenLenPredictor;
+use crate::workload::RequestView;
+
+/// Number of generation-length buckets the classifier view quantises
+/// `[1, G_max]` into.  Eight keeps the per-bucket vote counts meaningful
+/// for the default 24-tree forest while still separating short from
+/// runaway generations.
+pub const N_BUCKETS: usize = 8;
+
+/// Width of one bucket in tokens (ceil division so the buckets cover
+/// `[1, G_max]` exactly; never 0 even for degenerate `g_max`).
+#[inline]
+pub fn bucket_width(g_max: u32) -> u32 {
+    (g_max.max(1) + N_BUCKETS as u32 - 1) / N_BUCKETS as u32
+}
+
+/// Bucket index of a generation length (`tokens` clamped to ≥ 1).
+#[inline]
+pub fn bucket_of(tokens: u32, g_max: u32) -> usize {
+    ((tokens.max(1) - 1) / bucket_width(g_max)).min(N_BUCKETS as u32 - 1) as usize
+}
+
+/// Inclusive upper token edge of bucket `b` (capped at `G_max`).
+#[inline]
+pub fn bucket_upper(b: usize, g_max: u32) -> u32 {
+    ((b as u32 + 1) * bucket_width(g_max)).min(g_max.max(1))
+}
+
+/// One uncertainty-annotated length prediction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictionWithConfidence {
+    /// G'(p): the point estimate — identical to the plain predictor's
+    /// output, clamped to `[1, G_max]`.
+    pub point: u32,
+    /// Bucket index of `point` (`bucket_of(point, g_max)`).
+    pub bucket: usize,
+    /// Per-bucket probability mass (sums to 1).
+    pub per_bucket_probs: [f32; N_BUCKETS],
+    /// Conservative token bound: the upper edge of the first bucket
+    /// whose cumulative probability reaches the configured quantile
+    /// (never below `point`).  Schedulers charge this instead of
+    /// `point` for low-confidence requests.
+    pub upper_quantile: u32,
+    /// Modal bucket probability in `[0, 1]` — the calibration signal
+    /// admission compares against its confidence threshold.
+    pub confidence: f32,
+}
+
+impl PredictionWithConfidence {
+    /// A fully-confident one-hot at `point` — what a point-only
+    /// predictor (or a cold-start forest) reports.  `upper_quantile ==
+    /// point`, so conservative charging is a no-op.
+    pub fn certain(point: u32, g_max: u32) -> PredictionWithConfidence {
+        let bucket = bucket_of(point, g_max);
+        let mut probs = [0.0; N_BUCKETS];
+        probs[bucket] = 1.0;
+        PredictionWithConfidence {
+            point,
+            bucket,
+            per_bucket_probs: probs,
+            upper_quantile: point,
+            confidence: 1.0,
+        }
+    }
+}
+
+/// Histogram per-tree raw votes into bucket shares and derive the
+/// confidence annotation for `point`.  `votes` must be non-empty (the
+/// caller checks trainedness first); raw votes are clamped exactly like
+/// the point path before bucketing.
+pub fn prediction_from_votes(
+    point: u32,
+    votes: &[f32],
+    g_max: u32,
+    quantile: f32,
+) -> PredictionWithConfidence {
+    debug_assert!(!votes.is_empty());
+    let mut probs = [0.0f32; N_BUCKETS];
+    let w = 1.0 / votes.len() as f32;
+    for &raw in votes {
+        let g = (raw.round().max(1.0) as u32).min(g_max.max(1));
+        probs[bucket_of(g, g_max)] += w;
+    }
+    let confidence = probs.iter().copied().fold(0.0f32, f32::max);
+    let mut cum = 0.0f32;
+    let mut qb = N_BUCKETS - 1;
+    for (b, &p) in probs.iter().enumerate() {
+        cum += p;
+        // Tiny epsilon so e.g. quantile 1.0 is reachable despite
+        // accumulated float error in the shares.
+        if cum + 1e-6 >= quantile {
+            qb = b;
+            break;
+        }
+    }
+    PredictionWithConfidence {
+        point,
+        bucket: bucket_of(point, g_max),
+        per_bucket_probs: probs,
+        upper_quantile: bucket_upper(qb, g_max).max(point),
+        confidence,
+    }
+}
+
+/// The pluggable prediction interface the confidence-aware schedulers
+/// consume.  Implementations must keep `point` identical to the plain
+/// point pipeline — uncertainty annotates, it never re-predicts.
+pub trait LengthPredictor {
+    fn name(&self) -> &'static str;
+
+    /// Predict one request with its uncertainty annotation.
+    fn predict_with_confidence(&mut self, view: &RequestView<'_>) -> PredictionWithConfidence;
+
+    /// Batched path over same-tick arrivals; the default loops, the
+    /// point adapter overrides it with the flattened-forest batch
+    /// kernel (`predict_many_views`).
+    fn predict_many_with_confidence(
+        &mut self,
+        views: &[RequestView<'_>],
+        out: &mut Vec<PredictionWithConfidence>,
+    ) {
+        out.clear();
+        for v in views {
+            out.push(self.predict_with_confidence(v));
+        }
+    }
+}
+
+/// The paper's point pipeline behind the trait: fully-confident one-hot
+/// annotations, batched through `predict_many_views`.
+impl LengthPredictor for GenLenPredictor {
+    fn name(&self) -> &'static str {
+        "point"
+    }
+
+    fn predict_with_confidence(&mut self, view: &RequestView<'_>) -> PredictionWithConfidence {
+        let g_max = self.g_max();
+        PredictionWithConfidence::certain(self.predict(*view), g_max)
+    }
+
+    fn predict_many_with_confidence(
+        &mut self,
+        views: &[RequestView<'_>],
+        out: &mut Vec<PredictionWithConfidence>,
+    ) {
+        let mut points = Vec::with_capacity(views.len());
+        self.predict_many_views(views, &mut points);
+        let g_max = self.g_max();
+        out.clear();
+        out.extend(points.iter().map(|&p| PredictionWithConfidence::certain(p, g_max)));
+    }
+}
+
+/// Bucket-classifier view of the forest: per-tree votes → bucket shares
+/// → calibrated confidence and an upper-quantile token bound.
+pub struct BucketClassifierPredictor {
+    inner: GenLenPredictor,
+    /// Cumulative vote share at which the upper bound stops (e.g. 0.9).
+    quantile: f32,
+}
+
+impl BucketClassifierPredictor {
+    pub fn new(inner: GenLenPredictor, quantile: f32) -> BucketClassifierPredictor {
+        BucketClassifierPredictor { inner, quantile }
+    }
+
+    /// The wrapped point predictor (continuous learning still talks to
+    /// the forest directly).
+    pub fn inner_mut(&mut self) -> &mut GenLenPredictor {
+        &mut self.inner
+    }
+}
+
+impl LengthPredictor for BucketClassifierPredictor {
+    fn name(&self) -> &'static str {
+        "bucket-classifier"
+    }
+
+    fn predict_with_confidence(&mut self, view: &RequestView<'_>) -> PredictionWithConfidence {
+        self.inner.predict_with_confidence(*view, self.quantile)
+    }
+}
+
+/// Registered predictor kinds (`--predictor` style selection).
+pub const LENGTH_PREDICTOR_NAMES: [&str; 2] = ["point", "bucket-classifier"];
+
+/// Wrap a trained forest behind the named trait implementation.
+pub fn make_length_predictor(
+    kind: &str,
+    inner: GenLenPredictor,
+    quantile: f32,
+) -> anyhow::Result<Box<dyn LengthPredictor>> {
+    match kind {
+        "point" => Ok(Box::new(inner)),
+        "bucket-classifier" => Ok(Box::new(BucketClassifierPredictor::new(inner, quantile))),
+        other => anyhow::bail!(
+            "unknown length predictor `{other}` (want one of {})",
+            LENGTH_PREDICTOR_NAMES.join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::predictor::Variant;
+    use crate::workload::dataset::build_predictor_split;
+    use crate::workload::LlmProfile;
+
+    #[test]
+    fn buckets_tile_the_generation_range() {
+        for g_max in [1u32, 7, 8, 64, 1000, 1024] {
+            assert!(bucket_width(g_max) >= 1);
+            assert_eq!(bucket_of(1, g_max), 0);
+            assert_eq!(bucket_upper(N_BUCKETS - 1, g_max), g_max.max(1));
+            // An upper edge never maps past its own bucket (it may map
+            // earlier when `g_max` caps several edges to the same
+            // value), and edges are monotone non-decreasing.
+            for b in 0..N_BUCKETS {
+                assert!(bucket_of(bucket_upper(b, g_max), g_max) <= b);
+                if b > 0 {
+                    assert!(bucket_upper(b, g_max) >= bucket_upper(b - 1, g_max));
+                }
+            }
+        }
+        // Concrete case: g_max 1024 → width 128, token 128 in bucket 0,
+        // token 129 in bucket 1, token 1024 in bucket 7.
+        assert_eq!(bucket_width(1024), 128);
+        assert_eq!(bucket_of(128, 1024), 0);
+        assert_eq!(bucket_of(129, 1024), 1);
+        assert_eq!(bucket_of(1024, 1024), 7);
+        assert_eq!(bucket_upper(0, 1024), 128);
+    }
+
+    #[test]
+    fn vote_histogram_calibrates_confidence_and_quantile() {
+        // 24 votes, 18 in bucket 0 (≤128) and 6 in bucket 2 — the modal
+        // share is 0.75 and the 0.9-quantile edge is bucket 2's.
+        let votes: Vec<f32> = (0..18)
+            .map(|_| 100.0)
+            .chain((0..6).map(|_| 300.0))
+            .collect();
+        let pwc = prediction_from_votes(120, &votes, 1024, 0.9);
+        assert_eq!(pwc.point, 120);
+        assert_eq!(pwc.bucket, 0);
+        assert!((pwc.confidence - 0.75).abs() < 1e-5);
+        assert_eq!(pwc.upper_quantile, bucket_upper(2, 1024));
+        // A lower quantile stops at the modal bucket.
+        let pwc = prediction_from_votes(120, &votes, 1024, 0.5);
+        assert_eq!(pwc.upper_quantile, bucket_upper(0, 1024));
+        // The bound never undershoots the point.
+        let pwc = prediction_from_votes(900, &votes, 1024, 0.5);
+        assert_eq!(pwc.upper_quantile, 900);
+    }
+
+    #[test]
+    fn unanimous_votes_are_fully_confident() {
+        let votes = vec![64.0f32; 24];
+        let pwc = prediction_from_votes(64, &votes, 1024, 0.9);
+        assert!((pwc.confidence - 1.0).abs() < 1e-5);
+        assert_eq!(pwc.upper_quantile, bucket_upper(0, 1024));
+    }
+
+    #[test]
+    fn point_adapter_is_a_confident_one_hot_and_batches() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 60, 12, 1024, 21);
+        let mut p = GenLenPredictor::new(Variant::Usin, &cfg);
+        p.train(&split.train);
+        let views: Vec<_> = split.test.iter().map(|r| r.view()).collect();
+        let mut batched = Vec::new();
+        LengthPredictor::predict_many_with_confidence(&mut p, &views, &mut batched);
+        assert_eq!(batched.len(), views.len());
+        for (v, b) in views.iter().zip(&batched) {
+            let one = LengthPredictor::predict_with_confidence(&mut p, v);
+            assert_eq!(one.point, b.point);
+            assert_eq!(one.confidence, 1.0);
+            assert_eq!(one.upper_quantile, one.point);
+        }
+    }
+
+    #[test]
+    fn bucket_classifier_keeps_the_point_estimate() {
+        let cfg = ServingConfig::default();
+        let split = build_predictor_split(LlmProfile::ChatGlm6B, 80, 20, 1024, 22);
+        let mut point = GenLenPredictor::new(Variant::Usin, &cfg);
+        point.train(&split.train);
+        let mut trained = GenLenPredictor::new(Variant::Usin, &cfg);
+        trained.train(&split.train);
+        let mut bc = BucketClassifierPredictor::new(trained, 0.9);
+        for r in &split.test {
+            let v = r.view();
+            let pwc = LengthPredictor::predict_with_confidence(&mut bc, &v);
+            assert_eq!(pwc.point, point.predict(r), "bucket classifier moved the point");
+            assert!(pwc.upper_quantile >= pwc.point);
+            let sum: f32 = pwc.per_bucket_probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn registry_resolves_both_kinds_and_rejects_unknown() {
+        let cfg = ServingConfig::default();
+        for kind in LENGTH_PREDICTOR_NAMES {
+            let p = GenLenPredictor::new(Variant::Uilo, &cfg);
+            let boxed = make_length_predictor(kind, p, 0.9).unwrap();
+            assert_eq!(boxed.name(), kind);
+        }
+        let p = GenLenPredictor::new(Variant::Uilo, &cfg);
+        let err = make_length_predictor("oracle", p, 0.9).unwrap_err();
+        assert!(err.to_string().contains("oracle"));
+    }
+}

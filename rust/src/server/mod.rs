@@ -27,7 +27,7 @@
 //!   flowing back as [`CoreSignal`]s so the edge can answer its
 //!   still-connected clients.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -43,7 +43,9 @@ use crate::estimator::{BatchShape, ServingTimeEstimator};
 use crate::faults::FaultPlan;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
-use crate::predictor::{predict_degraded, GenLenPredictor};
+use crate::predictor::{
+    fallback_prediction, predict_degraded, DriftDetector, DriftEvent, GenLenPredictor,
+};
 use crate::sim::MagnusPolicy;
 use crate::util::clamped_duration;
 use crate::workload::{PredictedRequest, RequestMeta, TraceStore};
@@ -709,6 +711,12 @@ fn serve_core<F: WorkerFactory>(
         max_batch_size: u32::try_from(max_batch).unwrap_or(0),
     });
     let g_max = cfg.gpu.g_max;
+    // Uncertainty-aware scheduling state (ISSUE 9) — inert (and
+    // behaviour-neutral) unless `cfg.uncertainty.enabled`.
+    let unc = &cfg.uncertainty;
+    let mut drift = DriftDetector::new(unc.drift_config());
+    let mut low_conf: HashSet<u64> = HashSet::new();
+    let mut point_of: HashMap<u64, u32> = HashMap::new();
     // Vanilla-path admission queue (Copy metas; replay pushes from the
     // store, live ingress pushes from the jobs channel).
     let mut fifo: VecDeque<RequestMeta> = VecDeque::new();
@@ -776,13 +784,61 @@ fn serve_core<F: WorkerFactory>(
                     match (&policy, &mut predictor) {
                         (LivePolicy::Magnus(_), Some(p)) => {
                             let view = store.view_of(&meta);
-                            let outage = plan.predictor_outage(now);
-                            let (predicted, fell_back) = predict_degraded(p, outage, &view, g_max);
-                            let predicted = if fell_back {
-                                ledger.metrics.fallback_predictions += 1;
-                                predicted
+                            // Merged outage chain: global window, then the
+                            // per-app window; drift demotion joins in only
+                            // under uncertainty-aware scheduling.
+                            let outage = plan
+                                .predictor_outage(now)
+                                .or_else(|| plan.app_outage(meta.task.app().index(), now));
+                            let predicted = if unc.enabled {
+                                let outage = outage.or_else(|| drift.active_fallback());
+                                if let Some(mode) = outage {
+                                    ledger.metrics.fallback_predictions += 1;
+                                    let pf =
+                                        fallback_prediction(mode, meta.user_input_len, g_max);
+                                    point_of.insert(meta.id, pf);
+                                    pf
+                                } else {
+                                    let pwc = p.predict_with_confidence(
+                                        view,
+                                        unc.upper_quantile as f32,
+                                    );
+                                    let point = plan.noisy_prediction(
+                                        plan.drifted_prediction(pwc.point, now, g_max),
+                                        meta.id,
+                                        g_max,
+                                    );
+                                    point_of.insert(meta.id, point);
+                                    if f64::from(pwc.confidence) < unc.confidence_threshold {
+                                        ledger.metrics.low_confidence_admissions += 1;
+                                        low_conf.insert(meta.id);
+                                        let upper = plan.noisy_prediction(
+                                            plan.drifted_prediction(
+                                                pwc.upper_quantile,
+                                                now,
+                                                g_max,
+                                            ),
+                                            meta.id,
+                                            g_max,
+                                        );
+                                        point.max(upper)
+                                    } else {
+                                        point
+                                    }
+                                }
                             } else {
-                                plan.noisy_prediction(predicted, meta.id, g_max)
+                                let (predicted, fell_back) =
+                                    predict_degraded(p, outage, &view, g_max);
+                                if fell_back {
+                                    ledger.metrics.fallback_predictions += 1;
+                                    predicted
+                                } else {
+                                    plan.noisy_prediction(
+                                        plan.drifted_prediction(predicted, now, g_max),
+                                        meta.id,
+                                        g_max,
+                                    )
+                                }
                             };
                             batcher.insert(
                                 PredictedRequest {
@@ -940,6 +996,31 @@ fn serve_core<F: WorkerFactory>(
                                 at: now,
                             });
                         }
+                        if unc.enabled {
+                            // Drift detection observes the *point*
+                            // estimate's signed error — charged values
+                            // would hide exactly the bias the charge is
+                            // compensating for.
+                            for pr in &batch.requests {
+                                let point = point_of
+                                    .remove(&pr.meta.id)
+                                    .unwrap_or(pr.predicted_gen_len);
+                                low_conf.remove(&pr.meta.id);
+                                match drift.observe(
+                                    pr.meta.task.app(),
+                                    pr.meta.user_input_len,
+                                    f64::from(point) - f64::from(pr.meta.gen_len),
+                                ) {
+                                    DriftEvent::Demoted => {
+                                        ledger.metrics.drift_demotions += 1
+                                    }
+                                    DriftEvent::Repromoted => {
+                                        ledger.metrics.drift_repromotions += 1
+                                    }
+                                    DriftEvent::None => {}
+                                }
+                            }
+                        }
                         db.log_batch(BatchLog {
                             shape: batch.true_shape(),
                             estimated_time: est,
@@ -966,19 +1047,47 @@ fn serve_core<F: WorkerFactory>(
                         }
                     }
                     BatchOutcome::Oom { at_iteration, .. } => {
-                        ledger.metrics.record_oom();
-                        requeue_oom_live(
-                            plan,
-                            magnus,
-                            &mut attempts,
-                            &mut batcher,
-                            &mut pending,
-                            &mut ledger,
-                            batch,
-                            at_iteration,
-                            g_max,
-                            &mut next_batch_id_vanilla,
-                        );
+                        // Speculative overrun guard: a batch the admission
+                        // already charged conservatively (low confidence)
+                        // gets the EOS-partitioned re-bucket without OOM
+                        // accounting — mirrors the simulator's path.
+                        let mut batch = batch;
+                        let mut handled = false;
+                        if unc.enabled
+                            && magnus
+                            && batch.size() >= 2
+                            && batch
+                                .requests
+                                .iter()
+                                .any(|pr| low_conf.contains(&pr.meta.id))
+                        {
+                            let nid = batcher.alloc_id();
+                            match batch.split_overrun(nid, at_iteration, g_max) {
+                                Ok((l, r)) => {
+                                    ledger.metrics.speculative_rebuckets += 1;
+                                    ledger.metrics.rebucketed += r.size();
+                                    batcher.requeue(l);
+                                    batcher.requeue(r);
+                                    handled = true;
+                                }
+                                Err(b) => batch = b,
+                            }
+                        }
+                        if !handled {
+                            ledger.metrics.record_oom();
+                            requeue_oom_live(
+                                plan,
+                                magnus,
+                                &mut attempts,
+                                &mut batcher,
+                                &mut pending,
+                                &mut ledger,
+                                batch,
+                                at_iteration,
+                                g_max,
+                                &mut next_batch_id_vanilla,
+                            );
+                        }
                     }
                 }
                 idle.push(worker);

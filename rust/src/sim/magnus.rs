@@ -12,7 +12,7 @@
 //! the same compact core; `sim::reference` keeps the owned-`Request`
 //! pipeline alive as the golden/scale baseline.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::batch::{AdaptiveBatcher, Batch, BatcherConfig};
 use crate::config::{SchedPolicy, ServingConfig};
@@ -23,7 +23,9 @@ use crate::faults::FaultPlan;
 use crate::learning::ContinuousLearner;
 use crate::logdb::{BatchLog, LogDb, RequestLog};
 use crate::metrics::{RequestRecord, RunMetrics};
-use crate::predictor::{predict_degraded, GenLenPredictor};
+use crate::predictor::{
+    fallback_prediction, predict_degraded, DriftDetector, DriftEvent, GenLenPredictor,
+};
 use crate::scheduler::{select, view_of, BatchView};
 use crate::sim::events::EventQueue;
 use crate::sim::OOM_RELOAD_S;
@@ -214,6 +216,18 @@ pub fn run_magnus_store_faulted(
         inst_restarts: vec![0; cfg.n_instances],
     };
 
+    // Uncertainty-aware scheduling state (ISSUE 9): all empty and
+    // untouched unless `cfg.uncertainty.enabled`, so the disabled
+    // configuration replays the legacy paths byte-for-byte.
+    let unc = &cfg.uncertainty;
+    let mut drift = DriftDetector::new(unc.drift_config());
+    // Ids admitted at their upper-quantile charge (confidence below the
+    // threshold) — candidates for the speculative overrun guard.
+    let mut low_conf: HashSet<u64> = HashSet::new();
+    // Point estimate per in-flight id: the drift detector must observe
+    // the *point* error, not the conservatively charged value.
+    let mut point_of: HashMap<u64, u32> = HashMap::new();
+
     let mut events: EventQueue<Event> = EventQueue::new();
     for (i, m) in store.metas().iter().enumerate() {
         events.push(m.arrival, Event::Arrival(i));
@@ -251,17 +265,65 @@ pub fn run_magnus_store_faulted(
                 }
                 arrival_views.clear();
                 arrival_views.extend(arrivals.iter().map(|&k| store.view(k)));
-                if plan.has_predictor_faults() {
-                    // Degraded admission: outage windows reroute to the
-                    // fallback chain, noise perturbs trained predictions.
+                if unc.enabled {
+                    // Uncertainty-aware admission: the merged outage
+                    // chain (global window → per-app window → drift
+                    // demotion) reroutes to the fallback rung; otherwise
+                    // trained predictions carry confidence, and a
+                    // low-confidence request is *charged* its
+                    // upper-quantile length so the batcher packs it
+                    // conservatively.  Drift bias models the world
+                    // shifting under the forest, so it perturbs trained
+                    // predictions only — fallback rungs are immune.
                     preds.clear();
                     for v in &arrival_views {
-                        let outage = plan.predictor_outage(now);
+                        let outage = plan
+                            .predictor_outage(now)
+                            .or_else(|| plan.app_outage(v.task.app().index(), now))
+                            .or_else(|| drift.active_fallback());
+                        let (point, admitted) = if let Some(mode) = outage {
+                            let p = fallback_prediction(mode, v.user_input_len, g_max);
+                            metrics.fallback_predictions += 1;
+                            (p, p)
+                        } else {
+                            let pwc = predictor
+                                .predict_with_confidence(*v, unc.upper_quantile as f32);
+                            let point = plan.noisy_prediction(
+                                plan.drifted_prediction(pwc.point, now, g_max),
+                                v.id,
+                                g_max,
+                            );
+                            if f64::from(pwc.confidence) < unc.confidence_threshold {
+                                metrics.low_confidence_admissions += 1;
+                                low_conf.insert(v.id);
+                                let upper = plan.noisy_prediction(
+                                    plan.drifted_prediction(pwc.upper_quantile, now, g_max),
+                                    v.id,
+                                    g_max,
+                                );
+                                (point, point.max(upper))
+                            } else {
+                                (point, point)
+                            }
+                        };
+                        point_of.insert(v.id, point);
+                        preds.push(admitted);
+                    }
+                } else if plan.has_predictor_faults() {
+                    // Degraded admission: outage windows (global or
+                    // per-app) reroute to the fallback chain; drift bias
+                    // and noise perturb trained predictions.
+                    preds.clear();
+                    for v in &arrival_views {
+                        let outage = plan
+                            .predictor_outage(now)
+                            .or_else(|| plan.app_outage(v.task.app().index(), now));
                         let (p, fell_back) = predict_degraded(&mut predictor, outage, v, g_max);
                         if fell_back {
                             metrics.fallback_predictions += 1;
                             preds.push(p);
                         } else {
+                            let p = plan.drifted_prediction(p, now, g_max);
                             preds.push(plan.noisy_prediction(p, v.id, g_max));
                         }
                     }
@@ -291,6 +353,8 @@ pub fn run_magnus_store_faulted(
                         &faulty,
                         plan,
                         g_max,
+                        unc.enabled,
+                        &low_conf,
                         &mut fstate,
                         &mut batcher,
                         &estimator,
@@ -331,6 +395,29 @@ pub fn run_magnus_store_faulted(
                             actual_time: serving_time,
                             at: now,
                         });
+                        if unc.enabled {
+                            // Feed the drift detector the *point*-estimate
+                            // signed error of each completion (charged
+                            // values would mask the bias the charge is
+                            // meant to absorb).
+                            for pr in &batch.requests {
+                                let point = point_of
+                                    .remove(&pr.meta.id)
+                                    .unwrap_or(pr.predicted_gen_len);
+                                low_conf.remove(&pr.meta.id);
+                                match drift.observe(
+                                    pr.meta.task.app(),
+                                    pr.meta.user_input_len,
+                                    f64::from(point) - f64::from(pr.meta.gen_len),
+                                ) {
+                                    DriftEvent::Demoted => metrics.drift_demotions += 1,
+                                    DriftEvent::Repromoted => {
+                                        metrics.drift_repromotions += 1
+                                    }
+                                    DriftEvent::None => {}
+                                }
+                            }
+                        }
                     }
                     BatchOutcome::Oom { .. } => {
                         // handled at dispatch; unreachable here
@@ -355,6 +442,8 @@ pub fn run_magnus_store_faulted(
             &faulty,
             plan,
             g_max,
+            unc.enabled,
+            &low_conf,
             &mut fstate,
             &mut batcher,
             &estimator,
@@ -392,6 +481,8 @@ fn dispatch_idle(
     faulty: &FaultyEngine<'_>,
     plan: &FaultPlan,
     g_max: u32,
+    unc_enabled: bool,
+    low_conf: &HashSet<u64>,
     fstate: &mut FaultState,
     batcher: &mut AdaptiveBatcher,
     estimator: &ServingTimeEstimator,
@@ -438,13 +529,35 @@ fn dispatch_idle(
         let inst = idle.pop_front().unwrap();
 
         if plan.is_noop() {
-            // Legacy path, byte-for-byte: the golden-equivalence suites
-            // replay fault-free runs through here.
+            // Legacy path, byte-for-byte when uncertainty is off: the
+            // golden-equivalence suites replay fault-free runs through
+            // here.  The speculative-guard probe is gated on
+            // `unc_enabled` (and a non-empty low-confidence set), so the
+            // disabled configuration never diverges.
             match faulty.inner().serve_batch(&batch) {
                 BatchOutcome::Oom {
-                    at_iteration: _,
+                    at_iteration,
                     wasted_time,
                 } => {
+                    let batch = if unc_enabled {
+                        match speculative_rebucket(
+                            now,
+                            batch,
+                            at_iteration,
+                            wasted_time,
+                            g_max,
+                            low_conf,
+                            batcher,
+                            events,
+                            metrics,
+                            inst,
+                        ) {
+                            Ok(()) => continue,
+                            Err(b) => b,
+                        }
+                    } else {
+                        batch
+                    };
                     // §III-C: split evenly, mark uninsertable, re-queue.
                     metrics.record_oom();
                     let nid = batcher.alloc_id();
@@ -494,10 +607,29 @@ fn dispatch_idle(
                     },
                 forced,
             } => {
-                metrics.record_oom();
                 if forced {
                     metrics.injected_faults += 1;
                 }
+                let batch = if unc_enabled {
+                    match speculative_rebucket(
+                        now,
+                        batch,
+                        at_iteration,
+                        wasted_time,
+                        g_max,
+                        low_conf,
+                        batcher,
+                        events,
+                        metrics,
+                        inst,
+                    ) {
+                        Ok(()) => continue,
+                        Err(b) => b,
+                    }
+                } else {
+                    batch
+                };
+                metrics.record_oom();
                 requeue_oom(plan, batcher, metrics, fstate, batch, at_iteration, g_max);
                 events.push(
                     now + wasted_time + OOM_RELOAD_S,
@@ -515,6 +647,50 @@ fn dispatch_idle(
                 events.push(now + serving_time, Event::BatchDone(inst, batch, est, done));
             }
         }
+    }
+}
+
+/// Speculative overrun guard (ISSUE 9): when a batch that contains at
+/// least one low-confidence (upper-quantile-charged) member hits OOM,
+/// the admission already *knew* it might overrun — so re-bucket it via
+/// the EOS-partitioned [`Batch::split_overrun`] as if the guard had
+/// caught the overrun before the allocator blew, charging only the
+/// wasted iterations and **not** the full [`OOM_RELOAD_S`] model reload
+/// (and not counting an OOM event).  Returns `Ok(())` when handled;
+/// `Err(batch)` hands the batch back for normal OOM accounting
+/// (confident batches, singletons, un-splittable mixes).
+#[allow(clippy::too_many_arguments)]
+fn speculative_rebucket(
+    now: f64,
+    batch: Batch,
+    at_iteration: u32,
+    wasted_time: f64,
+    g_max: u32,
+    low_conf: &HashSet<u64>,
+    batcher: &mut AdaptiveBatcher,
+    events: &mut EventQueue<Event>,
+    metrics: &mut RunMetrics,
+    inst: usize,
+) -> Result<(), Batch> {
+    if batch.size() < 2
+        || !batch
+            .requests
+            .iter()
+            .any(|pr| low_conf.contains(&pr.meta.id))
+    {
+        return Err(batch);
+    }
+    let nid = batcher.alloc_id();
+    match batch.split_overrun(nid, at_iteration, g_max) {
+        Ok((l, r)) => {
+            metrics.speculative_rebuckets += 1;
+            metrics.rebucketed += r.size();
+            batcher.requeue(l);
+            batcher.requeue(r);
+            events.push(now + wasted_time, Event::InstanceReady(inst));
+            Ok(())
+        }
+        Err(b) => Err(b),
     }
 }
 

@@ -573,6 +573,106 @@ pub fn record_robustness_bench(
     std::fs::write(path, Json::obj(fields).to_string_pretty())
 }
 
+/// One measured point of the uncertainty/drift comparison
+/// (`BENCH_uncertainty.json`).
+///
+/// Both points replay the same trace under the same seeded drift
+/// schedule; they differ only in `uncertainty_enabled` — the
+/// point-estimate baseline versus confidence-aware scheduling with
+/// upper-quantile admission, drift-triggered degradation and
+/// speculative re-bucketing.  Counters come from
+/// [`crate::metrics::RunMetrics`].
+#[derive(Debug, Clone)]
+pub struct UncertaintyPoint {
+    pub label: String,
+    pub uncertainty_enabled: bool,
+    pub completed: usize,
+    pub shed: usize,
+    /// Completed requests per simulated second over the run's makespan —
+    /// the number the confidence layer must defend under drift.
+    pub goodput: f64,
+    pub oom_events: u32,
+    pub low_confidence_admissions: u32,
+    pub drift_demotions: u32,
+    pub drift_repromotions: u32,
+    pub speculative_rebuckets: u32,
+    pub fallback_predictions: u32,
+    pub mean_response_time: f64,
+}
+
+/// Record the uncertainty-aware-vs-point-estimate comparison as
+/// `BENCH_uncertainty.json` at the repo root.  The headline
+/// `goodput_retention` is the confidence-aware goodput over the
+/// point-estimate baseline's under the identical drift schedule —
+/// ISSUE 9's acceptance gate requires ≥ 1.2 under a ≥ 0.3 bias.
+pub fn record_uncertainty_bench(
+    path: &str,
+    n_requests: usize,
+    rate: f64,
+    drift_bias: f64,
+    points: &[UncertaintyPoint],
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let arr = |f: &dyn Fn(&UncertaintyPoint) -> Json| {
+        Json::Arr(points.iter().map(f).collect())
+    };
+    let mut fields = vec![
+        ("bench", Json::str("uncertainty_drift_retention")),
+        ("requests", Json::num(n_requests as f64)),
+        ("rate", Json::num(rate)),
+        ("drift_bias", Json::num(drift_bias)),
+        ("label", arr(&|p| Json::str(p.label.clone()))),
+        (
+            "uncertainty_enabled",
+            arr(&|p| Json::Bool(p.uncertainty_enabled)),
+        ),
+        ("completed", arr(&|p| Json::num(p.completed as f64))),
+        ("shed", arr(&|p| Json::num(p.shed as f64))),
+        ("goodput", arr(&|p| Json::num(p.goodput))),
+        ("oom_events", arr(&|p| Json::num(p.oom_events))),
+        (
+            "low_confidence_admissions",
+            arr(&|p| Json::num(p.low_confidence_admissions)),
+        ),
+        ("drift_demotions", arr(&|p| Json::num(p.drift_demotions))),
+        (
+            "drift_repromotions",
+            arr(&|p| Json::num(p.drift_repromotions)),
+        ),
+        (
+            "speculative_rebuckets",
+            arr(&|p| Json::num(p.speculative_rebuckets)),
+        ),
+        (
+            "fallback_predictions",
+            arr(&|p| Json::num(p.fallback_predictions)),
+        ),
+        (
+            "mean_response_time",
+            arr(&|p| Json::num(p.mean_response_time)),
+        ),
+        ("unix_time", Json::num(unix_s as f64)),
+    ];
+    let base = points.iter().find(|p| !p.uncertainty_enabled);
+    let conf = points.iter().find(|p| p.uncertainty_enabled);
+    if let (Some(base), Some(conf)) = (base, conf) {
+        fields.push((
+            "goodput_retention",
+            Json::num(conf.goodput / base.goodput.max(1e-12)),
+        ));
+        fields.push((
+            "oom_reduction",
+            Json::num(f64::from(base.oom_events) / f64::from(conf.oom_events).max(1.0)),
+        ));
+    }
+    fields.extend(extra);
+    std::fs::write(path, Json::obj(fields).to_string_pretty())
+}
+
 /// One measured point of the edge overload sweep (`BENCH_edge.json`).
 ///
 /// Each point drives a live [`crate::edge::EdgeServer`] with the

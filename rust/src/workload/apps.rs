@@ -54,6 +54,19 @@ impl App {
     }
 
     pub const ALL: [App; 6] = [App::MT, App::GC, App::TD, App::CT, App::BF, App::CC];
+
+    /// Position of this app in [`App::ALL`] — the stable cell index the
+    /// drift detector and the per-app fault axes key on.
+    pub fn index(&self) -> usize {
+        match self {
+            App::MT => 0,
+            App::GC => 1,
+            App::TD => 2,
+            App::CT => 3,
+            App::BF => 4,
+            App::CC => 5,
+        }
+    }
 }
 
 /// The eight tasks (MT and CT have two directions each, §IV-A).

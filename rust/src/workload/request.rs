@@ -28,6 +28,23 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::workload::apps::TaskId;
 
+/// FNV-1a over the user-input bytes — the canonical content hash of a
+/// request's user text.  Computed **once** at trace intern time (or
+/// binary-trace decode, which walks the arena anyway) and carried on
+/// [`RequestMeta`]/[`RequestView`] as `uih`, so per-predict consumers
+/// (the feature cache, drift keying) never rehash the text.  Same FNV
+/// constants as the hashed embedder; synthetic text-less metas use
+/// `uih: 0` as the "no hash" sentinel (consumers skip caching on it).
+#[inline]
+pub fn hash_user_input(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
 /// Provenance stamp of a [`TraceStore`]: every live store mints a
 /// process-unique id at construction and stamps it into each
 /// [`RequestMeta`] it records; text resolution debug-asserts the stamp,
@@ -127,6 +144,7 @@ impl Request {
             request_len: self.request_len,
             gen_len: self.gen_len,
             arrival: self.arrival,
+            uih: hash_user_input(&self.user_input),
         }
     }
 }
@@ -161,6 +179,10 @@ pub struct RequestMeta {
     pub arrival: f64,
     /// User-input text location in the owning store's arena.
     pub span: Span,
+    /// Content hash of the user-input text ([`hash_user_input`]),
+    /// computed once when the text is interned; `0` on synthetic metas
+    /// with no text.
+    pub uih: u64,
 }
 
 impl PartialEq for RequestMeta {
@@ -177,6 +199,7 @@ impl PartialEq for RequestMeta {
             && self.gen_len == other.gen_len
             && self.arrival == other.arrival
             && self.span == other.span
+            && self.uih == other.uih
     }
 }
 
@@ -211,6 +234,7 @@ impl RequestMeta {
             gen_len: r.gen_len,
             arrival: r.arrival,
             span: Span::DETACHED,
+            uih: hash_user_input(&r.user_input),
         }
     }
 }
@@ -230,6 +254,9 @@ pub struct RequestView<'a> {
     pub request_len: u32,
     pub gen_len: u32,
     pub arrival: f64,
+    /// Interned content hash of `user_input` ([`hash_user_input`]); `0`
+    /// when the source meta carried no hash.
+    pub uih: u64,
 }
 
 impl<'a> From<&'a Request> for RequestView<'a> {

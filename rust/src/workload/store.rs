@@ -76,7 +76,7 @@ use crate::tokenizer::Tokenizer;
 use crate::util::mmap::{map_file, read_file, FileBytes};
 use crate::util::{Json, Rng};
 use crate::workload::apps::{sample_shape, synth_input_into, TaskId};
-use crate::workload::request::{Request, RequestMeta, RequestView, Span, StoreId};
+use crate::workload::request::{hash_user_input, Request, RequestMeta, RequestView, Span, StoreId};
 use crate::workload::trace::TraceSpec;
 
 /// Magic bytes opening every binary trace file.
@@ -241,6 +241,11 @@ impl TraceStore {
         arrival: f64,
         start: u64,
     ) -> RequestMeta {
+        let len = (self.arena.len() as u64 - start) as u32;
+        // Hash the just-appended text once, at intern time — every
+        // downstream consumer (feature cache, drift keying) reads the
+        // stored hash instead of re-walking the text per predict.
+        let uih = hash_user_input(&self.arena.as_str()[start as usize..]);
         let meta = RequestMeta {
             id,
             task,
@@ -250,10 +255,8 @@ impl TraceStore {
             request_len,
             gen_len,
             arrival,
-            span: Span {
-                start,
-                len: (self.arena.len() as u64 - start) as u32,
-            },
+            span: Span { start, len },
+            uih,
         };
         self.metas.push(meta);
         meta
@@ -385,6 +388,7 @@ impl TraceStore {
             request_len: m.request_len,
             gen_len: m.gen_len,
             arrival: m.arrival,
+            uih: m.uih,
         }
     }
 
@@ -706,6 +710,10 @@ impl TraceStore {
                 gen_len: rd_u32(r, 44),
                 arrival: f64::from_bits(rd_u64(r, 8)),
                 span: Span { start, len },
+                // Recomputed at decode (this pass already touches the
+                // span-validated text), so the hash never travels on the
+                // wire and the format needs no version bump.
+                uih: hash_user_input(&arena_str[start as usize..end as usize]),
             });
         }
 

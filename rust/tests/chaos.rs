@@ -111,6 +111,22 @@ fn assert_bitwise_replay(a: &SimOutput, b: &SimOutput, ctx: &str) {
     );
     assert_eq!(a.metrics.rebucketed, b.metrics.rebucketed, "{ctx}");
     assert_eq!(a.metrics.injected_faults, b.metrics.injected_faults, "{ctx}");
+    assert_eq!(
+        a.metrics.low_confidence_admissions,
+        b.metrics.low_confidence_admissions,
+        "{ctx}"
+    );
+    assert_eq!(a.metrics.drift_demotions, b.metrics.drift_demotions, "{ctx}");
+    assert_eq!(
+        a.metrics.drift_repromotions,
+        b.metrics.drift_repromotions,
+        "{ctx}"
+    );
+    assert_eq!(
+        a.metrics.speculative_rebuckets,
+        b.metrics.speculative_rebuckets,
+        "{ctx}"
+    );
 }
 
 /// A plan that injects nothing — even with non-default retry/backoff
@@ -261,6 +277,64 @@ fn total_predictor_outage_falls_back_for_every_admission() {
     let out = run_chaos(&cfg, &store, &plan);
     assert_eq!(out.metrics.fallback_predictions as usize, store.len());
     assert_exactly_once(&out.metrics.records, &out.metrics.shed, &store, "max bucket");
+}
+
+/// Seeded drift schedule under uncertainty-aware scheduling: the
+/// windowed bias pushes the per-(app, tier) signed-error EWMA past the
+/// budget, the detector demotes the predictor down the fallback chain
+/// (fallback admissions appear), serves out the probation window, and
+/// re-promotes — then the biased windows bite again.  The whole
+/// demotion → probation → re-promotion cycle is deterministic: a second
+/// run replays bit-identically, counters included.
+#[test]
+fn seeded_drift_schedule_demotes_and_repromotes_deterministically() {
+    let mut cfg = ServingConfig::default();
+    cfg.uncertainty.enabled = true;
+    cfg.uncertainty.drift_budget_tokens = 10.0;
+    cfg.uncertainty.drift_min_samples = 4;
+    cfg.uncertainty.drift_probation = 8;
+    let n = 240;
+    let store = chaos_store(n, 12.0, 101);
+    let mut plan = FaultPlan::parse_spec("drift=0..100000@-0.45").unwrap();
+    plan.seed = 17;
+    assert!(plan.has_predictor_faults());
+
+    let a = run_chaos(&cfg, &store, &plan);
+    assert_exactly_once(&a.metrics.records, &a.metrics.shed, &store, "drift");
+    assert!(
+        a.metrics.drift_demotions >= 1,
+        "sustained bias must demote at least once (got {})",
+        a.metrics.drift_demotions
+    );
+    assert!(
+        a.metrics.drift_repromotions >= 1,
+        "probation must end in re-promotion at least once (got {})",
+        a.metrics.drift_repromotions
+    );
+    assert!(
+        a.metrics.fallback_predictions > 0,
+        "demoted windows admit through the fallback chain"
+    );
+    let b = run_chaos(&cfg, &store, &plan);
+    assert_bitwise_replay(&a, &b, "drift replay");
+}
+
+/// Uncertainty enabled but neutralised (threshold 0, infinite drift
+/// budget) over a noop plan is bit-identical to the disabled config:
+/// the confidence layer annotates, it never perturbs the point
+/// pipeline.
+#[test]
+fn neutral_uncertainty_config_matches_disabled_bitwise() {
+    let store = chaos_store(160, 10.0, 103);
+    let off = ServingConfig::default();
+    let mut on = ServingConfig::default();
+    on.uncertainty.enabled = true;
+    on.uncertainty.confidence_threshold = 0.0;
+    on.uncertainty.drift_budget_tokens = 1e9;
+    let plan = FaultPlan::none();
+    let a = run_chaos(&off, &store, &plan);
+    let b = run_chaos(&on, &store, &plan);
+    common::assert_identical(&a, &b, "neutral uncertainty");
 }
 
 /// Live supervised cluster (cost backend) under heavy crash + transient

@@ -85,6 +85,21 @@ pub fn assert_identical(a: &SimOutput, b: &SimOutput, ctx: &str) {
             u64::from(b.metrics.injected_faults),
             "injected_faults",
         ),
+        (
+            u64::from(a.metrics.low_confidence_admissions),
+            u64::from(b.metrics.low_confidence_admissions),
+            "low_confidence_admissions",
+        ),
+        (
+            u64::from(a.metrics.drift_demotions),
+            u64::from(b.metrics.drift_demotions),
+            "drift_demotions",
+        ),
+        (
+            u64::from(a.metrics.speculative_rebuckets),
+            u64::from(b.metrics.speculative_rebuckets),
+            "speculative_rebuckets",
+        ),
     ] {
         assert_eq!(va, vb, "{ctx}: counter {name}");
         assert_eq!(va, 0, "{ctx}: counter {name} must be zero fault-free");

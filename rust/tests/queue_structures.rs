@@ -28,6 +28,7 @@ fn request(id: u64, len: u32, pred: u32, arrival: f64) -> PredictedRequest {
             gen_len: pred,
             arrival,
             span: Span::DETACHED,
+            uih: 0,
         },
         predicted_gen_len: pred,
     }
