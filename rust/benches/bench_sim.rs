@@ -18,9 +18,16 @@
 //! 3. **Trace I/O (binary format + mmap arena)** — loading the same
 //!    replayed trace via the JSON route (read + parse + re-intern: the
 //!    whole text arena is materialised before the first request can
-//!    dispatch) vs `TraceStore::open_mmap` (O(metas) binary decode, the
+//!    dispatch) vs `TraceStore::open_mmap` (O(1)-lazy binary decode, the
 //!    kernel pages text on demand) vs the read-into-memory fallback, at
 //!    N ∈ {10⁴, 10⁵, 10⁶} → `BENCH_trace.json`, wall time + peak heap.
+//!
+//! 4. **Big sharded trace (zero-parse at scale, ISSUE 10)** — generate a
+//!    10⁷-request (10⁸ under `MAGNUS_TRACE_FULL=1`) 8-shard trace
+//!    streaming, reopen it through the manifest, and sweep the exact
+//!    fields the event loop reads — recording open latency, replay
+//!    time and peak heap next to what an eager meta table would hold
+//!    resident, appended to `BENCH_trace.json`.
 //!
 //! Section 1 asserts bit-for-bit behavioural equivalence before timing
 //! anything; section 2 asserts it for every row the owned reference
@@ -44,10 +51,14 @@ use magnus::sim::{
 };
 use magnus::util::alloc::{peak_bytes, reset_peak, CountingAllocator};
 use magnus::util::bench::{
-    record_scale_bench, record_sim_bench, record_trace_bench, ScalePoint, TracePoint,
+    record_scale_bench, record_sim_bench, record_trace_bench, BigTracePoint, ScalePoint,
+    TracePoint,
 };
 use magnus::util::Json;
-use magnus::workload::{generate_trace, TraceSpec, TraceStore};
+use magnus::workload::{
+    generate_trace, open_manifest, write_sharded, RequestMeta, TraceSource, TraceSpec,
+    TraceStore,
+};
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
@@ -388,10 +399,96 @@ fn main() {
         let _ = std::fs::remove_file(&bin_path);
         let _ = std::fs::remove_file(&json_path);
     }
+    // ── section 4: big sharded trace — zero-parse open + replay ───────
+    let big_n: usize = if smoke {
+        20_000
+    } else if std::env::var("MAGNUS_TRACE_FULL").is_ok() {
+        100_000_000
+    } else {
+        10_000_000
+    };
+    let shards = 8;
+    println!(
+        "\n== big trace: sharded zero-parse open + replay (n {big_n}, {shards} shards) =="
+    );
+    let big_dir = std::env::temp_dir().join(format!(
+        "magnus_bench_bigtrace_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&big_dir);
+    let big_spec = TraceSpec {
+        rate: SCALE_RATE,
+        n_requests: big_n,
+        seed: 7,
+        ..Default::default()
+    };
+    // Streaming generation: one shard resident at a time, so the write
+    // side never holds the whole trace either.
+    let t0 = Instant::now();
+    let manifest = write_sharded(&big_spec, shards, &big_dir).expect("write sharded trace");
+    let gen_write_s = t0.elapsed().as_secs_f64();
+    let file_bytes: usize = (0..shards)
+        .map(|k| {
+            std::fs::metadata(big_dir.join(format!("shard-{k:04}.mtr")))
+                .map(|m| m.len() as usize)
+                .unwrap_or(0)
+        })
+        .sum();
+
+    // Open: O(shards) manifest verification over O(1)-lazy decodes — the
+    // peak-heap number is the tentpole's evidence that no per-meta state
+    // materialises at open.
+    reset_peak();
+    let base = peak_bytes();
+    let t0 = Instant::now();
+    let sharded = open_manifest(&manifest).expect("open sharded trace");
+    let open_s = t0.elapsed().as_secs_f64();
+    let open_peak = peak_bytes() - base;
+    assert_eq!(sharded.len(), big_n, "sharded open must cover every request");
+
+    // Replay sweep: exactly the fields the event loop reads — arrival to
+    // seed, then the meta record at dispatch — folded into a checksum so
+    // the reads cannot be optimised away.
+    reset_peak();
+    let base = peak_bytes();
+    let t0 = Instant::now();
+    let mut fold = 0xcbf29ce484222325u64;
+    for i in 0..sharded.len() {
+        fold ^= sharded.arrival(i).to_bits() ^ u64::from(sharded.meta(i).gen_len);
+        fold = fold.wrapping_mul(0x100000001b3);
+    }
+    let replay_s = t0.elapsed().as_secs_f64();
+    let replay_peak = peak_bytes() - base;
+
+    let eager_meta_bytes = big_n * std::mem::size_of::<RequestMeta>();
+    println!(
+        "  gen+write {gen_write_s:8.2} s ({:.1} MB on disk) | open {open_s:8.4} s / \
+         {:.2} MB peak | replay {replay_s:8.2} s / {:.2} MB peak | eager meta table \
+         would hold {:.1} MB (sweep checksum {fold:016x})",
+        file_bytes as f64 / 1e6,
+        open_peak as f64 / 1e6,
+        replay_peak as f64 / 1e6,
+        eager_meta_bytes as f64 / 1e6,
+    );
+    let big = BigTracePoint {
+        n: big_n,
+        shards,
+        file_bytes,
+        gen_write_s,
+        open_s,
+        open_peak_bytes: open_peak,
+        replay_s,
+        replay_peak_bytes: replay_peak,
+        eager_meta_bytes,
+    };
+    drop(sharded);
+    let _ = std::fs::remove_dir_all(&big_dir);
+
     let trace_path = format!("{}/../BENCH_trace.json", env!("CARGO_MANIFEST_DIR"));
     record_trace_bench(
         &trace_path,
         &tpoints,
+        Some(&big),
         vec![
             ("smoke", Json::Bool(smoke)),
             ("source", Json::str("benches/bench_sim.rs")),

@@ -125,6 +125,15 @@ fn spawn_core(
 /// Serve live-ingress jobs over an M-core cluster.  `jobs` closing means
 /// "no more traffic"; every offered job resolves to exactly one
 /// `CoreSignal` on `signals`.
+///
+/// `stores` maps trace storage onto cores: one entry shares a single
+/// store across every core (the pre-sharding behaviour); exactly M
+/// entries give each core its own shard (ISSUE 10), and the router
+/// exposes each job's home shard to the policy via
+/// [`RouteRequest::home`].  Sharded mapping assumes an engine that
+/// never resolves request text from a foreign core's arena — the cost
+/// engine ignores the store entirely, so failover and re-routing stay
+/// safe; text-resolving engines must use the single-store mapping.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_cluster_ingress_sim(
     cfg: &ServingConfig,
@@ -134,9 +143,23 @@ pub fn serve_cluster_ingress_sim(
     route_policy: &mut dyn RoutePolicy,
     jobs: mpsc::Receiver<EdgeJob>,
     signals: mpsc::Sender<CoreSignal>,
-    store: Arc<TraceStore>,
+    stores: Vec<Arc<TraceStore>>,
 ) -> Result<ClusterReport> {
     let m = copts.n_nodes.max(1);
+    assert!(
+        stores.len() == 1 || stores.len() == m,
+        "stores must be one shared store or exactly one per core \
+         ({} stores for {m} cores)",
+        stores.len()
+    );
+    let sharded = stores.len() == m && m > 1;
+    let store_for = |i: usize| -> &Arc<TraceStore> {
+        if stores.len() == m {
+            &stores[i]
+        } else {
+            &stores[0]
+        }
+    };
     let plan = opts.fault_plan.clone();
     let time_scale = opts.time_scale.max(1e-9);
 
@@ -153,7 +176,7 @@ pub fn serve_cluster_ingress_sim(
             opts,
             make_policy,
             merged_master.as_ref().unwrap(),
-            &store,
+            store_for(i),
         );
         instances.push(Instance {
             sender: Some(jtx),
@@ -219,10 +242,19 @@ pub fn serve_cluster_ingress_sim(
                             .sum(),
                     })
                     .collect();
+                // One-shard-per-core mapping: the job's minting store
+                // identifies its home core.  Guarded on `sharded` so a
+                // single shared store never reports a constant home.
+                let home = if sharded {
+                    stores.iter().position(|s| s.id() == job.meta.store)
+                } else {
+                    None
+                };
                 let req = RouteRequest {
                     id,
                     predicted: job.predicted_gen_len,
                     confidence: 1.0,
+                    home,
                 };
                 match route_policy.route(&req, &loads) {
                     Some(j) => {
@@ -358,7 +390,7 @@ pub fn serve_cluster_ingress_sim(
                             opts,
                             make_policy,
                             merged_master.as_ref().expect("admitting implies master"),
-                            &store,
+                            store_for(i),
                         );
                         instances[i].sender = Some(jtx);
                         cores.push(core);

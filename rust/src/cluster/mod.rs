@@ -39,7 +39,8 @@ pub mod sim;
 pub use live::{serve_cluster_ingress_sim, ClusterReport};
 pub use route::{
     parse_route_policy, JoinShortestPredictedQueue, LengthPartitioned, NodeLoad,
-    PowerOfTwoChoices, RoundRobin, RoutePolicy, RouteRequest, ROUTE_POLICY_NAMES,
+    PowerOfTwoChoices, RoundRobin, RoutePolicy, RouteRequest, ShardAffinity,
+    ROUTE_POLICY_NAMES,
 };
 pub use sim::{run_cluster_store, ClusterOutput, NodeOutput};
 

@@ -23,6 +23,12 @@ pub struct RouteRequest {
     /// point-estimate-only — every policy that ignores it behaves
     /// exactly as before.
     pub confidence: f32,
+    /// Home instance for sharded traces (ISSUE 10): the index of the
+    /// shard — and therefore the node whose arena already holds this
+    /// request's bytes — when the trace is sharded one-per-node, `None`
+    /// otherwise.  Only [`ShardAffinity`] consults it; every other
+    /// policy ignores it and behaves exactly as before.
+    pub home: Option<usize>,
 }
 
 /// Router-visible load snapshot for one logical instance.
@@ -188,8 +194,33 @@ impl RoutePolicy for LengthPartitioned {
     }
 }
 
+/// Shard-affinity placement (ISSUE 10): send each request to the node
+/// that maps its trace shard — the only node whose arena can resolve
+/// the request's text without cross-node traffic — falling back to
+/// join-shortest-predicted-queue when the home node is dead or the
+/// request carries no home (unsharded traces, failover re-routes).
+/// With every node alive and a one-shard-per-node trace this is a pure
+/// static map, so placement is trivially deterministic.
+#[derive(Debug, Default)]
+pub struct ShardAffinity;
+
+impl RoutePolicy for ShardAffinity {
+    fn name(&self) -> &'static str {
+        "shard-affinity"
+    }
+
+    fn route(&mut self, req: &RouteRequest, loads: &[NodeLoad]) -> Option<usize> {
+        if let Some(h) = req.home {
+            if loads.get(h).is_some_and(|l| l.alive) {
+                return Some(h);
+            }
+        }
+        JoinShortestPredictedQueue.route(req, loads)
+    }
+}
+
 /// Canonical policy names, in bench/CLI order.
-pub const ROUTE_POLICY_NAMES: [&str; 4] = ["rr", "jspq", "p2c", "band"];
+pub const ROUTE_POLICY_NAMES: [&str; 5] = ["rr", "jspq", "p2c", "band", "shard"];
 
 /// Parse a CLI/bench policy name into a boxed policy.  `seed` salts the
 /// p2c draws; `g_max` bounds the length-partitioned bands.
@@ -208,6 +239,7 @@ pub fn parse_route_policy(name: &str, seed: u64, g_max: u32) -> Option<Box<dyn R
             g_max,
             spill_threshold: 0.55,
         })),
+        "shard" | "shard-affinity" | "affinity" => Some(Box::new(ShardAffinity)),
         _ => None,
     }
 }
@@ -231,6 +263,7 @@ mod tests {
             id,
             predicted,
             confidence: 1.0,
+            home: None,
         }
     }
 
@@ -308,6 +341,7 @@ mod tests {
             id: 2,
             predicted: 10,
             confidence: 0.2,
+            home: None,
         };
         assert_eq!(p.route(&uncertain, &l), Some(3));
         // Dead tail: the spillover band tracks aliveness.
@@ -323,8 +357,33 @@ mod tests {
             id: 3,
             predicted: 10,
             confidence: 0.0,
+            home: None,
         };
         assert_eq!(off.route(&zero_conf, &l), Some(0));
+    }
+
+    #[test]
+    fn shard_affinity_honors_home_and_falls_back_when_dead() {
+        let mut p = ShardAffinity;
+        let l = loads(&[(true, 90), (true, 40), (true, 10)]);
+        // Home node alive → routed there regardless of load.
+        let homed = RouteRequest {
+            home: Some(0),
+            ..req(1, 10)
+        };
+        assert_eq!(p.route(&homed, &l), Some(0));
+        // Home node dead → least predicted backlog among the alive.
+        let l2 = loads(&[(false, 0), (true, 40), (true, 10)]);
+        assert_eq!(p.route(&homed, &l2), Some(2));
+        // No home (unsharded trace, failover re-route) → pure jspq.
+        assert_eq!(p.route(&req(2, 10), &l), Some(2));
+        // Out-of-range home never panics; it falls back.
+        let stray = RouteRequest {
+            home: Some(9),
+            ..req(3, 10)
+        };
+        assert_eq!(p.route(&stray, &l), Some(2));
+        assert_eq!(p.route(&homed, &loads(&[(false, 0)])), None);
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::predictor::{
 };
 use crate::sim::events::EventQueue;
 use crate::sim::{MagnusPolicy, OOM_RELOAD_S};
-use crate::workload::{PredictedRequest, RequestView, TraceStore};
+use crate::workload::{PredictedRequest, RequestView, TraceSource};
 
 enum Event {
     Arrival(usize),
@@ -247,15 +247,20 @@ fn node_loads(nodes: &[Node]) -> Vec<NodeLoad> {
         .collect()
 }
 
-/// Run the cluster over an interned trace.  `route_policy` is consulted
-/// once per admitted request (and again per failed-over request copy).
+/// Run the cluster over an interned trace — a single [`TraceStore`] or
+/// a sharded one (any [`TraceSource`]).  `route_policy` is consulted
+/// once per admitted request (and again per failed-over request copy);
+/// sharded traces additionally expose each request's home shard to the
+/// policy via [`RouteRequest::home`].
+///
+/// [`TraceStore`]: crate::workload::TraceStore
 #[allow(clippy::too_many_arguments)]
-pub fn run_cluster_store(
+pub fn run_cluster_store<S: TraceSource>(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
     mut predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
-    store: &TraceStore,
+    store: &S,
     plan: &FaultPlan,
     copts: &ClusterOptions,
     route_policy: &mut dyn RoutePolicy,
@@ -268,8 +273,11 @@ pub fn run_cluster_store(
     let slots_per_node = cfg.n_instances;
 
     let mut events: EventQueue<Event> = EventQueue::new();
-    for (i, meta) in store.metas().iter().enumerate() {
-        events.push(meta.arrival, Event::Arrival(i));
+    // Seed arrivals via `arrival(i)` — one 8-byte field per request —
+    // so a lazily-opened sharded trace never resolves a record just to
+    // schedule it.
+    for i in 0..store.len() {
+        events.push(store.arrival(i), Event::Arrival(i));
     }
     if ifaults && store.len() > 0 {
         events.push(copts.hb_interval_s, Event::Heartbeat);
@@ -394,6 +402,7 @@ pub fn run_cluster_store(
                         id: meta.id,
                         predicted,
                         confidence: confs[k],
+                        home: store.home_of(ti),
                     };
                     match route_policy.route(&req, &loads) {
                         Some(j) => {
@@ -615,10 +624,14 @@ pub fn run_cluster_store(
                                     continue;
                                 }
                                 let loads = node_loads(&nodes);
+                                // Failed-over copies carry no home: the
+                                // home node is the one being declared
+                                // dead, so affinity would just bounce.
                                 let req = RouteRequest {
                                     id: pr.meta.id,
                                     predicted: pr.predicted_gen_len,
                                     confidence: 1.0,
+                                    home: None,
                                 };
                                 match route_policy.route(&req, &loads) {
                                     Some(j) => {

@@ -12,7 +12,7 @@ use crate::config::LearningConfig;
 use crate::estimator::{BatchShape, ServingTimeEstimator};
 use crate::logdb::LogDb;
 use crate::predictor::GenLenPredictor;
-use crate::workload::TraceStore;
+use crate::workload::TraceSource;
 
 /// Sweeps the log DB and retrains the two learned components.
 ///
@@ -50,17 +50,18 @@ impl ContinuousLearner {
         }
     }
 
-    /// Run any due sweeps at time `now`.  `store` is the run's shared
-    /// trace store: log entries carry compact metas, and the predictor
-    /// sweep borrows each bad request's text from the arena (zero-copy)
-    /// to rebuild its features.
-    pub fn tick(
+    /// Run any due sweeps at time `now`.  `store` is the run's trace
+    /// source (a single store, or a sharded trace that resolves each
+    /// meta against its minting shard): log entries carry compact
+    /// metas, and the predictor sweep borrows each bad request's text
+    /// from the arena (zero-copy) to rebuild its features.
+    pub fn tick<S: TraceSource + ?Sized>(
         &mut self,
         now: f64,
         db: &LogDb,
         predictor: &mut GenLenPredictor,
         estimator: &mut ServingTimeEstimator,
-        store: &TraceStore,
+        store: &S,
     ) {
         if now - self.last_pred_sweep >= self.cfg.predictor_period_s {
             self.sweep_predictor(now, db, predictor, store);
@@ -76,12 +77,12 @@ impl ContinuousLearner {
     /// rows are absorbed straight into the predictor's column-major
     /// train set during the visit — the text is borrowed from the trace
     /// arena, no request is cloned — followed by one refit.
-    fn sweep_predictor(
+    fn sweep_predictor<S: TraceSource + ?Sized>(
         &mut self,
         now: f64,
         db: &LogDb,
         predictor: &mut GenLenPredictor,
-        store: &TraceStore,
+        store: &S,
     ) {
         self.last_pred_sweep = now;
         let (err_tokens, err_frac) =
@@ -133,7 +134,7 @@ mod tests {
     use crate::logdb::{BatchLog, RequestLog};
     use crate::predictor::Variant;
     use crate::workload::dataset::build_predictor_split;
-    use crate::workload::LlmProfile;
+    use crate::workload::{LlmProfile, TraceStore};
 
     fn learner(pred_period: f64, est_period: f64) -> ContinuousLearner {
         ContinuousLearner::new(LearningConfig {

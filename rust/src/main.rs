@@ -7,14 +7,16 @@
 //!              cost-model backend (no artifacts needed) — accepts a
 //!              deterministic fault plan for chaos drills
 //!   serve-cluster  route a workload over M engine instances by predicted
-//!              generation length (rr|jspq|p2c|band), with heartbeat
+//!              generation length (rr|jspq|p2c|band|shard), with heartbeat
 //!              health checks and prediction-aware failover; the default
 //!              discrete-event run is deterministic and seed-replayable,
-//!              `--live` drives M supervised cores over real threads
+//!              `--live` drives M supervised cores over real threads; a
+//!              sharded trace directory maps one shard per instance
 //!   sim        run a policy over a synthetic workload on the calibrated
 //!              cost-model engine (V100-scale, fast)
-//!   gen-trace  write a workload trace (JSON, or the binary format when
-//!              the output path ends in .mtr)
+//!   gen-trace  write a workload trace (JSON, the binary format when the
+//!              output path ends in .mtr, or a sharded binary trace +
+//!              manifest with `--shards N --out dir`)
 //!   pack-trace convert a JSON trace to the mmap-able binary format
 //!   eval-pred  train + evaluate the four predictor variants
 //!   serve-edge run the HTTP front door (predicted-length admission,
@@ -33,6 +35,8 @@
 //!       --burst 2@4 --fault-plan "seed=3,conndrop=0.05,slowclient=0.05@0.2"
 //!   magnus gen-trace --rate 5 --requests 1000 --out trace.json
 //!   magnus gen-trace --rate 5 --requests 1000000 --out trace.mtr
+//!   magnus gen-trace --rate 8 --requests 10000000 --shards 8 --out traces/big
+//!   magnus serve-cluster --trace traces/big --instances 8 --route shard
 //!   magnus pack-trace --in trace.json --out trace.mtr
 //!   magnus eval-pred --train 600 --test 200
 
@@ -42,29 +46,35 @@ use magnus::predictor::{GenLenPredictor, Variant};
 use magnus::sim::{run_policy, run_policy_store_faulted, Policy};
 use magnus::util::cli::Args;
 use magnus::util::stats::rmse;
-use magnus::util::Json;
 use magnus::workload::dataset::build_predictor_split;
-use magnus::workload::{generate_trace, LlmProfile, TraceSpec, TraceStore};
+use magnus::workload::{
+    generate_trace, open_any, write_sharded, LlmProfile, LoadedTrace, TraceSpec, TraceStore,
+};
 
 const USAGE: &str = "magnus <serve|serve-sim|serve-cluster|serve-edge|load-gen|sim|gen-trace|pack-trace|eval-pred> [options]
   common:    --config <file.json>  --seed N
+             --trace accepts a JSON trace, a binary .mtr trace, a shard
+             manifest.json, or a sharded-trace directory — detected by
+             content (magic bytes / JSON shape), never by extension
   sim:       --policy VS|VSQ|CCB|GLP|ABP|Magnus  --rate R --requests N --train N
              [--fault-plan file.json|spec]
   serve:     --policy magnus|vanilla --workers N --rate R --requests N
-             --time-scale S --g-max N --l-cap N [--trace file.json|file.mtr]
+             --time-scale S --g-max N --l-cap N [--trace file|dir]
              [--fault-plan file.json|spec]
   serve-sim: --policy magnus|vanilla --workers N --rate R --requests N
              --time-scale S --g-max N --l-cap N [--fault-plan file.json|spec]
-  serve-cluster: --instances M --route rr|jspq|p2c|band --rate R --requests N
+  serve-cluster: --instances M --route rr|jspq|p2c|band|shard --rate R --requests N
              --hb-interval S --suspect-after N --steal-threshold TOKENS
+             [--trace file|dir  (a sharded trace needs --instances == shards)]
              [--live --workers N --time-scale S] [--fault-plan file.json|spec]
   serve-edge: --addr H:P --workers N --time-scale S --duration SECS
              --queue-cap N --token-budget T --rps-limit R --deadline SECS
-             [--trace file.json|file.mtr] [--fault-plan file.json|spec]
+             [--trace file|dir] [--fault-plan file.json|spec]
   load-gen:  --addr H:P --rps R --requests N --conns N --trace-len N
              [--burst PERIOD@FACTOR] [--deadline-ms MS]
              [--fault-plan \"seed=N,conndrop=P,slowclient=P@DELAY\"]
   gen-trace: --rate R --requests N --out file.json|file.mtr (binary, mmap-able)
+             [--shards N --out dir  (N shard files + manifest.json)]
   pack-trace: --in trace.json [--out trace.mtr]
   eval-pred: --train N --test N
   fault-plan spec: seed=N,crash=P,err=P,stall=A..B@F,oom=A..B@P,guard,
@@ -139,17 +149,36 @@ fn run() -> anyhow::Result<()> {
         "serve-edge" => cmd_serve_edge(&args, &mut cfg)?,
         "load-gen" => cmd_load_gen(&args)?,
         "gen-trace" => {
-            // Streaming generation: the trace lands in a TraceStore arena
-            // (never a Vec<Request>), and serialises to either schema —
-            // the store's JSON is byte-identical to the owned route's.
-            let store = TraceStore::generate(&TraceSpec {
+            let spec = TraceSpec {
                 rate: args.get_f64("rate", 5.0),
                 n_requests: args.get_usize("requests", 1000),
                 g_max: args.get_u64("g-max", 1024) as u32,
                 l_cap: args.get_u64("l-cap", 0) as u32,
                 seed: cfg.seed,
                 ..Default::default()
-            });
+            };
+            let shards = args.get_usize("shards", 1);
+            if shards > 1 {
+                // Sharded generation streams one shard at a time — peak
+                // memory is one shard, which is what makes 10⁷–10⁸
+                // request traces writable at all.
+                let dir = args.get("out").ok_or_else(|| {
+                    anyhow::anyhow!("gen-trace --shards needs --out <dir> for the shard files")
+                })?;
+                let manifest = write_sharded(&spec, shards, std::path::Path::new(dir))?;
+                println!(
+                    "wrote {} requests across {shards} shards under {dir} (manifest {})",
+                    spec.n_requests,
+                    manifest.display()
+                );
+                return Ok(());
+            }
+            // Streaming generation: the trace lands in a TraceStore arena
+            // (never a Vec<Request>), and serialises to either schema —
+            // the store's JSON is byte-identical to the owned route's.
+            // Output format follows the extension (a write has no
+            // content to sniff; reads are sniffed — see `open_any`).
+            let store = TraceStore::generate(&spec);
             match args.get("out") {
                 Some(path) if path.ends_with(".mtr") => {
                     store.write_file(path)?;
@@ -173,15 +202,17 @@ fn run() -> anyhow::Result<()> {
             let out = args.get("out").map(str::to_string).unwrap_or_else(|| {
                 format!("{}.mtr", input.strip_suffix(".json").unwrap_or(input))
             });
-            let text = std::fs::read_to_string(input)?;
-            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-            let store = TraceStore::from_json(&j)?;
+            // Content-sniffed load: a binary input repacks byte-exactly,
+            // a JSON trace interns; a shard manifest is refused with a
+            // hint rather than silently flattened.
+            let store =
+                open_any(std::path::Path::new(input))?.require_single("pack-trace")?;
             store.write_file(&out)?;
             println!(
-                "packed {} requests: {input} ({} JSON bytes) -> {out} ({} bytes; \
-                 opens O(metas) via mmap)",
+                "packed {} requests: {input} ({} bytes) -> {out} ({} bytes; \
+                 opens O(1) via mmap)",
                 store.len(),
-                text.len(),
+                std::fs::metadata(input)?.len(),
                 std::fs::metadata(&out)?.len()
             );
         }
@@ -208,6 +239,36 @@ fn run() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Load a single-store `--trace` argument for `what` by content
+/// sniffing (`open_any`), then apply an explicit `--requests N`: a
+/// shorter prefix is an O(1) view into the open trace, and a count
+/// beyond the trace clamps with a warning — the CLI boundary never
+/// reaches `TraceStore::meta` with an out-of-range index.
+fn load_single_trace(
+    path: &str,
+    what: &str,
+    requests: Option<usize>,
+) -> anyhow::Result<TraceStore> {
+    let store = open_any(std::path::Path::new(path))?.require_single(what)?;
+    Ok(match requests {
+        Some(n) if n < store.len() => store.prefix(n),
+        Some(n) if n > store.len() => {
+            eprintln!(
+                "warning: --requests {n} exceeds the {} requests in {path}; replaying all of them",
+                store.len()
+            );
+            store
+        }
+        _ => store,
+    })
+}
+
+/// The explicit `--requests` value, if one was passed (defaults must not
+/// truncate a loaded trace).
+fn explicit_requests(args: &Args) -> Option<usize> {
+    args.get("requests").and_then(|s| s.parse().ok())
+}
+
 /// Replay a workload through the LIVE cluster (real PJRT compute).
 #[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
@@ -219,16 +280,12 @@ fn cmd_serve(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
     let g_max = args.get_u64("g-max", 24) as u32;
     let l_cap = args.get_u64("l-cap", 40) as u32;
     cfg.gpu.g_max = g_max;
-    // All three sources produce the same Arc<TraceStore> the workers
-    // share; a binary trace maps read-only (open is O(metas), and
-    // several server processes replaying one trace share the mapping).
+    // Both sources produce the same Arc<TraceStore> the workers share; a
+    // binary trace maps read-only (open is O(1), and several server
+    // processes replaying one trace share the mapping).  Format is
+    // sniffed from content, never the extension.
     let store = match args.get("trace") {
-        Some(path) if path.ends_with(".mtr") => Arc::new(TraceStore::open_mmap(path)?),
-        Some(path) => {
-            let text = std::fs::read_to_string(path)?;
-            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-            Arc::new(TraceStore::from_json(&j)?)
-        }
+        Some(path) => Arc::new(load_single_trace(path, "serve", explicit_requests(args))?),
         None => Arc::new(TraceStore::generate(&TraceSpec {
             rate: args.get_f64("rate", 2.0),
             n_requests: args.get_usize("requests", 20),
@@ -376,14 +433,20 @@ fn cmd_serve_cluster(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()>
     let g_max = args.get_u64("g-max", 64) as u32;
     let l_cap = args.get_u64("l-cap", 80) as u32;
     cfg.gpu.g_max = g_max;
-    let store = TraceStore::generate(&TraceSpec {
-        rate: args.get_f64("rate", 8.0),
-        n_requests: args.get_usize("requests", 400),
-        g_max,
-        l_cap,
-        seed: cfg.seed,
-        ..Default::default()
-    });
+    // A sharded trace maps one shard per instance; a single store is
+    // shared by every instance — both replay through the same generic
+    // cluster loop.
+    let trace = match args.get("trace") {
+        Some(path) => open_any(std::path::Path::new(path))?,
+        None => LoadedTrace::Single(TraceStore::generate(&TraceSpec {
+            rate: args.get_f64("rate", 8.0),
+            n_requests: args.get_usize("requests", 400),
+            g_max,
+            l_cap,
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+    };
     let plan = match args.get("fault-plan") {
         Some(spec) => FaultPlan::load(spec)?,
         None => FaultPlan::none(),
@@ -411,12 +474,24 @@ fn cmd_serve_cluster(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()>
         })?
     };
 
+    if let LoadedTrace::Sharded(sh) = &trace {
+        anyhow::ensure!(
+            copts.n_nodes == sh.n_shards(),
+            "sharded trace has {} shards but --instances is {}; one shard maps to one \
+             instance — pass --instances {} or regenerate with gen-trace --shards {}",
+            sh.n_shards(),
+            copts.n_nodes,
+            sh.n_shards(),
+            copts.n_nodes
+        );
+    }
+
     let split = build_predictor_split(LlmProfile::ChatGlm6B, 150, 5, g_max, cfg.seed);
     let mut predictor = GenLenPredictor::new(Variant::Usin, cfg);
     predictor.train(&split.train);
 
     if args.flag("live") {
-        return cmd_serve_cluster_live(args, cfg, &copts, route.as_mut(), plan, predictor, store);
+        return cmd_serve_cluster_live(args, cfg, &copts, route.as_mut(), plan, predictor, trace);
     }
 
     let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
@@ -426,7 +501,7 @@ fn cmd_serve_cluster(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()>
         &policy,
         predictor,
         &engine,
-        &store,
+        &trace,
         &plan,
         &copts,
         route.as_mut(),
@@ -473,7 +548,7 @@ fn cmd_serve_cluster_live(
     route: &mut dyn magnus::cluster::RoutePolicy,
     plan: FaultPlan,
     mut predictor: GenLenPredictor,
-    store: TraceStore,
+    trace: LoadedTrace,
 ) -> anyhow::Result<()> {
     use std::sync::{mpsc, Arc};
     use std::time::Instant;
@@ -482,6 +557,7 @@ fn cmd_serve_cluster_live(
     use magnus::server::{EdgeJob, LivePolicy, ServeOptions};
     use magnus::sim::MagnusPolicy;
     use magnus::util::time::clamped_duration;
+    use magnus::workload::{ShardedTrace, TraceSource};
 
     let opts = ServeOptions {
         n_workers: args.get_usize("workers", 2),
@@ -490,22 +566,28 @@ fn cmd_serve_cluster_live(
         ..Default::default()
     };
     let time_scale = opts.time_scale.max(1e-9);
-    let store = Arc::new(store);
+
+    // One shared store, or one shard per core (ISSUE 10) — the router
+    // then routes each job with its home shard attached.  The feeder
+    // replays the shards as one global sequence either way.
+    let stores = trace.shard_stores();
+    let src = Arc::new(ShardedTrace::from_shards(stores.clone()));
 
     // Predict every request up front (the edge would do this at admission).
-    let mut preds = Vec::with_capacity(store.len());
+    let mut preds = Vec::with_capacity(src.len());
     {
-        let views: Vec<_> = (0..store.len()).map(|i| store.view(i)).collect();
+        let views: Vec<_> = (0..src.len()).map(|i| src.view(i)).collect();
         predictor.predict_many_views(&views, &mut preds);
     }
 
     let (jtx, jrx) = mpsc::channel::<EdgeJob>();
     let (stx, srx) = mpsc::channel();
     let feeder = {
-        let store = Arc::clone(&store);
+        let src = Arc::clone(&src);
         std::thread::spawn(move || {
             let t0 = Instant::now();
-            for (i, meta) in store.metas().iter().enumerate() {
+            for i in 0..src.len() {
+                let meta = src.meta(i);
                 let due = clamped_duration(meta.arrival / time_scale);
                 let elapsed = t0.elapsed();
                 if due > elapsed {
@@ -513,7 +595,7 @@ fn cmd_serve_cluster_live(
                 }
                 if jtx
                     .send(EdgeJob {
-                        meta: *meta,
+                        meta,
                         predicted_gen_len: preds[i],
                     })
                     .is_err()
@@ -532,7 +614,7 @@ fn cmd_serve_cluster_live(
         route,
         jrx,
         stx,
-        Arc::clone(&store),
+        stores,
     )?;
     feeder.join().ok();
     // Drain the edge-facing signal channel (no HTTP layer here).
@@ -578,12 +660,7 @@ fn cmd_serve_edge(args: &Args, cfg: &mut ServingConfig) -> anyhow::Result<()> {
     let g_max = args.get_u64("g-max", 64) as u32;
     cfg.gpu.g_max = g_max;
     let store = match args.get("trace") {
-        Some(path) if path.ends_with(".mtr") => Arc::new(TraceStore::open_mmap(path)?),
-        Some(path) => {
-            let text = std::fs::read_to_string(path)?;
-            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-            Arc::new(TraceStore::from_json(&j)?)
-        }
+        Some(path) => Arc::new(load_single_trace(path, "serve-edge", explicit_requests(args))?),
         None => Arc::new(TraceStore::generate(&TraceSpec {
             rate: args.get_f64("rate", 5.0),
             n_requests: args.get_usize("requests", 256),

@@ -29,7 +29,7 @@ use crate::predictor::{
 use crate::scheduler::{select, view_of, BatchView};
 use crate::sim::events::EventQueue;
 use crate::sim::OOM_RELOAD_S;
-use crate::workload::{PredictedRequest, Request, RequestView, TraceStore};
+use crate::workload::{PredictedRequest, Request, RequestView, TraceSource, TraceStore};
 
 /// How the dispatch loop picks the next batch.
 ///
@@ -141,15 +141,18 @@ pub fn run_magnus_with(
     run_magnus_store_with(cfg, policy, predictor, engine, &store, mode)
 }
 
-/// Run the Magnus-family pipeline over an interned [`TraceStore`] — the
-/// zero-copy scale path (a million-request store flows through without a
-/// single per-request text clone).
-pub fn run_magnus_store(
+/// Run the Magnus-family pipeline over any [`TraceSource`] — an interned
+/// [`TraceStore`] or a multi-shard [`ShardedTrace`] — the zero-copy scale
+/// path (a hundred-million-request sharded trace flows through without a
+/// single per-request text clone, and without materialising its metas).
+///
+/// [`ShardedTrace`]: crate::workload::ShardedTrace
+pub fn run_magnus_store<S: TraceSource>(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
     predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
-    store: &TraceStore,
+    store: &S,
 ) -> SimOutput {
     run_magnus_store_with(cfg, policy, predictor, engine, store, DispatchMode::Indexed)
 }
@@ -157,12 +160,12 @@ pub fn run_magnus_store(
 /// [`run_magnus_store`] with an explicit [`DispatchMode`].  Runs under
 /// the explicit no-fault plan — the faulted core takes a byte-identical
 /// fast path for it, so goldens over this entry point are unaffected.
-pub fn run_magnus_store_with(
+pub fn run_magnus_store_with<S: TraceSource>(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
     predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
-    store: &TraceStore,
+    store: &S,
     mode: DispatchMode,
 ) -> SimOutput {
     let plan = FaultPlan::none();
@@ -187,12 +190,12 @@ struct FaultState {
 /// every admitted request completes exactly once or is recorded as shed.
 /// A no-op plan takes the legacy code path byte-for-byte.
 #[allow(clippy::too_many_arguments)]
-pub fn run_magnus_store_faulted(
+pub fn run_magnus_store_faulted<S: TraceSource>(
     cfg: &ServingConfig,
     policy: &MagnusPolicy,
     mut predictor: GenLenPredictor,
     engine: &dyn InferenceEngine,
-    store: &TraceStore,
+    store: &S,
     mode: DispatchMode,
     plan: &FaultPlan,
 ) -> SimOutput {
@@ -229,8 +232,11 @@ pub fn run_magnus_store_faulted(
     let mut point_of: HashMap<u64, u32> = HashMap::new();
 
     let mut events: EventQueue<Event> = EventQueue::new();
-    for (i, m) in store.metas().iter().enumerate() {
-        events.push(m.arrival, Event::Arrival(i));
+    // Seed arrivals via `arrival(i)` — one 8-byte field per request —
+    // so a lazily-opened 10⁸-request trace never hashes or validates a
+    // record just to schedule it.
+    for i in 0..store.len() {
+        events.push(store.arrival(i), Event::Arrival(i));
     }
 
     let mut idle: VecDeque<usize> = (0..cfg.n_instances).collect();

@@ -424,13 +424,39 @@ pub struct TracePoint {
     pub mmap_backed: bool,
 }
 
+/// One measured point of the big-trace open+replay gate (ISSUE 10): a
+/// sharded 10⁷–10⁸-request trace generated streaming, reopened through
+/// the manifest (O(shards) verification over O(1)-lazy per-shard
+/// decodes), then swept end to end.
+#[derive(Debug, Clone, Copy)]
+pub struct BigTracePoint {
+    pub n: usize,
+    pub shards: usize,
+    /// Total bytes across all shard files.
+    pub file_bytes: usize,
+    /// Streaming generation + shard-file write wall time.
+    pub gen_write_s: f64,
+    /// Manifest open: checksum walk + per-shard lazy decode.
+    pub open_s: f64,
+    /// Alloc high-water over the open — the O(1)-in-metas evidence.
+    pub open_peak_bytes: usize,
+    /// Full arrival + meta sweep over every request.
+    pub replay_s: f64,
+    pub replay_peak_bytes: usize,
+    /// What an eager per-meta table would hold resident
+    /// (`n × sizeof(RequestMeta)`) — the peak-reduction denominator.
+    pub eager_meta_bytes: usize,
+}
+
 /// Record the trace-I/O sweep as `BENCH_trace.json` at the repo root
 /// (same family as the other `BENCH_*.json` records).  Derives the
 /// headline ratios — binary-open speedup over JSON parse and the peak-
-/// heap reduction — at the largest measured N.
+/// heap reduction — at the largest measured N, plus the big-trace
+/// open/replay throughputs and peak-heap reduction when that gate ran.
 pub fn record_trace_bench(
     path: &str,
     points: &[TracePoint],
+    big: Option<&BigTracePoint>,
     extra: Vec<(&str, Json)>,
 ) -> std::io::Result<()> {
     let unix_s = std::time::SystemTime::now()
@@ -470,6 +496,37 @@ pub fn record_trace_bench(
         fields.push((
             "peak_bytes_ratio",
             Json::num(p.json_peak_bytes as f64 / p.mmap_open_peak_bytes.max(1) as f64),
+        ));
+    }
+    if let Some(b) = big {
+        fields.push(("bigtrace_n", Json::num(b.n as f64)));
+        fields.push(("bigtrace_shards", Json::num(b.shards as f64)));
+        fields.push(("bigtrace_file_bytes", Json::num(b.file_bytes as f64)));
+        fields.push(("bigtrace_gen_write_s", Json::num(b.gen_write_s)));
+        fields.push(("bigtrace_open_s", Json::num(b.open_s)));
+        fields.push((
+            "bigtrace_open_peak_bytes",
+            Json::num(b.open_peak_bytes as f64),
+        ));
+        fields.push(("bigtrace_replay_s", Json::num(b.replay_s)));
+        fields.push((
+            "bigtrace_replay_peak_bytes",
+            Json::num(b.replay_peak_bytes as f64),
+        ));
+        // Headline fields (the `bench_diff` gate watches *throughput /
+        // *speedup names): requests opened and replayed per second, and
+        // the open peak-heap reduction versus an eager meta table.
+        fields.push((
+            "bigtrace_open_throughput",
+            Json::num(b.n as f64 / b.open_s.max(1e-12)),
+        ));
+        fields.push((
+            "bigtrace_replay_throughput",
+            Json::num(b.n as f64 / b.replay_s.max(1e-12)),
+        ));
+        fields.push((
+            "bigtrace_open_peak_speedup",
+            Json::num(b.eager_meta_bytes as f64 / b.open_peak_bytes.max(1) as f64),
         ));
     }
     fields.extend(extra);
@@ -1046,12 +1103,38 @@ mod tests {
                 mmap_backed: true,
             },
         ];
-        record_trace_bench(&path, &points, vec![]).unwrap();
+        record_trace_bench(&path, &points, None, vec![]).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("compared_n").as_u64(), Some(1_000_000));
         assert_eq!(j.get("open_speedup").as_f64(), Some(40.0));
         assert_eq!(j.get("peak_bytes_ratio").as_f64(), Some(20.0));
         assert_eq!(j.get("n").as_arr().unwrap().len(), 2);
+        assert!(
+            matches!(j.get("bigtrace_open_throughput"), Json::Null),
+            "no big-trace gate ran, so no big-trace fields"
+        );
+
+        // With the big-trace gate: throughput and peak headlines derive.
+        let big = BigTracePoint {
+            n: 10_000_000,
+            shards: 8,
+            file_bytes: 2_000_000_000,
+            gen_write_s: 100.0,
+            open_s: 0.5,
+            open_peak_bytes: 1_000_000,
+            replay_s: 20.0,
+            replay_peak_bytes: 2_000_000,
+            eager_meta_bytes: 480_000_000,
+        };
+        record_trace_bench(&path, &points, Some(&big), vec![]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("bigtrace_n").as_u64(), Some(10_000_000));
+        assert_eq!(
+            j.get("bigtrace_open_throughput").as_f64(),
+            Some(20_000_000.0)
+        );
+        assert_eq!(j.get("bigtrace_replay_throughput").as_f64(), Some(500_000.0));
+        assert_eq!(j.get("bigtrace_open_peak_speedup").as_f64(), Some(480.0));
         let _ = std::fs::remove_file(&path);
     }
 

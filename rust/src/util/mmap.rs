@@ -231,6 +231,30 @@ pub fn read_file(path: &Path) -> io::Result<FileBytes> {
     Ok(FileBytes::Owned(std::fs::read(path)?))
 }
 
+/// Read at most the first `n` bytes of `path` (shorter files yield what
+/// they have).  Format sniffing reads a magic-sized prefix instead of
+/// mapping or slurping a multi-gigabyte trace just to find out what it
+/// is; shard-manifest verification reads fixed-size headers the same
+/// way.
+pub fn read_prefix(path: &Path, n: usize) -> io::Result<Vec<u8>> {
+    use std::io::Read;
+
+    let file = std::fs::File::open(path)?;
+    let mut buf = vec![0u8; n];
+    let mut got = 0usize;
+    let mut take = file.take(n as u64);
+    loop {
+        match take.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(k) => got += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    buf.truncate(got);
+    Ok(buf)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +293,16 @@ mod tests {
         let path = temp("missing_never_written");
         assert!(map_file(&path).is_err());
         assert!(read_file(&path).is_err());
+    }
+
+    #[test]
+    fn read_prefix_caps_at_file_length() {
+        let path = temp("prefix");
+        std::fs::write(&path, b"MAGNUSTRtail").unwrap();
+        assert_eq!(read_prefix(&path, 8).unwrap(), b"MAGNUSTR");
+        assert_eq!(read_prefix(&path, 64).unwrap(), b"MAGNUSTRtail");
+        assert!(read_prefix(&temp("prefix_missing"), 8).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -6,13 +6,18 @@
 pub mod apps;
 pub mod dataset;
 pub mod request;
+pub mod shard;
 pub mod store;
 pub mod trace;
 
 pub use apps::{App, LlmProfile, TaskId};
 pub use request::{PredictedRequest, Request, RequestMeta, RequestView, Span, StoreId};
+pub use shard::{
+    open_any, open_manifest, shard_store, write_sharded, LoadedTrace, ShardedTrace,
+    MANIFEST_FILE, MANIFEST_FORMAT, MANIFEST_VERSION,
+};
 pub use store::{
-    StreamingTraceGen, TraceStore, TRACE_HEADER_BYTES, TRACE_MAGIC, TRACE_META_BYTES,
-    TRACE_VERSION,
+    StreamingTraceGen, TraceSource, TraceStore, TRACE_HEADER_BYTES, TRACE_MAGIC,
+    TRACE_META_BYTES, TRACE_VERSION,
 };
 pub use trace::{generate_trace, trace_from_json, trace_to_json, TraceSpec};

@@ -37,8 +37,17 @@ use crate::workload::apps::TaskId;
 /// `uih: 0` as the "no hash" sentinel (consumers skip caching on it).
 #[inline]
 pub fn hash_user_input(s: &str) -> u64 {
+    hash_user_input_bytes(s.as_bytes())
+}
+
+/// [`hash_user_input`] over raw bytes — the in-place binary-trace meta
+/// view hashes a span of the file-backed arena without first proving the
+/// span is UTF-8 (FNV-1a is byte-defined, so the two entry points agree
+/// on any text by construction).
+#[inline]
+pub fn hash_user_input_bytes(b: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in s.as_bytes() {
+    for &b in b {
         h ^= u64::from(b);
         h = h.wrapping_mul(0x1000_0000_01b3);
     }

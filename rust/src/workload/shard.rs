@@ -1,0 +1,646 @@
+//! Multi-shard binary traces: one logical trace split across N `.mtr`
+//! files plus a small JSON manifest, so a 10⁷–10⁸-request workload can
+//! be generated with bounded memory (one shard resident at a time) and
+//! replayed by a cluster with **one shard mapped per instance** instead
+//! of every instance mapping the whole file.
+//!
+//! On disk a sharded trace is a directory:
+//!
+//! ```text
+//! trace-dir/
+//!   manifest.json      { format, version, total_requests, shards: [...] }
+//!   shard-0000.mtr     requests [0, n₀)        — ordinary binary traces,
+//!   shard-0001.mtr     requests [n₀, n₀+n₁)      openable on their own
+//!   ...
+//! ```
+//!
+//! Each manifest entry records the shard's file name, request count,
+//! global start index, byte length and an FNV-1a checksum of its
+//! 48-byte header.  [`open_manifest`] verifies all of that in O(shards)
+//! — existence, length, checksum, header agreement, contiguous
+//! non-overlapping in-order ranges — and opens every shard through the
+//! O(1) lazy [`TraceStore`] open, so opening a sharded 10⁷-request
+//! trace stays O(shards), not O(requests).  A corrupt manifest (missing
+//! shard, checksum mismatch, overlapping or out-of-order ranges,
+//! count drift) is an error, never a panic (`tests/trace_io.rs`).
+//!
+//! [`ShardedTrace`] presents the shards as one global index space and
+//! implements [`TraceSource`], so every store-generic serving loop
+//! replays it without concatenation; request ids and arrival times are
+//! global (the streaming generator runs once across all shards), while
+//! spans and instruction indices are shard-local.
+//!
+//! [`open_any`] is the single CLI entry for *any* trace argument: it
+//! sniffs content — `MAGNUSTR` magic → binary, JSON array → legacy
+//! trace, JSON manifest object or directory → sharded — so a binary
+//! trace named `.json` and a JSON trace named `.mtr` both load (the
+//! extension-based detection this replaces got both wrong).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::util::mmap::read_prefix;
+use crate::util::Json;
+use crate::workload::request::{hash_user_input_bytes, RequestMeta, RequestView};
+use crate::workload::store::{TraceSource, TraceStore, TRACE_HEADER_BYTES, TRACE_MAGIC};
+use crate::workload::trace::TraceSpec;
+use crate::workload::StreamingTraceGen;
+
+/// `format` field every shard manifest carries.
+pub const MANIFEST_FORMAT: &str = "magnus-trace-manifest";
+/// Manifest schema version this build writes and reads.
+pub const MANIFEST_VERSION: u32 = 1;
+/// File name of the manifest inside a sharded-trace directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// One logical trace, split across per-shard [`TraceStore`]s opened
+/// from a manifest (or built by [`shard_store`]'s writer twin).  Shards
+/// are `Arc`'d so a cluster can hand shard `i` to instance `i` without
+/// cloning.
+#[derive(Debug, Clone)]
+pub struct ShardedTrace {
+    shards: Vec<Arc<TraceStore>>,
+    /// Global start index of each shard (strictly increasing,
+    /// `starts[0] == 0`, contiguous).
+    starts: Vec<usize>,
+    total: usize,
+}
+
+impl ShardedTrace {
+    /// Wrap already-opened shards (order = global order; counts define
+    /// the global index space).  `open_manifest` is the file route.
+    pub fn from_shards(shards: Vec<Arc<TraceStore>>) -> ShardedTrace {
+        let mut starts = Vec::with_capacity(shards.len());
+        let mut total = 0usize;
+        for s in &shards {
+            starts.push(total);
+            total += s.len();
+        }
+        ShardedTrace {
+            shards,
+            starts,
+            total,
+        }
+    }
+
+    /// Number of requests across all shards.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `s` (instance `s`'s store under one-shard-per-instance
+    /// mapping).
+    pub fn shard(&self, s: usize) -> &Arc<TraceStore> {
+        &self.shards[s]
+    }
+
+    /// All shards, in global order.
+    pub fn shards(&self) -> &[Arc<TraceStore>] {
+        &self.shards
+    }
+
+    /// Which shard holds global request `g`, and its local index there.
+    #[inline]
+    pub fn locate(&self, g: usize) -> (usize, usize) {
+        assert!(g < self.total, "request {g} out of range ({} total)", self.total);
+        let s = self.starts.partition_point(|&start| start <= g) - 1;
+        (s, g - self.starts[s])
+    }
+
+    /// Run [`TraceStore::validate_all`] over every shard.
+    pub fn validate_all(&self) -> anyhow::Result<()> {
+        for (s, shard) in self.shards.iter().enumerate() {
+            shard
+                .validate_all()
+                .map_err(|e| anyhow::anyhow!("shard {s}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+impl TraceSource for ShardedTrace {
+    #[inline]
+    fn len(&self) -> usize {
+        self.total
+    }
+
+    #[inline]
+    fn arrival(&self, g: usize) -> f64 {
+        let (s, i) = self.locate(g);
+        self.shards[s].arrival(i)
+    }
+
+    #[inline]
+    fn meta(&self, g: usize) -> RequestMeta {
+        let (s, i) = self.locate(g);
+        self.shards[s].meta(i)
+    }
+
+    #[inline]
+    fn view(&self, g: usize) -> RequestView<'_> {
+        let (s, i) = self.locate(g);
+        self.shards[s].view(i)
+    }
+
+    #[inline]
+    fn view_of(&self, m: &RequestMeta) -> RequestView<'_> {
+        // Metas carry shard-local spans plus the minting shard's
+        // provenance stamp — resolve against that shard (failover and
+        // work stealing move metas across instances, so the owner is
+        // found by stamp, not by id range).
+        let s = self
+            .shards
+            .iter()
+            .position(|sh| sh.id() == m.store)
+            .expect("meta resolved against a sharded trace that holds no shard minting it");
+        self.shards[s].view_of(m)
+    }
+
+    #[inline]
+    fn home_of(&self, g: usize) -> Option<usize> {
+        Some(self.locate(g).0)
+    }
+}
+
+/// Even split of `total` requests over `n_shards`: the first
+/// `total % n_shards` shards carry one extra request, every shard is
+/// non-empty when `total ≥ n_shards`.
+fn shard_counts(total: usize, n_shards: usize) -> Vec<usize> {
+    let base = total / n_shards;
+    let extra = total % n_shards;
+    (0..n_shards)
+        .map(|k| base + usize::from(k < extra))
+        .collect()
+}
+
+/// FNV-1a over a shard's fixed-size header — the manifest checksum.
+/// Cheap to verify at open (48 bytes per shard) while catching the
+/// realistic corruptions: a swapped file, a truncated rewrite, a shard
+/// regenerated with a different request count.
+fn header_fnv(header: &[u8]) -> u64 {
+    hash_user_input_bytes(header)
+}
+
+/// Serialise one manifest shard entry.
+fn shard_entry(file: &str, requests: usize, start: usize, bytes: usize, fnv: u64) -> Json {
+    Json::obj(vec![
+        ("file", Json::str(file.to_string())),
+        ("requests", Json::num(requests as f64)),
+        ("start", Json::num(start as f64)),
+        ("bytes", Json::num(bytes as f64)),
+        // Hex string: JSON numbers are f64 and would round a 64-bit
+        // checksum.
+        ("header_fnv64", Json::str(format!("{fnv:016x}"))),
+    ])
+}
+
+fn write_manifest(dir: &Path, total: usize, entries: Vec<Json>) -> anyhow::Result<PathBuf> {
+    let manifest = Json::obj(vec![
+        ("format", Json::str(MANIFEST_FORMAT.to_string())),
+        ("version", Json::num(f64::from(MANIFEST_VERSION))),
+        ("total_requests", Json::num(total as f64)),
+        ("shards", Json::Arr(entries)),
+    ]);
+    let path = dir.join(MANIFEST_FILE);
+    std::fs::write(&path, manifest.to_string())
+        .map_err(|e| anyhow::anyhow!("manifest write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// Name of shard `k`'s file.
+fn shard_file_name(k: usize) -> String {
+    format!("shard-{k:04}.mtr")
+}
+
+/// Encode `shard`, write it as shard `k` under `dir`, and return its
+/// manifest entry.
+fn write_one_shard(dir: &Path, k: usize, start: usize, shard: &TraceStore) -> anyhow::Result<Json> {
+    let name = shard_file_name(k);
+    let bytes = shard.to_binary()?;
+    let path = dir.join(&name);
+    std::fs::write(&path, &bytes)
+        .map_err(|e| anyhow::anyhow!("shard write {}: {e}", path.display()))?;
+    let fnv = header_fnv(&bytes[..TRACE_HEADER_BYTES]);
+    Ok(shard_entry(&name, shard.len(), start, bytes.len(), fnv))
+}
+
+/// Generate `spec` directly into `n_shards` shard files under `dir`
+/// (created if missing), returning the manifest path.  Streaming: one
+/// [`StreamingTraceGen`] runs across all shards — ids and arrivals are
+/// the exact global sequence a single-file generation produces — and
+/// peak memory is one shard, which is what makes 10⁷–10⁸-request
+/// traces writable at all.
+pub fn write_sharded(spec: &TraceSpec, n_shards: usize, dir: &Path) -> anyhow::Result<PathBuf> {
+    anyhow::ensure!(n_shards > 0, "shard count must be ≥ 1");
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("shard dir {}: {e}", dir.display()))?;
+    let counts = shard_counts(spec.n_requests, n_shards);
+    // Same per-request arena headroom heuristic as `TraceStore::generate`.
+    let per_request = if spec.l_cap > 0 {
+        (spec.l_cap as usize).min(160)
+    } else {
+        160
+    };
+    let mut gen = StreamingTraceGen::new(spec);
+    let mut entries = Vec::with_capacity(n_shards);
+    let mut start = 0usize;
+    for (k, &n_k) in counts.iter().enumerate() {
+        let mut shard = TraceStore::with_capacity(n_k, n_k * per_request);
+        for _ in 0..n_k {
+            gen.next_into(&mut shard)
+                .expect("generator exhausted before its spec count");
+        }
+        entries.push(write_one_shard(dir, k, start, &shard)?);
+        start += n_k;
+    }
+    write_manifest(dir, spec.n_requests, entries)
+}
+
+/// Split an existing store into `n_shards` shard files under `dir`
+/// (re-interning each range), returning the manifest path.  The test /
+/// re-packing twin of [`write_sharded`].
+pub fn shard_store(store: &TraceStore, n_shards: usize, dir: &Path) -> anyhow::Result<PathBuf> {
+    anyhow::ensure!(n_shards > 0, "shard count must be ≥ 1");
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("shard dir {}: {e}", dir.display()))?;
+    let counts = shard_counts(store.len(), n_shards);
+    let mut entries = Vec::with_capacity(n_shards);
+    let mut start = 0usize;
+    for (k, &n_k) in counts.iter().enumerate() {
+        let mut shard = TraceStore::with_capacity(n_k, 0);
+        for g in start..start + n_k {
+            let v = store.view(g);
+            shard.push(
+                v.id,
+                v.task,
+                v.instruction,
+                v.user_input,
+                v.user_input_len,
+                v.request_len,
+                v.gen_len,
+                v.arrival,
+            );
+        }
+        entries.push(write_one_shard(dir, k, start, &shard)?);
+        start += n_k;
+    }
+    write_manifest(dir, store.len(), entries)
+}
+
+/// Open a sharded trace from its manifest file, verifying every entry
+/// in O(shards): the shard file exists with the recorded length, its
+/// 48-byte header matches the recorded checksum, its own header's
+/// request count matches the manifest, and the global ranges are
+/// contiguous, in order and non-overlapping.  Each shard then opens
+/// through the O(1) lazy route.  Every failure is a structured error
+/// naming the shard — never a panic.
+pub fn open_manifest(path: &Path) -> anyhow::Result<ShardedTrace> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("manifest open {}: {e}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("manifest {}: not JSON: {e}", path.display()))?;
+    let at = path.display();
+    anyhow::ensure!(
+        j.get("format").as_str() == Some(MANIFEST_FORMAT),
+        "manifest {at}: missing format field \"{MANIFEST_FORMAT}\""
+    );
+    let version = j.get("version").as_u64().unwrap_or(0);
+    anyhow::ensure!(
+        version == u64::from(MANIFEST_VERSION),
+        "manifest {at}: unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+    );
+    let total = j
+        .get("total_requests")
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest {at}: missing total_requests"))?;
+    let entries = j
+        .get("shards")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest {at}: missing shards array"))?;
+    anyhow::ensure!(!entries.is_empty(), "manifest {at}: empty shards array");
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+
+    let mut shards = Vec::with_capacity(entries.len());
+    let mut running = 0usize;
+    for (k, e) in entries.iter().enumerate() {
+        let file = e
+            .get("file")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest {at}: shard {k}: missing file"))?;
+        let requests = e
+            .get("requests")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("manifest {at}: shard {k}: missing requests"))?;
+        let start = e
+            .get("start")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("manifest {at}: shard {k}: missing start"))?;
+        let bytes = e
+            .get("bytes")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("manifest {at}: shard {k}: missing bytes"))?;
+        let fnv_hex = e
+            .get("header_fnv64")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest {at}: shard {k}: missing header_fnv64"))?;
+        let fnv = u64::from_str_radix(fnv_hex, 16).map_err(|_| {
+            anyhow::anyhow!("manifest {at}: shard {k}: bad header_fnv64 {fnv_hex:?}")
+        })?;
+        anyhow::ensure!(
+            start == running,
+            "manifest {at}: shard {k}: meta range starts at {start} but the previous shards \
+             end at {running} (overlapping or out-of-order ranges)"
+        );
+
+        let fpath = dir.join(file);
+        let len = std::fs::metadata(&fpath)
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "manifest {at}: shard {k}: missing shard file {}: {e}",
+                    fpath.display()
+                )
+            })?
+            .len();
+        anyhow::ensure!(
+            len == bytes as u64,
+            "manifest {at}: shard {k}: {} is {len} bytes but the manifest records {bytes}",
+            fpath.display()
+        );
+        let header = read_prefix(&fpath, TRACE_HEADER_BYTES)
+            .map_err(|e| anyhow::anyhow!("manifest {at}: shard {k}: {}: {e}", fpath.display()))?;
+        anyhow::ensure!(
+            header_fnv(&header) == fnv,
+            "manifest {at}: shard {k}: {}: header checksum mismatch",
+            fpath.display()
+        );
+        let shard = TraceStore::open_mmap(&fpath)
+            .map_err(|e| anyhow::anyhow!("manifest {at}: shard {k}: {e}"))?;
+        anyhow::ensure!(
+            shard.len() == requests,
+            "manifest {at}: shard {k}: {} holds {} requests but the manifest records {requests}",
+            fpath.display(),
+            shard.len()
+        );
+        shards.push(Arc::new(shard));
+        running += requests;
+    }
+    anyhow::ensure!(
+        running == total,
+        "manifest {at}: shards cover {running} requests but total_requests is {total}"
+    );
+    Ok(ShardedTrace::from_shards(shards))
+}
+
+/// A trace loaded by [`open_any`]: one store, or a sharded set.
+#[derive(Debug)]
+pub enum LoadedTrace {
+    Single(TraceStore),
+    Sharded(ShardedTrace),
+}
+
+impl LoadedTrace {
+    pub fn len(&self) -> usize {
+        match self {
+            LoadedTrace::Single(s) => s.len(),
+            LoadedTrace::Sharded(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Unwrap a single-store trace, or fail with a message naming the
+    /// consumer — entry points that replay one store (serve,
+    /// serve-edge, pack-trace) cannot take a shard set.
+    pub fn require_single(self, what: &str) -> anyhow::Result<TraceStore> {
+        match self {
+            LoadedTrace::Single(s) => Ok(s),
+            LoadedTrace::Sharded(s) => anyhow::bail!(
+                "{what} replays a single trace but was given a {}-shard manifest; \
+                 pass one .mtr/.json file, or use serve-cluster to map shards to instances",
+                s.n_shards()
+            ),
+        }
+    }
+
+    /// Shards behind this trace, as the cluster maps them: one `Arc` per
+    /// shard, or the whole store as a single "shard".
+    pub fn shard_stores(self) -> Vec<Arc<TraceStore>> {
+        match self {
+            LoadedTrace::Single(s) => vec![Arc::new(s)],
+            LoadedTrace::Sharded(s) => s.shards,
+        }
+    }
+}
+
+impl TraceSource for LoadedTrace {
+    #[inline]
+    fn len(&self) -> usize {
+        LoadedTrace::len(self)
+    }
+
+    #[inline]
+    fn arrival(&self, i: usize) -> f64 {
+        match self {
+            LoadedTrace::Single(s) => TraceSource::arrival(s, i),
+            LoadedTrace::Sharded(s) => s.arrival(i),
+        }
+    }
+
+    #[inline]
+    fn meta(&self, i: usize) -> RequestMeta {
+        match self {
+            LoadedTrace::Single(s) => TraceSource::meta(s, i),
+            LoadedTrace::Sharded(s) => TraceSource::meta(s, i),
+        }
+    }
+
+    #[inline]
+    fn view(&self, i: usize) -> RequestView<'_> {
+        match self {
+            LoadedTrace::Single(s) => TraceSource::view(s, i),
+            LoadedTrace::Sharded(s) => TraceSource::view(s, i),
+        }
+    }
+
+    #[inline]
+    fn view_of(&self, m: &RequestMeta) -> RequestView<'_> {
+        match self {
+            LoadedTrace::Single(s) => TraceSource::view_of(s, m),
+            LoadedTrace::Sharded(s) => TraceSource::view_of(s, m),
+        }
+    }
+
+    #[inline]
+    fn home_of(&self, i: usize) -> Option<usize> {
+        match self {
+            LoadedTrace::Single(_) => None,
+            LoadedTrace::Sharded(s) => s.home_of(i),
+        }
+    }
+}
+
+/// Open **any** trace argument by content, never by extension: a
+/// directory (its `manifest.json`), a binary trace (`MAGNUSTR` magic —
+/// whatever the file is named), a JSON shard manifest, or a JSON trace
+/// array.  Anything else errors naming the format that was detected.
+pub fn open_any(path: &Path) -> anyhow::Result<LoadedTrace> {
+    if path.is_dir() {
+        let manifest = path.join(MANIFEST_FILE);
+        anyhow::ensure!(
+            manifest.is_file(),
+            "{} is a directory without a {MANIFEST_FILE} shard manifest",
+            path.display()
+        );
+        return Ok(LoadedTrace::Sharded(open_manifest(&manifest)?));
+    }
+    let head = read_prefix(path, TRACE_MAGIC.len())
+        .map_err(|e| anyhow::anyhow!("trace open {}: {e}", path.display()))?;
+    if head == TRACE_MAGIC {
+        return Ok(LoadedTrace::Single(TraceStore::open_mmap(path)?));
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("trace open {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| {
+        anyhow::anyhow!(
+            "{}: no {:?} magic and not JSON either ({e})",
+            path.display(),
+            std::str::from_utf8(&TRACE_MAGIC).unwrap()
+        )
+    })?;
+    if j.get("format").as_str() == Some(MANIFEST_FORMAT) {
+        return Ok(LoadedTrace::Sharded(open_manifest(path)?));
+    }
+    if j.as_arr().is_some() {
+        let store = TraceStore::from_json(&j)
+            .map_err(|e| anyhow::anyhow!("trace {}: {e}", path.display()))?;
+        return Ok(LoadedTrace::Single(store));
+    }
+    anyhow::bail!(
+        "{}: detected JSON, but neither a trace array nor a \"{MANIFEST_FORMAT}\" object",
+        path.display()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "magnus_shard_{}_{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn shard_counts_are_even_and_exhaustive() {
+        assert_eq!(shard_counts(10, 3), vec![4, 3, 3]);
+        assert_eq!(shard_counts(9, 3), vec![3, 3, 3]);
+        assert_eq!(shard_counts(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(shard_counts(0, 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn sharded_generation_matches_single_store_views() {
+        let spec = TraceSpec {
+            n_requests: 137,
+            seed: 41,
+            rate: 4.0,
+            ..Default::default()
+        };
+        let dir = temp_dir("gen");
+        let manifest = write_sharded(&spec, 4, &dir).unwrap();
+        let sharded = open_manifest(&manifest).unwrap();
+        sharded.validate_all().unwrap();
+        assert_eq!(sharded.n_shards(), 4);
+
+        let single = TraceStore::generate(&spec);
+        assert_eq!(sharded.len(), single.len());
+        for g in 0..single.len() {
+            let (a, b) = (sharded.view(g), single.view(g));
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.user_input, b.user_input);
+            assert_eq!(a.instruction, b.instruction);
+            assert_eq!(a.user_input_len, b.user_input_len);
+            assert_eq!(a.request_len, b.request_len);
+            assert_eq!(a.gen_len, b.gen_len);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.uih, b.uih);
+            assert_eq!(sharded.arrival(g).to_bits(), b.arrival.to_bits());
+        }
+        // Global→shard mapping is contiguous and home_of agrees.
+        let (s_first, l_first) = sharded.locate(0);
+        assert_eq!((s_first, l_first), (0, 0));
+        assert_eq!(sharded.home_of(sharded.len() - 1), Some(3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_any_detects_all_four_shapes() {
+        let spec = TraceSpec {
+            n_requests: 25,
+            seed: 8,
+            ..Default::default()
+        };
+        let dir = temp_dir("detect");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = TraceStore::generate(&spec);
+
+        // Binary magic wins whatever the extension says.
+        let misnamed_bin = dir.join("trace.json");
+        store.write_file(&misnamed_bin).unwrap();
+        match open_any(&misnamed_bin).unwrap() {
+            LoadedTrace::Single(s) => assert_eq!(s.len(), 25),
+            _ => panic!("binary file detected as sharded"),
+        }
+
+        // JSON array loads under a .mtr name.
+        let misnamed_json = dir.join("trace.mtr");
+        std::fs::write(&misnamed_json, store.to_json().to_string()).unwrap();
+        match open_any(&misnamed_json).unwrap() {
+            LoadedTrace::Single(s) => assert_eq!(s.len(), 25),
+            _ => panic!("JSON trace detected as sharded"),
+        }
+
+        // Directory and manifest-file routes agree.
+        let sdir = dir.join("shards");
+        let manifest = shard_store(&store, 2, &sdir).unwrap();
+        assert_eq!(open_any(&sdir).unwrap().len(), 25);
+        assert_eq!(open_any(&manifest).unwrap().len(), 25);
+
+        // JSON that is neither shape errors, naming what was detected.
+        let stray = dir.join("stray.json");
+        std::fs::write(&stray, "{\"not\": \"a trace\"}").unwrap();
+        let err = open_any(&stray).unwrap_err().to_string();
+        assert!(err.contains("detected JSON"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn require_single_refuses_shards_with_a_hint() {
+        let spec = TraceSpec {
+            n_requests: 12,
+            seed: 2,
+            ..Default::default()
+        };
+        let dir = temp_dir("single");
+        let manifest = write_sharded(&spec, 3, &dir).unwrap();
+        let loaded = open_any(&manifest).unwrap();
+        let err = loaded.require_single("serve").unwrap_err().to_string();
+        assert!(err.contains("serve-cluster"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

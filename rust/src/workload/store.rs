@@ -61,22 +61,34 @@
 //! …       …          arena: raw UTF-8 user-input text, back to back
 //! ```
 //!
-//! Decoding validates everything before the store exists: magic,
-//! version, section sizes against the file length (checked arithmetic),
-//! task / instruction indices, span bounds **and** UTF-8 char
-//! boundaries, and UTF-8 of both text sections — corrupt files are
-//! rejected with errors, never panics, and never alias text
-//! (`tests/trace_io.rs`).  Loaded metas are stamped with the fresh
-//! store's provenance id like any other minted meta.
+//! Opening a trace is **O(1) in the meta count**: decode validates the
+//! magic, version and section sizes against the file length (checked
+//! arithmetic) and parses the tiny instruction table, but the meta
+//! records stay on disk behind an alignment-checked in-place view
+//! ([`RawMeta`]) and the arena is not scanned — no `Vec<RequestMeta>`
+//! materialises and no per-meta `uih` hash runs at open.  Per-meta
+//! work (span bounds, UTF-8 of the resolved span, content hashing) is
+//! deferred to first access, or to the one-shot [`TraceStore::validate_all`]
+//! sweep that tools and the corrupt-input tests
+//! (`tests/trace_io.rs`) run over untrusted files: it rejects every
+//! corruption the old eager decode did — bad task ids, out-of-range
+//! instruction indices, spans past or splitting the arena's UTF-8 —
+//! with errors, never panics.  Accessing a corrupt record *without*
+//! validating first fails loudly (a panic naming the corruption), never
+//! by aliasing text.  Loaded metas are stamped with the fresh store's
+//! provenance id like any other minted meta, lazily at access time.
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::tokenizer::Tokenizer;
 use crate::util::mmap::{map_file, read_file, FileBytes};
 use crate::util::{Json, Rng};
 use crate::workload::apps::{sample_shape, synth_input_into, TaskId};
-use crate::workload::request::{hash_user_input, Request, RequestMeta, RequestView, Span, StoreId};
+use crate::workload::request::{
+    hash_user_input, hash_user_input_bytes, Request, RequestMeta, RequestView, Span, StoreId,
+};
 use crate::workload::trace::TraceSpec;
 
 /// Magic bytes opening every binary trace file.
@@ -105,23 +117,77 @@ enum Arena {
         bytes: Arc<FileBytes>,
         offset: usize,
         len: usize,
+        /// Whether the whole region has been proven UTF-8 (set by
+        /// [`TraceStore::validate_all`] or the first whole-arena
+        /// access; shared across clones — validity is a property of
+        /// the bytes).  Until then each span access validates just its
+        /// own bytes, keeping resolution O(span) and open O(1).
+        utf8_ok: Arc<AtomicBool>,
     },
 }
 
 impl Arena {
+    /// The raw arena bytes (no UTF-8 claim).
+    #[inline]
+    fn raw(&self) -> &[u8] {
+        match self {
+            Arena::Owned(s) => s.as_bytes(),
+            Arena::File { bytes, offset, len, .. } => &bytes[*offset..*offset + *len],
+        }
+    }
+
+    /// Resolve `[start, start + len)` as text.  Owned arenas are valid
+    /// by construction; file arenas validate the requested span alone
+    /// (until a full sweep marks the whole region valid), so opening a
+    /// file never scans the arena and resolving one request reads one
+    /// span.  A span that is out of bounds or not UTF-8 — possible only
+    /// on a corrupt file that was never [`TraceStore::validate_all`]ed —
+    /// panics with the corruption named, and never aliases text.
+    #[inline]
+    fn slice(&self, start: usize, len: usize) -> &str {
+        match self {
+            Arena::Owned(s) => &s[start..start + len],
+            Arena::File { utf8_ok, .. } => {
+                let end = start
+                    .checked_add(len)
+                    .expect("corrupt trace: meta span overflows the arena");
+                let b = self
+                    .raw()
+                    .get(start..end)
+                    .expect("corrupt trace: meta span out of arena bounds (validate_all rejects this)");
+                if utf8_ok.load(Ordering::Relaxed) {
+                    // SAFETY: a full sweep (`validate_all` / `as_str`)
+                    // proved the whole region — hence every subrange we
+                    // hand out, whose ends it checked as char
+                    // boundaries — valid UTF-8.  For mapped files this
+                    // additionally rests on the trace file not being
+                    // modified while mapped — `util::mmap`'s documented
+                    // precondition (trace files are write-once).
+                    unsafe { std::str::from_utf8_unchecked(b) }
+                } else {
+                    std::str::from_utf8(b)
+                        .expect("corrupt trace: meta span is not UTF-8 (validate_all rejects this)")
+                }
+            }
+        }
+    }
+
+    /// The whole arena as one `&str`, running (and memoising) the full
+    /// UTF-8 sweep on first use for file-backed arenas.
     #[inline]
     fn as_str(&self) -> &str {
         match self {
             Arena::Owned(s) => s,
-            Arena::File { bytes, offset, len } => {
-                let b = &bytes[*offset..*offset + *len];
-                // SAFETY: `decode` validated exactly this region as
-                // UTF-8 before constructing the variant.  For mapped
-                // files this additionally rests on the trace file not
-                // being modified while mapped — `util::mmap`'s
-                // documented precondition (trace files are write-once;
-                // a concurrent in-place writer would violate the
-                // validated invariant).
+            Arena::File { utf8_ok, .. } => {
+                let b = self.raw();
+                if !utf8_ok.load(Ordering::Relaxed) {
+                    std::str::from_utf8(b)
+                        .expect("corrupt trace: text arena is not UTF-8 (validate_all rejects this)");
+                    utf8_ok.store(true, Ordering::Relaxed);
+                }
+                // SAFETY: the sweep above (or an earlier one) validated
+                // exactly these bytes; see `slice` for the mapped-file
+                // immutability precondition.
                 unsafe { std::str::from_utf8_unchecked(b) }
             }
         }
@@ -149,6 +215,109 @@ impl Arena {
     }
 }
 
+/// The wire layout of one 48-byte meta record, field for field — the
+/// alignment-checked zero-copy view over the on-disk meta table.  All
+/// fields are plain little-endian integers on the wire, so on a
+/// little-endian target an 8-aligned record can be read **in place**
+/// with one typed copy; misaligned buffers (an owned `Vec<u8>` has no
+/// alignment guarantee) and big-endian targets take the per-field
+/// byte-decode fallback.  Both routes produce identical values —
+/// unit-tested below.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct RawMeta {
+    id: u64,
+    arrival_bits: u64,
+    span_start: u64,
+    span_len: u32,
+    task: u32,
+    instr: u32,
+    uil: u32,
+    request_len: u32,
+    gen_len: u32,
+}
+
+// The typed in-place read is sound only while the struct matches the
+// wire record exactly (size, alignment, and — via repr(C) declaration
+// order — every field offset).
+const _: () = assert!(std::mem::size_of::<RawMeta>() == TRACE_META_BYTES);
+const _: () = assert!(std::mem::align_of::<RawMeta>() == 8);
+
+/// Read wire record `i` of the meta table starting at
+/// [`TRACE_HEADER_BYTES`].  `aligned` is the decode-time alignment
+/// check; it gates the typed in-place read (little-endian targets
+/// only).  Bounds are the caller's contract (`i < n` from the
+/// validated header).
+#[inline]
+fn wire_meta(b: &[u8], i: usize, aligned: bool) -> RawMeta {
+    let off = TRACE_HEADER_BYTES + i * TRACE_META_BYTES;
+    let r = &b[off..off + TRACE_META_BYTES];
+    #[cfg(target_endian = "little")]
+    if aligned {
+        // SAFETY: `r` is exactly size_of::<RawMeta>() bytes, 8-aligned
+        // (checked once at decode: the table offset is 48, so record
+        // alignment is the buffer alignment), and every field of
+        // RawMeta is a plain integer — any bit pattern is a value.
+        return unsafe { (r.as_ptr() as *const RawMeta).read() };
+    }
+    #[cfg(not(target_endian = "little"))]
+    let _ = aligned;
+    RawMeta {
+        id: rd_u64(r, 0),
+        arrival_bits: rd_u64(r, 8),
+        span_start: rd_u64(r, 16),
+        span_len: rd_u32(r, 24),
+        task: rd_u32(r, 28),
+        instr: rd_u32(r, 32),
+        uil: rd_u32(r, 36),
+        request_len: rd_u32(r, 40),
+        gen_len: rd_u32(r, 44),
+    }
+}
+
+/// The per-request records: materialised for built/parsed stores, or
+/// left **in place** on the opened file for binary traces (the
+/// tentpole of the O(1) open — a 10⁷-request `.mtr` opens without a
+/// 10⁷-element `Vec<RequestMeta>` or 10⁷ content hashes).
+#[derive(Debug, Clone)]
+enum MetaTable {
+    /// Records built in memory (generation, interning, JSON parse).
+    Owned(Vec<RequestMeta>),
+    /// Records read in place from an opened trace file.
+    File {
+        /// The whole file (same `Arc` the arena holds).
+        bytes: Arc<FileBytes>,
+        /// Records visible through this store — ≤ the count on the
+        /// wire ([`TraceStore::prefix`] clamps it; section offsets do
+        /// not move).
+        n: usize,
+        /// Byte offset of the instruction table (for byte-exact
+        /// re-serialisation without touching the meta records).
+        instr_off: usize,
+        /// Decode-time alignment check result gating the typed
+        /// in-place read ([`wire_meta`]).
+        aligned: bool,
+        /// Lazily materialised copy backing [`TraceStore::metas`] —
+        /// the slice-compat / test path, never required for serving.
+        cache: Arc<OnceLock<Vec<RequestMeta>>>,
+    },
+}
+
+impl MetaTable {
+    /// The append target for interning/generation; file-backed tables
+    /// are immutable by construction (same contract as
+    /// [`Arena::owned_mut`]).
+    #[inline]
+    fn owned_mut(&mut self) -> &mut Vec<RequestMeta> {
+        match self {
+            MetaTable::Owned(v) => v,
+            MetaTable::File { .. } => {
+                panic!("TraceStore: cannot record metas into a file-backed table")
+            }
+        }
+    }
+}
+
 /// All text of a workload trace, interned once, plus the compact
 /// per-request records addressing it.
 #[derive(Debug, Clone)]
@@ -158,12 +327,13 @@ pub struct TraceStore {
     /// resolution against a clone is valid).
     store_id: StoreId,
     /// Every request's user-input text, back to back (owned or a
-    /// validated region of an opened trace file).
+    /// region of an opened trace file).
     arena: Arena,
     /// Deduplicated instruction texts (typically one per task).
     instructions: Vec<String>,
-    /// Compact per-request records, in trace order.
-    metas: Vec<RequestMeta>,
+    /// Compact per-request records, in trace order (owned, or in place
+    /// on the opened file).
+    metas: MetaTable,
 }
 
 impl Default for TraceStore {
@@ -178,7 +348,7 @@ impl TraceStore {
             store_id: StoreId::mint(),
             arena: Arena::Owned(String::new()),
             instructions: Vec::new(),
-            metas: Vec::new(),
+            metas: MetaTable::Owned(Vec::new()),
         }
     }
 
@@ -188,7 +358,7 @@ impl TraceStore {
             store_id: StoreId::mint(),
             arena: Arena::Owned(String::with_capacity(arena_bytes)),
             instructions: Vec::new(),
-            metas: Vec::with_capacity(n_requests),
+            metas: MetaTable::Owned(Vec::with_capacity(n_requests)),
         }
     }
 
@@ -258,7 +428,7 @@ impl TraceStore {
             span: Span { start, len },
             uih,
         };
-        self.metas.push(meta);
+        self.metas.owned_mut().push(meta);
         meta
     }
 
@@ -342,23 +512,191 @@ impl TraceStore {
     }
 
     pub fn len(&self) -> usize {
-        self.metas.len()
+        match &self.metas {
+            MetaTable::Owned(v) => v.len(),
+            MetaTable::File { n, .. } => *n,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.metas.is_empty()
+        self.len() == 0
     }
 
-    /// The compact record of request `i` (trace order).
+    /// The compact record of request `i` (trace order).  File-backed
+    /// stores decode the 48-byte wire record in place and hash the
+    /// span's text on the way out (the `uih` a materialised meta would
+    /// carry) — O(one record + one span), independent of trace size.
+    /// Panics on an out-of-range index ([`Self::get_meta`] is the
+    /// checked form) or, for never-validated corrupt files, on a span
+    /// outside the arena.
     #[inline]
     pub fn meta(&self, i: usize) -> RequestMeta {
-        self.metas[i]
+        match &self.metas {
+            MetaTable::Owned(v) => v[i],
+            MetaTable::File { bytes, n, aligned, .. } => {
+                assert!(i < *n, "meta index {i} out of range ({n} requests)");
+                self.decode_meta(bytes, i, *aligned)
+            }
+        }
     }
 
-    /// All compact records, in trace order.
+    /// [`Self::meta`] without the panicking contract: `None` past the
+    /// end of the trace (the CLI boundary resolves `--requests` over a
+    /// shorter trace through this).
+    #[inline]
+    pub fn get_meta(&self, i: usize) -> Option<RequestMeta> {
+        (i < self.len()).then(|| self.meta(i))
+    }
+
+    /// Arrival time of request `i` without materialising the record —
+    /// event-queue seeding reads one field per meta, so replay setup of
+    /// a 10⁷-request file does not hash 10⁷ user inputs up front.
+    #[inline]
+    pub fn arrival(&self, i: usize) -> f64 {
+        match &self.metas {
+            MetaTable::Owned(v) => v[i].arrival,
+            MetaTable::File { bytes, n, aligned, .. } => {
+                assert!(i < *n, "meta index {i} out of range ({n} requests)");
+                f64::from_bits(wire_meta(bytes, i, *aligned).arrival_bits)
+            }
+        }
+    }
+
+    /// Decode wire record `i` into a [`RequestMeta`] stamped with this
+    /// store's provenance, hashing the span bytes for `uih` (bitwise
+    /// the hash an eager decode would have computed).
+    fn decode_meta(&self, bytes: &FileBytes, i: usize, aligned: bool) -> RequestMeta {
+        let w = wire_meta(bytes, i, aligned);
+        let task = *TaskId::ALL
+            .get(w.task as usize)
+            .expect("corrupt trace: meta task id out of range (validate_all rejects this)");
+        let end = w
+            .span_start
+            .checked_add(u64::from(w.span_len))
+            .expect("corrupt trace: meta span overflows");
+        let arena = self.arena.raw();
+        assert!(
+            end <= arena.len() as u64,
+            "corrupt trace: meta span out of arena bounds (validate_all rejects this)"
+        );
+        let span_bytes = &arena[w.span_start as usize..end as usize];
+        RequestMeta {
+            id: w.id,
+            task,
+            store: self.store_id,
+            instr: w.instr,
+            user_input_len: w.uil,
+            request_len: w.request_len,
+            gen_len: w.gen_len,
+            arrival: f64::from_bits(w.arrival_bits),
+            span: Span {
+                start: w.span_start,
+                len: w.span_len,
+            },
+            uih: hash_user_input_bytes(span_bytes),
+        }
+    }
+
+    /// All compact records, in trace order.  For file-backed stores
+    /// this **materialises** (once, memoised) — it is the
+    /// slice-compatibility path for tests, goldens and small
+    /// comparison sims; scale paths iterate [`Self::meta`] /
+    /// [`Self::iter_metas`] instead and never pay it.
     #[inline]
     pub fn metas(&self) -> &[RequestMeta] {
-        &self.metas
+        match &self.metas {
+            MetaTable::Owned(v) => v,
+            MetaTable::File { cache, .. } => {
+                cache.get_or_init(|| (0..self.len()).map(|i| self.meta(i)).collect())
+            }
+        }
+    }
+
+    /// The records one at a time, in trace order, without materialising
+    /// a table (file-backed stores decode each in place).
+    pub fn iter_metas(&self) -> impl Iterator<Item = RequestMeta> + '_ {
+        (0..self.len()).map(move |i| self.meta(i))
+    }
+
+    /// A store exposing only the first `min(n, len)` requests — how the
+    /// CLI clamps `--requests` over a longer opened trace.  O(1) for
+    /// file-backed stores (the mapping, arena and section offsets are
+    /// shared; only the visible count shrinks); owned stores copy the
+    /// truncated record table.  Shares this store's provenance stamp,
+    /// so metas resolve against either.
+    pub fn prefix(&self, n: usize) -> TraceStore {
+        let n = n.min(self.len());
+        let metas = match &self.metas {
+            MetaTable::Owned(v) => MetaTable::Owned(v[..n].to_vec()),
+            MetaTable::File {
+                bytes,
+                instr_off,
+                aligned,
+                ..
+            } => MetaTable::File {
+                bytes: Arc::clone(bytes),
+                n,
+                instr_off: *instr_off,
+                aligned: *aligned,
+                cache: Arc::new(OnceLock::new()),
+            },
+        };
+        TraceStore {
+            store_id: self.store_id,
+            arena: self.arena.clone(),
+            instructions: self.instructions.clone(),
+            metas,
+        }
+    }
+
+    /// One-shot full sweep over a file-backed store: UTF-8 of the whole
+    /// arena, then every record's task id, instruction index, span
+    /// bounds and span char-boundaries — exactly the checks the
+    /// pre-lazy decode ran at open, with the same error texts.  Tools
+    /// and tests run it over untrusted files; a clean pass memoises the
+    /// arena's validity so later span resolution skips re-checking.
+    /// Owned stores hold the invariants by construction.
+    pub fn validate_all(&self) -> anyhow::Result<()> {
+        let (bytes, n, aligned) = match &self.metas {
+            MetaTable::Owned(_) => return Ok(()),
+            MetaTable::File {
+                bytes, n, aligned, ..
+            } => (bytes, *n, *aligned),
+        };
+        let arena_str = std::str::from_utf8(self.arena.raw())
+            .map_err(|e| anyhow::anyhow!("text arena is not UTF-8: {e}"))?;
+        let arena_len = arena_str.len();
+        for i in 0..n {
+            let w = wire_meta(bytes, i, aligned);
+            let task_idx = w.task as usize;
+            anyhow::ensure!(
+                task_idx < TaskId::ALL.len(),
+                "meta {i} has bad task id {task_idx}"
+            );
+            let instr = w.instr;
+            anyhow::ensure!(
+                (instr as usize) < self.instructions.len(),
+                "meta {i} instruction index {instr} out of range ({} entries)",
+                self.instructions.len()
+            );
+            let start = w.span_start;
+            let end = start
+                .checked_add(u64::from(w.span_len))
+                .ok_or_else(|| anyhow::anyhow!("meta {i} span overflows"))?;
+            anyhow::ensure!(
+                end <= arena_len as u64,
+                "meta {i} span [{start}, {end}) points past the {arena_len}-byte arena"
+            );
+            anyhow::ensure!(
+                arena_str.is_char_boundary(start as usize)
+                    && arena_str.is_char_boundary(end as usize),
+                "meta {i} span [{start}, {end}) splits a UTF-8 sequence"
+            );
+        }
+        if let Arena::File { utf8_ok, .. } = &self.arena {
+            utf8_ok.store(true, Ordering::Relaxed);
+        }
+        Ok(())
     }
 
     /// Borrow the user-input text of `m` from the arena.
@@ -395,7 +733,7 @@ impl TraceStore {
     /// Zero-copy view of request `i` (trace order).
     #[inline]
     pub fn view(&self, i: usize) -> RequestView<'_> {
-        self.view_of(&self.metas[i])
+        self.view_of(&self.meta(i))
     }
 
     /// Materialise `m` as an owned [`Request`] (clones both texts) — the
@@ -415,7 +753,7 @@ impl TraceStore {
 
     /// Materialise the whole trace as owned requests (goldens only).
     pub fn to_requests(&self) -> Vec<Request> {
-        self.metas.iter().map(|m| self.request_of(m)).collect()
+        self.iter_metas().map(|m| self.request_of(&m)).collect()
     }
 
     /// Bytes of interned user-input text (the scale bench's arena gauge).
@@ -463,13 +801,12 @@ impl TraceStore {
     /// equivalent owned trace.
     pub fn to_json(&self) -> Json {
         Json::Arr(
-            self.metas
-                .iter()
+            self.iter_metas()
                 .map(|m| {
                     Json::obj(vec![
                         ("id", Json::num(m.id as f64)),
                         ("task", Json::num(m.task.index() as f64)),
-                        ("user_input", Json::str(self.user_input(m).to_string())),
+                        ("user_input", Json::str(self.user_input(&m).to_string())),
                         ("uil", Json::num(m.user_input_len as f64)),
                         ("len", Json::num(m.request_len as f64)),
                         ("gen", Json::num(m.gen_len as f64)),
@@ -514,21 +851,53 @@ impl TraceStore {
 
     /// Serialise in the binary trace format (see the module docs for the
     /// exact layout).  Works on any backing — a file-opened store
-    /// re-serialises to the bytes it was opened from.
-    pub fn to_binary(&self) -> Vec<u8> {
+    /// re-serialises byte-exactly from its mapped sections (no meta
+    /// materialisation); an owned store encodes its records, after the
+    /// wire-limit check ([`check_wire_limits`]): a store whose
+    /// instruction or meta count would truncate a wire field is an
+    /// error here, never a silently corrupt file.
+    pub fn to_binary(&self) -> anyhow::Result<Vec<u8>> {
+        let metas = match &self.metas {
+            MetaTable::Owned(v) => v,
+            MetaTable::File {
+                bytes, n, instr_off, ..
+            } => {
+                let b: &[u8] = bytes;
+                let (arena_off, arena_len) = match &self.arena {
+                    Arena::File { offset, len, .. } => (*offset, *len),
+                    // A file meta table always pairs with a file arena.
+                    Arena::Owned(_) => unreachable!("file metas with owned arena"),
+                };
+                let instr_bytes = arena_off - instr_off;
+                let mut out = Vec::with_capacity(
+                    TRACE_HEADER_BYTES + n * TRACE_META_BYTES + instr_bytes + arena_len,
+                );
+                out.extend_from_slice(&TRACE_MAGIC);
+                out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
+                out.extend_from_slice(&0u32.to_le_bytes()); // reserved
+                out.extend_from_slice(&(*n as u64).to_le_bytes());
+                out.extend_from_slice(&(self.instructions.len() as u64).to_le_bytes());
+                out.extend_from_slice(&(instr_bytes as u64).to_le_bytes());
+                out.extend_from_slice(&(arena_len as u64).to_le_bytes());
+                out.extend_from_slice(&b[TRACE_HEADER_BYTES..TRACE_HEADER_BYTES + n * TRACE_META_BYTES]);
+                out.extend_from_slice(&b[*instr_off..arena_off + arena_len]);
+                return Ok(out);
+            }
+        };
+        check_wire_limits(metas.len() as u64, self.instructions.iter().map(|s| s.len()))?;
         let instr_bytes: usize = self.instructions.iter().map(|s| 4 + s.len()).sum();
         let arena = self.arena.as_str().as_bytes();
         let mut out = Vec::with_capacity(
-            TRACE_HEADER_BYTES + self.metas.len() * TRACE_META_BYTES + instr_bytes + arena.len(),
+            TRACE_HEADER_BYTES + metas.len() * TRACE_META_BYTES + instr_bytes + arena.len(),
         );
         out.extend_from_slice(&TRACE_MAGIC);
         out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
         out.extend_from_slice(&0u32.to_le_bytes()); // reserved
-        out.extend_from_slice(&(self.metas.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(metas.len() as u64).to_le_bytes());
         out.extend_from_slice(&(self.instructions.len() as u64).to_le_bytes());
         out.extend_from_slice(&(instr_bytes as u64).to_le_bytes());
         out.extend_from_slice(&(arena.len() as u64).to_le_bytes());
-        for m in &self.metas {
+        for m in metas {
             out.extend_from_slice(&m.id.to_le_bytes());
             out.extend_from_slice(&m.arrival.to_bits().to_le_bytes());
             out.extend_from_slice(&m.span.start.to_le_bytes());
@@ -544,13 +913,16 @@ impl TraceStore {
             out.extend_from_slice(s.as_bytes());
         }
         out.extend_from_slice(arena);
-        out
+        Ok(out)
     }
 
     /// Write the binary trace format to `path`
     /// ([`Self::open_mmap`] / [`Self::open_read`] reopen it).
-    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
-        std::fs::write(path, self.to_binary())
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        let bytes = self.to_binary()?;
+        std::fs::write(path, bytes)
+            .map_err(|e| anyhow::anyhow!("trace write {}: {e}", path.display()))
     }
 
     /// Open a binary trace file through a read-only mapping: O(metas)
@@ -588,10 +960,13 @@ impl TraceStore {
     }
 
     /// The single decode route behind [`Self::open_mmap`],
-    /// [`Self::open_read`] and [`Self::from_binary_bytes`].  Every
-    /// structural invariant is validated **before** the store is
-    /// constructed; a corrupt input yields an error, never a panic and
-    /// never a store whose spans could alias.
+    /// [`Self::open_read`] and [`Self::from_binary_bytes`] — **O(1) in
+    /// the meta count**.  The header, section bounds and the (tiny)
+    /// instruction table are validated before the store is constructed;
+    /// per-meta invariants (task/instruction indices, span bounds and
+    /// UTF-8) are checked lazily at access, or all at once by
+    /// [`Self::validate_all`].  A structurally corrupt container yields
+    /// an error here, never a panic.
     fn decode(bytes: FileBytes) -> anyhow::Result<TraceStore> {
         let b: &[u8] = &bytes;
         anyhow::ensure!(
@@ -665,68 +1040,107 @@ impl TraceStore {
             it.len() - p
         );
 
-        // Arena: one UTF-8 validation pass; per-access resolution is then
-        // allowed to use the unchecked conversion (see `Arena::as_str`).
-        let arena_str = std::str::from_utf8(&b[arena_off..arena_off + arena_len])
-            .map_err(|e| anyhow::anyhow!("text arena is not UTF-8: {e}"))?;
-
-        // Meta table: indices and spans validated against the sections
-        // above; loaded metas carry the fresh store's provenance stamp.
+        // That is the whole open: the meta table stays in place behind
+        // the alignment-checked view and the arena is untouched.  The
+        // pointer survives moving `bytes` into the Arc below (a Vec's
+        // heap block and an mmap'd region are both address-stable).
+        let aligned = (b.as_ptr() as usize + meta_off) % std::mem::align_of::<RawMeta>() == 0;
         let store_id = StoreId::mint();
-        let mut metas = Vec::with_capacity(n_metas);
-        for i in 0..n_metas {
-            let r = &b[meta_off + i * TRACE_META_BYTES..][..TRACE_META_BYTES];
-            let task_idx = rd_u32(r, 28) as usize;
-            let task = *TaskId::ALL
-                .get(task_idx)
-                .ok_or_else(|| anyhow::anyhow!("meta {i} has bad task id {task_idx}"))?;
-            let instr = rd_u32(r, 32);
-            anyhow::ensure!(
-                (instr as usize) < instructions.len(),
-                "meta {i} instruction index {instr} out of range ({} entries)",
-                instructions.len()
-            );
-            let start = rd_u64(r, 16);
-            let len = rd_u32(r, 24);
-            let end = start
-                .checked_add(len as u64)
-                .ok_or_else(|| anyhow::anyhow!("meta {i} span overflows"))?;
-            anyhow::ensure!(
-                end <= arena_len as u64,
-                "meta {i} span [{start}, {end}) points past the {arena_len}-byte arena"
-            );
-            anyhow::ensure!(
-                arena_str.is_char_boundary(start as usize)
-                    && arena_str.is_char_boundary(end as usize),
-                "meta {i} span [{start}, {end}) splits a UTF-8 sequence"
-            );
-            metas.push(RequestMeta {
-                id: rd_u64(r, 0),
-                task,
-                store: store_id,
-                instr,
-                user_input_len: rd_u32(r, 36),
-                request_len: rd_u32(r, 40),
-                gen_len: rd_u32(r, 44),
-                arrival: f64::from_bits(rd_u64(r, 8)),
-                span: Span { start, len },
-                // Recomputed at decode (this pass already touches the
-                // span-validated text), so the hash never travels on the
-                // wire and the format needs no version bump.
-                uih: hash_user_input(&arena_str[start as usize..end as usize]),
-            });
-        }
-
+        let bytes = Arc::new(bytes);
         Ok(TraceStore {
             store_id,
             arena: Arena::File {
-                bytes: Arc::new(bytes),
+                bytes: Arc::clone(&bytes),
                 offset: arena_off,
                 len: arena_len,
+                utf8_ok: Arc::new(AtomicBool::new(false)),
             },
             instructions,
-            metas,
+            metas: MetaTable::File {
+                bytes,
+                n: n_metas,
+                instr_off,
+                aligned,
+                cache: Arc::new(OnceLock::new()),
+            },
         })
+    }
+}
+
+/// Wire-format field limits, checked **before** encoding so an
+/// over-wide store is an error instead of a silently truncated file:
+/// each instruction is length-prefixed with a `u32`, and a single
+/// binary trace caps its meta count at `u32::MAX` records (shard
+/// anything bigger).  Split out from [`TraceStore::to_binary`] so the
+/// oversize paths are unit-testable without allocating 4-GiB strings.
+pub(crate) fn check_wire_limits<I>(n_metas: u64, instruction_lens: I) -> anyhow::Result<()>
+where
+    I: IntoIterator<Item = usize>,
+{
+    anyhow::ensure!(
+        n_metas <= u64::from(u32::MAX),
+        "trace has {n_metas} requests; a single binary trace file caps at {} (shard it)",
+        u32::MAX
+    );
+    for (i, len) in instruction_lens.into_iter().enumerate() {
+        anyhow::ensure!(
+            len as u64 <= u64::from(u32::MAX),
+            "instruction {i} is {len} bytes; the wire format length-prefixes instructions with a u32"
+        );
+    }
+    Ok(())
+}
+
+/// Anything a simulator or server can replay a trace out of: a single
+/// [`TraceStore`], or a [`ShardedTrace`](crate::workload::ShardedTrace)
+/// presenting its shards as one global index space.  The serving loops
+/// (`sim::magnus`, `cluster::sim`, continuous learning) are generic
+/// over this, so a multi-shard trace replays without ever being
+/// concatenated into one store.
+pub trait TraceSource {
+    /// Number of requests.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Arrival time of request `i` (event seeding reads one field per
+    /// request — implementations keep this cheaper than [`Self::meta`]).
+    fn arrival(&self, i: usize) -> f64;
+    /// The compact record of request `i`.
+    fn meta(&self, i: usize) -> RequestMeta;
+    /// Zero-copy view of request `i`.
+    fn view(&self, i: usize) -> RequestView<'_>;
+    /// Zero-copy view of a meta minted by this source (sharded sources
+    /// resolve it against the shard that minted it).
+    fn view_of(&self, m: &RequestMeta) -> RequestView<'_>;
+    /// The serving instance owning request `i` under one-shard-per-
+    /// instance mapping; `None` for unsharded sources.
+    fn home_of(&self, i: usize) -> Option<usize> {
+        let _ = i;
+        None
+    }
+}
+
+impl TraceSource for TraceStore {
+    #[inline]
+    fn len(&self) -> usize {
+        TraceStore::len(self)
+    }
+    #[inline]
+    fn arrival(&self, i: usize) -> f64 {
+        TraceStore::arrival(self, i)
+    }
+    #[inline]
+    fn meta(&self, i: usize) -> RequestMeta {
+        TraceStore::meta(self, i)
+    }
+    #[inline]
+    fn view(&self, i: usize) -> RequestView<'_> {
+        TraceStore::view(self, i)
+    }
+    #[inline]
+    fn view_of(&self, m: &RequestMeta) -> RequestView<'_> {
+        TraceStore::view_of(self, m)
     }
 }
 
@@ -1003,7 +1417,7 @@ mod tests {
             ..Default::default()
         };
         let store = TraceStore::generate(&spec);
-        let bytes = store.to_binary();
+        let bytes = store.to_binary().unwrap();
         let back = TraceStore::from_binary_bytes(bytes.clone()).unwrap();
         assert_eq!(back.metas(), store.metas());
         assert_eq!(back.arena_str(), store.arena_str());
@@ -1019,15 +1433,145 @@ mod tests {
             assert_eq!(a.instruction, b.instruction);
         }
         // A file-opened store re-serialises to the bytes it came from.
-        assert_eq!(back.to_binary(), bytes);
+        assert_eq!(back.to_binary().unwrap(), bytes);
     }
 
     #[test]
     fn binary_roundtrip_of_empty_store() {
         let store = TraceStore::new();
-        let back = TraceStore::from_binary_bytes(store.to_binary()).unwrap();
+        let back = TraceStore::from_binary_bytes(store.to_binary().unwrap()).unwrap();
         assert!(back.is_empty());
         assert_eq!(back.arena_bytes(), 0);
+    }
+
+    #[test]
+    fn lazy_open_resolves_records_in_place_and_validates() {
+        let spec = TraceSpec {
+            n_requests: 120,
+            seed: 31,
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        let back = TraceStore::from_binary_bytes(store.to_binary().unwrap()).unwrap();
+        // Per-record access (no `metas()` call anywhere): every field,
+        // the lazily computed uih, and both texts match the source.
+        assert_eq!(back.len(), store.len());
+        for i in 0..store.len() {
+            assert_eq!(back.meta(i), store.meta(i));
+            assert_eq!(back.arrival(i).to_bits(), store.meta(i).arrival.to_bits());
+            assert_eq!(back.view(i).user_input, store.view(i).user_input);
+            assert_eq!(back.view(i).instruction, store.view(i).instruction);
+        }
+        // The full sweep passes on a well-formed file, and the
+        // whole-arena view agrees with the owned one afterwards.
+        back.validate_all().unwrap();
+        assert_eq!(back.arena_str(), store.arena_str());
+    }
+
+    #[test]
+    fn validate_all_rejects_corrupt_records_that_open_accepts() {
+        let spec = TraceSpec {
+            n_requests: 10,
+            seed: 7,
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        let good = store.to_binary().unwrap();
+
+        // Span of meta 3 pushed past the arena: the container is still
+        // structurally valid, so the O(1) open succeeds — the sweep
+        // catches it.
+        let mut bad = good.clone();
+        let off = TRACE_HEADER_BYTES + 3 * TRACE_META_BYTES + 16;
+        bad[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let opened = TraceStore::from_binary_bytes(bad).unwrap();
+        let err = opened.validate_all().unwrap_err().to_string();
+        assert!(err.contains("meta 3"), "unexpected error: {err}");
+
+        // Bad task id, same shape.
+        let mut bad = good.clone();
+        let off = TRACE_HEADER_BYTES + 5 * TRACE_META_BYTES + 28;
+        bad[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let opened = TraceStore::from_binary_bytes(bad).unwrap();
+        assert!(opened.validate_all().is_err());
+
+        // And the untouched file still passes.
+        TraceStore::from_binary_bytes(good)
+            .unwrap()
+            .validate_all()
+            .unwrap();
+    }
+
+    #[test]
+    fn wire_limits_reject_oversize_fields() {
+        // Mocked-oversize paths: no multi-GiB allocations needed.
+        assert!(check_wire_limits(10, [4usize, 90].into_iter()).is_ok());
+        let err = check_wire_limits(u64::from(u32::MAX) + 1, std::iter::empty())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shard"), "unexpected error: {err}");
+        let err = check_wire_limits(1, [8usize, u32::MAX as usize + 1].into_iter())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("instruction 1"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn fallback_field_decode_matches_owned_records() {
+        // Drive `wire_meta` with the byte-decode route explicitly
+        // (aligned = false) and check every record round-trips exactly
+        // — this is what misaligned buffers and big-endian targets run.
+        let spec = TraceSpec {
+            n_requests: 60,
+            seed: 13,
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        let bytes = store.to_binary().unwrap();
+        for i in 0..store.len() {
+            let w = wire_meta(&bytes, i, false);
+            let m = store.meta(i);
+            assert_eq!(w.id, m.id);
+            assert_eq!(w.arrival_bits, m.arrival.to_bits());
+            assert_eq!(w.span_start, m.span.start);
+            assert_eq!(w.span_len, m.span.len);
+            assert_eq!(w.task, m.task.index() as u32);
+            assert_eq!(w.instr, m.instr);
+            assert_eq!(w.uil, m.user_input_len);
+            assert_eq!(w.request_len, m.request_len);
+            assert_eq!(w.gen_len, m.gen_len);
+        }
+    }
+
+    #[test]
+    fn get_meta_is_checked_and_prefix_clamps() {
+        let spec = TraceSpec {
+            n_requests: 30,
+            seed: 3,
+            ..Default::default()
+        };
+        let store = TraceStore::generate(&spec);
+        assert!(store.get_meta(29).is_some());
+        assert!(store.get_meta(30).is_none());
+
+        // Owned prefix: shorter view, shared provenance, resolvable.
+        let head = store.prefix(7);
+        assert_eq!(head.len(), 7);
+        assert_eq!(head.id(), store.id());
+        assert_eq!(head.view(6).user_input, store.view(6).user_input);
+        assert_eq!(store.prefix(1_000).len(), 30);
+
+        // File-backed prefix: O(1) clamp over the shared mapping, and
+        // it re-serialises to a valid shorter trace.
+        let back = TraceStore::from_binary_bytes(store.to_binary().unwrap()).unwrap();
+        let fhead = back.prefix(7);
+        assert_eq!(fhead.len(), 7);
+        assert!(fhead.get_meta(7).is_none());
+        assert_eq!(fhead.view(3).user_input, store.view(3).user_input);
+        let reopened = TraceStore::from_binary_bytes(fhead.to_binary().unwrap()).unwrap();
+        assert_eq!(reopened.len(), 7);
+        reopened.validate_all().unwrap();
+        assert_eq!(reopened.view(5).user_input, store.view(5).user_input);
     }
 
     #[test]

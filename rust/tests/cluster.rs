@@ -28,7 +28,7 @@ use magnus::predictor::{GenLenPredictor, Variant};
 use magnus::sim::{
     run_magnus_store_faulted, DispatchMode, MagnusPolicy, SimOutput,
 };
-use magnus::workload::{TraceSpec, TraceStore};
+use magnus::workload::{open_manifest, shard_store, TraceSpec, TraceStore};
 
 fn cluster_store(n: usize, rate: f64, seed: u64) -> TraceStore {
     TraceStore::generate(&TraceSpec {
@@ -291,4 +291,57 @@ fn work_stealing_rebalances_without_duplicating_ids() {
     // Stealing moved real work off node 0: some peer completed requests.
     let off_node0: usize = out.nodes[1..].iter().map(|n| n.metrics.records.len()).sum();
     assert!(off_node0 > 0, "stolen batches must complete on the thief");
+}
+
+/// One shard mapped per instance (ISSUE 10): a 3-shard trace replayed
+/// over a 3-instance cluster under the shard-affinity router.  Fault
+/// free and with stealing disabled, every request must complete on its
+/// home instance — and the exactly-once ledger (debug-asserted inside
+/// the run) still closes over the sharded source.
+#[test]
+fn sharded_trace_maps_one_shard_per_instance() {
+    let cfg = ServingConfig::default();
+    let store = cluster_store(180, 9.0, 73);
+    let dir = std::env::temp_dir().join(format!(
+        "magnus_cluster_shards_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let manifest = shard_store(&store, 3, &dir).unwrap();
+    let sharded = open_manifest(&manifest).unwrap();
+    let copts = ClusterOptions {
+        n_nodes: 3,
+        // Stealing would move work off its home node; this test pins the
+        // shard→instance mapping, so disable it.
+        steal_threshold_tokens: 0,
+        ..Default::default()
+    };
+
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let mut policy = parse_route_policy("shard", copts.route_seed, cfg.gpu.g_max).unwrap();
+    let out = run_cluster_store(
+        &cfg,
+        &MagnusPolicy::magnus(),
+        GenLenPredictor::new(Variant::Uilo, &cfg),
+        &engine,
+        &sharded,
+        &FaultPlan::none(),
+        &copts,
+        policy.as_mut(),
+    );
+
+    assert!(out.accounted(), "sharded ledger must close");
+    assert_eq!(out.shed, 0, "fault-free sharded run sheds nothing");
+    assert_eq!(out.duplicate_acks, 0, "fault-free run may never see dup acks");
+    assert_exactly_once(&out.merged_metrics(), &store, "sharded");
+
+    // Shard affinity held: node i completed exactly the ids of shard i.
+    assert_eq!(out.nodes.len(), 3);
+    for (i, node) in out.nodes.iter().enumerate() {
+        let want: HashSet<u64> = sharded.shard(i).iter_metas().map(|m| m.id).collect();
+        let got: HashSet<u64> =
+            node.metrics.records.iter().map(|r| r.request_id).collect();
+        assert_eq!(got, want, "node {i} must complete exactly its shard");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

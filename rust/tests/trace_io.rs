@@ -10,9 +10,17 @@
 //! * **Corrupt-input rejection** — a table of mutated valid files
 //!   (truncations, bad magic/version, inflated counts, spans past the
 //!   arena or splitting a UTF-8 sequence, bad indices, non-UTF-8 text)
-//!   must all decode to errors: never a panic, never a store that could
-//!   alias text.  Driven through `from_binary_bytes` AND both file-open
-//!   routes, which share one decode.
+//!   must all reject with errors: never a panic, never a store that
+//!   could alias text.  The open itself is O(1)-lazy (header, section
+//!   bounds and instruction table only), so every route runs the
+//!   one-shot `validate_all` sweep — the combination a tool that
+//!   distrusts its input uses.  Driven through `from_binary_bytes` AND
+//!   both file-open routes, which share one decode.
+//! * **Sharded traces** — a manifest-opened shard set must be bitwise
+//!   equal to the single-file and JSON routes (views AND
+//!   `run_magnus_store` output), and a matrix of corrupt manifests
+//!   (missing shard, checksum mismatch, overlapping or out-of-order
+//!   ranges, count drift) must error, never panic.
 //! * **Concurrency smoke** — N threads resolving `RequestView`s out of
 //!   one shared mmap-backed `Arc<TraceStore>` while a Magnus sim runs
 //!   over the same store; results must match the single-threaded run.
@@ -31,7 +39,8 @@ use magnus::sim::{run_magnus_store, trained_predictor, MagnusPolicy};
 use magnus::util::prop::prop_check;
 use magnus::util::Json;
 use magnus::workload::{
-    TaskId, TraceSpec, TraceStore, TRACE_HEADER_BYTES, TRACE_META_BYTES, TRACE_VERSION,
+    open_any, open_manifest, shard_store, LoadedTrace, TaskId, TraceSource, TraceSpec,
+    TraceStore, TRACE_HEADER_BYTES, TRACE_META_BYTES, TRACE_VERSION,
 };
 
 mod common;
@@ -51,6 +60,9 @@ fn temp_path(tag: &str) -> PathBuf {
 /// Representation equality of a loaded store against the original:
 /// every byte the format carries.
 fn assert_same_store(loaded: &TraceStore, original: &TraceStore, ctx: &str) {
+    loaded
+        .validate_all()
+        .unwrap_or_else(|e| panic!("{ctx}: honest file failed validate_all: {e}"));
     assert_eq!(loaded.metas(), original.metas(), "{ctx}: metas");
     assert_eq!(loaded.arena_str(), original.arena_str(), "{ctx}: arena");
     assert_eq!(
@@ -58,7 +70,11 @@ fn assert_same_store(loaded: &TraceStore, original: &TraceStore, ctx: &str) {
         original.instruction_table(),
         "{ctx}: instruction table"
     );
-    assert_eq!(loaded.to_binary(), original.to_binary(), "{ctx}: bytes");
+    assert_eq!(
+        loaded.to_binary().unwrap(),
+        original.to_binary().unwrap(),
+        "{ctx}: bytes"
+    );
 }
 
 #[test]
@@ -121,10 +137,12 @@ fn corrupt_binary_traces_are_rejected_never_panicking() {
         seed: 3,
         ..Default::default()
     });
-    let valid = store.to_binary();
+    let valid = store.to_binary().unwrap();
     assert!(
-        TraceStore::from_binary_bytes(valid.clone()).is_ok(),
-        "pristine bytes must decode"
+        TraceStore::from_binary_bytes(valid.clone())
+            .and_then(|s| s.validate_all())
+            .is_ok(),
+        "pristine bytes must decode and validate"
     );
 
     // Header field offsets (see the format docs in workload/store.rs).
@@ -243,17 +261,22 @@ fn corrupt_binary_traces_are_rejected_never_panicking() {
 
     for (name, mutate) in cases {
         let bytes = mutate(valid.clone());
-        // In-memory decode: an error, not a panic, not a store.
-        match catch_unwind(AssertUnwindSafe(|| TraceStore::from_binary_bytes(bytes.clone()))) {
+        // In-memory decode + full sweep: an error, not a panic, not a
+        // store.  The open alone is O(1)-lazy, so structural damage
+        // fails there and per-record damage fails in `validate_all` —
+        // either way the pair must reject.
+        match catch_unwind(AssertUnwindSafe(|| {
+            TraceStore::from_binary_bytes(bytes.clone()).and_then(|s| s.validate_all())
+        })) {
             Ok(res) => assert!(res.is_err(), "corrupt case {name:?} was accepted"),
             Err(_) => panic!("corrupt case {name:?} panicked instead of erroring"),
         }
         // And identically through real files on both open routes.
         let path = temp_path("corrupt");
         std::fs::write(&path, &bytes).unwrap();
-        let via_mmap = || TraceStore::open_mmap(&path);
-        let via_read = || TraceStore::open_read(&path);
-        let routes: [(&str, &dyn Fn() -> anyhow::Result<TraceStore>); 2] =
+        let via_mmap = || TraceStore::open_mmap(&path).and_then(|s| s.validate_all());
+        let via_read = || TraceStore::open_read(&path).and_then(|s| s.validate_all());
+        let routes: [(&str, &dyn Fn() -> anyhow::Result<()>); 2] =
             [("mmap", &via_mmap), ("read", &via_read)];
         for (route, open) in routes {
             match catch_unwind(AssertUnwindSafe(open)) {
@@ -274,10 +297,14 @@ fn span_splitting_a_utf8_sequence_is_rejected() {
     // per-access unchecked slicing unsound, so decode must reject it.
     let mut store = TraceStore::new();
     store.push(0, TaskId::Gc, "fix grammar", "héllo", 5, 8, 4, 0.25);
-    let mut bytes = store.to_binary();
+    let mut bytes = store.to_binary().unwrap();
     let span_len_off = TRACE_HEADER_BYTES + 24;
     bytes[span_len_off..span_len_off + 4].copy_from_slice(&2u32.to_le_bytes());
-    let err = TraceStore::from_binary_bytes(bytes).unwrap_err();
+    // The lazy open defers per-record span checks; the sweep catches it.
+    let err = TraceStore::from_binary_bytes(bytes)
+        .unwrap()
+        .validate_all()
+        .unwrap_err();
     assert!(
         format!("{err:#}").contains("UTF-8"),
         "unexpected error: {err:#}"
@@ -405,4 +432,275 @@ fn resolving_a_meta_against_the_wrong_store_panics_loudly() {
         catch_unwind(AssertUnwindSafe(|| a.user_input(&reopened.meta(3)).len())).is_err()
     );
     let _ = std::fs::remove_file(&path);
+}
+
+/// Collision-free temp *directory* (sharded traces live in one).
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = temp_path(tag).with_extension("d");
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn sharded_single_and_json_backings_agree_bitwise() {
+    let cfg = ServingConfig::default();
+    let engine = CostModelEngine::new(cfg.cost.clone(), &cfg.gpu);
+    let spec = TraceSpec {
+        rate: 6.0,
+        n_requests: 90,
+        seed: 17,
+        ..Default::default()
+    };
+    let store = TraceStore::generate(&spec);
+
+    // Single binary file, reopened lazily.
+    let path = temp_path("equiv");
+    store.write_file(&path).unwrap();
+    let single = TraceStore::open_mmap(&path).unwrap();
+    single.validate_all().unwrap();
+
+    // The same requests split into 3 shards, reopened via the manifest.
+    let dir = temp_dir("equiv_shards");
+    let manifest = shard_store(&store, 3, &dir).unwrap();
+    let sharded = open_manifest(&manifest).unwrap();
+    sharded.validate_all().unwrap();
+    assert_eq!(sharded.len(), store.len());
+
+    // And the pre-binary JSON route.
+    let json_store =
+        TraceStore::from_json(&Json::parse(&store.to_json().to_string()).unwrap()).unwrap();
+
+    // Every byte the formats carry agrees, request by request.
+    for g in 0..store.len() {
+        let base = store.view(g);
+        for (route, v) in [
+            ("single-file", single.view(g)),
+            ("sharded", sharded.view(g)),
+            ("json", json_store.view(g)),
+        ] {
+            assert_eq!(v.id, base.id, "{route}: id of {g}");
+            assert_eq!(v.task, base.task, "{route}: task of {g}");
+            assert_eq!(v.instruction, base.instruction, "{route}: instruction of {g}");
+            assert_eq!(v.user_input, base.user_input, "{route}: user_input of {g}");
+            assert_eq!(
+                v.user_input_len, base.user_input_len,
+                "{route}: user_input_len of {g}"
+            );
+            assert_eq!(v.request_len, base.request_len, "{route}: request_len of {g}");
+            assert_eq!(v.gen_len, base.gen_len, "{route}: gen_len of {g}");
+            assert_eq!(
+                v.arrival.to_bits(),
+                base.arrival.to_bits(),
+                "{route}: arrival of {g}"
+            );
+            assert_eq!(v.uih, base.uih, "{route}: uih of {g}");
+        }
+    }
+
+    // Bit-identical full serving runs over every backing, sharded
+    // included — the generic replay loop never concatenates shards.
+    let base = run_magnus_store(
+        &cfg,
+        &MagnusPolicy::magnus(),
+        trained_predictor(&cfg, 80),
+        &engine,
+        &store,
+    );
+    assert_identical(
+        &base,
+        &run_magnus_store(
+            &cfg,
+            &MagnusPolicy::magnus(),
+            trained_predictor(&cfg, 80),
+            &engine,
+            &single,
+        ),
+        "single-file vs in-memory",
+    );
+    assert_identical(
+        &base,
+        &run_magnus_store(
+            &cfg,
+            &MagnusPolicy::magnus(),
+            trained_predictor(&cfg, 80),
+            &engine,
+            &sharded,
+        ),
+        "sharded vs in-memory",
+    );
+    assert_identical(
+        &base,
+        &run_magnus_store(
+            &cfg,
+            &MagnusPolicy::magnus(),
+            trained_predictor(&cfg, 80),
+            &engine,
+            &json_store,
+        ),
+        "json vs in-memory",
+    );
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_manifests_error_never_panic() {
+    let store = TraceStore::generate(&TraceSpec {
+        n_requests: 10,
+        seed: 7,
+        ..Default::default()
+    });
+    // 2 shards of 5 requests each — entry 1 starts at 5.
+    let make = |tag: &str| {
+        let dir = temp_dir(tag);
+        shard_store(&store, 2, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        (dir, text)
+    };
+    // Positive control: the pristine directory opens and validates.
+    {
+        let (dir, _) = make("pristine");
+        match open_any(&dir).unwrap() {
+            LoadedTrace::Sharded(s) => {
+                s.validate_all().unwrap();
+                assert_eq!(s.len(), 10);
+            }
+            LoadedTrace::Single(_) => panic!("directory opened as a single store"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    type Mutation = Box<dyn Fn(&std::path::Path, String) -> String>;
+    let flip_shard_byte = |dir: &std::path::Path, shard: &str, off: usize| {
+        let p = dir.join(shard);
+        let mut b = std::fs::read(&p).unwrap();
+        b[off] ^= 0xFF;
+        std::fs::write(&p, b).unwrap();
+    };
+    let cases: Vec<(&str, Mutation)> = vec![
+        (
+            "missing shard file",
+            Box::new(|dir, text| {
+                std::fs::remove_file(dir.join("shard-0001.mtr")).unwrap();
+                text
+            }),
+        ),
+        (
+            "shard header checksum mismatch",
+            Box::new(move |dir, text| {
+                // A byte inside the 48-byte header trips the manifest
+                // checksum before the shard is even opened.
+                flip_shard_byte(dir, "shard-0000.mtr", 20);
+                text
+            }),
+        ),
+        (
+            "overlapping meta range",
+            Box::new(|_, text: String| text.replace("\"start\":5", "\"start\":3")),
+        ),
+        (
+            "out-of-order meta range",
+            Box::new(|_, text: String| text.replace("\"start\":5", "\"start\":0")),
+        ),
+        (
+            "shard byte length drifted",
+            Box::new(|dir, text: String| {
+                let len = std::fs::metadata(dir.join("shard-0000.mtr")).unwrap().len();
+                text.replace(
+                    &format!("\"bytes\":{len}"),
+                    &format!("\"bytes\":{}", len + 48),
+                )
+            }),
+        ),
+        (
+            "shard request count drifted",
+            Box::new(|_, text: String| text.replace("\"requests\":5", "\"requests\":4")),
+        ),
+        (
+            "total_requests mismatch",
+            Box::new(|_, text: String| {
+                text.replace("\"total_requests\":10", "\"total_requests\":11")
+            }),
+        ),
+        (
+            "unsupported manifest version",
+            Box::new(|_, text: String| text.replace("\"version\":1", "\"version\":99")),
+        ),
+        (
+            "wrong format field",
+            Box::new(|_, text: String| {
+                text.replace("magnus-trace-manifest", "magnus-trace-manifold")
+            }),
+        ),
+        (
+            "empty shards array",
+            Box::new(|_, _| {
+                "{\"format\":\"magnus-trace-manifest\",\"version\":1,\
+                 \"total_requests\":0,\"shards\":[]}"
+                    .to_string()
+            }),
+        ),
+        (
+            "manifest is not JSON",
+            Box::new(|_, _| "not json at all".to_string()),
+        ),
+    ];
+    for (name, mutate) in cases {
+        let (dir, text) = make("corrupt");
+        let mutated = mutate(&dir, text);
+        std::fs::write(dir.join("manifest.json"), &mutated).unwrap();
+        match catch_unwind(AssertUnwindSafe(|| {
+            open_any(&dir).and_then(|t| match t {
+                LoadedTrace::Sharded(s) => s.validate_all(),
+                LoadedTrace::Single(_) => Ok(()),
+            })
+        })) {
+            Ok(res) => assert!(res.is_err(), "corrupt manifest {name:?} was accepted"),
+            Err(_) => panic!("corrupt manifest {name:?} panicked instead of erroring"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn misnamed_trace_files_load_by_content_not_extension() {
+    let store = TraceStore::generate(&TraceSpec {
+        n_requests: 8,
+        seed: 23,
+        ..Default::default()
+    });
+
+    // A binary trace hiding behind a .json name still loads as binary.
+    let bin_as_json = temp_path("misnamed_bin").with_extension("json");
+    store.write_file(&bin_as_json).unwrap();
+    match open_any(&bin_as_json).unwrap() {
+        LoadedTrace::Single(s) => {
+            assert_eq!(s.len(), 8);
+            assert!(s.is_file_backed(), "magic sniff must take the binary route");
+        }
+        LoadedTrace::Sharded(_) => panic!("binary file detected as sharded"),
+    }
+
+    // A JSON trace hiding behind a .mtr name still loads as JSON.
+    let json_as_mtr = temp_path("misnamed_json"); // temp_path names end in .mtr
+    std::fs::write(&json_as_mtr, store.to_json().to_string()).unwrap();
+    match open_any(&json_as_mtr).unwrap() {
+        LoadedTrace::Single(s) => {
+            assert_eq!(s.len(), 8);
+            assert_eq!(s.arena_str(), store.arena_str());
+        }
+        LoadedTrace::Sharded(_) => panic!("JSON trace detected as sharded"),
+    }
+
+    // JSON that is neither a trace nor a manifest errors naming the
+    // detected format instead of panicking or misloading.
+    let stray = temp_path("misnamed_stray");
+    std::fs::write(&stray, "{\"not\": \"a trace\"}").unwrap();
+    let err = open_any(&stray).unwrap_err().to_string();
+    assert!(err.contains("detected JSON"), "unexpected error: {err}");
+
+    for p in [&bin_as_json, &json_as_mtr, &stray] {
+        let _ = std::fs::remove_file(p);
+    }
 }
